@@ -1,0 +1,89 @@
+//! Ablation study (extends §4.4 "Impact of different workloads"):
+//!
+//! 1. **Elasticity sweep** — vary the fraction of batch applications that
+//!    are elastic (B-E) from 0 % to 100 %. The paper argues the flexible
+//!    scheduler's benefit grows with elasticity and collapses to the
+//!    rigid baseline at 0 % (Table 3); this regenerates that whole curve.
+//! 2. **Load sweep** — vary offered load via the arrival-scale knob.
+//!    Flexible's advantage should widen as the system saturates (queuing
+//!    dominates) and vanish when the cluster is empty.
+//!
+//! ```sh
+//! cargo run --release --example ablation -- --apps 8000 --seeds 3
+//! ```
+
+use zoe::policy::Policy;
+use zoe::sched::SchedKind;
+use zoe::sim::run_many;
+use zoe::util::cli::Args;
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    let args = Args::from_env();
+    let apps = args.u64_or("apps", 8000) as u32;
+    let seeds = args.u64_or("seeds", 3);
+
+    println!("=== ablation 1: elastic fraction sweep (FIFO, {apps} apps × {seeds} seeds) ===");
+    println!(
+        "  {:>9} {:>16} {:>16} {:>8} {:>12} {:>12}",
+        "elastic%", "rigid med ta", "flex med ta", "ratio", "rigid alloc", "flex alloc"
+    );
+    for frac in [0.0, 0.25, 0.5, 0.8, 1.0] {
+        let mut spec = WorkloadSpec::paper_batch_only();
+        spec.batch_elastic_frac = frac;
+        let mut rigid = run_many(&spec, apps, 1..seeds + 1, Policy::FIFO, SchedKind::Rigid);
+        let mut flex = run_many(&spec, apps, 1..seeds + 1, Policy::FIFO, SchedKind::Flexible);
+        let (r, f) = (rigid.turnaround.median(), flex.turnaround.median());
+        println!(
+            "  {:>8.0}% {:>15.1}s {:>15.1}s {:>8.2} {:>11.1}% {:>11.1}%",
+            frac * 100.0,
+            r,
+            f,
+            f / r,
+            100.0 * rigid.cpu_alloc.boxplot().mean,
+            100.0 * flex.cpu_alloc.boxplot().mean,
+        );
+    }
+    println!("  (expected: ratio → 1 as elasticity → 0; improves with elasticity)");
+
+    println!("\n=== ablation 2: load sweep (FIFO, arrival-scale knob) ===");
+    println!(
+        "  {:>9} {:>16} {:>16} {:>8}",
+        "ia-scale", "rigid med ta", "flex med ta", "ratio"
+    );
+    for scale in [0.8, 1.0, 1.5, 2.5, 4.0] {
+        let mut spec = WorkloadSpec::paper_batch_only();
+        spec.arrival_scale = scale;
+        let mut rigid = run_many(&spec, apps, 1..seeds + 1, Policy::FIFO, SchedKind::Rigid);
+        let mut flex = run_many(&spec, apps, 1..seeds + 1, Policy::FIFO, SchedKind::Flexible);
+        let (r, f) = (rigid.turnaround.median(), flex.turnaround.median());
+        println!(
+            "  {:>9.1} {:>15.1}s {:>15.1}s {:>8.2}",
+            scale,
+            r,
+            f,
+            f / r
+        );
+    }
+    println!("  (expected: ratio → 1 as load → 0; widens under overload)");
+
+    println!("\n=== ablation 3: admission aggressiveness (flexible vs malleable) ===");
+    println!("  The flexible scheduler's only extra lever over malleable is core");
+    println!("  admission by elastic reclaim; compare per-policy:");
+    for (name, policy) in [
+        ("FIFO", Policy::FIFO),
+        ("SJF", Policy::sjf()),
+        ("SRPT", Policy::srpt()),
+    ] {
+        let spec = WorkloadSpec::paper_batch_only();
+        let mut mal = run_many(&spec, apps, 1..seeds + 1, policy, SchedKind::Malleable);
+        let mut flex = run_many(&spec, apps, 1..seeds + 1, policy, SchedKind::Flexible);
+        println!(
+            "  {name:<5} malleable med {:>12.1}s mean {:>12.1}s | flexible med {:>12.1}s mean {:>12.1}s",
+            mal.turnaround.median(),
+            mal.turnaround.mean(),
+            flex.turnaround.median(),
+            flex.turnaround.mean(),
+        );
+    }
+}

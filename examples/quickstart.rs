@@ -1,0 +1,64 @@
+//! Quickstart: the smallest useful program against the public API.
+//!
+//! Builds a handful of analytic applications (a Spark-like elastic job, a
+//! TensorFlow-like rigid job, a Notebook), schedules them on a small
+//! cluster with the flexible heuristic, and prints what happened.
+
+use zoe::core::{AppClass, RequestBuilder, Resources};
+use zoe::policy::Policy;
+use zoe::pool::Cluster;
+use zoe::sched::SchedKind;
+use zoe::sim::simulate;
+
+fn main() {
+    // A 4-machine cluster, 16 cores / 64 GB each.
+    let cluster = Cluster::uniform(4, Resources::new(16.0, 64.0 * 1024.0));
+
+    // A Spark-like application: 3 core components (client, master, one
+    // worker) plus 12 elastic workers. 2 cores / 8 GB per component.
+    let spark = RequestBuilder::new(0)
+        .class(AppClass::BatchElastic)
+        .arrival(0.0)
+        .runtime(120.0)
+        .cores(3, Resources::new(2.0, 8192.0))
+        .elastics(12, Resources::new(2.0, 8192.0))
+        .build();
+
+    // A distributed-TensorFlow-like application: rigid, 5 parameter
+    // servers + 10 workers, all core.
+    let tf = RequestBuilder::new(1)
+        .class(AppClass::BatchRigid)
+        .arrival(10.0)
+        .runtime(300.0)
+        .cores(15, Resources::new(1.0, 16384.0))
+        .elastics(0, Resources::ZERO)
+        .build();
+
+    // An interactive notebook: 1 core component + a few elastic executors.
+    let notebook = RequestBuilder::new(2)
+        .class(AppClass::Interactive)
+        .arrival(20.0)
+        .runtime(600.0)
+        .cores(1, Resources::new(1.0, 4096.0))
+        .elastics(4, Resources::new(1.0, 4096.0))
+        .priority(1.0)
+        .build();
+
+    let mut res = simulate(
+        vec![spark, tf, notebook],
+        cluster,
+        Policy::FIFO,
+        SchedKind::Flexible,
+    );
+
+    println!("completed {} applications:", res.completed);
+    println!("  mean turnaround : {:>8.1} s", res.turnaround.mean());
+    println!("  mean queuing    : {:>8.1} s", res.queuing.mean());
+    println!("  mean slowdown   : {:>8.2}×", res.slowdown.mean());
+    println!(
+        "  peak cpu alloc  : {:>8.1} %",
+        100.0 * res.cpu_alloc.percentile(100.0)
+    );
+    println!("\nNext: examples/illustrative.rs (Fig. 1), examples/trace_sim.rs (§4),");
+    println!("      examples/zoe_e2e.rs (the full Zoe system on real PJRT compute).");
+}

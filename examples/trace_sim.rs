@@ -1,0 +1,95 @@
+//! Trace-driven simulation driver (§4): generate a Google-trace-shaped
+//! workload, run it through a chosen scheduler × policy, and print the
+//! paper's evaluation metrics.
+//!
+//! ```sh
+//! cargo run --release --example trace_sim -- \
+//!     --apps 8000 --seed 1 --sched flexible --policy sjf
+//! ```
+
+use zoe::policy::{Discipline, Policy, SizeDim};
+use zoe::pool::Cluster;
+use zoe::sched::SchedKind;
+use zoe::sim::simulate;
+use zoe::util::bench::print_boxplot_row;
+use zoe::util::cli::Args;
+use zoe::workload::WorkloadSpec;
+
+fn parse_policy(s: &str) -> Policy {
+    match s {
+        "fifo" => Policy::FIFO,
+        "sjf" => Policy::sjf(),
+        "srpt" => Policy::srpt(),
+        "hrrn" => Policy::hrrn(),
+        "sjf2d" => Policy::new(Discipline::Sjf, SizeDim::D2),
+        "sjf3d" => Policy::new(Discipline::Sjf, SizeDim::D3),
+        other => panic!("unknown policy '{other}' (fifo|sjf|srpt|hrrn|sjf2d|sjf3d)"),
+    }
+}
+
+fn parse_sched(s: &str) -> SchedKind {
+    match s {
+        "rigid" => SchedKind::Rigid,
+        "malleable" => SchedKind::Malleable,
+        "flexible" => SchedKind::Flexible,
+        "preemptive" => SchedKind::FlexiblePreemptive,
+        other => panic!("unknown scheduler '{other}' (rigid|malleable|flexible|preemptive)"),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let apps = args.u64_or("apps", 8000) as u32;
+    let seed = args.u64_or("seed", 1);
+    let kind = parse_sched(&args.get_or("sched", "flexible"));
+    let policy = parse_policy(&args.get_or("policy", "fifo"));
+    let interactive = args.has("interactive");
+
+    let mut spec = if interactive {
+        WorkloadSpec::paper()
+    } else {
+        WorkloadSpec::paper_batch_only()
+    };
+    spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
+    let requests = spec.generate(apps, seed);
+    println!(
+        "workload: {} apps, last arrival at {:.1} days (seed {seed})",
+        requests.len(),
+        requests.last().unwrap().arrival / 86400.0
+    );
+    println!("scheduler: {} | policy: {}", kind.label(), policy.label());
+
+    let t0 = std::time::Instant::now();
+    let mut res = simulate(requests, Cluster::paper_sim(), policy, kind);
+    println!(
+        "simulated {:.1} days in {:.2}s wall ({:.0} events/s)",
+        res.end_time / 86400.0,
+        t0.elapsed().as_secs_f64(),
+        res.events as f64 / t0.elapsed().as_secs_f64()
+    );
+    println!("{}", res.summary());
+
+    println!("\nturnaround (s):");
+    print_boxplot_row("  all", &res.turnaround.boxplot());
+    for c in [
+        zoe::core::AppClass::BatchElastic,
+        zoe::core::AppClass::BatchRigid,
+        zoe::core::AppClass::Interactive,
+    ] {
+        let label = format!("  {}", c.label());
+        let b = res.class_mut(c).turnaround.boxplot();
+        if b.n > 0 {
+            print_boxplot_row(&label, &b);
+        }
+    }
+    println!("\nqueuing time (s):");
+    print_boxplot_row("  all", &res.queuing.boxplot());
+    println!("\nslowdown (effective/nominal):");
+    print_boxplot_row("  all", &res.slowdown.boxplot());
+    println!("\nqueue sizes (time-weighted):");
+    print_boxplot_row("  pending", &res.pending_q.boxplot());
+    print_boxplot_row("  running", &res.running_q.boxplot());
+    println!("\nallocation (fraction of cluster):");
+    print_boxplot_row("  cpu", &res.cpu_alloc.boxplot());
+    print_boxplot_row("  ram", &res.ram_alloc.boxplot());
+}

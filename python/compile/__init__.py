@@ -1,0 +1,5 @@
+"""Build-time-only package: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Nothing in here runs at request time; `make artifacts` lowers the models to
+HLO text once, and the rust coordinator executes them via PJRT.
+"""

@@ -1,0 +1,57 @@
+"""AOT lowering: L2 models → HLO *text* artifacts for the rust runtime.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True``; the rust side unwraps with ``to_tuple1()``.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+#: (artifact name, function, example args) — one HLO artifact each.
+ARTIFACTS = (
+    ("als_step", model.als_step, model.als_example_args),
+    ("ridge_step", model.ridge_step, model.ridge_example_args),
+    ("score_table1", model.score_policies, model.score_example_args),
+)
+
+
+def lower_all(out_dir: str) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, fn, args in ARTIFACTS:
+        lowered = jax.jit(fn).lower(*args())
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((path, len(text)))
+        print(f"wrote {path} ({len(text)} chars)")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    lower_all(ap.parse_args().out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""L1: Pallas kernels (interpret=True) + pure-jnp oracles.
+
+`matmul` — blocked MXU-shaped matrix multiply (the analytic hot-spot).
+`score_table1` — batched Table-1 policy-size scoring (the scheduler's
+sort phase over large pending queues).
+"""
+
+from .matmul import matmul, vmem_bytes
+from .score import N_FEATURES, N_POLICIES, score_table1
+
+__all__ = [
+    "matmul",
+    "vmem_bytes",
+    "score_table1",
+    "N_FEATURES",
+    "N_POLICIES",
+]

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: blocked matrix multiply.
+
+The compute hot-spot of the analytic applications Zoe schedules (§6 of the
+paper runs Spark MLlib ALS / random-forest regression and TensorFlow
+training; their inner loops are dense matmuls). The kernel is tiled for a
+TPU memory hierarchy:
+
+* BlockSpec tiles of (BM, BK) × (BK, BN) → (BM, BN) with BM = BN = BK = 128
+  by default — MXU-systolic-array-shaped f32 blocks;
+* the K grid axis is the reduction: partial products accumulate into the
+  output block across the innermost grid dimension (revisiting the same
+  output tile, the canonical Pallas accumulation pattern);
+* VMEM footprint per step = (BM·BK + BK·BN + BM·BN)·4 B = 192 KiB at 128³ —
+  comfortably inside a 16 MiB VMEM budget, leaving room for
+  double-buffering by the pipeline.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which both pytest and the
+rust runtime execute. Real-TPU performance is *estimated* in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Blocked matmul via Pallas. Shapes must tile evenly by (bm, bn, bk)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) must tile by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(bm: int = 128, bn: int = 128, bk: int = 128, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (for the §Perf roofline estimate)."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes

@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Oracle for kernels.matmul."""
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def score_table1_ref(features):
+    """Oracle for kernels.score_table1 (Table-1 size definitions)."""
+    runtime, rem, wait, services, unsched, res_sum, res_unsched = features
+    remaining = runtime * rem
+    ratio = -(1.0 + wait / runtime)
+    return jnp.stack(
+        [
+            runtime * services,       # SJF-2D
+            remaining * services,     # SRPT-2D1
+            remaining * unsched,      # SRPT-2D2
+            ratio * services,         # HRRN-2D
+            runtime * res_sum,        # SJF-3D
+            remaining * res_sum,      # SRPT-3D1
+            remaining * res_unsched,  # SRPT-3D2
+            ratio * res_sum,          # HRRN-3D
+        ]
+    )
+
+
+def als_step_ref(u, v, r, lr):
+    """Oracle for model.als_step: one gradient step on ||U Vᵀ − R||²."""
+    err = jnp.dot(u, v.T) - r
+    grad_u = jnp.dot(err, v)
+    return u - lr * grad_u
+
+
+def ridge_step_ref(x, y, w, lr, lam):
+    """Oracle for model.ridge_step: one gradient step on ridge regression."""
+    err = jnp.dot(x, w) - y
+    grad = jnp.dot(x.T, err) + lam * w
+    return w - lr * grad

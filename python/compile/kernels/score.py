@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: batched policy-size scoring (Table 1 of the paper).
+
+The scheduler's sort phase ranks pending applications by a size key
+(SJF/SRPT/HRRN × 2D/3D, Table 1). For large pending queues this is a batch
+of fused elementwise multiplies/divides over per-application features — a
+VPU-shaped kernel. One pass computes all eight Table-1 keys.
+
+Input features, one row per application (padded to a multiple of the block):
+    runtime, remaining_frac, wait, n_services, n_unsched, res_sum, res_unsched
+Output: (8, n) — rows in Table-1 order:
+    SJF-2D, SRPT-2D1, SRPT-2D2, HRRN-2D, SJF-3D, SRPT-3D1, SRPT-3D2, HRRN-3D
+(HRRN rows are negated: ascending sort order serves highest ratio first,
+matching the rust `policy` module.)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Number of Table-1 policies computed per pass.
+N_POLICIES = 8
+#: Feature rows per application.
+N_FEATURES = 7
+#: Default block width (lanes): one VPU-friendly tile of applications.
+BLOCK = 256
+
+
+def _score_kernel(f_ref, o_ref):
+    runtime = f_ref[0, :]
+    rem = f_ref[1, :]
+    wait = f_ref[2, :]
+    services = f_ref[3, :]
+    unsched = f_ref[4, :]
+    res_sum = f_ref[5, :]
+    res_unsched = f_ref[6, :]
+
+    remaining = runtime * rem
+    ratio = -(1.0 + wait / runtime)
+
+    o_ref[0, :] = runtime * services          # SJF-2D
+    o_ref[1, :] = remaining * services        # SRPT-2D1
+    o_ref[2, :] = remaining * unsched         # SRPT-2D2
+    o_ref[3, :] = ratio * services            # HRRN-2D
+    o_ref[4, :] = runtime * res_sum           # SJF-3D
+    o_ref[5, :] = remaining * res_sum         # SRPT-3D1
+    o_ref[6, :] = remaining * res_unsched     # SRPT-3D2
+    o_ref[7, :] = ratio * res_sum             # HRRN-3D
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def score_table1(features, *, block: int = BLOCK):
+    """All eight Table-1 size keys for a batch of applications.
+
+    `features` is (N_FEATURES, n); n must be a multiple of `block`.
+    """
+    nf, n = features.shape
+    assert nf == N_FEATURES, f"expected {N_FEATURES} feature rows, got {nf}"
+    block = min(block, n)
+    assert n % block == 0, f"n={n} must tile by block={block}"
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((N_FEATURES, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((N_POLICIES, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((N_POLICIES, n), features.dtype),
+        interpret=True,
+    )(features)

@@ -1,0 +1,80 @@
+"""L2: the JAX compute graphs that Zoe applications execute.
+
+These are the analytic workloads of the paper's §6 experiments, built on
+the L1 Pallas kernels so they lower into the same HLO:
+
+* `als_step`   — one alternating-least-squares gradient step on a
+  user×item ratings matrix (the Last.fm music-recommender workload);
+* `ridge_step` — one ridge-regression gradient step, 128 targets at a time
+  (the US-DoT flight-delay regression workload);
+* `score_policies` — the scheduler's own sort-phase batch scoring
+  (Table 1 sizes for a pending queue).
+
+Each is AOT-lowered once by `aot.py`; rust executes the artifacts through
+PJRT. Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import N_FEATURES, matmul, score_table1
+
+# Artifact shapes — fixed at AOT time; the rust runtime pads its batches to
+# these. MXU-friendly multiples of 128.
+ALS_USERS = 256
+ALS_ITEMS = 256
+ALS_RANK = 128
+RIDGE_ROWS = 512
+RIDGE_FEATS = 128
+RIDGE_TARGETS = 128
+SCORE_BATCH = 1024
+
+
+def als_step(u, v, r, lr):
+    """One gradient step of U on ||U Vᵀ − R||²; both matmuls hit the kernel.
+
+    u: (USERS, RANK), v: (ITEMS, RANK), r: (USERS, ITEMS).
+    """
+    err = matmul(u, v.T) - r          # (USERS, ITEMS)
+    grad_u = matmul(err, v)           # (USERS, RANK)
+    return (u - lr * grad_u,)
+
+
+def ridge_step(x, y, w, lr, lam):
+    """One ridge gradient step; the two products hit the kernel.
+
+    x: (ROWS, FEATS), y: (ROWS, TARGETS), w: (FEATS, TARGETS).
+    """
+    err = matmul(x, w) - y            # (ROWS, TARGETS)
+    grad = matmul(x.T, err) + lam * w  # (FEATS, TARGETS)
+    return (w - lr * grad,)
+
+
+def score_policies(features):
+    """Table-1 size keys for a batch of pending applications."""
+    return (score_table1(features),)
+
+
+def als_example_args():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((ALS_USERS, ALS_RANK), f32),
+        jax.ShapeDtypeStruct((ALS_ITEMS, ALS_RANK), f32),
+        jax.ShapeDtypeStruct((ALS_USERS, ALS_ITEMS), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def ridge_example_args():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((RIDGE_ROWS, RIDGE_FEATS), f32),
+        jax.ShapeDtypeStruct((RIDGE_ROWS, RIDGE_TARGETS), f32),
+        jax.ShapeDtypeStruct((RIDGE_FEATS, RIDGE_TARGETS), f32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def score_example_args():
+    return (jax.ShapeDtypeStruct((N_FEATURES, SCORE_BATCH), jnp.float32),)

@@ -1,0 +1,159 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py — the core
+correctness signal for the compute layer.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    N_FEATURES,
+    N_POLICIES,
+    matmul,
+    score_table1,
+    vmem_bytes,
+)
+from compile.kernels.ref import matmul_ref, score_table1_ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, dtype, lo=-1.0, hi=1.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.sampled_from([1, 2, 8, 64, 128, 256]),
+    k=st.sampled_from([1, 4, 32, 128, 256]),
+    n=st.sampled_from([1, 2, 16, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_f32(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, (m, k), jnp.float32)
+    y = rand(k2, (k, n), jnp.float32)
+    got = matmul(x, y)
+    want = matmul_ref(x, y)
+    assert got.shape == want.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    shape=st.sampled_from([(128, 128, 128), (256, 128, 256)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_bf16(shape, seed):
+    m, k, n = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, (m, k), jnp.bfloat16)
+    y = rand(k2, (k, n), jnp.bfloat16)
+    got = matmul(x, y)
+    want = matmul_ref(x, y)
+    assert got.dtype == jnp.bfloat16
+    assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=0.05, atol=0.5
+    )
+
+
+@given(
+    bm=st.sampled_from([32, 64, 128]),
+    bn=st.sampled_from([32, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_shape_invariance(bm, bn, bk, seed):
+    """The result must not depend on the tiling."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, (128, 128), jnp.float32)
+    y = rand(k2, (128, 128), jnp.float32)
+    got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    want = matmul_ref(x, y)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_untileable():
+    x = jnp.zeros((100, 128))
+    y = jnp.zeros((128, 128))
+    with pytest.raises(AssertionError):
+        matmul(x, y, bm=64)
+
+
+def test_matmul_identity():
+    x = jnp.eye(128, dtype=jnp.float32)
+    y = rand(jax.random.PRNGKey(0), (128, 128), jnp.float32)
+    assert_allclose(np.asarray(matmul(x, y)), np.asarray(y), rtol=1e-6)
+
+
+def test_vmem_budget():
+    """Default tiling must fit a 16 MiB VMEM with double-buffering room."""
+    assert vmem_bytes() == (128 * 128 * 3) * 4  # 192 KiB
+    assert 2 * vmem_bytes() < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# score_table1
+# ---------------------------------------------------------------------------
+
+def rand_features(seed, n):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 7)
+    runtime = jax.random.uniform(ks[0], (n,), minval=30.0, maxval=1e6)
+    rem = jax.random.uniform(ks[1], (n,), minval=0.0, maxval=1.0)
+    wait = jax.random.uniform(ks[2], (n,), minval=0.0, maxval=1e5)
+    services = jnp.floor(jax.random.uniform(ks[3], (n,), minval=1.0, maxval=2e4))
+    unsched = jnp.minimum(
+        services, jnp.floor(jax.random.uniform(ks[4], (n,), minval=0.0, maxval=2e4))
+    )
+    res_sum = jax.random.uniform(ks[5], (n,), minval=0.01, maxval=1e5)
+    res_unsched = jnp.minimum(
+        res_sum, jax.random.uniform(ks[6], (n,), minval=0.0, maxval=1e5)
+    )
+    return jnp.stack([runtime, rem, wait, services, unsched, res_sum, res_unsched])
+
+
+@given(
+    n=st.sampled_from([256, 512, 1024, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_score_matches_ref(n, seed):
+    f = rand_features(seed, n)
+    got = score_table1(f)
+    want = score_table1_ref(f)
+    assert got.shape == (N_POLICIES, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_score_block_invariance(seed):
+    f = rand_features(seed, 1024)
+    a = score_table1(f, block=256)
+    b = score_table1(f, block=1024)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_score_hrrn_rows_negative():
+    """HRRN rows are negated (ascending sort = highest ratio first)."""
+    f = rand_features(7, 256)
+    s = np.asarray(score_table1(f))
+    assert (s[3] < 0).all()  # HRRN-2D
+    assert (s[7] < 0).all()  # HRRN-3D
+
+
+def test_score_feature_count_guard():
+    bad = jnp.zeros((N_FEATURES + 1, 256))
+    with pytest.raises(AssertionError):
+        score_table1(bad)

@@ -1,0 +1,72 @@
+"""L2 correctness: the model graphs vs their oracles, and convergence
+sanity (the analytic steps must actually optimize their objectives)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import als_step_ref, ridge_step_ref
+
+
+def test_als_step_matches_ref():
+    key = jax.random.PRNGKey(0)
+    ku, kv, kr = jax.random.split(key, 3)
+    u = jax.random.normal(ku, (model.ALS_USERS, model.ALS_RANK)) * 0.1
+    v = jax.random.normal(kv, (model.ALS_ITEMS, model.ALS_RANK)) * 0.1
+    r = jax.random.normal(kr, (model.ALS_USERS, model.ALS_ITEMS))
+    lr = jnp.float32(1e-3)
+    (got,) = model.als_step(u, v, r, lr)
+    want = als_step_ref(u, v, r, lr)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_ridge_step_matches_ref():
+    key = jax.random.PRNGKey(1)
+    kx, ky, kw = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (model.RIDGE_ROWS, model.RIDGE_FEATS))
+    y = jax.random.normal(ky, (model.RIDGE_ROWS, model.RIDGE_TARGETS))
+    w = jax.random.normal(kw, (model.RIDGE_FEATS, model.RIDGE_TARGETS)) * 0.01
+    lr, lam = jnp.float32(1e-4), jnp.float32(0.1)
+    (got,) = model.ridge_step(x, y, w, lr, lam)
+    want = ridge_step_ref(x, y, w, lr, lam)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_als_loss_decreases():
+    key = jax.random.PRNGKey(2)
+    ku, kv = jax.random.split(key)
+    u_true = jax.random.normal(ku, (model.ALS_USERS, model.ALS_RANK)) * 0.3
+    v = jax.random.normal(kv, (model.ALS_ITEMS, model.ALS_RANK)) * 0.3
+    r = u_true @ v.T
+    u = jnp.zeros_like(u_true)
+    loss = lambda u: float(jnp.mean((u @ v.T - r) ** 2))
+    l0 = loss(u)
+    for _ in range(20):
+        (u,) = model.als_step(u, v, r, jnp.float32(5e-3))
+    l1 = loss(u)
+    assert l1 < 0.2 * l0, f"ALS failed to converge: {l0} -> {l1}"
+
+
+def test_ridge_loss_decreases():
+    key = jax.random.PRNGKey(3)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (model.RIDGE_ROWS, model.RIDGE_FEATS))
+    w_true = jax.random.normal(kw, (model.RIDGE_FEATS, model.RIDGE_TARGETS)) * 0.5
+    y = x @ w_true
+    w = jnp.zeros_like(w_true)
+    loss = lambda w: float(jnp.mean((x @ w - y) ** 2))
+    l0 = loss(w)
+    for _ in range(30):
+        (w,) = model.ridge_step(x, y, w, jnp.float32(1e-3), jnp.float32(1e-4))
+    l1 = loss(w)
+    assert l1 < 0.2 * l0, f"ridge failed to converge: {l0} -> {l1}"
+
+
+def test_score_policies_shape():
+    from compile.kernels import N_FEATURES, N_POLICIES
+
+    f = jnp.ones((N_FEATURES, model.SCORE_BATCH))
+    (s,) = model.score_policies(f)
+    assert s.shape == (N_POLICIES, model.SCORE_BATCH)

@@ -1,0 +1,55 @@
+//! Bench E1 — Figure 1: the illustrative example. Regenerates the three
+//! schedules (rigid / malleable / flexible) and checks the paper's
+//! turnaround averages (25 / 20 / 19.25 s). Also times the scheduling
+//! pass itself.
+
+use zoe::core::unit_request;
+use zoe::policy::Policy;
+use zoe::pool::Cluster;
+use zoe::sched::SchedKind;
+use zoe::sim::simulate;
+use zoe::util::bench::{measure, section};
+
+fn requests() -> Vec<zoe::core::Request> {
+    vec![
+        unit_request(0, 0.0, 10.0, 3, 4), // A
+        unit_request(1, 0.0, 10.0, 3, 3), // B
+        unit_request(2, 0.0, 10.0, 3, 5), // C
+        unit_request(3, 0.0, 10.0, 3, 2), // D
+    ]
+}
+
+fn main() {
+    section("Figure 1 — illustrative example (R=10, C=3, T=10, E=4/3/5/2)");
+    let expected = [
+        (SchedKind::Rigid, 25.0),
+        (SchedKind::Malleable, 20.0),
+        (SchedKind::Flexible, 19.25),
+    ];
+    println!(
+        "  {:<12} {:>14} {:>10}  per-request turnarounds",
+        "scheduler", "avg turnaround", "paper"
+    );
+    for (kind, paper) in expected {
+        let mut res = simulate(requests(), Cluster::units(10), Policy::FIFO, kind);
+        let mean = res.turnaround.mean();
+        let per: Vec<f64> = res
+            .turnaround
+            .values()
+            .iter()
+            .map(|x| (x * 100.0).round() / 100.0)
+            .collect();
+        println!("  {:<12} {:>13.2}s {:>9.2}s  {per:?}", kind.label(), mean, paper);
+        assert!(
+            (mean - paper).abs() < 1e-6,
+            "{} deviates from the paper",
+            kind.label()
+        );
+    }
+    println!("\n  all three match the paper exactly OK");
+
+    section("timing: full Fig-1 schedule");
+    measure("fig1 flexible end-to-end", 200, || {
+        let _ = simulate(requests(), Cluster::units(10), Policy::FIFO, SchedKind::Flexible);
+    });
+}

@@ -1,0 +1,72 @@
+//! Bench E9 — Figure 29: preemption on/off with the full workload
+//! (including 20 % interactive applications), SRPT policy.
+//!
+//! Expected shape: interactive applications see queuing times orders of
+//! magnitude lower under the preemptive scheduler; batch medians stay
+//! stable (more variability in the tails).
+
+use zoe::core::AppClass;
+use zoe::policy::Policy;
+use zoe::sched::SchedKind;
+use zoe::sim::run_many;
+use zoe::util::bench::{bench_apps, bench_runs, print_boxplot_row, section};
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    let apps = bench_apps(8_000, 80_000);
+    let runs = bench_runs(3, 10);
+    let spec = WorkloadSpec::paper(); // full workload, incl. interactive
+    section(&format!(
+        "Figure 29 — preemption (SRPT, full workload, {apps} apps × {runs} runs)"
+    ));
+
+    let mut np = run_many(&spec, apps, 1..runs + 1, Policy::srpt(), SchedKind::Flexible);
+    let mut pr = run_many(
+        &spec,
+        apps,
+        1..runs + 1,
+        Policy::srpt(),
+        SchedKind::FlexiblePreemptive,
+    );
+
+    println!("\n  -- queuing time (s), per class --");
+    for c in [AppClass::BatchElastic, AppClass::BatchRigid, AppClass::Interactive] {
+        print_boxplot_row(
+            &format!("no-preempt {}", c.label()),
+            &np.class_mut(c).queuing.boxplot(),
+        );
+        print_boxplot_row(
+            &format!("preempt    {}", c.label()),
+            &pr.class_mut(c).queuing.boxplot(),
+        );
+    }
+
+    println!("\n  -- turnaround (s), per class --");
+    for c in [AppClass::BatchElastic, AppClass::BatchRigid, AppClass::Interactive] {
+        print_boxplot_row(
+            &format!("no-preempt {}", c.label()),
+            &np.class_mut(c).turnaround.boxplot(),
+        );
+        print_boxplot_row(
+            &format!("preempt    {}", c.label()),
+            &pr.class_mut(c).turnaround.boxplot(),
+        );
+    }
+
+    let qi_np = np.class_mut(AppClass::Interactive).queuing.mean();
+    let qi_pr = pr.class_mut(AppClass::Interactive).queuing.mean();
+    if qi_pr > 1e-3 {
+        println!(
+            "\n  interactive mean queuing: no-preempt {qi_np:.1}s vs preempt {qi_pr:.3}s → {:.0}× lower (paper ≈ 100×)",
+            qi_np / qi_pr
+        );
+    } else {
+        println!(
+            "\n  interactive mean queuing: no-preempt {qi_np:.1}s vs preempt ≈0s (interactive cores always carved immediately; paper ≈ 100× lower)"
+        );
+    }
+    assert!(
+        qi_pr <= qi_np,
+        "preemption must not worsen interactive queuing"
+    );
+}

@@ -1,0 +1,70 @@
+//! Bench E2 — Figure 2: workload definition. Regenerates the six CDF
+//! panels (requested CPU, memory, inter-arrival time, run time, number of
+//! core components, number of elastic components) from the trace-shaped
+//! generator.
+
+use zoe::util::bench::{bench_apps, section, timed};
+use zoe::util::stats::Samples;
+use zoe::workload::WorkloadSpec;
+
+fn print_cdf(title: &str, s: &mut Samples, unit: &str) {
+    println!("\n  -- {title} (n={}) --", s.len());
+    println!("  {:>6} {:>16}", "p", format!("value [{unit}]"));
+    for p in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+        println!("  {:>5.0}% {:>16.2}", p, s.percentile(p));
+    }
+}
+
+fn main() {
+    section("Figure 2 — workload definition (six CDF panels)");
+    let n = bench_apps(20_000, 80_000);
+    let spec = WorkloadSpec::paper();
+    let (reqs, _) = timed("generate workload", || spec.generate(n, 1));
+
+    let mut cpu = Samples::new();
+    let mut ram = Samples::new();
+    let mut inter = Samples::new();
+    let mut runtime = Samples::new();
+    let mut cores = Samples::new();
+    let mut elastic = Samples::new();
+    let mut prev = 0.0;
+    for r in &reqs {
+        cpu.push(r.core_res.cpu);
+        if r.n_elastic > 0 {
+            cpu.push(r.elastic_res.cpu);
+            ram.push(r.elastic_res.ram_mb);
+            elastic.push(r.n_elastic as f64);
+        }
+        ram.push(r.core_res.ram_mb);
+        inter.push(r.arrival - prev);
+        prev = r.arrival;
+        runtime.push(r.runtime);
+        cores.push(r.n_core as f64);
+    }
+    print_cdf("requested CPU per component", &mut cpu, "cores");
+    print_cdf("requested memory per component", &mut ram, "MB");
+    print_cdf("inter-arrival time", &mut inter, "s");
+    print_cdf("estimated run time", &mut runtime, "s");
+    print_cdf("# core components", &mut cores, "components");
+    print_cdf("# elastic components", &mut elastic, "components");
+
+    // Workload mix (§4.1: 80/20 batch/interactive; batch 80/20 B-E/B-R).
+    let n_int = reqs
+        .iter()
+        .filter(|r| r.class == zoe::core::AppClass::Interactive)
+        .count();
+    let n_be = reqs
+        .iter()
+        .filter(|r| r.class == zoe::core::AppClass::BatchElastic)
+        .count();
+    let n_br = reqs
+        .iter()
+        .filter(|r| r.class == zoe::core::AppClass::BatchRigid)
+        .count();
+    println!(
+        "\n  mix: interactive {:.1}% | B-E {:.1}% | B-R {:.1}%  (paper: 20 / 64 / 16)",
+        100.0 * n_int as f64 / reqs.len() as f64,
+        100.0 * n_be as f64 / reqs.len() as f64,
+        100.0 * n_br as f64 / reqs.len() as f64
+    );
+}

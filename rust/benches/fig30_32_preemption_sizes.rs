@@ -1,0 +1,71 @@
+//! Bench E10 — Figures 30–32: preemption on/off for PSJF, SRPT and HRRN
+//! across their Table-1 size definitions (full workload with interactive
+//! applications).
+
+use zoe::core::AppClass;
+use zoe::policy::{Discipline, Policy, ServiceScope, SizeDim};
+use zoe::sched::SchedKind;
+use zoe::sim::run_many;
+use zoe::util::bench::{bench_apps, bench_runs, print_boxplot_row, section};
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    let apps = bench_apps(5_000, 80_000);
+    let runs = bench_runs(2, 10);
+    let spec = WorkloadSpec::paper();
+
+    let figures: Vec<(&str, Vec<(String, Policy)>)> = vec![
+        (
+            "Figure 30 — PSJF",
+            vec![
+                ("PSJF".into(), Policy::sjf()),
+                ("PSJF-2D".into(), Policy::new(Discipline::Sjf, SizeDim::D2)),
+                ("PSJF-3D".into(), Policy::new(Discipline::Sjf, SizeDim::D3)),
+            ],
+        ),
+        (
+            "Figure 31 — SRPT",
+            vec![
+                ("SRPT".into(), Policy::srpt()),
+                ("SRPT-2D1".into(), Policy::new(Discipline::Srpt, SizeDim::D2)),
+                (
+                    "SRPT-2D2".into(),
+                    Policy::new(Discipline::Srpt, SizeDim::D2).with_scope(ServiceScope::Unscheduled),
+                ),
+                ("SRPT-3D1".into(), Policy::new(Discipline::Srpt, SizeDim::D3)),
+            ],
+        ),
+        (
+            "Figure 32 — HRRN",
+            vec![
+                ("HRRN".into(), Policy::hrrn()),
+                ("HRRN-2D".into(), Policy::new(Discipline::Hrrn, SizeDim::D2)),
+                ("HRRN-3D".into(), Policy::new(Discipline::Hrrn, SizeDim::D3)),
+            ],
+        ),
+    ];
+
+    for (title, policies) in figures {
+        section(&format!("{title} ({apps} apps × {runs} runs)"));
+        for (name, policy) in policies {
+            let mut np = run_many(&spec, apps, 1..runs + 1, policy, SchedKind::Flexible);
+            let mut pr =
+                run_many(&spec, apps, 1..runs + 1, policy, SchedKind::FlexiblePreemptive);
+            println!("\n  [{name}] queuing time (s):");
+            for c in [AppClass::BatchElastic, AppClass::BatchRigid, AppClass::Interactive] {
+                print_boxplot_row(
+                    &format!("  no-preempt {}", c.label()),
+                    &np.class_mut(c).queuing.boxplot(),
+                );
+                print_boxplot_row(
+                    &format!("  preempt    {}", c.label()),
+                    &pr.class_mut(c).queuing.boxplot(),
+                );
+            }
+            println!("    pending queue: no-preempt {} | preempt {}",
+                np.pending_q.boxplot().mean, pr.pending_q.boxplot().mean);
+            println!("    cpu alloc:     no-preempt {:.3} | preempt {:.3}",
+                np.cpu_alloc.boxplot().mean, pr.cpu_alloc.boxplot().mean);
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Bench E11 — Figure 33: the two Zoe generations on the real system
+//! (simulated Swarm back-end + real PJRT compute, virtual-clock replay).
+//! A compact version of `examples/zoe_e2e.rs`; run the example with
+//! `--apps 100` for the full §6 replay.
+//!
+//! Skips when `artifacts/` has not been built.
+
+use std::sync::Arc;
+
+use zoe::runtime::PjrtRuntime;
+use zoe::util::bench::{bench_apps, section};
+use zoe::zoe::{replay, section6_workload, ZoeGeneration};
+
+fn main() {
+    section("Figure 33 — Zoe gen-1 (rigid) vs gen-2 (flexible), real PJRT compute");
+    let Ok(rt) = PjrtRuntime::load_default() else {
+        println!("  SKIP: artifacts/ missing — run `make artifacts` first");
+        return;
+    };
+    let rt = Arc::new(rt);
+    let apps = bench_apps(40, 100);
+    let arrivals = section6_workload(apps, 7, 12.0);
+
+    let mut results = Vec::new();
+    for generation in [ZoeGeneration::Rigid, ZoeGeneration::Flexible] {
+        let r = replay(generation, &arrivals, Arc::clone(&rt), 64, 1.0);
+        println!(
+            "\n  {} ({} steps, wall {:.1}s, makespan {:.1} virtual s):",
+            r.label, r.steps, r.wall, r.vtime
+        );
+        results.push(r);
+    }
+    for r in &mut results {
+        println!("\n  {}:", r.label);
+        println!("    B-E turnaround  {}", r.turnaround_be.boxplot());
+        println!("    B-R turnaround  {}", r.turnaround_br.boxplot());
+        println!("    queuing         {}", r.queuing.boxplot());
+        println!("    cpu allocation  {}", r.alloc_cpu.boxplot());
+        println!(
+            "    ramp-up (ms)    mean {:.4} p95 {:.4}",
+            r.rampup_ms.mean(),
+            r.rampup_ms.percentile(95.0)
+        );
+    }
+    let (rb, fb) = (
+        results[0].turnaround_be.median(),
+        results[1].turnaround_be.median(),
+    );
+    let (rr, fr) = (
+        results[0].turnaround_br.median(),
+        results[1].turnaround_br.median(),
+    );
+    let (ra, fa) = (results[0].alloc_cpu.median(), results[1].alloc_cpu.median());
+    println!("\n  -- headline (flexible / rigid) --");
+    println!("  median B-E turnaround ratio: {:.2} (paper ≈ 0.63)", fb / rb);
+    println!("  median B-R turnaround ratio: {:.2} (paper ≈ 0.78)", fr / rr);
+    println!(
+        "  median cpu allocation ratio: {:.2} (paper ≈ 1.20)",
+        fa / ra.max(1e-9)
+    );
+}

@@ -1,0 +1,46 @@
+//! Bench E3 — Figure 3: flexible vs the rigid baseline under FIFO and
+//! SJF — turnaround, queuing time, and slowdown distributions per
+//! application class (batch-only workload, preemption disabled, §4.2).
+//!
+//! Expected shape: median turnaround roughly halved (or better) under the
+//! flexible scheduler; queuing times drastically reduced for both B-E and
+//! B-R; slowdown stays moderate.
+
+use zoe::policy::Policy;
+use zoe::sched::SchedKind;
+use zoe::sim::run_many;
+use zoe::util::bench::{bench_apps, bench_runs, section};
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    let apps = bench_apps(8_000, 80_000);
+    let runs = bench_runs(3, 10);
+    let spec = WorkloadSpec::paper_batch_only();
+    section(&format!(
+        "Figure 3 — flexible vs rigid baseline ({apps} apps × {runs} runs)"
+    ));
+
+    let mut medians = Vec::new();
+    for (pname, policy) in [("FIFO", Policy::FIFO), ("SJF", Policy::sjf())] {
+        for kind in [SchedKind::Rigid, SchedKind::Flexible] {
+            let mut res = run_many(&spec, apps, 1..runs + 1, policy, kind);
+            res.print_report(&format!("{pname} / {}", kind.label()));
+            medians.push((pname, kind, res.turnaround.median(), res.queuing.median()));
+        }
+    }
+
+    println!("\n  -- headline: median turnaround ratio (flexible / rigid) --");
+    for chunk in medians.chunks(2) {
+        let (p, _, rigid_ta, rigid_q) = chunk[0];
+        let (_, _, flex_ta, flex_q) = chunk[1];
+        println!(
+            "  {p}: turnaround {:.2} (paper ≈ 0.5), queuing {:.2}",
+            flex_ta / rigid_ta,
+            flex_q / rigid_q.max(1e-9)
+        );
+        assert!(
+            flex_ta < rigid_ta,
+            "{p}: flexible must beat the rigid baseline"
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench E4 — Figure 4: pending/running queue-size distributions, FIFO vs
+//! SJF, flexible vs the rigid baseline.
+//!
+//! Expected shape: flexible induces fewer pending and more running
+//! applications; SJF cuts the pending queue by ~an order of magnitude
+//! vs FIFO.
+
+use zoe::policy::Policy;
+use zoe::sched::SchedKind;
+use zoe::sim::run_many;
+use zoe::util::bench::{bench_apps, bench_runs, print_boxplot_row, section};
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    let apps = bench_apps(8_000, 80_000);
+    let runs = bench_runs(3, 10);
+    let spec = WorkloadSpec::paper_batch_only();
+    section(&format!(
+        "Figure 4 — queue sizes ({apps} apps × {runs} runs)"
+    ));
+
+    let mut rows = Vec::new();
+    for (pname, policy) in [("FIFO", Policy::FIFO), ("SJF", Policy::sjf())] {
+        for kind in [SchedKind::Rigid, SchedKind::Flexible] {
+            let res = run_many(&spec, apps, 1..runs + 1, policy, kind);
+            let pend = res.pending_q.boxplot();
+            let run = res.running_q.boxplot();
+            print_boxplot_row(&format!("{pname}/{} pending", kind.label()), &pend);
+            print_boxplot_row(&format!("{pname}/{} running", kind.label()), &run);
+            rows.push((pname, kind, pend, run));
+        }
+    }
+
+    println!("\n  -- shape checks --");
+    for chunk in rows.chunks(2) {
+        let (p, _, rp, rr) = &chunk[0];
+        let (_, _, fp, fr) = &chunk[1];
+        println!(
+            "  {p}: pending mean flexible/rigid = {:.2} (<1 expected), running mean = {:.2} (>1 expected)",
+            fp.mean / rp.mean.max(1e-9),
+            fr.mean / rr.mean.max(1e-9)
+        );
+    }
+    let fifo_pending = rows[1].2.mean; // FIFO flexible
+    let sjf_pending = rows[3].2.mean; // SJF flexible
+    println!(
+        "  SJF vs FIFO pending (flexible): {:.2}× smaller (paper ≈ 10×)",
+        fifo_pending / sjf_pending.max(1e-9)
+    );
+}

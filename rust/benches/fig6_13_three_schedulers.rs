@@ -1,0 +1,47 @@
+//! Bench E6 — Figures 6–13: rigid vs malleable vs flexible under FIFO,
+//! SJF, SRPT and HRRN. Two figures per policy in the paper (turnaround +
+//! queuing + slowdown; queue sizes + allocation); one section per policy
+//! here.
+//!
+//! Expected shape: flexible ≳ malleable ≫ rigid on turnaround across all
+//! policies (the paper: "far better than a rigid scheduler and slightly
+//! better than a malleable").
+
+use zoe::policy::Policy;
+use zoe::sched::SchedKind;
+use zoe::sim::run_many;
+use zoe::util::bench::{bench_apps, bench_runs, section};
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    let apps = bench_apps(6_000, 80_000);
+    let runs = bench_runs(2, 10);
+    let spec = WorkloadSpec::paper_batch_only();
+
+    for (pname, policy) in [
+        ("FIFO", Policy::FIFO),
+        ("SJF", Policy::sjf()),
+        ("SRPT", Policy::srpt()),
+        ("HRRN", Policy::hrrn()),
+    ] {
+        section(&format!(
+            "Figures 6–13 [{pname}] — rigid vs malleable vs flexible ({apps} apps × {runs} runs)"
+        ));
+        let mut med = Vec::new();
+        for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
+            let mut res = run_many(&spec, apps, 1..runs + 1, policy, kind);
+            res.print_report(&format!("{pname} / {}", kind.label()));
+            med.push((kind, res.turnaround.median(), res.turnaround.mean()));
+        }
+        println!("\n  -- median turnaround: {pname} --");
+        for (kind, m, mean) in &med {
+            println!("  {:<10} median {:>12.1}s mean {:>12.1}s", kind.label(), m, mean);
+        }
+        let rigid = med[0].1;
+        let flex = med[2].1;
+        assert!(
+            flex <= rigid,
+            "{pname}: flexible median must not exceed rigid"
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Perf microbenches (§Perf in EXPERIMENTS.md): the hot paths of each
+//! layer — simulator event throughput (L3), PJRT artifact step latency
+//! (L2/L1 via the runtime), the batched Table-1 scoring kernel, and the
+//! substrate primitives (placement, JSON, RNG).
+
+use std::time::Instant;
+
+use zoe::policy::Policy;
+use zoe::pool::Cluster;
+use zoe::sched::SchedKind;
+use zoe::sim::simulate;
+use zoe::util::bench::{measure, section};
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    section("L3 — simulator event throughput");
+    let spec = WorkloadSpec::paper_batch_only();
+    for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
+        let reqs = spec.generate(8_000, 1);
+        let t0 = Instant::now();
+        let res = simulate(reqs, Cluster::paper_sim(), Policy::FIFO, kind);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:<10} {:>8} events in {:.3}s → {:>9.0} events/s",
+            kind.label(),
+            res.events,
+            dt,
+            res.events as f64 / dt
+        );
+    }
+
+    section("L3 — placement primitives");
+    let mut cluster = Cluster::paper_sim();
+    let res1 = zoe::core::Resources::new(2.0, 4096.0);
+    measure("place_up_to 1000 components + clear", 200, || {
+        cluster.place_up_to(&res1, 1000);
+        cluster.clear();
+    });
+
+    section("substrates — RNG / JSON / stats");
+    let mut rng = zoe::util::rng::Rng::new(1);
+    measure("1M rng.f64 samples", 20, || {
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += rng.f64();
+        }
+        std::hint::black_box(acc);
+    });
+    let app_json = zoe::zoe::templates::spark_als(16).to_json().to_string();
+    measure("parse 1000 app descriptions", 50, || {
+        for _ in 0..1000 {
+            let j = zoe::util::json::Json::parse(&app_json).unwrap();
+            std::hint::black_box(&j);
+        }
+    });
+
+    section("L2/L1 — PJRT artifact step latency (real compute)");
+    match zoe::runtime::PjrtRuntime::load_default() {
+        Ok(rt) => {
+            let eng = zoe::runtime::AnalyticEngine::new(&rt);
+            for kind in [zoe::runtime::WorkKind::Als, zoe::runtime::WorkKind::Ridge] {
+                let mut st = zoe::runtime::WorkState::synth(kind, 1);
+                measure(&format!("{:?} step (PJRT)", kind), 100, || {
+                    eng.step(&mut st).unwrap();
+                });
+            }
+            // The ALS step does 2 × (256×256×128 + 256×128×256) MACs.
+            let flops = 2.0 * 2.0 * 256.0 * 256.0 * 128.0;
+            let mut st = zoe::runtime::WorkState::synth(zoe::runtime::WorkKind::Als, 2);
+            let t0 = Instant::now();
+            let n = 200;
+            for _ in 0..n {
+                eng.step(&mut st).unwrap();
+            }
+            let per = t0.elapsed().as_secs_f64() / n as f64;
+            println!(
+                "  ALS step: {:.3} ms → {:.2} GFLOP/s effective",
+                per * 1000.0,
+                flops / per / 1e9
+            );
+            // Batched Table-1 scoring.
+            let n_apps = 1024;
+            let features: Vec<Vec<f32>> = (0..7)
+                .map(|fi| (0..n_apps).map(|i| (i + fi + 1) as f32).collect())
+                .collect();
+            measure("score_table1 batch of 1024 apps", 100, || {
+                let s = eng.score_table1(&features).unwrap();
+                std::hint::black_box(&s);
+            });
+        }
+        Err(e) => println!("  SKIP PJRT benches: {e}"),
+    }
+}

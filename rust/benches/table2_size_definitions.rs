@@ -1,0 +1,58 @@
+//! Bench E7 — Table 1/2 + Figures 14–28: the eight size definitions
+//! (SJF/SRPT/HRRN × 2D/3D, Table 1) under the rigid, malleable and
+//! flexible schedulers. Regenerates Table 2 (mean turnaround per size
+//! definition, flexible scheduler) and the per-scheduler panels of
+//! Figs. 14–28.
+//!
+//! Expected shape (paper Table 2): 3D sizes beat 2D for SJF/SRPT under
+//! the flexible scheduler; HRRN is the outlier that degrades with more
+//! size information (big applications start first at zero wait).
+
+use zoe::policy::Policy;
+use zoe::sched::SchedKind;
+use zoe::sim::run_many;
+use zoe::util::bench::{bench_apps, bench_runs, section};
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    let apps = bench_apps(6_000, 80_000);
+    let runs = bench_runs(2, 10);
+    let spec = WorkloadSpec::paper_batch_only();
+
+    // Table 2: flexible scheduler, mean turnaround per size definition.
+    section(&format!(
+        "Table 2 — mean turnaround (s) by size definition, flexible scheduler ({apps} apps × {runs} runs)"
+    ));
+    let mut table2: Vec<(String, f64)> = Vec::new();
+    for (name, policy) in Policy::table1() {
+        let res = run_many(&spec, apps, 1..runs + 1, policy, SchedKind::Flexible);
+        table2.push((name.to_string(), res.turnaround.mean()));
+    }
+    println!("  {:<10} {:>14}", "size def", "mean ta (s)");
+    for (name, ta) in &table2 {
+        println!("  {:<10} {:>14.2}", name, ta);
+    }
+    let get = |n: &str| table2.iter().find(|(x, _)| x == n).unwrap().1;
+    println!("\n  -- shape checks (paper Table 2) --");
+    println!(
+        "  SJF-3D/SJF-2D = {:.2} (<1 expected)   SRPT-3D1/SRPT-2D1 = {:.2} (<1 expected)",
+        get("SJF-3D") / get("SJF-2D"),
+        get("SRPT-3D1") / get("SRPT-2D1")
+    );
+    println!(
+        "  HRRN-3D/HRRN-2D = {:.2} (>1 expected — HRRN degrades with more info)",
+        get("HRRN-3D") / get("HRRN-2D")
+    );
+
+    // Figures 14–28: the same sweep per scheduler, with per-class panels.
+    for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
+        section(&format!(
+            "Figures 14–28 [{}] — size definitions sweep",
+            kind.label()
+        ));
+        for (name, policy) in Policy::table1() {
+            let mut res = run_many(&spec, apps, 1..runs + 1, policy, kind);
+            res.print_report(&format!("{} / {}", kind.label(), name));
+        }
+    }
+}

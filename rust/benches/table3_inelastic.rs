@@ -1,0 +1,45 @@
+//! Bench E8 — Table 3: a fully inelastic workload (core components only).
+//! The flexible scheduler must reduce *exactly* to the rigid baseline —
+//! identical mean turnaround per policy ("our flexible scheduler does not
+//! introduce any overhead and, in the worst case, will not perform worse
+//! than a rigid").
+
+use zoe::policy::Policy;
+use zoe::sched::SchedKind;
+use zoe::sim::run_many;
+use zoe::util::bench::{bench_apps, bench_runs, section};
+use zoe::workload::WorkloadSpec;
+
+fn main() {
+    let apps = bench_apps(6_000, 80_000);
+    let runs = bench_runs(3, 10);
+    let spec = WorkloadSpec::paper_inelastic();
+    section(&format!(
+        "Table 3 — fully inelastic workload: rigid ≡ flexible ({apps} apps × {runs} runs)"
+    ));
+
+    println!(
+        "  {:<8} {:>16} {:>16} {:>10}",
+        "policy", "rigid mean (s)", "flexible mean (s)", "equal?"
+    );
+    for (pname, policy) in [
+        ("FIFO", Policy::FIFO),
+        ("PSJF", Policy::sjf()),
+        ("SRPT", Policy::srpt()),
+        ("HRRN", Policy::hrrn()),
+    ] {
+        let rigid = run_many(&spec, apps, 1..runs + 1, policy, SchedKind::Rigid);
+        let flex = run_many(&spec, apps, 1..runs + 1, policy, SchedKind::Flexible);
+        let (r, f) = (rigid.turnaround.mean(), flex.turnaround.mean());
+        let equal = (r - f).abs() < 1e-6 * r.max(1.0);
+        println!(
+            "  {:<8} {:>16.2} {:>16.2} {:>10}",
+            pname,
+            r,
+            f,
+            if equal { "YES" } else { "NO!" }
+        );
+        assert!(equal, "{pname}: Table 3 equality violated");
+    }
+    println!("\n  Table 3 equality holds for all policies OK");
+}

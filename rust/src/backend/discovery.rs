@@ -1,0 +1,88 @@
+//! Service discovery — Zoe's "own service discovery mechanism" (§5):
+//! maps application/component names to host endpoints so components can
+//! find each other (e.g. TF workers locating parameter servers).
+
+use std::collections::BTreeMap;
+
+use super::{AppId, ContainerId};
+
+/// A registered service endpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Endpoint {
+    pub app: AppId,
+    pub container: ContainerId,
+    pub host: String,
+    pub port: u16,
+}
+
+/// Name → endpoints registry. Names follow `app-<id>.<component>` like
+/// Zoe's DNS-ish scheme.
+#[derive(Debug, Default)]
+pub struct Discovery {
+    services: BTreeMap<String, Vec<Endpoint>>,
+}
+
+impl Discovery {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, name: &str, ep: Endpoint) {
+        self.services.entry(name.to_string()).or_default().push(ep);
+    }
+
+    pub fn deregister_container(&mut self, container: ContainerId) {
+        for eps in self.services.values_mut() {
+            eps.retain(|e| e.container != container);
+        }
+        self.services.retain(|_, eps| !eps.is_empty());
+    }
+
+    pub fn resolve(&self, name: &str) -> &[Endpoint] {
+        self.services.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// All endpoints of an application (the `$PS_HOSTS`-style env
+    /// expansion in application command lines, §5).
+    pub fn app_endpoints(&self, app: AppId) -> Vec<(String, Endpoint)> {
+        let mut out = Vec::new();
+        for (name, eps) in &self.services {
+            for e in eps {
+                if e.app == app {
+                    out.push((name.clone(), e.clone()));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(app: AppId, c: ContainerId) -> Endpoint {
+        Endpoint {
+            app,
+            container: c,
+            host: format!("node{c:03}"),
+            port: 7077,
+        }
+    }
+
+    #[test]
+    fn register_resolve_deregister() {
+        let mut d = Discovery::new();
+        d.register("app-1.master", ep(1, 10));
+        d.register("app-1.worker", ep(1, 11));
+        d.register("app-1.worker", ep(1, 12));
+        assert_eq!(d.resolve("app-1.worker").len(), 2);
+        assert_eq!(d.resolve("app-1.master").len(), 1);
+        assert!(d.resolve("app-2.master").is_empty());
+        assert_eq!(d.app_endpoints(1).len(), 3);
+        d.deregister_container(11);
+        assert_eq!(d.resolve("app-1.worker").len(), 1);
+        d.deregister_container(10);
+        assert!(d.resolve("app-1.master").is_empty());
+    }
+}

@@ -1,0 +1,15 @@
+//! Container back-end substrate — a Docker-Swarm-like orchestration layer
+//! (§5 "Zoe back-ends"), simulated in-process but with the real API
+//! surface Zoe uses: per-node engines, container create/start/kill/remove,
+//! an event stream the monitor polls, service discovery, and *real*
+//! analytic work: worker containers execute the AOT-compiled PJRT
+//! artifacts (DESIGN.md §4 substitution for the paper's 10-server
+//! testbed).
+
+mod discovery;
+mod swarm;
+mod work_pool;
+
+pub use discovery::*;
+pub use swarm::*;
+pub use work_pool::*;

@@ -1,0 +1,399 @@
+//! The Swarm-like cluster: nodes running container engines, a container
+//! table, and a Docker-style event stream.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::core::Resources;
+use crate::runtime::WorkKind;
+
+pub type ContainerId = u64;
+pub type NodeId = u32;
+pub type AppId = u32;
+
+/// Container life-cycle states (Docker-esque).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContainerState {
+    Created,
+    Running,
+    Exited,
+    Killed,
+}
+
+/// Component role within the owning application.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Core,
+    Elastic,
+}
+
+/// Shared work ledger of one application: worker containers claim steps
+/// from it; the application completes when all steps are claimed+done.
+#[derive(Debug)]
+pub struct SharedWork {
+    pub kind: WorkKind,
+    pub steps_total: u64,
+    claimed: AtomicU64,
+    done: AtomicU64,
+}
+
+impl SharedWork {
+    pub fn new(kind: WorkKind, steps_total: u64) -> Arc<Self> {
+        Arc::new(SharedWork {
+            kind,
+            steps_total,
+            claimed: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+        })
+    }
+
+    /// Claim one step; None when the budget is exhausted.
+    pub fn claim(&self) -> Option<u64> {
+        let s = self.claimed.fetch_add(1, Ordering::Relaxed);
+        if s < self.steps_total {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    pub fn complete_one(&self) {
+        self.done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn finished(&self) -> bool {
+        self.done.load(Ordering::Relaxed) >= self.steps_total
+    }
+
+    pub fn progress(&self) -> (u64, u64) {
+        (self.done.load(Ordering::Relaxed), self.steps_total)
+    }
+}
+
+/// What to run in a container.
+#[derive(Clone, Debug)]
+pub struct ContainerSpec {
+    pub name: String,
+    /// Docker image name (descriptive only in this substrate).
+    pub image: String,
+    pub app: AppId,
+    pub role: Role,
+    pub res: Resources,
+    /// Work ledger this container contributes to (None for pure-service
+    /// core components like masters/notebooks).
+    pub work: Option<Arc<SharedWork>>,
+}
+
+/// A container record.
+#[derive(Clone, Debug)]
+pub struct Container {
+    pub id: ContainerId,
+    pub spec: ContainerSpec,
+    pub node: NodeId,
+    pub state: ContainerState,
+    pub created_at: f64,
+    pub started_at: f64,
+    pub finished_at: f64,
+}
+
+/// Docker-style events, polled by the Zoe monitor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    Created(ContainerId),
+    Started(ContainerId),
+    /// Container exited by itself (work complete).
+    Died(ContainerId, AppId),
+    Killed(ContainerId, AppId),
+}
+
+/// One node: capacity accounting for its engine.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub total: Resources,
+    pub free: Resources,
+    pub hostname: String,
+}
+
+/// Clock source for the back-end: wall time (a live master) or a virtual
+/// clock advanced by the experiment driver. The virtual clock lets the
+/// §6 replay scale application speed with granted containers — each
+/// executed step is still real PJRT compute, but elapsed time is
+/// `steps / (rate × active workers)`, as on a testbed where every
+/// container is a real CPU allocation (DESIGN.md §4).
+#[derive(Debug)]
+enum ClockMode {
+    Wall(Instant),
+    Virtual(f64),
+}
+
+/// The Swarm-like back-end.
+pub struct SwarmBackend {
+    nodes: Vec<Node>,
+    containers: HashMap<ContainerId, Container>,
+    events: Vec<Event>,
+    next_id: ContainerId,
+    clock: ClockMode,
+    /// Containers whose work loop should run (handed to the work pool).
+    pub(crate) runnable: Vec<ContainerId>,
+}
+
+impl SwarmBackend {
+    pub fn new(n_nodes: u32, per_node: Resources) -> Self {
+        let nodes = (0..n_nodes)
+            .map(|i| Node {
+                id: i,
+                total: per_node,
+                free: per_node,
+                hostname: format!("node{i:03}"),
+            })
+            .collect();
+        SwarmBackend {
+            nodes,
+            containers: HashMap::new(),
+            events: Vec::new(),
+            next_id: 1,
+            clock: ClockMode::Wall(Instant::now()),
+            runnable: Vec::new(),
+        }
+    }
+
+    /// The paper's testbed: 10 servers × 32 HT cores × 128 GB (§6).
+    pub fn paper_testbed() -> Self {
+        SwarmBackend::new(10, Resources::new(32.0, 128.0 * 1024.0))
+    }
+
+    /// Switch to a driver-advanced virtual clock (experiment replays).
+    pub fn set_virtual_clock(&mut self) {
+        assert!(
+            self.containers.is_empty(),
+            "switch clocks before any container exists"
+        );
+        self.clock = ClockMode::Virtual(0.0);
+    }
+
+    /// Advance the virtual clock (no-op under the wall clock).
+    pub fn advance(&mut self, dt: f64) {
+        if let ClockMode::Virtual(v) = &mut self.clock {
+            *v += dt;
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        match &self.clock {
+            ClockMode::Wall(epoch) => epoch.elapsed().as_secs_f64(),
+            ClockMode::Virtual(v) => *v,
+        }
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Cluster totals (the master's "high-fidelity view").
+    pub fn total(&self) -> Resources {
+        let mut t = Resources::ZERO;
+        for n in &self.nodes {
+            t.add(&n.total);
+        }
+        t
+    }
+
+    pub fn used(&self) -> Resources {
+        let mut u = Resources::ZERO;
+        for n in &self.nodes {
+            u.add(&n.total);
+            u.sub(&n.free);
+        }
+        u
+    }
+
+    /// First node with room for `res`, if any.
+    pub fn find_node(&self, res: &Resources) -> Option<NodeId> {
+        self.nodes
+            .iter()
+            .find(|n| res.fits_in(&n.free))
+            .map(|n| n.id)
+    }
+
+    /// Create + start a container on `node` (Zoe computes placement from
+    /// the virtual assignment and instructs the back-end, §5).
+    pub fn run_container(&mut self, spec: ContainerSpec, node: NodeId) -> Result<ContainerId> {
+        let n = self
+            .nodes
+            .get_mut(node as usize)
+            .ok_or_else(|| anyhow!("no such node {node}"))?;
+        if !spec.res.fits_in(&n.free) {
+            return Err(anyhow!(
+                "node {node} lacks capacity for {} ({:?} free {:?})",
+                spec.name,
+                spec.res,
+                n.free
+            ));
+        }
+        n.free.sub(&spec.res);
+        let id = self.next_id;
+        self.next_id += 1;
+        let now = self.now();
+        let c = Container {
+            id,
+            spec,
+            node,
+            state: ContainerState::Running,
+            created_at: now,
+            started_at: now,
+            finished_at: f64::NAN,
+        };
+        let has_work = c.spec.work.is_some();
+        self.containers.insert(id, c);
+        self.events.push(Event::Created(id));
+        self.events.push(Event::Started(id));
+        if has_work {
+            self.runnable.push(id);
+        }
+        Ok(id)
+    }
+
+    /// Kill a container (elastic preemption / teardown path).
+    pub fn kill_container(&mut self, id: ContainerId) -> Result<()> {
+        let now = self.now();
+        let c = self
+            .containers
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("no such container {id}"))?;
+        if c.state != ContainerState::Running {
+            return Ok(());
+        }
+        c.state = ContainerState::Killed;
+        c.finished_at = now;
+        let node = c.node;
+        let res = c.spec.res;
+        let app = c.spec.app;
+        self.nodes[node as usize].free.add(&res);
+        self.events.push(Event::Killed(id, app));
+        Ok(())
+    }
+
+    /// Mark a running container as exited (work complete). Called by the
+    /// work pool.
+    pub fn container_died(&mut self, id: ContainerId) {
+        let now = self.now();
+        if let Some(c) = self.containers.get_mut(&id) {
+            if c.state != ContainerState::Running {
+                return;
+            }
+            c.state = ContainerState::Exited;
+            c.finished_at = now;
+            let node = c.node;
+            let res = c.spec.res;
+            let app = c.spec.app;
+            self.nodes[node as usize].free.add(&res);
+            self.events.push(Event::Died(id, app));
+        }
+    }
+
+    pub fn inspect(&self, id: ContainerId) -> Option<&Container> {
+        self.containers.get(&id)
+    }
+
+    pub fn list(&self) -> impl Iterator<Item = &Container> {
+        self.containers.values()
+    }
+
+    pub fn running_of(&self, app: AppId) -> Vec<ContainerId> {
+        let mut v: Vec<ContainerId> = self
+            .containers
+            .values()
+            .filter(|c| c.spec.app == app && c.state == ContainerState::Running)
+            .map(|c| c.id)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Poll the event stream from a cursor (Docker's `events --since`).
+    pub fn poll_events(&self, cursor: &mut usize) -> Vec<Event> {
+        let out = self.events[*cursor..].to_vec();
+        *cursor = self.events.len();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(app: AppId, role: Role, cpu: f64) -> ContainerSpec {
+        ContainerSpec {
+            name: format!("app{app}-{role:?}"),
+            image: "zoe/test".into(),
+            app,
+            role,
+            res: Resources::new(cpu, 1024.0),
+            work: None,
+        }
+    }
+
+    #[test]
+    fn run_and_kill_accounting() {
+        let mut b = SwarmBackend::new(2, Resources::new(8.0, 8192.0));
+        let id = b.run_container(spec(1, Role::Core, 4.0), 0).unwrap();
+        assert_eq!(b.used().cpu, 4.0);
+        assert_eq!(b.running_of(1), vec![id]);
+        b.kill_container(id).unwrap();
+        assert_eq!(b.used().cpu, 0.0);
+        assert!(b.running_of(1).is_empty());
+        // Double-kill is a no-op.
+        b.kill_container(id).unwrap();
+        assert_eq!(b.used().cpu, 0.0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut b = SwarmBackend::new(1, Resources::new(2.0, 8192.0));
+        b.run_container(spec(1, Role::Core, 2.0), 0).unwrap();
+        assert!(b.run_container(spec(1, Role::Elastic, 1.0), 0).is_err());
+    }
+
+    #[test]
+    fn event_stream_cursor() {
+        let mut b = SwarmBackend::new(1, Resources::new(8.0, 8192.0));
+        let mut cur = 0usize;
+        assert!(b.poll_events(&mut cur).is_empty());
+        let id = b.run_container(spec(1, Role::Core, 1.0), 0).unwrap();
+        let evs = b.poll_events(&mut cur);
+        assert_eq!(evs, vec![Event::Created(id), Event::Started(id)]);
+        assert!(b.poll_events(&mut cur).is_empty());
+        b.kill_container(id).unwrap();
+        assert_eq!(b.poll_events(&mut cur), vec![Event::Killed(id, 1)]);
+    }
+
+    #[test]
+    fn shared_work_ledger() {
+        let w = SharedWork::new(WorkKind::Als, 3);
+        assert_eq!(w.claim(), Some(0));
+        assert_eq!(w.claim(), Some(1));
+        assert_eq!(w.claim(), Some(2));
+        assert_eq!(w.claim(), None);
+        assert!(!w.finished());
+        for _ in 0..3 {
+            w.complete_one();
+        }
+        assert!(w.finished());
+    }
+
+    #[test]
+    fn find_node_first_fit() {
+        let mut b = SwarmBackend::new(2, Resources::new(4.0, 4096.0));
+        assert_eq!(b.find_node(&Resources::new(4.0, 1.0)), Some(0));
+        b.run_container(spec(1, Role::Core, 3.0), 0).unwrap();
+        assert_eq!(b.find_node(&Resources::new(4.0, 1.0)), Some(1));
+        assert_eq!(b.find_node(&Resources::new(1.0, 1.0)), Some(0));
+        assert_eq!(b.find_node(&Resources::new(2.0, 1.0)), Some(1));
+        assert_eq!(b.find_node(&Resources::new(5.0, 1.0)), None);
+    }
+}

@@ -1,0 +1,118 @@
+//! The work pool: executes the analytic steps of running worker
+//! containers against the PJRT runtime. This is what makes the simulated
+//! back-end *real* — container progress is actual ALS/ridge training on
+//! the AOT artifacts, not a sleep.
+//!
+//! Single-threaded `drive` (deterministic, used by tests and the e2e
+//! driver's scheduling loop) plus a threaded runner for wall-clock runs.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::swarm::{ContainerId, SharedWork, SwarmBackend};
+use crate::runtime::{AnalyticEngine, PjrtRuntime, WorkState};
+
+/// Executes work quanta for runnable containers, round-robin.
+pub struct WorkPool {
+    rt: Arc<PjrtRuntime>,
+    /// Per-container model shard state (created lazily).
+    shards: HashMap<ContainerId, WorkState>,
+    /// Round-robin queue of containers with work.
+    queue: Vec<(ContainerId, Arc<SharedWork>)>,
+    next: usize,
+}
+
+impl WorkPool {
+    pub fn new(rt: Arc<PjrtRuntime>) -> Self {
+        WorkPool {
+            rt,
+            shards: HashMap::new(),
+            queue: Vec::new(),
+            next: 0,
+        }
+    }
+
+    /// Pull newly-runnable containers from the back-end.
+    pub fn adopt(&mut self, backend: &mut SwarmBackend) {
+        let ids: Vec<ContainerId> = backend.runnable.drain(..).collect();
+        for id in ids {
+            if let Some(c) = backend.inspect(id) {
+                if let Some(work) = &c.spec.work {
+                    self.queue.push((id, Arc::clone(work)));
+                }
+            }
+        }
+    }
+
+    /// Run up to `quanta` single steps, each attributed to the next
+    /// runnable container in round-robin order. Containers whose ledger
+    /// is exhausted exit (Died event). Returns the number of steps run.
+    pub fn drive(&mut self, backend: &mut SwarmBackend, quanta: usize) -> Result<usize> {
+        self.adopt(backend);
+        let engine = AnalyticEngine::new(&self.rt);
+        let mut steps = 0usize;
+        let mut spins = 0usize;
+        while steps < quanta && !self.queue.is_empty() && spins < self.queue.len() + 1 {
+            if self.next >= self.queue.len() {
+                self.next = 0;
+            }
+            let (cid, work) = self.queue[self.next].clone();
+            // Skip containers that were killed meanwhile.
+            let alive = backend
+                .inspect(cid)
+                .map(|c| c.state == super::swarm::ContainerState::Running)
+                .unwrap_or(false);
+            if !alive {
+                self.queue.remove(self.next);
+                self.shards.remove(&cid);
+                spins = 0;
+                continue;
+            }
+            if work.finished() {
+                // Work done → the container exits by itself.
+                self.queue.remove(self.next);
+                self.shards.remove(&cid);
+                backend.container_died(cid);
+                spins = 0;
+                continue;
+            }
+            match work.claim() {
+                Some(_) => {
+                    let shard = self
+                        .shards
+                        .entry(cid)
+                        .or_insert_with(|| WorkState::synth(work.kind, cid));
+                    engine.step(shard)?;
+                    work.complete_one();
+                    steps += 1;
+                    spins = 0;
+                }
+                None => {
+                    // Budget fully claimed; wait for completion marks.
+                    spins += 1;
+                }
+            }
+            self.next += 1;
+        }
+        // Sweep: exit any container whose ledger completed.
+        self.adopt(backend);
+        let mut i = 0;
+        while i < self.queue.len() {
+            let (cid, work) = self.queue[i].clone();
+            if work.finished() {
+                self.queue.remove(i);
+                self.shards.remove(&cid);
+                backend.container_died(cid);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(steps)
+    }
+
+    pub fn active_containers(&self) -> usize {
+        self.queue.len()
+    }
+}

@@ -1,0 +1,6 @@
+//! Core domain model: resources, component classes, requests
+//! (= analytic applications as the scheduler sees them, §2.2).
+
+mod request;
+
+pub use request::*;

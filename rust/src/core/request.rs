@@ -1,0 +1,255 @@
+//! The request abstraction of §2.2: an analytic application reduced to the
+//! tuple the scheduler needs — arrival time, priority, core and elastic
+//! component demands, and isolated execution time.
+
+/// Two-dimensional resource vector (the paper simulates CPU + RAM; §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Resources {
+    /// CPU cores (fractional allowed, the traces contain <1-core tasks).
+    pub cpu: f64,
+    /// RAM in megabytes.
+    pub ram_mb: f64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu: 0.0, ram_mb: 0.0 };
+
+    pub fn new(cpu: f64, ram_mb: f64) -> Self {
+        Resources { cpu, ram_mb }
+    }
+
+    #[inline]
+    pub fn fits_in(&self, avail: &Resources) -> bool {
+        self.cpu <= avail.cpu + 1e-9 && self.ram_mb <= avail.ram_mb + 1e-9
+    }
+
+    #[inline]
+    pub fn add(&mut self, o: &Resources) {
+        self.cpu += o.cpu;
+        self.ram_mb += o.ram_mb;
+    }
+
+    #[inline]
+    pub fn sub(&mut self, o: &Resources) {
+        self.cpu -= o.cpu;
+        self.ram_mb -= o.ram_mb;
+    }
+
+    #[inline]
+    pub fn scaled(&self, k: f64) -> Resources {
+        Resources {
+            cpu: self.cpu * k,
+            ram_mb: self.ram_mb * k,
+        }
+    }
+}
+
+/// Component classes — the paper's central modeling idea (§2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ComponentClass {
+    /// Compulsory for the application to produce useful work. Never
+    /// preempted.
+    Core,
+    /// Optionally contributes (shorter runtime); preemptible.
+    Elastic,
+}
+
+/// What kind of application a request belongs to (workload taxonomy, §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AppClass {
+    /// Batch with elastic components (e.g. Spark). "B-E" in the figures.
+    BatchElastic,
+    /// Batch with only core components (e.g. TensorFlow). "B-R".
+    BatchRigid,
+    /// Interactive (human in the loop, e.g. a Notebook). "Int".
+    Interactive,
+}
+
+impl AppClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AppClass::BatchElastic => "B-E",
+            AppClass::BatchRigid => "B-R",
+            AppClass::Interactive => "Int",
+        }
+    }
+}
+
+/// Request identifier (dense, index into the simulator's request table).
+pub type ReqId = u32;
+
+/// A request: the scheduling view of an analytic application.
+///
+/// Components within a class are homogeneous (the paper's unit model,
+/// generalized to 2-D per-component demands); `n_core` components each
+/// require `core_res`, `n_elastic` each require `elastic_res`.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: ReqId,
+    pub class: AppClass,
+    /// Arrival (submission) time, seconds.
+    pub arrival: f64,
+    /// Isolated execution time T_i: runtime with ALL components allocated.
+    pub runtime: f64,
+    /// Number of core components (≥1 for any useful application).
+    pub n_core: u32,
+    /// Per-core-component resources.
+    pub core_res: Resources,
+    /// Number of elastic components (0 for rigid applications).
+    pub n_elastic: u32,
+    /// Per-elastic-component resources.
+    pub elastic_res: Resources,
+    /// Externally-assigned priority (higher = more urgent). Interactive
+    /// applications get a high priority in the preemption experiments.
+    pub priority: f64,
+}
+
+impl Request {
+    /// Total work in component-seconds: W_i = T_i × (C_i + E_i)  (§2.2).
+    pub fn work(&self) -> f64 {
+        self.runtime * (self.n_core + self.n_elastic) as f64
+    }
+
+    /// Progress rate when granted `g` elastic components.
+    pub fn rate(&self, g: u32) -> f64 {
+        debug_assert!(g <= self.n_elastic);
+        (self.n_core + g) as f64
+    }
+
+    /// Aggregate resources of all core components.
+    pub fn core_total(&self) -> Resources {
+        self.core_res.scaled(self.n_core as f64)
+    }
+
+    /// Aggregate resources when fully allocated.
+    pub fn full_total(&self) -> Resources {
+        let mut r = self.core_total();
+        r.add(&self.elastic_res.scaled(self.n_elastic as f64));
+        r
+    }
+
+    /// Is this a rigid request (no elastic components)?
+    pub fn is_rigid(&self) -> bool {
+        self.n_elastic == 0
+    }
+}
+
+/// Builder with reasonable defaults for tests and examples.
+#[derive(Clone, Debug)]
+pub struct RequestBuilder {
+    req: Request,
+}
+
+impl RequestBuilder {
+    pub fn new(id: ReqId) -> Self {
+        RequestBuilder {
+            req: Request {
+                id,
+                class: AppClass::BatchElastic,
+                arrival: 0.0,
+                runtime: 1.0,
+                n_core: 1,
+                core_res: Resources::new(1.0, 1024.0),
+                n_elastic: 0,
+                elastic_res: Resources::new(1.0, 1024.0),
+                priority: 0.0,
+            },
+        }
+    }
+
+    pub fn arrival(mut self, t: f64) -> Self {
+        self.req.arrival = t;
+        self
+    }
+
+    pub fn runtime(mut self, t: f64) -> Self {
+        self.req.runtime = t;
+        self
+    }
+
+    pub fn cores(mut self, n: u32, res: Resources) -> Self {
+        self.req.n_core = n;
+        self.req.core_res = res;
+        self
+    }
+
+    pub fn elastics(mut self, n: u32, res: Resources) -> Self {
+        self.req.n_elastic = n;
+        self.req.elastic_res = res;
+        if n == 0 {
+            self.req.class = AppClass::BatchRigid;
+        }
+        self
+    }
+
+    pub fn class(mut self, c: AppClass) -> Self {
+        self.req.class = c;
+        self
+    }
+
+    pub fn priority(mut self, p: f64) -> Self {
+        self.req.priority = p;
+        self
+    }
+
+    pub fn build(self) -> Request {
+        let r = &self.req;
+        assert!(r.n_core >= 1, "a request needs at least one core component");
+        assert!(r.runtime > 0.0, "runtime must be positive");
+        self.req
+    }
+}
+
+/// Convenience for the paper's 1-D "units" examples: a request whose
+/// components each take 1 CPU unit and no RAM distinction.
+pub fn unit_request(id: ReqId, arrival: f64, runtime: f64, c: u32, e: u32) -> Request {
+    let unit = Resources::new(1.0, 1.0);
+    RequestBuilder::new(id)
+        .arrival(arrival)
+        .runtime(runtime)
+        .cores(c, unit)
+        .elastics(e, unit)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn work_model() {
+        let r = unit_request(0, 0.0, 10.0, 3, 4); // Fig 1 request A
+        assert_eq!(r.work(), 70.0);
+        assert_eq!(r.rate(0), 3.0);
+        assert_eq!(r.rate(4), 7.0);
+        assert!(!r.is_rigid());
+    }
+
+    #[test]
+    fn totals() {
+        let r = RequestBuilder::new(1)
+            .cores(2, Resources::new(2.0, 4096.0))
+            .elastics(3, Resources::new(1.0, 2048.0))
+            .runtime(5.0)
+            .build();
+        let ct = r.core_total();
+        assert_eq!(ct.cpu, 4.0);
+        assert_eq!(ct.ram_mb, 8192.0);
+        let ft = r.full_total();
+        assert_eq!(ft.cpu, 7.0);
+        assert_eq!(ft.ram_mb, 8192.0 + 6144.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_core_rejected() {
+        RequestBuilder::new(2).cores(0, Resources::ZERO).build();
+    }
+
+    #[test]
+    fn fits_in_with_tolerance() {
+        let a = Resources::new(1.0, 100.0);
+        assert!(a.fits_in(&Resources::new(1.0, 100.0)));
+        assert!(!a.fits_in(&Resources::new(0.5, 100.0)));
+    }
+}

@@ -1,0 +1,30 @@
+//! # zoe-flex — Flexible Scheduling of Distributed Analytic Applications
+//!
+//! Reproduction of Pace, Venzano, Carra, Michiardi, *"Flexible Scheduling of
+//! Distributed Analytic Applications"* (2016) — the **Zoe** scheduler — as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the flexible scheduling
+//!   heuristic (Algorithm 1) with core/elastic component classes, the rigid
+//!   and malleable comparators, pluggable sorting policies (FIFO / SJF /
+//!   SRPT / HRRN and the Table-1 size definitions), a trace-driven
+//!   discrete-event simulator, and the full Zoe system (master, state store,
+//!   application CL, Swarm-like container back-end).
+//! * **L2/L1 (python, build-time only)** — the analytic *work* the scheduled
+//!   applications execute (ALS / ridge-regression steps built on Pallas
+//!   kernels), AOT-lowered to HLO text and executed from rust through PJRT
+//!   (`runtime` module). Python is never on the request path.
+//!
+//! Start with [`sched::FlexibleScheduler`] and [`sim::Simulation`], or the
+//! full system in [`zoe`].
+
+pub mod backend;
+pub mod core;
+pub mod policy;
+pub mod pool;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;
+pub mod zoe;

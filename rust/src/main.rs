@@ -1,0 +1,186 @@
+//! `zoe` — the CLI: trace-driven simulation (§4), the Zoe master with its
+//! client API (§5–6), and client commands against a running master.
+//!
+//! ```text
+//! zoe sim     --apps 8000 --sched flexible --policy sjf [--seed 1]
+//! zoe master  --listen 127.0.0.1:4455 [--generation flexible] [--nodes 10]
+//! zoe submit  --to 127.0.0.1:4455 --template spark-als-16
+//! zoe status  --to 127.0.0.1:4455 --id 3
+//! zoe stats   --to 127.0.0.1:4455
+//! zoe kill    --to 127.0.0.1:4455 --id 3
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use zoe::backend::{SwarmBackend, WorkPool};
+use zoe::policy::{Discipline, Policy, SizeDim};
+use zoe::pool::Cluster;
+use zoe::runtime::PjrtRuntime;
+use zoe::sched::SchedKind;
+use zoe::sim::simulate;
+use zoe::util::cli::Args;
+use zoe::util::json::Json;
+use zoe::workload::WorkloadSpec;
+use zoe::zoe::{templates, ApiClient, ApiServer, AppDescription, ZoeGeneration, ZoeMaster};
+
+fn main() {
+    zoe::util::logging::init();
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("sim") => cmd_sim(&args),
+        Some("master") => cmd_master(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("status") => cmd_client_simple(&args, "status"),
+        Some("stats") => cmd_client_simple(&args, "stats"),
+        Some("kill") => cmd_client_simple(&args, "kill"),
+        _ => {
+            eprintln!("usage: zoe <sim|master|submit|status|stats|kill> [--flags]");
+            eprintln!("see README.md for details");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_policy(s: &str) -> Policy {
+    match s {
+        "fifo" => Policy::FIFO,
+        "sjf" => Policy::sjf(),
+        "srpt" => Policy::srpt(),
+        "hrrn" => Policy::hrrn(),
+        "sjf2d" => Policy::new(Discipline::Sjf, SizeDim::D2),
+        "sjf3d" => Policy::new(Discipline::Sjf, SizeDim::D3),
+        other => {
+            eprintln!("unknown policy '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_sim(args: &Args) {
+    let apps = args.u64_or("apps", 8000) as u32;
+    let seed = args.u64_or("seed", 1);
+    let kind = match args.get_or("sched", "flexible").as_str() {
+        "rigid" => SchedKind::Rigid,
+        "malleable" => SchedKind::Malleable,
+        "flexible" => SchedKind::Flexible,
+        "preemptive" => SchedKind::FlexiblePreemptive,
+        other => {
+            eprintln!("unknown scheduler '{other}'");
+            std::process::exit(2);
+        }
+    };
+    let policy = parse_policy(&args.get_or("policy", "fifo"));
+    let mut spec = if args.has("interactive") {
+        WorkloadSpec::paper()
+    } else {
+        WorkloadSpec::paper_batch_only()
+    };
+    spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
+    let requests = spec.generate(apps, seed);
+    let mut res = simulate(requests, Cluster::paper_sim(), policy, kind);
+    println!("{}", res.summary());
+    println!("turnaround: {}", res.turnaround.boxplot());
+    println!("queuing:    {}", res.queuing.boxplot());
+    println!("cpu alloc:  {}", res.cpu_alloc.boxplot());
+}
+
+fn cmd_master(args: &Args) {
+    let listen = args.get_or("listen", "127.0.0.1:4455");
+    let nodes = args.u64_or("nodes", 10) as u32;
+    let generation = match args.get_or("generation", "flexible").as_str() {
+        "rigid" => ZoeGeneration::Rigid,
+        _ => ZoeGeneration::Flexible,
+    };
+    let rt = Arc::new(PjrtRuntime::load_default().unwrap_or_else(|e| {
+        eprintln!("cannot load PJRT artifacts: {e}");
+        std::process::exit(1);
+    }));
+    log::info!("PJRT platform: {}", rt.platform());
+    let backend = SwarmBackend::new(nodes, zoe::core::Resources::new(32.0, 128.0 * 1024.0));
+    let master = Arc::new(Mutex::new(ZoeMaster::new(backend, generation)));
+    let server = ApiServer::spawn(Arc::clone(&master), &listen).unwrap_or_else(|e| {
+        eprintln!("cannot bind {listen}: {e}");
+        std::process::exit(1);
+    });
+    log::info!("zoe master ({generation:?}) listening on {}", server.addr);
+
+    // Drive loop: execute container work + poll events.
+    let mut pool = WorkPool::new(rt);
+    loop {
+        {
+            let mut m = master.lock().unwrap();
+            m.handle_events();
+            let _ = pool.drive(&mut m.backend, 32);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+}
+
+fn template_by_name(name: &str) -> Option<AppDescription> {
+    Some(match name {
+        "spark-als-16" => templates::spark_als(16),
+        "spark-als-8" => templates::spark_als(8),
+        "spark-reg-16" => templates::spark_regression(16),
+        "spark-reg-8" => templates::spark_regression(8),
+        "tf-single" => templates::tf_single(),
+        "tf-dist" => templates::tf_distributed(),
+        "notebook" => templates::notebook(),
+        _ => return None,
+    })
+}
+
+fn cmd_submit(args: &Args) {
+    let to = args.get_or("to", "127.0.0.1:4455");
+    let desc = if let Some(file) = args.get("file") {
+        let text = std::fs::read_to_string(file).unwrap_or_else(|e| {
+            eprintln!("cannot read {file}: {e}");
+            std::process::exit(1);
+        });
+        let j = Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("bad json: {e}");
+            std::process::exit(1);
+        });
+        AppDescription::from_json(&j).unwrap_or_else(|e| {
+            eprintln!("bad app description: {e}");
+            std::process::exit(1);
+        })
+    } else {
+        let t = args.get_or("template", "spark-als-16");
+        template_by_name(&t).unwrap_or_else(|| {
+            eprintln!(
+                "unknown template '{t}' (spark-als-16|spark-als-8|spark-reg-16|spark-reg-8|tf-single|tf-dist|notebook)"
+            );
+            std::process::exit(2);
+        })
+    };
+    let mut client = ApiClient::connect(&to).unwrap_or_else(|e| {
+        eprintln!("cannot connect to {to}: {e}");
+        std::process::exit(1);
+    });
+    match client.submit(&desc) {
+        Ok(id) => println!("submitted {} as app {id}", desc.name),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_client_simple(args: &Args, op: &str) {
+    let to = args.get_or("to", "127.0.0.1:4455");
+    let mut client = ApiClient::connect(&to).unwrap_or_else(|e| {
+        eprintln!("cannot connect to {to}: {e}");
+        std::process::exit(1);
+    });
+    let mut req = vec![("op", Json::str(op))];
+    if let Some(id) = args.get("id") {
+        req.push(("id", Json::num(id.parse::<f64>().unwrap_or(-1.0))));
+    }
+    match client.call(&Json::obj(req)) {
+        Ok(resp) => println!("{}", resp.to_string()),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}

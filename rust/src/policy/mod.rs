@@ -1,0 +1,279 @@
+//! Sorting policies (§3.1 decouples sorting from allocation; §4.2–4.3
+//! evaluate FIFO, SJF, PSJF, SRPT, HRRN with the Table-1 size definitions).
+//!
+//! A policy maps a request (plus its execution state and the current time)
+//! to a **key**; the pending queue is kept sorted by ascending key — the
+//! smallest key is served first. HRRN is a *descending* discipline (serve
+//! the highest response ratio next); its key is negated so that ascending
+//! order still applies.
+
+use crate::core::Request;
+
+/// Size dimensionality of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SizeDim {
+    /// Unidimensional: time only (classic single-server SMART sizes).
+    D1,
+    /// 2-D: time × number of services (components).
+    D2,
+    /// 3-D: time × Σ_i CPU_i·RAM_i over services.
+    D3,
+}
+
+impl SizeDim {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SizeDim::D1 => "1D",
+            SizeDim::D2 => "2D",
+            SizeDim::D3 => "3D",
+        }
+    }
+}
+
+/// Which services the resource/size factor counts (SRPT-2D1 vs SRPT-2D2 in
+/// Table 1: all requested services vs services yet to be scheduled).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ServiceScope {
+    /// `#RequestedServices` / Σ over all services.
+    Requested,
+    /// `#ServicesYetToBeScheduled` / Σ over unscheduled services.
+    Unscheduled,
+}
+
+/// The scheduling disciplines evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Discipline {
+    /// First-in first-out (arrival order).
+    Fifo,
+    /// Shortest job first (static size).
+    Sjf,
+    /// Shortest remaining processing time.
+    Srpt,
+    /// Highest response ratio next (anti-starvation; *descending*).
+    Hrrn,
+}
+
+/// A complete policy: discipline × size definition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Policy {
+    pub discipline: Discipline,
+    pub dim: SizeDim,
+    pub scope: ServiceScope,
+}
+
+impl Policy {
+    pub const FIFO: Policy = Policy {
+        discipline: Discipline::Fifo,
+        dim: SizeDim::D1,
+        scope: ServiceScope::Requested,
+    };
+
+    pub fn new(discipline: Discipline, dim: SizeDim) -> Policy {
+        Policy {
+            discipline,
+            dim,
+            scope: ServiceScope::Requested,
+        }
+    }
+
+    pub fn with_scope(mut self, scope: ServiceScope) -> Policy {
+        self.scope = scope;
+        self
+    }
+
+    /// Plain SJF on runtime (the "SJF" of Fig. 3).
+    pub fn sjf() -> Policy {
+        Policy::new(Discipline::Sjf, SizeDim::D1)
+    }
+
+    pub fn srpt() -> Policy {
+        Policy::new(Discipline::Srpt, SizeDim::D1)
+    }
+
+    pub fn hrrn() -> Policy {
+        Policy::new(Discipline::Hrrn, SizeDim::D1)
+    }
+
+    /// The eight Table-1 entries, with their paper names.
+    pub fn table1() -> Vec<(&'static str, Policy)> {
+        use Discipline::*;
+        use ServiceScope::*;
+        use SizeDim::*;
+        vec![
+            ("SJF-2D", Policy::new(Sjf, D2)),
+            ("SRPT-2D1", Policy::new(Srpt, D2)),
+            ("SRPT-2D2", Policy::new(Srpt, D2).with_scope(Unscheduled)),
+            ("HRRN-2D", Policy::new(Hrrn, D2)),
+            ("SJF-3D", Policy::new(Sjf, D3)),
+            ("SRPT-3D1", Policy::new(Srpt, D3)),
+            ("SRPT-3D2", Policy::new(Srpt, D3).with_scope(Unscheduled)),
+            ("HRRN-3D", Policy::new(Hrrn, D3)),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        let d = match self.discipline {
+            Discipline::Fifo => return "FIFO".to_string(),
+            Discipline::Sjf => "SJF",
+            Discipline::Srpt => "SRPT",
+            Discipline::Hrrn => "HRRN",
+        };
+        let scope = match (self.discipline, self.scope, self.dim) {
+            (_, _, SizeDim::D1) => "",
+            (Discipline::Srpt, ServiceScope::Requested, _) => "1",
+            (Discipline::Srpt, ServiceScope::Unscheduled, _) => "2",
+            _ => "",
+        };
+        format!("{d}-{}{}", self.dim.label(), scope)
+    }
+
+    /// Is ordering time-varying (needs re-sorting as time passes)?
+    pub fn dynamic(&self) -> bool {
+        matches!(self.discipline, Discipline::Srpt | Discipline::Hrrn)
+    }
+
+    /// The execution-state inputs a key can depend on.
+    ///
+    /// `remaining_frac` — fraction of the request's work not yet done
+    /// (1.0 for pending requests); `granted` — elastic components
+    /// currently granted; `wait` — time spent in queue so far.
+    pub fn key(&self, req: &Request, remaining_frac: f64, granted: u32, wait: f64) -> f64 {
+        let services = (req.n_core + req.n_elastic) as f64;
+        let unsched_services = (req.n_core + req.n_elastic - granted.min(req.n_elastic)) as f64;
+        let (n_services, res_sum) = match self.scope {
+            ServiceScope::Requested => (services, self.res_sum(req, false, granted)),
+            ServiceScope::Unscheduled => (unsched_services, self.res_sum(req, true, granted)),
+        };
+        let weight = match self.dim {
+            SizeDim::D1 => 1.0,
+            SizeDim::D2 => n_services,
+            SizeDim::D3 => res_sum,
+        };
+        match self.discipline {
+            Discipline::Fifo => req.arrival,
+            Discipline::Sjf => req.runtime * weight,
+            Discipline::Srpt => req.runtime * remaining_frac * weight,
+            // HRRN serves the *highest* ratio next → negate for ascending.
+            Discipline::Hrrn => -((1.0 + wait / req.runtime) * weight),
+        }
+    }
+
+    /// Σ CPU_i × RAM_i (RAM in GB to keep magnitudes sane) over services.
+    fn res_sum(&self, req: &Request, unscheduled_only: bool, granted: u32) -> f64 {
+        let gb = 1.0 / 1024.0;
+        let core = req.n_core as f64 * req.core_res.cpu * (req.core_res.ram_mb * gb);
+        let n_el = if unscheduled_only {
+            (req.n_elastic - granted.min(req.n_elastic)) as f64
+        } else {
+            req.n_elastic as f64
+        };
+        let elastic = n_el * req.elastic_res.cpu * (req.elastic_res.ram_mb * gb);
+        if unscheduled_only {
+            // Unscheduled cores only exist for pending requests; granted>0
+            // implies all cores are scheduled.
+            if granted > 0 {
+                elastic
+            } else {
+                core + elastic
+            }
+        } else {
+            core + elastic
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{unit_request, RequestBuilder, Resources};
+
+    #[test]
+    fn fifo_orders_by_arrival() {
+        let p = Policy::FIFO;
+        let a = unit_request(0, 5.0, 10.0, 1, 0);
+        let b = unit_request(1, 3.0, 10.0, 1, 0);
+        assert!(p.key(&b, 1.0, 0, 0.0) < p.key(&a, 1.0, 0, 0.0));
+    }
+
+    #[test]
+    fn sjf_orders_by_runtime() {
+        let p = Policy::sjf();
+        let short = unit_request(0, 0.0, 5.0, 3, 2);
+        let long = unit_request(1, 0.0, 50.0, 1, 0);
+        assert!(p.key(&short, 1.0, 0, 0.0) < p.key(&long, 1.0, 0, 0.0));
+    }
+
+    #[test]
+    fn sjf_2d_penalizes_many_services() {
+        let p = Policy::new(Discipline::Sjf, SizeDim::D2);
+        let small = unit_request(0, 0.0, 10.0, 1, 1); // 2 services
+        let wide = unit_request(1, 0.0, 10.0, 3, 97); // 100 services
+        assert!(p.key(&small, 1.0, 0, 0.0) < p.key(&wide, 1.0, 0, 0.0));
+    }
+
+    #[test]
+    fn srpt_uses_remaining() {
+        let p = Policy::srpt();
+        let r = unit_request(0, 0.0, 100.0, 1, 0);
+        assert!(p.key(&r, 0.1, 0, 0.0) < p.key(&r, 1.0, 0, 0.0));
+    }
+
+    #[test]
+    fn srpt_2d2_drops_granted_services() {
+        let p = Policy::new(Discipline::Srpt, SizeDim::D2).with_scope(ServiceScope::Unscheduled);
+        let r = unit_request(0, 0.0, 10.0, 2, 8);
+        let all = p.key(&r, 1.0, 0, 0.0);
+        let some = p.key(&r, 1.0, 5, 0.0);
+        assert!(some < all);
+    }
+
+    #[test]
+    fn hrrn_improves_with_wait() {
+        let p = Policy::hrrn();
+        let r = unit_request(0, 0.0, 10.0, 1, 0);
+        let fresh = p.key(&r, 1.0, 0, 0.0);
+        let waited = p.key(&r, 1.0, 0, 100.0);
+        assert!(waited < fresh, "waiting must improve (lower) the key");
+    }
+
+    #[test]
+    fn hrrn_2d_prefers_big_at_zero_wait() {
+        // The paper observes HRRN-xD lets big apps start first; at wait=0
+        // the key is -(1.0 * services): more services → smaller key.
+        let p = Policy::new(Discipline::Hrrn, SizeDim::D2);
+        let big = unit_request(0, 0.0, 10.0, 10, 90);
+        let small = unit_request(1, 0.0, 10.0, 1, 1);
+        assert!(p.key(&big, 1.0, 0, 0.0) < p.key(&small, 1.0, 0, 0.0));
+    }
+
+    #[test]
+    fn d3_uses_cpu_ram_product() {
+        let p = Policy::new(Discipline::Sjf, SizeDim::D3);
+        let fat = RequestBuilder::new(0)
+            .runtime(10.0)
+            .cores(1, Resources::new(6.0, 32.0 * 1024.0))
+            .build();
+        let thin = RequestBuilder::new(1)
+            .runtime(10.0)
+            .cores(1, Resources::new(0.5, 512.0))
+            .build();
+        assert!(p.key(&thin, 1.0, 0, 0.0) < p.key(&fat, 1.0, 0, 0.0));
+    }
+
+    #[test]
+    fn table1_has_eight_entries_with_labels() {
+        let t = Policy::table1();
+        assert_eq!(t.len(), 8);
+        let labels: Vec<&str> = t.iter().map(|(l, _)| *l).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "SJF-2D", "SRPT-2D1", "SRPT-2D2", "HRRN-2D", "SJF-3D", "SRPT-3D1", "SRPT-3D2",
+                "HRRN-3D"
+            ]
+        );
+        for (l, p) in &t {
+            assert_eq!(&p.label(), l);
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! Cluster resource pool: a set of machines with 2-D capacities
+//! (CPU, RAM) on which the schedulers trial-place application components.
+//!
+//! The schedulers compute *virtual assignments* (§3.2): on every event the
+//! assignment is recomputed from scratch against a cleared pool, so the
+//! pool exposes bulk placement of homogeneous component batches plus
+//! cheap save/restore for admission trials.
+
+use crate::core::Resources;
+
+/// One machine: total and currently-free resources.
+#[derive(Clone, Copy, Debug)]
+pub struct Machine {
+    pub total: Resources,
+    pub free: Resources,
+}
+
+impl Machine {
+    pub fn new(total: Resources) -> Self {
+        Machine { total, free: total }
+    }
+
+    /// How many components of `res` fit in the free space.
+    #[inline]
+    pub fn fit_count(&self, res: &Resources) -> u32 {
+        let by_cpu = if res.cpu > 0.0 {
+            ((self.free.cpu + 1e-9) / res.cpu) as u32
+        } else {
+            u32::MAX
+        };
+        let by_ram = if res.ram_mb > 0.0 {
+            ((self.free.ram_mb + 1e-9) / res.ram_mb) as u32
+        } else {
+            u32::MAX
+        };
+        by_cpu.min(by_ram)
+    }
+}
+
+/// A saved cluster state for trial placements.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    free: Vec<Resources>,
+    used: Resources,
+}
+
+/// A recorded placement of `n` identical components across machines;
+/// releasable via [`Cluster::release`].
+#[derive(Clone, Debug, Default)]
+pub struct Placement {
+    pub res: Resources,
+    /// (machine index, component count) pairs.
+    pub by_machine: Vec<(u32, u32)>,
+}
+
+impl Placement {
+    pub fn count(&self) -> u32 {
+        self.by_machine.iter().map(|&(_, k)| k).sum()
+    }
+}
+
+/// The cluster: a vector of machines (uniform in the paper's simulations:
+/// 100 × (32 cores, 128 GB), §4.1).
+///
+/// `used` is tracked incrementally — `used()` is O(1), it is read on every
+/// simulator event for the allocation metrics (§Perf).
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    machines: Vec<Machine>,
+    used: Resources,
+    total: Resources,
+}
+
+impl Cluster {
+    pub fn new(machines: Vec<Machine>) -> Self {
+        assert!(!machines.is_empty());
+        let mut total = Resources::ZERO;
+        for m in &machines {
+            total.add(&m.total);
+        }
+        Cluster {
+            machines,
+            used: Resources::ZERO,
+            total,
+        }
+    }
+
+    /// `n` identical machines.
+    pub fn uniform(n: usize, per_machine: Resources) -> Self {
+        Cluster::new(vec![Machine::new(per_machine); n])
+    }
+
+    /// The paper's simulated cluster: 100 machines × 32 cores × 128 GB.
+    pub fn paper_sim() -> Self {
+        Cluster::uniform(100, Resources::new(32.0, 128.0 * 1024.0))
+    }
+
+    /// A single abstract machine of `units` 1-CPU units — the 1-D model of
+    /// the illustrative example (Fig. 1).
+    pub fn units(units: u32) -> Self {
+        Cluster::uniform(1, Resources::new(units as f64, units as f64))
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn machines(&self) -> &[Machine] {
+        &self.machines
+    }
+
+    /// Reset all machines to empty (start of a virtual-assignment pass).
+    pub fn clear(&mut self) {
+        for m in &mut self.machines {
+            m.free = m.total;
+        }
+        self.used = Resources::ZERO;
+    }
+
+    /// Aggregate capacity (O(1), cached).
+    pub fn total(&self) -> Resources {
+        self.total
+    }
+
+    /// Quick reject: can even one component of `res` fit *anywhere*?
+    /// (Aggregate check — machine scan only happens when it might.)
+    #[inline]
+    fn aggregate_can_fit_one(&self, res: &Resources) -> bool {
+        let free_cpu = self.total.cpu - self.used.cpu;
+        let free_ram = self.total.ram_mb - self.used.ram_mb;
+        res.cpu <= free_cpu + 1e-9 && res.ram_mb <= free_ram + 1e-9
+    }
+
+    /// Aggregate currently-used resources (O(1), tracked incrementally).
+    pub fn used(&self) -> Resources {
+        self.used
+    }
+
+    /// How many components of `res` fit cluster-wide right now.
+    pub fn fit_count(&self, res: &Resources) -> u64 {
+        if !self.aggregate_can_fit_one(res) {
+            return 0;
+        }
+        self.machines
+            .iter()
+            .map(|m| m.fit_count(res) as u64)
+            .sum()
+    }
+
+    /// Place up to `n` components of `res`, greedily filling machines in
+    /// order. Returns how many were placed.
+    pub fn place_up_to(&mut self, res: &Resources, n: u32) -> u32 {
+        if n == 0 || !self.aggregate_can_fit_one(res) {
+            return 0;
+        }
+        let mut left = n;
+        for m in &mut self.machines {
+            if left == 0 {
+                break;
+            }
+            let k = m.fit_count(res).min(left);
+            if k > 0 {
+                m.free.sub(&res.scaled(k as f64));
+                left -= k;
+            }
+        }
+        let placed = n - left;
+        self.used.add(&res.scaled(placed as f64));
+        placed
+    }
+
+    /// All-or-nothing placement of `n` components of `res`.
+    /// Two-pass: count feasibility first, then commit.
+    pub fn place_all(&mut self, res: &Resources, n: u32) -> bool {
+        if self.fit_count(res) < n as u64 {
+            return false;
+        }
+        let placed = self.place_up_to(res, n);
+        debug_assert_eq!(placed, n);
+        true
+    }
+
+    /// Place up to `n` components of `res`, recording which machines got
+    /// how many — so the placement can later be released exactly
+    /// (persistent-placement schedulers, e.g. the rigid baseline, and the
+    /// Zoe back-end).
+    pub fn place_up_to_tracked(&mut self, res: &Resources, n: u32) -> (u32, Placement) {
+        if n == 0 || !self.aggregate_can_fit_one(res) {
+            return (0, Placement { res: *res, by_machine: Vec::new() });
+        }
+        let mut left = n;
+        let mut by_machine = Vec::with_capacity(4);
+        for (i, m) in self.machines.iter_mut().enumerate() {
+            if left == 0 {
+                break;
+            }
+            let k = m.fit_count(res).min(left);
+            if k > 0 {
+                m.free.sub(&res.scaled(k as f64));
+                left -= k;
+                by_machine.push((i as u32, k));
+            }
+        }
+        let placed = n - left;
+        self.used.add(&res.scaled(placed as f64));
+        (
+            placed,
+            Placement {
+                res: *res,
+                by_machine,
+            },
+        )
+    }
+
+    /// All-or-nothing tracked placement.
+    pub fn place_all_tracked(&mut self, res: &Resources, n: u32) -> Option<Placement> {
+        if self.fit_count(res) < n as u64 {
+            return None;
+        }
+        let (placed, p) = self.place_up_to_tracked(res, n);
+        debug_assert_eq!(placed, n);
+        Some(p)
+    }
+
+    /// Release a tracked placement.
+    pub fn release(&mut self, p: &Placement) {
+        let mut released = 0u32;
+        for &(mi, k) in &p.by_machine {
+            let m = &mut self.machines[mi as usize];
+            m.free.add(&p.res.scaled(k as f64));
+            released += k;
+            debug_assert!(m.free.cpu <= m.total.cpu + 1e-6);
+            debug_assert!(m.free.ram_mb <= m.total.ram_mb + 1e-3);
+        }
+        self.used.sub(&p.res.scaled(released as f64));
+    }
+
+    /// Snapshot of the free vectors (and used total), for trial
+    /// placements.
+    pub fn save(&self) -> Snapshot {
+        Snapshot {
+            free: self.machines.iter().map(|m| m.free).collect(),
+            used: self.used,
+        }
+    }
+
+    /// Restore a snapshot taken with [`Cluster::save`].
+    pub fn restore(&mut self, snap: &Snapshot) {
+        debug_assert_eq!(snap.free.len(), self.machines.len());
+        for (m, f) in self.machines.iter_mut().zip(&snap.free) {
+            m.free = *f;
+        }
+        self.used = snap.used;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_cluster_counts() {
+        let c = Cluster::units(10);
+        assert_eq!(c.fit_count(&Resources::new(1.0, 1.0)), 10);
+        assert_eq!(c.total().cpu, 10.0);
+    }
+
+    #[test]
+    fn place_up_to_partial() {
+        let mut c = Cluster::units(10);
+        let unit = Resources::new(1.0, 1.0);
+        assert_eq!(c.place_up_to(&unit, 7), 7);
+        assert_eq!(c.place_up_to(&unit, 7), 3);
+        assert_eq!(c.place_up_to(&unit, 7), 0);
+        assert_eq!(c.used().cpu, 10.0);
+    }
+
+    #[test]
+    fn place_all_is_transactional() {
+        let mut c = Cluster::units(10);
+        let unit = Resources::new(1.0, 1.0);
+        assert!(c.place_all(&unit, 10));
+        assert!(!c.place_all(&unit, 1));
+        c.clear();
+        assert!(!c.place_all(&unit, 11));
+        // failed place_all must not consume anything
+        assert_eq!(c.used().cpu, 0.0);
+    }
+
+    #[test]
+    fn two_dimensional_fit() {
+        // Machine with plenty CPU but tight RAM.
+        let mut c = Cluster::uniform(1, Resources::new(32.0, 4096.0));
+        let comp = Resources::new(1.0, 2048.0);
+        assert_eq!(c.fit_count(&comp), 2);
+        assert_eq!(c.place_up_to(&comp, 5), 2);
+    }
+
+    #[test]
+    fn fragmentation_across_machines() {
+        // 2 machines × 4 cores; a 5-core component fits nowhere even though
+        // aggregate capacity is 8.
+        let c = Cluster::uniform(2, Resources::new(4.0, 1e6));
+        assert_eq!(c.fit_count(&Resources::new(5.0, 1.0)), 0);
+        assert_eq!(c.fit_count(&Resources::new(2.0, 1.0)), 4);
+    }
+
+    #[test]
+    fn save_restore() {
+        let mut c = Cluster::units(10);
+        let unit = Resources::new(1.0, 1.0);
+        c.place_up_to(&unit, 4);
+        let snap = c.save();
+        c.place_up_to(&unit, 6);
+        assert_eq!(c.used().cpu, 10.0);
+        c.restore(&snap);
+        assert_eq!(c.used().cpu, 4.0);
+    }
+
+    #[test]
+    fn zero_resource_component_fits_infinitely() {
+        let c = Cluster::units(1);
+        assert!(c.fit_count(&Resources::ZERO) > 1_000_000);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python is build-time only; after `make artifacts` the rust binary is
+//! self-contained. One compiled executable per model variant, compiled
+//! once at startup and shared (`Arc`) across worker threads.
+
+mod pjrt;
+mod work;
+
+pub use pjrt::*;
+pub use work::*;

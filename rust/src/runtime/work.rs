@@ -1,0 +1,202 @@
+//! The analytic work Zoe applications execute: typed drivers over the
+//! PJRT artifacts (ALS recommender step, ridge-regression step, and the
+//! scheduler's Table-1 batch scorer).
+//!
+//! Shapes are fixed at AOT time (python/compile/model.py); the drivers own
+//! the state buffers and pad/truncate as needed.
+
+use anyhow::Result;
+
+use super::PjrtRuntime;
+use crate::util::rng::Rng;
+
+pub const ALS_USERS: usize = 256;
+pub const ALS_ITEMS: usize = 256;
+pub const ALS_RANK: usize = 128;
+pub const RIDGE_ROWS: usize = 512;
+pub const RIDGE_FEATS: usize = 128;
+pub const RIDGE_TARGETS: usize = 128;
+pub const SCORE_BATCH: usize = 1024;
+pub const SCORE_FEATURES: usize = 7;
+pub const SCORE_POLICIES: usize = 8;
+
+/// Which analytic workload a container runs (§6 templates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkKind {
+    /// ALS music recommender (Spark-like elastic application).
+    Als,
+    /// Ridge regression on flight delays (Spark-like elastic application).
+    Ridge,
+    /// Deep-GP-style training stand-in (TensorFlow-like rigid application)
+    /// — same ridge artifact, different template dressing.
+    TfTrain,
+}
+
+impl WorkKind {
+    pub fn parse(s: &str) -> Option<WorkKind> {
+        match s {
+            "als" => Some(WorkKind::Als),
+            "ridge" => Some(WorkKind::Ridge),
+            "tf" | "tf_train" => Some(WorkKind::TfTrain),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkKind::Als => "als",
+            WorkKind::Ridge => "ridge",
+            WorkKind::TfTrain => "tf_train",
+        }
+    }
+}
+
+/// Mutable training state for one application's work.
+pub struct WorkState {
+    pub kind: WorkKind,
+    // ALS state.
+    u: Vec<f32>,
+    v: Vec<f32>,
+    r: Vec<f32>,
+    // Ridge state.
+    x: Vec<f32>,
+    y: Vec<f32>,
+    w: Vec<f32>,
+    pub steps_done: u64,
+}
+
+impl WorkState {
+    /// Deterministic synthetic data for `kind` (stands in for the
+    /// Last.fm / US-DoT datasets of §6 — see DESIGN.md §4 substitutions).
+    pub fn synth(kind: WorkKind, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut gen = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n)
+                .map(|_| (rng.f64() as f32 - 0.5) * 2.0 * scale)
+                .collect()
+        };
+        WorkState {
+            kind,
+            u: gen(ALS_USERS * ALS_RANK, 0.1),
+            v: gen(ALS_ITEMS * ALS_RANK, 0.1),
+            r: gen(ALS_USERS * ALS_ITEMS, 1.0),
+            x: gen(RIDGE_ROWS * RIDGE_FEATS, 1.0),
+            y: gen(RIDGE_ROWS * RIDGE_TARGETS, 1.0),
+            w: vec![0.0; RIDGE_FEATS * RIDGE_TARGETS],
+            steps_done: 0,
+        }
+    }
+
+    /// Current objective value (for convergence logging in the e2e run).
+    pub fn loss(&self) -> f64 {
+        match self.kind {
+            WorkKind::Als => {
+                // ||U Vᵀ − R||² / n, computed on a row sample to stay cheap.
+                let mut acc = 0.0f64;
+                let rows = 16usize;
+                for i in 0..rows {
+                    for j in 0..ALS_ITEMS {
+                        let mut dot = 0.0f32;
+                        for t in 0..ALS_RANK {
+                            dot += self.u[i * ALS_RANK + t] * self.v[j * ALS_RANK + t];
+                        }
+                        let e = dot - self.r[i * ALS_ITEMS + j];
+                        acc += (e * e) as f64;
+                    }
+                }
+                acc / (rows * ALS_ITEMS) as f64
+            }
+            WorkKind::Ridge | WorkKind::TfTrain => {
+                let mut acc = 0.0f64;
+                let rows = 16usize;
+                for i in 0..rows {
+                    for j in 0..RIDGE_TARGETS {
+                        let mut dot = 0.0f32;
+                        for t in 0..RIDGE_FEATS {
+                            dot += self.x[i * RIDGE_FEATS + t] * self.w[t * RIDGE_TARGETS + j];
+                        }
+                        let e = dot - self.y[i * RIDGE_TARGETS + j];
+                        acc += (e * e) as f64;
+                    }
+                }
+                acc / (rows * RIDGE_TARGETS) as f64
+            }
+        }
+    }
+}
+
+/// Typed execution of one training step through the PJRT artifacts.
+pub struct AnalyticEngine<'a> {
+    pub rt: &'a PjrtRuntime,
+}
+
+impl<'a> AnalyticEngine<'a> {
+    pub fn new(rt: &'a PjrtRuntime) -> Self {
+        AnalyticEngine { rt }
+    }
+
+    /// Run one step, updating `state` in place.
+    pub fn step(&self, state: &mut WorkState) -> Result<()> {
+        match state.kind {
+            WorkKind::Als => {
+                let lr = [5e-3f32];
+                let out = self.rt.execute_f32(
+                    "als_step",
+                    &[
+                        (&state.u, &[ALS_USERS as i64, ALS_RANK as i64]),
+                        (&state.v, &[ALS_ITEMS as i64, ALS_RANK as i64]),
+                        (&state.r, &[ALS_USERS as i64, ALS_ITEMS as i64]),
+                        (&lr, &[]),
+                    ],
+                )?;
+                state.u.copy_from_slice(&out);
+            }
+            WorkKind::Ridge | WorkKind::TfTrain => {
+                let lr = [1e-3f32];
+                let lam = [1e-4f32];
+                let out = self.rt.execute_f32(
+                    "ridge_step",
+                    &[
+                        (&state.x, &[RIDGE_ROWS as i64, RIDGE_FEATS as i64]),
+                        (&state.y, &[RIDGE_ROWS as i64, RIDGE_TARGETS as i64]),
+                        (&state.w, &[RIDGE_FEATS as i64, RIDGE_TARGETS as i64]),
+                        (&lr, &[]),
+                        (&lam, &[]),
+                    ],
+                )?;
+                state.w.copy_from_slice(&out);
+            }
+        }
+        state.steps_done += 1;
+        Ok(())
+    }
+
+    /// Batch-score pending applications with the Table-1 kernel.
+    /// `features` is row-major (SCORE_FEATURES, n); n ≤ SCORE_BATCH
+    /// (padded internally). Returns (SCORE_POLICIES, n) row-major keys.
+    pub fn score_table1(&self, features: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(features.len(), SCORE_FEATURES);
+        let n = features[0].len();
+        assert!(n <= SCORE_BATCH, "score batch {n} > {SCORE_BATCH}");
+        let mut flat = vec![0.0f32; SCORE_FEATURES * SCORE_BATCH];
+        for (fi, row) in features.iter().enumerate() {
+            assert_eq!(row.len(), n);
+            flat[fi * SCORE_BATCH..fi * SCORE_BATCH + n].copy_from_slice(row);
+            // Pad runtime with 1.0 to avoid division by zero in HRRN.
+            if fi == 0 {
+                for x in flat[fi * SCORE_BATCH + n..(fi + 1) * SCORE_BATCH].iter_mut() {
+                    *x = 1.0;
+                }
+            }
+        }
+        let out = self.rt.execute_f32(
+            "score_table1",
+            &[(&flat, &[SCORE_FEATURES as i64, SCORE_BATCH as i64])],
+        )?;
+        let mut rows = Vec::with_capacity(SCORE_POLICIES);
+        for pi in 0..SCORE_POLICIES {
+            rows.push(out[pi * SCORE_BATCH..pi * SCORE_BATCH + n].to_vec());
+        }
+        Ok(rows)
+    }
+}

@@ -1,0 +1,262 @@
+//! The paper's contribution: the flexible scheduling heuristic
+//! (Algorithm 1), with the preemptive arrival path of §3.3.
+//!
+//! Placement model: **core placements are persistent** — once a request's
+//! core components are placed they never move (as in the real Zoe
+//! back-end; cores are never preempted). Elastic placements are released
+//! and re-cascaded on every REBALANCE, which is exactly the reclaim
+//! mechanism of the algorithm: admitting a new request's cores may shrink
+//! the elastic grants of later-ranked running requests (Fig. 1, bottom).
+//!
+//! Invariants:
+//! * every member of the serving set S always has all cores placed;
+//! * admission stops once S, fully granted, saturates the cluster
+//!   (Algorithm 1 line 17, the aggregate `Σ(C+E) < total` condition);
+//! * excess resources cascade to S in serving order (lines 23–30);
+//! * preemption (when enabled) reclaims **elastic** components only.
+
+use std::collections::HashMap;
+
+use super::{has_spare_after_full_grants, insert_sorted, Phase, Scheduler, World};
+use crate::core::ReqId;
+use crate::pool::Placement;
+
+pub struct FlexibleScheduler {
+    /// Serving set S, in cascade order (descending effective priority,
+    /// then ascending frozen key).
+    s: Vec<ReqId>,
+    /// Waiting line L, ascending policy key.
+    l: Vec<ReqId>,
+    /// Auxiliary waiting line W (§3.3): preempting requests whose cores
+    /// did not fit; has priority over L on departures.
+    w_line: Vec<ReqId>,
+    /// Persistent core placements of serving requests.
+    cores: HashMap<ReqId, Placement>,
+    /// Elastic placements, re-computed by each rebalance.
+    elastic: HashMap<ReqId, Placement>,
+    preemptive: bool,
+}
+
+impl FlexibleScheduler {
+    pub fn new(preemptive: bool) -> Self {
+        FlexibleScheduler {
+            s: Vec::new(),
+            l: Vec::new(),
+            w_line: Vec::new(),
+            cores: HashMap::new(),
+            elastic: HashMap::new(),
+            preemptive,
+        }
+    }
+
+    /// Re-sort the waiting line when the policy's keys are time-varying
+    /// (HRRN: response ratios change as requests wait).
+    fn resort_pending(&mut self, w: &World) {
+        if w.policy.dynamic() && self.l.len() > 1 {
+            let mut keyed: Vec<(f64, ReqId)> =
+                self.l.iter().map(|&id| (w.pending_key(id), id)).collect();
+            keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            self.l = keyed.into_iter().map(|(_, id)| id).collect();
+        }
+    }
+
+    /// Release every elastic placement (start of a rebalance pass).
+    fn release_elastic(&mut self, w: &mut World) {
+        for (_, p) in self.elastic.drain() {
+            w.cluster.release(&p);
+        }
+    }
+
+    /// Try to place `id`'s cores in the current free capacity (elastic
+    /// must have been released first). Records the placement on success.
+    fn try_place_cores(&mut self, id: ReqId, w: &mut World) -> bool {
+        let (res, n) = {
+            let r = &w.states[id as usize].req;
+            (r.core_res, r.n_core)
+        };
+        match w.cluster.place_all_tracked(&res, n) {
+            Some(p) => {
+                self.cores.insert(id, p);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn admit(&mut self, id: ReqId, w: &mut World) {
+        let key = w.pending_key(id);
+        let now = w.now;
+        let st = w.state_mut(id);
+        st.phase = Phase::Running;
+        st.admit_time = now;
+        st.frozen_key = key;
+        st.last_accrual = now;
+        // Serving order: explicit priority first (descending), then key.
+        let prio = w.state(id).req.priority;
+        let states = &w.states;
+        let pos = self.s.partition_point(|&x| {
+            let sx = &states[x as usize];
+            (sx.req.priority, -sx.frozen_key) >= (prio, -key)
+        });
+        self.s.insert(pos, id);
+    }
+
+    /// Algorithm 1, REBALANCE: release elastic, admit from L while S does
+    /// not saturate and the head's cores fit, then cascade elastic grants
+    /// in serving order.
+    fn rebalance(&mut self, w: &mut World) {
+        self.resort_pending(w);
+        self.release_elastic(w);
+        loop {
+            if self.l.is_empty() || !has_spare_after_full_grants(w, &self.s) {
+                break;
+            }
+            let head = self.l[0];
+            // Line 19: cores fit beside the cores of S (elastic released
+            // = reclaimable).
+            if self.try_place_cores(head, w) {
+                self.l.remove(0);
+                self.admit(head, w);
+            } else {
+                break;
+            }
+        }
+        self.cascade(w);
+    }
+
+    /// Lines 23–30: grant elastic components in serving order.
+    fn cascade(&mut self, w: &mut World) {
+        for &id in &self.s {
+            let (res, n) = {
+                let r = &w.states[id as usize].req;
+                (r.elastic_res, r.n_elastic)
+            };
+            let g = if n > 0 {
+                let (placed, p) = w.cluster.place_up_to_tracked(&res, n);
+                if placed > 0 {
+                    self.elastic.insert(id, p);
+                }
+                placed
+            } else {
+                0
+            };
+            w.states[id as usize].grant = g;
+        }
+    }
+
+    /// Non-preemptive arrival guard (Algorithm 1 line 10): the new head of
+    /// L can start using currently *unused* resources.
+    fn head_fits_in_unused(&self, w: &mut World) -> bool {
+        let Some(&head) = self.l.first() else {
+            return false;
+        };
+        let (res, n) = {
+            let r = &w.states[head as usize].req;
+            (r.core_res, r.n_core)
+        };
+        let snap = w.cluster.save();
+        let ok = w.cluster.place_all(&res, n);
+        w.cluster.restore(&snap);
+        ok
+    }
+}
+
+impl Scheduler for FlexibleScheduler {
+    fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+        // §3.3, lines 2–7: preemptive path.
+        if self.preemptive {
+            if let Some(&tail) = self.s.last() {
+                let tail_prio = (w.state(tail).req.priority, -w.state(tail).frozen_key);
+                let new_prio = (w.state(id).req.priority, -w.pending_key(id));
+                if new_prio > tail_prio {
+                    // Can its cores be carved out of elastic allocations?
+                    self.release_elastic(w);
+                    if self.try_place_cores(id, w) {
+                        self.admit(id, w);
+                        self.rebalance(w);
+                    } else {
+                        // Auxiliary waiting line W, priority over L.
+                        let states = &w.states;
+                        let key = w.pending_key(id);
+                        let prio = states[id as usize].req.priority;
+                        let pos = self.w_line.partition_point(|&x| {
+                            (states[x as usize].req.priority, -w.pending_key(x)) >= (prio, -key)
+                        });
+                        self.w_line.insert(pos, id);
+                        self.cascade(w);
+                    }
+                    return;
+                }
+            }
+        }
+        // Lines 8–11: normal path.
+        let key = w.pending_key(id);
+        insert_sorted(&mut self.l, id, key, |x| w.pending_key(x));
+        if self.l.first() == Some(&id) && self.head_fits_in_unused(w) {
+            self.rebalance(w);
+        }
+    }
+
+    fn on_departure(&mut self, id: ReqId, w: &mut World) {
+        self.s.retain(|&x| x != id);
+        if let Some(p) = self.cores.remove(&id) {
+            w.cluster.release(&p);
+        }
+        if let Some(p) = self.elastic.remove(&id) {
+            w.cluster.release(&p);
+        }
+        // Fast path: nothing is waiting and every serving request is
+        // already fully granted → the cascade is a no-op; skip the
+        // release/re-place pass entirely.
+        if self.w_line.is_empty() && self.l.is_empty() {
+            let all_full = self.s.iter().all(|&x| {
+                let st = &w.states[x as usize];
+                st.grant == st.req.n_elastic
+            });
+            if all_full {
+                return;
+            }
+        }
+        // Lines 13–15: drain W first (cores-only check, elastic
+        // reclaimable → release elastic before trying).
+        if !self.w_line.is_empty() {
+            self.release_elastic(w);
+            while let Some(&head) = self.w_line.first() {
+                if self.try_place_cores(head, w) {
+                    self.w_line.remove(0);
+                    self.admit(head, w);
+                } else {
+                    break;
+                }
+            }
+        }
+        self.rebalance(w);
+    }
+
+    fn pending(&self) -> usize {
+        self.l.len() + self.w_line.len()
+    }
+
+    fn running(&self) -> usize {
+        self.s.len()
+    }
+
+    fn serving(&self) -> &[ReqId] {
+        &self.s
+    }
+
+    fn name(&self) -> &'static str {
+        if self.preemptive {
+            "flexible+preempt"
+        } else {
+            "flexible"
+        }
+    }
+}
+
+impl FlexibleScheduler {
+    /// Test/diagnostic access to the waiting lines.
+    pub fn waiting(&self) -> (&[ReqId], &[ReqId]) {
+        (&self.l, &self.w_line)
+    }
+}

@@ -1,0 +1,155 @@
+//! The malleable comparator (§2.2, Fig. 1 middle): the close-to-optimal
+//! heuristic from the malleable-job-scheduling literature [31]. All
+//! resources go to the first request in line, the remainder to the next,
+//! and so on — but *already-granted* resources are never reclaimed, so a
+//! pending request starts only if its minimum (core) demand fits in what
+//! is left after the cascade. This is what blocks request D in Fig. 1.
+//!
+//! All placements (core and granted elastic) are persistent; grants only
+//! grow — top-ups happen in serving order when capacity frees up.
+
+use std::collections::HashMap;
+
+use super::{insert_sorted, Phase, Scheduler, World};
+use crate::core::ReqId;
+use crate::pool::Placement;
+
+pub struct MalleableScheduler {
+    s: Vec<ReqId>,
+    l: Vec<ReqId>,
+    cores: HashMap<ReqId, Placement>,
+    /// Granted elastic placements (possibly several per request — one per
+    /// top-up round).
+    elastic: HashMap<ReqId, Vec<Placement>>,
+}
+
+impl MalleableScheduler {
+    pub fn new() -> Self {
+        MalleableScheduler {
+            s: Vec::new(),
+            l: Vec::new(),
+            cores: HashMap::new(),
+            elastic: HashMap::new(),
+        }
+    }
+
+    fn resort_pending(&mut self, w: &World) {
+        if w.policy.dynamic() && self.l.len() > 1 {
+            let mut keyed: Vec<(f64, ReqId)> =
+                self.l.iter().map(|&id| (w.pending_key(id), id)).collect();
+            keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            self.l = keyed.into_iter().map(|(_, id)| id).collect();
+        }
+    }
+
+    fn admit(&mut self, id: ReqId, w: &mut World) {
+        let key = w.pending_key(id);
+        let now = w.now;
+        let st = w.state_mut(id);
+        st.phase = Phase::Running;
+        st.admit_time = now;
+        st.last_accrual = now;
+        st.frozen_key = key;
+        self.s.push(id); // cascade order = admission order
+    }
+
+    /// Top-up elastic grants in serving order ("assigns all resources to
+    /// the first request, then the remaining to the next"), then admit
+    /// from L while the head's cores fit in the leftover. Loop until
+    /// neither applies.
+    fn rebalance(&mut self, w: &mut World) {
+        self.resort_pending(w);
+        loop {
+            // Top-ups, serving order.
+            for &id in &self.s {
+                let (res, want) = {
+                    let r = &w.states[id as usize].req;
+                    (r.elastic_res, r.n_elastic)
+                };
+                let have = w.states[id as usize].grant;
+                if have < want {
+                    let (placed, p) = w.cluster.place_up_to_tracked(&res, want - have);
+                    if placed > 0 {
+                        self.elastic.entry(id).or_default().push(p);
+                        w.states[id as usize].grant = have + placed;
+                    }
+                }
+            }
+            // Admission: head's cores in the leftover (no reclaim).
+            let Some(&head) = self.l.first() else { break };
+            let (res, n) = {
+                let r = &w.states[head as usize].req;
+                (r.core_res, r.n_core)
+            };
+            match w.cluster.place_all_tracked(&res, n) {
+                Some(p) => {
+                    self.cores.insert(head, p);
+                    self.l.remove(0);
+                    self.admit(head, w);
+                    // Loop: the new member's elastic tops up next round.
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Arrival guard: only rebalance when the new head could start now.
+    fn head_fits_in_unused(&self, w: &mut World) -> bool {
+        let Some(&head) = self.l.first() else {
+            return false;
+        };
+        let (res, n) = {
+            let r = &w.states[head as usize].req;
+            (r.core_res, r.n_core)
+        };
+        let snap = w.cluster.save();
+        let ok = w.cluster.place_all(&res, n);
+        w.cluster.restore(&snap);
+        ok
+    }
+}
+
+impl Default for MalleableScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for MalleableScheduler {
+    fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+        let key = w.pending_key(id);
+        insert_sorted(&mut self.l, id, key, |x| w.pending_key(x));
+        if self.l.first() == Some(&id) && self.head_fits_in_unused(w) {
+            self.rebalance(w);
+        }
+    }
+
+    fn on_departure(&mut self, id: ReqId, w: &mut World) {
+        self.s.retain(|&x| x != id);
+        if let Some(p) = self.cores.remove(&id) {
+            w.cluster.release(&p);
+        }
+        if let Some(ps) = self.elastic.remove(&id) {
+            for p in ps {
+                w.cluster.release(&p);
+            }
+        }
+        self.rebalance(w);
+    }
+
+    fn pending(&self) -> usize {
+        self.l.len()
+    }
+
+    fn running(&self) -> usize {
+        self.s.len()
+    }
+
+    fn serving(&self) -> &[ReqId] {
+        &self.s
+    }
+
+    fn name(&self) -> &'static str {
+        "malleable"
+    }
+}

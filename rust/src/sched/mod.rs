@@ -1,0 +1,210 @@
+//! The scheduling algorithms: the paper's **flexible** heuristic
+//! (Algorithm 1), the **rigid** baseline, and the **malleable**
+//! comparator (§2.2, §3, §4).
+//!
+//! All three compute *virtual assignments* (§3.2): on every request
+//! arrival/departure the assignment of components to machines is
+//! recomputed against the [`crate::pool::Cluster`]; the physical
+//! fulfilment (containers, in Zoe's case) is a separate concern.
+
+mod flexible;
+mod malleable;
+mod rigid;
+
+pub use flexible::FlexibleScheduler;
+pub use malleable::MalleableScheduler;
+pub use rigid::RigidScheduler;
+
+use crate::core::{ReqId, Request};
+use crate::policy::Policy;
+use crate::pool::Cluster;
+
+/// Life-cycle phase of a request in the system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Not yet submitted (future arrival).
+    Future,
+    /// Waiting in the pending queue (L or W).
+    Pending,
+    /// In the serving set S.
+    Running,
+    /// Completed.
+    Done,
+}
+
+/// Execution state of one request.
+#[derive(Clone, Debug)]
+pub struct ReqState {
+    pub req: Request,
+    pub phase: Phase,
+    /// Elastic components currently granted (0 ≤ grant ≤ n_elastic).
+    pub grant: u32,
+    /// Admission time (start of service).
+    pub admit_time: f64,
+    /// Completed work in component-seconds.
+    pub done_work: f64,
+    /// Last time `done_work` was accrued.
+    pub last_accrual: f64,
+    /// Policy key frozen at admission (orders the serving set S).
+    pub frozen_key: f64,
+    /// Bumped whenever the predicted departure changes (lazy heap deletion).
+    pub epoch: u32,
+    /// Cached predicted finish time (while running).
+    pub predicted_finish: f64,
+}
+
+impl ReqState {
+    pub fn new(req: Request) -> Self {
+        ReqState {
+            req,
+            phase: Phase::Future,
+            grant: 0,
+            admit_time: f64::NAN,
+            done_work: 0.0,
+            last_accrual: 0.0,
+            frozen_key: 0.0,
+            epoch: 0,
+            predicted_finish: f64::INFINITY,
+        }
+    }
+
+    /// Remaining work in component-seconds.
+    pub fn remaining_work(&self) -> f64 {
+        (self.req.work() - self.done_work).max(0.0)
+    }
+
+    /// Fraction of work remaining (1.0 if untouched).
+    pub fn remaining_frac(&self) -> f64 {
+        let w = self.req.work();
+        if w <= 0.0 {
+            0.0
+        } else {
+            self.remaining_work() / w
+        }
+    }
+
+    /// Current progress rate (component-seconds per second).
+    pub fn rate(&self) -> f64 {
+        if self.phase == Phase::Running {
+            self.req.rate(self.grant)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Everything the schedulers operate on: the request table, the cluster,
+/// the sorting policy and the current simulation time.
+pub struct World {
+    pub states: Vec<ReqState>,
+    pub cluster: Cluster,
+    pub policy: Policy,
+    pub now: f64,
+}
+
+impl World {
+    pub fn new(requests: Vec<Request>, cluster: Cluster, policy: Policy) -> Self {
+        let states = requests.into_iter().map(ReqState::new).collect();
+        World {
+            states,
+            cluster,
+            policy,
+            now: 0.0,
+        }
+    }
+
+    pub fn state(&self, id: ReqId) -> &ReqState {
+        &self.states[id as usize]
+    }
+
+    pub fn state_mut(&mut self, id: ReqId) -> &mut ReqState {
+        &mut self.states[id as usize]
+    }
+
+    /// Policy key for a *pending* request at the current time.
+    pub fn pending_key(&self, id: ReqId) -> f64 {
+        let st = self.state(id);
+        let wait = (self.now - st.req.arrival).max(0.0);
+        self.policy.key(&st.req, st.remaining_frac(), 0, wait)
+    }
+
+    /// Effective priority for preemption decisions: the explicit priority
+    /// field first (higher wins), then the policy key (lower wins).
+    /// Returns a tuple ordered so that "greater" = more urgent.
+    pub fn effective_prio(&self, id: ReqId) -> (f64, f64) {
+        let st = self.state(id);
+        (st.req.priority, -self.pending_key(id))
+    }
+}
+
+/// Common interface of the three schedulers.
+pub trait Scheduler {
+    /// Handle a request arrival at `w.now` (the request is in `Pending`).
+    fn on_arrival(&mut self, id: ReqId, w: &mut World);
+    /// Handle the departure of `id` (already marked `Done`).
+    fn on_departure(&mut self, id: ReqId, w: &mut World);
+    /// Number of requests waiting to be served.
+    fn pending(&self) -> usize;
+    /// Number of requests in service.
+    fn running(&self) -> usize;
+    /// Serving set in cascade order (diagnostics / tests).
+    fn serving(&self) -> &[ReqId];
+    fn name(&self) -> &'static str;
+}
+
+/// Scheduler families evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchedKind {
+    Rigid,
+    Malleable,
+    Flexible,
+    /// Flexible with the preemptive arrival path (§3.3).
+    FlexiblePreemptive,
+}
+
+impl SchedKind {
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedKind::Rigid => Box::new(RigidScheduler::new()),
+            SchedKind::Malleable => Box::new(MalleableScheduler::new()),
+            SchedKind::Flexible => Box::new(FlexibleScheduler::new(false)),
+            SchedKind::FlexiblePreemptive => Box::new(FlexibleScheduler::new(true)),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedKind::Rigid => "rigid",
+            SchedKind::Malleable => "malleable",
+            SchedKind::Flexible => "flexible",
+            SchedKind::FlexiblePreemptive => "flexible+preempt",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared assignment helpers
+// ---------------------------------------------------------------------------
+
+/// Would the serving set `s`, granted its **full** elastic demand, leave
+/// spare capacity? This is Algorithm 1 line 17's `Σ(C_j+E_j) < total`,
+/// taken literally as an *aggregate* condition (the paper's 1-D units),
+/// applied per dimension: there is spare iff the aggregate full demand of
+/// S leaves some capacity unused in at least one dimension (which further
+/// admissions could put to work — the cores-fit check on line 19 still
+/// gates the actual admission).
+pub(crate) fn has_spare_after_full_grants(w: &World, s: &[ReqId]) -> bool {
+    let mut demand = crate::core::Resources::ZERO;
+    for &id in s {
+        demand.add(&w.states[id as usize].req.full_total());
+    }
+    let t = w.cluster.total();
+    demand.cpu < t.cpu - 1e-9 || demand.ram_mb < t.ram_mb - 1e-9
+}
+
+/// Insert `id` into the ordered vector `v` keeping ascending `key` order
+/// (stable: equal keys go after existing ones).
+pub(crate) fn insert_sorted(v: &mut Vec<ReqId>, id: ReqId, key: f64, keys: impl Fn(ReqId) -> f64) {
+    let pos = v.partition_point(|&x| keys(x) <= key);
+    v.insert(pos, id);
+}

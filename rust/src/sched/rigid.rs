@@ -1,0 +1,129 @@
+//! The rigid baseline (§4.1): no component-class distinction — a request
+//! is admitted only when its **full** demand (cores + all elastic) can be
+//! placed, and it keeps that allocation until completion. Requests are
+//! served strictly in queue order (no backfilling, matching the paper's
+//! baseline, "representative of current cluster management systems").
+//!
+//! Unlike the flexible/malleable schedulers (which recompute their virtual
+//! assignment per event), the rigid baseline never changes an allocation,
+//! so it tracks persistent per-request placements and releases them
+//! exactly on departure — as a real rigid system would.
+
+use std::collections::HashMap;
+
+use super::{insert_sorted, Phase, Scheduler, World};
+use crate::core::ReqId;
+use crate::pool::Placement;
+
+pub struct RigidScheduler {
+    s: Vec<ReqId>,
+    l: Vec<ReqId>,
+    placements: HashMap<ReqId, Vec<Placement>>,
+}
+
+impl RigidScheduler {
+    pub fn new() -> Self {
+        RigidScheduler {
+            s: Vec::new(),
+            l: Vec::new(),
+            placements: HashMap::new(),
+        }
+    }
+
+    fn resort_pending(&mut self, w: &World) {
+        if w.policy.dynamic() && self.l.len() > 1 {
+            let mut keyed: Vec<(f64, ReqId)> =
+                self.l.iter().map(|&id| (w.pending_key(id), id)).collect();
+            keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            self.l = keyed.into_iter().map(|(_, id)| id).collect();
+        }
+    }
+
+    /// Head-of-line admission: start the head of L while its full demand
+    /// fits in the current free capacity. No backfill.
+    fn try_admit(&mut self, w: &mut World) {
+        self.resort_pending(w);
+        while let Some(&head) = self.l.first() {
+            let Some(placed) = Self::place_full(w, head) else {
+                break;
+            };
+            self.placements.insert(head, placed);
+            self.l.remove(0);
+            let key = w.pending_key(head);
+            let now = w.now;
+            let st = w.state_mut(head);
+            st.phase = Phase::Running;
+            st.admit_time = now;
+            st.last_accrual = now;
+            st.frozen_key = key;
+            st.grant = st.req.n_elastic; // full allocation, always
+            self.s.push(head);
+        }
+    }
+
+    /// Place the complete demand of `id` — all cores and all elastic
+    /// components — all-or-nothing, returning the tracked placements.
+    fn place_full(w: &mut World, id: ReqId) -> Option<Vec<Placement>> {
+        let (cres, cn, eres, en) = {
+            let r = &w.states[id as usize].req;
+            (r.core_res, r.n_core, r.elastic_res, r.n_elastic)
+        };
+        let mut placed = Vec::with_capacity(2);
+        match w.cluster.place_all_tracked(&cres, cn) {
+            Some(p) => placed.push(p),
+            None => return None,
+        }
+        if en > 0 {
+            match w.cluster.place_all_tracked(&eres, en) {
+                Some(p) => placed.push(p),
+                None => {
+                    w.cluster.release(&placed[0]);
+                    return None;
+                }
+            }
+        }
+        Some(placed)
+    }
+}
+
+impl Default for RigidScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for RigidScheduler {
+    fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+        let key = w.pending_key(id);
+        insert_sorted(&mut self.l, id, key, |x| w.pending_key(x));
+        if self.l.first() == Some(&id) {
+            self.try_admit(w);
+        }
+    }
+
+    fn on_departure(&mut self, id: ReqId, w: &mut World) {
+        self.s.retain(|&x| x != id);
+        if let Some(placed) = self.placements.remove(&id) {
+            for p in &placed {
+                w.cluster.release(p);
+            }
+        }
+        self.try_admit(w);
+    }
+
+    fn pending(&self) -> usize {
+        self.l.len()
+    }
+
+    fn running(&self) -> usize {
+        self.s.len()
+    }
+
+    fn serving(&self) -> &[ReqId] {
+        &self.s
+    }
+
+    fn name(&self) -> &'static str {
+        "rigid"
+    }
+}

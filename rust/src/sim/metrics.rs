@@ -1,0 +1,246 @@
+//! Metric collection for simulation runs: the §4.1 evaluation metrics —
+//! application turnaround, queuing time, slowdown (per application class),
+//! pending/running queue sizes, and CPU/RAM allocation fractions
+//! (time-weighted).
+
+use crate::core::AppClass;
+use crate::util::stats::{BoxPlot, Samples, TimeWeighted};
+
+/// Collects metrics during a run.
+pub struct MetricsCollector {
+    turnaround: Samples,
+    queuing: Samples,
+    slowdown: Samples,
+    per_class: Vec<(AppClass, Samples, Samples, Samples)>,
+    pending_q: TimeWeighted,
+    running_q: TimeWeighted,
+    cpu_alloc: TimeWeighted,
+    ram_alloc: TimeWeighted,
+    completed: u64,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        let mk = |c| (c, Samples::new(), Samples::new(), Samples::new());
+        MetricsCollector {
+            turnaround: Samples::new(),
+            queuing: Samples::new(),
+            slowdown: Samples::new(),
+            per_class: vec![
+                mk(AppClass::BatchElastic),
+                mk(AppClass::BatchRigid),
+                mk(AppClass::Interactive),
+            ],
+            pending_q: TimeWeighted::new(0.0, 0.0),
+            running_q: TimeWeighted::new(0.0, 0.0),
+            cpu_alloc: TimeWeighted::new(0.0, 0.0),
+            ram_alloc: TimeWeighted::new(0.0, 0.0),
+            completed: 0,
+        }
+    }
+
+    pub fn record_completion(&mut self, class: AppClass, turnaround: f64, queuing: f64, slowdown: f64) {
+        self.turnaround.push(turnaround);
+        self.queuing.push(queuing);
+        self.slowdown.push(slowdown);
+        for (c, t, q, s) in &mut self.per_class {
+            if *c == class {
+                t.push(turnaround);
+                q.push(queuing);
+                s.push(slowdown);
+            }
+        }
+        self.completed += 1;
+    }
+
+    pub fn sample(&mut self, now: f64, pending: usize, running: usize, cpu_frac: f64, ram_frac: f64) {
+        self.pending_q.update(now, pending as f64);
+        self.running_q.update(now, running as f64);
+        self.cpu_alloc.update(now, cpu_frac);
+        self.ram_alloc.update(now, ram_frac);
+    }
+
+    pub fn finalize(mut self, end: f64, events: u64, unfinished: usize, wall_secs: f64) -> SimResult {
+        self.pending_q.finish(end);
+        self.running_q.finish(end);
+        self.cpu_alloc.finish(end);
+        self.ram_alloc.finish(end);
+        SimResult {
+            turnaround: self.turnaround,
+            queuing: self.queuing,
+            slowdown: self.slowdown,
+            per_class: self
+                .per_class
+                .into_iter()
+                .map(|(c, t, q, s)| ClassMetrics {
+                    class: c,
+                    turnaround: t,
+                    queuing: q,
+                    slowdown: s,
+                })
+                .collect(),
+            pending_q: self.pending_q,
+            running_q: self.running_q,
+            cpu_alloc: self.cpu_alloc,
+            ram_alloc: self.ram_alloc,
+            completed: self.completed,
+            events,
+            unfinished,
+            end_time: end,
+            wall_secs,
+        }
+    }
+}
+
+impl Default for MetricsCollector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-application-class metric samples.
+pub struct ClassMetrics {
+    pub class: AppClass,
+    pub turnaround: Samples,
+    pub queuing: Samples,
+    pub slowdown: Samples,
+}
+
+/// The output of one simulation run.
+pub struct SimResult {
+    pub turnaround: Samples,
+    pub queuing: Samples,
+    pub slowdown: Samples,
+    pub per_class: Vec<ClassMetrics>,
+    pub pending_q: TimeWeighted,
+    pub running_q: TimeWeighted,
+    pub cpu_alloc: TimeWeighted,
+    pub ram_alloc: TimeWeighted,
+    pub completed: u64,
+    pub events: u64,
+    pub unfinished: usize,
+    pub end_time: f64,
+    pub wall_secs: f64,
+}
+
+impl SimResult {
+    pub fn class(&self, c: AppClass) -> &ClassMetrics {
+        self.per_class.iter().find(|m| m.class == c).unwrap()
+    }
+
+    pub fn class_mut(&mut self, c: AppClass) -> &mut ClassMetrics {
+        self.per_class.iter_mut().find(|m| m.class == c).unwrap()
+    }
+
+    /// Box-plot of turnaround for one class (panel rows of Figs. 3–13).
+    pub fn turnaround_box(&mut self, c: AppClass) -> BoxPlot {
+        self.class_mut(c).turnaround.boxplot()
+    }
+
+    /// Merge another run's samples into this one (multi-seed aggregation).
+    pub fn merge(&mut self, other: &SimResult) {
+        self.turnaround.extend(&other.turnaround);
+        self.queuing.extend(&other.queuing);
+        self.slowdown.extend(&other.slowdown);
+        for m in &mut self.per_class {
+            let o = other.class(m.class);
+            m.turnaround.extend(&o.turnaround);
+            m.queuing.extend(&o.queuing);
+            m.slowdown.extend(&o.slowdown);
+        }
+        self.pending_q.intervals.extend(other.pending_q.intervals.iter().copied());
+        self.running_q.intervals.extend(other.running_q.intervals.iter().copied());
+        self.cpu_alloc.intervals.extend(other.cpu_alloc.intervals.iter().copied());
+        self.ram_alloc.intervals.extend(other.ram_alloc.intervals.iter().copied());
+        self.completed += other.completed;
+        self.events += other.events;
+        self.unfinished += other.unfinished;
+        self.wall_secs += other.wall_secs;
+        self.end_time = self.end_time.max(other.end_time);
+    }
+
+    /// Print the paper's standard box-plot panels for this run:
+    /// turnaround / queuing / slowdown per application class, queue
+    /// sizes, and allocation — the rows of Figs. 3–13.
+    pub fn print_report(&mut self, label: &str) {
+        use crate::core::AppClass;
+        println!("\n  ### {label}");
+        let classes = [AppClass::BatchElastic, AppClass::BatchRigid, AppClass::Interactive];
+        println!("  turnaround (s):");
+        println!("    {:<8} {}", "all", self.turnaround.boxplot());
+        for c in classes {
+            let b = self.class_mut(c).turnaround.boxplot();
+            if b.n > 0 {
+                println!("    {:<8} {b}", c.label());
+            }
+        }
+        println!("  queuing time (s):");
+        println!("    {:<8} {}", "all", self.queuing.boxplot());
+        for c in classes {
+            let b = self.class_mut(c).queuing.boxplot();
+            if b.n > 0 {
+                println!("    {:<8} {b}", c.label());
+            }
+        }
+        println!("  slowdown (×):");
+        println!("    {:<8} {}", "all", self.slowdown.boxplot());
+        for c in classes {
+            let b = self.class_mut(c).slowdown.boxplot();
+            if b.n > 0 {
+                println!("    {:<8} {b}", c.label());
+            }
+        }
+        println!("  queue sizes (time-weighted):");
+        println!("    {:<8} {}", "pending", self.pending_q.boxplot());
+        println!("    {:<8} {}", "running", self.running_q.boxplot());
+        println!("  allocation (fraction):");
+        println!("    {:<8} {}", "cpu", self.cpu_alloc.boxplot());
+        println!("    {:<8} {}", "ram", self.ram_alloc.boxplot());
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&mut self) -> String {
+        format!(
+            "completed={} events={} mean_ta={:.1}s med_ta={:.1}s mean_q={:.1}s cpu_alloc={:.1}% wall={:.2}s",
+            self.completed,
+            self.events,
+            self.turnaround.mean(),
+            self.turnaround.median(),
+            self.queuing.mean(),
+            100.0 * self.cpu_alloc.boxplot().mean,
+            self.wall_secs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_class_routing() {
+        let mut m = MetricsCollector::new();
+        m.record_completion(AppClass::BatchElastic, 10.0, 2.0, 1.0);
+        m.record_completion(AppClass::BatchRigid, 20.0, 4.0, 1.0);
+        m.record_completion(AppClass::BatchRigid, 30.0, 6.0, 1.0);
+        let r = m.finalize(100.0, 6, 0, 0.0);
+        assert_eq!(r.class(AppClass::BatchElastic).turnaround.len(), 1);
+        assert_eq!(r.class(AppClass::BatchRigid).turnaround.len(), 2);
+        assert_eq!(r.class(AppClass::Interactive).turnaround.len(), 0);
+        assert_eq!(r.turnaround.len(), 3);
+        assert_eq!(r.completed, 3);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = MetricsCollector::new();
+        a.record_completion(AppClass::BatchElastic, 10.0, 0.0, 1.0);
+        let mut ra = a.finalize(10.0, 2, 0, 0.1);
+        let mut b = MetricsCollector::new();
+        b.record_completion(AppClass::BatchElastic, 30.0, 0.0, 1.0);
+        let rb = b.finalize(20.0, 2, 0, 0.1);
+        ra.merge(&rb);
+        assert_eq!(ra.completed, 2);
+        assert!((ra.turnaround.mean() - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Trace-driven discrete-event simulator (§4.1) — the substrate the paper
+//! built on an Omega-derived simulator; rebuilt here from scratch.
+//!
+//! Events are request arrivals and (predicted) departures; the service-time
+//! model is the §2.2 work model: a request with `C` core and `E` elastic
+//! components granted `g(t)` elastic components progresses at rate
+//! `C + g(t)` component-seconds per second until its work
+//! `W = T·(C+E)` is done.
+
+mod engine;
+mod metrics;
+
+pub use engine::*;
+pub use metrics::*;

@@ -1,0 +1,72 @@
+//! Plain-text benchmark harness (criterion is unavailable offline).
+//!
+//! Each paper table/figure has a `[[bench]] harness = false` binary that
+//! uses this module to run the experiment, print the regenerated
+//! rows/series, and time the run. `ZOE_BENCH_FULL=1` switches from the
+//! fast iteration scale to the paper's full scale.
+
+use std::time::Instant;
+
+/// Whether to run benches at the paper's full scale (80 000 applications,
+/// 10 seeds) instead of the fast default.
+pub fn full_scale() -> bool {
+    std::env::var("ZOE_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Number of simulated applications to use in a bench.
+pub fn bench_apps(fast: u32, full: u32) -> u32 {
+    if full_scale() {
+        full
+    } else {
+        fast
+    }
+}
+
+/// Number of seeds / simulation runs.
+pub fn bench_runs(fast: u64, full: u64) -> u64 {
+    if full_scale() {
+        full
+    } else {
+        fast
+    }
+}
+
+/// Print a section header in the bench output.
+pub fn section(title: &str) {
+    println!("\n================================================================");
+    println!("== {title}");
+    println!("================================================================");
+}
+
+/// Time a closure, print and return (result, seconds).
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("  [timing] {label}: {dt:.3}s");
+    (out, dt)
+}
+
+/// Measure wall-clock of `f` over `iters` iterations and report mean/min.
+pub fn measure(label: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    // One warmup.
+    f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times[0];
+    let p50 = times[times.len() / 2];
+    println!("  [bench] {label}: mean={:.6}s p50={:.6}s min={:.6}s (n={iters})", mean, p50, min);
+    mean
+}
+
+/// Render a row of box-plot stats with a label, matching the paper's
+/// box-plot panels.
+pub fn print_boxplot_row(label: &str, b: &crate::util::stats::BoxPlot) {
+    println!("  {label:<34} {b}");
+}

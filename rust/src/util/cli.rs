@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args` (main).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(body.to_string(), v);
+                } else {
+                    args.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.u64_or(key, default as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NB: a bare `--flag` followed by a non-flag token consumes it as a
+        // value — boolean flags go last or use `--flag=true`.
+        let a = parse(&["sim", "out.json", "--apps", "8000", "--policy=sjf", "--verbose"]);
+        assert_eq!(a.positional, vec!["sim", "out.json"]);
+        assert_eq!(a.u64_or("apps", 0), 8000);
+        assert_eq!(a.get("policy"), Some("sjf"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "1"]);
+        assert!(a.has("a"));
+        assert_eq!(a.get("a"), Some("true"));
+        assert_eq!(a.u64_or("b", 0), 1);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["--x=-2.5"]);
+        assert_eq!(a.f64_or("x", 0.0), -2.5);
+    }
+}

@@ -1,0 +1,146 @@
+//! Empirical distributions: sample from a piecewise-linear CDF given as
+//! (value, cumulative-probability) control points. This is how the
+//! workload generator mimics the Google-trace CDFs of Fig. 2.
+
+use crate::util::rng::Rng;
+
+/// Piecewise-linear inverse-CDF sampler.
+///
+/// Control points must be sorted by cumulative probability, start at
+/// p=0 and end at p=1. Sampling draws u~U[0,1) and interpolates the value.
+#[derive(Clone, Debug)]
+pub struct Empirical {
+    /// (value, cum_prob) control points.
+    points: Vec<(f64, f64)>,
+    /// Interpolate value in log-space (for heavy-tailed positive values).
+    log_space: bool,
+}
+
+impl Empirical {
+    pub fn new(points: Vec<(f64, f64)>) -> Self {
+        Self::build(points, false)
+    }
+
+    /// Log-space interpolation — appropriate for quantities spanning many
+    /// orders of magnitude (runtimes, memory).
+    pub fn new_log(points: Vec<(f64, f64)>) -> Self {
+        Self::build(points, true)
+    }
+
+    fn build(points: Vec<(f64, f64)>, log_space: bool) -> Self {
+        assert!(points.len() >= 2, "need at least two control points");
+        assert!(
+            (points[0].1 - 0.0).abs() < 1e-12,
+            "first control point must have p=0"
+        );
+        assert!(
+            (points[points.len() - 1].1 - 1.0).abs() < 1e-12,
+            "last control point must have p=1"
+        );
+        for w in points.windows(2) {
+            assert!(w[1].1 >= w[0].1, "cum probs must be nondecreasing");
+            assert!(w[1].0 >= w[0].0, "values must be nondecreasing");
+            if log_space {
+                assert!(w[0].0 > 0.0, "log-space needs positive values");
+            }
+        }
+        Empirical { points, log_space }
+    }
+
+    /// Sample a value.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let u = rng.f64();
+        self.quantile(u)
+    }
+
+    /// Inverse CDF at probability `u` in [0,1].
+    pub fn quantile(&self, u: f64) -> f64 {
+        let pts = &self.points;
+        // Find the segment containing u.
+        let mut i = 1;
+        while i < pts.len() - 1 && pts[i].1 < u {
+            i += 1;
+        }
+        let (v0, p0) = pts[i - 1];
+        let (v1, p1) = pts[i];
+        if p1 <= p0 {
+            return v1;
+        }
+        let frac = ((u - p0) / (p1 - p0)).clamp(0.0, 1.0);
+        if self.log_space {
+            (v0.ln() + frac * (v1.ln() - v0.ln())).exp()
+        } else {
+            v0 + frac * (v1 - v0)
+        }
+    }
+}
+
+/// A two-mode mixture: with probability `w0` sample from `a`, else `b`.
+/// Models the bi-modal inter-arrival process of the traces (bursts +
+/// long gaps).
+#[derive(Clone, Debug)]
+pub struct Mixture {
+    pub w0: f64,
+    pub a: Empirical,
+    pub b: Empirical,
+}
+
+impl Mixture {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        if rng.chance(self.w0) {
+            self.a.sample(rng)
+        } else {
+            self.b.sample(rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_endpoints() {
+        let d = Empirical::new(vec![(1.0, 0.0), (2.0, 0.5), (10.0, 1.0)]);
+        assert!((d.quantile(0.0) - 1.0).abs() < 1e-12);
+        assert!((d.quantile(0.5) - 2.0).abs() < 1e-9);
+        assert!((d.quantile(1.0) - 10.0).abs() < 1e-12);
+        assert!((d.quantile(0.75) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn samples_within_support() {
+        let d = Empirical::new_log(vec![(0.1, 0.0), (100.0, 0.9), (1e6, 1.0)]);
+        let mut rng = Rng::new(13);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((0.1..=1e6).contains(&x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn log_space_median_is_geometric() {
+        let d = Empirical::new_log(vec![(1.0, 0.0), (100.0, 1.0)]);
+        // In log space the 50th percentile of [1,100] is 10.
+        assert!((d.quantile(0.5) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsorted() {
+        Empirical::new(vec![(1.0, 0.0), (0.5, 1.0)]);
+    }
+
+    #[test]
+    fn mixture_mixes() {
+        let m = Mixture {
+            w0: 0.5,
+            a: Empirical::new(vec![(0.0, 0.0), (1.0, 1.0)]),
+            b: Empirical::new(vec![(100.0, 0.0), (101.0, 1.0)]),
+        };
+        let mut rng = Rng::new(14);
+        let xs: Vec<f64> = (0..1000).map(|_| m.sample(&mut rng)).collect();
+        let low = xs.iter().filter(|&&x| x < 50.0).count();
+        assert!(low > 400 && low < 600, "low={low}");
+    }
+}

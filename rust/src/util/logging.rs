@@ -1,0 +1,48 @@
+//! Minimal `log` facade backend writing to stderr with timestamps.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= Level::Debug
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:>9.3}s {:<5} {}] {}",
+                self.start.elapsed().as_secs_f64(),
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Level from `ZOE_LOG` (error|warn|info|debug), default
+/// `info`. Safe to call multiple times.
+pub fn init() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let level = match std::env::var("ZOE_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let logger = Box::leak(Box::new(StderrLogger {
+            start: Instant::now(),
+        }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(level);
+    });
+}

@@ -1,0 +1,17 @@
+//! Offline substrates: deterministic PRNG, empirical distributions,
+//! streaming statistics, JSON, CLI parsing, a mini property-testing
+//! harness and a plain-text benchmark harness.
+//!
+//! The build environment is fully offline (only `xla`, `anyhow`,
+//! `thiserror`, `log`, `once_cell` are cached), so the usual crates
+//! (`rand`, `serde_json`, `clap`, `criterion`, `proptest`) are
+//! re-implemented here at the scale this project needs.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod dist;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,300 @@
+//! Statistics: percentiles, box-plot summaries (the paper reports all
+//! evaluation results as box-plots), CDFs and time-weighted means.
+
+/// A sample accumulator with exact percentiles (stores values; the
+/// workloads here are ≤ a few hundred thousand samples per metric).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "non-finite sample {x}");
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile by linear interpolation, `p` in `[0, 100]`.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Box-plot summary as the paper draws them: whiskers at p5/p95,
+    /// box at q1/median/q3, plus mean.
+    pub fn boxplot(&mut self) -> BoxPlot {
+        BoxPlot {
+            n: self.len(),
+            p5: self.percentile(5.0),
+            q1: self.percentile(25.0),
+            median: self.percentile(50.0),
+            q3: self.percentile(75.0),
+            p95: self.percentile(95.0),
+            mean: self.mean(),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+
+    /// Empirical CDF evaluated at `k` equally-spaced quantiles.
+    pub fn cdf(&mut self, k: usize) -> Vec<(f64, f64)> {
+        self.ensure_sorted();
+        (0..=k)
+            .map(|i| {
+                let q = i as f64 / k as f64;
+                (self.percentile(q * 100.0), q)
+            })
+            .collect()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Five-number (plus mean/min/max) box-plot summary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoxPlot {
+    pub n: usize,
+    pub p5: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub p95: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl std::fmt::Display for BoxPlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={:<7} p5={:<12.2} q1={:<12.2} med={:<12.2} q3={:<12.2} p95={:<12.2} mean={:<12.2}",
+            self.n, self.p5, self.q1, self.median, self.q3, self.p95, self.mean
+        )
+    }
+}
+
+/// Time-weighted average of a piecewise-constant signal (queue sizes,
+/// allocated-fraction). Also collects the per-interval values as weighted
+/// samples for percentile reporting.
+#[derive(Clone, Debug)]
+pub struct TimeWeighted {
+    last_t: f64,
+    last_v: f64,
+    area: f64,
+    t0: f64,
+    /// (value, duration) pairs for weighted percentiles.
+    pub intervals: Vec<(f64, f64)>,
+}
+
+impl TimeWeighted {
+    pub fn new(t0: f64, v0: f64) -> Self {
+        TimeWeighted {
+            last_t: t0,
+            last_v: v0,
+            area: 0.0,
+            t0,
+            intervals: Vec::new(),
+        }
+    }
+
+    /// Record that the signal changed to `v` at time `t`.
+    pub fn update(&mut self, t: f64, v: f64) {
+        debug_assert!(t >= self.last_t, "time goes forward");
+        let dt = t - self.last_t;
+        if dt > 0.0 {
+            self.area += self.last_v * dt;
+            self.intervals.push((self.last_v, dt));
+        }
+        self.last_t = t;
+        self.last_v = v;
+    }
+
+    /// Close the signal at time `t` and return the time-weighted mean.
+    pub fn finish(&mut self, t: f64) -> f64 {
+        self.update(t, self.last_v);
+        let span = t - self.t0;
+        if span <= 0.0 {
+            return self.last_v;
+        }
+        self.area / span
+    }
+
+    /// Weighted percentile over the recorded intervals.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.intervals.is_empty() {
+            return f64::NAN;
+        }
+        let mut iv = self.intervals.clone();
+        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total: f64 = iv.iter().map(|(_, d)| d).sum();
+        let target = p / 100.0 * total;
+        let mut acc = 0.0;
+        for (v, d) in iv {
+            acc += d;
+            if acc >= target {
+                return v;
+            }
+        }
+        f64::NAN
+    }
+
+    /// Box-plot over the time-weighted distribution.
+    pub fn boxplot(&self) -> BoxPlot {
+        let total: f64 = self.intervals.iter().map(|(_, d)| d).sum();
+        let mean = if total > 0.0 {
+            self.intervals.iter().map(|(v, d)| v * d).sum::<f64>() / total
+        } else {
+            f64::NAN
+        };
+        BoxPlot {
+            n: self.intervals.len(),
+            p5: self.percentile(5.0),
+            q1: self.percentile(25.0),
+            median: self.percentile(50.0),
+            q3: self.percentile(75.0),
+            p95: self.percentile(95.0),
+            mean,
+            min: self.percentile(0.0),
+            max: self.percentile(100.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_data() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(25.0) - 25.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = Samples::new();
+        s.push(7.0);
+        assert_eq!(s.median(), 7.0);
+        assert_eq!(s.percentile(95.0), 7.0);
+        assert_eq!(s.mean(), 7.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Samples::new();
+        assert!(s.median().is_nan());
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn boxplot_ordering() {
+        let mut s = Samples::new();
+        let mut r = crate::util::rng::Rng::new(11);
+        for _ in 0..10_000 {
+            s.push(r.f64() * 100.0);
+        }
+        let b = s.boxplot();
+        assert!(b.p5 <= b.q1 && b.q1 <= b.median && b.median <= b.q3 && b.q3 <= b.p95);
+    }
+
+    #[test]
+    fn time_weighted_mean() {
+        // v=2 for 10s, v=4 for 30s → mean = (20+120)/40 = 3.5
+        let mut tw = TimeWeighted::new(0.0, 2.0);
+        tw.update(10.0, 4.0);
+        let m = tw.finish(40.0);
+        assert!((m - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_weighted_percentile() {
+        let mut tw = TimeWeighted::new(0.0, 1.0);
+        tw.update(90.0, 100.0); // v=1 for 90s, then v=100 for 10s
+        tw.finish(100.0);
+        assert_eq!(tw.percentile(50.0), 1.0);
+        assert_eq!(tw.percentile(99.0), 100.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut s = Samples::new();
+        let mut r = crate::util::rng::Rng::new(12);
+        for _ in 0..5000 {
+            s.push(r.exp(0.1));
+        }
+        let cdf = s.cdf(20);
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

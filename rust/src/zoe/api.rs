@@ -1,0 +1,230 @@
+//! The Zoe client API (§5): a TCP JSON-lines protocol with a threaded
+//! server and a matching client. Mutating calls (submit, kill) and
+//! monitoring calls (status, list, stats) — the same surface Zoe's REST
+//! API exposes, minus HTTP framing (std-only build).
+//!
+//! Wire format: one JSON object per line.
+//!   → {"op":"submit","app":{...}}     ← {"ok":true,"id":7}
+//!   → {"op":"status","id":7}          ← {"ok":true,"state":"running",...}
+//!   → {"op":"list"}                   ← {"ok":true,"apps":[...]}
+//!   → {"op":"stats"}                  ← {"ok":true,...}
+//!   → {"op":"kill","id":7}            ← {"ok":true}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+use super::app::AppDescription;
+use super::master::ZoeMaster;
+
+/// Handle one API request against the master.
+fn handle_request(master: &Mutex<ZoeMaster>, req: &Json) -> Json {
+    let op = req.get("op").as_str().unwrap_or("");
+    let mut m = master.lock().unwrap();
+    match op {
+        "submit" => match AppDescription::from_json(req.get("app")) {
+            Ok(desc) => match m.submit(desc) {
+                Ok(id) => Json::obj(vec![("ok", Json::Bool(true)), ("id", Json::num(id as f64))]),
+                Err(e) => err_json(&e.to_string()),
+            },
+            Err(e) => err_json(&format!("bad app description: {e}")),
+        },
+        "status" => {
+            let Some(id) = req.get("id").as_u64() else {
+                return err_json("missing id");
+            };
+            match m.store.get(id as u32) {
+                Some(rec) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::num(rec.id as f64)),
+                    ("name", Json::str(&rec.desc.name)),
+                    ("state", Json::str(rec.state.label())),
+                    (
+                        "turnaround",
+                        rec.turnaround().map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    ("queuing", rec.queuing().map(Json::num).unwrap_or(Json::Null)),
+                ]),
+                None => err_json("no such app"),
+            }
+        }
+        "list" => {
+            let apps: Vec<Json> = m
+                .store
+                .iter()
+                .map(|rec| {
+                    Json::obj(vec![
+                        ("id", Json::num(rec.id as f64)),
+                        ("name", Json::str(&rec.desc.name)),
+                        ("state", Json::str(rec.state.label())),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![("ok", Json::Bool(true)), ("apps", Json::Arr(apps))])
+        }
+        "stats" => {
+            let used = m.backend.used();
+            let total = m.backend.total();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pending", Json::num(m.pending_len() as f64)),
+                ("running", Json::num(m.serving_len() as f64)),
+                ("cpu_used", Json::num(used.cpu)),
+                ("cpu_total", Json::num(total.cpu)),
+                ("ram_used_mb", Json::num(used.ram_mb)),
+                ("ram_total_mb", Json::num(total.ram_mb)),
+            ])
+        }
+        "kill" => {
+            let Some(id) = req.get("id").as_u64() else {
+                return err_json("missing id");
+            };
+            match m.kill(id as u32) {
+                Ok(()) => Json::obj(vec![("ok", Json::Bool(true))]),
+                Err(e) => err_json(&e.to_string()),
+            }
+        }
+        other => err_json(&format!("unknown op '{other}'")),
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+}
+
+/// The API server: listens on `addr`, one thread per connection.
+pub struct ApiServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ApiServer {
+    /// Bind and serve in background threads. Pass port 0 for an ephemeral
+    /// port (tests).
+    pub fn spawn(master: Arc<Mutex<ZoeMaster>>, bind: &str) -> Result<ApiServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let master = Arc::clone(&master);
+                        std::thread::spawn(move || {
+                            let _ = serve_conn(master, stream);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(ApiServer {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ApiServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn(master: Arc<Mutex<ZoeMaster>>, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let resp = match Json::parse(line.trim()) {
+            Ok(req) => handle_request(&master, &req),
+            Err(e) => err_json(&format!("bad json: {e}")),
+        };
+        stream.write_all(resp.to_string().as_bytes())?;
+        stream.write_all(b"\n")?;
+    }
+}
+
+/// A blocking API client.
+pub struct ApiClient {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl ApiClient {
+    pub fn connect(addr: &str) -> Result<ApiClient> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(ApiClient {
+            reader: BufReader::new(stream.try_clone()?),
+            stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))?;
+        Ok(resp)
+    }
+
+    pub fn submit(&mut self, desc: &AppDescription) -> Result<u32> {
+        let resp = self.call(&Json::obj(vec![
+            ("op", Json::str("submit")),
+            ("app", desc.to_json()),
+        ]))?;
+        if resp.get("ok").as_bool() != Some(true) {
+            return Err(anyhow!(
+                "submit failed: {}",
+                resp.get("error").as_str().unwrap_or("?")
+            ));
+        }
+        Ok(resp.get("id").as_u64().unwrap_or(0) as u32)
+    }
+
+    pub fn status(&mut self, id: u32) -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("status")),
+            ("id", Json::num(id as f64)),
+        ]))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.call(&Json::obj(vec![("op", Json::str("stats"))]))
+    }
+
+    pub fn kill(&mut self, id: u32) -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("kill")),
+            ("id", Json::num(id as f64)),
+        ]))
+    }
+}

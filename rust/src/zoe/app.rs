@@ -1,0 +1,251 @@
+//! The Zoe configuration language (§5): JSON application descriptions —
+//! frameworks, components with classes (core/elastic), resource
+//! reservations, and the "command line" attribute carrying the work spec.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::core::{ComponentClass, Resources};
+use crate::runtime::WorkKind;
+use crate::util::json::Json;
+
+/// One component group (homogeneous replicas of a framework component).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComponentDef {
+    pub name: String,
+    pub class: ComponentClass,
+    pub count: u32,
+    pub cpu: f64,
+    pub ram_mb: f64,
+    pub image: String,
+    /// Does this component execute analytic work steps? (Workers do;
+    /// pure-service components — clients, masters, parameter servers,
+    /// notebooks — hold resources but do not claim steps.)
+    pub worker: bool,
+}
+
+impl ComponentDef {
+    pub fn res(&self) -> Resources {
+        Resources::new(self.cpu, self.ram_mb)
+    }
+}
+
+/// A Zoe application description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppDescription {
+    pub name: String,
+    /// The "command line" attribute: selects the analytic program.
+    pub command: String,
+    /// Parsed work kind (from the command) + step budget.
+    pub work: WorkKind,
+    pub work_steps: u64,
+    pub priority: f64,
+    pub interactive: bool,
+    pub components: Vec<ComponentDef>,
+    /// Environment passed to components (host names are filled by the
+    /// service-discovery layer at start time).
+    pub env: Vec<(String, String)>,
+}
+
+impl AppDescription {
+    /// Total core/elastic component counts and per-component resources.
+    /// (Zoe treats component groups individually; the scheduler view
+    /// aggregates per class with a weighted-max resource envelope.)
+    pub fn core_components(&self) -> impl Iterator<Item = &ComponentDef> {
+        self.components
+            .iter()
+            .filter(|c| c.class == ComponentClass::Core)
+    }
+
+    pub fn elastic_components(&self) -> impl Iterator<Item = &ComponentDef> {
+        self.components
+            .iter()
+            .filter(|c| c.class == ComponentClass::Elastic)
+    }
+
+    pub fn n_core(&self) -> u32 {
+        self.core_components().map(|c| c.count).sum()
+    }
+
+    pub fn n_elastic(&self) -> u32 {
+        self.elastic_components().map(|c| c.count).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("application name must not be empty");
+        }
+        if self.n_core() == 0 {
+            bail!("application '{}' needs at least one core component", self.name);
+        }
+        for c in &self.components {
+            if c.count == 0 {
+                bail!("component '{}' has count 0", c.name);
+            }
+            if c.cpu <= 0.0 || c.ram_mb <= 0.0 {
+                bail!("component '{}' has non-positive resources", c.name);
+            }
+        }
+        if self.work_steps == 0 {
+            bail!("work_steps must be positive");
+        }
+        Ok(())
+    }
+
+    // ---- JSON CL ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("command", Json::str(&self.command)),
+            ("work_steps", Json::num(self.work_steps as f64)),
+            ("priority", Json::num(self.priority)),
+            ("interactive", Json::Bool(self.interactive)),
+            (
+                "components",
+                Json::Arr(
+                    self.components
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("name", Json::str(&c.name)),
+                                (
+                                    "class",
+                                    Json::str(match c.class {
+                                        ComponentClass::Core => "core",
+                                        ComponentClass::Elastic => "elastic",
+                                    }),
+                                ),
+                                ("count", Json::num(c.count as f64)),
+                                ("cpu", Json::num(c.cpu)),
+                                ("ram_mb", Json::num(c.ram_mb)),
+                                ("image", Json::str(&c.image)),
+                                ("worker", Json::Bool(c.worker)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "env",
+                Json::Arr(
+                    self.env
+                        .iter()
+                        .map(|(k, v)| Json::Arr(vec![Json::str(k), Json::str(v)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AppDescription> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("missing 'name'"))?
+            .to_string();
+        let command = j
+            .get("command")
+            .as_str()
+            .ok_or_else(|| anyhow!("missing 'command'"))?
+            .to_string();
+        // The first token of the command selects the analytic program —
+        // Zoe's "minimal knowledge of the frameworks" contract.
+        let prog = command.split_whitespace().next().unwrap_or("");
+        let work = WorkKind::parse(prog)
+            .ok_or_else(|| anyhow!("unknown analytic program '{prog}' in command"))?;
+        let mut components = Vec::new();
+        for cj in j
+            .get("components")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing 'components'"))?
+        {
+            let class = match cj.get("class").as_str() {
+                Some("core") => ComponentClass::Core,
+                Some("elastic") => ComponentClass::Elastic,
+                other => bail!("bad component class {other:?}"),
+            };
+            components.push(ComponentDef {
+                name: cj
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("component missing 'name'"))?
+                    .to_string(),
+                class,
+                count: cj.get("count").as_u64().unwrap_or(1) as u32,
+                cpu: cj.get("cpu").as_f64().ok_or_else(|| anyhow!("component missing 'cpu'"))?,
+                ram_mb: cj
+                    .get("ram_mb")
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("component missing 'ram_mb'"))?,
+                image: cj.get("image").as_str().unwrap_or("zoe/generic").to_string(),
+                worker: cj.get("worker").as_bool().unwrap_or(class == ComponentClass::Elastic),
+            });
+        }
+        let mut env = Vec::new();
+        if let Some(arr) = j.get("env").as_arr() {
+            for e in arr {
+                if let Some(pair) = e.as_arr() {
+                    if pair.len() == 2 {
+                        env.push((
+                            pair[0].as_str().unwrap_or("").to_string(),
+                            pair[1].as_str().unwrap_or("").to_string(),
+                        ));
+                    }
+                }
+            }
+        }
+        let desc = AppDescription {
+            name,
+            command,
+            work,
+            work_steps: j.get("work_steps").as_u64().unwrap_or(100),
+            priority: j.get("priority").as_f64().unwrap_or(0.0),
+            interactive: j.get("interactive").as_bool().unwrap_or(false),
+            components,
+            env,
+        };
+        desc.validate()?;
+        Ok(desc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoe::templates;
+
+    #[test]
+    fn json_roundtrip() {
+        let d = templates::spark_als(16);
+        let j = d.to_json();
+        let back = AppDescription::from_json(&j).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn rejects_coreless_app() {
+        let mut d = templates::spark_als(8);
+        d.components.retain(|c| c.class != ComponentClass::Core);
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_program() {
+        let d = templates::spark_als(8);
+        let mut j = d.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("command".into(), Json::str("python quantum.py"));
+        }
+        assert!(AppDescription::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn counts_by_class() {
+        let d = templates::spark_als(16);
+        assert_eq!(d.n_core(), 3);
+        assert_eq!(d.n_elastic(), 24);
+        let d = templates::tf_distributed();
+        assert_eq!(d.n_core(), 15); // 5 PS + 10 workers, all core
+        assert_eq!(d.n_elastic(), 0);
+    }
+}

@@ -1,0 +1,174 @@
+//! The §6 experiment driver: replay a workload trace of real analytic
+//! applications against a Zoe generation on the Swarm-like back-end.
+//!
+//! Containers execute genuine compute (PJRT artifact steps); experiment
+//! time is a **virtual clock** advanced as `steps / (rate × active
+//! workers)`, so an application's speed scales with its granted
+//! containers exactly as on the paper's testbed (each container is a real
+//! CPU allocation there; here host compute is serialized through one PJRT
+//! client, so wall time cannot scale — the virtual clock restores the
+//! testbed semantics while keeping every FLOP real). See DESIGN.md §4.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::backend::{SwarmBackend, WorkPool};
+use crate::runtime::PjrtRuntime;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+
+use super::app::AppDescription;
+use super::master::{ZoeGeneration, ZoeMaster};
+use super::state::AppState;
+use super::templates;
+
+/// One scheduled submission in a replay trace.
+pub struct ReplayArrival {
+    /// Submission time (virtual seconds).
+    pub at: f64,
+    pub desc: AppDescription,
+    /// Elastic (B-E) or rigid (B-R), for the Fig-33 class split.
+    pub elastic: bool,
+}
+
+/// The §6 workload: 100 applications, 80 % Spark-like elastic (ALS +
+/// regression templates, 16/8 GB variants), 20 % TF-like rigid;
+/// inter-arrivals N(60 s, 40 s) divided by `gap_scale`.
+pub fn section6_workload(n: u32, seed: u64, gap_scale: f64) -> Vec<ReplayArrival> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    for _ in 0..n {
+        t += rng.normal(60.0, 40.0).clamp(1.0, 180.0) / gap_scale;
+        let elastic = rng.chance(0.8);
+        let desc = if elastic {
+            match rng.below(4) {
+                0 => templates::spark_als(16),
+                1 => templates::spark_als(8),
+                2 => templates::spark_regression(16),
+                _ => templates::spark_regression(8),
+            }
+        } else if rng.chance(0.5) {
+            templates::tf_single()
+        } else {
+            templates::tf_distributed()
+        };
+        out.push(ReplayArrival { at: t, desc, elastic });
+    }
+    out
+}
+
+/// Metrics of one replayed generation.
+pub struct ReplayResult {
+    pub label: &'static str,
+    pub turnaround_be: Samples,
+    pub turnaround_br: Samples,
+    pub queuing: Samples,
+    pub alloc_cpu: Samples,
+    pub rampup_ms: Samples,
+    /// Wall-clock seconds spent (host compute).
+    pub wall: f64,
+    /// Virtual makespan (experiment seconds).
+    pub vtime: f64,
+    /// PJRT steps actually executed.
+    pub steps: u64,
+}
+
+/// Replay `arrivals` under `generation`. `rate` is worker-container
+/// steps per virtual second (throughput model); `quanta` is the number of
+/// steps the pool executes between scheduler polls.
+pub fn replay(
+    generation: ZoeGeneration,
+    arrivals: &[ReplayArrival],
+    rt: Arc<PjrtRuntime>,
+    quanta: usize,
+    rate: f64,
+) -> ReplayResult {
+    let mut backend = SwarmBackend::paper_testbed();
+    backend.set_virtual_clock();
+    let mut master = ZoeMaster::new(backend, generation);
+    let mut pool = WorkPool::new(rt);
+    let wall0 = Instant::now();
+    let mut next = 0usize;
+    let mut ids: Vec<(u32, bool)> = Vec::new();
+    let mut alloc = Samples::new();
+    let mut last_sample = -1.0f64;
+    let mut total_steps = 0u64;
+    loop {
+        let v = master.backend.now();
+        while next < arrivals.len() && arrivals[next].at <= v {
+            match master.submit(arrivals[next].desc.clone()) {
+                Ok(id) => ids.push((id, arrivals[next].elastic)),
+                Err(e) => log::warn!("submit failed: {e}"),
+            }
+            next += 1;
+        }
+        master.handle_events();
+        let steps = pool.drive(&mut master.backend, quanta).expect("pjrt step");
+        total_steps += steps as u64;
+        let active = pool.active_containers().max(1);
+        if steps > 0 {
+            master.backend.advance(steps as f64 / (rate * active as f64));
+        } else if next < arrivals.len() {
+            // Idle: jump to the next submission.
+            let jump = (arrivals[next].at - v).max(0.0) + 1e-9;
+            master.backend.advance(jump);
+        } else {
+            // Nothing to run and nothing to submit: all done (or stuck).
+            let done = ids.iter().all(|&(id, _)| {
+                matches!(
+                    master.store.get(id).map(|r| r.state),
+                    Some(AppState::Finished) | Some(AppState::Killed) | None
+                )
+            });
+            if done {
+                break;
+            }
+            // A finished ledger may still need its completion sweep.
+            master.backend.advance(0.01);
+            master.handle_events();
+        }
+        if v - last_sample > 1.0 {
+            last_sample = v;
+            let used = master.backend.used();
+            let total = master.backend.total();
+            alloc.push(used.cpu / total.cpu);
+        }
+        if wall0.elapsed().as_secs_f64() > 1200.0 {
+            log::warn!("replay wall cap hit for {generation:?}");
+            break;
+        }
+    }
+    let mut res = ReplayResult {
+        label: match generation {
+            ZoeGeneration::Rigid => "gen-1 (rigid)",
+            ZoeGeneration::Flexible => "gen-2 (flexible)",
+        },
+        turnaround_be: Samples::new(),
+        turnaround_br: Samples::new(),
+        queuing: Samples::new(),
+        alloc_cpu: alloc,
+        rampup_ms: Samples::new(),
+        wall: wall0.elapsed().as_secs_f64(),
+        vtime: master.backend.now(),
+        steps: total_steps,
+    };
+    for &(id, elastic) in &ids {
+        if let Some(rec) = master.store.get(id) {
+            if let Some(ta) = rec.turnaround() {
+                if elastic {
+                    res.turnaround_be.push(ta);
+                } else {
+                    res.turnaround_br.push(ta);
+                }
+            }
+            if let Some(q) = rec.queuing() {
+                res.queuing.push(q);
+            }
+        }
+    }
+    for v in master.placement_latency.values() {
+        res.rampup_ms.push(v * 1000.0);
+    }
+    res
+}

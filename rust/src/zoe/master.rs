@@ -1,0 +1,480 @@
+//! The Zoe master: pending queue + the flexible scheduling algorithm
+//! applied to *physical* containers on the Swarm-like back-end (§5).
+//!
+//! This is the container-level realization of Algorithm 1:
+//! * admission considers the head of the pending queue only, in policy
+//!   order (FIFO in the §6 experiments);
+//! * the flexible generation starts an application as soon as its **core**
+//!   components can be placed — reclaiming (killing) elastic containers of
+//!   running applications if needed; the rigid generation (gen-1 baseline)
+//!   waits until the **full** demand fits and never reclaims;
+//! * excess capacity cascades as elastic containers to serving
+//!   applications in admission order.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::{
+    AppId, ContainerId, ContainerSpec, Discovery, Endpoint, Event, Role, SharedWork, SwarmBackend,
+};
+use crate::core::{ComponentClass, Resources};
+use crate::util::stats::Samples;
+
+use super::app::AppDescription;
+use super::state::{AppState, StateStore};
+
+/// Which scheduler generation the master runs (§6 compares the two).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ZoeGeneration {
+    /// Gen-1 baseline: rigid, full-demand admission.
+    Rigid,
+    /// Gen-2: the flexible algorithm of this paper.
+    Flexible,
+}
+
+/// The master.
+pub struct ZoeMaster {
+    pub backend: SwarmBackend,
+    pub store: StateStore,
+    pub discovery: Discovery,
+    generation: ZoeGeneration,
+    /// Pending queue (policy order; FIFO by submission here, as in §6).
+    pending: Vec<AppId>,
+    /// Serving set in cascade (admission) order.
+    serving: Vec<AppId>,
+    work: HashMap<AppId, Arc<SharedWork>>,
+    /// Elastic containers per app, newest last (reclaim pops from the back).
+    elastic: HashMap<AppId, Vec<ContainerId>>,
+    core: HashMap<AppId, Vec<ContainerId>>,
+    event_cursor: usize,
+    /// §6 ramp-up metric: per-container placement+start latency (seconds).
+    pub placement_latency: Samples,
+    /// Time-weighted allocation samples, appended on every schedule pass.
+    pub alloc_samples: Vec<(f64, f64, f64)>, // (now, cpu_frac, ram_frac)
+    /// HDFS-like input datasets (§5 data sources).
+    pub datastore: super::storage::DataStore,
+    /// CEPH-like per-application log volumes (§5 sinks).
+    pub volumes: super::storage::VolumeManager,
+}
+
+impl ZoeMaster {
+    pub fn new(backend: SwarmBackend, generation: ZoeGeneration) -> Self {
+        let n_nodes = backend.nodes().len() as u32;
+        let mut datastore = super::storage::DataStore::new(n_nodes);
+        // The §6 input datasets (stand-ins for Last.fm / US-DoT flights).
+        let _ = datastore.put("hdfs://datasets/lastfm", 3 * 1024, n_nodes.min(3));
+        let _ = datastore.put("hdfs://datasets/usdot-flights", 12 * 1024, n_nodes.min(3));
+        ZoeMaster {
+            backend,
+            store: StateStore::new(),
+            discovery: Discovery::new(),
+            generation,
+            pending: Vec::new(),
+            serving: Vec::new(),
+            work: HashMap::new(),
+            elastic: HashMap::new(),
+            core: HashMap::new(),
+            event_cursor: 0,
+            placement_latency: Samples::new(),
+            alloc_samples: Vec::new(),
+            datastore,
+            volumes: super::storage::VolumeManager::new(1024 * 1024),
+        }
+    }
+
+    pub fn generation(&self) -> ZoeGeneration {
+        self.generation
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn serving_len(&self) -> usize {
+        self.serving.len()
+    }
+
+    /// Submit an application (client API entry point).
+    pub fn submit(&mut self, desc: AppDescription) -> Result<AppId> {
+        desc.validate()?;
+        // Reject applications whose cores can never fit (Zoe simulates
+        // deployments against the cluster state before accepting, §5).
+        let total = self.backend.total();
+        let core_demand = Self::demand(&desc, ComponentClass::Core);
+        if !core_demand.fits_in(&total) {
+            return Err(anyhow!(
+                "application '{}' core demand {:?} exceeds cluster {:?}",
+                desc.name,
+                core_demand,
+                total
+            ));
+        }
+        let now = self.backend.now();
+        let id = self.store.insert(desc, now);
+        self.store.transition(id, AppState::Queued, now)?;
+        self.pending.push(id);
+        self.schedule();
+        Ok(id)
+    }
+
+    /// Kill an application (client command; Zoe's naive preemption, §5).
+    pub fn kill(&mut self, id: AppId) -> Result<()> {
+        let now = self.backend.now();
+        if let Some(pos) = self.pending.iter().position(|&x| x == id) {
+            self.pending.remove(pos);
+            self.store.transition(id, AppState::Killed, now)?;
+            return Ok(());
+        }
+        if self.serving.contains(&id) {
+            self.teardown(id);
+            self.store.transition(id, AppState::Killed, now)?;
+            self.schedule();
+            return Ok(());
+        }
+        Err(anyhow!("app {id} is not pending or running"))
+    }
+
+    /// Poll the back-end event stream: handle container deaths and
+    /// application completion (the Zoe monitoring module, §5).
+    pub fn handle_events(&mut self) {
+        let events = self.backend.poll_events(&mut self.event_cursor);
+        let mut finished = Vec::new();
+        for ev in events {
+            if let Event::Died(cid, app) = ev {
+                self.discovery.deregister_container(cid);
+                if let Some(w) = self.work.get(&app) {
+                    if w.finished() && self.serving.contains(&app) && !finished.contains(&app) {
+                        finished.push(app);
+                    }
+                }
+            }
+        }
+        let any = !finished.is_empty();
+        for app in finished {
+            self.teardown(app);
+            let now = self.backend.now();
+            let _ = self.store.transition(app, AppState::Finished, now);
+        }
+        if any {
+            self.schedule();
+        }
+    }
+
+    /// Aggregate demand of one component class.
+    fn demand(desc: &AppDescription, class: ComponentClass) -> Resources {
+        let mut d = Resources::ZERO;
+        for c in desc.components.iter().filter(|c| c.class == class) {
+            d.add(&c.res().scaled(c.count as f64));
+        }
+        d
+    }
+
+    fn full_demand(desc: &AppDescription) -> Resources {
+        let mut d = Self::demand(desc, ComponentClass::Core);
+        d.add(&Self::demand(desc, ComponentClass::Elastic));
+        d
+    }
+
+    /// Kill all containers of `app` and drop its scheduler state.
+    fn teardown(&mut self, app: AppId) {
+        let _ = self
+            .volumes
+            .append(app, "zoe-master", &format!("app {app} torn down"));
+        self.volumes.seal(app); // logs retained read-only (§5)
+        self.serving.retain(|&x| x != app);
+        for cid in self.backend.running_of(app) {
+            let _ = self.backend.kill_container(cid);
+            self.discovery.deregister_container(cid);
+        }
+        self.elastic.remove(&app);
+        self.core.remove(&app);
+    }
+
+    // -----------------------------------------------------------------------
+    // Scheduling (the §3 algorithm over physical containers)
+    // -----------------------------------------------------------------------
+
+    /// One scheduling pass: admissions + elastic cascade.
+    pub fn schedule(&mut self) {
+        match self.generation {
+            ZoeGeneration::Rigid => self.schedule_rigid(),
+            ZoeGeneration::Flexible => self.schedule_flexible(),
+        }
+        let used = self.backend.used();
+        let total = self.backend.total();
+        self.alloc_samples.push((
+            self.backend.now(),
+            used.cpu / total.cpu,
+            used.ram_mb / total.ram_mb,
+        ));
+    }
+
+    fn schedule_rigid(&mut self) {
+        // Head-of-line: start while the FULL demand fits.
+        while let Some(&head) = self.pending.first() {
+            let desc = self.store.get(head).unwrap().desc.clone();
+            let free = {
+                let t = self.backend.total();
+                let mut f = t;
+                f.sub(&self.backend.used());
+                f
+            };
+            if !Self::full_demand(&desc).fits_in(&free) {
+                break;
+            }
+            match self.start_app(head, &desc, true) {
+                Ok(()) => {
+                    self.pending.remove(0);
+                }
+                Err(_) => break, // fragmentation: wait for departures
+            }
+        }
+    }
+
+    fn schedule_flexible(&mut self) {
+        // Phase A: admission (Algorithm 1 lines 17–22, physical form).
+        loop {
+            let Some(&head) = self.pending.first() else { break };
+            // Saturation check: Σ full demands of serving < total.
+            let total = self.backend.total();
+            let mut demand = Resources::ZERO;
+            for &app in &self.serving {
+                demand.add(&Self::full_demand(&self.store.get(app).unwrap().desc));
+            }
+            if demand.cpu >= total.cpu - 1e-9 && demand.ram_mb >= total.ram_mb - 1e-9 {
+                break;
+            }
+            // Cores-fit check with elastic reclaim: free + reclaimable.
+            let desc = self.store.get(head).unwrap().desc.clone();
+            let core_demand = Self::demand(&desc, ComponentClass::Core);
+            let mut avail = total;
+            avail.sub(&self.backend.used());
+            let mut reclaimable = Resources::ZERO;
+            for cids in self.elastic.values() {
+                for &cid in cids {
+                    if let Some(c) = self.backend.inspect(cid) {
+                        reclaimable.add(&c.spec.res);
+                    }
+                }
+            }
+            let mut reach = avail;
+            reach.add(&reclaimable);
+            if !core_demand.fits_in(&reach) {
+                break;
+            }
+            // Reclaim-and-place loop: try to start the cores; on placement
+            // failure, kill one elastic container (reverse cascade order)
+            // and retry.
+            let started = loop {
+                match self.start_app(head, &desc, false) {
+                    Ok(()) => break true,
+                    Err(_) => {
+                        if !self.reclaim_one_elastic() {
+                            break false;
+                        }
+                    }
+                }
+            };
+            if started {
+                self.pending.remove(0);
+            } else {
+                break;
+            }
+        }
+        // Phase B: elastic cascade (lines 23–30): grow grants in serving
+        // order while capacity allows.
+        let serving = self.serving.clone();
+        for app in serving {
+            let desc = self.store.get(app).unwrap().desc.clone();
+            for comp in desc.components.iter().filter(|c| c.class == ComponentClass::Elastic) {
+                let name = format!("app{app}-{}", comp.name);
+                let have = self
+                    .elastic
+                    .get(&app)
+                    .map(|v| {
+                        v.iter()
+                            .filter(|&&cid| {
+                                self.backend
+                                    .inspect(cid)
+                                    .map(|c| {
+                                        c.state == crate::backend::ContainerState::Running
+                                            && c.spec.name == name
+                                    })
+                                    .unwrap_or(false)
+                            })
+                            .count() as u32
+                    })
+                    .unwrap_or(0);
+                for _ in have..comp.count {
+                    if self.start_container(app, &desc, comp, Role::Elastic).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Kill the most recently granted elastic container of the app latest
+    /// in cascade order. Returns false if nothing is reclaimable.
+    fn reclaim_one_elastic(&mut self) -> bool {
+        let serving: Vec<AppId> = self.serving.iter().rev().copied().collect();
+        for app in serving {
+            let Some(v) = self.elastic.get_mut(&app) else { continue };
+            while let Some(cid) = v.pop() {
+                let running = self
+                    .backend
+                    .inspect(cid)
+                    .map(|c| c.state == crate::backend::ContainerState::Running)
+                    .unwrap_or(false);
+                if running {
+                    let _ = self.backend.kill_container(cid);
+                    self.discovery.deregister_container(cid);
+                    return true;
+                }
+                // Skip stale (exited) entries.
+            }
+        }
+        false
+    }
+
+    /// Place + start the application's components: cores always; elastic
+    /// too when `full` (the rigid generation).
+    fn start_app(&mut self, app: AppId, desc: &AppDescription, full: bool) -> Result<()> {
+        let t0 = Instant::now();
+        // All-or-nothing for cores: remember what we started for rollback.
+        let mut started: Vec<ContainerId> = Vec::new();
+        let work = self
+            .work
+            .entry(app)
+            .or_insert_with(|| SharedWork::new(desc.work, desc.work_steps))
+            .clone();
+        let result = (|| -> Result<()> {
+            for comp in &desc.components {
+                if comp.class == ComponentClass::Elastic && !full {
+                    continue;
+                }
+                for _ in 0..comp.count {
+                    let node = self
+                        .backend
+                        .find_node(&comp.res())
+                        .ok_or_else(|| anyhow!("no node fits component '{}'", comp.name))?;
+                    let cid = self.backend.run_container(
+                        ContainerSpec {
+                            name: format!("app{app}-{}", comp.name),
+                            image: comp.image.clone(),
+                            app,
+                            role: match comp.class {
+                                ComponentClass::Core => Role::Core,
+                                ComponentClass::Elastic => Role::Elastic,
+                            },
+                            res: comp.res(),
+                            work: if comp.worker { Some(Arc::clone(&work)) } else { None },
+                        },
+                        node,
+                    )?;
+                    started.push(cid);
+                    let host = self.backend.nodes()[node as usize].hostname.clone();
+                    self.discovery.register(
+                        &format!("app-{app}.{}", comp.name),
+                        Endpoint {
+                            app,
+                            container: cid,
+                            host,
+                            port: 7077,
+                        },
+                    );
+                    match comp.class {
+                        ComponentClass::Core => self.core.entry(app).or_default().push(cid),
+                        ComponentClass::Elastic => self.elastic.entry(app).or_default().push(cid),
+                    }
+                }
+            }
+            Ok(())
+        })();
+        match result {
+            Ok(()) => {
+                // Per-application log volume (§5: CEPH sinks).
+                let _ = self.volumes.create(app, 256);
+                let _ = self
+                    .volumes
+                    .append(app, "zoe-master", &format!("app {app} started"));
+                let per_container =
+                    t0.elapsed().as_secs_f64() / started.len().max(1) as f64;
+                for _ in 0..started.len() {
+                    self.placement_latency.push(per_container);
+                }
+                self.serving.push(app);
+                let now = self.backend.now();
+                let _ = self.store.transition(app, AppState::Starting, now);
+                let _ = self.store.transition(app, AppState::Running, now);
+                if let Some(rec) = self.store.get_mut(app) {
+                    rec.containers.extend(started);
+                }
+                Ok(())
+            }
+            Err(e) => {
+                // Roll back partial placement.
+                for cid in started {
+                    let _ = self.backend.kill_container(cid);
+                    self.discovery.deregister_container(cid);
+                }
+                if let Some(v) = self.core.get_mut(&app) {
+                    v.clear();
+                }
+                if let Some(v) = self.elastic.get_mut(&app) {
+                    v.clear();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Start one additional container of `comp` for a running app.
+    fn start_container(
+        &mut self,
+        app: AppId,
+        _desc: &AppDescription,
+        comp: &super::app::ComponentDef,
+        role: Role,
+    ) -> Result<ContainerId> {
+        let work = self.work.get(&app).cloned();
+        let node = self
+            .backend
+            .find_node(&comp.res())
+            .ok_or_else(|| anyhow!("no capacity for '{}'", comp.name))?;
+        let t0 = Instant::now();
+        let cid = self.backend.run_container(
+            ContainerSpec {
+                name: format!("app{app}-{}", comp.name),
+                image: comp.image.clone(),
+                app,
+                role,
+                res: comp.res(),
+                work: if comp.worker { work } else { None },
+            },
+            node,
+        )?;
+        self.placement_latency.push(t0.elapsed().as_secs_f64());
+        let host = self.backend.nodes()[node as usize].hostname.clone();
+        self.discovery.register(
+            &format!("app-{app}.{}", comp.name),
+            Endpoint {
+                app,
+                container: cid,
+                host,
+                port: 7077,
+            },
+        );
+        match role {
+            Role::Core => self.core.entry(app).or_default().push(cid),
+            Role::Elastic => self.elastic.entry(app).or_default().push(cid),
+        }
+        if let Some(rec) = self.store.get_mut(app) {
+            rec.containers.push(cid);
+        }
+        Ok(cid)
+    }
+}

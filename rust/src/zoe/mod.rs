@@ -1,0 +1,19 @@
+//! The Zoe system (§5): application configuration language, state store,
+//! master (scheduler + back-end reconciliation), client API, and the §6
+//! application templates.
+
+mod api;
+mod app;
+mod experiment;
+mod master;
+mod state;
+mod storage;
+pub mod templates;
+
+pub use api::*;
+pub use app::*;
+pub use experiment::*;
+pub use master::*;
+pub use state::*;
+pub use storage::*;
+pub use templates::*;

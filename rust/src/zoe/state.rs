@@ -1,0 +1,276 @@
+//! The Zoe state store (§5): application records modeled as a simple
+//! state machine, with JSON persistence (the paper uses PostgreSQL; an
+//! embedded JSON-file store preserves the same interface and semantics).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::ContainerId;
+use crate::util::json::Json;
+
+use super::app::AppDescription;
+
+/// Application life-cycle (§5's "simple state-machine").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppState {
+    Submitted,
+    Queued,
+    Starting,
+    Running,
+    Finished,
+    Killed,
+    Failed,
+}
+
+impl AppState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AppState::Submitted => "submitted",
+            AppState::Queued => "queued",
+            AppState::Starting => "starting",
+            AppState::Running => "running",
+            AppState::Finished => "finished",
+            AppState::Killed => "killed",
+            AppState::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AppState> {
+        Some(match s {
+            "submitted" => AppState::Submitted,
+            "queued" => AppState::Queued,
+            "starting" => AppState::Starting,
+            "running" => AppState::Running,
+            "finished" => AppState::Finished,
+            "killed" => AppState::Killed,
+            "failed" => AppState::Failed,
+            _ => return None,
+        })
+    }
+
+    /// Legal transitions of the state machine.
+    pub fn can_transition(self, to: AppState) -> bool {
+        use AppState::*;
+        matches!(
+            (self, to),
+            (Submitted, Queued)
+                | (Queued, Starting)
+                | (Starting, Running)
+                | (Running, Finished)
+                | (Queued, Killed)
+                | (Starting, Killed)
+                | (Running, Killed)
+                | (Starting, Failed)
+                | (Running, Failed)
+        )
+    }
+}
+
+/// One application's record.
+#[derive(Clone, Debug)]
+pub struct AppRecord {
+    pub id: u32,
+    pub desc: AppDescription,
+    pub state: AppState,
+    pub submitted_at: f64,
+    pub started_at: f64,
+    pub finished_at: f64,
+    pub containers: Vec<ContainerId>,
+}
+
+impl AppRecord {
+    pub fn turnaround(&self) -> Option<f64> {
+        if self.state == AppState::Finished {
+            Some(self.finished_at - self.submitted_at)
+        } else {
+            None
+        }
+    }
+
+    pub fn queuing(&self) -> Option<f64> {
+        if self.started_at.is_nan() {
+            None
+        } else {
+            Some(self.started_at - self.submitted_at)
+        }
+    }
+}
+
+/// The store: in-memory map + JSON file persistence.
+#[derive(Debug, Default)]
+pub struct StateStore {
+    apps: BTreeMap<u32, AppRecord>,
+    next_id: u32,
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, desc: AppDescription, now: f64) -> u32 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.apps.insert(
+            id,
+            AppRecord {
+                id,
+                desc,
+                state: AppState::Submitted,
+                submitted_at: now,
+                started_at: f64::NAN,
+                finished_at: f64::NAN,
+                containers: Vec::new(),
+            },
+        );
+        id
+    }
+
+    pub fn get(&self, id: u32) -> Option<&AppRecord> {
+        self.apps.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: u32) -> Option<&mut AppRecord> {
+        self.apps.get_mut(&id)
+    }
+
+    pub fn transition(&mut self, id: u32, to: AppState, now: f64) -> Result<()> {
+        let rec = self
+            .apps
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("no such app {id}"))?;
+        if !rec.state.can_transition(to) {
+            return Err(anyhow!(
+                "illegal transition {} -> {} for app {id}",
+                rec.state.label(),
+                to.label()
+            ));
+        }
+        match to {
+            AppState::Running => rec.started_at = now,
+            AppState::Finished | AppState::Killed | AppState::Failed => rec.finished_at = now,
+            _ => {}
+        }
+        rec.state = to;
+        Ok(())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &AppRecord> {
+        self.apps.values()
+    }
+
+    pub fn count_in(&self, state: AppState) -> usize {
+        self.apps.values().filter(|a| a.state == state).count()
+    }
+
+    // ---- persistence ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.apps
+                .values()
+                .map(|a| {
+                    Json::obj(vec![
+                        ("id", Json::num(a.id as f64)),
+                        ("state", Json::str(a.state.label())),
+                        ("submitted_at", Json::num(a.submitted_at)),
+                        (
+                            "started_at",
+                            if a.started_at.is_nan() {
+                                Json::Null
+                            } else {
+                                Json::num(a.started_at)
+                            },
+                        ),
+                        (
+                            "finished_at",
+                            if a.finished_at.is_nan() {
+                                Json::Null
+                            } else {
+                                Json::num(a.finished_at)
+                            },
+                        ),
+                        ("desc", a.desc.to_json()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn dump(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<StateStore> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut store = StateStore::new();
+        for aj in j.as_arr().ok_or_else(|| anyhow!("expected array"))? {
+            let id = aj.get("id").as_u64().ok_or_else(|| anyhow!("bad id"))? as u32;
+            let desc = AppDescription::from_json(aj.get("desc"))?;
+            let rec = AppRecord {
+                id,
+                desc,
+                state: AppState::parse(aj.get("state").as_str().unwrap_or(""))
+                    .ok_or_else(|| anyhow!("bad state"))?,
+                submitted_at: aj.get("submitted_at").as_f64().unwrap_or(f64::NAN),
+                started_at: aj.get("started_at").as_f64().unwrap_or(f64::NAN),
+                finished_at: aj.get("finished_at").as_f64().unwrap_or(f64::NAN),
+                containers: Vec::new(),
+            };
+            store.next_id = store.next_id.max(id + 1);
+            store.apps.insert(id, rec);
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoe::templates;
+
+    #[test]
+    fn state_machine_legality() {
+        use AppState::*;
+        assert!(Submitted.can_transition(Queued));
+        assert!(Queued.can_transition(Starting));
+        assert!(Starting.can_transition(Running));
+        assert!(Running.can_transition(Finished));
+        assert!(!Submitted.can_transition(Running));
+        assert!(!Finished.can_transition(Running));
+        assert!(!Queued.can_transition(Finished));
+    }
+
+    #[test]
+    fn transitions_update_timestamps() {
+        let mut s = StateStore::new();
+        let id = s.insert(templates::tf_single(), 10.0);
+        s.transition(id, AppState::Queued, 10.0).unwrap();
+        s.transition(id, AppState::Starting, 12.0).unwrap();
+        s.transition(id, AppState::Running, 13.0).unwrap();
+        s.transition(id, AppState::Finished, 99.0).unwrap();
+        let rec = s.get(id).unwrap();
+        assert_eq!(rec.turnaround(), Some(89.0));
+        assert_eq!(rec.queuing(), Some(3.0));
+        assert!(s.transition(id, AppState::Running, 100.0).is_err());
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let mut s = StateStore::new();
+        let a = s.insert(templates::spark_als(16), 1.0);
+        let b = s.insert(templates::tf_distributed(), 2.0);
+        s.transition(a, AppState::Queued, 1.0).unwrap();
+        let dir = std::env::temp_dir().join("zoe_state_test.json");
+        s.dump(&dir).unwrap();
+        let loaded = StateStore::load(&dir).unwrap();
+        assert_eq!(loaded.get(a).unwrap().desc, templates::spark_als(16));
+        assert_eq!(loaded.get(b).unwrap().desc, templates::tf_distributed());
+        assert_eq!(loaded.get(a).unwrap().state, AppState::Queued);
+        let _ = std::fs::remove_file(dir);
+    }
+}

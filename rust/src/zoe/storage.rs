@@ -1,0 +1,280 @@
+//! Storage substrate (§5: "Zoe supports many data sources and sinks;
+//! we report experiments using a HDFS cluster to store input data to
+//! applications, and CEPH volumes to store application-specific logs").
+//!
+//! Two in-process services with the same API surface Zoe consumes:
+//!
+//! * [`DataStore`] — an HDFS-like namespace: replicated, block-oriented
+//!   datasets addressed by `hdfs://`-style URIs; applications resolve
+//!   their input URIs to block locations at start (locality hints for
+//!   placement are exposed, though the §6 experiments don't use them).
+//! * [`VolumeManager`] — a CEPH-like volume pool: per-application log
+//!   volumes created at start, written by containers, retained after the
+//!   application finishes (quota-enforced).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::AppId;
+
+/// Default block size (HDFS-style 128 MB).
+pub const BLOCK_MB: u64 = 128;
+
+/// One dataset in the namespace.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub uri: String,
+    pub size_mb: u64,
+    pub replication: u32,
+    /// block index → nodes holding a replica.
+    pub blocks: Vec<Vec<u32>>,
+}
+
+impl Dataset {
+    pub fn n_blocks(&self) -> u64 {
+        self.size_mb.div_ceil(BLOCK_MB)
+    }
+}
+
+/// HDFS-like namespace: datasets registered under `hdfs://` URIs with
+/// round-robin block placement over `n_nodes` storage nodes.
+#[derive(Debug)]
+pub struct DataStore {
+    n_nodes: u32,
+    datasets: BTreeMap<String, Dataset>,
+}
+
+impl DataStore {
+    pub fn new(n_nodes: u32) -> Self {
+        assert!(n_nodes > 0);
+        DataStore {
+            n_nodes,
+            datasets: BTreeMap::new(),
+        }
+    }
+
+    /// Register a dataset; blocks are placed round-robin with
+    /// `replication` copies on distinct nodes.
+    pub fn put(&mut self, uri: &str, size_mb: u64, replication: u32) -> Result<()> {
+        if !uri.starts_with("hdfs://") {
+            bail!("dataset URIs must be hdfs:// (got '{uri}')");
+        }
+        if replication == 0 || replication > self.n_nodes {
+            bail!(
+                "replication {replication} impossible on {} nodes",
+                self.n_nodes
+            );
+        }
+        if self.datasets.contains_key(uri) {
+            bail!("dataset '{uri}' already exists");
+        }
+        let n_blocks = size_mb.div_ceil(BLOCK_MB).max(1);
+        let blocks = (0..n_blocks)
+            .map(|b| {
+                (0..replication)
+                    .map(|r| ((b + r as u64) % self.n_nodes as u64) as u32)
+                    .collect()
+            })
+            .collect();
+        self.datasets.insert(
+            uri.to_string(),
+            Dataset {
+                uri: uri.to_string(),
+                size_mb,
+                replication,
+                blocks,
+            },
+        );
+        Ok(())
+    }
+
+    /// Resolve a URI to its dataset (what an application does at start).
+    pub fn resolve(&self, uri: &str) -> Result<&Dataset> {
+        self.datasets
+            .get(uri)
+            .ok_or_else(|| anyhow!("no such dataset '{uri}'"))
+    }
+
+    /// Locality hint: how many blocks of `uri` have a replica on `node`.
+    pub fn blocks_on(&self, uri: &str, node: u32) -> u64 {
+        self.datasets
+            .get(uri)
+            .map(|d| {
+                d.blocks
+                    .iter()
+                    .filter(|replicas| replicas.contains(&node))
+                    .count() as u64
+            })
+            .unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.datasets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.datasets.is_empty()
+    }
+}
+
+/// A CEPH-like log volume bound to one application.
+#[derive(Clone, Debug)]
+pub struct Volume {
+    pub app: AppId,
+    pub name: String,
+    pub quota_mb: u64,
+    pub used_mb: u64,
+    /// Append-only log lines (component name, line).
+    pub log: Vec<(String, String)>,
+    pub sealed: bool,
+}
+
+/// CEPH-like volume pool with a global capacity quota.
+#[derive(Debug)]
+pub struct VolumeManager {
+    capacity_mb: u64,
+    used_mb: u64,
+    volumes: BTreeMap<AppId, Volume>,
+}
+
+impl VolumeManager {
+    pub fn new(capacity_mb: u64) -> Self {
+        VolumeManager {
+            capacity_mb,
+            used_mb: 0,
+            volumes: BTreeMap::new(),
+        }
+    }
+
+    /// Create the per-application log volume (called at app start).
+    pub fn create(&mut self, app: AppId, quota_mb: u64) -> Result<()> {
+        if self.volumes.contains_key(&app) {
+            bail!("volume for app {app} already exists");
+        }
+        if self.used_mb + quota_mb > self.capacity_mb {
+            bail!(
+                "volume pool exhausted: {} + {quota_mb} > {} MB",
+                self.used_mb,
+                self.capacity_mb
+            );
+        }
+        self.used_mb += quota_mb;
+        self.volumes.insert(
+            app,
+            Volume {
+                app,
+                name: format!("zoe-logs-app{app}"),
+                quota_mb,
+                used_mb: 0,
+                log: Vec::new(),
+                sealed: false,
+            },
+        );
+        Ok(())
+    }
+
+    /// Append a log line from a component (≈4 KB accounting granularity).
+    pub fn append(&mut self, app: AppId, component: &str, line: &str) -> Result<()> {
+        let v = self
+            .volumes
+            .get_mut(&app)
+            .ok_or_else(|| anyhow!("no volume for app {app}"))?;
+        if v.sealed {
+            bail!("volume of app {app} is sealed");
+        }
+        let new_used = v.used_mb + 1; // 1 MB accounting unit per append batch
+        if new_used > v.quota_mb {
+            bail!("volume quota exceeded for app {app}");
+        }
+        v.used_mb = new_used;
+        v.log.push((component.to_string(), line.to_string()));
+        Ok(())
+    }
+
+    /// Seal the volume at application teardown (logs retained, read-only).
+    pub fn seal(&mut self, app: AppId) {
+        if let Some(v) = self.volumes.get_mut(&app) {
+            v.sealed = true;
+        }
+    }
+
+    /// Drop a volume, reclaiming its quota.
+    pub fn delete(&mut self, app: AppId) -> Result<()> {
+        let v = self
+            .volumes
+            .remove(&app)
+            .ok_or_else(|| anyhow!("no volume for app {app}"))?;
+        self.used_mb -= v.quota_mb;
+        Ok(())
+    }
+
+    pub fn get(&self, app: AppId) -> Option<&Volume> {
+        self.volumes.get(&app)
+    }
+
+    pub fn used_mb(&self) -> u64 {
+        self.used_mb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_blocks_and_replication() {
+        let mut ds = DataStore::new(4);
+        ds.put("hdfs://data/lastfm", 1000, 3).unwrap();
+        let d = ds.resolve("hdfs://data/lastfm").unwrap();
+        assert_eq!(d.n_blocks(), 8); // ceil(1000/128)
+        assert!(d.blocks.iter().all(|r| r.len() == 3));
+        // Every replica set has distinct nodes.
+        for r in &d.blocks {
+            let mut s = r.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 3);
+        }
+    }
+
+    #[test]
+    fn dataset_errors() {
+        let mut ds = DataStore::new(2);
+        assert!(ds.put("s3://nope", 10, 1).is_err());
+        assert!(ds.put("hdfs://x", 10, 3).is_err(), "replication > nodes");
+        ds.put("hdfs://x", 10, 1).unwrap();
+        assert!(ds.put("hdfs://x", 10, 1).is_err(), "duplicate");
+        assert!(ds.resolve("hdfs://y").is_err());
+    }
+
+    #[test]
+    fn locality_hints() {
+        let mut ds = DataStore::new(3);
+        ds.put("hdfs://d", 128 * 3, 1).unwrap(); // 3 blocks, rr on 3 nodes
+        assert_eq!(ds.blocks_on("hdfs://d", 0), 1);
+        assert_eq!(ds.blocks_on("hdfs://d", 1), 1);
+        assert_eq!(ds.blocks_on("hdfs://d", 2), 1);
+        assert_eq!(ds.blocks_on("hdfs://nope", 0), 0);
+    }
+
+    #[test]
+    fn volume_lifecycle_and_quota() {
+        let mut vm = VolumeManager::new(100);
+        vm.create(1, 60).unwrap();
+        assert!(vm.create(2, 60).is_err(), "pool quota");
+        vm.create(2, 40).unwrap();
+        assert!(vm.create(1, 1).is_err(), "duplicate");
+        for i in 0..60 {
+            let r = vm.append(1, "spark-worker", &format!("line {i}"));
+            assert!(r.is_ok(), "append {i} within quota");
+        }
+        assert!(vm.append(1, "spark-worker", "over").is_err(), "app quota");
+        vm.seal(1);
+        assert!(vm.append(1, "spark-worker", "sealed").is_err());
+        assert_eq!(vm.get(1).unwrap().log.len(), 60);
+        vm.delete(1).unwrap();
+        assert_eq!(vm.used_mb(), 40);
+        vm.create(3, 60).unwrap(); // quota reclaimed
+    }
+}

@@ -1,0 +1,174 @@
+//! The §6 application templates: two Spark-like elastic batch
+//! applications (random-forest/ridge flight-delay regression, ALS music
+//! recommender), the TensorFlow-like rigid application (deep-GP
+//! training), and an interactive Notebook.
+
+use crate::core::ComponentClass;
+use crate::runtime::WorkKind;
+
+use super::app::{AppDescription, ComponentDef};
+
+fn comp(name: &str, class: ComponentClass, count: u32, cpu: f64, ram_gb: f64, image: &str) -> ComponentDef {
+    ComponentDef {
+        name: name.to_string(),
+        class,
+        count,
+        cpu,
+        ram_mb: ram_gb * 1024.0,
+        image: image.to_string(),
+        // Workers execute analytic steps; masters/clients/PS only serve.
+        worker: name.contains("worker") || name.contains("executor"),
+    }
+}
+
+/// Music recommender (ALS on Last.fm-shaped data): 3 core components
+/// (client, master, 1 worker) + 24 elastic workers of `ram_gb` (16 or 8),
+/// 6 CPUs per elastic component (§6).
+pub fn spark_als(ram_gb: u32) -> AppDescription {
+    AppDescription {
+        name: format!("spark-als-{ram_gb}g"),
+        command: "als --rank 128 --dataset lastfm".to_string(),
+        work: WorkKind::Als,
+        work_steps: 240,
+        priority: 0.0,
+        interactive: false,
+        components: vec![
+            comp("spark-client", ComponentClass::Core, 1, 1.0, 4.0, "zoe/spark-client"),
+            comp("spark-master", ComponentClass::Core, 1, 1.0, 4.0, "zoe/spark-master"),
+            comp("spark-worker-core", ComponentClass::Core, 1, 6.0, ram_gb as f64, "zoe/spark-worker"),
+            comp(
+                "spark-worker",
+                ComponentClass::Elastic,
+                24,
+                6.0,
+                ram_gb as f64,
+                "zoe/spark-worker",
+            ),
+        ],
+        env: vec![("SPARK_MASTER".into(), "{discovery:spark-master}".into())],
+    }
+}
+
+/// Flight-delay regression (random-forest in the paper; ridge here —
+/// same elastic structure): 3 core + 32 elastic of `ram_gb` (16 or 8),
+/// 1 CPU per elastic component (§6).
+pub fn spark_regression(ram_gb: u32) -> AppDescription {
+    AppDescription {
+        name: format!("spark-reg-{ram_gb}g"),
+        command: "ridge --dataset usdot-flights".to_string(),
+        work: WorkKind::Ridge,
+        work_steps: 320,
+        priority: 0.0,
+        interactive: false,
+        components: vec![
+            comp("spark-client", ComponentClass::Core, 1, 1.0, 4.0, "zoe/spark-client"),
+            comp("spark-master", ComponentClass::Core, 1, 1.0, 4.0, "zoe/spark-master"),
+            comp("spark-worker-core", ComponentClass::Core, 1, 1.0, ram_gb as f64, "zoe/spark-worker"),
+            comp(
+                "spark-worker",
+                ComponentClass::Elastic,
+                32,
+                1.0,
+                ram_gb as f64,
+                "zoe/spark-worker",
+            ),
+        ],
+        env: vec![("SPARK_MASTER".into(), "{discovery:spark-master}".into())],
+    }
+}
+
+/// Single-node TensorFlow deep-GP training: 1 worker, 16 GB, rigid (§6).
+pub fn tf_single() -> AppDescription {
+    AppDescription {
+        name: "tf-dgp-single".to_string(),
+        command: "tf_train --model deep-gp".to_string(),
+        work: WorkKind::TfTrain,
+        work_steps: 120,
+        priority: 0.0,
+        interactive: false,
+        components: vec![comp("tf-worker", ComponentClass::Core, 1, 6.0, 16.0, "zoe/tensorflow")],
+        env: vec![],
+    }
+}
+
+/// Distributed TensorFlow deep-GP training: 10 workers + 5 parameter
+/// servers, each 16 GB, all core (rigid) (§6).
+pub fn tf_distributed() -> AppDescription {
+    AppDescription {
+        name: "tf-dgp-dist".to_string(),
+        command: "tf_train --model deep-gp --distributed".to_string(),
+        work: WorkKind::TfTrain,
+        work_steps: 400,
+        priority: 0.0,
+        interactive: false,
+        components: vec![
+            comp("tf-ps", ComponentClass::Core, 5, 2.0, 16.0, "zoe/tensorflow"),
+            comp("tf-worker", ComponentClass::Core, 10, 4.0, 16.0, "zoe/tensorflow"),
+        ],
+        env: vec![
+            ("PS_HOSTS".into(), "{discovery:tf-ps}".into()),
+            ("WK_HOSTS".into(), "{discovery:tf-worker}".into()),
+        ],
+    }
+}
+
+/// Interactive notebook: 1 core + a few elastic executors, high priority.
+pub fn notebook() -> AppDescription {
+    AppDescription {
+        name: "notebook".to_string(),
+        command: "als --interactive".to_string(),
+        work: WorkKind::Als,
+        work_steps: 60,
+        priority: 1.0,
+        interactive: true,
+        components: vec![
+            {
+                // The notebook kernel itself executes work: the app must
+                // make progress even if every elastic executor is
+                // reclaimed (cores are the progress guarantee, §2.1).
+                let mut c = comp("notebook", ComponentClass::Core, 1, 2.0, 8.0, "zoe/notebook");
+                c.worker = true;
+                c
+            },
+            comp("executor", ComponentClass::Elastic, 4, 2.0, 8.0, "zoe/spark-worker"),
+        ],
+        env: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_templates_validate() {
+        for d in [
+            spark_als(16),
+            spark_als(8),
+            spark_regression(16),
+            spark_regression(8),
+            tf_single(),
+            tf_distributed(),
+            notebook(),
+        ] {
+            d.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn paper_component_structure() {
+        let als = spark_als(16);
+        assert_eq!(als.n_core(), 3);
+        assert_eq!(als.n_elastic(), 24);
+        assert!(als
+            .elastic_components()
+            .all(|c| (c.cpu - 6.0).abs() < 1e-9 && (c.ram_mb - 16.0 * 1024.0).abs() < 1e-9));
+        let reg = spark_regression(8);
+        assert_eq!(reg.n_core(), 3);
+        assert_eq!(reg.n_elastic(), 32);
+        assert!(reg
+            .elastic_components()
+            .all(|c| (c.cpu - 1.0).abs() < 1e-9 && (c.ram_mb - 8.0 * 1024.0).abs() < 1e-9));
+        assert!(tf_single().components.iter().all(|c| c.class == ComponentClass::Core));
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration: the rust PJRT runtime executes the python-AOT artifacts
+//! with correct numerics (checked against plain-rust references) — the
+//! full L1→L2→L3 bridge.
+//!
+//! Skips (with a notice) if `artifacts/` has not been built yet; the
+//! Makefile `test` target builds artifacts first.
+
+use zoe::runtime::{
+    AnalyticEngine, PjrtRuntime, WorkKind, WorkState, ALS_ITEMS, ALS_RANK, ALS_USERS,
+};
+
+fn runtime() -> Option<PjrtRuntime> {
+    match PjrtRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Plain-rust ALS reference: u' = u − lr·((u vᵀ − r) v).
+fn als_ref(u: &[f32], v: &[f32], r: &[f32], lr: f32) -> Vec<f32> {
+    let (nu, ni, k) = (ALS_USERS, ALS_ITEMS, ALS_RANK);
+    let mut err = vec![0.0f32; nu * ni];
+    for i in 0..nu {
+        for j in 0..ni {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += u[i * k + t] * v[j * k + t];
+            }
+            err[i * ni + j] = acc - r[i * ni + j];
+        }
+    }
+    let mut out = u.to_vec();
+    for i in 0..nu {
+        for t in 0..k {
+            let mut acc = 0.0f32;
+            for j in 0..ni {
+                acc += err[i * ni + j] * v[j * k + t];
+            }
+            out[i * k + t] -= lr * acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn runtime_loads_all_artifacts() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.has("als_step"));
+    assert!(rt.has("ridge_step"));
+    assert!(rt.has("score_table1"));
+    assert!(!rt.has("nonexistent"));
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn runtime_als_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = zoe::util::rng::Rng::new(42);
+    let mut gen = |n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0 * s).collect()
+    };
+    let u = gen(ALS_USERS * ALS_RANK, 0.1);
+    let v = gen(ALS_ITEMS * ALS_RANK, 0.1);
+    let r = gen(ALS_USERS * ALS_ITEMS, 1.0);
+    let lr = 5e-3f32;
+    let got = rt
+        .execute_f32(
+            "als_step",
+            &[
+                (&u, &[ALS_USERS as i64, ALS_RANK as i64]),
+                (&v, &[ALS_ITEMS as i64, ALS_RANK as i64]),
+                (&r, &[ALS_USERS as i64, ALS_ITEMS as i64]),
+                (&[lr], &[]),
+            ],
+        )
+        .unwrap();
+    let want = als_ref(&u, &v, &r, lr);
+    assert_eq!(got.len(), want.len());
+    let mut max_err = 0.0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w).abs());
+    }
+    assert!(max_err < 1e-3, "max abs err {max_err}");
+}
+
+#[test]
+fn engine_steps_reduce_loss() {
+    let Some(rt) = runtime() else { return };
+    let eng = AnalyticEngine::new(&rt);
+    for kind in [WorkKind::Als, WorkKind::Ridge] {
+        let mut st = WorkState::synth(kind, 7);
+        let l0 = st.loss();
+        for _ in 0..10 {
+            eng.step(&mut st).unwrap();
+        }
+        let l1 = st.loss();
+        assert!(
+            l1 < l0,
+            "{:?}: loss must decrease ({l0} -> {l1})",
+            kind
+        );
+        assert_eq!(st.steps_done, 10);
+    }
+}
+
+#[test]
+fn score_kernel_matches_native_policy_keys() {
+    let Some(rt) = runtime() else { return };
+    let eng = AnalyticEngine::new(&rt);
+
+    // Build a batch of pending applications and their features.
+    let mut rng = zoe::util::rng::Rng::new(9);
+    let n = 64usize;
+    let mut features: Vec<Vec<f32>> = vec![Vec::with_capacity(n); 7];
+    let mut reqs = Vec::new();
+    for id in 0..n {
+        let runtime_s = rng.range_f64(30.0, 10_000.0);
+        let n_core = rng.range_u64(1, 8) as u32;
+        let n_el = rng.range_u64(0, 200) as u32;
+        let cpu = rng.range_f64(0.25, 6.0);
+        let ram = rng.range_f64(64.0, 32_768.0);
+        let req = zoe::core::RequestBuilder::new(id as u32)
+            .runtime(runtime_s)
+            .cores(n_core, zoe::core::Resources::new(cpu, ram))
+            .elastics(n_el, zoe::core::Resources::new(cpu, ram))
+            .build();
+        let services = (n_core + n_el) as f32;
+        let gb = 1.0 / 1024.0;
+        let res_sum = services * (cpu * ram * gb) as f32;
+        features[0].push(runtime_s as f32);
+        features[1].push(1.0); // remaining_frac (pending)
+        features[2].push(0.0); // wait
+        features[3].push(services);
+        features[4].push(services); // unscheduled = all, when pending
+        features[5].push(res_sum);
+        features[6].push(res_sum);
+        reqs.push(req);
+    }
+    let scores = eng.score_table1(&features).unwrap();
+
+    // Compare with the native policy keys (f32 tolerance).
+    for (pi, (_, policy)) in zoe::policy::Policy::table1().into_iter().enumerate() {
+        for (i, req) in reqs.iter().enumerate() {
+            let want = policy.key(req, 1.0, 0, 0.0);
+            let got = scores[pi][i] as f64;
+            let tol = want.abs().max(1.0) * 1e-4;
+            assert!(
+                (got - want).abs() < tol,
+                "policy {} app {}: kernel {} vs native {}",
+                policy.label(),
+                i,
+                got,
+                want
+            );
+        }
+    }
+}

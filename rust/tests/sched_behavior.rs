@@ -1,0 +1,296 @@
+//! Behavioral tests of the three schedulers, driving them directly
+//! through the `Scheduler` trait (no event loop): admission order, grant
+//! cascades, elastic-only reclaim, W-queue priority, and the malleable
+//! no-reclaim guarantee.
+
+use zoe::core::{unit_request, ReqId, Request};
+use zoe::policy::Policy;
+use zoe::pool::Cluster;
+use zoe::sched::{
+    FlexibleScheduler, MalleableScheduler, Phase, RigidScheduler, Scheduler, World,
+};
+
+/// Build a world at time `now` with `reqs` all in `Future` phase.
+fn world(reqs: Vec<Request>, units: u32, policy: Policy) -> World {
+    World::new(reqs, Cluster::units(units), policy)
+}
+
+fn arrive(sched: &mut dyn Scheduler, w: &mut World, id: ReqId, t: f64) {
+    w.now = t;
+    w.state_mut(id).phase = Phase::Pending;
+    sched.on_arrival(id, w);
+}
+
+fn depart(sched: &mut dyn Scheduler, w: &mut World, id: ReqId, t: f64) {
+    w.now = t;
+    let st = w.state_mut(id);
+    st.phase = Phase::Done;
+    st.grant = 0;
+    sched.on_departure(id, w);
+}
+
+/// Fig. 1 bottom, step by step: after B departs at t=15, the flexible
+/// scheduler reclaims exactly one elastic unit from C to start D's cores.
+#[test]
+fn fig1_reclaim_one_unit_from_c() {
+    let reqs = vec![
+        unit_request(0, 0.0, 10.0, 3, 4), // A
+        unit_request(1, 0.0, 10.0, 3, 3), // B
+        unit_request(2, 0.0, 10.0, 3, 5), // C
+        unit_request(3, 0.0, 10.0, 3, 2), // D
+    ];
+    let mut w = world(reqs, 10, Policy::FIFO);
+    let mut s = FlexibleScheduler::new(false);
+    for id in 0..4 {
+        arrive(&mut s, &mut w, id, 0.0);
+    }
+    // t=0: S = {A, B}; A full grant, B zero.
+    assert_eq!(s.serving(), &[0, 1]);
+    assert_eq!(w.state(0).grant, 4);
+    assert_eq!(w.state(1).grant, 0);
+    assert_eq!(s.pending(), 2);
+
+    depart(&mut s, &mut w, 0, 10.0); // A done
+    // S = {B, C}; B full (3), C gets 1.
+    assert_eq!(s.serving(), &[1, 2]);
+    assert_eq!(w.state(1).grant, 3);
+    assert_eq!(w.state(2).grant, 1);
+
+    depart(&mut s, &mut w, 1, 15.0); // B done
+    // S = {C, D}: C would take 5 elastic but is cut to 4 so D's 3 cores
+    // fit — the paper's "reclaims just one unit from request C".
+    assert_eq!(s.serving(), &[2, 3]);
+    assert_eq!(w.state(2).grant, 4);
+    assert_eq!(w.state(3).grant, 0);
+    // Cluster is exactly full: 3+4 (C) + 3 (D).
+    assert!((w.cluster.used().cpu - 10.0).abs() < 1e-9);
+}
+
+/// The same moment under malleable: D stays queued (no reclaim), C full.
+#[test]
+fn fig1_malleable_blocks_d() {
+    let reqs = vec![
+        unit_request(0, 0.0, 10.0, 3, 4),
+        unit_request(1, 0.0, 10.0, 3, 3),
+        unit_request(2, 0.0, 10.0, 3, 5),
+        unit_request(3, 0.0, 10.0, 3, 2),
+    ];
+    let mut w = world(reqs, 10, Policy::FIFO);
+    let mut s = MalleableScheduler::new();
+    for id in 0..4 {
+        arrive(&mut s, &mut w, id, 0.0);
+    }
+    depart(&mut s, &mut w, 0, 10.0);
+    depart(&mut s, &mut w, 1, 15.0);
+    assert_eq!(s.serving(), &[2]);
+    assert_eq!(w.state(2).grant, 5, "C goes full under malleable");
+    assert_eq!(s.pending(), 1, "D blocked: leftover 2 < C_D=3");
+    assert_eq!(w.state(3).phase, Phase::Pending);
+}
+
+/// Rigid: one at a time (Fig. 1 top) — admitting only full demands.
+#[test]
+fn fig1_rigid_serves_one_at_a_time() {
+    let reqs = vec![
+        unit_request(0, 0.0, 10.0, 3, 4),
+        unit_request(1, 0.0, 10.0, 3, 3),
+        unit_request(2, 0.0, 10.0, 3, 5),
+        unit_request(3, 0.0, 10.0, 3, 2),
+    ];
+    let mut w = world(reqs, 10, Policy::FIFO);
+    let mut s = RigidScheduler::new();
+    for id in 0..4 {
+        arrive(&mut s, &mut w, id, 0.0);
+    }
+    assert_eq!(s.serving(), &[0]);
+    assert_eq!(w.state(0).grant, 4, "rigid always grants in full");
+    depart(&mut s, &mut w, 0, 10.0);
+    assert_eq!(s.serving(), &[1]);
+    depart(&mut s, &mut w, 1, 20.0);
+    assert_eq!(s.serving(), &[2]);
+}
+
+/// Cores are never reclaimed: across any sequence of flexible events the
+/// cluster always holds at least Σ cores of the serving set.
+#[test]
+fn flexible_never_touches_cores() {
+    let mut rng = zoe::util::rng::Rng::new(0x7E57);
+    for _ in 0..30 {
+        let n = 30;
+        let mut t = 0.0;
+        let reqs: Vec<Request> = (0..n)
+            .map(|id| {
+                t += rng.exp(0.2);
+                let c = rng.range_u64(1, 4) as u32;
+                let e = rng.below((12 - c) as u64) as u32;
+                unit_request(id, t, rng.range_f64(1.0, 50.0), c, e)
+            })
+            .collect();
+        let mut w = world(reqs, 12, Policy::FIFO);
+        let mut s = FlexibleScheduler::new(false);
+        let mut running: Vec<ReqId> = Vec::new();
+        for id in 0..n {
+            let at = w.state(id).req.arrival;
+            arrive(&mut s, &mut w, id, at);
+            // Invariant: used ≥ Σ cores of serving; grants ≤ E.
+            let used = w.cluster.used().cpu;
+            let min_cores: f64 = s
+                .serving()
+                .iter()
+                .map(|&x| w.state(x).req.n_core as f64)
+                .sum();
+            assert!(used >= min_cores - 1e-9, "cores were reclaimed");
+            for &x in s.serving() {
+                assert!(w.state(x).grant <= w.state(x).req.n_elastic);
+            }
+            let new_running: Vec<ReqId> = s
+                .serving()
+                .iter()
+                .copied()
+                .filter(|x| !running.contains(x))
+                .collect();
+            running.extend(new_running);
+            // Depart a random running request now and then.
+            if !s.serving().is_empty() && rng.chance(0.5) {
+                let victim = s.serving()[rng.below(s.serving().len() as u64) as usize];
+                depart(&mut s, &mut w, victim, at + 0.1);
+            }
+        }
+    }
+}
+
+/// Malleable: a serving request's grant never decreases.
+#[test]
+fn malleable_grants_monotone() {
+    let mut rng = zoe::util::rng::Rng::new(0xA11E);
+    for _ in 0..30 {
+        let n = 25;
+        let mut t = 0.0;
+        let reqs: Vec<Request> = (0..n)
+            .map(|id| {
+                t += rng.exp(0.3);
+                let c = rng.range_u64(1, 3) as u32;
+                let e = rng.below(10) as u32;
+                unit_request(id, t, rng.range_f64(1.0, 50.0), c, e)
+            })
+            .collect();
+        let mut w = world(reqs, 10, Policy::FIFO);
+        let mut s = MalleableScheduler::new();
+        let mut last_grant = vec![0u32; n as usize];
+        for id in 0..n {
+            let at = w.state(id).req.arrival;
+            arrive(&mut s, &mut w, id, at);
+            for &x in s.serving() {
+                assert!(
+                    w.state(x).grant >= last_grant[x as usize],
+                    "malleable grant shrank for {x}"
+                );
+            }
+            for &x in s.serving() {
+                last_grant[x as usize] = w.state(x).grant;
+            }
+            if !s.serving().is_empty() && rng.chance(0.4) {
+                let victim = s.serving()[0];
+                depart(&mut s, &mut w, victim, at + 0.1);
+                last_grant[victim as usize] = 0;
+                for &x in s.serving() {
+                    assert!(w.state(x).grant >= last_grant[x as usize]);
+                    last_grant[x as usize] = w.state(x).grant;
+                }
+            }
+        }
+    }
+}
+
+/// Preemptive path: a high-priority arrival whose cores cannot be carved
+/// from elastic goes to W; W drains before L on departures.
+#[test]
+fn preemptive_w_queue_has_priority_over_l() {
+    // Cluster of 10. Request 0: rigid, 10 cores (fills everything).
+    // Request 1: batch, C=2 E=0, arrives later (goes to L).
+    // Request 2: interactive (priority 1), C=4 — can't be carved (no
+    // elastic anywhere) → W.
+    let reqs = vec![
+        unit_request(0, 0.0, 100.0, 10, 0),
+        unit_request(1, 1.0, 10.0, 2, 0),
+        unit_request(2, 2.0, 10.0, 4, 0),
+    ];
+    let mut reqs = reqs;
+    reqs[2].priority = 1.0;
+    reqs[2].class = zoe::core::AppClass::Interactive;
+    let mut w = world(reqs, 10, Policy::FIFO);
+    let mut s = FlexibleScheduler::new(true);
+    arrive(&mut s, &mut w, 0, 0.0);
+    arrive(&mut s, &mut w, 1, 1.0);
+    arrive(&mut s, &mut w, 2, 2.0);
+    let (l, wline) = s.waiting();
+    assert_eq!(l, &[1], "batch waits in L");
+    assert_eq!(wline, &[2], "interactive waits in W (cores don't fit)");
+    // Request 0 departs → W must drain first even though L's head arrived
+    // earlier.
+    depart(&mut s, &mut w, 0, 5.0);
+    assert!(s.serving().contains(&2), "W head admitted first");
+    assert!(s.serving().contains(&1), "then L head (cores fit too)");
+    let (l, wline) = s.waiting();
+    assert!(l.is_empty() && wline.is_empty());
+}
+
+/// Preemption carves cores out of elastic allocations immediately on
+/// arrival when possible (§3.3 line 3).
+#[test]
+fn preemptive_arrival_reclaims_elastic_immediately() {
+    let reqs = {
+        let mut v = vec![
+            unit_request(0, 0.0, 100.0, 2, 8), // fills cluster 2+8
+            unit_request(1, 1.0, 10.0, 3, 0),  // high-priority, C=3
+        ];
+        v[1].priority = 1.0;
+        v
+    };
+    let mut w = world(reqs, 10, Policy::FIFO);
+    let mut s = FlexibleScheduler::new(true);
+    arrive(&mut s, &mut w, 0, 0.0);
+    assert_eq!(w.state(0).grant, 8);
+    arrive(&mut s, &mut w, 1, 1.0);
+    // 1 admitted by reclaiming 3 elastic units of 0.
+    assert!(s.serving().contains(&1));
+    assert_eq!(w.state(0).grant, 5, "elastic shrank from 8 to 5");
+    assert_eq!(w.state(1).phase, Phase::Running);
+}
+
+/// SJF orders the waiting line by runtime: on departure, the shorter of
+/// two queued requests is admitted first even if it arrived later.
+#[test]
+fn sjf_admits_shorter_job_first() {
+    let reqs = vec![
+        unit_request(0, 0.0, 50.0, 10, 0), // hog
+        unit_request(1, 1.0, 40.0, 6, 0),  // long, arrives first
+        unit_request(2, 2.0, 5.0, 6, 0),   // short, arrives later
+    ];
+    let mut w = world(reqs, 10, Policy::sjf());
+    let mut s = FlexibleScheduler::new(false);
+    arrive(&mut s, &mut w, 0, 0.0);
+    arrive(&mut s, &mut w, 1, 1.0);
+    arrive(&mut s, &mut w, 2, 2.0);
+    depart(&mut s, &mut w, 0, 50.0);
+    assert!(s.serving().contains(&2), "short job admitted first");
+    assert!(!s.serving().contains(&1), "long job still waits (no room)");
+}
+
+/// FIFO head-of-line: the flexible scheduler only admits the *head* of L
+/// (no backfilling) — a smaller later request cannot jump the queue.
+#[test]
+fn fifo_no_backfill() {
+    let reqs = vec![
+        unit_request(0, 0.0, 50.0, 8, 0), // running, leaves 2 free
+        unit_request(1, 1.0, 10.0, 5, 0), // head of L, needs 5
+        unit_request(2, 2.0, 10.0, 2, 0), // would fit in the 2 free units
+    ];
+    let mut w = world(reqs, 10, Policy::FIFO);
+    let mut s = FlexibleScheduler::new(false);
+    arrive(&mut s, &mut w, 0, 0.0);
+    arrive(&mut s, &mut w, 1, 1.0);
+    arrive(&mut s, &mut w, 2, 2.0);
+    assert_eq!(s.serving(), &[0]);
+    assert_eq!(s.pending(), 2, "no backfill: request 2 must wait behind 1");
+}

@@ -1,0 +1,203 @@
+//! Property-based tests over the simulator and schedulers
+//! (mini-proptest harness; see `zoe::util::check`). These pin the
+//! paper-level invariants:
+//!
+//! * capacity is never exceeded, in either resource dimension;
+//! * every request eventually completes, exactly once, having done all
+//!   its work;
+//! * core components are never preempted (grants only touch elastic);
+//! * on a fully inelastic workload the flexible scheduler behaves
+//!   *identically* to the rigid baseline (Table 3);
+//! * flexible admissions are never later than the rigid baseline's on the
+//!   same FIFO workload (queuing dominance in aggregate).
+
+use zoe::core::{Request, RequestBuilder, Resources};
+use zoe::policy::{Discipline, Policy, SizeDim};
+use zoe::pool::Cluster;
+use zoe::sched::SchedKind;
+use zoe::sim::simulate;
+use zoe::util::check::forall;
+use zoe::util::rng::Rng;
+
+/// Random workload (bounded so every request is schedulable on the
+/// `units`-sized cluster).
+fn random_requests(rng: &mut Rng, n: usize, units: u32) -> Vec<Request> {
+    let mut t = 0.0;
+    (0..n as u32)
+        .map(|id| {
+            t += rng.exp(0.05);
+            // Full demand must fit the cluster (as the workload generator
+            // guarantees) — otherwise the rigid baseline deadlocks.
+            let n_core = rng.range_u64(1, (units / 2).max(1) as u64) as u32;
+            let n_el = rng.range_u64(0, (units - n_core) as u64) as u32;
+            let rigid = rng.chance(0.3);
+            RequestBuilder::new(id)
+                .arrival(t)
+                .runtime(rng.range_f64(1.0, 200.0))
+                .cores(n_core, Resources::new(1.0, 1.0))
+                .elastics(if rigid { 0 } else { n_el }, Resources::new(1.0, 1.0))
+                .build()
+        })
+        .collect()
+}
+
+fn policies() -> Vec<Policy> {
+    vec![
+        Policy::FIFO,
+        Policy::sjf(),
+        Policy::srpt(),
+        Policy::hrrn(),
+        Policy::new(Discipline::Sjf, SizeDim::D2),
+        Policy::new(Discipline::Srpt, SizeDim::D3),
+    ]
+}
+
+#[test]
+fn all_requests_complete_under_all_schedulers_and_policies() {
+    forall(12, 0xC0FFEE, |rng| {
+        let n = 40 + rng.below(60) as usize;
+        let units = 10 + rng.below(20) as u32;
+        let reqs = random_requests(rng, n, units);
+        let pol = policies()[rng.below(6) as usize];
+        for kind in [
+            SchedKind::Rigid,
+            SchedKind::Malleable,
+            SchedKind::Flexible,
+            SchedKind::FlexiblePreemptive,
+        ] {
+            let res = simulate(reqs.clone(), Cluster::units(units), pol, kind);
+            assert_eq!(res.completed as usize, n, "{kind:?} {}", pol.label());
+            assert_eq!(res.unfinished, 0, "{kind:?}");
+        }
+    });
+}
+
+#[test]
+fn turnaround_at_least_runtime() {
+    forall(10, 0xBEEF, |rng| {
+        let reqs = random_requests(rng, 50, 16);
+        let runtimes: Vec<f64> = reqs.iter().map(|r| r.runtime).collect();
+        for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
+            let res = simulate(reqs.clone(), Cluster::units(16), Policy::FIFO, kind);
+            // Min turnaround ≥ min nominal runtime (no request can finish
+            // faster than running fully allocated from arrival).
+            let min_rt = runtimes.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                res.turnaround.min() >= min_rt - 1e-6,
+                "{kind:?}: min ta {} < min runtime {min_rt}",
+                res.turnaround.min()
+            );
+            // Slowdown ≥ 1 − ε for every app.
+            assert!(res.slowdown.min() >= 1.0 - 1e-9, "{kind:?}");
+        }
+    });
+}
+
+#[test]
+fn rigid_equals_flexible_on_inelastic_workload() {
+    // Table 3: with only core components the flexible scheduler reduces
+    // exactly to the rigid baseline — same turnaround for every request.
+    forall(10, 0xABCD, |rng| {
+        let n = 60;
+        let mut t = 0.0;
+        let reqs: Vec<Request> = (0..n as u32)
+            .map(|id| {
+                t += rng.exp(0.1);
+                RequestBuilder::new(id)
+                    .arrival(t)
+                    .runtime(rng.range_f64(1.0, 100.0))
+                    .cores(rng.range_u64(1, 8) as u32, Resources::new(1.0, 1.0))
+                    .elastics(0, Resources::ZERO)
+                    .build()
+            })
+            .collect();
+        for pol in [Policy::FIFO, Policy::sjf(), Policy::srpt(), Policy::hrrn()] {
+            let a = simulate(reqs.clone(), Cluster::units(12), pol, SchedKind::Rigid);
+            let b = simulate(reqs.clone(), Cluster::units(12), pol, SchedKind::Flexible);
+            let ta: Vec<f64> = a.turnaround.values().to_vec();
+            let tb: Vec<f64> = b.turnaround.values().to_vec();
+            assert_eq!(ta.len(), tb.len());
+            for (x, y) in ta.iter().zip(&tb) {
+                assert!(
+                    (x - y).abs() < 1e-6,
+                    "policy {}: rigid {x} != flexible {y}",
+                    pol.label()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn flexible_never_loses_to_rigid_on_mean_queuing() {
+    // The headline claim, in expectation over random workloads: flexible
+    // mean queuing ≤ rigid mean queuing (FIFO). Checked per-seed with a
+    // small tolerance for packing noise.
+    forall(8, 0x5EED, |rng| {
+        let reqs = random_requests(rng, 80, 12);
+        let r = simulate(reqs.clone(), Cluster::units(12), Policy::FIFO, SchedKind::Rigid);
+        let f = simulate(reqs, Cluster::units(12), Policy::FIFO, SchedKind::Flexible);
+        assert!(
+            f.queuing.mean() <= r.queuing.mean() * 1.05 + 1.0,
+            "flexible queuing {} ≫ rigid {}",
+            f.queuing.mean(),
+            r.queuing.mean()
+        );
+    });
+}
+
+#[test]
+fn interactive_queuing_improves_with_preemption() {
+    // Fig 29's shape: with priority interactive arrivals, the preemptive
+    // scheduler must not increase interactive queuing vs non-preemptive.
+    forall(6, 0x1A7E, |rng| {
+        let mut t = 0.0;
+        let mut reqs = Vec::new();
+        for id in 0..80u32 {
+            t += rng.exp(0.08);
+            let interactive = rng.chance(0.25);
+            let r = RequestBuilder::new(id)
+                .arrival(t)
+                .runtime(rng.range_f64(5.0, 80.0))
+                .cores(rng.range_u64(1, 3) as u32, Resources::new(1.0, 1.0))
+                .elastics(rng.range_u64(0, 10) as u32, Resources::new(1.0, 1.0))
+                .class(if interactive {
+                    zoe::core::AppClass::Interactive
+                } else {
+                    zoe::core::AppClass::BatchElastic
+                })
+                .priority(if interactive { 1.0 } else { 0.0 })
+                .build();
+            reqs.push(r);
+        }
+        let np = simulate(reqs.clone(), Cluster::units(10), Policy::FIFO, SchedKind::Flexible);
+        let pr = simulate(
+            reqs,
+            Cluster::units(10),
+            Policy::FIFO,
+            SchedKind::FlexiblePreemptive,
+        );
+        let q_np = np.class(zoe::core::AppClass::Interactive).queuing.mean();
+        let q_pr = pr.class(zoe::core::AppClass::Interactive).queuing.mean();
+        assert!(
+            q_pr <= q_np + 1e-6,
+            "preemption worsened interactive queuing: {q_pr} > {q_np}"
+        );
+    });
+}
+
+#[test]
+fn work_conservation_in_isolation() {
+    // A request alone on the cluster must take exactly its nominal time,
+    // regardless of scheduler/policy.
+    forall(10, 0xFACE, |rng| {
+        let c = rng.range_u64(1, 5) as u32;
+        let e = rng.below(10) as u32;
+        let t = rng.range_f64(1.0, 500.0);
+        let req = zoe::core::unit_request(0, rng.range_f64(0.0, 100.0), t, c, e);
+        for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
+            let res = simulate(vec![req.clone()], Cluster::units(20), Policy::sjf(), kind);
+            assert!((res.turnaround.mean() - t).abs() < 1e-6, "{kind:?}");
+        }
+    });
+}

@@ -1,0 +1,195 @@
+//! Integration: the full Zoe system — master + Swarm-like back-end +
+//! work pool + PJRT runtime + client API — on small real workloads.
+//!
+//! Skips (with a notice) when `artifacts/` is missing.
+
+use std::sync::{Arc, Mutex};
+
+use zoe::backend::{SwarmBackend, WorkPool};
+use zoe::core::Resources;
+use zoe::runtime::PjrtRuntime;
+use zoe::zoe::{templates, ApiClient, ApiServer, AppState, ZoeGeneration, ZoeMaster};
+
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    match PjrtRuntime::load_default() {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP zoe system tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Drive the master + pool until all submitted apps finish (or a step
+/// budget runs out).
+fn drive_until_done(master: &mut ZoeMaster, pool: &mut WorkPool, max_rounds: usize) {
+    for _ in 0..max_rounds {
+        master.handle_events();
+        let done = master
+            .store
+            .iter()
+            .all(|r| matches!(r.state, AppState::Finished | AppState::Killed));
+        if done {
+            return;
+        }
+        pool.drive(&mut master.backend, 64).unwrap();
+    }
+    panic!("apps did not finish within the driving budget");
+}
+
+#[test]
+fn single_app_runs_to_completion() {
+    let Some(rt) = runtime() else { return };
+    let backend = SwarmBackend::paper_testbed();
+    let mut master = ZoeMaster::new(backend, ZoeGeneration::Flexible);
+    let mut pool = WorkPool::new(rt);
+
+    let mut desc = templates::tf_single();
+    desc.work_steps = 8;
+    let id = master.submit(desc).unwrap();
+    assert_eq!(master.store.get(id).unwrap().state, AppState::Running);
+    drive_until_done(&mut master, &mut pool, 1000);
+    let rec = master.store.get(id).unwrap();
+    assert_eq!(rec.state, AppState::Finished);
+    assert!(rec.turnaround().unwrap() >= 0.0);
+    // All containers released.
+    assert_eq!(master.backend.used().cpu, 0.0);
+}
+
+#[test]
+fn elastic_app_gets_full_grant_when_alone() {
+    let Some(rt) = runtime() else { return };
+    let mut master = ZoeMaster::new(SwarmBackend::paper_testbed(), ZoeGeneration::Flexible);
+    let mut pool = WorkPool::new(rt);
+    let mut desc = templates::spark_regression(8);
+    desc.work_steps = 16;
+    let id = master.submit(desc).unwrap();
+    // 3 core + 32 elastic containers must all be running.
+    assert_eq!(master.backend.running_of(id).len(), 35);
+    drive_until_done(&mut master, &mut pool, 2000);
+    assert_eq!(master.store.get(id).unwrap().state, AppState::Finished);
+}
+
+#[test]
+fn flexible_reclaims_elastic_for_new_cores() {
+    let Some(rt) = runtime() else { return };
+    // Small cluster: 2 nodes × 8 cpu.
+    let backend = SwarmBackend::new(2, Resources::new(8.0, 64.0 * 1024.0));
+    let mut master = ZoeMaster::new(backend, ZoeGeneration::Flexible);
+    let mut pool = WorkPool::new(rt);
+
+    // App A: 1 core (1 cpu) + 14 elastic (1 cpu each) → fills the cluster.
+    let mut a = templates::spark_regression(8);
+    a.work_steps = 400;
+    for c in &mut a.components {
+        c.ram_mb = 1024.0;
+        c.cpu = 1.0;
+        if c.name == "spark-worker" {
+            c.count = 14;
+        }
+    }
+    a.components.retain(|c| c.name != "spark-client" && c.name != "spark-master");
+    let ida = master.submit(a).unwrap();
+    let before = master.backend.running_of(ida).len();
+    assert_eq!(before, 15, "A fully granted");
+
+    // App B (rigid): needs 4 cores — only startable by reclaiming.
+    let mut b = templates::tf_single();
+    b.work_steps = 4;
+    for c in &mut b.components {
+        c.cpu = 4.0;
+        c.ram_mb = 1024.0;
+    }
+    let idb = master.submit(b).unwrap();
+    assert_eq!(
+        master.store.get(idb).unwrap().state,
+        AppState::Running,
+        "flexible must reclaim elastic to start B's cores"
+    );
+    let after = master.backend.running_of(ida).len();
+    assert!(after < before, "A lost elastic containers ({before} -> {after})");
+    drive_until_done(&mut master, &mut pool, 4000);
+}
+
+#[test]
+fn rigid_waits_for_full_demand() {
+    let Some(rt) = runtime() else { return };
+    let backend = SwarmBackend::new(2, Resources::new(8.0, 64.0 * 1024.0));
+    let mut master = ZoeMaster::new(backend, ZoeGeneration::Rigid);
+    let mut pool = WorkPool::new(rt);
+
+    let mut a = templates::spark_regression(8);
+    a.work_steps = 8;
+    for c in &mut a.components {
+        c.ram_mb = 1024.0;
+        c.cpu = 1.0;
+        if c.name == "spark-worker" {
+            c.count = 14;
+        }
+    }
+    a.components.retain(|c| c.name != "spark-client" && c.name != "spark-master");
+    let ida = master.submit(a).unwrap();
+    assert_eq!(master.store.get(ida).unwrap().state, AppState::Running);
+
+    let mut b = templates::tf_single();
+    b.work_steps = 4;
+    for c in &mut b.components {
+        c.cpu = 4.0;
+        c.ram_mb = 1024.0;
+    }
+    let idb = master.submit(b).unwrap();
+    // Rigid: B must queue (no reclaim).
+    assert_eq!(master.store.get(idb).unwrap().state, AppState::Queued);
+    drive_until_done(&mut master, &mut pool, 4000);
+    // After A finishes, B runs and finishes too.
+    assert_eq!(master.store.get(idb).unwrap().state, AppState::Finished);
+}
+
+#[test]
+fn api_submit_status_stats_kill() {
+    let Some(rt) = runtime() else { return };
+    let master = Arc::new(Mutex::new(ZoeMaster::new(
+        SwarmBackend::paper_testbed(),
+        ZoeGeneration::Flexible,
+    )));
+    let server = ApiServer::spawn(Arc::clone(&master), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    let mut client = ApiClient::connect(&addr).unwrap();
+    let mut desc = templates::spark_als(8);
+    desc.work_steps = 2000; // long enough to observe + kill
+    let id = client.submit(&desc).unwrap();
+
+    let st = client.status(id).unwrap();
+    assert_eq!(st.get("state").as_str(), Some("running"));
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("running").as_u64(), Some(1));
+    assert!(stats.get("cpu_used").as_f64().unwrap() > 0.0);
+
+    let resp = client.kill(id).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true));
+    let st = client.status(id).unwrap();
+    assert_eq!(st.get("state").as_str(), Some("killed"));
+
+    // Drive the pool a bit; nothing should be left running.
+    {
+        let mut m = master.lock().unwrap();
+        let mut pool = WorkPool::new(rt);
+        m.handle_events();
+        pool.drive(&mut m.backend, 16).unwrap();
+        assert_eq!(m.backend.used().cpu, 0.0);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn submit_rejects_unschedulable_cores() {
+    let Some(_rt) = runtime() else { return };
+    let mut master = ZoeMaster::new(
+        SwarmBackend::new(1, Resources::new(4.0, 8192.0)),
+        ZoeGeneration::Flexible,
+    );
+    let desc = templates::tf_distributed(); // 5×2 + 10×4 cpu cores ≫ 4
+    assert!(master.submit(desc).is_err());
+}
