@@ -1,32 +1,141 @@
 //! Perf microbenches (§Perf in EXPERIMENTS.md): the hot paths of each
-//! layer — simulator event throughput (L3), PJRT artifact step latency
+//! layer — simulator event throughput (L3, including the scale sweep and
+//! the optimized-vs-naive engine comparison), PJRT artifact step latency
 //! (L2/L1 via the runtime), the batched Table-1 scoring kernel, and the
 //! substrate primitives (placement, JSON, RNG).
+//!
+//! Emits `BENCH_sim_throughput.json` (path overridable with
+//! `ZOE_BENCH_OUT`) with the event-throughput trajectory; CI compares it
+//! against the committed baseline (`scripts/check_bench_regression.py`).
+//! `ZOE_BENCH_SWEEP_MAX` caps the sweep size (default 200_000 apps).
 
 use std::time::Instant;
 
 use zoe::policy::Policy;
 use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
-use zoe::sim::simulate;
+use zoe::sim::{simulate_with_mode, EngineMode};
 use zoe::util::bench::{measure, section};
+use zoe::util::json::Json;
 use zoe::workload::WorkloadSpec;
 
+struct SweepPoint {
+    sched: &'static str,
+    mode: &'static str,
+    apps: u32,
+    events: u64,
+    wall_s: f64,
+    events_per_s: f64,
+}
+
+fn run_point(
+    spec: &WorkloadSpec,
+    kind: SchedKind,
+    apps: u32,
+    mode: EngineMode,
+    out: &mut Vec<SweepPoint>,
+) -> f64 {
+    let reqs = spec.generate(apps, 1);
+    let t0 = Instant::now();
+    let res = simulate_with_mode(reqs, Cluster::paper_sim(), Policy::FIFO, kind, mode);
+    let dt = t0.elapsed().as_secs_f64();
+    let eps = res.events as f64 / dt.max(1e-12);
+    let mode_label = match mode {
+        EngineMode::Optimized => "optimized",
+        EngineMode::Naive => "naive",
+    };
+    println!(
+        "  {:<10} {:<9} apps={:<7} {:>9} events in {:>8.3}s → {:>10.0} events/s",
+        kind.label(),
+        mode_label,
+        apps,
+        res.events,
+        dt,
+        eps
+    );
+    out.push(SweepPoint {
+        sched: kind.label(),
+        mode: mode_label,
+        apps,
+        events: res.events,
+        wall_s: dt,
+        events_per_s: eps,
+    });
+    eps
+}
+
 fn main() {
-    section("L3 — simulator event throughput");
     let spec = WorkloadSpec::paper_batch_only();
+    let mut points: Vec<SweepPoint> = Vec::new();
+
+    section("L3 — simulator event throughput: optimized vs naive (8k apps)");
+    let mut speedups: Vec<(&'static str, f64)> = Vec::new();
     for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
-        let reqs = spec.generate(8_000, 1);
-        let t0 = Instant::now();
-        let res = simulate(reqs, Cluster::paper_sim(), Policy::FIFO, kind);
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "  {:<10} {:>8} events in {:.3}s → {:>9.0} events/s",
-            kind.label(),
-            res.events,
-            dt,
-            res.events as f64 / dt
-        );
+        let opt = run_point(&spec, kind, 8_000, EngineMode::Optimized, &mut points);
+        let naive = run_point(&spec, kind, 8_000, EngineMode::Naive, &mut points);
+        let speedup = opt / naive.max(1e-12);
+        println!("  {:<10} speedup: {speedup:.2}×", kind.label());
+        speedups.push((kind.label(), speedup));
+    }
+
+    section("L3 — simulator scale sweep (flexible scheduler)");
+    let sweep_max: u32 = std::env::var("ZOE_BENCH_SWEEP_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000);
+    // The 8k point was measured above; larger scales run optimized only
+    // (the naive engine's O(S)-per-event cost would dominate wall time
+    // at 200k apps).
+    for apps in [50_000u32, 200_000] {
+        if apps > sweep_max {
+            println!("  (skipping {apps}-app point: ZOE_BENCH_SWEEP_MAX={sweep_max})");
+            continue;
+        }
+        run_point(&spec, SchedKind::Flexible, apps, EngineMode::Optimized, &mut points);
+    }
+
+    // ---- emit the throughput trajectory ---------------------------------
+    let out_path =
+        std::env::var("ZOE_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim_throughput.json".to_string());
+    let results = Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("sched", Json::str(p.sched)),
+                    ("mode", Json::str(p.mode)),
+                    ("apps", Json::num(p.apps as f64)),
+                    ("events", Json::num(p.events as f64)),
+                    ("wall_s", Json::num(p.wall_s)),
+                    ("events_per_s", Json::num(p.events_per_s)),
+                ])
+            })
+            .collect(),
+    );
+    let speedups_json = Json::Arr(
+        speedups
+            .iter()
+            .map(|&(sched, s)| {
+                Json::obj(vec![
+                    ("sched", Json::str(sched)),
+                    ("apps", Json::num(8_000.0)),
+                    ("speedup_vs_naive", Json::num(s)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sim_throughput")),
+        ("provisional", Json::Bool(false)),
+        ("workload", Json::str("paper_batch_only")),
+        ("policy", Json::str("FIFO")),
+        ("seed", Json::num(1.0)),
+        ("results", results),
+        ("speedups", speedups_json),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("\n  wrote {out_path}"),
+        Err(e) => println!("\n  WARN could not write {out_path}: {e}"),
     }
 
     section("L3 — placement primitives");
@@ -34,6 +143,11 @@ fn main() {
     let res1 = zoe::core::Resources::new(2.0, 4096.0);
     measure("place_up_to 1000 components + clear", 200, || {
         cluster.place_up_to(&res1, 1000);
+        cluster.clear();
+    });
+    measure("can_place_all (fits) on warm cluster", 200, || {
+        cluster.place_up_to(&res1, 900);
+        std::hint::black_box(cluster.can_place_all(&res1, 100));
         cluster.clear();
     });
 

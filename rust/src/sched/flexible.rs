@@ -4,9 +4,18 @@
 //! Placement model: **core placements are persistent** — once a request's
 //! core components are placed they never move (as in the real Zoe
 //! back-end; cores are never preempted). Elastic placements are released
-//! and re-cascaded on every REBALANCE, which is exactly the reclaim
-//! mechanism of the algorithm: admitting a new request's cores may shrink
-//! the elastic grants of later-ranked running requests (Fig. 1, bottom).
+//! and re-cascaded on REBALANCE, which is exactly the reclaim mechanism
+//! of the algorithm: admitting a new request's cores may shrink the
+//! elastic grants of later-ranked running requests (Fig. 1, bottom).
+//!
+//! Incremental cascade: the greedy elastic cascade is a deterministic
+//! function of (core placements, serving order). `cascade_clean` records
+//! that neither has changed since the last cascade, in which case a
+//! recompute would re-place **bit-identically** and the whole
+//! release/re-place pass is skipped. Since elastic release is only
+//! needed to make capacity reclaimable for admissions, the release
+//! itself is also skipped unless admission is actually possible.
+//! `World::naive` disables all of this for differential testing.
 //!
 //! Invariants:
 //! * every member of the serving set S always has all cores placed;
@@ -15,25 +24,37 @@
 //! * excess resources cascade to S in serving order (lines 23–30);
 //! * preemption (when enabled) reclaims **elastic** components only.
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 
-use super::{has_spare_after_full_grants, insert_sorted, Phase, Scheduler, World};
+use super::{
+    has_spare_after_full_grants, insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World,
+};
 use crate::core::ReqId;
 use crate::pool::Placement;
+
+/// W-line entry: (priority, policy key, id) — descending priority,
+/// ascending key, ascending id.
+type WEntry = (f64, f64, ReqId);
 
 pub struct FlexibleScheduler {
     /// Serving set S, in cascade order (descending effective priority,
     /// then ascending frozen key).
     s: Vec<ReqId>,
-    /// Waiting line L, ascending policy key.
-    l: Vec<ReqId>,
+    /// Waiting line L: (cached policy key, id), ascending.
+    l: VecDeque<(f64, ReqId)>,
     /// Auxiliary waiting line W (§3.3): preempting requests whose cores
     /// did not fit; has priority over L on departures.
-    w_line: Vec<ReqId>,
-    /// Persistent core placements of serving requests.
-    cores: HashMap<ReqId, Placement>,
-    /// Elastic placements, re-computed by each rebalance.
-    elastic: HashMap<ReqId, Placement>,
+    w_line: VecDeque<WEntry>,
+    /// Persistent core placements, dense by request id (empty = none);
+    /// buffers are reused across admissions.
+    cores: Vec<Placement>,
+    /// Elastic placements, re-computed by cascades; dense by request id.
+    elastic: Vec<Placement>,
+    /// Cores and serving order unchanged since the last cascade — a
+    /// recompute would be identical, so the cascade skips entirely.
+    cascade_clean: bool,
+    /// Simulated time of the last dynamic-policy resort of L.
+    resort_stamp: f64,
     preemptive: bool,
 }
 
@@ -41,30 +62,31 @@ impl FlexibleScheduler {
     pub fn new(preemptive: bool) -> Self {
         FlexibleScheduler {
             s: Vec::new(),
-            l: Vec::new(),
-            w_line: Vec::new(),
-            cores: HashMap::new(),
-            elastic: HashMap::new(),
+            l: VecDeque::new(),
+            w_line: VecDeque::new(),
+            cores: Vec::new(),
+            elastic: Vec::new(),
+            cascade_clean: false,
+            resort_stamp: f64::NAN,
             preemptive,
         }
     }
 
-    /// Re-sort the waiting line when the policy's keys are time-varying
-    /// (HRRN: response ratios change as requests wait).
-    fn resort_pending(&mut self, w: &World) {
-        if w.policy.dynamic() && self.l.len() > 1 {
-            let mut keyed: Vec<(f64, ReqId)> =
-                self.l.iter().map(|&id| (w.pending_key(id), id)).collect();
-            keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-            self.l = keyed.into_iter().map(|(_, id)| id).collect();
+    /// Grow the dense placement stores to cover every request id.
+    fn ensure_capacity(&mut self, w: &World) {
+        let n = w.states.len();
+        if self.cores.len() < n {
+            self.cores.resize_with(n, Placement::default);
+            self.elastic.resize_with(n, Placement::default);
         }
     }
 
-    /// Release every elastic placement (start of a rebalance pass).
-    fn release_elastic(&mut self, w: &mut World) {
-        for (_, p) in self.elastic.drain() {
-            w.cluster.release(&p);
+    /// Release every elastic placement (start of a full rebalance pass).
+    fn release_all_elastic(&mut self, w: &mut World) {
+        for &id in &self.s {
+            w.cluster.release_and_clear(&mut self.elastic[id as usize]);
         }
+        self.cascade_clean = false;
     }
 
     /// Try to place `id`'s cores in the current free capacity (elastic
@@ -74,95 +96,127 @@ impl FlexibleScheduler {
             let r = &w.states[id as usize].req;
             (r.core_res, r.n_core)
         };
-        match w.cluster.place_all_tracked(&res, n) {
-            Some(p) => {
-                self.cores.insert(id, p);
-                true
-            }
-            None => false,
+        if w.cluster.place_all_into(&res, n, &mut self.cores[id as usize]) {
+            self.cascade_clean = false; // core state changed
+            true
+        } else {
+            false
         }
     }
 
     fn admit(&mut self, id: ReqId, w: &mut World) {
         let key = w.pending_key(id);
         let now = w.now;
-        let st = w.state_mut(id);
-        st.phase = Phase::Running;
-        st.admit_time = now;
-        st.frozen_key = key;
-        st.last_accrual = now;
-        // Serving order: explicit priority first (descending), then key.
         let prio = w.state(id).req.priority;
+        {
+            let st = w.state_mut(id);
+            st.phase = Phase::Running;
+            st.admit_time = now;
+            st.frozen_key = key;
+        }
+        w.note_admitted(id);
+        // Serving order: explicit priority first (descending), then key.
         let states = &w.states;
         let pos = self.s.partition_point(|&x| {
             let sx = &states[x as usize];
             (sx.req.priority, -sx.frozen_key) >= (prio, -key)
         });
         self.s.insert(pos, id);
+        self.cascade_clean = false; // serving order changed
     }
 
-    /// Algorithm 1, REBALANCE: release elastic, admit from L while S does
-    /// not saturate and the head's cores fit, then cascade elastic grants
-    /// in serving order.
+    /// Algorithm 1, REBALANCE: admit from L while S does not saturate and
+    /// the head's cores fit (with elastic released = reclaimable), then
+    /// cascade elastic grants in serving order. The elastic release is
+    /// skipped entirely when no admission is possible — the cascade is
+    /// then a clean no-op unless something else invalidated it.
     fn rebalance(&mut self, w: &mut World) {
-        self.resort_pending(w);
-        self.release_elastic(w);
-        loop {
-            if self.l.is_empty() || !has_spare_after_full_grants(w, &self.s) {
-                break;
-            }
-            let head = self.l[0];
-            // Line 19: cores fit beside the cores of S (elastic released
-            // = reclaimable).
-            if self.try_place_cores(head, w) {
-                self.l.remove(0);
-                self.admit(head, w);
-            } else {
-                break;
+        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
+        let may_admit = !self.l.is_empty() && has_spare_after_full_grants(w, &self.s);
+        if may_admit || w.naive {
+            self.release_all_elastic(w);
+        }
+        if may_admit {
+            loop {
+                if self.l.is_empty() || !has_spare_after_full_grants(w, &self.s) {
+                    break;
+                }
+                let head = keyed_head(&self.l).unwrap();
+                // Line 19: cores fit beside the cores of S (elastic
+                // released = reclaimable).
+                if self.try_place_cores(head, w) {
+                    self.l.pop_front();
+                    self.admit(head, w);
+                } else {
+                    break;
+                }
             }
         }
         self.cascade(w);
     }
 
-    /// Lines 23–30: grant elastic components in serving order.
+    /// Lines 23–30: grant elastic components in serving order. When
+    /// neither the core placements nor the serving order changed since
+    /// the last cascade, a recompute would re-place bit-identically
+    /// (same cores, same order, same greedy), so it is skipped entirely.
     fn cascade(&mut self, w: &mut World) {
+        if self.cascade_clean && !w.naive {
+            return;
+        }
+        // Release everything before re-placing anything: the greedy
+        // placement of s[i] must see the elastic of every j ≥ i released.
         for &id in &self.s {
+            w.cluster.release_and_clear(&mut self.elastic[id as usize]);
+        }
+        for i in 0..self.s.len() {
+            let id = self.s[i];
             let (res, n) = {
                 let r = &w.states[id as usize].req;
                 (r.elastic_res, r.n_elastic)
             };
             let g = if n > 0 {
-                let (placed, p) = w.cluster.place_up_to_tracked(&res, n);
-                if placed > 0 {
-                    self.elastic.insert(id, p);
-                }
-                placed
+                w.cluster
+                    .place_up_to_into(&res, n, &mut self.elastic[id as usize])
             } else {
                 0
             };
-            w.states[id as usize].grant = g;
+            w.set_grant(id, g);
         }
+        self.cascade_clean = true;
     }
 
     /// Non-preemptive arrival guard (Algorithm 1 line 10): the new head of
-    /// L can start using currently *unused* resources.
-    fn head_fits_in_unused(&self, w: &mut World) -> bool {
-        let Some(&head) = self.l.first() else {
+    /// L can start using currently *unused* resources. Mutation-free.
+    fn head_fits_in_unused(&self, w: &World) -> bool {
+        let Some(head) = keyed_head(&self.l) else {
             return false;
         };
-        let (res, n) = {
-            let r = &w.states[head as usize].req;
-            (r.core_res, r.n_core)
-        };
-        let snap = w.cluster.save();
-        let ok = w.cluster.place_all(&res, n);
-        w.cluster.restore(&snap);
-        ok
+        let r = &w.states[head as usize].req;
+        w.cluster.can_place_all(&r.core_res, r.n_core)
+    }
+
+    fn insert_w_line(&mut self, id: ReqId, w: &World) {
+        use std::cmp::Ordering;
+        let key = w.pending_key(id);
+        let prio = w.states[id as usize].req.priority;
+        let pos = self.w_line.partition_point(|&(p, k, x)| {
+            match p.total_cmp(&prio) {
+                Ordering::Greater => true,
+                Ordering::Less => false,
+                Ordering::Equal => match k.total_cmp(&key) {
+                    Ordering::Less => true,
+                    Ordering::Greater => false,
+                    Ordering::Equal => x <= id,
+                },
+            }
+        });
+        self.w_line.insert(pos, (prio, key, id));
     }
 }
 
 impl Scheduler for FlexibleScheduler {
     fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+        self.ensure_capacity(w);
         // §3.3, lines 2–7: preemptive path.
         if self.preemptive {
             if let Some(&tail) = self.s.last() {
@@ -170,19 +224,13 @@ impl Scheduler for FlexibleScheduler {
                 let new_prio = (w.state(id).req.priority, -w.pending_key(id));
                 if new_prio > tail_prio {
                     // Can its cores be carved out of elastic allocations?
-                    self.release_elastic(w);
+                    self.release_all_elastic(w);
                     if self.try_place_cores(id, w) {
                         self.admit(id, w);
                         self.rebalance(w);
                     } else {
                         // Auxiliary waiting line W, priority over L.
-                        let states = &w.states;
-                        let key = w.pending_key(id);
-                        let prio = states[id as usize].req.priority;
-                        let pos = self.w_line.partition_point(|&x| {
-                            (states[x as usize].req.priority, -w.pending_key(x)) >= (prio, -key)
-                        });
-                        self.w_line.insert(pos, id);
+                        self.insert_w_line(id, w);
                         self.cascade(w);
                     }
                     return;
@@ -190,21 +238,21 @@ impl Scheduler for FlexibleScheduler {
             }
         }
         // Lines 8–11: normal path.
+        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let key = w.pending_key(id);
-        insert_sorted(&mut self.l, id, key, |x| w.pending_key(x));
-        if self.l.first() == Some(&id) && self.head_fits_in_unused(w) {
+        insert_keyed(&mut self.l, key, id);
+        if keyed_head(&self.l) == Some(id) && self.head_fits_in_unused(w) {
             self.rebalance(w);
         }
     }
 
     fn on_departure(&mut self, id: ReqId, w: &mut World) {
+        self.ensure_capacity(w);
         self.s.retain(|&x| x != id);
-        if let Some(p) = self.cores.remove(&id) {
-            w.cluster.release(&p);
-        }
-        if let Some(p) = self.elastic.remove(&id) {
-            w.cluster.release(&p);
-        }
+        // Core + elastic state changed: any future cascade starts fresh.
+        self.cascade_clean = false;
+        w.cluster.release_and_clear(&mut self.cores[id as usize]);
+        w.cluster.release_and_clear(&mut self.elastic[id as usize]);
         // Fast path: nothing is waiting and every serving request is
         // already fully granted → the cascade is a no-op; skip the
         // release/re-place pass entirely.
@@ -220,10 +268,10 @@ impl Scheduler for FlexibleScheduler {
         // Lines 13–15: drain W first (cores-only check, elastic
         // reclaimable → release elastic before trying).
         if !self.w_line.is_empty() {
-            self.release_elastic(w);
-            while let Some(&head) = self.w_line.first() {
+            self.release_all_elastic(w);
+            while let Some(&(_, _, head)) = self.w_line.front() {
                 if self.try_place_cores(head, w) {
-                    self.w_line.remove(0);
+                    self.w_line.pop_front();
                     self.admit(head, w);
                 } else {
                     break;
@@ -255,8 +303,11 @@ impl Scheduler for FlexibleScheduler {
 }
 
 impl FlexibleScheduler {
-    /// Test/diagnostic access to the waiting lines.
-    pub fn waiting(&self) -> (&[ReqId], &[ReqId]) {
-        (&self.l, &self.w_line)
+    /// Test/diagnostic access to the waiting lines (ids in queue order).
+    pub fn waiting(&self) -> (Vec<ReqId>, Vec<ReqId>) {
+        (
+            self.l.iter().map(|&(_, id)| id).collect(),
+            self.w_line.iter().map(|&(_, _, id)| id).collect(),
+        )
     }
 }

@@ -6,50 +6,58 @@
 //! is left after the cascade. This is what blocks request D in Fig. 1.
 //!
 //! All placements (core and granted elastic) are persistent; grants only
-//! grow — top-ups happen in serving order when capacity frees up.
+//! grow — top-ups happen in serving order when capacity frees up. Because
+//! grants are monotone, a request's elastic placement is a single
+//! accumulating [`Placement`] buffer (one (machine, count) batch per
+//! top-up round), stored densely by request id.
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 
-use super::{insert_sorted, Phase, Scheduler, World};
+use super::{insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World};
 use crate::core::ReqId;
 use crate::pool::Placement;
 
 pub struct MalleableScheduler {
     s: Vec<ReqId>,
-    l: Vec<ReqId>,
-    cores: HashMap<ReqId, Placement>,
-    /// Granted elastic placements (possibly several per request — one per
-    /// top-up round).
-    elastic: HashMap<ReqId, Vec<Placement>>,
+    /// Waiting line: (cached policy key, id), ascending.
+    l: VecDeque<(f64, ReqId)>,
+    /// Dense per-request placements (empty = none); buffers reused.
+    cores: Vec<Placement>,
+    /// Granted elastic placements, accumulated across top-up rounds.
+    elastic: Vec<Placement>,
+    /// Simulated time of the last dynamic-policy resort of L.
+    resort_stamp: f64,
 }
 
 impl MalleableScheduler {
     pub fn new() -> Self {
         MalleableScheduler {
             s: Vec::new(),
-            l: Vec::new(),
-            cores: HashMap::new(),
-            elastic: HashMap::new(),
+            l: VecDeque::new(),
+            cores: Vec::new(),
+            elastic: Vec::new(),
+            resort_stamp: f64::NAN,
         }
     }
 
-    fn resort_pending(&mut self, w: &World) {
-        if w.policy.dynamic() && self.l.len() > 1 {
-            let mut keyed: Vec<(f64, ReqId)> =
-                self.l.iter().map(|&id| (w.pending_key(id), id)).collect();
-            keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-            self.l = keyed.into_iter().map(|(_, id)| id).collect();
+    fn ensure_capacity(&mut self, w: &World) {
+        let n = w.states.len();
+        if self.cores.len() < n {
+            self.cores.resize_with(n, Placement::default);
+            self.elastic.resize_with(n, Placement::default);
         }
     }
 
     fn admit(&mut self, id: ReqId, w: &mut World) {
         let key = w.pending_key(id);
         let now = w.now;
-        let st = w.state_mut(id);
-        st.phase = Phase::Running;
-        st.admit_time = now;
-        st.last_accrual = now;
-        st.frozen_key = key;
+        {
+            let st = w.state_mut(id);
+            st.phase = Phase::Running;
+            st.admit_time = now;
+            st.frozen_key = key;
+        }
+        w.note_admitted(id);
         self.s.push(id); // cascade order = admission order
     }
 
@@ -58,54 +66,51 @@ impl MalleableScheduler {
     /// from L while the head's cores fit in the leftover. Loop until
     /// neither applies.
     fn rebalance(&mut self, w: &mut World) {
-        self.resort_pending(w);
+        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         loop {
-            // Top-ups, serving order.
-            for &id in &self.s {
-                let (res, want) = {
-                    let r = &w.states[id as usize].req;
-                    (r.elastic_res, r.n_elastic)
+            // Top-ups, serving order. Grants never shrink, so a fully
+            // granted request is a single compare.
+            for i in 0..self.s.len() {
+                let id = self.s[i];
+                let (res, want, have) = {
+                    let st = &w.states[id as usize];
+                    (st.req.elastic_res, st.req.n_elastic, st.grant)
                 };
-                let have = w.states[id as usize].grant;
                 if have < want {
-                    let (placed, p) = w.cluster.place_up_to_tracked(&res, want - have);
+                    let placed = w.cluster.place_up_to_append(
+                        &res,
+                        want - have,
+                        &mut self.elastic[id as usize],
+                    );
                     if placed > 0 {
-                        self.elastic.entry(id).or_default().push(p);
-                        w.states[id as usize].grant = have + placed;
+                        w.set_grant(id, have + placed);
                     }
                 }
             }
             // Admission: head's cores in the leftover (no reclaim).
-            let Some(&head) = self.l.first() else { break };
+            let Some(head) = keyed_head(&self.l) else { break };
             let (res, n) = {
                 let r = &w.states[head as usize].req;
                 (r.core_res, r.n_core)
             };
-            match w.cluster.place_all_tracked(&res, n) {
-                Some(p) => {
-                    self.cores.insert(head, p);
-                    self.l.remove(0);
-                    self.admit(head, w);
-                    // Loop: the new member's elastic tops up next round.
-                }
-                None => break,
+            if w.cluster.place_all_into(&res, n, &mut self.cores[head as usize]) {
+                self.l.pop_front();
+                self.admit(head, w);
+                // Loop: the new member's elastic tops up next round.
+            } else {
+                break;
             }
         }
     }
 
     /// Arrival guard: only rebalance when the new head could start now.
-    fn head_fits_in_unused(&self, w: &mut World) -> bool {
-        let Some(&head) = self.l.first() else {
+    /// Mutation-free feasibility check.
+    fn head_fits_in_unused(&self, w: &World) -> bool {
+        let Some(head) = keyed_head(&self.l) else {
             return false;
         };
-        let (res, n) = {
-            let r = &w.states[head as usize].req;
-            (r.core_res, r.n_core)
-        };
-        let snap = w.cluster.save();
-        let ok = w.cluster.place_all(&res, n);
-        w.cluster.restore(&snap);
-        ok
+        let r = &w.states[head as usize].req;
+        w.cluster.can_place_all(&r.core_res, r.n_core)
     }
 }
 
@@ -117,23 +122,20 @@ impl Default for MalleableScheduler {
 
 impl Scheduler for MalleableScheduler {
     fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+        self.ensure_capacity(w);
+        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let key = w.pending_key(id);
-        insert_sorted(&mut self.l, id, key, |x| w.pending_key(x));
-        if self.l.first() == Some(&id) && self.head_fits_in_unused(w) {
+        insert_keyed(&mut self.l, key, id);
+        if keyed_head(&self.l) == Some(id) && self.head_fits_in_unused(w) {
             self.rebalance(w);
         }
     }
 
     fn on_departure(&mut self, id: ReqId, w: &mut World) {
+        self.ensure_capacity(w);
         self.s.retain(|&x| x != id);
-        if let Some(p) = self.cores.remove(&id) {
-            w.cluster.release(&p);
-        }
-        if let Some(ps) = self.elastic.remove(&id) {
-            for p in ps {
-                w.cluster.release(&p);
-            }
-        }
+        w.cluster.release_and_clear(&mut self.cores[id as usize]);
+        w.cluster.release_and_clear(&mut self.elastic[id as usize]);
         self.rebalance(w);
     }
 

@@ -6,6 +6,12 @@
 //! arrival/departure the assignment of components to machines is
 //! recomputed against the [`crate::pool::Cluster`]; the physical
 //! fulfilment (containers, in Zoe's case) is a separate concern.
+//!
+//! Work accrual is **lazy** (see `sim::engine`): a request's `done_work`
+//! is only folded forward when its progress rate changes (via
+//! [`World::set_grant`]) or when it departs. Schedulers report which
+//! requests' rates changed through [`World::changed`], so the engine
+//! refreshes departure predictions in O(|changed|), not O(|serving set|).
 
 mod flexible;
 mod malleable;
@@ -14,6 +20,9 @@ mod rigid;
 pub use flexible::FlexibleScheduler;
 pub use malleable::MalleableScheduler;
 pub use rigid::RigidScheduler;
+
+use std::cmp::Ordering;
+use std::collections::VecDeque;
 
 use crate::core::{ReqId, Request};
 use crate::policy::Policy;
@@ -41,10 +50,15 @@ pub struct ReqState {
     pub grant: u32,
     /// Admission time (start of service).
     pub admit_time: f64,
-    /// Completed work in component-seconds.
+    /// Completed work in component-seconds, accrued lazily: valid as of
+    /// `last_accrual`; work since then accrues at `cur_rate`.
     pub done_work: f64,
-    /// Last time `done_work` was accrued.
+    /// Last time `done_work` was folded forward.
     pub last_accrual: f64,
+    /// Progress rate (component-seconds per second) in effect since
+    /// `last_accrual`; 0 unless Running. Kept in sync with `grant` by
+    /// [`World::set_grant`] / [`World::note_admitted`].
+    pub cur_rate: f64,
     /// Policy key frozen at admission (orders the serving set S).
     pub frozen_key: f64,
     /// Bumped whenever the predicted departure changes (lazy heap deletion).
@@ -62,13 +76,27 @@ impl ReqState {
             admit_time: f64::NAN,
             done_work: 0.0,
             last_accrual: 0.0,
+            cur_rate: 0.0,
             frozen_key: 0.0,
             epoch: 0,
             predicted_finish: f64::INFINITY,
         }
     }
 
-    /// Remaining work in component-seconds.
+    /// Fold work done at `cur_rate` since `last_accrual` into `done_work`
+    /// and move the accrual point to `now`.
+    #[inline]
+    pub fn accrue(&mut self, now: f64) {
+        debug_assert!(now >= self.last_accrual - 1e-9, "accrual going backwards");
+        if now > self.last_accrual {
+            if self.cur_rate > 0.0 {
+                self.done_work += self.cur_rate * (now - self.last_accrual);
+            }
+            self.last_accrual = now;
+        }
+    }
+
+    /// Remaining work in component-seconds (as of `last_accrual`).
     pub fn remaining_work(&self) -> f64 {
         (self.req.work() - self.done_work).max(0.0)
     }
@@ -100,6 +128,14 @@ pub struct World {
     pub cluster: Cluster,
     pub policy: Policy,
     pub now: f64,
+    /// Requests whose progress rate changed since the engine last
+    /// refreshed departure predictions (newly admitted or re-granted).
+    /// May contain duplicates; the engine's refresh is idempotent.
+    pub changed: Vec<ReqId>,
+    /// Reference mode: disable the schedulers' incremental shortcuts so
+    /// every rebalance releases and re-places everything (the seed
+    /// algorithm, kept for differential testing).
+    pub naive: bool,
 }
 
 impl World {
@@ -110,6 +146,8 @@ impl World {
             cluster,
             policy,
             now: 0.0,
+            changed: Vec::new(),
+            naive: false,
         }
     }
 
@@ -119,6 +157,35 @@ impl World {
 
     pub fn state_mut(&mut self, id: ReqId) -> &mut ReqState {
         &mut self.states[id as usize]
+    }
+
+    /// Set the elastic grant of a request: accrues work done at the old
+    /// rate first, then switches the rate and records the change for the
+    /// engine's departure refresh.
+    pub fn set_grant(&mut self, id: ReqId, g: u32) {
+        let now = self.now;
+        let st = &mut self.states[id as usize];
+        if st.grant != g {
+            st.accrue(now);
+            st.grant = g;
+            st.cur_rate = if st.phase == Phase::Running {
+                st.req.rate(g)
+            } else {
+                0.0
+            };
+            self.changed.push(id);
+        }
+    }
+
+    /// Record a newly admitted request: start accruing at its current
+    /// grant from now, and make sure the engine schedules its departure.
+    pub fn note_admitted(&mut self, id: ReqId) {
+        let now = self.now;
+        let st = &mut self.states[id as usize];
+        debug_assert_eq!(st.phase, Phase::Running);
+        st.last_accrual = now;
+        st.cur_rate = st.req.rate(st.grant);
+        self.changed.push(id);
     }
 
     /// Policy key for a *pending* request at the current time.
@@ -202,9 +269,49 @@ pub(crate) fn has_spare_after_full_grants(w: &World, s: &[ReqId]) -> bool {
     demand.cpu < t.cpu - 1e-9 || demand.ram_mb < t.ram_mb - 1e-9
 }
 
-/// Insert `id` into the ordered vector `v` keeping ascending `key` order
-/// (stable: equal keys go after existing ones).
-pub(crate) fn insert_sorted(v: &mut Vec<ReqId>, id: ReqId, key: f64, keys: impl Fn(ReqId) -> f64) {
-    let pos = v.partition_point(|&x| keys(x) <= key);
-    v.insert(pos, id);
+/// A waiting-line entry: the policy key, cached at insertion time (and
+/// refreshed wholesale by dynamic-policy resorts), paired with the id.
+/// Caching the key makes the binary-search insert O(log n) comparisons of
+/// stored floats instead of O(log n) `pending_key` recomputations.
+pub(crate) type KeyedEntry = (f64, ReqId);
+
+/// Insert `id` with `key` into the deque kept sorted ascending by
+/// `(key, id)` (canonical order; ids break ties deterministically).
+pub(crate) fn insert_keyed(q: &mut VecDeque<KeyedEntry>, key: f64, id: ReqId) {
+    let pos = q.partition_point(|&(k, x)| match k.total_cmp(&key) {
+        Ordering::Less => true,
+        Ordering::Equal => x <= id,
+        Ordering::Greater => false,
+    });
+    q.insert(pos, (key, id));
+}
+
+/// Recompute cached keys at the current time and restore canonical order —
+/// needed for time-varying disciplines (HRRN) before any head decision.
+/// `stamp` dedups the work: keys are a function of `w.now` only, so a
+/// second resort at the same instant (arrival → rebalance) is skipped;
+/// inserts/pops between them preserve the canonical order.
+pub(crate) fn resort_keyed(q: &mut VecDeque<KeyedEntry>, w: &World, stamp: &mut f64) {
+    if !w.policy.dynamic() || q.is_empty() {
+        return;
+    }
+    if *stamp == w.now {
+        return;
+    }
+    *stamp = w.now;
+    // Refresh even a lone entry: the next insert compares against its
+    // cached key, which must be current, not frozen at its insert time.
+    for e in q.iter_mut() {
+        e.0 = w.pending_key(e.1);
+    }
+    if q.len() > 1 {
+        q.make_contiguous()
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    }
+}
+
+/// Head id of a keyed deque.
+#[inline]
+pub(crate) fn keyed_head(q: &VecDeque<KeyedEntry>) -> Option<ReqId> {
+    q.front().map(|&(_, id)| id)
 }

@@ -6,83 +6,93 @@
 //!
 //! Unlike the flexible/malleable schedulers (which recompute their virtual
 //! assignment per event), the rigid baseline never changes an allocation,
-//! so it tracks persistent per-request placements and releases them
-//! exactly on departure — as a real rigid system would.
+//! so it tracks persistent per-request placements (dense by request id,
+//! reusable buffers) and releases them exactly on departure — as a real
+//! rigid system would.
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 
-use super::{insert_sorted, Phase, Scheduler, World};
+use super::{insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World};
 use crate::core::ReqId;
 use crate::pool::Placement;
 
 pub struct RigidScheduler {
     s: Vec<ReqId>,
-    l: Vec<ReqId>,
-    placements: HashMap<ReqId, Vec<Placement>>,
+    /// Waiting line: (cached policy key, id), ascending.
+    l: VecDeque<(f64, ReqId)>,
+    /// Dense per-request placements (empty = none); core and elastic
+    /// components have different per-component sizes, hence two buffers.
+    cores: Vec<Placement>,
+    elastic: Vec<Placement>,
+    /// Simulated time of the last dynamic-policy resort of L.
+    resort_stamp: f64,
 }
 
 impl RigidScheduler {
     pub fn new() -> Self {
         RigidScheduler {
             s: Vec::new(),
-            l: Vec::new(),
-            placements: HashMap::new(),
+            l: VecDeque::new(),
+            cores: Vec::new(),
+            elastic: Vec::new(),
+            resort_stamp: f64::NAN,
         }
     }
 
-    fn resort_pending(&mut self, w: &World) {
-        if w.policy.dynamic() && self.l.len() > 1 {
-            let mut keyed: Vec<(f64, ReqId)> =
-                self.l.iter().map(|&id| (w.pending_key(id), id)).collect();
-            keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-            self.l = keyed.into_iter().map(|(_, id)| id).collect();
+    fn ensure_capacity(&mut self, w: &World) {
+        let n = w.states.len();
+        if self.cores.len() < n {
+            self.cores.resize_with(n, Placement::default);
+            self.elastic.resize_with(n, Placement::default);
         }
     }
 
     /// Head-of-line admission: start the head of L while its full demand
     /// fits in the current free capacity. No backfill.
     fn try_admit(&mut self, w: &mut World) {
-        self.resort_pending(w);
-        while let Some(&head) = self.l.first() {
-            let Some(placed) = Self::place_full(w, head) else {
+        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
+        while let Some(head) = keyed_head(&self.l) {
+            if !self.place_full(w, head) {
                 break;
-            };
-            self.placements.insert(head, placed);
-            self.l.remove(0);
+            }
+            self.l.pop_front();
             let key = w.pending_key(head);
             let now = w.now;
-            let st = w.state_mut(head);
-            st.phase = Phase::Running;
-            st.admit_time = now;
-            st.last_accrual = now;
-            st.frozen_key = key;
-            st.grant = st.req.n_elastic; // full allocation, always
+            {
+                let st = w.state_mut(head);
+                st.phase = Phase::Running;
+                st.admit_time = now;
+                st.frozen_key = key;
+            }
+            let full = w.state(head).req.n_elastic;
+            w.set_grant(head, full); // full allocation, always
+            w.note_admitted(head);
             self.s.push(head);
         }
     }
 
-    /// Place the complete demand of `id` — all cores and all elastic
-    /// components — all-or-nothing, returning the tracked placements.
-    fn place_full(w: &mut World, id: ReqId) -> Option<Vec<Placement>> {
+    /// Place the complete demand of `head` — all cores and all elastic
+    /// components — all-or-nothing, into the reusable buffers.
+    fn place_full(&mut self, w: &mut World, head: ReqId) -> bool {
         let (cres, cn, eres, en) = {
-            let r = &w.states[id as usize].req;
+            let r = &w.states[head as usize].req;
             (r.core_res, r.n_core, r.elastic_res, r.n_elastic)
         };
-        let mut placed = Vec::with_capacity(2);
-        match w.cluster.place_all_tracked(&cres, cn) {
-            Some(p) => placed.push(p),
-            None => return None,
+        if !w
+            .cluster
+            .place_all_into(&cres, cn, &mut self.cores[head as usize])
+        {
+            return false;
         }
-        if en > 0 {
-            match w.cluster.place_all_tracked(&eres, en) {
-                Some(p) => placed.push(p),
-                None => {
-                    w.cluster.release(&placed[0]);
-                    return None;
-                }
-            }
+        if en > 0
+            && !w
+                .cluster
+                .place_all_into(&eres, en, &mut self.elastic[head as usize])
+        {
+            w.cluster.release_and_clear(&mut self.cores[head as usize]);
+            return false;
         }
-        Some(placed)
+        true
     }
 }
 
@@ -94,20 +104,20 @@ impl Default for RigidScheduler {
 
 impl Scheduler for RigidScheduler {
     fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+        self.ensure_capacity(w);
+        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let key = w.pending_key(id);
-        insert_sorted(&mut self.l, id, key, |x| w.pending_key(x));
-        if self.l.first() == Some(&id) {
+        insert_keyed(&mut self.l, key, id);
+        if keyed_head(&self.l) == Some(id) {
             self.try_admit(w);
         }
     }
 
     fn on_departure(&mut self, id: ReqId, w: &mut World) {
+        self.ensure_capacity(w);
         self.s.retain(|&x| x != id);
-        if let Some(placed) = self.placements.remove(&id) {
-            for p in &placed {
-                w.cluster.release(p);
-            }
-        }
+        w.cluster.release_and_clear(&mut self.cores[id as usize]);
+        w.cluster.release_and_clear(&mut self.elastic[id as usize]);
         self.try_admit(w);
     }
 

@@ -2,6 +2,29 @@
 //! departures. Departure events carry an epoch; whenever a grant change
 //! alters a request's predicted finish time, its epoch is bumped and a
 //! fresh event pushed — stale events are skipped on pop.
+//!
+//! # Per-event cost: O(changed), not O(|serving set|)
+//!
+//! The optimized engine ([`EngineMode::Optimized`], the default) pays per
+//! event only for what the event changed:
+//!
+//! * **Lazy work accrual** — there is no per-event accrual sweep over the
+//!   serving set. Each request stores `(last_accrual, cur_rate)`; its
+//!   `done_work` is folded forward only when its rate changes (grant
+//!   change, via `World::set_grant`) or when it departs. Between rate
+//!   changes the remaining work is implied, not materialized.
+//! * **Changed-set departure refresh** — the schedulers record every
+//!   request whose rate changed in `World::changed`; only those get their
+//!   predicted-finish recomputed and a fresh heap event. A request whose
+//!   grant did not change keeps a prediction that is *exactly* (not just
+//!   approximately) still correct, because its rate is unchanged.
+//!
+//! The naive reference path ([`EngineMode::Naive`]) keeps the seed
+//! algorithm — eager accrual over the whole serving set on every event
+//! plus a full refresh — and also flips `World::naive` so the schedulers
+//! disable their incremental shortcuts. `rust/tests/sim_properties.rs`
+//! runs both engines differentially across seeds, schedulers and
+//! policies and asserts the sample sets match.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -34,12 +57,11 @@ impl Eq for Ev {}
 
 impl Ord for Ev {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap via reversed compare: earliest time first, then FIFO seq.
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap()
-            .then(other.seq.cmp(&self.seq))
+        // Min-heap via reversed compare: earliest time first, then FIFO
+        // seq. `total_cmp` (not `partial_cmp().unwrap()`): the ordering is
+        // total even for NaN, so a rogue payload can never panic the heap
+        // mid-simulation — NaNs are rejected at push time instead.
+        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
     }
 }
 impl PartialOrd for Ev {
@@ -51,6 +73,18 @@ impl PartialOrd for Ev {
 /// Tolerance for "the predicted finish changed" (re-push threshold).
 const FINISH_EPS: f64 = 1e-9;
 
+/// Which event-loop implementation to run (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Lazy accrual + changed-set refresh: per-event cost proportional to
+    /// what changed. The default.
+    Optimized,
+    /// The seed algorithm: eager accrual and full refresh over the whole
+    /// serving set on every event. Kept as the reference for the
+    /// differential property tests and as the bench baseline.
+    Naive,
+}
+
 /// A complete simulation run: requests + cluster + policy + scheduler.
 pub struct Simulation {
     world: World,
@@ -58,13 +92,32 @@ pub struct Simulation {
     heap: BinaryHeap<Ev>,
     seq: u64,
     metrics: MetricsCollector,
+    mode: EngineMode,
+    /// Reused id buffer for the naive full refresh.
+    scratch: Vec<ReqId>,
 }
 
 impl Simulation {
     pub fn new(requests: Vec<Request>, cluster: Cluster, policy: Policy, kind: SchedKind) -> Self {
+        Self::with_mode(requests, cluster, policy, kind, EngineMode::Optimized)
+    }
+
+    pub fn with_mode(
+        requests: Vec<Request>,
+        cluster: Cluster,
+        policy: Policy,
+        kind: SchedKind,
+        mode: EngineMode,
+    ) -> Self {
         let mut heap = BinaryHeap::with_capacity(requests.len() * 2);
         let mut seq = 0u64;
         for r in &requests {
+            assert!(
+                r.arrival.is_finite(),
+                "event time must be finite (arrival of request {} is {})",
+                r.id,
+                r.arrival
+            );
             heap.push(Ev {
                 t: r.arrival,
                 seq,
@@ -73,52 +126,96 @@ impl Simulation {
             seq += 1;
         }
         let metrics = MetricsCollector::new();
+        let mut world = World::new(requests, cluster, policy);
+        world.naive = mode == EngineMode::Naive;
         Simulation {
-            world: World::new(requests, cluster, policy),
+            world,
             sched: kind.build(),
             heap,
             seq,
             metrics,
+            mode,
+            scratch: Vec::new(),
         }
     }
 
-    /// Advance simulated time to `t`, accruing work for every running
-    /// request.
+    /// Push a departure event, rejecting non-finite times up front: the
+    /// heap's ordering is total, but a NaN prediction would silently
+    /// corrupt the schedule, so it is an invariant violation here.
+    fn push_departure(&mut self, t: f64, id: ReqId, epoch: u32) {
+        assert!(t.is_finite(), "event time must be finite (got {t} for request {id})");
+        self.heap.push(Ev {
+            t,
+            seq: self.seq,
+            kind: EvKind::Departure(id, epoch),
+        });
+        self.seq += 1;
+    }
+
+    /// Advance simulated time to `t`. In naive mode this eagerly accrues
+    /// work for every running request; in optimized mode accrual is lazy
+    /// (per-request, on rate change or departure) and this is O(1).
     fn advance_to(&mut self, t: f64) {
         debug_assert!(t >= self.world.now - 1e-9, "time must not go backwards");
-        for &id in self.sched.serving() {
-            let st = &mut self.world.states[id as usize];
-            let dt = t - st.last_accrual;
-            if dt > 0.0 {
-                st.done_work += st.req.rate(st.grant) * dt;
-                st.last_accrual = t;
+        if self.mode == EngineMode::Naive {
+            for &id in self.sched.serving() {
+                let st = &mut self.world.states[id as usize];
+                let dt = t - st.last_accrual;
+                if dt > 0.0 {
+                    st.done_work += st.req.rate(st.grant) * dt;
+                    st.last_accrual = t;
+                }
             }
         }
         self.world.now = t;
     }
 
-    /// After any scheduling action: refresh predicted departures of all
-    /// running requests whose finish time changed.
+    /// After any scheduling action: refresh the predicted departures of
+    /// the requests whose progress rate changed (all serving requests in
+    /// naive mode).
     fn refresh_departures(&mut self) {
         let now = self.world.now;
-        for &id in self.sched.serving() {
+        if self.mode == EngineMode::Naive {
+            self.world.changed.clear();
+            self.scratch.clear();
+            self.scratch.extend_from_slice(self.sched.serving());
+            let ids = std::mem::take(&mut self.scratch);
+            for &id in &ids {
+                self.refresh_one(id, now);
+            }
+            self.scratch = ids;
+        } else {
+            let mut changed = std::mem::take(&mut self.world.changed);
+            for &id in &changed {
+                self.refresh_one(id, now);
+            }
+            changed.clear();
+            self.world.changed = changed;
+        }
+    }
+
+    fn refresh_one(&mut self, id: ReqId, now: f64) {
+        let (finish, epoch) = {
             let st = &mut self.world.states[id as usize];
-            debug_assert_eq!(st.phase, Phase::Running);
+            if st.phase != Phase::Running {
+                // A request can enter the changed set and then depart (or
+                // be re-queued) within the same scheduling action.
+                return;
+            }
+            // Lazy accrual invariant: anything in the changed set was
+            // accrued to `now` when its rate changed.
+            debug_assert!(st.last_accrual >= now - 1e-9);
             let rate = st.req.rate(st.grant);
             debug_assert!(rate > 0.0);
             let finish = now + st.remaining_work() / rate;
-            if (finish - st.predicted_finish).abs() > FINISH_EPS {
-                st.epoch += 1;
-                st.predicted_finish = finish;
-                let ev = Ev {
-                    t: finish,
-                    seq: self.seq,
-                    kind: EvKind::Departure(id, st.epoch),
-                };
-                self.seq += 1;
-                self.heap.push(ev);
+            if (finish - st.predicted_finish).abs() <= FINISH_EPS {
+                return;
             }
-        }
+            st.epoch += 1;
+            st.predicted_finish = finish;
+            (finish, st.epoch)
+        };
+        self.push_departure(finish, id, epoch);
     }
 
     fn sample_metrics(&mut self) {
@@ -163,6 +260,9 @@ impl Simulation {
                     self.advance_to(ev.t);
                     let (arrival, admit, runtime, class) = {
                         let st = self.world.state_mut(id);
+                        // Fold the final accrual segment (no-op in naive
+                        // mode, where advance_to already did it).
+                        st.accrue(ev.t);
                         debug_assert!(
                             st.remaining_work() < 1e-6 * st.req.work().max(1.0),
                             "departing request must have completed its work \
@@ -172,6 +272,7 @@ impl Simulation {
                         );
                         st.phase = Phase::Done;
                         st.grant = 0;
+                        st.cur_rate = 0.0;
                         (st.req.arrival, st.admit_time, st.req.runtime, st.req.class)
                     };
                     let now = self.world.now;
@@ -207,6 +308,18 @@ pub fn simulate(
     kind: SchedKind,
 ) -> SimResult {
     Simulation::new(requests, cluster, policy, kind).run()
+}
+
+/// One-shot runner with an explicit engine mode (differential testing,
+/// bench baselines).
+pub fn simulate_with_mode(
+    requests: Vec<Request>,
+    cluster: Cluster,
+    policy: Policy,
+    kind: SchedKind,
+    mode: EngineMode,
+) -> SimResult {
+    Simulation::with_mode(requests, cluster, policy, kind, mode).run()
 }
 
 /// Multi-seed runner over a workload spec: runs `seeds` independent
@@ -272,6 +385,25 @@ mod tests {
     }
 
     #[test]
+    fn fig1_means_identical_in_naive_mode() {
+        for (kind, want) in [
+            (SchedKind::Rigid, 25.0),
+            (SchedKind::Malleable, 20.0),
+            (SchedKind::Flexible, 19.25),
+        ] {
+            let res = simulate_with_mode(
+                fig1_requests(),
+                Cluster::units(10),
+                Policy::FIFO,
+                kind,
+                EngineMode::Naive,
+            );
+            let m = res.turnaround.mean();
+            assert!((m - want).abs() < 1e-6, "{kind:?} naive mean = {m}");
+        }
+    }
+
+    #[test]
     fn single_request_runs_at_nominal_time() {
         for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
             let reqs = vec![unit_request(0, 5.0, 42.0, 2, 3)];
@@ -331,5 +463,27 @@ mod tests {
         assert_eq!(res.completed, 4);
         assert!(res.events >= 8); // 4 arrivals + 4 departures
         assert_eq!(res.unfinished, 0);
+    }
+
+    #[test]
+    fn event_ordering_is_total_and_time_then_seq() {
+        let a = Ev { t: 1.0, seq: 0, kind: EvKind::Arrival(0) };
+        let b = Ev { t: 2.0, seq: 1, kind: EvKind::Arrival(1) };
+        let c = Ev { t: 1.0, seq: 2, kind: EvKind::Arrival(2) };
+        // Reversed compare: earlier time is "greater" (pops first).
+        assert!(a > b);
+        assert!(a > c, "FIFO tie-break: lower seq pops first");
+        // total_cmp keeps even pathological values ordered without panics.
+        let n = Ev { t: f64::NAN, seq: 3, kind: EvKind::Arrival(3) };
+        let _ = a.cmp(&n);
+        let _ = n.cmp(&n);
+    }
+
+    #[test]
+    #[should_panic(expected = "event time must be finite")]
+    fn nan_arrival_rejected_at_push() {
+        let mut r = unit_request(0, 0.0, 10.0, 1, 0);
+        r.arrival = f64::NAN;
+        let _ = Simulation::new(vec![r], Cluster::units(4), Policy::FIFO, SchedKind::Rigid);
     }
 }

@@ -15,9 +15,10 @@ use zoe::core::{Request, RequestBuilder, Resources};
 use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
-use zoe::sim::simulate;
+use zoe::sim::{simulate, simulate_with_mode, EngineMode, SimResult};
 use zoe::util::check::forall;
 use zoe::util::rng::Rng;
+use zoe::util::stats::Samples;
 
 /// Random workload (bounded so every request is schedulable on the
 /// `units`-sized cluster).
@@ -183,6 +184,104 @@ fn interactive_queuing_improves_with_preemption() {
             q_pr <= q_np + 1e-6,
             "preemption worsened interactive queuing: {q_pr} > {q_np}"
         );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Differential: the O(changed)-per-event engine against the naive reference
+// ---------------------------------------------------------------------------
+
+/// Compare two sample sets as multisets (completion order may differ by
+/// floating-point ulps between engines, so sort first). Tolerance covers
+/// the regrouping of work-accrual sums: lazy accrual folds one product per
+/// rate segment where the naive path sums one product per event.
+fn assert_samples_match(a: &Samples, b: &Samples, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: sample counts differ");
+    let mut xa = a.values().to_vec();
+    let mut xb = b.values().to_vec();
+    xa.sort_by(|p, q| p.total_cmp(q));
+    xb.sort_by(|p, q| p.total_cmp(q));
+    for (x, y) in xa.iter().zip(&xb) {
+        let tol = 1e-6 * (1.0 + x.abs().max(y.abs()));
+        assert!((x - y).abs() <= tol, "{what}: optimized {x} vs naive {y}");
+    }
+}
+
+fn assert_results_match(opt: &SimResult, naive: &SimResult, label: &str) {
+    assert_eq!(opt.completed, naive.completed, "{label}: completed");
+    assert_eq!(opt.unfinished, naive.unfinished, "{label}: unfinished");
+    assert_samples_match(&opt.turnaround, &naive.turnaround, &format!("{label} turnaround"));
+    assert_samples_match(&opt.queuing, &naive.queuing, &format!("{label} queuing"));
+    assert_samples_match(&opt.slowdown, &naive.slowdown, &format!("{label} slowdown"));
+}
+
+const ALL_KINDS: [SchedKind; 4] = [
+    SchedKind::Rigid,
+    SchedKind::Malleable,
+    SchedKind::Flexible,
+    SchedKind::FlexiblePreemptive,
+];
+
+/// The headline differential: 20 seeds × all four scheduler kinds on the
+/// paper's 2-D workload and cluster — optimized and naive engines must
+/// produce identical turnaround/queuing/slowdown sample sets.
+#[test]
+fn optimized_engine_matches_naive_reference_paper_workload() {
+    let spec = zoe::workload::WorkloadSpec::paper();
+    for seed in 1..=20u64 {
+        let reqs = spec.generate(120, seed);
+        for kind in ALL_KINDS {
+            for pol in [Policy::FIFO, Policy::sjf()] {
+                let opt = simulate_with_mode(
+                    reqs.clone(),
+                    Cluster::paper_sim(),
+                    pol,
+                    kind,
+                    EngineMode::Optimized,
+                );
+                let naive = simulate_with_mode(
+                    reqs.clone(),
+                    Cluster::paper_sim(),
+                    pol,
+                    kind,
+                    EngineMode::Naive,
+                );
+                assert_results_match(
+                    &opt,
+                    &naive,
+                    &format!("paper seed={seed} {kind:?} {}", pol.label()),
+                );
+            }
+        }
+    }
+}
+
+/// The same differential on dense unit-cluster workloads (heavy
+/// contention, many grant changes per event) across every policy family.
+#[test]
+fn optimized_engine_matches_naive_reference_unit_workloads() {
+    forall(20, 0xD1FF, |rng| {
+        let n = 40 + rng.below(60) as usize;
+        let units = 8 + rng.below(16) as u32;
+        let reqs = random_requests(rng, n, units);
+        let pol = policies()[rng.below(6) as usize];
+        for kind in ALL_KINDS {
+            let opt = simulate_with_mode(
+                reqs.clone(),
+                Cluster::units(units),
+                pol,
+                kind,
+                EngineMode::Optimized,
+            );
+            let naive = simulate_with_mode(
+                reqs.clone(),
+                Cluster::units(units),
+                pol,
+                kind,
+                EngineMode::Naive,
+            );
+            assert_results_match(&opt, &naive, &format!("units {kind:?} {}", pol.label()));
+        }
     });
 }
 

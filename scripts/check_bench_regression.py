@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_sim_throughput.json against the committed baseline.
+
+Usage: check_bench_regression.py BASELINE NEW [--threshold 0.20]
+
+Fails (exit 1) when any (sched, mode, apps) point in NEW is more than
+THRESHOLD slower (events/s) than the same point in BASELINE. Points
+missing from either file are reported but not fatal (the sweep is
+environment-capped via ZOE_BENCH_SWEEP_MAX). A baseline marked
+"provisional": true records hardware-dependent numbers that were never
+measured on CI hardware; in that case the script only prints the fresh
+numbers and succeeds, so the first CI run on real hardware can promote
+the fresh file to the new baseline.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def key(point):
+    return (point["sched"], point.get("mode", "optimized"), int(point["apps"]))
+
+
+def main():
+    argv = sys.argv[1:]
+    args, threshold = [], 0.20
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--threshold":
+            i += 1
+            threshold = float(argv[i])
+        elif a.startswith("--threshold="):
+            threshold = float(a.split("=", 1)[1])
+        else:
+            args.append(a)
+        i += 1
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    baseline, new = load(args[0]), load(args[1])
+
+    new_points = {key(p): p for p in new.get("results", [])}
+    print(f"fresh bench points: {len(new_points)}")
+    for k, p in sorted(new_points.items()):
+        print(f"  {k[0]:<10} {k[1]:<9} apps={k[2]:<7} {p['events_per_s']:>12.0f} events/s")
+
+    if baseline.get("provisional"):
+        print("baseline is provisional (no measured numbers committed); "
+              "recording only — promote the fresh file to the baseline.")
+        return 0
+
+    base_points = {key(p): p for p in baseline.get("results", [])}
+    failures = []
+    for k, bp in sorted(base_points.items()):
+        np_ = new_points.get(k)
+        if np_ is None:
+            print(f"  NOTE missing point in fresh run: {k}")
+            continue
+        old, cur = bp["events_per_s"], np_["events_per_s"]
+        if old <= 0:
+            continue
+        ratio = cur / old
+        status = "ok" if ratio >= 1.0 - threshold else "REGRESSION"
+        print(f"  {k[0]:<10} {k[1]:<9} apps={k[2]:<7} {old:>12.0f} -> {cur:>12.0f} "
+              f"({ratio:5.2f}x) {status}")
+        if ratio < 1.0 - threshold:
+            failures.append((k, old, cur))
+
+    if failures:
+        print(f"FAIL: {len(failures)} point(s) regressed more than {threshold:.0%}")
+        return 1
+    print("throughput within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
