@@ -7,6 +7,10 @@
 //! 2. **Load sweep** — vary offered load via the arrival-scale knob.
 //!    Flexible's advantage should widen as the system saturates (queuing
 //!    dominates) and vanish when the cluster is empty.
+//! 3. **Admission aggressiveness** — flexible vs malleable per policy.
+//!
+//! Every sweep point runs both schedulers over all seeds as one parallel
+//! [`ExperimentPlan`] grid (`--threads` caps the workers).
 //!
 //! ```sh
 //! cargo run --release --example ablation -- --apps 8000 --seeds 3
@@ -14,14 +18,34 @@
 
 use zoe::policy::Policy;
 use zoe::sched::SchedKind;
-use zoe::sim::run_many;
+use zoe::sim::{ExperimentPlan, SimResult};
 use zoe::util::cli::Args;
 use zoe::workload::WorkloadSpec;
+
+/// Run `(rigid-ish, flexible-ish)` as one grid and return both merged.
+fn pair(
+    spec: &WorkloadSpec,
+    apps: u32,
+    seeds: u64,
+    threads: usize,
+    policy: Policy,
+    a: SchedKind,
+    b: SchedKind,
+) -> (SimResult, SimResult) {
+    let result = ExperimentPlan::new(spec.clone(), apps)
+        .seeds(1..seeds + 1)
+        .config(policy, a)
+        .config(policy, b)
+        .threads(threads)
+        .run();
+    (result.runs[0].merged(), result.runs[1].merged())
+}
 
 fn main() {
     let args = Args::from_env();
     let apps = args.u64_or("apps", 8000) as u32;
     let seeds = args.u64_or("seeds", 3);
+    let threads = args.usize_or("threads", 0);
 
     println!("=== ablation 1: elastic fraction sweep (FIFO, {apps} apps × {seeds} seeds) ===");
     println!(
@@ -31,8 +55,15 @@ fn main() {
     for frac in [0.0, 0.25, 0.5, 0.8, 1.0] {
         let mut spec = WorkloadSpec::paper_batch_only();
         spec.batch_elastic_frac = frac;
-        let mut rigid = run_many(&spec, apps, 1..seeds + 1, Policy::FIFO, SchedKind::Rigid);
-        let mut flex = run_many(&spec, apps, 1..seeds + 1, Policy::FIFO, SchedKind::Flexible);
+        let (mut rigid, mut flex) = pair(
+            &spec,
+            apps,
+            seeds,
+            threads,
+            Policy::FIFO,
+            SchedKind::Rigid,
+            SchedKind::Flexible,
+        );
         let (r, f) = (rigid.turnaround.median(), flex.turnaround.median());
         println!(
             "  {:>8.0}% {:>15.1}s {:>15.1}s {:>8.2} {:>11.1}% {:>11.1}%",
@@ -54,8 +85,15 @@ fn main() {
     for scale in [0.8, 1.0, 1.5, 2.5, 4.0] {
         let mut spec = WorkloadSpec::paper_batch_only();
         spec.arrival_scale = scale;
-        let mut rigid = run_many(&spec, apps, 1..seeds + 1, Policy::FIFO, SchedKind::Rigid);
-        let mut flex = run_many(&spec, apps, 1..seeds + 1, Policy::FIFO, SchedKind::Flexible);
+        let (mut rigid, mut flex) = pair(
+            &spec,
+            apps,
+            seeds,
+            threads,
+            Policy::FIFO,
+            SchedKind::Rigid,
+            SchedKind::Flexible,
+        );
         let (r, f) = (rigid.turnaround.median(), flex.turnaround.median());
         println!(
             "  {:>9.1} {:>15.1}s {:>15.1}s {:>8.2}",
@@ -76,8 +114,15 @@ fn main() {
         ("SRPT", Policy::srpt()),
     ] {
         let spec = WorkloadSpec::paper_batch_only();
-        let mut mal = run_many(&spec, apps, 1..seeds + 1, policy, SchedKind::Malleable);
-        let mut flex = run_many(&spec, apps, 1..seeds + 1, policy, SchedKind::Flexible);
+        let (mut mal, mut flex) = pair(
+            &spec,
+            apps,
+            seeds,
+            threads,
+            policy,
+            SchedKind::Malleable,
+            SchedKind::Flexible,
+        );
         println!(
             "  {name:<5} malleable med {:>12.1}s mean {:>12.1}s | flexible med {:>12.1}s mean {:>12.1}s",
             mal.turnaround.median(),

@@ -5,10 +5,13 @@
 //! Expected shape: median turnaround roughly halved (or better) under the
 //! flexible scheduler; queuing times drastically reduced for both B-E and
 //! B-R; slowdown stays moderate.
+//!
+//! All four `(policy, scheduler)` configurations × all seeds run as one
+//! parallel [`ExperimentPlan`] grid.
 
 use zoe::policy::Policy;
 use zoe::sched::SchedKind;
-use zoe::sim::run_many;
+use zoe::sim::ExperimentPlan;
 use zoe::util::bench::{bench_apps, bench_runs, section};
 use zoe::workload::WorkloadSpec;
 
@@ -20,19 +23,29 @@ fn main() {
         "Figure 3 — flexible vs rigid baseline ({apps} apps × {runs} runs)"
     ));
 
+    let result = ExperimentPlan::new(spec, apps)
+        .seeds(1..runs + 1)
+        .config(Policy::FIFO, SchedKind::Rigid)
+        .config(Policy::FIFO, SchedKind::Flexible)
+        .config(Policy::sjf(), SchedKind::Rigid)
+        .config(Policy::sjf(), SchedKind::Flexible)
+        .run();
+
     let mut medians = Vec::new();
-    for (pname, policy) in [("FIFO", Policy::FIFO), ("SJF", Policy::sjf())] {
-        for kind in [SchedKind::Rigid, SchedKind::Flexible] {
-            let mut res = run_many(&spec, apps, 1..runs + 1, policy, kind);
-            res.print_report(&format!("{pname} / {}", kind.label()));
-            medians.push((pname, kind, res.turnaround.median(), res.queuing.median()));
-        }
+    for run in &result.runs {
+        let mut res = run.merged();
+        res.print_report(&run.config.label());
+        medians.push((
+            run.config.policy.label(),
+            res.turnaround.median(),
+            res.queuing.median(),
+        ));
     }
 
     println!("\n  -- headline: median turnaround ratio (flexible / rigid) --");
     for chunk in medians.chunks(2) {
-        let (p, _, rigid_ta, rigid_q) = chunk[0];
-        let (_, _, flex_ta, flex_q) = chunk[1];
+        let (ref p, rigid_ta, rigid_q) = chunk[0];
+        let (_, flex_ta, flex_q) = chunk[1];
         println!(
             "  {p}: turnaround {:.2} (paper ≈ 0.5), queuing {:.2}",
             flex_ta / rigid_ta,

@@ -4,10 +4,13 @@
 //! Expected shape: flexible induces fewer pending and more running
 //! applications; SJF cuts the pending queue by ~an order of magnitude
 //! vs FIFO.
+//!
+//! All four `(policy, scheduler)` configurations × all seeds run as one
+//! parallel [`ExperimentPlan`] grid.
 
 use zoe::policy::Policy;
 use zoe::sched::SchedKind;
-use zoe::sim::run_many;
+use zoe::sim::ExperimentPlan;
 use zoe::util::bench::{bench_apps, bench_runs, print_boxplot_row, section};
 use zoe::workload::WorkloadSpec;
 
@@ -19,30 +22,36 @@ fn main() {
         "Figure 4 — queue sizes ({apps} apps × {runs} runs)"
     ));
 
+    let result = ExperimentPlan::new(spec, apps)
+        .seeds(1..runs + 1)
+        .config(Policy::FIFO, SchedKind::Rigid)
+        .config(Policy::FIFO, SchedKind::Flexible)
+        .config(Policy::sjf(), SchedKind::Rigid)
+        .config(Policy::sjf(), SchedKind::Flexible)
+        .run();
+
     let mut rows = Vec::new();
-    for (pname, policy) in [("FIFO", Policy::FIFO), ("SJF", Policy::sjf())] {
-        for kind in [SchedKind::Rigid, SchedKind::Flexible] {
-            let res = run_many(&spec, apps, 1..runs + 1, policy, kind);
-            let pend = res.pending_q.boxplot();
-            let run = res.running_q.boxplot();
-            print_boxplot_row(&format!("{pname}/{} pending", kind.label()), &pend);
-            print_boxplot_row(&format!("{pname}/{} running", kind.label()), &run);
-            rows.push((pname, kind, pend, run));
-        }
+    for run in &result.runs {
+        let res = run.merged();
+        let pend = res.pending_q.boxplot();
+        let running = res.running_q.boxplot();
+        print_boxplot_row(&format!("{} pending", run.config.label()), &pend);
+        print_boxplot_row(&format!("{} running", run.config.label()), &running);
+        rows.push((run.config.policy.label(), pend, running));
     }
 
     println!("\n  -- shape checks --");
     for chunk in rows.chunks(2) {
-        let (p, _, rp, rr) = &chunk[0];
-        let (_, _, fp, fr) = &chunk[1];
+        let (ref p, rp, rr) = chunk[0];
+        let (_, fp, fr) = chunk[1];
         println!(
             "  {p}: pending mean flexible/rigid = {:.2} (<1 expected), running mean = {:.2} (>1 expected)",
             fp.mean / rp.mean.max(1e-9),
             fr.mean / rr.mean.max(1e-9)
         );
     }
-    let fifo_pending = rows[1].2.mean; // FIFO flexible
-    let sjf_pending = rows[3].2.mean; // SJF flexible
+    let fifo_pending = rows[1].1.mean; // FIFO flexible
+    let sjf_pending = rows[3].1.mean; // SJF flexible
     println!(
         "  SJF vs FIFO pending (flexible): {:.2}× smaller (paper ≈ 10×)",
         fifo_pending / sjf_pending.max(1e-9)

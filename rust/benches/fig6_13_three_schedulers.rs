@@ -6,10 +6,14 @@
 //! Expected shape: flexible ≳ malleable ≫ rigid on turnaround across all
 //! policies (the paper: "far better than a rigid scheduler and slightly
 //! better than a malleable").
+//!
+//! All 12 `(policy, scheduler)` configurations × all seeds run as one
+//! parallel [`ExperimentPlan`] grid; reporting then walks the grid in
+//! policy-major order.
 
 use zoe::policy::Policy;
 use zoe::sched::SchedKind;
-use zoe::sim::run_many;
+use zoe::sim::ExperimentPlan;
 use zoe::util::bench::{bench_apps, bench_runs, section};
 use zoe::workload::WorkloadSpec;
 
@@ -18,18 +22,31 @@ fn main() {
     let runs = bench_runs(2, 10);
     let spec = WorkloadSpec::paper_batch_only();
 
-    for (pname, policy) in [
+    let policies = [
         ("FIFO", Policy::FIFO),
         ("SJF", Policy::sjf()),
         ("SRPT", Policy::srpt()),
         ("HRRN", Policy::hrrn()),
-    ] {
+    ];
+    let kinds = [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible];
+
+    let mut plan = ExperimentPlan::new(spec, apps).seeds(1..runs + 1);
+    for &(_, policy) in &policies {
+        for &kind in &kinds {
+            plan = plan.config(policy, kind);
+        }
+    }
+    let result = plan.run();
+
+    for (pi, &(pname, _)) in policies.iter().enumerate() {
         section(&format!(
             "Figures 6–13 [{pname}] — rigid vs malleable vs flexible ({apps} apps × {runs} runs)"
         ));
         let mut med = Vec::new();
-        for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
-            let mut res = run_many(&spec, apps, 1..runs + 1, policy, kind);
+        for (ki, &kind) in kinds.iter().enumerate() {
+            let run = &result.runs[pi * kinds.len() + ki];
+            assert_eq!(run.config.kind, kind);
+            let mut res = run.merged();
             res.print_report(&format!("{pname} / {}", kind.label()));
             med.push((kind, res.turnaround.median(), res.turnaround.mean()));
         }

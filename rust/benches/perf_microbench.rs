@@ -1,20 +1,24 @@
 //! Perf microbenches (§Perf in EXPERIMENTS.md): the hot paths of each
-//! layer — simulator event throughput (L3, including the scale sweep and
-//! the optimized-vs-naive engine comparison), PJRT artifact step latency
-//! (L2/L1 via the runtime), the batched Table-1 scoring kernel, and the
-//! substrate primitives (placement, JSON, RNG).
+//! layer — simulator event throughput (L3, including the scale sweep,
+//! the optimized-vs-naive engine comparison, and the parallel multi-seed
+//! scaling sweep), PJRT artifact step latency (L2/L1 via the runtime),
+//! the batched Table-1 scoring kernel, and the substrate primitives
+//! (placement, JSON, RNG).
 //!
 //! Emits `BENCH_sim_throughput.json` (path overridable with
-//! `ZOE_BENCH_OUT`) with the event-throughput trajectory; CI compares it
-//! against the committed baseline (`scripts/check_bench_regression.py`).
-//! `ZOE_BENCH_SWEEP_MAX` caps the sweep size (default 200_000 apps).
+//! `ZOE_BENCH_OUT`) with the event-throughput trajectory and the
+//! thread-count scaling table; CI compares it against the committed
+//! baseline (`scripts/check_bench_regression.py`).
+//! `ZOE_BENCH_SWEEP_MAX` caps the sweep size (default 200_000 apps);
+//! `ZOE_BENCH_PAR_APPS` sizes the parallel sweep (default 4_000 apps ×
+//! 10 seeds).
 
 use std::time::Instant;
 
 use zoe::policy::Policy;
 use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
-use zoe::sim::{simulate_with_mode, EngineMode};
+use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan};
 use zoe::util::bench::{measure, section};
 use zoe::util::json::Json;
 use zoe::workload::WorkloadSpec;
@@ -94,6 +98,50 @@ fn main() {
         run_point(&spec, SchedKind::Flexible, apps, EngineMode::Optimized, &mut points);
     }
 
+    section("L3 — parallel multi-seed scaling (ExperimentPlan, 10-seed paper workload)");
+    let par_apps: u32 = std::env::var("ZOE_BENCH_PAR_APPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4_000);
+    let hw_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("  workload: {par_apps} apps × seeds 1..=10, flexible/FIFO ({hw_threads} hardware threads)");
+    let mut parallel_points: Vec<(usize, f64, f64)> = Vec::new(); // (threads, wall_s, speedup)
+    let mut serial_wall = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let plan = ExperimentPlan::new(spec.clone(), par_apps)
+            .seeds(1..11)
+            .config(Policy::FIFO, SchedKind::Flexible)
+            .threads(threads);
+        let t0 = Instant::now();
+        let merged = plan.run().into_single();
+        let wall = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            serial_wall = wall;
+        }
+        let speedup = serial_wall / wall.max(1e-12);
+        println!(
+            "  threads={threads:<2} wall={wall:>8.3}s speedup={speedup:>5.2}×  \
+             (completed={}, events={})",
+            merged.completed, merged.events
+        );
+        parallel_points.push((threads, wall, speedup));
+    }
+    if hw_threads >= 4 {
+        let at4 = parallel_points
+            .iter()
+            .filter(|&&(t, _, _)| t >= 4)
+            .map(|&(_, _, s)| s)
+            .fold(0.0f64, f64::max);
+        println!(
+            "  speedup at 4+ threads: {at4:.2}× (target ≥3×): {}",
+            if at4 >= 3.0 { "PASS" } else { "MISS" }
+        );
+    } else {
+        println!("  (<4 hardware threads: the ≥3× target is not assessable here)");
+    }
+
     // ---- emit the throughput trajectory ---------------------------------
     let out_path =
         std::env::var("ZOE_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim_throughput.json".to_string());
@@ -124,6 +172,18 @@ fn main() {
             })
             .collect(),
     );
+    let parallel_json = Json::Arr(
+        parallel_points
+            .iter()
+            .map(|&(threads, wall, speedup)| {
+                Json::obj(vec![
+                    ("threads", Json::num(threads as f64)),
+                    ("wall_s", Json::num(wall)),
+                    ("speedup_vs_1thread", Json::num(speedup)),
+                ])
+            })
+            .collect(),
+    );
     let doc = Json::obj(vec![
         ("bench", Json::str("sim_throughput")),
         ("provisional", Json::Bool(false)),
@@ -132,6 +192,16 @@ fn main() {
         ("seed", Json::num(1.0)),
         ("results", results),
         ("speedups", speedups_json),
+        (
+            "parallel_scaling",
+            Json::obj(vec![
+                ("apps", Json::num(par_apps as f64)),
+                ("seeds", Json::num(10.0)),
+                ("sched", Json::str("flexible")),
+                ("hw_threads", Json::num(hw_threads as f64)),
+                ("points", parallel_json),
+            ]),
+        ),
     ]);
     match std::fs::write(&out_path, doc.to_string()) {
         Ok(()) => println!("\n  wrote {out_path}"),

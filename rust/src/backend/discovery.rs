@@ -9,9 +9,13 @@ use super::{AppId, ContainerId};
 /// A registered service endpoint.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Endpoint {
+    /// Owning application.
     pub app: AppId,
+    /// Container backing this endpoint.
     pub container: ContainerId,
+    /// Host name the component is reachable at.
     pub host: String,
+    /// TCP port.
     pub port: u16,
 }
 
@@ -23,14 +27,17 @@ pub struct Discovery {
 }
 
 impl Discovery {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Register an endpoint under `name` (duplicates accumulate).
     pub fn register(&mut self, name: &str, ep: Endpoint) {
         self.services.entry(name.to_string()).or_default().push(ep);
     }
 
+    /// Remove every endpoint backed by `container`.
     pub fn deregister_container(&mut self, container: ContainerId) {
         for eps in self.services.values_mut() {
             eps.retain(|e| e.container != container);
@@ -38,6 +45,7 @@ impl Discovery {
         self.services.retain(|_, eps| !eps.is_empty());
     }
 
+    /// Endpoints registered under `name` (empty when unknown).
     pub fn resolve(&self, name: &str) -> &[Endpoint] {
         self.services.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }

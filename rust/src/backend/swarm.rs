@@ -11,23 +11,32 @@ use anyhow::{anyhow, Result};
 use crate::core::Resources;
 use crate::runtime::WorkKind;
 
+/// Container identifier (unique per back-end instance).
 pub type ContainerId = u64;
+/// Node (machine) identifier.
 pub type NodeId = u32;
+/// Application identifier, as assigned by the master's state store.
 pub type AppId = u32;
 
 /// Container life-cycle states (Docker-esque).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ContainerState {
+    /// Created but not yet started.
     Created,
+    /// Running on its node.
     Running,
+    /// Exited by itself (work complete).
     Exited,
+    /// Terminated by the master (preemption / teardown).
     Killed,
 }
 
 /// Component role within the owning application.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Role {
+    /// Compulsory component; never preempted.
     Core,
+    /// Optional component; preemptible.
     Elastic,
 }
 
@@ -35,13 +44,16 @@ pub enum Role {
 /// from it; the application completes when all steps are claimed+done.
 #[derive(Debug)]
 pub struct SharedWork {
+    /// Which analytic program the steps execute.
     pub kind: WorkKind,
+    /// Total steps the application must complete.
     pub steps_total: u64,
     claimed: AtomicU64,
     done: AtomicU64,
 }
 
 impl SharedWork {
+    /// A fresh shared ledger of `steps_total` steps.
     pub fn new(kind: WorkKind, steps_total: u64) -> Arc<Self> {
         Arc::new(SharedWork {
             kind,
@@ -61,14 +73,17 @@ impl SharedWork {
         }
     }
 
+    /// Mark one claimed step as done.
     pub fn complete_one(&self) {
         self.done.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Have all steps been completed?
     pub fn finished(&self) -> bool {
         self.done.load(Ordering::Relaxed) >= self.steps_total
     }
 
+    /// `(done, total)` step counts.
     pub fn progress(&self) -> (u64, u64) {
         (self.done.load(Ordering::Relaxed), self.steps_total)
     }
@@ -77,11 +92,15 @@ impl SharedWork {
 /// What to run in a container.
 #[derive(Clone, Debug)]
 pub struct ContainerSpec {
+    /// Container name (`app-<id>.<component>` style).
     pub name: String,
     /// Docker image name (descriptive only in this substrate).
     pub image: String,
+    /// Owning application.
     pub app: AppId,
+    /// Component class of this container.
     pub role: Role,
+    /// Resource reservation on its node.
     pub res: Resources,
     /// Work ledger this container contributes to (None for pure-service
     /// core components like masters/notebooks).
@@ -91,31 +110,45 @@ pub struct ContainerSpec {
 /// A container record.
 #[derive(Clone, Debug)]
 pub struct Container {
+    /// Unique id.
     pub id: ContainerId,
+    /// What was asked to run.
     pub spec: ContainerSpec,
+    /// Node it was placed on.
     pub node: NodeId,
+    /// Current life-cycle state.
     pub state: ContainerState,
+    /// Creation time (back-end clock).
     pub created_at: f64,
+    /// Start time.
     pub started_at: f64,
+    /// Exit/kill time (NaN while running).
     pub finished_at: f64,
 }
 
 /// Docker-style events, polled by the Zoe monitor.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
+    /// Container was created.
     Created(ContainerId),
+    /// Container started running.
     Started(ContainerId),
     /// Container exited by itself (work complete).
     Died(ContainerId, AppId),
+    /// Container was killed by the master.
     Killed(ContainerId, AppId),
 }
 
 /// One node: capacity accounting for its engine.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// Node id (also its placement index).
     pub id: NodeId,
+    /// Installed capacity.
     pub total: Resources,
+    /// Currently free capacity.
     pub free: Resources,
+    /// DNS-ish host name.
     pub hostname: String,
 }
 
@@ -143,6 +176,7 @@ pub struct SwarmBackend {
 }
 
 impl SwarmBackend {
+    /// A back-end of `n_nodes` identical nodes.
     pub fn new(n_nodes: u32, per_node: Resources) -> Self {
         let nodes = (0..n_nodes)
             .map(|i| Node {
@@ -183,6 +217,7 @@ impl SwarmBackend {
         }
     }
 
+    /// Current back-end time (wall or virtual; seconds).
     pub fn now(&self) -> f64 {
         match &self.clock {
             ClockMode::Wall(epoch) => epoch.elapsed().as_secs_f64(),
@@ -190,6 +225,7 @@ impl SwarmBackend {
         }
     }
 
+    /// The nodes, in placement order.
     pub fn nodes(&self) -> &[Node] {
         &self.nodes
     }
@@ -203,6 +239,7 @@ impl SwarmBackend {
         t
     }
 
+    /// Aggregate resources currently reserved by containers.
     pub fn used(&self) -> Resources {
         let mut u = Resources::ZERO;
         for n in &self.nodes {
@@ -296,14 +333,17 @@ impl SwarmBackend {
         }
     }
 
+    /// Look up one container.
     pub fn inspect(&self, id: ContainerId) -> Option<&Container> {
         self.containers.get(&id)
     }
 
+    /// All containers ever created (any state).
     pub fn list(&self) -> impl Iterator<Item = &Container> {
         self.containers.values()
     }
 
+    /// Ids of `app`'s currently running containers, sorted.
     pub fn running_of(&self, app: AppId) -> Vec<ContainerId> {
         let mut v: Vec<ContainerId> = self
             .containers

@@ -25,6 +25,7 @@ pub struct WorkPool {
 }
 
 impl WorkPool {
+    /// A pool executing against `rt`'s artifacts.
     pub fn new(rt: Arc<PjrtRuntime>) -> Self {
         WorkPool {
             rt,
@@ -112,6 +113,7 @@ impl WorkPool {
         Ok(steps)
     }
 
+    /// Containers currently holding unfinished work.
     pub fn active_containers(&self) -> usize {
         self.queue.len()
     }

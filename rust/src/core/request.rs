@@ -12,29 +12,35 @@ pub struct Resources {
 }
 
 impl Resources {
+    /// The zero vector (no CPU, no RAM).
     pub const ZERO: Resources = Resources { cpu: 0.0, ram_mb: 0.0 };
 
+    /// A resource vector from its two components.
     pub fn new(cpu: f64, ram_mb: f64) -> Self {
         Resources { cpu, ram_mb }
     }
 
+    /// Does this demand fit within `avail` (with a small tolerance)?
     #[inline]
     pub fn fits_in(&self, avail: &Resources) -> bool {
         self.cpu <= avail.cpu + 1e-9 && self.ram_mb <= avail.ram_mb + 1e-9
     }
 
+    /// Componentwise add.
     #[inline]
     pub fn add(&mut self, o: &Resources) {
         self.cpu += o.cpu;
         self.ram_mb += o.ram_mb;
     }
 
+    /// Componentwise subtract.
     #[inline]
     pub fn sub(&mut self, o: &Resources) {
         self.cpu -= o.cpu;
         self.ram_mb -= o.ram_mb;
     }
 
+    /// This vector scaled by `k` (e.g. per-component demand × count).
     #[inline]
     pub fn scaled(&self, k: f64) -> Resources {
         Resources {
@@ -66,6 +72,7 @@ pub enum AppClass {
 }
 
 impl AppClass {
+    /// The figure-legend abbreviation ("B-E" / "B-R" / "Int").
     pub fn label(&self) -> &'static str {
         match self {
             AppClass::BatchElastic => "B-E",
@@ -85,7 +92,9 @@ pub type ReqId = u32;
 /// require `core_res`, `n_elastic` each require `elastic_res`.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Unique id; also the index into the simulator's request table.
     pub id: ReqId,
+    /// Workload-taxonomy class (§4.1).
     pub class: AppClass,
     /// Arrival (submission) time, seconds.
     pub arrival: f64,
@@ -141,6 +150,7 @@ pub struct RequestBuilder {
 }
 
 impl RequestBuilder {
+    /// A builder for request `id`: 1 core of (1 CPU, 1 GB), runtime 1 s.
     pub fn new(id: ReqId) -> Self {
         RequestBuilder {
             req: Request {
@@ -157,22 +167,26 @@ impl RequestBuilder {
         }
     }
 
+    /// Set the arrival (submission) time, seconds.
     pub fn arrival(mut self, t: f64) -> Self {
         self.req.arrival = t;
         self
     }
 
+    /// Set the isolated execution time T_i, seconds.
     pub fn runtime(mut self, t: f64) -> Self {
         self.req.runtime = t;
         self
     }
 
+    /// Set the core components: `n` of them, each demanding `res`.
     pub fn cores(mut self, n: u32, res: Resources) -> Self {
         self.req.n_core = n;
         self.req.core_res = res;
         self
     }
 
+    /// Set the elastic components; `n == 0` reclassifies as B-R.
     pub fn elastics(mut self, n: u32, res: Resources) -> Self {
         self.req.n_elastic = n;
         self.req.elastic_res = res;
@@ -182,16 +196,19 @@ impl RequestBuilder {
         self
     }
 
+    /// Set the application class explicitly.
     pub fn class(mut self, c: AppClass) -> Self {
         self.req.class = c;
         self
     }
 
+    /// Set the external priority (higher = more urgent).
     pub fn priority(mut self, p: f64) -> Self {
         self.req.priority = p;
         self
     }
 
+    /// Validate and return the request.
     pub fn build(self) -> Request {
         let r = &self.req;
         assert!(r.n_core >= 1, "a request needs at least one core component");

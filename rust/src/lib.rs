@@ -15,8 +15,12 @@
 //!   kernels), AOT-lowered to HLO text and executed from rust through PJRT
 //!   (`runtime` module). Python is never on the request path.
 //!
-//! Start with [`sched::FlexibleScheduler`] and [`sim::Simulation`], or the
-//! full system in [`zoe`].
+//! Start with [`sched::FlexibleScheduler`] and [`sim::Simulation`] for
+//! single runs, [`sim::ExperimentPlan`] for parallel multi-seed sweeps,
+//! or the full system in [`zoe`]. ARCHITECTURE.md maps the paper's
+//! concepts onto these modules.
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod core;

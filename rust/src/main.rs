@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! zoe sim     --apps 8000 --sched flexible --policy sjf [--seed 1]
+//!             [--seeds 10] [--threads 4]   # parallel multi-seed run
 //! zoe master  --listen 127.0.0.1:4455 [--generation flexible] [--nodes 10]
 //! zoe submit  --to 127.0.0.1:4455 --template spark-als-16
 //! zoe status  --to 127.0.0.1:4455 --id 3
@@ -17,7 +18,7 @@ use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
 use zoe::runtime::PjrtRuntime;
 use zoe::sched::SchedKind;
-use zoe::sim::simulate;
+use zoe::sim::{simulate, ExperimentPlan};
 use zoe::util::cli::Args;
 use zoe::util::json::Json;
 use zoe::workload::WorkloadSpec;
@@ -76,8 +77,21 @@ fn cmd_sim(args: &Args) {
         WorkloadSpec::paper_batch_only()
     };
     spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
-    let requests = spec.generate(apps, seed);
-    let mut res = simulate(requests, Cluster::paper_sim(), policy, kind);
+    let seeds = args.u64_or("seeds", 1);
+    let mut res = if seeds > 1 {
+        // Multi-seed experiment (the paper's 10-runs-per-configuration
+        // protocol): seeds run in parallel, results merge in seed order.
+        let threads = args.usize_or("threads", 0);
+        ExperimentPlan::new(spec, apps)
+            .seeds(seed..seed + seeds)
+            .config(policy, kind)
+            .threads(threads)
+            .run()
+            .into_single()
+    } else {
+        let requests = spec.generate(apps, seed);
+        simulate(requests, Cluster::paper_sim(), policy, kind)
+    };
     println!("{}", res.summary());
     println!("turnaround: {}", res.turnaround.boxplot());
     println!("queuing:    {}", res.queuing.boxplot());

@@ -21,6 +21,7 @@ pub enum SizeDim {
 }
 
 impl SizeDim {
+    /// Table-1 suffix ("1D" / "2D" / "3D").
     pub fn label(&self) -> &'static str {
         match self {
             SizeDim::D1 => "1D",
@@ -56,18 +57,23 @@ pub enum Discipline {
 /// A complete policy: discipline × size definition.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Policy {
+    /// The ordering discipline.
     pub discipline: Discipline,
+    /// Which Table-1 size definition weights the key.
     pub dim: SizeDim,
+    /// Which services the size factor counts.
     pub scope: ServiceScope,
 }
 
 impl Policy {
+    /// First-in first-out on arrival time (the default discipline).
     pub const FIFO: Policy = Policy {
         discipline: Discipline::Fifo,
         dim: SizeDim::D1,
         scope: ServiceScope::Requested,
     };
 
+    /// A policy with the given discipline and size dimensionality.
     pub fn new(discipline: Discipline, dim: SizeDim) -> Policy {
         Policy {
             discipline,
@@ -76,6 +82,7 @@ impl Policy {
         }
     }
 
+    /// Override the service scope (Table 1's SRPT-xD2 variants).
     pub fn with_scope(mut self, scope: ServiceScope) -> Policy {
         self.scope = scope;
         self
@@ -86,10 +93,12 @@ impl Policy {
         Policy::new(Discipline::Sjf, SizeDim::D1)
     }
 
+    /// Plain SRPT on remaining runtime.
     pub fn srpt() -> Policy {
         Policy::new(Discipline::Srpt, SizeDim::D1)
     }
 
+    /// Plain HRRN (highest response ratio next).
     pub fn hrrn() -> Policy {
         Policy::new(Discipline::Hrrn, SizeDim::D1)
     }
@@ -111,6 +120,7 @@ impl Policy {
         ]
     }
 
+    /// The paper's name for this policy (e.g. "SRPT-2D2").
     pub fn label(&self) -> String {
         let d = match self.discipline {
             Discipline::Fifo => return "FIFO".to_string(),

@@ -33,11 +33,14 @@ const BLOCK: usize = 16;
 /// One machine: total and currently-free resources.
 #[derive(Clone, Copy, Debug)]
 pub struct Machine {
+    /// Installed capacity.
     pub total: Resources,
+    /// Currently unallocated capacity.
     pub free: Resources,
 }
 
 impl Machine {
+    /// An empty machine of capacity `total`.
     pub fn new(total: Resources) -> Self {
         Machine { total, free: total }
     }
@@ -72,12 +75,14 @@ pub struct Snapshot {
 /// that as the absent state and reuse the buffer across admissions.
 #[derive(Clone, Debug, Default)]
 pub struct Placement {
+    /// Per-component resource demand of this placement.
     pub res: Resources,
     /// (machine index, component count) pairs.
     pub by_machine: Vec<(u32, u32)>,
 }
 
 impl Placement {
+    /// Total number of placed components.
     pub fn count(&self) -> u32 {
         self.by_machine.iter().map(|&(_, k)| k).sum()
     }
@@ -106,6 +111,7 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// A cluster over an explicit machine list.
     pub fn new(machines: Vec<Machine>) -> Self {
         assert!(!machines.is_empty());
         let mut total = Resources::ZERO;
@@ -140,10 +146,12 @@ impl Cluster {
         Cluster::uniform(1, Resources::new(units as f64, units as f64))
     }
 
+    /// Number of machines.
     pub fn n_machines(&self) -> usize {
         self.machines.len()
     }
 
+    /// The machines, in placement (index) order.
     pub fn machines(&self) -> &[Machine] {
         &self.machines
     }

@@ -76,14 +76,17 @@ mod imp {
             Err(anyhow!("artifacts/ not found — run `make artifacts`"))
         }
 
+        /// The PJRT platform name (e.g. "cpu").
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
 
+        /// Names of the loaded artifacts.
         pub fn names(&self) -> Vec<&str> {
             self.exes.keys().map(|s| s.as_str()).collect()
         }
 
+        /// Is artifact `name` loaded?
         pub fn has(&self, name: &str) -> bool {
             self.exes.contains_key(name)
         }
@@ -144,6 +147,7 @@ mod imp {
     }
 
     impl PjrtRuntime {
+        /// Always fails: the stub cannot load artifacts.
         pub fn load_dir(dir: impl AsRef<Path>) -> Result<Self> {
             Err(anyhow!(
                 "PJRT runtime unavailable: built without the `pjrt-xla` feature \
@@ -152,22 +156,27 @@ mod imp {
             ))
         }
 
+        /// Always fails: the stub cannot load artifacts.
         pub fn load_default() -> Result<Self> {
             Self::load_dir("artifacts")
         }
 
+        /// Reports the stub platform.
         pub fn platform(&self) -> String {
             "stub".to_string()
         }
 
+        /// No artifacts are ever loaded.
         pub fn names(&self) -> Vec<&str> {
             Vec::new()
         }
 
+        /// No artifacts are ever loaded.
         pub fn has(&self, _name: &str) -> bool {
             false
         }
 
+        /// Always fails: the stub has nothing to execute.
         pub fn execute_f32(
             &self,
             name: &str,

@@ -10,14 +10,23 @@ use anyhow::Result;
 use super::PjrtRuntime;
 use crate::util::rng::Rng;
 
+/// ALS user-matrix rows (fixed at AOT time).
 pub const ALS_USERS: usize = 256;
+/// ALS item-matrix rows.
 pub const ALS_ITEMS: usize = 256;
+/// ALS latent-factor rank.
 pub const ALS_RANK: usize = 128;
+/// Ridge design-matrix rows.
 pub const RIDGE_ROWS: usize = 512;
+/// Ridge feature count.
 pub const RIDGE_FEATS: usize = 128;
+/// Ridge target count.
 pub const RIDGE_TARGETS: usize = 128;
+/// Max applications per Table-1 scoring batch.
 pub const SCORE_BATCH: usize = 1024;
+/// Feature rows the scorer consumes.
 pub const SCORE_FEATURES: usize = 7;
+/// Policy keys the scorer emits per application.
 pub const SCORE_POLICIES: usize = 8;
 
 /// Which analytic workload a container runs (§6 templates).
@@ -33,6 +42,7 @@ pub enum WorkKind {
 }
 
 impl WorkKind {
+    /// Parse a template command string ("als" / "ridge" / "tf").
     pub fn parse(s: &str) -> Option<WorkKind> {
         match s {
             "als" => Some(WorkKind::Als),
@@ -42,6 +52,7 @@ impl WorkKind {
         }
     }
 
+    /// Canonical lowercase name.
     pub fn label(&self) -> &'static str {
         match self {
             WorkKind::Als => "als",
@@ -53,6 +64,7 @@ impl WorkKind {
 
 /// Mutable training state for one application's work.
 pub struct WorkState {
+    /// Which analytic program this state belongs to.
     pub kind: WorkKind,
     // ALS state.
     u: Vec<f32>,
@@ -62,6 +74,7 @@ pub struct WorkState {
     x: Vec<f32>,
     y: Vec<f32>,
     w: Vec<f32>,
+    /// Steps executed so far.
     pub steps_done: u64,
 }
 
@@ -127,10 +140,12 @@ impl WorkState {
 
 /// Typed execution of one training step through the PJRT artifacts.
 pub struct AnalyticEngine<'a> {
+    /// The runtime holding the compiled artifacts.
     pub rt: &'a PjrtRuntime,
 }
 
 impl<'a> AnalyticEngine<'a> {
+    /// An engine over `rt`'s artifacts.
     pub fn new(rt: &'a PjrtRuntime) -> Self {
         AnalyticEngine { rt }
     }

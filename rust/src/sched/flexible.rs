@@ -15,6 +15,11 @@
 //! release/re-place pass is skipped. Since elastic release is only
 //! needed to make capacity reclaimable for admissions, the release
 //! itself is also skipped unless admission is actually possible.
+//!
+//! Saturation accounting: Algorithm 1 line 17's `Σ(C+E) < total` gate is
+//! answered in O(1) from an incrementally maintained serving-set
+//! aggregate (`full_demand`) instead of re-summing S on every rebalance
+//! entry; the aggregate resets to exact zero whenever S drains.
 //! `World::naive` disables all of this for differential testing.
 //!
 //! Invariants:
@@ -29,13 +34,16 @@ use std::collections::VecDeque;
 use super::{
     has_spare_after_full_grants, insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World,
 };
-use crate::core::ReqId;
+use crate::core::{ReqId, Resources};
 use crate::pool::Placement;
 
 /// W-line entry: (priority, policy key, id) — descending priority,
 /// ascending key, ascending id.
 type WEntry = (f64, f64, ReqId);
 
+/// The flexible scheduler (Algorithm 1), optionally with the §3.3
+/// preemptive arrival path. See the module docs for the placement model
+/// and incremental-cascade invariants.
 pub struct FlexibleScheduler {
     /// Serving set S, in cascade order (descending effective priority,
     /// then ascending frozen key).
@@ -50,6 +58,12 @@ pub struct FlexibleScheduler {
     cores: Vec<Placement>,
     /// Elastic placements, re-computed by cascades; dense by request id.
     elastic: Vec<Placement>,
+    /// Incrementally maintained Σ full demand (cores + all elastic) of
+    /// the serving set: admit adds, departure subtracts, and it resets to
+    /// exact zero whenever S drains (squashing float drift). Replaces the
+    /// per-rebalance O(|S|) re-sum of Algorithm 1 line 17; the naive mode
+    /// still re-sums for the differential tests.
+    full_demand: Resources,
     /// Cores and serving order unchanged since the last cascade — a
     /// recompute would be identical, so the cascade skips entirely.
     cascade_clean: bool,
@@ -59,6 +73,7 @@ pub struct FlexibleScheduler {
 }
 
 impl FlexibleScheduler {
+    /// A fresh scheduler; `preemptive` enables the §3.3 arrival path.
     pub fn new(preemptive: bool) -> Self {
         FlexibleScheduler {
             s: Vec::new(),
@@ -66,10 +81,22 @@ impl FlexibleScheduler {
             w_line: VecDeque::new(),
             cores: Vec::new(),
             elastic: Vec::new(),
+            full_demand: Resources::ZERO,
             cascade_clean: false,
             resort_stamp: f64::NAN,
             preemptive,
         }
+    }
+
+    /// Algorithm 1 line 17: would S, fully granted, still leave spare
+    /// capacity? O(1) from the incrementally maintained aggregate; the
+    /// naive reference re-sums the serving set instead.
+    fn has_spare(&self, w: &World) -> bool {
+        if w.naive {
+            return has_spare_after_full_grants(w, &self.s);
+        }
+        let t = w.cluster.total();
+        self.full_demand.cpu < t.cpu - 1e-9 || self.full_demand.ram_mb < t.ram_mb - 1e-9
     }
 
     /// Grow the dense placement stores to cover every request id.
@@ -108,6 +135,7 @@ impl FlexibleScheduler {
         let key = w.pending_key(id);
         let now = w.now;
         let prio = w.state(id).req.priority;
+        self.full_demand.add(&w.state(id).req.full_total());
         {
             let st = w.state_mut(id);
             st.phase = Phase::Running;
@@ -132,13 +160,13 @@ impl FlexibleScheduler {
     /// then a clean no-op unless something else invalidated it.
     fn rebalance(&mut self, w: &mut World) {
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
-        let may_admit = !self.l.is_empty() && has_spare_after_full_grants(w, &self.s);
+        let may_admit = !self.l.is_empty() && self.has_spare(w);
         if may_admit || w.naive {
             self.release_all_elastic(w);
         }
         if may_admit {
             loop {
-                if self.l.is_empty() || !has_spare_after_full_grants(w, &self.s) {
+                if self.l.is_empty() || !self.has_spare(w) {
                     break;
                 }
                 let head = keyed_head(&self.l).unwrap();
@@ -248,7 +276,15 @@ impl Scheduler for FlexibleScheduler {
 
     fn on_departure(&mut self, id: ReqId, w: &mut World) {
         self.ensure_capacity(w);
-        self.s.retain(|&x| x != id);
+        if let Some(pos) = self.s.iter().position(|&x| x == id) {
+            self.s.remove(pos);
+            self.full_demand.sub(&w.state(id).req.full_total());
+            if self.s.is_empty() {
+                // Exact reset: incremental add/sub accumulates float
+                // rounding; an empty serving set demands exactly nothing.
+                self.full_demand = Resources::ZERO;
+            }
+        }
         // Core + elastic state changed: any future cascade starts fresh.
         self.cascade_clean = false;
         w.cluster.release_and_clear(&mut self.cores[id as usize]);

@@ -10,6 +10,14 @@
 //! grants are monotone, a request's elastic placement is a single
 //! accumulating [`Placement`] buffer (one (machine, count) batch per
 //! top-up round), stored densely by request id.
+//!
+//! Top-up cursor: since grants never shrink, a fully granted request
+//! stays fully granted for its whole remaining service; the scheduler
+//! tracks the first index of the serving order whose request is *not*
+//! fully granted (`topup_from`) and starts every top-up round there,
+//! making a round O(non-full members) instead of O(|S|). `World::naive`
+//! disables the cursor (full scan from 0, the seed behavior) for the
+//! differential tests.
 
 use std::collections::VecDeque;
 
@@ -17,6 +25,8 @@ use super::{insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World};
 use crate::core::ReqId;
 use crate::pool::Placement;
 
+/// The malleable comparator scheduler. See the module docs for the
+/// grants-only-grow model and the Fig. 1 behavior it reproduces.
 pub struct MalleableScheduler {
     s: Vec<ReqId>,
     /// Waiting line: (cached policy key, id), ascending.
@@ -25,17 +35,24 @@ pub struct MalleableScheduler {
     cores: Vec<Placement>,
     /// Granted elastic placements, accumulated across top-up rounds.
     elastic: Vec<Placement>,
+    /// First serving-order index whose request is not fully granted.
+    /// Everything before it is full and — grants being monotone — stays
+    /// full, so top-up rounds skip the prefix. Adjusted on departure
+    /// (indices shift left), advanced after each top-up round.
+    topup_from: usize,
     /// Simulated time of the last dynamic-policy resort of L.
     resort_stamp: f64,
 }
 
 impl MalleableScheduler {
+    /// A fresh scheduler with an empty serving set and waiting line.
     pub fn new() -> Self {
         MalleableScheduler {
             s: Vec::new(),
             l: VecDeque::new(),
             cores: Vec::new(),
             elastic: Vec::new(),
+            topup_from: 0,
             resort_stamp: f64::NAN,
         }
     }
@@ -68,9 +85,12 @@ impl MalleableScheduler {
     fn rebalance(&mut self, w: &mut World) {
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         loop {
-            // Top-ups, serving order. Grants never shrink, so a fully
-            // granted request is a single compare.
-            for i in 0..self.s.len() {
+            // Top-ups, serving order, starting at the first non-full
+            // member: the prefix before the cursor is fully granted and
+            // grants never shrink, so skipping it changes nothing (the
+            // naive reference scans from 0 to prove exactly that).
+            let start = if w.naive { 0 } else { self.topup_from };
+            for i in start..self.s.len() {
                 let id = self.s[i];
                 let (res, want, have) = {
                     let st = &w.states[id as usize];
@@ -85,6 +105,15 @@ impl MalleableScheduler {
                     if placed > 0 {
                         w.set_grant(id, have + placed);
                     }
+                }
+            }
+            // Advance the cursor over the (possibly grown) full prefix.
+            while self.topup_from < self.s.len() {
+                let st = &w.states[self.s[self.topup_from] as usize];
+                if st.grant == st.req.n_elastic {
+                    self.topup_from += 1;
+                } else {
+                    break;
                 }
             }
             // Admission: head's cores in the leftover (no reclaim).
@@ -133,7 +162,15 @@ impl Scheduler for MalleableScheduler {
 
     fn on_departure(&mut self, id: ReqId, w: &mut World) {
         self.ensure_capacity(w);
-        self.s.retain(|&x| x != id);
+        if let Some(pos) = self.s.iter().position(|&x| x == id) {
+            self.s.remove(pos);
+            // Removal shifts indices left; keep the cursor on the same
+            // element (the removed one was full-by-definition if it sat
+            // before the cursor).
+            if pos < self.topup_from {
+                self.topup_from -= 1;
+            }
+        }
         w.cluster.release_and_clear(&mut self.cores[id as usize]);
         w.cluster.release_and_clear(&mut self.elastic[id as usize]);
         self.rebalance(w);

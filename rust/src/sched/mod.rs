@@ -44,7 +44,9 @@ pub enum Phase {
 /// Execution state of one request.
 #[derive(Clone, Debug)]
 pub struct ReqState {
+    /// The immutable request this state belongs to.
     pub req: Request,
+    /// Current life-cycle phase.
     pub phase: Phase,
     /// Elastic components currently granted (0 ≤ grant ≤ n_elastic).
     pub grant: u32,
@@ -68,6 +70,7 @@ pub struct ReqState {
 }
 
 impl ReqState {
+    /// Fresh state for a not-yet-arrived request.
     pub fn new(req: Request) -> Self {
         ReqState {
             req,
@@ -124,9 +127,13 @@ impl ReqState {
 /// Everything the schedulers operate on: the request table, the cluster,
 /// the sorting policy and the current simulation time.
 pub struct World {
+    /// Per-request execution state, dense by request id.
     pub states: Vec<ReqState>,
+    /// The machines components are placed on.
     pub cluster: Cluster,
+    /// The waiting-line sorting policy.
     pub policy: Policy,
+    /// Current simulated time, seconds.
     pub now: f64,
     /// Requests whose progress rate changed since the engine last
     /// refreshed departure predictions (newly admitted or re-granted).
@@ -139,6 +146,7 @@ pub struct World {
 }
 
 impl World {
+    /// A world with every request still in the `Future` phase at t=0.
     pub fn new(requests: Vec<Request>, cluster: Cluster, policy: Policy) -> Self {
         let states = requests.into_iter().map(ReqState::new).collect();
         World {
@@ -151,10 +159,12 @@ impl World {
         }
     }
 
+    /// The execution state of request `id`.
     pub fn state(&self, id: ReqId) -> &ReqState {
         &self.states[id as usize]
     }
 
+    /// Mutable execution state of request `id`.
     pub fn state_mut(&mut self, id: ReqId) -> &mut ReqState {
         &mut self.states[id as usize]
     }
@@ -216,20 +226,25 @@ pub trait Scheduler {
     fn running(&self) -> usize;
     /// Serving set in cascade order (diagnostics / tests).
     fn serving(&self) -> &[ReqId];
+    /// Short scheduler name for reports.
     fn name(&self) -> &'static str;
 }
 
 /// Scheduler families evaluated in the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SchedKind {
+    /// The rigid baseline: full-demand admission, no reclaim (§4.1).
     Rigid,
+    /// The malleable comparator: grants grow, never shrink (§2.2).
     Malleable,
+    /// The paper's flexible heuristic (Algorithm 1).
     Flexible,
     /// Flexible with the preemptive arrival path (§3.3).
     FlexiblePreemptive,
 }
 
 impl SchedKind {
+    /// Instantiate a fresh scheduler of this family.
     pub fn build(&self) -> Box<dyn Scheduler> {
         match self {
             SchedKind::Rigid => Box::new(RigidScheduler::new()),
@@ -239,6 +254,7 @@ impl SchedKind {
         }
     }
 
+    /// Short lowercase name, as used in reports and bench output.
     pub fn label(&self) -> &'static str {
         match self {
             SchedKind::Rigid => "rigid",
@@ -260,6 +276,11 @@ impl SchedKind {
 /// S leaves some capacity unused in at least one dimension (which further
 /// admissions could put to work — the cores-fit check on line 19 still
 /// gates the actual admission).
+///
+/// This O(|S|) re-sum is the *reference* implementation, used in naive
+/// mode; the flexible scheduler maintains the aggregate incrementally
+/// (admit adds, departure subtracts) and answers the same question in
+/// O(1) on the optimized path.
 pub(crate) fn has_spare_after_full_grants(w: &World, s: &[ReqId]) -> bool {
     let mut demand = crate::core::Resources::ZERO;
     for &id in s {

@@ -16,6 +16,8 @@ use super::{insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World};
 use crate::core::ReqId;
 use crate::pool::Placement;
 
+/// The rigid baseline scheduler. See the module docs for the all-or-
+/// nothing admission model it reproduces.
 pub struct RigidScheduler {
     s: Vec<ReqId>,
     /// Waiting line: (cached policy key, id), ascending.
@@ -29,6 +31,7 @@ pub struct RigidScheduler {
 }
 
 impl RigidScheduler {
+    /// A fresh scheduler with an empty serving set and waiting line.
     pub fn new() -> Self {
         RigidScheduler {
             s: Vec::new(),

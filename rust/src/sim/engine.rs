@@ -18,13 +18,23 @@
 //!   predicted-finish recomputed and a fresh heap event. A request whose
 //!   grant did not change keeps a prediction that is *exactly* (not just
 //!   approximately) still correct, because its rate is unchanged.
+//! * **Event-heap compaction** — lazy deletion leaves one stale entry in
+//!   the heap per re-prediction, and under heavy grant churn (every
+//!   rebalance re-predicts cascade members) stale entries can outnumber
+//!   live ones by an unbounded factor, inflating every push/pop to
+//!   O(log stale). The engine counts stale entries exactly (a prediction
+//!   replacement marks one, a skipped pop retires one) and rebuilds the
+//!   heap from the live entries whenever stale > 2 × live (past a small
+//!   floor). Compaction only discards events that a pop would skip
+//!   anyway, so event order — and therefore every simulation result — is
+//!   unchanged.
 //!
 //! The naive reference path ([`EngineMode::Naive`]) keeps the seed
 //! algorithm — eager accrual over the whole serving set on every event
-//! plus a full refresh — and also flips `World::naive` so the schedulers
-//! disable their incremental shortcuts. `rust/tests/sim_properties.rs`
-//! runs both engines differentially across seeds, schedulers and
-//! policies and asserts the sample sets match.
+//! plus a full refresh, and no compaction — and also flips `World::naive`
+//! so the schedulers disable their incremental shortcuts.
+//! `rust/tests/sim_properties.rs` runs both engines differentially across
+//! seeds, schedulers and policies and asserts the sample sets match.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -73,11 +83,16 @@ impl PartialOrd for Ev {
 /// Tolerance for "the predicted finish changed" (re-push threshold).
 const FINISH_EPS: f64 = 1e-9;
 
+/// Minimum number of stale heap entries before compaction is considered
+/// (avoids churning tiny heaps where a rebuild costs more than the pops
+/// it saves).
+const COMPACT_MIN_STALE: usize = 32;
+
 /// Which event-loop implementation to run (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineMode {
-    /// Lazy accrual + changed-set refresh: per-event cost proportional to
-    /// what changed. The default.
+    /// Lazy accrual + changed-set refresh + heap compaction: per-event
+    /// cost proportional to what changed. The default.
     Optimized,
     /// The seed algorithm: eager accrual and full refresh over the whole
     /// serving set on every event. Kept as the reference for the
@@ -93,15 +108,25 @@ pub struct Simulation {
     seq: u64,
     metrics: MetricsCollector,
     mode: EngineMode,
+    /// Exact count of stale (lazy-deleted) departure events currently in
+    /// the heap: +1 when a prediction is replaced, −1 when a stale event
+    /// is skipped on pop, reset by compaction.
+    stale: usize,
+    /// Number of heap compactions performed (reported in `SimResult`).
+    compactions: u64,
     /// Reused id buffer for the naive full refresh.
     scratch: Vec<ReqId>,
 }
 
 impl Simulation {
+    /// Build a simulation over `requests` with the default (optimized)
+    /// engine.
     pub fn new(requests: Vec<Request>, cluster: Cluster, policy: Policy, kind: SchedKind) -> Self {
         Self::with_mode(requests, cluster, policy, kind, EngineMode::Optimized)
     }
 
+    /// Build a simulation with an explicit [`EngineMode`] (differential
+    /// testing, bench baselines).
     pub fn with_mode(
         requests: Vec<Request>,
         cluster: Cluster,
@@ -135,6 +160,8 @@ impl Simulation {
             seq,
             metrics,
             mode,
+            stale: 0,
+            compactions: 0,
             scratch: Vec::new(),
         }
     }
@@ -195,7 +222,7 @@ impl Simulation {
     }
 
     fn refresh_one(&mut self, id: ReqId, now: f64) {
-        let (finish, epoch) = {
+        let (finish, epoch, replaced) = {
             let st = &mut self.world.states[id as usize];
             if st.phase != Phase::Running {
                 // A request can enter the changed set and then depart (or
@@ -211,11 +238,47 @@ impl Simulation {
             if (finish - st.predicted_finish).abs() <= FINISH_EPS {
                 return;
             }
+            // A finite previous prediction means an event for it is still
+            // in the heap; bumping the epoch turns that event stale.
+            let replaced = st.predicted_finish.is_finite();
             st.epoch += 1;
             st.predicted_finish = finish;
-            (finish, st.epoch)
+            (finish, st.epoch, replaced)
         };
+        if replaced {
+            self.stale += 1;
+        }
         self.push_departure(finish, id, epoch);
+    }
+
+    /// Rebuild the heap from its live entries once stale (lazy-deleted)
+    /// events dominate: kept are all arrivals (they are never stale) and
+    /// the departure events whose epoch still matches a running request.
+    /// Discarded events are exactly those a pop would skip, so event
+    /// order is untouched. Optimized mode only — the naive reference
+    /// keeps the seed behavior.
+    fn maybe_compact(&mut self) {
+        if self.mode != EngineMode::Optimized
+            || self.stale < COMPACT_MIN_STALE
+            || self.stale <= 2 * (self.heap.len().saturating_sub(self.stale))
+        {
+            return;
+        }
+        let events = std::mem::take(&mut self.heap).into_vec();
+        let states = &self.world.states;
+        let kept: Vec<Ev> = events
+            .into_iter()
+            .filter(|ev| match ev.kind {
+                EvKind::Arrival(_) => true,
+                EvKind::Departure(id, epoch) => {
+                    let st = &states[id as usize];
+                    st.phase == Phase::Running && st.epoch == epoch
+                }
+            })
+            .collect();
+        self.heap = BinaryHeap::from(kept);
+        self.stale = 0;
+        self.compactions += 1;
     }
 
     fn sample_metrics(&mut self) {
@@ -247,12 +310,14 @@ impl Simulation {
                     self.sched.on_arrival(id, &mut self.world);
                     self.refresh_departures();
                     self.sample_metrics();
+                    self.maybe_compact();
                 }
                 EvKind::Departure(id, epoch) => {
                     // Lazy deletion of stale predictions.
                     {
                         let st = self.world.state(id);
                         if st.phase != Phase::Running || st.epoch != epoch {
+                            self.stale = self.stale.saturating_sub(1);
                             continue;
                         }
                     }
@@ -285,6 +350,7 @@ impl Simulation {
                     self.sched.on_departure(id, &mut self.world);
                     self.refresh_departures();
                     self.sample_metrics();
+                    self.maybe_compact();
                 }
             }
         }
@@ -295,8 +361,13 @@ impl Simulation {
             .iter()
             .filter(|s| s.phase != Phase::Done)
             .count();
-        self.metrics
-            .finalize(self.world.now, events, unfinished, wall.elapsed().as_secs_f64())
+        self.metrics.finalize(
+            self.world.now,
+            events,
+            unfinished,
+            wall.elapsed().as_secs_f64(),
+            self.compactions,
+        )
     }
 }
 
@@ -320,28 +391,6 @@ pub fn simulate_with_mode(
     mode: EngineMode,
 ) -> SimResult {
     Simulation::with_mode(requests, cluster, policy, kind, mode).run()
-}
-
-/// Multi-seed runner over a workload spec: runs `seeds` independent
-/// simulations of `apps` applications each on the paper's cluster and
-/// merges the sample sets (the paper reports 10 runs per configuration).
-pub fn run_many(
-    spec: &crate::workload::WorkloadSpec,
-    apps: u32,
-    seeds: std::ops::Range<u64>,
-    policy: Policy,
-    kind: SchedKind,
-) -> SimResult {
-    let mut merged: Option<SimResult> = None;
-    for seed in seeds {
-        let reqs = spec.generate(apps, seed);
-        let res = simulate(reqs, Cluster::paper_sim(), policy, kind);
-        match &mut merged {
-            None => merged = Some(res),
-            Some(m) => m.merge(&res),
-        }
-    }
-    merged.expect("at least one seed")
 }
 
 #[cfg(test)]
@@ -485,5 +534,17 @@ mod tests {
         let mut r = unit_request(0, 0.0, 10.0, 1, 0);
         r.arrival = f64::NAN;
         let _ = Simulation::new(vec![r], Cluster::units(4), Policy::FIFO, SchedKind::Rigid);
+    }
+
+    #[test]
+    fn small_runs_never_compact() {
+        // The compaction floor keeps tiny heaps untouched.
+        let res = simulate(
+            fig1_requests(),
+            Cluster::units(10),
+            Policy::FIFO,
+            SchedKind::Flexible,
+        );
+        assert_eq!(res.heap_compactions, 0);
     }
 }

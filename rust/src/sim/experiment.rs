@@ -1,0 +1,343 @@
+//! The parallel experiment driver: fan a deterministic
+//! `seeds × configurations` grid of independent simulations out over
+//! scoped worker threads and merge the per-seed [`SimResult`]s.
+//!
+//! The paper evaluates every scheduler configuration over 10 independent
+//! seeds; those runs share nothing (each builds its own request trace,
+//! cluster and scheduler from a seed), so they parallelize perfectly.
+//! [`ExperimentPlan`] materializes the grid, hands tasks to workers
+//! through a work-stealing index counter, and collects results into
+//! per-configuration slots.
+//!
+//! # Determinism
+//!
+//! Parallelism only changes *when* a seed is simulated, never *what* it
+//! computes: a task's inputs are a pure function of `(spec, apps, seed,
+//! config)`, so every per-seed `SimResult` is byte-identical to what the
+//! serial path produces (asserted in `rust/tests/sim_properties.rs`).
+//! Merging happens after all workers join, in seed order, so merged
+//! results are bit-deterministic too — independent of thread count and
+//! scheduling. The only non-deterministic field is `wall_secs` (measured
+//! wall-clock time).
+//!
+//! # Worker count
+//!
+//! `threads(0)` (the default) uses `ZOE_SIM_THREADS` when set, otherwise
+//! `std::thread::available_parallelism()`, capped at the number of tasks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::policy::Policy;
+use crate::pool::Cluster;
+use crate::sched::SchedKind;
+use crate::sim::{simulate_with_mode, EngineMode, SimResult};
+use crate::workload::WorkloadSpec;
+
+/// One scheduler configuration in an experiment grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Waiting-line sorting policy.
+    pub policy: Policy,
+    /// Scheduler family.
+    pub kind: SchedKind,
+}
+
+impl SimConfig {
+    /// A configuration from its two components.
+    pub fn new(policy: Policy, kind: SchedKind) -> Self {
+        SimConfig { policy, kind }
+    }
+
+    /// `"<policy>/<scheduler>"`, for report headings.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.policy.label(), self.kind.label())
+    }
+}
+
+/// A deterministic grid of independent simulations:
+/// `seeds × configurations` of `apps` applications drawn from one
+/// workload spec, executed by [`ExperimentPlan::run`].
+///
+/// ```no_run
+/// use zoe::policy::Policy;
+/// use zoe::sched::SchedKind;
+/// use zoe::sim::ExperimentPlan;
+/// use zoe::workload::WorkloadSpec;
+///
+/// let result = ExperimentPlan::new(WorkloadSpec::paper_batch_only(), 8_000)
+///     .seeds(1..11)
+///     .config(Policy::FIFO, SchedKind::Rigid)
+///     .config(Policy::FIFO, SchedKind::Flexible)
+///     .run();
+/// for run in &result.runs {
+///     let mut merged = run.merged();
+///     merged.print_report(&run.config.label());
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct ExperimentPlan {
+    spec: WorkloadSpec,
+    apps: u32,
+    cluster: Cluster,
+    seeds: Vec<u64>,
+    configs: Vec<SimConfig>,
+    mode: EngineMode,
+    threads: usize,
+}
+
+impl ExperimentPlan {
+    /// A plan over `apps` applications per seed, on the paper's simulated
+    /// cluster, with no seeds or configurations yet (add them with
+    /// [`seeds`](Self::seeds) and [`config`](Self::config)).
+    pub fn new(spec: WorkloadSpec, apps: u32) -> Self {
+        ExperimentPlan {
+            spec,
+            apps,
+            cluster: Cluster::paper_sim(),
+            seeds: Vec::new(),
+            configs: Vec::new(),
+            mode: EngineMode::Optimized,
+            threads: 0,
+        }
+    }
+
+    /// Replace the simulated cluster (default: [`Cluster::paper_sim`]).
+    pub fn cluster(mut self, cluster: Cluster) -> Self {
+        self.cluster = cluster;
+        self
+    }
+
+    /// Set the seeds to simulate (any iterator of `u64`, e.g. `1..11`).
+    pub fn seeds(mut self, seeds: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = seeds.into_iter().collect();
+        self
+    }
+
+    /// Add one `(policy, scheduler)` configuration to the grid.
+    pub fn config(mut self, policy: Policy, kind: SchedKind) -> Self {
+        self.configs.push(SimConfig::new(policy, kind));
+        self
+    }
+
+    /// Set the engine mode (default: [`EngineMode::Optimized`]).
+    pub fn mode(mut self, mode: EngineMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the worker-thread count; `0` (the default) auto-detects (see
+    /// module docs). `1` forces the serial path.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    fn worker_count(&self, tasks: usize) -> usize {
+        let requested = if self.threads > 0 {
+            self.threads
+        } else {
+            std::env::var("ZOE_SIM_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                })
+        };
+        requested.min(tasks).max(1)
+    }
+
+    fn run_one(&self, ci: usize, seed: u64) -> SimResult {
+        let requests = self.spec.generate(self.apps, seed);
+        let c = self.configs[ci];
+        simulate_with_mode(requests, self.cluster.clone(), c.policy, c.kind, self.mode)
+    }
+
+    /// Execute the whole grid and collect per-seed results, grouped by
+    /// configuration in insertion order.
+    ///
+    /// Tasks are claimed by workers through an atomic index counter
+    /// (work stealing: a worker that finishes a short seed immediately
+    /// picks up the next pending one). Panics inside a simulation
+    /// propagate after all workers join.
+    ///
+    /// # Panics
+    ///
+    /// An empty plan is a hard error: zero seeds or zero configurations
+    /// would silently produce an empty result, so both panic with a
+    /// clear message instead.
+    pub fn run(&self) -> ExperimentResult {
+        assert!(
+            !self.configs.is_empty(),
+            "ExperimentPlan: at least one configuration is required (got 0) — add .config(policy, kind)"
+        );
+        assert!(
+            !self.seeds.is_empty(),
+            "ExperimentPlan: at least one seed is required (got 0) — add .seeds(..)"
+        );
+        let n_seeds = self.seeds.len();
+        let tasks: Vec<(usize, u64)> = (0..self.configs.len())
+            .flat_map(|ci| self.seeds.iter().map(move |&s| (ci, s)))
+            .collect();
+        let slots: Vec<OnceLock<SimResult>> = (0..tasks.len()).map(|_| OnceLock::new()).collect();
+        let workers = self.worker_count(tasks.len());
+        if workers <= 1 {
+            for (i, &(ci, seed)) in tasks.iter().enumerate() {
+                let _ = slots[i].set(self.run_one(ci, seed));
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= tasks.len() {
+                            break;
+                        }
+                        let (ci, seed) = tasks[i];
+                        let _ = slots[i].set(self.run_one(ci, seed));
+                    });
+                }
+            });
+        }
+        let mut done = slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("every task slot was filled"));
+        let runs = self
+            .configs
+            .iter()
+            .map(|&config| ExperimentRun {
+                config,
+                per_seed: (0..n_seeds).map(|_| done.next().unwrap()).collect(),
+            })
+            .collect();
+        ExperimentResult {
+            seeds: self.seeds.clone(),
+            runs,
+        }
+    }
+}
+
+/// All per-seed results of one configuration, in seed order.
+pub struct ExperimentRun {
+    /// The configuration these results belong to.
+    pub config: SimConfig,
+    /// One result per plan seed, in the plan's seed order.
+    pub per_seed: Vec<SimResult>,
+}
+
+impl ExperimentRun {
+    /// Merge the per-seed results in seed order (deterministic; see
+    /// [`SimResult::merge`]).
+    pub fn merged(&self) -> SimResult {
+        let mut it = self.per_seed.iter();
+        let mut acc = it.next().expect("a run has at least one seed").clone();
+        for r in it {
+            acc.merge(r);
+        }
+        acc
+    }
+}
+
+/// The output of [`ExperimentPlan::run`].
+pub struct ExperimentResult {
+    /// The plan's seeds, in execution-grid order.
+    pub seeds: Vec<u64>,
+    /// One entry per configuration, in plan insertion order.
+    pub runs: Vec<ExperimentRun>,
+}
+
+impl ExperimentResult {
+    /// Merged result per configuration, in plan insertion order.
+    pub fn merged(&self) -> Vec<(SimConfig, SimResult)> {
+        self.runs.iter().map(|r| (r.config, r.merged())).collect()
+    }
+
+    /// Merged result of a single-configuration plan.
+    ///
+    /// # Panics
+    ///
+    /// Panics when the plan had more than one configuration.
+    pub fn into_single(self) -> SimResult {
+        assert_eq!(
+            self.runs.len(),
+            1,
+            "into_single on a {}-configuration experiment",
+            self.runs.len()
+        );
+        self.runs[0].merged()
+    }
+}
+
+/// Multi-seed runner over a workload spec: runs one simulation per seed
+/// in `seeds` (in parallel; see [`ExperimentPlan`]) of `apps`
+/// applications each on the paper's cluster and merges the results in
+/// seed order (the paper reports 10 runs per configuration).
+///
+/// # Panics
+///
+/// Panics when `seeds` is empty — a zero-seed experiment would silently
+/// return nothing.
+pub fn run_many(
+    spec: &WorkloadSpec,
+    apps: u32,
+    seeds: std::ops::Range<u64>,
+    policy: Policy,
+    kind: SchedKind,
+) -> SimResult {
+    ExperimentPlan::new(spec.clone(), apps)
+        .seeds(seeds)
+        .config(policy, kind)
+        .run()
+        .into_single()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape_and_labels() {
+        let plan = ExperimentPlan::new(WorkloadSpec::paper_batch_only(), 30)
+            .seeds([3, 7])
+            .config(Policy::FIFO, SchedKind::Rigid)
+            .config(Policy::sjf(), SchedKind::Flexible)
+            .threads(2);
+        let result = plan.run();
+        assert_eq!(result.seeds, vec![3, 7]);
+        assert_eq!(result.runs.len(), 2);
+        assert_eq!(result.runs[0].per_seed.len(), 2);
+        assert_eq!(result.runs[0].config.label(), "FIFO/rigid");
+        assert_eq!(result.runs[1].config.label(), "SJF-1D/flexible");
+        for run in &result.runs {
+            let merged = run.merged();
+            assert_eq!(merged.completed, 60, "{}", run.config.label());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one seed")]
+    fn zero_seeds_is_a_hard_error() {
+        let _ = ExperimentPlan::new(WorkloadSpec::paper_batch_only(), 10)
+            .config(Policy::FIFO, SchedKind::Rigid)
+            .run();
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one configuration")]
+    fn zero_configs_is_a_hard_error() {
+        let _ = ExperimentPlan::new(WorkloadSpec::paper_batch_only(), 10)
+            .seeds(1..3)
+            .run();
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one seed")]
+    fn run_many_rejects_empty_seed_range() {
+        let spec = WorkloadSpec::paper_batch_only();
+        let _ = run_many(&spec, 10, 1..1, Policy::FIFO, SchedKind::Rigid);
+    }
+}

@@ -2,11 +2,31 @@
 //! application turnaround, queuing time, slowdown (per application class),
 //! pending/running queue sizes, and CPU/RAM allocation fractions
 //! (time-weighted).
+//!
+//! [`SimResult`] is **mergeable** ([`SimResult::merge`]): the paper
+//! reports every configuration over 10 independent seeds, and the
+//! parallel experiment driver ([`crate::sim::ExperimentPlan`]) folds the
+//! per-seed results together. Merge semantics:
+//!
+//! * per-completion samples (turnaround / queuing / slowdown, overall and
+//!   per class) are combined as **multiset union** — exactly what running
+//!   one collector over the concatenated completions would record;
+//! * the time-weighted signals (queue sizes, allocation) combine their
+//!   value-by-duration distributions (sketch bucket addition), so the
+//!   merged box-plots weight every simulated second equally across seeds;
+//! * counters (`completed`, `events`, `unfinished`, `heap_compactions`,
+//!   `wall_secs`) add; `end_time` takes the max.
+//!
+//! Merging is deterministic: for a fixed sequence of `merge` calls the
+//! result is bit-identical, independent of how the inputs were computed
+//! (serial or parallel) — the experiment driver always merges in seed
+//! order.
 
 use crate::core::AppClass;
 use crate::util::stats::{BoxPlot, Samples, TimeWeighted};
 
 /// Collects metrics during a run.
+#[derive(Clone)]
 pub struct MetricsCollector {
     turnaround: Samples,
     queuing: Samples,
@@ -20,6 +40,7 @@ pub struct MetricsCollector {
 }
 
 impl MetricsCollector {
+    /// A collector with empty accumulators for every §4.1 metric.
     pub fn new() -> Self {
         let mk = |c| (c, Samples::new(), Samples::new(), Samples::new());
         MetricsCollector {
@@ -39,6 +60,7 @@ impl MetricsCollector {
         }
     }
 
+    /// Record one application completion with its three §4.1 metrics.
     pub fn record_completion(&mut self, class: AppClass, turnaround: f64, queuing: f64, slowdown: f64) {
         self.turnaround.push(turnaround);
         self.queuing.push(queuing);
@@ -53,6 +75,7 @@ impl MetricsCollector {
         self.completed += 1;
     }
 
+    /// Sample the piecewise-constant signals after an event at `now`.
     pub fn sample(&mut self, now: f64, pending: usize, running: usize, cpu_frac: f64, ram_frac: f64) {
         self.pending_q.update(now, pending as f64);
         self.running_q.update(now, running as f64);
@@ -60,7 +83,16 @@ impl MetricsCollector {
         self.ram_alloc.update(now, ram_frac);
     }
 
-    pub fn finalize(mut self, end: f64, events: u64, unfinished: usize, wall_secs: f64) -> SimResult {
+    /// Close the signals at `end` and package everything into a
+    /// [`SimResult`].
+    pub fn finalize(
+        mut self,
+        end: f64,
+        events: u64,
+        unfinished: usize,
+        wall_secs: f64,
+        heap_compactions: u64,
+    ) -> SimResult {
         self.pending_q.finish(end);
         self.running_q.finish(end);
         self.cpu_alloc.finish(end);
@@ -88,6 +120,7 @@ impl MetricsCollector {
             unfinished,
             end_time: end,
             wall_secs,
+            heap_compactions,
         }
     }
 }
@@ -99,35 +132,59 @@ impl Default for MetricsCollector {
 }
 
 /// Per-application-class metric samples.
+#[derive(Clone)]
 pub struct ClassMetrics {
+    /// Which application class these samples belong to.
     pub class: AppClass,
+    /// Turnaround times (completion − arrival), seconds.
     pub turnaround: Samples,
+    /// Queuing times (admission − arrival), seconds.
     pub queuing: Samples,
+    /// Slowdowns (execution time / isolated runtime), dimensionless ≥ 1.
     pub slowdown: Samples,
 }
 
-/// The output of one simulation run.
+/// The output of one simulation run (or of several merged runs).
+#[derive(Clone)]
 pub struct SimResult {
+    /// Turnaround times of all completed applications, seconds.
     pub turnaround: Samples,
+    /// Queuing times of all completed applications, seconds.
     pub queuing: Samples,
+    /// Slowdowns of all completed applications (≥ 1).
     pub slowdown: Samples,
+    /// The same three metrics split by application class.
     pub per_class: Vec<ClassMetrics>,
+    /// Pending-queue size over time (time-weighted).
     pub pending_q: TimeWeighted,
+    /// Serving-set size over time (time-weighted).
     pub running_q: TimeWeighted,
+    /// Allocated CPU fraction over time (time-weighted).
     pub cpu_alloc: TimeWeighted,
+    /// Allocated RAM fraction over time (time-weighted).
     pub ram_alloc: TimeWeighted,
+    /// Number of completed applications.
     pub completed: u64,
+    /// Number of events processed by the engine.
     pub events: u64,
+    /// Applications that never completed (0 in a healthy run).
     pub unfinished: usize,
+    /// Simulated end time, seconds.
     pub end_time: f64,
+    /// Wall-clock seconds spent simulating (summed across merged runs).
     pub wall_secs: f64,
+    /// Event-heap compactions performed (stale lazy-deleted entries
+    /// evicted in bulk; see `sim::engine`).
+    pub heap_compactions: u64,
 }
 
 impl SimResult {
+    /// The per-class metrics for `c` (panics on an unknown class).
     pub fn class(&self, c: AppClass) -> &ClassMetrics {
         self.per_class.iter().find(|m| m.class == c).unwrap()
     }
 
+    /// Mutable access to the per-class metrics for `c`.
     pub fn class_mut(&mut self, c: AppClass) -> &mut ClassMetrics {
         self.per_class.iter_mut().find(|m| m.class == c).unwrap()
     }
@@ -137,7 +194,9 @@ impl SimResult {
         self.class_mut(c).turnaround.boxplot()
     }
 
-    /// Merge another run's samples into this one (multi-seed aggregation).
+    /// Merge another run's metrics into this one (multi-seed
+    /// aggregation). See the module docs for the exact semantics;
+    /// merging in a fixed order is deterministic.
     pub fn merge(&mut self, other: &SimResult) {
         self.turnaround.extend(&other.turnaround);
         self.queuing.extend(&other.queuing);
@@ -148,14 +207,15 @@ impl SimResult {
             m.queuing.extend(&o.queuing);
             m.slowdown.extend(&o.slowdown);
         }
-        self.pending_q.intervals.extend(other.pending_q.intervals.iter().copied());
-        self.running_q.intervals.extend(other.running_q.intervals.iter().copied());
-        self.cpu_alloc.intervals.extend(other.cpu_alloc.intervals.iter().copied());
-        self.ram_alloc.intervals.extend(other.ram_alloc.intervals.iter().copied());
+        self.pending_q.merge(&other.pending_q);
+        self.running_q.merge(&other.running_q);
+        self.cpu_alloc.merge(&other.cpu_alloc);
+        self.ram_alloc.merge(&other.ram_alloc);
         self.completed += other.completed;
         self.events += other.events;
         self.unfinished += other.unfinished;
         self.wall_secs += other.wall_secs;
+        self.heap_compactions += other.heap_compactions;
         self.end_time = self.end_time.max(other.end_time);
     }
 
@@ -223,7 +283,7 @@ mod tests {
         m.record_completion(AppClass::BatchElastic, 10.0, 2.0, 1.0);
         m.record_completion(AppClass::BatchRigid, 20.0, 4.0, 1.0);
         m.record_completion(AppClass::BatchRigid, 30.0, 6.0, 1.0);
-        let r = m.finalize(100.0, 6, 0, 0.0);
+        let r = m.finalize(100.0, 6, 0, 0.0, 0);
         assert_eq!(r.class(AppClass::BatchElastic).turnaround.len(), 1);
         assert_eq!(r.class(AppClass::BatchRigid).turnaround.len(), 2);
         assert_eq!(r.class(AppClass::Interactive).turnaround.len(), 0);
@@ -235,12 +295,34 @@ mod tests {
     fn merge_accumulates() {
         let mut a = MetricsCollector::new();
         a.record_completion(AppClass::BatchElastic, 10.0, 0.0, 1.0);
-        let mut ra = a.finalize(10.0, 2, 0, 0.1);
+        let mut ra = a.finalize(10.0, 2, 0, 0.1, 1);
         let mut b = MetricsCollector::new();
         b.record_completion(AppClass::BatchElastic, 30.0, 0.0, 1.0);
-        let rb = b.finalize(20.0, 2, 0, 0.1);
+        let rb = b.finalize(20.0, 2, 0, 0.1, 2);
         ra.merge(&rb);
         assert_eq!(ra.completed, 2);
         assert!((ra.turnaround.mean() - 20.0).abs() < 1e-9);
+        assert_eq!(ra.events, 4);
+        assert_eq!(ra.heap_compactions, 3);
+        assert_eq!(ra.end_time, 20.0);
+    }
+
+    #[test]
+    fn merge_combines_time_weighted_distributions() {
+        // Seed A: 1 pending for 10s. Seed B: 3 pending for 30s.
+        // Merged mean pending = (10 + 90) / 40 = 2.5.
+        let mut a = MetricsCollector::new();
+        a.sample(0.0, 1, 0, 0.0, 0.0);
+        let mut ra = a.finalize(10.0, 1, 0, 0.0, 0);
+        let mut b = MetricsCollector::new();
+        b.sample(0.0, 3, 0, 0.0, 0.0);
+        let rb = b.finalize(30.0, 1, 0, 0.0, 0);
+        ra.merge(&rb);
+        let bp = ra.pending_q.boxplot();
+        assert!((bp.mean - 2.5).abs() < 1e-9, "merged mean {}", bp.mean);
+        // The v0=0 starting interval has zero width, so the observed
+        // minimum is seed A's value.
+        assert_eq!(bp.min, 1.0);
+        assert_eq!(bp.max, 3.0);
     }
 }

@@ -6,9 +6,21 @@
 //! components granted `g(t)` elastic components progresses at rate
 //! `C + g(t)` component-seconds per second until its work
 //! `W = T·(C+E)` is done.
+//!
+//! Three layers:
+//!
+//! * [`Simulation`] (`engine`) — one run: the O(changed)-per-event loop
+//!   with lazy work accrual, changed-set departure refresh, and event-heap
+//!   compaction;
+//! * [`MetricsCollector`] / [`SimResult`] (`metrics`) — the §4.1 metrics,
+//!   with deterministic multi-run [`SimResult::merge`];
+//! * [`ExperimentPlan`] (`experiment`) — the parallel multi-seed /
+//!   multi-configuration driver used by the CLI, examples and benches.
 
 mod engine;
+mod experiment;
 mod metrics;
 
 pub use engine::*;
+pub use experiment::*;
 pub use metrics::*;

@@ -4,8 +4,10 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: positional arguments plus `--key value` flags.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Arguments that are not flags, in order.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
 }
@@ -36,34 +38,41 @@ impl Args {
         args
     }
 
+    /// Parse the process arguments (skipping the binary name).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Was `--key` given (with or without a value)?
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// The value of `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `--key`, or `default`.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `--key` parsed as an integer, or `default`; exits on bad input.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as a number, or `default`; exits on bad input.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as a `usize`, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.u64_or(key, default as u64) as usize
     }

@@ -17,6 +17,7 @@ pub struct Empirical {
 }
 
 impl Empirical {
+    /// Linear-space interpolation between the control points.
     pub fn new(points: Vec<(f64, f64)>) -> Self {
         Self::build(points, false)
     }
@@ -80,12 +81,16 @@ impl Empirical {
 /// long gaps).
 #[derive(Clone, Debug)]
 pub struct Mixture {
+    /// Probability of sampling from `a`.
     pub w0: f64,
+    /// First mode (e.g. the burst inter-arrivals).
     pub a: Empirical,
+    /// Second mode (e.g. the long gaps).
     pub b: Empirical,
 }
 
 impl Mixture {
+    /// Sample one value from the mixture.
     pub fn sample(&self, rng: &mut Rng) -> f64 {
         if rng.chance(self.w0) {
             self.a.sample(rng)

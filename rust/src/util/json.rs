@@ -9,17 +9,26 @@ use std::fmt::Write as _;
 /// A JSON value. Objects use `BTreeMap` so serialization is deterministic.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys → deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse failure, with the byte offset it occurred at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -32,6 +41,7 @@ impl std::fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing input).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: s.as_bytes(),
@@ -48,6 +58,7 @@ impl Json {
 
     // ---- accessors -------------------------------------------------------
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if it is one exactly.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -65,6 +77,7 @@ impl Json {
         })
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -72,6 +85,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -79,6 +93,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -86,6 +101,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -102,26 +118,32 @@ impl Json {
         }
     }
 
+    /// Is this `Json::Null`?
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
 
     // ---- constructors ----------------------------------------------------
 
+    /// A `Str` from anything string-like.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// A `Num`.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// An `Obj` from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
     // ---- serialization ---------------------------------------------------
 
+    /// Serialize compactly (deterministic: object keys are sorted).
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

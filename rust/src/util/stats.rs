@@ -1,5 +1,22 @@
 //! Statistics: percentiles, box-plot summaries (the paper reports all
-//! evaluation results as box-plots), CDFs and time-weighted means.
+//! evaluation results as box-plots), CDFs, and **mergeable** time-weighted
+//! signal summaries.
+//!
+//! Two accumulator families with different fidelity/memory trade-offs:
+//!
+//! * [`Samples`] stores every value and answers *exact* percentiles.
+//!   It is used for the per-completion metrics (turnaround, queuing,
+//!   slowdown), where exactness is what lets the differential and
+//!   parallel-vs-serial property tests assert sample-set equality.
+//! * [`WeightedSketch`] is a fixed-precision streaming quantile sketch
+//!   (log-spaced buckets, ≤ ~1 % relative error). [`TimeWeighted`] is
+//!   built on it: the per-event queue-size and allocation signals are
+//!   only ever consumed through quantiles, so the O(events) interval
+//!   list the seed kept has been replaced by an O(1)-per-update, O(1)
+//!   memory, deterministically **mergeable** summary — what makes
+//!   multi-seed [`crate::sim::SimResult::merge`] cheap.
+
+use std::collections::BTreeMap;
 
 /// A sample accumulator with exact percentiles (stores values; the
 /// workloads here are ≤ a few hundred thousand samples per metric).
@@ -10,29 +27,35 @@ pub struct Samples {
 }
 
 impl Samples {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one value.
     pub fn push(&mut self, x: f64) {
         debug_assert!(x.is_finite(), "non-finite sample {x}");
         self.xs.push(x);
         self.sorted = false;
     }
 
+    /// Append every sample of `other` (multi-seed merge).
     pub fn extend(&mut self, other: &Samples) {
         self.xs.extend_from_slice(&other.xs);
         self.sorted = false;
     }
 
+    /// Number of recorded samples.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
+    /// Whether no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             return f64::NAN;
@@ -40,14 +63,17 @@ impl Samples {
         self.xs.iter().sum::<f64>() / self.xs.len() as f64
     }
 
+    /// Sum of all samples.
     pub fn sum(&self) -> f64 {
         self.xs.iter().sum()
     }
 
+    /// Smallest sample (+∞ when empty).
     pub fn min(&self) -> f64 {
         self.xs.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -76,6 +102,7 @@ impl Samples {
         self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
     }
 
+    /// The 50th percentile.
     pub fn median(&mut self) -> f64 {
         self.percentile(50.0)
     }
@@ -107,6 +134,8 @@ impl Samples {
             .collect()
     }
 
+    /// The raw sample values, in insertion (or sorted, after a
+    /// percentile query) order.
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
@@ -115,14 +144,23 @@ impl Samples {
 /// Five-number (plus mean/min/max) box-plot summary.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BoxPlot {
+    /// Number of samples summarized.
     pub n: usize,
+    /// 5th percentile (lower whisker).
     pub p5: f64,
+    /// First quartile (box bottom).
     pub q1: f64,
+    /// 50th percentile.
     pub median: f64,
+    /// Third quartile (box top).
     pub q3: f64,
+    /// 95th percentile (upper whisker).
     pub p95: f64,
+    /// Arithmetic (or duration-weighted) mean.
     pub mean: f64,
+    /// Smallest observed value.
     pub min: f64,
+    /// Largest observed value.
     pub max: f64,
 }
 
@@ -136,27 +174,210 @@ impl std::fmt::Display for BoxPlot {
     }
 }
 
-/// Time-weighted average of a piecewise-constant signal (queue sizes,
-/// allocated-fraction). Also collects the per-interval values as weighted
-/// samples for percentile reporting.
+/// Log-bucket growth factor: quantile answers carry at most
+/// `√GAMMA − 1 ≈ 1 %` relative error.
+const GAMMA: f64 = 1.02;
+
+/// Mergeable streaming quantile sketch over **non-negative** weighted
+/// samples (HDR-histogram style).
+///
+/// Values are binned into log-spaced buckets of width factor [`GAMMA`]
+/// (exact-zero values get a dedicated bucket); each bucket accumulates
+/// the total weight that fell into it. Quantile queries walk the buckets
+/// and return the bucket's geometric midpoint, clamped to the exact
+/// observed `[min, max]` — so answers are within ~1 % relative error
+/// while the sketch itself is O(#distinct magnitudes) memory regardless
+/// of how many samples were pushed.
+///
+/// Merging adds bucket weights pointwise, which is associative and
+/// commutative up to float rounding; with a fixed merge order (as the
+/// experiment driver uses) the result is bit-deterministic.
+#[derive(Clone, Debug)]
+pub struct WeightedSketch {
+    /// Weight recorded at exactly zero (empty-queue intervals are common).
+    zero_weight: f64,
+    /// Log-bucket index → accumulated weight.
+    buckets: BTreeMap<i32, f64>,
+    /// Exact Σ weight (including the zero bucket).
+    total_weight: f64,
+    /// Exact Σ value·weight, so means are exact, not bucketed.
+    weighted_sum: f64,
+    /// Exact smallest pushed value.
+    min: f64,
+    /// Exact largest pushed value.
+    max: f64,
+    /// Number of `push` calls recorded (across merges).
+    n: usize,
+}
+
+impl Default for WeightedSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WeightedSketch {
+    /// An empty sketch.
+    pub fn new() -> Self {
+        WeightedSketch {
+            zero_weight: 0.0,
+            buckets: BTreeMap::new(),
+            total_weight: 0.0,
+            weighted_sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            n: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(v: f64) -> i32 {
+        (v.ln() / GAMMA.ln()).floor() as i32
+    }
+
+    #[inline]
+    fn representative(i: i32) -> f64 {
+        ((i as f64 + 0.5) * GAMMA.ln()).exp()
+    }
+
+    /// Record `value` with weight `weight` (ignored when the weight is
+    /// not positive). Values must be non-negative and finite; tiny
+    /// negative values from float cancellation (e.g. an allocation
+    /// fraction whose used-counter drifted below zero by an ulp) are
+    /// clamped to zero.
+    pub fn push(&mut self, value: f64, weight: f64) {
+        debug_assert!(value.is_finite() && value >= -1e-6, "bad sketch value {value}");
+        debug_assert!(weight.is_finite(), "bad sketch weight {weight}");
+        let value = value.max(0.0);
+        if weight <= 0.0 {
+            return;
+        }
+        self.n += 1;
+        self.total_weight += weight;
+        self.weighted_sum += value * weight;
+        if value < self.min {
+            self.min = value;
+        }
+        if value > self.max {
+            self.max = value;
+        }
+        if value <= 0.0 {
+            self.zero_weight += weight;
+        } else {
+            *self.buckets.entry(Self::bucket_of(value)).or_insert(0.0) += weight;
+        }
+    }
+
+    /// Fold `other` into `self` (pointwise bucket-weight addition).
+    pub fn merge(&mut self, other: &WeightedSketch) {
+        self.zero_weight += other.zero_weight;
+        for (&i, &w) in &other.buckets {
+            *self.buckets.entry(i).or_insert(0.0) += w;
+        }
+        self.total_weight += other.total_weight;
+        self.weighted_sum += other.weighted_sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.n += other.n;
+    }
+
+    /// Total recorded weight.
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Number of `push` calls recorded.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Exact weighted mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total_weight <= 0.0 {
+            f64::NAN
+        } else {
+            self.weighted_sum / self.total_weight
+        }
+    }
+
+    /// Exact smallest pushed value (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest pushed value (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Weighted quantile, `p` in `[0, 100]`, within ~1 % relative error
+    /// (NaN when empty).
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.total_weight <= 0.0 {
+            return f64::NAN;
+        }
+        let target = (p / 100.0).clamp(0.0, 1.0) * self.total_weight;
+        let mut acc = self.zero_weight;
+        if acc >= target && self.zero_weight > 0.0 {
+            return 0.0;
+        }
+        for (&i, &w) in &self.buckets {
+            acc += w;
+            if acc >= target {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Box-plot summary over the weighted distribution.
+    pub fn boxplot(&self) -> BoxPlot {
+        BoxPlot {
+            n: self.n,
+            p5: self.quantile(5.0),
+            q1: self.quantile(25.0),
+            median: self.quantile(50.0),
+            q3: self.quantile(75.0),
+            p95: self.quantile(95.0),
+            mean: self.mean(),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+}
+
+/// Time-weighted summary of a piecewise-constant signal (queue sizes,
+/// allocated-fraction): exact mean plus a [`WeightedSketch`] of the
+/// value-by-duration distribution.
+///
+/// The seed implementation kept every `(value, duration)` interval —
+/// O(events) memory per metric and O(n log n) per percentile query; this
+/// version is O(1) per update and mergeable across runs (multi-seed
+/// aggregation) with quantiles within ~1 % relative error. Means, min
+/// and max stay exact.
 #[derive(Clone, Debug)]
 pub struct TimeWeighted {
     last_t: f64,
     last_v: f64,
-    area: f64,
-    t0: f64,
-    /// (value, duration) pairs for weighted percentiles.
-    pub intervals: Vec<(f64, f64)>,
+    /// Value-by-duration distribution of the signal.
+    sketch: WeightedSketch,
 }
 
 impl TimeWeighted {
+    /// Start observing a signal whose value is `v0` from time `t0`.
     pub fn new(t0: f64, v0: f64) -> Self {
         TimeWeighted {
             last_t: t0,
             last_v: v0,
-            area: 0.0,
-            t0,
-            intervals: Vec::new(),
+            sketch: WeightedSketch::new(),
         }
     }
 
@@ -165,8 +386,7 @@ impl TimeWeighted {
         debug_assert!(t >= self.last_t, "time goes forward");
         let dt = t - self.last_t;
         if dt > 0.0 {
-            self.area += self.last_v * dt;
-            self.intervals.push((self.last_v, dt));
+            self.sketch.push(self.last_v, dt);
         }
         self.last_t = t;
         self.last_v = v;
@@ -175,51 +395,35 @@ impl TimeWeighted {
     /// Close the signal at time `t` and return the time-weighted mean.
     pub fn finish(&mut self, t: f64) -> f64 {
         self.update(t, self.last_v);
-        let span = t - self.t0;
-        if span <= 0.0 {
+        if self.sketch.total_weight() <= 0.0 {
             return self.last_v;
         }
-        self.area / span
+        self.sketch.mean()
     }
 
-    /// Weighted percentile over the recorded intervals.
+    /// Fold another (finished) signal's distribution into this one
+    /// (multi-seed merge). Only the distribution is combined; the
+    /// merged value is no longer a single signal, so `update` should
+    /// not be called afterwards.
+    pub fn merge(&mut self, other: &TimeWeighted) {
+        self.sketch.merge(&other.sketch);
+    }
+
+    /// Weighted percentile over the observed distribution (within ~1 %
+    /// relative error; exact at p=0/p=100, which return min/max).
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.intervals.is_empty() {
-            return f64::NAN;
+        if p <= 0.0 {
+            return self.sketch.min();
         }
-        let mut iv = self.intervals.clone();
-        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let total: f64 = iv.iter().map(|(_, d)| d).sum();
-        let target = p / 100.0 * total;
-        let mut acc = 0.0;
-        for (v, d) in iv {
-            acc += d;
-            if acc >= target {
-                return v;
-            }
+        if p >= 100.0 {
+            return self.sketch.max();
         }
-        f64::NAN
+        self.sketch.quantile(p)
     }
 
     /// Box-plot over the time-weighted distribution.
     pub fn boxplot(&self) -> BoxPlot {
-        let total: f64 = self.intervals.iter().map(|(_, d)| d).sum();
-        let mean = if total > 0.0 {
-            self.intervals.iter().map(|(v, d)| v * d).sum::<f64>() / total
-        } else {
-            f64::NAN
-        };
-        BoxPlot {
-            n: self.intervals.len(),
-            p5: self.percentile(5.0),
-            q1: self.percentile(25.0),
-            median: self.percentile(50.0),
-            q3: self.percentile(75.0),
-            p95: self.percentile(95.0),
-            mean,
-            min: self.percentile(0.0),
-            max: self.percentile(100.0),
-        }
+        self.sketch.boxplot()
     }
 }
 
@@ -268,7 +472,8 @@ mod tests {
 
     #[test]
     fn time_weighted_mean() {
-        // v=2 for 10s, v=4 for 30s → mean = (20+120)/40 = 3.5
+        // v=2 for 10s, v=4 for 30s → mean = (20+120)/40 = 3.5 (exact:
+        // means are computed from exact sums, not buckets).
         let mut tw = TimeWeighted::new(0.0, 2.0);
         tw.update(10.0, 4.0);
         let m = tw.finish(40.0);
@@ -280,8 +485,119 @@ mod tests {
         let mut tw = TimeWeighted::new(0.0, 1.0);
         tw.update(90.0, 100.0); // v=1 for 90s, then v=100 for 10s
         tw.finish(100.0);
-        assert_eq!(tw.percentile(50.0), 1.0);
-        assert_eq!(tw.percentile(99.0), 100.0);
+        // Quantiles are sketched: within 2 % relative.
+        let p50 = tw.percentile(50.0);
+        assert!((p50 - 1.0).abs() / 1.0 < 0.02, "p50={p50}");
+        let p99 = tw.percentile(99.0);
+        assert!((p99 - 100.0).abs() / 100.0 < 0.02, "p99={p99}");
+        // Extremes are exact.
+        assert_eq!(tw.percentile(0.0), 1.0);
+        assert_eq!(tw.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn sketch_relative_error_bound() {
+        // Random weighted data: every sketched quantile must be within
+        // 1.5 % relative of the exact weighted quantile.
+        let mut r = crate::util::rng::Rng::new(21);
+        let mut sk = WeightedSketch::new();
+        let mut iv: Vec<(f64, f64)> = Vec::new();
+        for _ in 0..5_000 {
+            let v = r.bounded_pareto(1.1, 0.01, 1e6);
+            let w = r.range_f64(0.1, 10.0);
+            sk.push(v, w);
+            iv.push((v, w));
+        }
+        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total: f64 = iv.iter().map(|&(_, w)| w).sum();
+        for p in [1.0, 5.0, 25.0, 50.0, 75.0, 95.0, 99.0] {
+            let target = p / 100.0 * total;
+            let mut acc = 0.0;
+            let mut exact = iv.last().unwrap().0;
+            for &(v, w) in &iv {
+                acc += w;
+                if acc >= target {
+                    exact = v;
+                    break;
+                }
+            }
+            let got = sk.quantile(p);
+            assert!(
+                (got - exact).abs() / exact.abs().max(1e-12) < 0.015,
+                "p{p}: sketch {got} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_zero_values_and_extremes() {
+        let mut sk = WeightedSketch::new();
+        sk.push(0.0, 50.0);
+        sk.push(3.0, 50.0);
+        assert_eq!(sk.quantile(25.0), 0.0);
+        assert_eq!(sk.min(), 0.0);
+        assert_eq!(sk.max(), 3.0);
+        assert!((sk.mean() - 1.5).abs() < 1e-12);
+        // p=100 lands in the last bucket; clamped to the exact max.
+        assert!(sk.quantile(100.0) <= 3.0 + 1e-12);
+    }
+
+    #[test]
+    fn sketch_empty_is_nan() {
+        let sk = WeightedSketch::new();
+        assert!(sk.quantile(50.0).is_nan());
+        assert!(sk.mean().is_nan());
+        assert!(sk.min().is_nan());
+        assert_eq!(sk.count(), 0);
+    }
+
+    #[test]
+    fn sketch_merge_matches_single_stream() {
+        // Pushing a stream into one sketch equals pushing its halves into
+        // two sketches and merging — same buckets, same totals.
+        let mut r = crate::util::rng::Rng::new(22);
+        let data: Vec<(f64, f64)> = (0..2_000)
+            .map(|_| (r.range_f64(0.0, 500.0), r.range_f64(0.5, 5.0)))
+            .collect();
+        let mut whole = WeightedSketch::new();
+        let mut a = WeightedSketch::new();
+        let mut b = WeightedSketch::new();
+        for (i, &(v, w)) in data.iter().enumerate() {
+            whole.push(v, w);
+            if i % 2 == 0 {
+                a.push(v, w);
+            } else {
+                b.push(v, w);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(whole.count(), a.count());
+        assert!((whole.total_weight() - a.total_weight()).abs() < 1e-6);
+        assert_eq!(whole.min(), a.min());
+        assert_eq!(whole.max(), a.max());
+        // Bucket weights were summed in different orders, so a cumulative
+        // weight can straddle a quantile target by an ulp — allow one
+        // bucket width of slack.
+        for p in [5.0, 50.0, 95.0] {
+            let (x, y) = (whole.quantile(p), a.quantile(p));
+            assert!(
+                (x - y).abs() <= 0.025 * (1.0 + x.abs()),
+                "p{p}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn time_weighted_merge_combines_distributions() {
+        let mut a = TimeWeighted::new(0.0, 2.0);
+        a.finish(10.0); // v=2 for 10s
+        let mut b = TimeWeighted::new(0.0, 4.0);
+        b.finish(30.0); // v=4 for 30s
+        a.merge(&b);
+        let bp = a.boxplot();
+        assert!((bp.mean - 3.5).abs() < 1e-9, "merged mean {}", bp.mean);
+        assert_eq!(bp.min, 2.0);
+        assert_eq!(bp.max, 4.0);
     }
 
     #[test]

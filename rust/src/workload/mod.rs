@@ -47,12 +47,14 @@ pub struct WorkloadSpec {
     /// fraction of cluster CPU — guarantees schedulability (a request
     /// whose cores exceed an empty cluster would deadlock any scheduler).
     pub max_core_cpu: f64,
+    /// RAM counterpart of `max_core_cpu`.
     pub max_core_ram_mb: f64,
     /// Hard cap on a single application's aggregate *full* demand
     /// (cores + elastic). The rigid baseline allocates full demands, so
     /// demands beyond the cluster would starve under it; the paper's
     /// trace-derived workload is implicitly bounded the same way.
     pub max_full_cpu: f64,
+    /// RAM counterpart of `max_full_cpu`.
     pub max_full_ram_mb: f64,
     /// Multiplier on sampled inter-arrival times (load knob: >1 = lighter).
     pub arrival_scale: f64,

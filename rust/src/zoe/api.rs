@@ -100,6 +100,7 @@ fn err_json(msg: &str) -> Json {
 
 /// The API server: listens on `addr`, one thread per connection.
 pub struct ApiServer {
+    /// The address actually bound (resolves port 0).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
@@ -137,6 +138,7 @@ impl ApiServer {
         })
     }
 
+    /// Stop accepting and join the accept thread.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
@@ -179,6 +181,7 @@ pub struct ApiClient {
 }
 
 impl ApiClient {
+    /// Connect to a master's API server.
     pub fn connect(addr: &str) -> Result<ApiClient> {
         let stream = TcpStream::connect(addr)?;
         Ok(ApiClient {
@@ -187,6 +190,7 @@ impl ApiClient {
         })
     }
 
+    /// Send one request object and read one response line.
     pub fn call(&mut self, req: &Json) -> Result<Json> {
         self.stream.write_all(req.to_string().as_bytes())?;
         self.stream.write_all(b"\n")?;
@@ -196,6 +200,7 @@ impl ApiClient {
         Ok(resp)
     }
 
+    /// Submit an application; returns the assigned id.
     pub fn submit(&mut self, desc: &AppDescription) -> Result<u32> {
         let resp = self.call(&Json::obj(vec![
             ("op", Json::str("submit")),
@@ -210,6 +215,7 @@ impl ApiClient {
         Ok(resp.get("id").as_u64().unwrap_or(0) as u32)
     }
 
+    /// Fetch one application's status object.
     pub fn status(&mut self, id: u32) -> Result<Json> {
         self.call(&Json::obj(vec![
             ("op", Json::str("status")),
@@ -217,10 +223,12 @@ impl ApiClient {
         ]))
     }
 
+    /// Fetch cluster-wide stats.
     pub fn stats(&mut self) -> Result<Json> {
         self.call(&Json::obj(vec![("op", Json::str("stats"))]))
     }
 
+    /// Ask the master to kill an application.
     pub fn kill(&mut self, id: u32) -> Result<Json> {
         self.call(&Json::obj(vec![
             ("op", Json::str("kill")),

@@ -11,11 +11,17 @@ use crate::util::json::Json;
 /// One component group (homogeneous replicas of a framework component).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ComponentDef {
+    /// Component-group name (e.g. "worker").
     pub name: String,
+    /// Core or elastic (§2.1).
     pub class: ComponentClass,
+    /// Number of replicas in the group.
     pub count: u32,
+    /// Per-replica CPU cores.
     pub cpu: f64,
+    /// Per-replica RAM, MB.
     pub ram_mb: f64,
+    /// Docker image name (descriptive in this substrate).
     pub image: String,
     /// Does this component execute analytic work steps? (Workers do;
     /// pure-service components — clients, masters, parameter servers,
@@ -24,6 +30,7 @@ pub struct ComponentDef {
 }
 
 impl ComponentDef {
+    /// Per-replica resource vector.
     pub fn res(&self) -> Resources {
         Resources::new(self.cpu, self.ram_mb)
     }
@@ -32,14 +39,19 @@ impl ComponentDef {
 /// A Zoe application description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct AppDescription {
+    /// Application name.
     pub name: String,
     /// The "command line" attribute: selects the analytic program.
     pub command: String,
     /// Parsed work kind (from the command) + step budget.
     pub work: WorkKind,
+    /// Total work steps the application must execute.
     pub work_steps: u64,
+    /// External priority (higher = more urgent).
     pub priority: f64,
+    /// Human-in-the-loop session (gets priority in §6 experiments).
     pub interactive: bool,
+    /// The component groups.
     pub components: Vec<ComponentDef>,
     /// Environment passed to components (host names are filled by the
     /// service-discovery layer at start time).
@@ -56,20 +68,24 @@ impl AppDescription {
             .filter(|c| c.class == ComponentClass::Core)
     }
 
+    /// The elastic component groups.
     pub fn elastic_components(&self) -> impl Iterator<Item = &ComponentDef> {
         self.components
             .iter()
             .filter(|c| c.class == ComponentClass::Elastic)
     }
 
+    /// Total core replicas across groups.
     pub fn n_core(&self) -> u32 {
         self.core_components().map(|c| c.count).sum()
     }
 
+    /// Total elastic replicas across groups.
     pub fn n_elastic(&self) -> u32 {
         self.elastic_components().map(|c| c.count).sum()
     }
 
+    /// Check the structural invariants Zoe enforces at submission.
     pub fn validate(&self) -> Result<()> {
         if self.name.is_empty() {
             bail!("application name must not be empty");
@@ -93,6 +109,7 @@ impl AppDescription {
 
     // ---- JSON CL ----------------------------------------------------------
 
+    /// Serialize to the Zoe configuration-language JSON.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(&self.name)),
@@ -137,6 +154,7 @@ impl AppDescription {
         ])
     }
 
+    /// Parse a configuration-language JSON description.
     pub fn from_json(j: &Json) -> Result<AppDescription> {
         let name = j
             .get("name")

@@ -26,6 +26,7 @@ use super::templates;
 pub struct ReplayArrival {
     /// Submission time (virtual seconds).
     pub at: f64,
+    /// What to submit.
     pub desc: AppDescription,
     /// Elastic (B-E) or rigid (B-R), for the Fig-33 class split.
     pub elastic: bool,
@@ -60,11 +61,17 @@ pub fn section6_workload(n: u32, seed: u64, gap_scale: f64) -> Vec<ReplayArrival
 
 /// Metrics of one replayed generation.
 pub struct ReplayResult {
+    /// Generation label for reports.
     pub label: &'static str,
+    /// Turnarounds of elastic (B-E) applications, seconds.
     pub turnaround_be: Samples,
+    /// Turnarounds of rigid (B-R) applications, seconds.
     pub turnaround_br: Samples,
+    /// Queuing times, seconds.
     pub queuing: Samples,
+    /// Sampled CPU allocation fractions.
     pub alloc_cpu: Samples,
+    /// Per-container placement+start latency, milliseconds (§6 ramp-up).
     pub rampup_ms: Samples,
     /// Wall-clock seconds spent (host compute).
     pub wall: f64,

@@ -37,8 +37,11 @@ pub enum ZoeGeneration {
 
 /// The master.
 pub struct ZoeMaster {
+    /// The container back-end being driven.
     pub backend: SwarmBackend,
+    /// Application records (the §5 state store).
     pub store: StateStore,
+    /// Service-discovery registry.
     pub discovery: Discovery,
     generation: ZoeGeneration,
     /// Pending queue (policy order; FIFO by submission here, as in §6).
@@ -61,6 +64,7 @@ pub struct ZoeMaster {
 }
 
 impl ZoeMaster {
+    /// A master over `backend`, running the given scheduler generation.
     pub fn new(backend: SwarmBackend, generation: ZoeGeneration) -> Self {
         let n_nodes = backend.nodes().len() as u32;
         let mut datastore = super::storage::DataStore::new(n_nodes);
@@ -85,14 +89,17 @@ impl ZoeMaster {
         }
     }
 
+    /// Which scheduler generation this master runs.
     pub fn generation(&self) -> ZoeGeneration {
         self.generation
     }
 
+    /// Applications waiting in the pending queue.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
 
+    /// Applications currently served.
     pub fn serving_len(&self) -> usize {
         self.serving.len()
     }

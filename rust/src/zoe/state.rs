@@ -15,16 +15,24 @@ use super::app::AppDescription;
 /// Application life-cycle (§5's "simple state-machine").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AppState {
+    /// Received, not yet validated into the queue.
     Submitted,
+    /// Waiting in the pending queue.
     Queued,
+    /// Admitted; containers being created.
     Starting,
+    /// Core components running.
     Running,
+    /// Completed its work.
     Finished,
+    /// Terminated by a client request.
     Killed,
+    /// Terminated by an error.
     Failed,
 }
 
 impl AppState {
+    /// Lowercase wire/state-store name.
     pub fn label(&self) -> &'static str {
         match self {
             AppState::Submitted => "submitted",
@@ -37,6 +45,7 @@ impl AppState {
         }
     }
 
+    /// Inverse of [`AppState::label`].
     pub fn parse(s: &str) -> Option<AppState> {
         Some(match s {
             "submitted" => AppState::Submitted,
@@ -71,16 +80,24 @@ impl AppState {
 /// One application's record.
 #[derive(Clone, Debug)]
 pub struct AppRecord {
+    /// Store-assigned application id.
     pub id: u32,
+    /// The submitted description.
     pub desc: AppDescription,
+    /// Current state-machine state.
     pub state: AppState,
+    /// Submission time (master clock, seconds).
     pub submitted_at: f64,
+    /// Time it entered `Running` (NaN before).
     pub started_at: f64,
+    /// Time it reached a terminal state (NaN before).
     pub finished_at: f64,
+    /// Containers ever created for it.
     pub containers: Vec<ContainerId>,
 }
 
 impl AppRecord {
+    /// Completion − submission, once `Finished`.
     pub fn turnaround(&self) -> Option<f64> {
         if self.state == AppState::Finished {
             Some(self.finished_at - self.submitted_at)
@@ -89,6 +106,7 @@ impl AppRecord {
         }
     }
 
+    /// Start − submission, once started.
     pub fn queuing(&self) -> Option<f64> {
         if self.started_at.is_nan() {
             None
@@ -106,10 +124,12 @@ pub struct StateStore {
 }
 
 impl StateStore {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Insert a submission at time `now`; returns the assigned id.
     pub fn insert(&mut self, desc: AppDescription, now: f64) -> u32 {
         let id = self.next_id;
         self.next_id += 1;
@@ -128,14 +148,18 @@ impl StateStore {
         id
     }
 
+    /// Look up a record.
     pub fn get(&self, id: u32) -> Option<&AppRecord> {
         self.apps.get(&id)
     }
 
+    /// Mutable record access.
     pub fn get_mut(&mut self, id: u32) -> Option<&mut AppRecord> {
         self.apps.get_mut(&id)
     }
 
+    /// Apply a state transition, stamping the relevant timestamp;
+    /// illegal transitions error.
     pub fn transition(&mut self, id: u32, to: AppState, now: f64) -> Result<()> {
         let rec = self
             .apps
@@ -157,16 +181,19 @@ impl StateStore {
         Ok(())
     }
 
+    /// All records, by ascending id.
     pub fn iter(&self) -> impl Iterator<Item = &AppRecord> {
         self.apps.values()
     }
 
+    /// Number of records currently in `state`.
     pub fn count_in(&self, state: AppState) -> usize {
         self.apps.values().filter(|a| a.state == state).count()
     }
 
     // ---- persistence ------------------------------------------------------
 
+    /// Serialize every record (the persistence format).
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.apps
@@ -199,11 +226,14 @@ impl StateStore {
         )
     }
 
+    /// Write the store to a JSON file.
     pub fn dump(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())
     }
 
+    /// Load a store dumped by [`StateStore::dump`] (container lists are
+    /// not persisted).
     pub fn load(path: impl AsRef<Path>) -> Result<StateStore> {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;

@@ -24,14 +24,18 @@ pub const BLOCK_MB: u64 = 128;
 /// One dataset in the namespace.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// `hdfs://`-style URI.
     pub uri: String,
+    /// Total size, MB.
     pub size_mb: u64,
+    /// Replicas per block.
     pub replication: u32,
     /// block index → nodes holding a replica.
     pub blocks: Vec<Vec<u32>>,
 }
 
 impl Dataset {
+    /// Number of blocks (`size_mb / BLOCK_MB`, rounded up).
     pub fn n_blocks(&self) -> u64 {
         self.size_mb.div_ceil(BLOCK_MB)
     }
@@ -46,6 +50,7 @@ pub struct DataStore {
 }
 
 impl DataStore {
+    /// A namespace over `n_nodes` storage nodes.
     pub fn new(n_nodes: u32) -> Self {
         assert!(n_nodes > 0);
         DataStore {
@@ -109,10 +114,12 @@ impl DataStore {
             .unwrap_or(0)
     }
 
+    /// Number of registered datasets.
     pub fn len(&self) -> usize {
         self.datasets.len()
     }
 
+    /// Whether no dataset is registered.
     pub fn is_empty(&self) -> bool {
         self.datasets.is_empty()
     }
@@ -121,12 +128,17 @@ impl DataStore {
 /// A CEPH-like log volume bound to one application.
 #[derive(Clone, Debug)]
 pub struct Volume {
+    /// Owning application.
     pub app: AppId,
+    /// Volume name.
     pub name: String,
+    /// Per-volume quota, MB.
     pub quota_mb: u64,
+    /// Bytes written so far, MB.
     pub used_mb: u64,
     /// Append-only log lines (component name, line).
     pub log: Vec<(String, String)>,
+    /// Sealed (application finished; volume is read-only).
     pub sealed: bool,
 }
 
@@ -139,6 +151,7 @@ pub struct VolumeManager {
 }
 
 impl VolumeManager {
+    /// A pool with `capacity_mb` of total quota.
     pub fn new(capacity_mb: u64) -> Self {
         VolumeManager {
             capacity_mb,
@@ -209,10 +222,12 @@ impl VolumeManager {
         Ok(())
     }
 
+    /// The volume of `app`, if one was created.
     pub fn get(&self, app: AppId) -> Option<&Volume> {
         self.volumes.get(&app)
     }
 
+    /// Total MB written across all volumes.
     pub fn used_mb(&self) -> u64 {
         self.used_mb
     }

@@ -11,14 +11,15 @@
 //! * flexible admissions are never later than the rigid baseline's on the
 //!   same FIFO workload (queuing dominance in aggregate).
 
-use zoe::core::{Request, RequestBuilder, Resources};
+use zoe::core::{unit_request, Request, RequestBuilder, Resources};
 use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
-use zoe::sim::{simulate, simulate_with_mode, EngineMode, SimResult};
+use zoe::sim::{simulate, simulate_with_mode, EngineMode, ExperimentPlan, SimResult};
 use zoe::util::check::forall;
 use zoe::util::rng::Rng;
 use zoe::util::stats::Samples;
+use zoe::workload::WorkloadSpec;
 
 /// Random workload (bounded so every request is schedulable on the
 /// `units`-sized cluster).
@@ -281,6 +282,272 @@ fn optimized_engine_matches_naive_reference_unit_workloads() {
                 EngineMode::Naive,
             );
             assert_results_match(&opt, &naive, &format!("units {kind:?} {}", pol.label()));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Parallel experiment driver: byte-identical to the serial path
+// ---------------------------------------------------------------------------
+
+/// Assert two results are *bitwise* identical in everything that is a
+/// function of the simulation (everything except measured wall time).
+fn assert_bitwise_identical(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.unfinished, b.unfinished, "{what}: unfinished");
+    assert_eq!(a.heap_compactions, b.heap_compactions, "{what}: compactions");
+    assert_eq!(
+        a.end_time.to_bits(),
+        b.end_time.to_bits(),
+        "{what}: end_time {} vs {}",
+        a.end_time,
+        b.end_time
+    );
+    let mut sample_sets: Vec<(String, &Samples, &Samples)> = vec![
+        ("turnaround".into(), &a.turnaround, &b.turnaround),
+        ("queuing".into(), &a.queuing, &b.queuing),
+        ("slowdown".into(), &a.slowdown, &b.slowdown),
+    ];
+    for (ma, mb) in a.per_class.iter().zip(&b.per_class) {
+        assert_eq!(ma.class, mb.class, "{what}: class order");
+        let c = ma.class.label();
+        sample_sets.push((format!("{c}/turnaround"), &ma.turnaround, &mb.turnaround));
+        sample_sets.push((format!("{c}/queuing"), &ma.queuing, &mb.queuing));
+        sample_sets.push((format!("{c}/slowdown"), &ma.slowdown, &mb.slowdown));
+    }
+    for (name, xa, xb) in sample_sets {
+        assert_eq!(xa.len(), xb.len(), "{what} {name}: sample counts");
+        for (i, (x, y)) in xa.values().iter().zip(xb.values()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what} {name}[{i}]: {x} vs {y}"
+            );
+        }
+    }
+    // Time-weighted sketches: compare through their full box-plot
+    // summaries (quantiles, exact mean/min/max, update count) bitwise.
+    for (name, ta, tb) in [
+        ("pending_q", &a.pending_q, &b.pending_q),
+        ("running_q", &a.running_q, &b.running_q),
+        ("cpu_alloc", &a.cpu_alloc, &b.cpu_alloc),
+        ("ram_alloc", &a.ram_alloc, &b.ram_alloc),
+    ] {
+        let (ba, bb) = (ta.boxplot(), tb.boxplot());
+        assert_eq!(ba.n, bb.n, "{what} {name}: n");
+        for (field, x, y) in [
+            ("p5", ba.p5, bb.p5),
+            ("q1", ba.q1, bb.q1),
+            ("median", ba.median, bb.median),
+            ("q3", ba.q3, bb.q3),
+            ("p95", ba.p95, bb.p95),
+            ("mean", ba.mean, bb.mean),
+            ("min", ba.min, bb.min),
+            ("max", ba.max, bb.max),
+        ] {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what} {name}.{field}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+/// The tentpole guarantee: the parallel driver produces per-seed results
+/// byte-identical to serial `simulate` calls, for every scheduler kind —
+/// parallelism reorders seed *execution*, never RNG streams or events.
+#[test]
+fn parallel_experiment_matches_serial_per_seed() {
+    let spec = WorkloadSpec::paper();
+    let apps = 100u32;
+    let seeds: Vec<u64> = (1..=6).collect();
+    for kind in ALL_KINDS {
+        let result = ExperimentPlan::new(spec.clone(), apps)
+            .seeds(seeds.iter().copied())
+            .config(Policy::FIFO, kind)
+            .threads(4)
+            .run();
+        assert_eq!(result.runs.len(), 1);
+        let serial: Vec<SimResult> = seeds
+            .iter()
+            .map(|&seed| {
+                simulate(
+                    spec.generate(apps, seed),
+                    Cluster::paper_sim(),
+                    Policy::FIFO,
+                    kind,
+                )
+            })
+            .collect();
+        for (i, (par, ser)) in result.runs[0].per_seed.iter().zip(&serial).enumerate() {
+            assert_bitwise_identical(par, ser, &format!("{kind:?} seed {}", seeds[i]));
+        }
+        // Merging in seed order is deterministic: the parallel merged
+        // result equals a manual serial merge.
+        let merged = result.runs[0].merged();
+        let mut manual = serial[0].clone();
+        for r in &serial[1..] {
+            manual.merge(r);
+        }
+        assert_bitwise_identical(&merged, &manual, &format!("{kind:?} merged"));
+    }
+}
+
+/// Thread count must not change anything either (1 worker ≡ 4 workers).
+#[test]
+fn parallel_experiment_thread_count_invariant() {
+    let spec = WorkloadSpec::paper_batch_only();
+    let mk = |threads: usize| {
+        ExperimentPlan::new(spec.clone(), 120)
+            .seeds(1..5)
+            .config(Policy::sjf(), SchedKind::Flexible)
+            .config(Policy::FIFO, SchedKind::Malleable)
+            .threads(threads)
+            .run()
+    };
+    let serial = mk(1);
+    let parallel = mk(4);
+    for (rs, rp) in serial.runs.iter().zip(&parallel.runs) {
+        assert_eq!(rs.config, rp.config);
+        for (a, b) in rs.per_seed.iter().zip(&rp.per_seed) {
+            assert_bitwise_identical(a, b, &rs.config.label());
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "at least one seed")]
+fn run_many_zero_seeds_is_a_hard_error() {
+    let spec = WorkloadSpec::paper_batch_only();
+    let _ = zoe::sim::run_many(&spec, 50, 5..5, Policy::FIFO, SchedKind::Flexible);
+}
+
+// ---------------------------------------------------------------------------
+// Event-heap compaction under heavy stale-entry churn
+// ---------------------------------------------------------------------------
+
+/// A workload engineered to flood the heap with stale predictions: 300
+/// single-core rigid requests admitted first, then one elastic request
+/// with E=300. Every rigid departure frees one unit, grows the elastic
+/// grant by one, and re-predicts its finish — leaving the old event
+/// stale. Stale events outnumber live ones once ~201 rigids have left,
+/// so compaction *must* trigger, and results must still match the naive
+/// (never-compacting) reference exactly.
+fn stale_churn_requests() -> Vec<Request> {
+    let mut reqs: Vec<Request> = (0..300u32)
+        .map(|i| unit_request(i, 0.001 * i as f64, 10.0 + i as f64, 1, 0))
+        .collect();
+    reqs.push(unit_request(300, 0.5, 5_000.0, 1, 300));
+    reqs
+}
+
+#[test]
+fn heap_compaction_triggers_and_preserves_results() {
+    let reqs = stale_churn_requests();
+    for kind in [SchedKind::Flexible, SchedKind::Malleable] {
+        let opt = simulate_with_mode(
+            reqs.clone(),
+            Cluster::units(302),
+            Policy::FIFO,
+            kind,
+            EngineMode::Optimized,
+        );
+        let naive = simulate_with_mode(
+            reqs.clone(),
+            Cluster::units(302),
+            Policy::FIFO,
+            kind,
+            EngineMode::Naive,
+        );
+        assert_eq!(opt.completed, 301, "{kind:?}");
+        assert_results_match(&opt, &naive, &format!("stale churn {kind:?}"));
+        assert!(
+            opt.heap_compactions >= 1,
+            "{kind:?}: stale churn never triggered a compaction"
+        );
+        assert_eq!(
+            naive.heap_compactions, 0,
+            "{kind:?}: the naive reference must not compact"
+        );
+    }
+}
+
+/// Compaction is also exercised (and harmless) on random contended
+/// workloads across every scheduler and policy family.
+#[test]
+fn compaction_is_invisible_on_random_workloads() {
+    forall(8, 0xC0117AC7, |rng| {
+        let n = 60 + rng.below(60) as usize;
+        let units = 8 + rng.below(8) as u32;
+        let reqs = random_requests(rng, n, units);
+        let pol = policies()[rng.below(6) as usize];
+        for kind in ALL_KINDS {
+            let opt = simulate_with_mode(
+                reqs.clone(),
+                Cluster::units(units),
+                pol,
+                kind,
+                EngineMode::Optimized,
+            );
+            let naive = simulate_with_mode(
+                reqs.clone(),
+                Cluster::units(units),
+                pol,
+                kind,
+                EngineMode::Naive,
+            );
+            assert_results_match(&opt, &naive, &format!("random churn {kind:?}"));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Saturation-aggregate / top-up-cursor equivalence
+// ---------------------------------------------------------------------------
+
+/// Elastic-heavy workloads keep the serving set near the Σ(C+E) < R
+/// saturation boundary (flexible's incremental aggregate) and keep
+/// malleable topping grants up (the first-non-full cursor); optimized
+/// and naive paths must agree on every admission and grant.
+#[test]
+fn saturation_aggregate_and_topup_cursor_equivalence() {
+    forall(12, 0xA66CE5, |rng| {
+        let n = 70;
+        let units = 10 + rng.below(10) as u32;
+        let mut t = 0.0;
+        let reqs: Vec<Request> = (0..n as u32)
+            .map(|id| {
+                t += rng.exp(0.15);
+                let c = rng.range_u64(1, 3) as u32;
+                // Elastic-heavy: up to the whole remaining cluster.
+                let e = rng.below((units - c).max(1) as u64) as u32;
+                unit_request(id, t, rng.range_f64(2.0, 120.0), c, e)
+            })
+            .collect();
+        for kind in [SchedKind::Flexible, SchedKind::FlexiblePreemptive, SchedKind::Malleable] {
+            for pol in [Policy::FIFO, Policy::sjf()] {
+                let opt = simulate_with_mode(
+                    reqs.clone(),
+                    Cluster::units(units),
+                    pol,
+                    kind,
+                    EngineMode::Optimized,
+                );
+                let naive = simulate_with_mode(
+                    reqs.clone(),
+                    Cluster::units(units),
+                    pol,
+                    kind,
+                    EngineMode::Naive,
+                );
+                assert_results_match(
+                    &opt,
+                    &naive,
+                    &format!("aggregate/cursor {kind:?} {}", pol.label()),
+                );
+            }
         }
     });
 }

@@ -26,6 +26,27 @@ def key(point):
     return (point["sched"], point.get("mode", "optimized"), int(point["apps"]))
 
 
+def report_parallel(doc, label):
+    """Print the parallel_scaling table; returns (hw_threads, best speedup
+    at >=4 threads) or (0, None) when absent."""
+    ps = doc.get("parallel_scaling") or {}
+    points = ps.get("points", [])
+    if not points:
+        print(f"{label}: no parallel_scaling points")
+        return 0, None
+    hw = int(ps.get("hw_threads", 0))
+    print(f"{label}: parallel scaling ({ps.get('apps')} apps x {ps.get('seeds')} seeds, "
+          f"{ps.get('sched')}, {hw} hw threads)")
+    best4 = None
+    for p in points:
+        t = int(p["threads"])
+        s = float(p.get("speedup_vs_1thread", 0.0))
+        print(f"  threads={t:<2} wall={p.get('wall_s', 0.0):>9.3f}s speedup={s:5.2f}x")
+        if t >= 4:
+            best4 = s if best4 is None else max(best4, s)
+    return hw, best4
+
+
 def main():
     argv = sys.argv[1:]
     args, threshold = [], 0.20
@@ -50,6 +71,8 @@ def main():
     for k, p in sorted(new_points.items()):
         print(f"  {k[0]:<10} {k[1]:<9} apps={k[2]:<7} {p['events_per_s']:>12.0f} events/s")
 
+    hw, best4 = report_parallel(new, "fresh")
+
     if baseline.get("provisional"):
         print("baseline is provisional (no measured numbers committed); "
               "recording only — promote the fresh file to the baseline.")
@@ -57,6 +80,16 @@ def main():
 
     base_points = {key(p): p for p in baseline.get("results", [])}
     failures = []
+    # With a measured baseline, the parallel-scaling target is enforced:
+    # the 10-seed paper workload must reach >=3x at 4+ threads. Only
+    # enforced when the host has >=6 hardware threads: with exactly 4
+    # workers the 10-task grid needs 3 rounds, capping the theoretical
+    # speedup at 3.33x, which leaves no headroom for runner noise — on
+    # such hosts the table is reported but not gated. Collected alongside
+    # the per-point comparisons so a single run reports every failure.
+    if hw >= 6 and best4 is not None and best4 < 3.0:
+        print(f"FAIL: parallel speedup at 4+ threads is {best4:.2f}x (< 3.0x target)")
+        failures.append((("parallel", "speedup", 4), 3.0, best4))
     for k, bp in sorted(base_points.items()):
         np_ = new_points.get(k)
         if np_ is None:
