@@ -1,8 +1,9 @@
 //! Perf microbenches (§Perf in EXPERIMENTS.md): the hot paths of each
 //! layer — simulator event throughput (L3, including the scale sweep,
-//! the optimized-vs-naive engine comparison, and the parallel multi-seed
-//! scaling sweep), PJRT artifact step latency (L2/L1 via the runtime),
-//! the batched Table-1 scoring kernel, and the substrate primitives
+//! the optimized-vs-naive engine comparison, the trace
+//! record→ingest→replay pipeline, and the parallel multi-seed scaling
+//! sweep), PJRT artifact step latency (L2/L1 via the runtime), the
+//! batched Table-1 scoring kernel, and the substrate primitives
 //! (placement, JSON, RNG).
 //!
 //! Emits `BENCH_sim_throughput.json` (path overridable with
@@ -18,7 +19,8 @@ use std::time::Instant;
 use zoe::policy::Policy;
 use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
-use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan};
+use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan, Simulation};
+use zoe::trace::{IngestOptions, SharedBuf, TraceRecorder, TraceSource};
 use zoe::util::bench::{measure, section};
 use zoe::util::json::Json;
 use zoe::workload::WorkloadSpec;
@@ -97,6 +99,57 @@ fn main() {
         }
         run_point(&spec, SchedKind::Flexible, apps, EngineMode::Optimized, &mut points);
     }
+
+    section("L3 — trace pipeline: record → ingest → replay (flexible, 8k apps)");
+    let trace_ingest_stats: (usize, f64) = if sweep_max == 0 {
+        println!("  (skipping trace pipeline: ZOE_BENCH_SWEEP_MAX={sweep_max})");
+        (0, 0.0)
+    } else {
+        let apps = 8_000u32.min(sweep_max);
+        let reqs = spec.generate(apps, 1);
+        let buf = SharedBuf::new();
+        let rec = TraceRecorder::new(Box::new(buf.clone()));
+        let t0 = Instant::now();
+        let recorded = Simulation::new(reqs, Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible)
+            .with_recorder(rec)
+            .run();
+        let rec_wall = t0.elapsed().as_secs_f64();
+        let log = buf.contents();
+        let t0 = Instant::now();
+        let trace = TraceSource::from_jsonl_str(&log, &IngestOptions::default())
+            .expect("a recorded event log always ingests");
+        let ingest_wall = t0.elapsed().as_secs_f64();
+        let lines = log.lines().count();
+        println!(
+            "  record: {:>9} events (+{} log lines) in {rec_wall:>7.3}s",
+            recorded.events, lines
+        );
+        println!(
+            "  ingest: {lines:>9} lines  in {ingest_wall:>7.3}s → {:>10.0} lines/s",
+            lines as f64 / ingest_wall.max(1e-12)
+        );
+        let t0 = Instant::now();
+        let replayed = trace.simulate(Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible);
+        let dt = t0.elapsed().as_secs_f64();
+        let eps = replayed.events as f64 / dt.max(1e-12);
+        println!(
+            "  replay: {:>9} events in {dt:>7.3}s → {:>10.0} events/s (completed={})",
+            replayed.events, eps, replayed.completed
+        );
+        assert_eq!(
+            replayed.completed, recorded.completed,
+            "trace replay must complete the same applications"
+        );
+        points.push(SweepPoint {
+            sched: "flexible",
+            mode: "trace_replay",
+            apps,
+            events: replayed.events,
+            wall_s: dt,
+            events_per_s: eps,
+        });
+        (lines, ingest_wall)
+    };
 
     section("L3 — parallel multi-seed scaling (ExperimentPlan, 10-seed paper workload)");
     let par_apps: u32 = std::env::var("ZOE_BENCH_PAR_APPS")
@@ -200,6 +253,17 @@ fn main() {
                 ("sched", Json::str("flexible")),
                 ("hw_threads", Json::num(hw_threads as f64)),
                 ("points", parallel_json),
+            ]),
+        ),
+        (
+            "trace_ingest",
+            Json::obj(vec![
+                ("lines", Json::num(trace_ingest_stats.0 as f64)),
+                ("wall_s", Json::num(trace_ingest_stats.1)),
+                (
+                    "lines_per_s",
+                    Json::num(trace_ingest_stats.0 as f64 / trace_ingest_stats.1.max(1e-12)),
+                ),
             ]),
         ),
     ]);

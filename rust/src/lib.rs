@@ -17,6 +17,7 @@
 //!
 //! Start with [`sched::FlexibleScheduler`] and [`sim::Simulation`] for
 //! single runs, [`sim::ExperimentPlan`] for parallel multi-seed sweeps,
+//! [`trace`] for ingesting/recording/replaying real cluster traces,
 //! or the full system in [`zoe`]. ARCHITECTURE.md maps the paper's
 //! concepts onto these modules.
 
@@ -29,6 +30,7 @@ pub mod pool;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workload;
 pub mod zoe;

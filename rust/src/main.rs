@@ -1,9 +1,14 @@
-//! `zoe` — the CLI: trace-driven simulation (§4), the Zoe master with its
-//! client API (§5–6), and client commands against a running master.
+//! `zoe` — the CLI: trace-driven simulation (§4), the trace pipeline
+//! (ingest/replay/record/fit), the Zoe master with its client API
+//! (§5–6), and client commands against a running master.
 //!
 //! ```text
 //! zoe sim     --apps 8000 --sched flexible --policy sjf [--seed 1]
 //!             [--seeds 10] [--threads 4]   # parallel multi-seed run
+//! zoe trace   stats  --trace FILE [--format jsonl|csv]
+//! zoe trace   replay --trace FILE [--sched flexible] [--policy fifo]
+//! zoe trace   record --out FILE [--apps 1000] [--seed 1]
+//! zoe trace   fit    --trace FILE [--out spec.json]
 //! zoe master  --listen 127.0.0.1:4455 [--generation flexible] [--nodes 10]
 //! zoe submit  --to 127.0.0.1:4455 --template spark-als-16
 //! zoe status  --to 127.0.0.1:4455 --id 3
@@ -14,28 +19,35 @@
 use std::sync::{Arc, Mutex};
 
 use zoe::backend::{SwarmBackend, WorkPool};
+use zoe::core::Resources;
 use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
 use zoe::runtime::PjrtRuntime;
 use zoe::sched::SchedKind;
-use zoe::sim::{simulate, ExperimentPlan};
+use zoe::sim::{simulate, ExperimentPlan, Simulation};
+use zoe::trace::{
+    fit_workload_from_stats, spec_to_json, IngestOptions, TraceRecorder, TraceSource, TraceStats,
+};
 use zoe::util::cli::Args;
 use zoe::util::json::Json;
+use zoe::util::stats::Samples;
 use zoe::workload::WorkloadSpec;
 use zoe::zoe::{templates, ApiClient, ApiServer, AppDescription, ZoeGeneration, ZoeMaster};
 
 fn main() {
     zoe::util::logging::init();
     let args = Args::from_env();
+    args.reject_duplicates();
     match args.positional.first().map(|s| s.as_str()) {
         Some("sim") => cmd_sim(&args),
+        Some("trace") => cmd_trace(&args),
         Some("master") => cmd_master(&args),
         Some("submit") => cmd_submit(&args),
         Some("status") => cmd_client_simple(&args, "status"),
         Some("stats") => cmd_client_simple(&args, "stats"),
         Some("kill") => cmd_client_simple(&args, "kill"),
         _ => {
-            eprintln!("usage: zoe <sim|master|submit|status|stats|kill> [--flags]");
+            eprintln!("usage: zoe <sim|trace|master|submit|status|stats|kill> [--flags]");
             eprintln!("see README.md for details");
             std::process::exit(2);
         }
@@ -51,25 +63,35 @@ fn parse_policy(s: &str) -> Policy {
         "sjf2d" => Policy::new(Discipline::Sjf, SizeDim::D2),
         "sjf3d" => Policy::new(Discipline::Sjf, SizeDim::D3),
         other => {
-            eprintln!("unknown policy '{other}'");
+            eprintln!("unknown policy '{other}' (fifo|sjf|srpt|hrrn|sjf2d|sjf3d)");
             std::process::exit(2);
         }
     }
 }
 
-fn cmd_sim(args: &Args) {
-    let apps = args.u64_or("apps", 8000) as u32;
-    let seed = args.u64_or("seed", 1);
-    let kind = match args.get_or("sched", "flexible").as_str() {
+fn parse_sched(s: &str) -> SchedKind {
+    match s {
         "rigid" => SchedKind::Rigid,
         "malleable" => SchedKind::Malleable,
         "flexible" => SchedKind::Flexible,
         "preemptive" => SchedKind::FlexiblePreemptive,
         other => {
-            eprintln!("unknown scheduler '{other}'");
+            eprintln!("unknown scheduler '{other}' (rigid|malleable|flexible|preemptive)");
             std::process::exit(2);
         }
-    };
+    }
+}
+
+/// Flags consumed by [`parse_sim_workload`] plus the `--apps/--seed`
+/// pair — shared by `zoe sim` and `zoe trace record`.
+const SIM_WORKLOAD_FLAGS: &[&str] = &[
+    "apps", "seed", "sched", "policy", "interactive", "arrival-scale",
+];
+
+/// Shared `--sched/--policy/--interactive/--arrival-scale` handling for
+/// the commands that run a synthetic workload.
+fn parse_sim_workload(args: &Args) -> (WorkloadSpec, Policy, SchedKind) {
+    let kind = parse_sched(&args.get_or("sched", "flexible"));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
     let mut spec = if args.has("interactive") {
         WorkloadSpec::paper()
@@ -77,6 +99,16 @@ fn cmd_sim(args: &Args) {
         WorkloadSpec::paper_batch_only()
     };
     spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
+    (spec, policy, kind)
+}
+
+fn cmd_sim(args: &Args) {
+    let mut known = SIM_WORKLOAD_FLAGS.to_vec();
+    known.extend_from_slice(&["seeds", "threads"]);
+    args.warn_unknown(&known);
+    let apps = args.u64_or("apps", 8000) as u32;
+    let seed = args.u64_or("seed", 1);
+    let (spec, policy, kind) = parse_sim_workload(args);
     let seeds = args.u64_or("seeds", 1);
     let mut res = if seeds > 1 {
         // Multi-seed experiment (the paper's 10-runs-per-configuration
@@ -98,12 +130,242 @@ fn cmd_sim(args: &Args) {
     println!("cpu alloc:  {}", res.cpu_alloc.boxplot());
 }
 
+// ---------------------------------------------------------------------------
+// zoe trace — ingest / replay / record / fit
+// ---------------------------------------------------------------------------
+
+/// Flags shared by every trace subcommand that ingests a file.
+const TRACE_INGEST_FLAGS: &[&str] = &["trace", "format", "no-caps", "cpu-scale", "ram-scale-mb"];
+
+fn warn_trace_flags(args: &Args, extra: &[&str]) {
+    let mut known: Vec<&str> = TRACE_INGEST_FLAGS.to_vec();
+    known.extend_from_slice(extra);
+    args.warn_unknown(&known);
+}
+
+fn cmd_trace(args: &Args) {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("stats") => trace_stats(args),
+        Some("replay") => trace_replay(args),
+        Some("record") => trace_record(args),
+        Some("fit") => trace_fit(args),
+        _ => {
+            eprintln!("usage: zoe trace <stats|replay|record|fit> [--flags]");
+            eprintln!("  stats   --trace FILE [--format jsonl|csv] [--no-caps]");
+            eprintln!("  replay  --trace FILE [--sched S] [--policy P] [--machines N]");
+            eprintln!("          [--machine-cpu C] [--machine-ram-mb M] [--record OUT]");
+            eprintln!("  record  --out FILE [--apps N] [--seed S] [--sched S] [--policy P]");
+            eprintln!("          [--interactive] [--arrival-scale X]");
+            eprintln!("  fit     --trace FILE [--out SPEC.json] [--apps N] [--seed S]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_trace(args: &Args) -> TraceSource {
+    let Some(path) = args.get("trace") else {
+        eprintln!("--trace FILE is required");
+        std::process::exit(2);
+    };
+    let mut opts = IngestOptions::default();
+    if args.has("no-caps") {
+        opts.caps = None;
+    }
+    opts.cpu_scale = args.f64_or("cpu-scale", opts.cpu_scale);
+    opts.ram_scale_mb = args.f64_or("ram-scale-mb", opts.ram_scale_mb);
+    let parsed = match args.get("format") {
+        None => TraceSource::from_path(path, &opts),
+        Some("jsonl") => TraceSource::from_jsonl_path(path, &opts),
+        Some("csv") => TraceSource::from_csv_path(path, &opts),
+        Some(other) => {
+            eprintln!("unknown trace format '{other}' (jsonl|csv)");
+            std::process::exit(2);
+        }
+    };
+    parsed.unwrap_or_else(|e| {
+        eprintln!("cannot ingest {path}: {e}");
+        std::process::exit(1);
+    })
+}
+
+fn parse_trace_cluster(args: &Args) -> Cluster {
+    let machines = args.usize_or("machines", 100);
+    let cpu = args.f64_or("machine-cpu", 32.0);
+    let ram_mb = args.f64_or("machine-ram-mb", 128.0 * 1024.0);
+    Cluster::uniform(machines, Resources::new(cpu, ram_mb))
+}
+
+fn print_quantiles(label: &str, s: &mut Samples) {
+    if s.is_empty() {
+        return;
+    }
+    println!(
+        "  {label:<22} p10={:<12.2} p50={:<12.2} p90={:<12.2} mean={:<12.2}",
+        s.percentile(10.0),
+        s.percentile(50.0),
+        s.percentile(90.0),
+        s.mean()
+    );
+}
+
+fn trace_stats(args: &Args) {
+    warn_trace_flags(args, &[]);
+    let trace = load_trace(args);
+    let mut st = TraceStats::collect(&trace);
+    println!(
+        "applications: {} (skipped during ingest: {})",
+        trace.len(),
+        trace.skipped
+    );
+    println!(
+        "classes: B-E={} B-R={} Int={}",
+        st.n_batch_elastic, st.n_batch_rigid, st.n_interactive
+    );
+    println!("arrival span: {:.2} h", trace.span() / 3600.0);
+    print_quantiles("runtime (s)", &mut st.runtime);
+    print_quantiles("cpu / component", &mut st.cpu);
+    print_quantiles("ram_mb / component", &mut st.ram_mb);
+    print_quantiles("inter-arrival (s)", &mut st.interarrival);
+    print_quantiles("B-E cores", &mut st.batch_cores);
+    print_quantiles("B-E elastic", &mut st.batch_elastic);
+    print_quantiles("B-R components", &mut st.rigid_components);
+    print_quantiles("Int elastic", &mut st.interactive_elastic);
+}
+
+fn trace_replay(args: &Args) {
+    warn_trace_flags(
+        args,
+        &["sched", "policy", "machines", "machine-cpu", "machine-ram-mb", "record"],
+    );
+    let trace = load_trace(args);
+    if trace.is_empty() {
+        eprintln!("trace contains no applications");
+        std::process::exit(1);
+    }
+    let kind = parse_sched(&args.get_or("sched", "flexible"));
+    let policy = parse_policy(&args.get_or("policy", "fifo"));
+    let cluster = parse_trace_cluster(args);
+    println!(
+        "replaying {} applications ({:.2} h span) on {} machines — {} / {}",
+        trace.len(),
+        trace.span() / 3600.0,
+        cluster.n_machines(),
+        kind.label(),
+        policy.label()
+    );
+    let mut sim = trace.simulation(cluster, policy, kind);
+    if let Some(out) = args.get("record") {
+        let rec = TraceRecorder::to_path(out).unwrap_or_else(|e| {
+            eprintln!("cannot create {out}: {e}");
+            std::process::exit(1);
+        });
+        sim = sim.with_recorder(rec);
+    }
+    let mut res = sim.run();
+    println!("{}", res.summary());
+    res.print_report("trace replay");
+}
+
+fn trace_record(args: &Args) {
+    let mut known = SIM_WORKLOAD_FLAGS.to_vec();
+    known.push("out");
+    args.warn_unknown(&known);
+    let Some(out) = args.get("out") else {
+        eprintln!("--out FILE is required");
+        std::process::exit(2);
+    };
+    let apps = args.u64_or("apps", 1000) as u32;
+    let seed = args.u64_or("seed", 1);
+    let (spec, policy, kind) = parse_sim_workload(args);
+    let requests = spec.generate(apps, seed);
+    let rec = TraceRecorder::to_path(out).unwrap_or_else(|e| {
+        eprintln!("cannot create {out}: {e}");
+        std::process::exit(1);
+    });
+    let mut res = Simulation::new(requests, Cluster::paper_sim(), policy, kind)
+        .with_recorder(rec)
+        .run();
+    println!("{}", res.summary());
+    println!("wrote event log: {out} (replay with: zoe trace replay --trace {out})");
+}
+
+fn trace_fit(args: &Args) {
+    warn_trace_flags(args, &["out", "apps", "seed"]);
+    let trace = load_trace(args);
+    if trace.is_empty() {
+        eprintln!("trace contains no applications");
+        std::process::exit(1);
+    }
+    let mut st = TraceStats::collect(&trace);
+    let spec = fit_workload_from_stats(&mut st);
+    println!("fitted workload from {} applications:", trace.len());
+    println!(
+        "  interactive_frac={:.3} batch_elastic_frac={:.3}",
+        spec.interactive_frac, spec.batch_elastic_frac
+    );
+    println!(
+        "  {:<10} {:>4} {:>14} {:>14} {:>10}",
+        "metric", "q", "trace", "fitted", "rel.err"
+    );
+    let rows: [(&str, &mut Samples, &zoe::util::dist::Empirical); 3] = [
+        ("runtime", &mut st.runtime, &spec.runtime),
+        ("cpu", &mut st.cpu, &spec.cpu),
+        ("ram_mb", &mut st.ram_mb, &spec.ram_mb),
+    ];
+    for (label, samples, dist) in rows {
+        for p in [0.10, 0.50, 0.90] {
+            let tq = samples.percentile(p * 100.0);
+            let fq = dist.quantile(p);
+            let rel = if tq.abs() > 1e-12 {
+                (fq - tq).abs() / tq.abs()
+            } else {
+                0.0
+            };
+            println!(
+                "  {label:<10} p{:<3.0} {tq:>14.3} {fq:>14.3} {:>9.4}%",
+                p * 100.0,
+                rel * 100.0
+            );
+        }
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, spec_to_json(&spec).to_string()).unwrap_or_else(|e| {
+            eprintln!("cannot write {out}: {e}");
+            std::process::exit(1);
+        });
+        println!("wrote fitted WorkloadSpec: {out}");
+    }
+    if args.has("apps") {
+        let n = args.u64_or("apps", 1000) as u32;
+        let seed = args.u64_or("seed", 1);
+        let generated = spec.generate(n, seed);
+        let mut rt = Samples::new();
+        for r in &generated {
+            rt.push(r.runtime);
+        }
+        println!(
+            "sanity: {n} apps generated from the fit — runtime p50 {:.1}s (trace p50 {:.1}s)",
+            rt.percentile(50.0),
+            st.runtime.percentile(50.0)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// zoe master / client commands
+// ---------------------------------------------------------------------------
+
 fn cmd_master(args: &Args) {
+    args.warn_unknown(&["listen", "generation", "nodes"]);
     let listen = args.get_or("listen", "127.0.0.1:4455");
     let nodes = args.u64_or("nodes", 10) as u32;
     let generation = match args.get_or("generation", "flexible").as_str() {
         "rigid" => ZoeGeneration::Rigid,
-        _ => ZoeGeneration::Flexible,
+        "flexible" => ZoeGeneration::Flexible,
+        other => {
+            eprintln!("unknown generation '{other}' (rigid|flexible)");
+            std::process::exit(2);
+        }
     };
     let rt = Arc::new(PjrtRuntime::load_default().unwrap_or_else(|e| {
         eprintln!("cannot load PJRT artifacts: {e}");
@@ -144,6 +406,7 @@ fn template_by_name(name: &str) -> Option<AppDescription> {
 }
 
 fn cmd_submit(args: &Args) {
+    args.warn_unknown(&["to", "template", "file"]);
     let to = args.get_or("to", "127.0.0.1:4455");
     let desc = if let Some(file) = args.get("file") {
         let text = std::fs::read_to_string(file).unwrap_or_else(|e| {
@@ -181,6 +444,7 @@ fn cmd_submit(args: &Args) {
 }
 
 fn cmd_client_simple(args: &Args, op: &str) {
+    args.warn_unknown(&["to", "id"]);
     let to = args.get_or("to", "127.0.0.1:4455");
     let mut client = ApiClient::connect(&to).unwrap_or_else(|e| {
         eprintln!("cannot connect to {to}: {e}");

@@ -44,6 +44,7 @@ use crate::policy::Policy;
 use crate::pool::Cluster;
 use crate::sched::{Phase, SchedKind, Scheduler, World};
 use crate::sim::metrics::{MetricsCollector, SimResult};
+use crate::trace::TraceRecorder;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum EvKind {
@@ -116,6 +117,9 @@ pub struct Simulation {
     compactions: u64,
     /// Reused id buffer for the naive full refresh.
     scratch: Vec<ReqId>,
+    /// Optional event-log recorder (`zoe trace record`); purely
+    /// observational — never touches simulation state.
+    recorder: Option<TraceRecorder>,
 }
 
 impl Simulation {
@@ -163,7 +167,17 @@ impl Simulation {
             stale: 0,
             compactions: 0,
             scratch: Vec::new(),
+            recorder: None,
         }
+    }
+
+    /// Attach a [`TraceRecorder`]: the run emits a JSONL event log
+    /// (arrivals with the full request tuple, grant changes, departures)
+    /// whose arrivals replay to a bit-identical [`SimResult`] — see
+    /// [`crate::trace`].
+    pub fn with_recorder(mut self, recorder: TraceRecorder) -> Self {
+        self.recorder = Some(recorder);
+        self
     }
 
     /// Push a departure event, rejecting non-finite times up front: the
@@ -307,7 +321,14 @@ impl Simulation {
                         debug_assert_eq!(st.phase, Phase::Future);
                         st.phase = Phase::Pending;
                     }
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.record_arrival(ev.t, &self.world.states[id as usize].req);
+                    }
                     self.sched.on_arrival(id, &mut self.world);
+                    // Read the changed-set before refresh_departures drains it.
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.record_changes(ev.t, "arrival", id, &self.world);
+                    }
                     self.refresh_departures();
                     self.sample_metrics();
                     self.maybe_compact();
@@ -347,12 +368,27 @@ impl Simulation {
                         admit - arrival,        // queuing time
                         (now - admit) / runtime, // slowdown
                     );
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.record_departure(
+                            now,
+                            id,
+                            now - arrival,
+                            admit - arrival,
+                            (now - admit) / runtime,
+                        );
+                    }
                     self.sched.on_departure(id, &mut self.world);
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.record_changes(ev.t, "departure", id, &self.world);
+                    }
                     self.refresh_departures();
                     self.sample_metrics();
                     self.maybe_compact();
                 }
             }
+        }
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.finish(self.world.now, events);
         }
         // Sanity: everything completed.
         let unfinished = self

@@ -7,7 +7,10 @@
 //! cluster and scheduler from a seed), so they parallelize perfectly.
 //! [`ExperimentPlan`] materializes the grid, hands tasks to workers
 //! through a work-stealing index counter, and collects results into
-//! per-configuration slots.
+//! per-configuration slots. Requests come from a seeded
+//! [`WorkloadSpec`] ([`ExperimentPlan::new`]) or from a fixed ingested
+//! trace replayed verbatim across all configurations
+//! ([`ExperimentPlan::from_trace`]; see [`crate::trace`]).
 //!
 //! # Determinism
 //!
@@ -26,12 +29,14 @@
 //! `std::thread::available_parallelism()`, capped at the number of tasks.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
+use crate::core::Request;
 use crate::policy::Policy;
 use crate::pool::Cluster;
 use crate::sched::SchedKind;
 use crate::sim::{simulate_with_mode, EngineMode, SimResult};
+use crate::trace::TraceSource;
 use crate::workload::WorkloadSpec;
 
 /// One scheduler configuration in an experiment grid.
@@ -77,8 +82,7 @@ impl SimConfig {
 /// ```
 #[derive(Clone, Debug)]
 pub struct ExperimentPlan {
-    spec: WorkloadSpec,
-    apps: u32,
+    source: Source,
     cluster: Cluster,
     seeds: Vec<u64>,
     configs: Vec<SimConfig>,
@@ -86,16 +90,39 @@ pub struct ExperimentPlan {
     threads: usize,
 }
 
+/// Where a plan's requests come from: a seeded synthetic workload, or a
+/// fixed ingested trace replayed verbatim (shared behind an `Arc` so
+/// cloning a plan — and handing it to worker threads — stays cheap).
+#[derive(Clone, Debug)]
+enum Source {
+    Spec { spec: WorkloadSpec, apps: u32 },
+    Trace(Arc<Vec<Request>>),
+}
+
 impl ExperimentPlan {
     /// A plan over `apps` applications per seed, on the paper's simulated
     /// cluster, with no seeds or configurations yet (add them with
     /// [`seeds`](Self::seeds) and [`config`](Self::config)).
     pub fn new(spec: WorkloadSpec, apps: u32) -> Self {
+        Self::with_source(Source::Spec { spec, apps }, Vec::new())
+    }
+
+    /// A plan that replays `trace` instead of sampling a workload: every
+    /// scheduler/policy configuration runs over the identical ingested
+    /// request list, so per-configuration results are directly
+    /// comparable on the same real arrivals. A trace has no sampling
+    /// randomness, so seeds default to the single pseudo-seed `0`;
+    /// calling [`seeds`](Self::seeds) replays the same trace once per
+    /// seed (per-seed results are bit-identical).
+    pub fn from_trace(trace: TraceSource) -> Self {
+        Self::with_source(Source::Trace(Arc::new(trace.into_requests())), vec![0])
+    }
+
+    fn with_source(source: Source, seeds: Vec<u64>) -> Self {
         ExperimentPlan {
-            spec,
-            apps,
+            source,
             cluster: Cluster::paper_sim(),
-            seeds: Vec::new(),
+            seeds,
             configs: Vec::new(),
             mode: EngineMode::Optimized,
             threads: 0,
@@ -151,7 +178,10 @@ impl ExperimentPlan {
     }
 
     fn run_one(&self, ci: usize, seed: u64) -> SimResult {
-        let requests = self.spec.generate(self.apps, seed);
+        let requests = match &self.source {
+            Source::Spec { spec, apps } => spec.generate(*apps, seed),
+            Source::Trace(reqs) => reqs.as_ref().clone(),
+        };
         let c = self.configs[ci];
         simulate_with_mode(requests, self.cluster.clone(), c.policy, c.kind, self.mode)
     }

@@ -1,0 +1,325 @@
+//! Trace calibration: extract per-metric quantiles from an ingested
+//! trace into piecewise-linear [`Empirical`] CDFs and assemble a
+//! [`WorkloadSpec`] — the inverse of the synthetic generator. Fitted
+//! control points sit *at* the probability grid, so the fitted
+//! distribution's quantiles at grid points (including the 10/50/90th)
+//! equal the trace's empirical quantiles exactly; between grid points
+//! the interpolation (log-space for heavy-tailed metrics) carries the
+//! usual piecewise-linear error.
+
+use crate::core::AppClass;
+use crate::util::dist::{Empirical, Mixture};
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+use crate::workload::{Caps, WorkloadSpec};
+
+use super::TraceSource;
+
+/// Probability grid the calibrator extracts quantiles at. Includes the
+/// 10/50/90th percentiles the acceptance checks compare, plus enough
+/// intermediate points to track the tail shape.
+pub const FIT_GRID: [f64; 11] = [
+    0.0, 0.05, 0.10, 0.25, 0.40, 0.50, 0.60, 0.75, 0.90, 0.95, 1.0,
+];
+
+/// Per-metric sample sets extracted from a trace — the raw material of
+/// [`fit_workload`], also used by `zoe trace stats` and the fit-accuracy
+/// property tests.
+pub struct TraceStats {
+    /// Isolated runtimes (s), one per application.
+    pub runtime: Samples,
+    /// Per-component CPU demands: each application contributes its core
+    /// profile, plus its elastic profile when it has elastic components.
+    pub cpu: Samples,
+    /// Per-component RAM demands (MB), extracted like `cpu`.
+    pub ram_mb: Samples,
+    /// Inter-arrival gaps (s) between consecutive arrivals.
+    pub interarrival: Samples,
+    /// Core-component counts of B-E applications.
+    pub batch_cores: Samples,
+    /// Elastic-component counts of B-E applications.
+    pub batch_elastic: Samples,
+    /// (Core) component counts of B-R applications.
+    pub rigid_components: Samples,
+    /// Elastic-component counts of interactive applications.
+    pub interactive_elastic: Samples,
+    /// Number of interactive applications.
+    pub n_interactive: usize,
+    /// Number of batch-elastic applications.
+    pub n_batch_elastic: usize,
+    /// Number of batch-rigid applications.
+    pub n_batch_rigid: usize,
+}
+
+impl TraceStats {
+    /// Extract every sample set in one pass over the trace.
+    pub fn collect(trace: &TraceSource) -> Self {
+        let mut s = TraceStats {
+            runtime: Samples::new(),
+            cpu: Samples::new(),
+            ram_mb: Samples::new(),
+            interarrival: Samples::new(),
+            batch_cores: Samples::new(),
+            batch_elastic: Samples::new(),
+            rigid_components: Samples::new(),
+            interactive_elastic: Samples::new(),
+            n_interactive: 0,
+            n_batch_elastic: 0,
+            n_batch_rigid: 0,
+        };
+        let mut prev: Option<f64> = None;
+        for r in trace.requests() {
+            s.runtime.push(r.runtime);
+            s.cpu.push(r.core_res.cpu);
+            s.ram_mb.push(r.core_res.ram_mb);
+            if r.n_elastic > 0 {
+                s.cpu.push(r.elastic_res.cpu);
+                s.ram_mb.push(r.elastic_res.ram_mb);
+            }
+            if let Some(p) = prev {
+                s.interarrival.push(r.arrival - p);
+            }
+            prev = Some(r.arrival);
+            match r.class {
+                AppClass::Interactive => {
+                    s.n_interactive += 1;
+                    s.interactive_elastic.push(r.n_elastic.max(1) as f64);
+                }
+                AppClass::BatchElastic => {
+                    s.n_batch_elastic += 1;
+                    s.batch_cores.push(r.n_core as f64);
+                    s.batch_elastic.push(r.n_elastic.max(1) as f64);
+                }
+                AppClass::BatchRigid => {
+                    s.n_batch_rigid += 1;
+                    s.rigid_components.push(r.n_core as f64);
+                }
+            }
+        }
+        s
+    }
+
+    /// Total number of applications seen.
+    pub fn total(&self) -> usize {
+        self.n_interactive + self.n_batch_elastic + self.n_batch_rigid
+    }
+}
+
+/// Fit a piecewise-linear CDF through the samples' quantiles at
+/// [`FIT_GRID`]; `None` when there are no samples. Log-space
+/// interpolation is used when requested and the support is strictly
+/// positive (heavy-tailed metrics: runtimes, memory, counts).
+fn fit_empirical(xs: &mut Samples, prefer_log: bool) -> Option<Empirical> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut pts: Vec<(f64, f64)> = FIT_GRID
+        .iter()
+        .map(|&p| (xs.percentile(p * 100.0), p))
+        .collect();
+    // Percentiles are monotone; clamp float wobble so the control
+    // points satisfy Empirical's nondecreasing-value invariant.
+    for i in 1..pts.len() {
+        if pts[i].0 < pts[i - 1].0 {
+            pts[i].0 = pts[i - 1].0;
+        }
+    }
+    Some(if prefer_log && pts[0].0 > 0.0 {
+        Empirical::new_log(pts)
+    } else {
+        Empirical::new(pts)
+    })
+}
+
+/// Calibrate a [`WorkloadSpec`] from an ingested trace: quantile-fitted
+/// CDFs for every distribution, class-mix fractions from the observed
+/// counts, and the paper's schedulability caps. Distributions with no
+/// samples in the trace (e.g. no interactive applications) fall back to
+/// the paper spec's corresponding CDF.
+///
+/// # Panics
+///
+/// Panics on an empty trace — there is nothing to fit.
+pub fn fit_workload(trace: &TraceSource) -> WorkloadSpec {
+    let mut st = TraceStats::collect(trace);
+    fit_workload_from_stats(&mut st)
+}
+
+/// [`fit_workload`] over already-collected [`TraceStats`] — callers
+/// that also report on the stats (e.g. `zoe trace fit`'s comparison
+/// table) avoid a second O(n) collection pass over the trace. Takes
+/// `&mut` because quantile extraction sorts the sample sets (their
+/// contents are unchanged).
+///
+/// # Panics
+///
+/// Panics when the stats cover zero applications.
+pub fn fit_workload_from_stats(st: &mut TraceStats) -> WorkloadSpec {
+    assert!(st.total() > 0, "cannot fit a workload from an empty trace");
+    let paper = WorkloadSpec::paper();
+    let caps = Caps::paper();
+    let total = st.total() as f64;
+    let n_batch = st.n_batch_elastic + st.n_batch_rigid;
+    let interarrival = fit_empirical(&mut st.interarrival, true);
+    WorkloadSpec {
+        interactive_frac: st.n_interactive as f64 / total,
+        batch_elastic_frac: if n_batch > 0 {
+            st.n_batch_elastic as f64 / n_batch as f64
+        } else {
+            paper.batch_elastic_frac
+        },
+        cpu: fit_empirical(&mut st.cpu, false).expect("non-empty trace has cpu samples"),
+        ram_mb: fit_empirical(&mut st.ram_mb, true).expect("non-empty trace has ram samples"),
+        // A single fitted mode: the trace's gaps already contain
+        // whatever bimodality the system had, so the mixture degenerates
+        // to one empirical CDF (w0 = 1 ⇒ mode `a` always sampled).
+        interarrival: match interarrival {
+            Some(d) => Mixture { w0: 1.0, a: d.clone(), b: d },
+            None => paper.interarrival.clone(),
+        },
+        runtime: fit_empirical(&mut st.runtime, true).expect("non-empty trace has runtimes"),
+        batch_cores: fit_empirical(&mut st.batch_cores, false)
+            .unwrap_or_else(|| paper.batch_cores.clone()),
+        batch_elastic: fit_empirical(&mut st.batch_elastic, true)
+            .unwrap_or_else(|| paper.batch_elastic.clone()),
+        rigid_components: fit_empirical(&mut st.rigid_components, true)
+            .unwrap_or_else(|| paper.rigid_components.clone()),
+        interactive_elastic: fit_empirical(&mut st.interactive_elastic, true)
+            .unwrap_or_else(|| paper.interactive_elastic.clone()),
+        interactive_runtime_scale: 1.0,
+        interactive_priority: paper.interactive_priority,
+        max_core_cpu: caps.max_core_cpu,
+        max_core_ram_mb: caps.max_core_ram_mb,
+        max_full_cpu: caps.max_full_cpu,
+        max_full_ram_mb: caps.max_full_ram_mb,
+        arrival_scale: 1.0,
+        inelastic_mode: false,
+    }
+}
+
+fn empirical_to_json(d: &Empirical) -> Json {
+    Json::obj(vec![
+        ("log", Json::Bool(d.log_space())),
+        (
+            "points",
+            Json::Arr(
+                d.points()
+                    .iter()
+                    .map(|&(v, p)| Json::Arr(vec![Json::num(v), Json::num(p)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Serialize a [`WorkloadSpec`] (e.g. a fitted one) as JSON for
+/// inspection and external tooling: every distribution as its
+/// `{log, points}` control-point list, plus the scalar knobs.
+pub fn spec_to_json(spec: &WorkloadSpec) -> Json {
+    Json::obj(vec![
+        ("interactive_frac", Json::num(spec.interactive_frac)),
+        ("batch_elastic_frac", Json::num(spec.batch_elastic_frac)),
+        ("cpu", empirical_to_json(&spec.cpu)),
+        ("ram_mb", empirical_to_json(&spec.ram_mb)),
+        (
+            "interarrival",
+            Json::obj(vec![
+                ("w0", Json::num(spec.interarrival.w0)),
+                ("a", empirical_to_json(&spec.interarrival.a)),
+                ("b", empirical_to_json(&spec.interarrival.b)),
+            ]),
+        ),
+        ("runtime", empirical_to_json(&spec.runtime)),
+        ("batch_cores", empirical_to_json(&spec.batch_cores)),
+        ("batch_elastic", empirical_to_json(&spec.batch_elastic)),
+        ("rigid_components", empirical_to_json(&spec.rigid_components)),
+        ("interactive_elastic", empirical_to_json(&spec.interactive_elastic)),
+        ("interactive_runtime_scale", Json::num(spec.interactive_runtime_scale)),
+        ("interactive_priority", Json::num(spec.interactive_priority)),
+        ("max_core_cpu", Json::num(spec.max_core_cpu)),
+        ("max_core_ram_mb", Json::num(spec.max_core_ram_mb)),
+        ("max_full_cpu", Json::num(spec.max_full_cpu)),
+        ("max_full_ram_mb", Json::num(spec.max_full_ram_mb)),
+        ("arrival_scale", Json::num(spec.arrival_scale)),
+        ("inelastic_mode", Json::Bool(spec.inelastic_mode)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::unit_request;
+
+    #[test]
+    fn fit_hits_grid_quantiles_exactly() {
+        let mut xs = Samples::new();
+        for i in 0..1000 {
+            xs.push(1.0 + i as f64); // uniform 1..=1000
+        }
+        let d = fit_empirical(&mut xs.clone(), true).unwrap();
+        for p in [0.10, 0.50, 0.90] {
+            let want = xs.percentile(p * 100.0);
+            let got = d.quantile(p);
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs(),
+                "p{}: {got} vs {want}",
+                p * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn fit_handles_constant_samples() {
+        let mut xs = Samples::new();
+        for _ in 0..10 {
+            xs.push(42.0);
+        }
+        let d = fit_empirical(&mut xs, true).unwrap();
+        // Log-space interpolation round-trips through ln/exp, which is
+        // exact only to an ulp — compare with a tolerance.
+        for p in [0.0, 0.5, 1.0] {
+            let q = d.quantile(p);
+            assert!((q - 42.0).abs() < 1e-9, "quantile({p}) = {q}");
+        }
+    }
+
+    #[test]
+    fn fit_falls_back_to_linear_on_zero_support() {
+        let mut xs = Samples::new();
+        xs.push(0.0);
+        xs.push(10.0);
+        let d = fit_empirical(&mut xs, true).unwrap();
+        assert!(!d.log_space());
+        assert_eq!(d.quantile(0.0), 0.0);
+    }
+
+    #[test]
+    fn stats_collects_classes_and_interarrivals() {
+        let reqs = vec![
+            unit_request(0, 0.0, 10.0, 2, 0),  // B-R (builder reclassifies)
+            unit_request(1, 5.0, 20.0, 1, 4),  // B-E
+            unit_request(2, 9.0, 30.0, 1, 2),  // B-E
+        ];
+        let trace = TraceSource::new(reqs);
+        let st = TraceStats::collect(&trace);
+        assert_eq!(st.total(), 3);
+        assert_eq!(st.n_batch_rigid, 1);
+        assert_eq!(st.n_batch_elastic, 2);
+        assert_eq!(st.interarrival.len(), 2);
+        assert_eq!(st.runtime.len(), 3);
+        // rigid app contributes 1 cpu sample, elastic apps 2 each
+        assert_eq!(st.cpu.len(), 5);
+    }
+
+    #[test]
+    fn fitted_spec_serializes_to_json() {
+        let reqs = (0..50)
+            .map(|i| unit_request(i, i as f64 * 3.0, 10.0 + i as f64, 1, (i % 5) as u32))
+            .collect();
+        let spec = fit_workload(&TraceSource::new(reqs));
+        let j = spec_to_json(&spec);
+        let rt = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(rt.get("inelastic_mode").as_bool(), Some(false));
+        assert!(rt.get("runtime").get("points").as_arr().unwrap().len() == FIT_GRID.len());
+    }
+}

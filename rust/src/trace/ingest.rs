@@ -1,0 +1,728 @@
+//! Trace ingestion: streaming parsers for the native JSONL app-trace
+//! format (and recorded event logs, whose `arrival` lines carry the same
+//! fields) and for Google ClusterData2011-shaped `task_events` CSVs,
+//! plus [`TraceSource`], the normalized replayable request list.
+
+use std::collections::{BTreeMap, HashSet};
+use std::io::BufRead;
+
+use crate::core::{AppClass, Request, Resources};
+use crate::policy::Policy;
+use crate::pool::Cluster;
+use crate::sched::SchedKind;
+use crate::sim::{SimResult, Simulation};
+use crate::util::json::Json;
+use crate::workload::Caps;
+
+/// A trace-parse failure, with the 1-based line it occurred at
+/// (line 0 = file-level, e.g. the file could not be opened).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceError {
+    /// 1-based line number of the failure (0 for file-level errors).
+    pub line: usize,
+    /// Human-readable description.
+    pub msg: String,
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "trace error: {}", self.msg)
+        } else {
+            write!(f, "trace error at line {}: {}", self.line, self.msg)
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Knobs for trace ingestion.
+#[derive(Clone, Debug)]
+pub struct IngestOptions {
+    /// Schedulability caps applied to every ingested request (`None`
+    /// disables capping — only safe when the trace is known to fit the
+    /// target cluster). Defaults to [`Caps::paper`], the same caps the
+    /// synthetic generator enforces. Event-log `arrival` lines are
+    /// always exempt: they record requests a simulation actually ran,
+    /// and re-capping them could alter the replay.
+    pub caps: Option<Caps>,
+    /// CSV only: Google traces normalize CPU requests to the largest
+    /// machine; this scale converts them to cores (default 32.0, the
+    /// paper's per-machine core count).
+    pub cpu_scale: f64,
+    /// CSV only: RAM counterpart of `cpu_scale`, in MB (default
+    /// 128 GB = 131 072 MB, the paper's per-machine RAM).
+    pub ram_scale_mb: f64,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions {
+            caps: Some(Caps::paper()),
+            cpu_scale: 32.0,
+            ram_scale_mb: 128.0 * 1024.0,
+        }
+    }
+}
+
+/// A normalized, replayable request list ingested from a trace:
+/// requests are sorted by arrival time (stable, so equal-arrival order
+/// is the input order) and re-assigned dense ids `0..n` — the invariant
+/// the simulator's request table indexes by.
+#[derive(Clone, Debug)]
+pub struct TraceSource {
+    requests: Vec<Request>,
+    /// Jobs dropped during CSV aggregation (no submit/end event, or a
+    /// non-positive derived runtime). Always 0 for JSONL ingests, which
+    /// reject bad lines with a [`TraceError`] instead.
+    pub skipped: usize,
+}
+
+impl TraceSource {
+    /// Normalize an explicit request list into a trace source.
+    ///
+    /// # Panics
+    ///
+    /// Panics when a request is invalid (non-finite arrival,
+    /// non-positive runtime, or zero core components) — the parsing
+    /// constructors validate per line and return [`TraceError`] instead.
+    pub fn new(requests: Vec<Request>) -> Self {
+        for r in &requests {
+            assert!(r.arrival.is_finite(), "request arrival must be finite");
+            assert!(r.runtime > 0.0, "request runtime must be positive");
+            assert!(r.n_core >= 1, "a request needs at least one core component");
+        }
+        let mut requests = requests;
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.id = i as u32;
+        }
+        TraceSource { requests, skipped: 0 }
+    }
+
+    /// The normalized requests, sorted by arrival, ids dense `0..n`.
+    pub fn requests(&self) -> &[Request] {
+        &self.requests
+    }
+
+    /// Number of applications in the trace.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Whether the trace contains no applications.
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Arrival span (last − first arrival) in seconds; 0 for traces with
+    /// fewer than two applications.
+    pub fn span(&self) -> f64 {
+        match (self.requests.first(), self.requests.last()) {
+            (Some(a), Some(b)) => b.arrival - a.arrival,
+            _ => 0.0,
+        }
+    }
+
+    /// Consume the source, yielding the normalized request list (the
+    /// form [`crate::sim::Simulation::new`] takes).
+    pub fn into_requests(self) -> Vec<Request> {
+        self.requests
+    }
+
+    /// Build a [`Simulation`] replaying this trace (attach a recorder
+    /// with [`Simulation::with_recorder`] before running, if desired).
+    pub fn simulation(&self, cluster: Cluster, policy: Policy, kind: SchedKind) -> Simulation {
+        Simulation::new(self.requests.clone(), cluster, policy, kind)
+    }
+
+    /// Replay the trace to completion under one configuration.
+    pub fn simulate(&self, cluster: Cluster, policy: Policy, kind: SchedKind) -> SimResult {
+        self.simulation(cluster, policy, kind).run()
+    }
+
+    // ---- parsing constructors --------------------------------------------
+
+    /// Ingest a trace file, auto-detecting the format from the
+    /// extension: `.csv` parses as ClusterData2011-shaped CSV, anything
+    /// else as JSONL (app traces and recorded event logs).
+    pub fn from_path(path: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        let is_csv = path
+            .rsplit('.')
+            .next()
+            .map(|e| e.eq_ignore_ascii_case("csv"))
+            .unwrap_or(false);
+        if is_csv {
+            Self::from_csv_path(path, opts)
+        } else {
+            Self::from_jsonl_path(path, opts)
+        }
+    }
+
+    /// Ingest a JSONL file (native app trace or recorded event log).
+    pub fn from_jsonl_path(path: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        let f = std::fs::File::open(path).map_err(|e| TraceError {
+            line: 0,
+            msg: format!("cannot open {path}: {e}"),
+        })?;
+        Self::from_jsonl_reader(std::io::BufReader::new(f), opts)
+    }
+
+    /// Ingest a ClusterData2011-shaped CSV file.
+    pub fn from_csv_path(path: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        let f = std::fs::File::open(path).map_err(|e| TraceError {
+            line: 0,
+            msg: format!("cannot open {path}: {e}"),
+        })?;
+        Self::from_csv_reader(std::io::BufReader::new(f), opts)
+    }
+
+    /// Ingest JSONL from an in-memory string.
+    pub fn from_jsonl_str(s: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        Self::from_jsonl_reader(s.as_bytes(), opts)
+    }
+
+    /// Ingest CSV from an in-memory string.
+    pub fn from_csv_str(s: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        Self::from_csv_reader(s.as_bytes(), opts)
+    }
+
+    /// Streaming JSONL ingest: one line at a time, O(line) memory beyond
+    /// the accumulated requests. Lines that are empty or start with `#`
+    /// are skipped; event-log lines other than `arrival` are skipped;
+    /// anything else must be a valid app object. A file that opens with
+    /// a recorder `meta` line but never reaches its `end` line is a
+    /// truncated recording and is rejected — silently replaying only the
+    /// arrivals that made it to disk would simulate a different
+    /// (shorter) workload than the one recorded.
+    pub fn from_jsonl_reader<R: BufRead>(r: R, opts: &IngestOptions) -> Result<Self, TraceError> {
+        let mut requests = Vec::new();
+        let mut lineno = 0usize;
+        let (mut saw_meta, mut saw_end) = (false, false);
+        for line in r.lines() {
+            lineno += 1;
+            let line = line.map_err(|e| TraceError {
+                line: lineno,
+                msg: format!("io error: {e}"),
+            })?;
+            match parse_jsonl_line(&line, lineno, opts)? {
+                LineKind::Skip => {}
+                LineKind::Meta => saw_meta = true,
+                LineKind::End => saw_end = true,
+                LineKind::App(req) => requests.push(req),
+            }
+        }
+        if saw_meta && !saw_end {
+            return Err(TraceError {
+                line: 0,
+                msg: "event log has a `meta` line but no `end` line — the recording is \
+                      incomplete (truncated, or the run is still in progress)"
+                    .to_string(),
+            });
+        }
+        Ok(TraceSource::new(requests))
+    }
+
+    /// Streaming CSV ingest with per-job aggregation (see the module
+    /// docs of [`crate::trace`] for the column shape and the
+    /// rigid/elastic inference rules).
+    pub fn from_csv_reader<R: BufRead>(r: R, opts: &IngestOptions) -> Result<Self, TraceError> {
+        let mut jobs: BTreeMap<u64, JobAgg> = BTreeMap::new();
+        let mut lineno = 0usize;
+        for line in r.lines() {
+            lineno += 1;
+            let line = line.map_err(|e| TraceError {
+                line: lineno,
+                msg: format!("io error: {e}"),
+            })?;
+            parse_csv_line(&line, lineno, &mut jobs)?;
+        }
+        Ok(build_csv_jobs(&jobs, opts))
+    }
+}
+
+/// Serialize a request as the flat key/value pairs of the native JSONL
+/// app-trace format (shared with the recorder's `arrival` lines).
+/// Numbers round-trip exactly: the JSON writer emits shortest-roundtrip
+/// floats, which is what makes record → replay bit-identical.
+pub(crate) fn request_to_json_fields(r: &Request) -> Vec<(&'static str, Json)> {
+    vec![
+        ("id", Json::num(r.id as f64)),
+        ("class", Json::str(r.class.label())),
+        ("arrival", Json::num(r.arrival)),
+        ("runtime", Json::num(r.runtime)),
+        ("n_core", Json::num(r.n_core as f64)),
+        ("core_cpu", Json::num(r.core_res.cpu)),
+        ("core_ram_mb", Json::num(r.core_res.ram_mb)),
+        ("n_elastic", Json::num(r.n_elastic as f64)),
+        ("elastic_cpu", Json::num(r.elastic_res.cpu)),
+        ("elastic_ram_mb", Json::num(r.elastic_res.ram_mb)),
+        ("priority", Json::num(r.priority)),
+    ]
+}
+
+/// What one JSONL line turned out to be.
+enum LineKind {
+    /// Blank, comment, or an event-log record with no request payload
+    /// (`alloc` / `rebalance` / `departure`).
+    Skip,
+    /// A recorder `meta` line (start-of-log marker).
+    Meta,
+    /// A recorder `end` line (complete-log marker).
+    End,
+    /// An application, from an app-trace line or an event-log arrival.
+    App(Request),
+}
+
+/// Parse one JSONL line (see [`LineKind`] for the outcomes).
+fn parse_jsonl_line(
+    line: &str,
+    lineno: usize,
+    opts: &IngestOptions,
+) -> Result<LineKind, TraceError> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') {
+        return Ok(LineKind::Skip);
+    }
+    let j = Json::parse(t).map_err(|e| TraceError {
+        line: lineno,
+        msg: e.to_string(),
+    })?;
+    let ev = j.get("ev");
+    let from_event_log = !ev.is_null();
+    if from_event_log {
+        match ev.as_str() {
+            Some("arrival") => {} // event-log arrivals carry the full app tuple
+            Some("meta") => return Ok(LineKind::Meta),
+            Some("end") => return Ok(LineKind::End),
+            Some(_) => return Ok(LineKind::Skip), // alloc / rebalance / departure
+            None => {
+                return Err(TraceError {
+                    line: lineno,
+                    msg: "\"ev\" must be a string".to_string(),
+                })
+            }
+        }
+    }
+    // Event-log arrivals record requests a simulation *actually ran* —
+    // re-capping them could alter the replay, so they are exempt; only
+    // plain app-trace lines (foreign traces) pass through the caps.
+    // This is what makes record → ingest → replay bit-identical even
+    // for runs recorded with capping disabled.
+    request_from_json(&j, lineno, opts, from_event_log).map(LineKind::App)
+}
+
+/// Decode an app object (or event-log `arrival` record) into a request.
+/// `exempt_caps` skips the schedulability caps (event-log arrivals).
+fn request_from_json(
+    j: &Json,
+    line: usize,
+    opts: &IngestOptions,
+    exempt_caps: bool,
+) -> Result<Request, TraceError> {
+    let err = |msg: String| TraceError { line, msg };
+    let num = |key: &str| -> Result<f64, TraceError> {
+        j.get(key)
+            .as_f64()
+            .ok_or_else(|| err(format!("missing or non-numeric field \"{key}\"")))
+    };
+    let arrival = j
+        .get("arrival")
+        .as_f64()
+        .or_else(|| j.get("t").as_f64())
+        .ok_or_else(|| err("missing or non-numeric field \"arrival\"".to_string()))?;
+    let runtime = num("runtime")?;
+    let n_core = j
+        .get("n_core")
+        .as_u64()
+        .ok_or_else(|| err("missing or non-integer field \"n_core\"".to_string()))?
+        as u32;
+    let core_cpu = num("core_cpu")?;
+    let core_ram_mb = num("core_ram_mb")?;
+    let n_elastic = {
+        let v = j.get("n_elastic");
+        if v.is_null() {
+            0
+        } else {
+            v.as_u64()
+                .ok_or_else(|| err("\"n_elastic\" must be a non-negative integer".to_string()))?
+                as u32
+        }
+    };
+    let (elastic_cpu, elastic_ram_mb) = if n_elastic > 0 {
+        (num("elastic_cpu")?, num("elastic_ram_mb")?)
+    } else {
+        (
+            j.get("elastic_cpu").as_f64().unwrap_or(0.0),
+            j.get("elastic_ram_mb").as_f64().unwrap_or(0.0),
+        )
+    };
+    let priority = j.get("priority").as_f64().unwrap_or(0.0);
+    let class = {
+        let c = j.get("class");
+        if c.is_null() {
+            None
+        } else {
+            match c.as_str() {
+                Some("B-E") => Some(AppClass::BatchElastic),
+                Some("B-R") => Some(AppClass::BatchRigid),
+                Some("Int") => Some(AppClass::Interactive),
+                _ => return Err(err("\"class\" must be one of B-E|B-R|Int".to_string())),
+            }
+        }
+    };
+    if !arrival.is_finite() {
+        return Err(err(format!("arrival must be finite (got {arrival})")));
+    }
+    if !runtime.is_finite() || runtime <= 0.0 {
+        return Err(err(format!("runtime must be positive and finite (got {runtime})")));
+    }
+    if n_core < 1 {
+        return Err(err("n_core must be >= 1".to_string()));
+    }
+    for (name, v) in [
+        ("core_cpu", core_cpu),
+        ("core_ram_mb", core_ram_mb),
+        ("elastic_cpu", elastic_cpu),
+        ("elastic_ram_mb", elastic_ram_mb),
+        ("priority", priority),
+    ] {
+        if !v.is_finite() || v < 0.0 {
+            return Err(err(format!("{name} must be non-negative and finite (got {v})")));
+        }
+    }
+    let mut r = Request {
+        id: 0, // reassigned by TraceSource::new
+        class: class.unwrap_or(if n_elastic == 0 {
+            AppClass::BatchRigid
+        } else {
+            AppClass::BatchElastic
+        }),
+        arrival,
+        runtime,
+        n_core,
+        core_res: Resources::new(core_cpu, core_ram_mb),
+        n_elastic,
+        elastic_res: Resources::new(elastic_cpu, elastic_ram_mb),
+        priority,
+    };
+    if !exempt_caps {
+        apply_caps(&mut r, opts);
+    }
+    Ok(r)
+}
+
+fn apply_caps(r: &mut Request, opts: &IngestOptions) {
+    if let Some(caps) = &opts.caps {
+        r.n_core = caps.cap_cores(r.n_core, &r.core_res);
+        r.n_elastic = caps.cap_elastic(r.n_elastic, r.n_core, &r.core_res, &r.elastic_res);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ClusterData2011-shaped CSV
+// ---------------------------------------------------------------------------
+
+/// ClusterData2011 `task_events` event types this parser interprets.
+const EV_SUBMIT: u32 = 0;
+const EV_SCHEDULE: u32 = 1;
+const EV_FAIL: u32 = 3;
+const EV_FINISH: u32 = 4;
+const EV_KILL: u32 = 5;
+const EV_LOST: u32 = 6;
+
+/// ClusterData2011 encodes events that happened *after* the trace
+/// window with timestamp 2^63 − 1 µs. Rows at or beyond this sentinel
+/// carry no usable time: interpreting one as a real end event would
+/// give its job a ~292 000-year runtime. They are dropped, so a job
+/// whose only end event is out-of-window is skipped like any other
+/// unfinished job. (Timestamp 0 = "before the window" is kept: for
+/// submits it degrades to "arrived at trace start".)
+const CSV_TIME_SENTINEL_US: f64 = 9.0e18;
+
+/// Per-job accumulator over task rows.
+struct JobAgg {
+    first_submit: f64,
+    first_schedule: f64,
+    last_end: f64,
+    tasks: HashSet<u64>,
+    cpu_sum: f64,
+    ram_sum: f64,
+    res_rows: u32,
+    sched_class: u32,
+    priority: f64,
+}
+
+fn parse_csv_line(
+    line: &str,
+    lineno: usize,
+    jobs: &mut BTreeMap<u64, JobAgg>,
+) -> Result<(), TraceError> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') {
+        return Ok(());
+    }
+    let cols: Vec<&str> = t.split(',').collect();
+    if cols.len() < 6 {
+        return Err(TraceError {
+            line: lineno,
+            msg: format!(
+                "expected >= 6 comma-separated columns (task_events shape), got {}",
+                cols.len()
+            ),
+        });
+    }
+    let time_us: f64 = cols[0].trim().parse().map_err(|_| TraceError {
+        line: lineno,
+        msg: format!("non-numeric timestamp \"{}\"", cols[0]),
+    })?;
+    if !(time_us < CSV_TIME_SENTINEL_US) || time_us < 0.0 {
+        return Ok(()); // out-of-window sentinel (or garbage): no usable time
+    }
+    let job_id: u64 = cols[2].trim().parse().map_err(|_| TraceError {
+        line: lineno,
+        msg: format!("non-numeric job id \"{}\"", cols[2]),
+    })?;
+    let event: u32 = cols[5].trim().parse().map_err(|_| TraceError {
+        line: lineno,
+        msg: format!("non-numeric event type \"{}\"", cols[5]),
+    })?;
+    let sched_class: u32 = cols
+        .get(7)
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0);
+    let priority: f64 = cols
+        .get(8)
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0.0);
+    let cpu: Option<f64> = cols.get(9).and_then(|s| s.trim().parse().ok());
+    let ram: Option<f64> = cols.get(10).and_then(|s| s.trim().parse().ok());
+    let t_s = time_us * 1e-6;
+    let agg = jobs.entry(job_id).or_insert_with(|| JobAgg {
+        first_submit: f64::INFINITY,
+        first_schedule: f64::INFINITY,
+        last_end: f64::NEG_INFINITY,
+        tasks: HashSet::new(),
+        cpu_sum: 0.0,
+        ram_sum: 0.0,
+        res_rows: 0,
+        sched_class: 0,
+        priority: 0.0,
+    });
+    agg.sched_class = agg.sched_class.max(sched_class);
+    agg.priority = agg.priority.max(priority);
+    match event {
+        EV_SUBMIT => {
+            agg.first_submit = agg.first_submit.min(t_s);
+            let task: u64 = cols
+                .get(3)
+                .and_then(|s| s.trim().parse().ok())
+                .unwrap_or(0);
+            agg.tasks.insert(task);
+            if let (Some(c), Some(m)) = (cpu, ram) {
+                agg.cpu_sum += c;
+                agg.ram_sum += m;
+                agg.res_rows += 1;
+            }
+        }
+        EV_SCHEDULE => agg.first_schedule = agg.first_schedule.min(t_s),
+        EV_FAIL | EV_FINISH | EV_KILL | EV_LOST => agg.last_end = agg.last_end.max(t_s),
+        _ => {} // EVICT and attribute-update rows carry no lifecycle info we use
+    }
+    Ok(())
+}
+
+/// Turn the aggregated jobs into requests (deterministic: jobs iterate
+/// in ascending job-id order, arrival ties keep that order through the
+/// stable sort in `TraceSource::new`).
+fn build_csv_jobs(jobs: &BTreeMap<u64, JobAgg>, opts: &IngestOptions) -> TraceSource {
+    let mut t0 = f64::INFINITY;
+    for a in jobs.values() {
+        if a.first_submit < t0 {
+            t0 = a.first_submit;
+        }
+    }
+    let mut requests = Vec::new();
+    let mut skipped = 0usize;
+    for a in jobs.values() {
+        if !a.first_submit.is_finite() {
+            skipped += 1; // end/schedule rows only, submission lost
+            continue;
+        }
+        let start = if a.first_schedule.is_finite() {
+            a.first_schedule
+        } else {
+            a.first_submit
+        };
+        if !(a.last_end > start) {
+            skipped += 1; // never finished (or zero-length): no runtime
+            continue;
+        }
+        let runtime = a.last_end - start;
+        let comps = a.tasks.len().max(1) as u32;
+        let (cpu, ram_mb) = if a.res_rows > 0 {
+            (
+                a.cpu_sum / a.res_rows as f64 * opts.cpu_scale,
+                a.ram_sum / a.res_rows as f64 * opts.ram_scale_mb,
+            )
+        } else {
+            (1.0, 1024.0)
+        };
+        let res = Resources::new(cpu, ram_mb);
+        // Rigid/elastic inference from the Google scheduling class:
+        // 3 = latency-sensitive, human-facing → interactive;
+        // 2 = production batch with strict shape → rigid (all core);
+        // 0/1 = throughput analytics → elastic, Spark-like: one core
+        // "driver" component, the remaining tasks elastic "executors".
+        let (class, n_core, n_elastic, priority) = match a.sched_class {
+            3 => (AppClass::Interactive, 1, comps - 1, a.priority),
+            2 => (AppClass::BatchRigid, comps, 0, 0.0),
+            _ => {
+                if comps <= 1 {
+                    (AppClass::BatchRigid, 1, 0, 0.0)
+                } else {
+                    (AppClass::BatchElastic, 1, comps - 1, 0.0)
+                }
+            }
+        };
+        let mut r = Request {
+            id: 0,
+            class,
+            arrival: a.first_submit - t0,
+            runtime,
+            n_core,
+            core_res: res,
+            n_elastic,
+            elastic_res: res,
+            priority,
+        };
+        apply_caps(&mut r, opts);
+        requests.push(r);
+    }
+    let mut src = TraceSource::new(requests);
+    src.skipped = skipped;
+    src
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_req(line: &str) -> Request {
+        let src = TraceSource::from_jsonl_str(line, &IngestOptions::default()).unwrap();
+        src.requests()[0].clone()
+    }
+
+    #[test]
+    fn jsonl_minimal_line_parses_with_inference() {
+        let r = line_req(r#"{"arrival":5.0,"runtime":30.0,"n_core":2,"core_cpu":1.5,"core_ram_mb":2048}"#);
+        assert_eq!(r.class, AppClass::BatchRigid); // no elastic ⇒ B-R
+        assert_eq!(r.n_core, 2);
+        assert_eq!(r.n_elastic, 0);
+        assert_eq!(r.arrival, 5.0);
+        assert_eq!(r.core_res.cpu, 1.5);
+        let r = line_req(
+            r#"{"arrival":0.0,"runtime":30.0,"n_core":1,"core_cpu":1.0,"core_ram_mb":64,"n_elastic":4,"elastic_cpu":0.5,"elastic_ram_mb":32}"#,
+        );
+        assert_eq!(r.class, AppClass::BatchElastic); // elastic ⇒ B-E
+        assert_eq!(r.n_elastic, 4);
+    }
+
+    #[test]
+    fn jsonl_skips_blanks_comments_and_non_arrival_events() {
+        let s = "\n# comment\n{\"ev\":\"meta\",\"schema\":1}\n\
+                 {\"ev\":\"alloc\",\"t\":1.0,\"id\":0,\"grant\":2}\n\
+                 {\"arrival\":0.0,\"runtime\":10.0,\"n_core\":1,\"core_cpu\":1.0,\"core_ram_mb\":64}\n\
+                 {\"ev\":\"end\",\"t\":10.0,\"events\":2}\n";
+        let src = TraceSource::from_jsonl_str(s, &IngestOptions::default()).unwrap();
+        assert_eq!(src.len(), 1);
+    }
+
+    #[test]
+    fn truncated_event_log_is_rejected() {
+        // A recorder log (meta line) whose end line never made it to
+        // disk must not silently replay as a shorter workload.
+        let s = "{\"ev\":\"meta\",\"schema\":1}\n\
+                 {\"ev\":\"arrival\",\"t\":0.0,\"arrival\":0.0,\"runtime\":10.0,\"n_core\":1,\"core_cpu\":1.0,\"core_ram_mb\":64}\n";
+        let err = TraceSource::from_jsonl_str(s, &IngestOptions::default()).unwrap_err();
+        assert!(err.msg.contains("incomplete"), "{}", err.msg);
+        // A plain app trace (no meta) needs no end marker.
+        let s = "{\"arrival\":0.0,\"runtime\":10.0,\"n_core\":1,\"core_cpu\":1.0,\"core_ram_mb\":64}\n";
+        assert!(TraceSource::from_jsonl_str(s, &IngestOptions::default()).is_ok());
+    }
+
+    #[test]
+    fn jsonl_requires_elastic_resources_when_elastic() {
+        let s = r#"{"arrival":0.0,"runtime":10.0,"n_core":1,"core_cpu":1.0,"core_ram_mb":64,"n_elastic":4}"#;
+        let err = TraceSource::from_jsonl_str(s, &IngestOptions::default()).unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(err.msg.contains("elastic_cpu"), "{}", err.msg);
+    }
+
+    #[test]
+    fn jsonl_request_round_trips_exactly() {
+        let orig = crate::core::RequestBuilder::new(3)
+            .arrival(12.345678901234567)
+            .runtime(98.7654321)
+            .cores(2, Resources::new(1.25, 3000.5))
+            .elastics(7, Resources::new(0.5, 1024.0))
+            .priority(1.0)
+            .build();
+        let j = Json::obj(request_to_json_fields(&orig));
+        let mut opts = IngestOptions::default();
+        opts.caps = None;
+        let back = request_from_json(&j, 1, &opts, false).unwrap();
+        assert_eq!(back.arrival.to_bits(), orig.arrival.to_bits());
+        assert_eq!(back.runtime.to_bits(), orig.runtime.to_bits());
+        assert_eq!(back.n_core, orig.n_core);
+        assert_eq!(back.n_elastic, orig.n_elastic);
+        assert_eq!(back.core_res.cpu.to_bits(), orig.core_res.cpu.to_bits());
+        assert_eq!(back.elastic_res.ram_mb.to_bits(), orig.elastic_res.ram_mb.to_bits());
+        assert_eq!(back.class, orig.class);
+        assert_eq!(back.priority, orig.priority);
+    }
+
+    #[test]
+    fn event_log_arrivals_are_exempt_from_caps() {
+        // An app-trace line gets capped; the same tuple as a recorded
+        // event-log arrival does not (it records what actually ran).
+        let app = r#"{"arrival":0.0,"runtime":10.0,"n_core":100000,"core_cpu":1.0,"core_ram_mb":1.0}"#;
+        let log = r#"{"ev":"arrival","t":0.0,"arrival":0.0,"runtime":10.0,"n_core":100000,"core_cpu":1.0,"core_ram_mb":1.0}"#;
+        let opts = IngestOptions::default();
+        assert!(TraceSource::from_jsonl_str(app, &opts).unwrap().requests()[0].n_core < 100_000);
+        assert_eq!(TraceSource::from_jsonl_str(log, &opts).unwrap().requests()[0].n_core, 100_000);
+    }
+
+    #[test]
+    fn csv_rejects_malformed_rows_with_line_numbers() {
+        let s = "0,,1,0,,0,u,1,0,0.1,0.1,,\nnot,a,row\n";
+        let err = TraceSource::from_csv_str(s, &IngestOptions::default()).unwrap_err();
+        assert_eq!(err.line, 2);
+        let s = "bad_time,,1,0,,0\n";
+        let err = TraceSource::from_csv_str(s, &IngestOptions::default()).unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(err.msg.contains("timestamp"), "{}", err.msg);
+    }
+
+    #[test]
+    fn csv_out_of_window_sentinel_rows_are_dropped() {
+        // Job 1 "ends" at the 2^63−1 µs after-window sentinel: the row
+        // carries no usable time, so the job counts as unfinished.
+        // Job 2 is a normal finished job.
+        let s = "0,,1,0,,0,u,1,0,0.1,0.1,,\n\
+                 9223372036854775807,,1,0,,4,u,1,0,,,,\n\
+                 0,,2,0,,0,u,1,0,0.1,0.1,,\n\
+                 5000000,,2,0,,4,u,1,0,,,,\n";
+        let trace = TraceSource::from_csv_str(s, &IngestOptions::default()).unwrap();
+        assert_eq!(trace.len(), 1);
+        assert_eq!(trace.skipped, 1);
+        assert!((trace.requests()[0].runtime - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_trace() {
+        let src = TraceSource::from_jsonl_str("", &IngestOptions::default()).unwrap();
+        assert!(src.is_empty());
+        assert_eq!(src.span(), 0.0);
+    }
+}

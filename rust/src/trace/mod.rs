@@ -1,0 +1,68 @@
+//! Real-trace pipeline (§4.1): ingest, replay, record, and calibrate.
+//!
+//! The paper's evaluation is "trace-driven simulation with large-scale
+//! real system traces"; the synthetic generator in [`crate::workload`]
+//! only *approximates* such traces through parametric CDFs. This module
+//! makes recorded executions a first-class input with four capabilities:
+//!
+//! * **Ingest** ([`TraceSource`]) — zero-dependency streaming parsers for
+//!   two formats:
+//!   - the **native JSONL app trace**: one JSON object per line with the
+//!     request tuple (`arrival`, `runtime`, `n_core`, `core_cpu`,
+//!     `core_ram_mb`, optional `n_elastic`/`elastic_cpu`/
+//!     `elastic_ram_mb`/`class`/`priority`). Application class is
+//!     inferred when absent (`n_elastic == 0` ⇒ B-R, else B-E);
+//!   - a **Google ClusterData2011-shaped CSV** (`task_events`-like
+//!     columns: timestamp µs, —, job id, task index, —, event type, —,
+//!     scheduling class, priority, CPU request, RAM request, …). Task
+//!     rows are aggregated per job: distinct submitted task indices
+//!     become components, the SCHEDULE→last-end span becomes the
+//!     isolated runtime, and the scheduling class drives rigid/elastic
+//!     inference (class 3 ⇒ interactive, class 2 ⇒ rigid batch,
+//!     0/1 ⇒ elastic batch with one core "driver" component).
+//!
+//!   Both formats pass through the same schedulability caps
+//!   ([`crate::workload::Caps`]) the synthetic generator enforces, so an
+//!   ingested request can never deadlock a scheduler. Event-log
+//!   `arrival` lines are exempt from capping — they record requests a
+//!   simulation actually ran, which is what keeps record → replay
+//!   bit-identical even for runs recorded with capping disabled.
+//! * **Replay** — a [`TraceSource`] normalizes its requests (sorted by
+//!   arrival, dense ids) and drives [`crate::sim::Simulation`] directly
+//!   ([`TraceSource::simulate`]) or fans out over scheduler/policy
+//!   configurations through [`crate::sim::ExperimentPlan::from_trace`];
+//!   every scheduler, policy and metric works unchanged on real traces.
+//! * **Record** ([`TraceRecorder`]) — a hook in the simulation engine
+//!   ([`crate::sim::Simulation::with_recorder`]) that emits a JSONL
+//!   event log (`meta`, `arrival`, `alloc`, `rebalance`, `departure`,
+//!   `end` lines) from any run. Arrival lines carry the full request
+//!   tuple, so a recorded log is itself a valid trace:
+//!   record → ingest → replay reproduces the original [`crate::sim::SimResult`]
+//!   **bit-identically** (asserted in `rust/tests/trace_roundtrip.rs`).
+//! * **Calibrate** ([`fit_workload`]) — extract per-metric quantiles
+//!   from an ingested trace into piecewise-linear
+//!   [`crate::util::dist::Empirical`] CDFs and assemble a
+//!   [`crate::workload::WorkloadSpec`], closing the loop between real
+//!   traces and the synthetic generator (fitted 10/50/90th quantiles
+//!   match the trace's empirical quantiles to well under 5 %).
+//!
+//! The CLI front-end is `zoe trace {stats,replay,record,fit}`; a small
+//! bundled sample lives at `rust/tests/data/sample_trace.jsonl`.
+//!
+//! ```no_run
+//! use zoe::policy::Policy;
+//! use zoe::pool::Cluster;
+//! use zoe::sched::SchedKind;
+//! use zoe::trace::{IngestOptions, TraceSource};
+//!
+//! let trace = TraceSource::from_path("cluster.jsonl", &IngestOptions::default()).unwrap();
+//! let result = trace.simulate(Cluster::paper_sim(), Policy::sjf(), SchedKind::Flexible);
+//! ```
+
+mod fit;
+mod ingest;
+mod record;
+
+pub use fit::*;
+pub use ingest::*;
+pub use record::*;

@@ -1,0 +1,245 @@
+//! Event-log recording: a [`TraceRecorder`] attaches to a
+//! [`crate::sim::Simulation`] and emits one JSONL line per observable
+//! scheduling event. The log is both an analysis artifact (allocation
+//! timelines, rebalance causality) and a *replayable trace*: its
+//! `arrival` lines carry the full request tuple in the native app-trace
+//! format, so `record → ingest → replay` reproduces the original
+//! [`crate::sim::SimResult`] bit-identically.
+//!
+//! Line schema (`"ev"` discriminates; all times in simulated seconds):
+//!
+//! | `ev` | fields | meaning |
+//! |---|---|---|
+//! | `meta` | `schema`, `source` | first line; format version |
+//! | `arrival` | `t` + the app tuple (see [`crate::trace`]) | request submission |
+//! | `alloc` | `t`, `id`, `grant`, `cause`, `src` | request `id`'s elastic grant became `grant` (admissions emit their initial grant) because `src` arrived/departed |
+//! | `rebalance` | `t`, `cause`, `src`, `changed` | summary: one scheduling action changed `changed` grants |
+//! | `departure` | `t`, `id`, `turnaround`, `queuing`, `slowdown` | request completion with its §4.1 metrics |
+//! | `end` | `t`, `events` | last line; run finished |
+
+use std::io::Write;
+
+use crate::core::{ReqId, Request};
+use crate::sched::{Phase, World};
+use crate::util::json::Json;
+
+use super::ingest::request_to_json_fields;
+
+/// Version stamped into the `meta` line of every event log.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// Records a simulation run as a JSONL event log (see the module docs
+/// for the schema). Attach with [`crate::sim::Simulation::with_recorder`];
+/// recording is purely observational and never perturbs the run — an
+/// I/O failure mid-run (e.g. a full disk) prints one stderr warning,
+/// disables further recording, and lets the simulation finish; the
+/// truncated log is missing its `end` line, which marks it incomplete.
+pub struct TraceRecorder {
+    /// `None` after a write failure: recording is disabled, the run
+    /// continues.
+    out: Option<Box<dyn Write>>,
+    /// Last grant emitted per request id (−1 = never emitted), so
+    /// duplicate entries in the engine's changed-set produce one `alloc`
+    /// line per actual change.
+    last_grant: Vec<i64>,
+    lines: u64,
+}
+
+impl TraceRecorder {
+    /// A recorder writing to `out`; emits the `meta` line immediately.
+    pub fn new(out: Box<dyn Write>) -> Self {
+        let mut rec = TraceRecorder {
+            out: Some(out),
+            last_grant: Vec::new(),
+            lines: 0,
+        };
+        rec.write(Json::obj(vec![
+            ("ev", Json::str("meta")),
+            ("schema", Json::num(TRACE_SCHEMA_VERSION as f64)),
+            ("source", Json::str("zoe-sim")),
+        ]));
+        rec
+    }
+
+    /// A recorder writing to a freshly created (buffered) file.
+    pub fn to_path(path: &str) -> std::io::Result<Self> {
+        let f = std::fs::File::create(path)?;
+        Ok(Self::new(Box::new(std::io::BufWriter::new(f))))
+    }
+
+    /// Number of JSONL lines written so far (including `meta`).
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// Whether a write failure disabled recording mid-run.
+    pub fn failed(&self) -> bool {
+        self.out.is_none()
+    }
+
+    fn write(&mut self, j: Json) {
+        let Some(out) = self.out.as_mut() else {
+            return;
+        };
+        let mut s = j.to_string();
+        s.push('\n');
+        if let Err(e) = out.write_all(s.as_bytes()) {
+            eprintln!("warning: trace recorder: write failed ({e}); recording disabled, the event log is incomplete");
+            self.out = None;
+            return;
+        }
+        self.lines += 1;
+    }
+
+    pub(crate) fn record_arrival(&mut self, t: f64, req: &Request) {
+        let mut fields = vec![("ev", Json::str("arrival")), ("t", Json::num(t))];
+        fields.extend(request_to_json_fields(req));
+        self.write(Json::obj(fields));
+    }
+
+    /// Emit `alloc` lines for every request whose grant actually changed
+    /// in the scheduling action that just ran (the engine's changed-set,
+    /// read before the departure refresh drains it), plus one
+    /// `rebalance` summary when anything changed.
+    pub(crate) fn record_changes(&mut self, t: f64, cause: &'static str, src: ReqId, w: &World) {
+        let mut n_changed = 0u64;
+        for i in 0..w.changed.len() {
+            let id = w.changed[i];
+            let st = &w.states[id as usize];
+            if st.phase != Phase::Running {
+                continue; // departed (or re-queued) within the same action
+            }
+            let idx = id as usize;
+            if self.last_grant.len() <= idx {
+                self.last_grant.resize(idx + 1, -1);
+            }
+            let g = st.grant as i64;
+            if self.last_grant[idx] == g {
+                continue;
+            }
+            self.last_grant[idx] = g;
+            n_changed += 1;
+            self.write(Json::obj(vec![
+                ("ev", Json::str("alloc")),
+                ("t", Json::num(t)),
+                ("id", Json::num(id as f64)),
+                ("grant", Json::num(st.grant as f64)),
+                ("cause", Json::str(cause)),
+                ("src", Json::num(src as f64)),
+            ]));
+        }
+        if n_changed > 0 {
+            self.write(Json::obj(vec![
+                ("ev", Json::str("rebalance")),
+                ("t", Json::num(t)),
+                ("cause", Json::str(cause)),
+                ("src", Json::num(src as f64)),
+                ("changed", Json::num(n_changed as f64)),
+            ]));
+        }
+    }
+
+    pub(crate) fn record_departure(
+        &mut self,
+        t: f64,
+        id: ReqId,
+        turnaround: f64,
+        queuing: f64,
+        slowdown: f64,
+    ) {
+        self.write(Json::obj(vec![
+            ("ev", Json::str("departure")),
+            ("t", Json::num(t)),
+            ("id", Json::num(id as f64)),
+            ("turnaround", Json::num(turnaround)),
+            ("queuing", Json::num(queuing)),
+            ("slowdown", Json::num(slowdown)),
+        ]));
+    }
+
+    pub(crate) fn finish(&mut self, t: f64, events: u64) {
+        self.write(Json::obj(vec![
+            ("ev", Json::str("end")),
+            ("t", Json::num(t)),
+            ("events", Json::num(events as f64)),
+        ]));
+        if let Some(out) = self.out.as_mut() {
+            if let Err(e) = out.flush() {
+                eprintln!("warning: trace recorder: flush failed ({e}); the event log may be incomplete");
+            }
+        }
+    }
+}
+
+/// A cloneable in-memory [`Write`] sink: every clone appends to the same
+/// shared buffer. Lets tests and benches capture an event log without
+/// touching disk (the recorder consumes its writer, so the caller keeps
+/// a clone to read the contents back after the run).
+#[derive(Clone, Debug, Default)]
+pub struct SharedBuf(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    /// An empty shared buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The bytes written so far, decoded as UTF-8.
+    pub fn contents(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).expect("event logs are UTF-8")
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_buf_clones_share_contents() {
+        let a = SharedBuf::new();
+        let mut b = a.clone();
+        b.write_all(b"hello").unwrap();
+        assert_eq!(a.contents(), "hello");
+    }
+
+    #[test]
+    fn write_failure_disables_recording_without_panicking() {
+        struct FailingWriter;
+        impl Write for FailingWriter {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::Other, "disk full"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut rec = TraceRecorder::new(Box::new(FailingWriter));
+        assert!(rec.failed());
+        assert_eq!(rec.lines(), 0);
+        // Further writes are silent no-ops — the simulation keeps going.
+        rec.finish(1.0, 2);
+        assert_eq!(rec.lines(), 0);
+    }
+
+    #[test]
+    fn recorder_emits_meta_line_first() {
+        let buf = SharedBuf::new();
+        let rec = TraceRecorder::new(Box::new(buf.clone()));
+        assert_eq!(rec.lines(), 1);
+        let first = buf.contents();
+        let j = Json::parse(first.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("ev").as_str(), Some("meta"));
+        assert_eq!(j.get("schema").as_u64(), Some(TRACE_SCHEMA_VERSION));
+    }
+}

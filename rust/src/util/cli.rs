@@ -10,6 +10,9 @@ pub struct Args {
     /// Arguments that are not flags, in order.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
+    /// Flags that appeared more than once, in occurrence order (one
+    /// entry per repeat). `get` still returns the last value.
+    duplicates: Vec<String>,
 }
 
 impl Args {
@@ -20,22 +23,29 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(body) = a.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
-                    args.flags.insert(k.to_string(), v.to_string());
+                    args.put(k, v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    args.flags.insert(body.to_string(), v);
+                    args.put(body, v);
                 } else {
-                    args.flags.insert(body.to_string(), "true".to_string());
+                    args.put(body, "true".to_string());
                 }
             } else {
                 args.positional.push(a);
             }
         }
         args
+    }
+
+    /// Record `--key value`, tracking repeats (last value wins).
+    fn put(&mut self, key: &str, value: String) {
+        if self.flags.insert(key.to_string(), value).is_some() {
+            self.duplicates.push(key.to_string());
+        }
     }
 
     /// Parse the process arguments (skipping the binary name).
@@ -76,6 +86,48 @@ impl Args {
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.u64_or(key, default as u64) as usize
     }
+
+    /// Flags that were given more than once (one entry per repeat, in
+    /// occurrence order). `get` silently takes the last value; CLI
+    /// front-ends that consider repeats an error use
+    /// [`reject_duplicates`](Self::reject_duplicates).
+    pub fn duplicates(&self) -> &[String] {
+        &self.duplicates
+    }
+
+    /// The flags not present in `known` — typo detection for CLI
+    /// front-ends (a mistyped `--sede 2` silently falls back to the
+    /// default otherwise). Sorted (flag storage is a `BTreeMap`).
+    pub fn unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        self.flags
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+
+    /// Print a stderr warning for every flag not in `known`; returns how
+    /// many there were.
+    pub fn warn_unknown(&self, known: &[&str]) -> usize {
+        let unknown = self.unknown_flags(known);
+        for k in &unknown {
+            eprintln!("warning: unknown flag --{k} is not used by this command");
+        }
+        unknown.len()
+    }
+
+    /// Exit with status 2 when any flag was given more than once — a
+    /// repeated flag is almost always a mistyped command line, and
+    /// silently taking the last value would hide it.
+    pub fn reject_duplicates(&self) {
+        if self.duplicates.is_empty() {
+            return;
+        }
+        for k in &self.duplicates {
+            eprintln!("error: flag --{k} given more than once");
+        }
+        std::process::exit(2);
+    }
 }
 
 #[cfg(test)]
@@ -110,5 +162,43 @@ mod tests {
     fn negative_number_value() {
         let a = parse(&["--x=-2.5"]);
         assert_eq!(a.f64_or("x", 0.0), -2.5);
+    }
+
+    #[test]
+    fn negative_number_as_space_separated_value() {
+        // "-2.5" does not start with "--", so it is consumed as a value.
+        let a = parse(&["--x", "-2.5"]);
+        assert_eq!(a.f64_or("x", 0.0), -2.5);
+        assert!(a.duplicates().is_empty());
+    }
+
+    #[test]
+    fn equals_value_may_start_with_dashes() {
+        let a = parse(&["--key=--weird"]);
+        assert_eq!(a.get("key"), Some("--weird"));
+        assert!(a.unknown_flags(&["key"]).is_empty());
+    }
+
+    #[test]
+    fn duplicate_flags_detected_last_wins() {
+        let a = parse(&["--apps", "10", "--apps", "20"]);
+        assert_eq!(a.get("apps"), Some("20"));
+        assert_eq!(a.duplicates(), &["apps".to_string()]);
+    }
+
+    #[test]
+    fn duplicate_across_mixed_forms_detected() {
+        let a = parse(&["--k=1", "--k", "2", "--k=3"]);
+        assert_eq!(a.get("k"), Some("3"));
+        assert_eq!(a.duplicates().len(), 2);
+    }
+
+    #[test]
+    fn unknown_flags_reported() {
+        let a = parse(&["sim", "--apps", "10", "--sede", "2"]);
+        assert_eq!(a.unknown_flags(&["apps", "seed"]), vec!["sede".to_string()]);
+        assert!(a.unknown_flags(&["apps", "sede"]).is_empty());
+        assert_eq!(a.warn_unknown(&["apps", "seed"]), 1);
+        assert_eq!(a.warn_unknown(&["apps", "sede"]), 0);
     }
 }

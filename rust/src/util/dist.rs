@@ -54,6 +54,18 @@ impl Empirical {
         self.quantile(u)
     }
 
+    /// The `(value, cumulative-probability)` control points defining the
+    /// CDF, sorted by probability (used by the trace calibrator and the
+    /// workload-spec serializer).
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    /// Whether interpolation between control points happens in log space.
+    pub fn log_space(&self) -> bool {
+        self.log_space
+    }
+
     /// Inverse CDF at probability `u` in [0,1].
     pub fn quantile(&self, u: f64) -> f64 {
         let pts = &self.points;

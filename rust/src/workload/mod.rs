@@ -15,6 +15,62 @@ use crate::core::{AppClass, Request, RequestBuilder, Resources};
 use crate::util::dist::{Empirical, Mixture};
 use crate::util::rng::Rng;
 
+/// Schedulability caps shared by the synthetic generator and trace
+/// ingest ([`crate::trace`]): an application whose aggregate *core*
+/// demand cannot fit an empty cluster would deadlock every scheduler,
+/// and one whose *full* demand (cores + elastic) exceeds the cluster
+/// starves the rigid baseline, which admits full demands. Both the
+/// Fig. 2 sampler and ingested real traces are clamped through the same
+/// arithmetic so every request the simulator ever sees is schedulable.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Caps {
+    /// Hard cap on an application's aggregate core CPU demand.
+    pub max_core_cpu: f64,
+    /// RAM counterpart of `max_core_cpu`.
+    pub max_core_ram_mb: f64,
+    /// Hard cap on an application's aggregate full (cores + elastic)
+    /// CPU demand.
+    pub max_full_cpu: f64,
+    /// RAM counterpart of `max_full_cpu`.
+    pub max_full_ram_mb: f64,
+}
+
+impl Caps {
+    /// The paper's caps, sized for the 100×(32 cores, 128 GB) simulated
+    /// cluster: cores ≤ 15 % of the cluster, full demand ≤ 50 %.
+    pub fn paper() -> Self {
+        Caps {
+            max_core_cpu: 0.15 * 3200.0,
+            max_core_ram_mb: 0.15 * 100.0 * 128.0 * 1024.0,
+            max_full_cpu: 0.50 * 3200.0,
+            max_full_ram_mb: 0.50 * 100.0 * 128.0 * 1024.0,
+        }
+    }
+
+    /// Cap a core-component count so the aggregate core demand stays
+    /// schedulable. A request always keeps at least one core component.
+    pub fn cap_cores(&self, n: u32, res: &Resources) -> u32 {
+        let by_cpu = (self.max_core_cpu / res.cpu).floor() as u32;
+        let by_ram = (self.max_core_ram_mb / res.ram_mb).floor() as u32;
+        n.min(by_cpu.max(1)).min(by_ram.max(1)).max(1)
+    }
+
+    /// Cap an elastic-component count so the *full* demand stays within
+    /// the bound. `0` stays `0` (rigid requests have no elastic
+    /// components to cap); anything else keeps at least one elastic
+    /// component, mirroring the synthetic generator.
+    pub fn cap_elastic(&self, n: u32, n_core: u32, core: &Resources, el: &Resources) -> u32 {
+        if n == 0 {
+            return 0;
+        }
+        let cpu_left = (self.max_full_cpu - n_core as f64 * core.cpu).max(0.0);
+        let ram_left = (self.max_full_ram_mb - n_core as f64 * core.ram_mb).max(0.0);
+        let by_cpu = (cpu_left / el.cpu).floor() as u32;
+        let by_ram = (ram_left / el.ram_mb).floor() as u32;
+        n.min(by_cpu).min(by_ram).max(1)
+    }
+}
+
 /// All distributions + mix fractions defining a workload.
 #[derive(Clone, Debug)]
 pub struct WorkloadSpec {
@@ -245,20 +301,25 @@ impl WorkloadSpec {
         }
     }
 
+    /// The spec's schedulability caps as a reusable [`Caps`] value
+    /// (shared with trace ingest, `crate::trace`).
+    pub fn caps(&self) -> Caps {
+        Caps {
+            max_core_cpu: self.max_core_cpu,
+            max_core_ram_mb: self.max_core_ram_mb,
+            max_full_cpu: self.max_full_cpu,
+            max_full_ram_mb: self.max_full_ram_mb,
+        }
+    }
+
     /// Cap core count so aggregate core demand stays schedulable.
     fn cap_cores(&self, n: u32, res: &Resources) -> u32 {
-        let by_cpu = (self.max_core_cpu / res.cpu).floor() as u32;
-        let by_ram = (self.max_core_ram_mb / res.ram_mb).floor() as u32;
-        n.min(by_cpu.max(1)).min(by_ram.max(1)).max(1)
+        self.caps().cap_cores(n, res)
     }
 
     /// Cap elastic count so the *full* demand stays within the bound.
     fn cap_elastic(&self, n: u32, n_core: u32, core: &Resources, el: &Resources) -> u32 {
-        let cpu_left = (self.max_full_cpu - n_core as f64 * core.cpu).max(0.0);
-        let ram_left = (self.max_full_ram_mb - n_core as f64 * core.ram_mb).max(0.0);
-        let by_cpu = (cpu_left / el.cpu).floor() as u32;
-        let by_ram = (ram_left / el.ram_mb).floor() as u32;
-        n.min(by_cpu).min(by_ram).max(1)
+        self.caps().cap_elastic(n, n_core, core, el)
     }
 }
 
@@ -330,6 +391,22 @@ mod tests {
                 r.core_res
             );
         }
+    }
+
+    #[test]
+    fn caps_match_spec_arithmetic() {
+        let spec = WorkloadSpec::paper();
+        let caps = spec.caps();
+        assert_eq!(caps, Caps::paper());
+        let res = Resources::new(1.0, 1024.0);
+        // 0.15 × 3200 cores / 1 cpu each = 480 core components max.
+        assert_eq!(caps.cap_cores(100_000, &res), 480);
+        assert_eq!(caps.cap_cores(3, &res), 3);
+        // Rigid requests stay rigid; elastic requests keep at least one.
+        assert_eq!(caps.cap_elastic(0, 4, &res, &res), 0);
+        assert!(caps.cap_elastic(1_000_000, 4, &res, &res) >= 1);
+        let n_el = caps.cap_elastic(1_000_000, 480, &res, &res);
+        assert!((480.0 + n_el as f64) * res.cpu <= caps.max_full_cpu + 1e-9);
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Integration tests for the trace subsystem (`zoe::trace`):
+//!
+//! * record → ingest → replay reproduces the original `SimResult`
+//!   **bit-identically**, across all four `SchedKind`s (the acceptance
+//!   criterion of the trace pipeline);
+//! * malformed-line / truncated-file parser errors carry line numbers;
+//! * CSV ingestion aggregates jobs and infers rigid/elastic classes;
+//! * ingest enforces the same schedulability caps as `WorkloadSpec`;
+//! * the fitted `WorkloadSpec`'s 10/50/90th quantiles match the source
+//!   trace's empirical quantiles (fit-accuracy property);
+//! * `ExperimentPlan::from_trace` replays a trace across configurations.
+
+use zoe::core::{unit_request, AppClass};
+use zoe::policy::Policy;
+use zoe::pool::Cluster;
+use zoe::sched::SchedKind;
+use zoe::sim::{simulate, ExperimentPlan, SimResult, Simulation};
+use zoe::trace::{fit_workload, IngestOptions, SharedBuf, TraceRecorder, TraceSource, TraceStats};
+use zoe::workload::{Caps, WorkloadSpec};
+
+const ALL_KINDS: [SchedKind; 4] = [
+    SchedKind::Rigid,
+    SchedKind::Malleable,
+    SchedKind::Flexible,
+    SchedKind::FlexiblePreemptive,
+];
+
+/// Bitwise comparison of everything in a `SimResult` that is a function
+/// of the simulation (everything except measured wall time).
+fn assert_bit_identical(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.unfinished, b.unfinished, "{what}: unfinished");
+    assert_eq!(a.heap_compactions, b.heap_compactions, "{what}: compactions");
+    assert_eq!(
+        a.end_time.to_bits(),
+        b.end_time.to_bits(),
+        "{what}: end_time {} vs {}",
+        a.end_time,
+        b.end_time
+    );
+    let sets: [(&str, &zoe::util::stats::Samples, &zoe::util::stats::Samples); 3] = [
+        ("turnaround", &a.turnaround, &b.turnaround),
+        ("queuing", &a.queuing, &b.queuing),
+        ("slowdown", &a.slowdown, &b.slowdown),
+    ];
+    for (name, xa, xb) in sets {
+        assert_eq!(xa.len(), xb.len(), "{what} {name}: sample counts");
+        for (i, (x, y)) in xa.values().iter().zip(xb.values()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} {name}[{i}]: {x} vs {y}");
+        }
+    }
+    for (ca, cb) in a.per_class.iter().zip(&b.per_class) {
+        assert_eq!(ca.class, cb.class, "{what}: class order");
+        assert_eq!(
+            ca.turnaround.len(),
+            cb.turnaround.len(),
+            "{what} {}: per-class counts",
+            ca.class.label()
+        );
+        for (x, y) in ca.turnaround.values().iter().zip(cb.turnaround.values()) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what} {}/turnaround",
+                ca.class.label()
+            );
+        }
+    }
+    for (name, ta, tb) in [
+        ("pending_q", &a.pending_q, &b.pending_q),
+        ("running_q", &a.running_q, &b.running_q),
+        ("cpu_alloc", &a.cpu_alloc, &b.cpu_alloc),
+        ("ram_alloc", &a.ram_alloc, &b.ram_alloc),
+    ] {
+        let (ba, bb) = (ta.boxplot(), tb.boxplot());
+        assert_eq!(ba.n, bb.n, "{what} {name}: n");
+        for (field, x, y) in [
+            ("median", ba.median, bb.median),
+            ("p95", ba.p95, bb.p95),
+            ("mean", ba.mean, bb.mean),
+            ("min", ba.min, bb.min),
+            ("max", ba.max, bb.max),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} {name}.{field}: {x} vs {y}");
+        }
+    }
+}
+
+/// The acceptance criterion: `record` on a synthetic run, then `replay`
+/// of the emitted event log, reproduces the original `SimResult`
+/// bit-identically — for every scheduler family, with the default
+/// ingest options (event-log arrivals are exempt from capping, so the
+/// guarantee is unconditional).
+#[test]
+fn record_then_replay_is_bit_identical_for_every_scheduler() {
+    let spec = WorkloadSpec::paper();
+    let reqs = spec.generate(1000, 7);
+    for kind in ALL_KINDS {
+        let buf = SharedBuf::new();
+        let rec = TraceRecorder::new(Box::new(buf.clone()));
+        let original = Simulation::new(reqs.clone(), Cluster::paper_sim(), Policy::FIFO, kind)
+            .with_recorder(rec)
+            .run();
+        let log = buf.contents();
+        let trace = TraceSource::from_jsonl_str(&log, &IngestOptions::default()).unwrap();
+        assert_eq!(trace.len(), reqs.len(), "{kind:?}: every arrival recorded");
+        let replayed = trace.simulate(Cluster::paper_sim(), Policy::FIFO, kind);
+        assert_bit_identical(&original, &replayed, &format!("{kind:?}"));
+    }
+}
+
+/// Recording is purely observational: a run with a recorder attached
+/// produces the same result as one without.
+#[test]
+fn recording_does_not_perturb_the_simulation() {
+    let spec = WorkloadSpec::paper_batch_only();
+    let reqs = spec.generate(200, 3);
+    let plain = simulate(reqs.clone(), Cluster::paper_sim(), Policy::sjf(), SchedKind::Flexible);
+    let buf = SharedBuf::new();
+    let recorded = Simulation::new(reqs, Cluster::paper_sim(), Policy::sjf(), SchedKind::Flexible)
+        .with_recorder(TraceRecorder::new(Box::new(buf.clone())))
+        .run();
+    assert_bit_identical(&plain, &recorded, "recorder attached");
+}
+
+#[test]
+fn event_log_contains_every_event_kind() {
+    let spec = WorkloadSpec::paper_batch_only();
+    let reqs = spec.generate(60, 3);
+    let buf = SharedBuf::new();
+    let res = Simulation::new(reqs, Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible)
+        .with_recorder(TraceRecorder::new(Box::new(buf.clone())))
+        .run();
+    let log = buf.contents();
+    let first = log.lines().next().unwrap();
+    assert!(first.contains("\"ev\":\"meta\""), "meta line first: {first}");
+    for kind in ["arrival", "alloc", "rebalance", "departure", "end"] {
+        assert!(
+            log.contains(&format!("\"ev\":\"{kind}\"")),
+            "event log is missing '{kind}' records"
+        );
+    }
+    let arrivals = log.lines().filter(|l| l.contains("\"ev\":\"arrival\"")).count() as u64;
+    let departures = log.lines().filter(|l| l.contains("\"ev\":\"departure\"")).count() as u64;
+    assert_eq!(arrivals, res.completed);
+    assert_eq!(departures, res.completed);
+}
+
+#[test]
+fn parser_reports_line_numbers_for_malformed_input() {
+    let opts = IngestOptions::default();
+    let good = "{\"arrival\":0.0,\"runtime\":10.0,\"n_core\":1,\"core_cpu\":1.0,\"core_ram_mb\":64.0}\n";
+
+    // Syntactically bad line, with a valid line before it.
+    let err = TraceSource::from_jsonl_str(&format!("{good}{{not json\n"), &opts).unwrap_err();
+    assert_eq!(err.line, 2, "{err}");
+
+    // Missing required field.
+    let err =
+        TraceSource::from_jsonl_str("{\"arrival\":0.0,\"runtime\":10.0}\n", &opts).unwrap_err();
+    assert_eq!(err.line, 1);
+    assert!(err.msg.contains("n_core"), "{}", err.msg);
+
+    // Truncated file: the last line was cut mid-object.
+    let truncated = format!("{good}{}", &good[..35]);
+    let err = TraceSource::from_jsonl_str(&truncated, &opts).unwrap_err();
+    assert_eq!(err.line, 2, "{err}");
+
+    // Semantically bad values.
+    for bad in [
+        "{\"arrival\":0.0,\"runtime\":-5.0,\"n_core\":1,\"core_cpu\":1.0,\"core_ram_mb\":64.0}",
+        "{\"arrival\":0.0,\"runtime\":10.0,\"n_core\":0,\"core_cpu\":1.0,\"core_ram_mb\":64.0}",
+        "{\"arrival\":0.0,\"runtime\":10.0,\"n_core\":1.5,\"core_cpu\":1.0,\"core_ram_mb\":64.0}",
+        "{\"arrival\":0.0,\"runtime\":10.0,\"n_core\":1,\"core_cpu\":-1.0,\"core_ram_mb\":64.0}",
+        "{\"arrival\":0.0,\"runtime\":10.0,\"n_core\":1,\"core_cpu\":1.0,\"core_ram_mb\":64.0,\"class\":\"X\"}",
+    ] {
+        let err = TraceSource::from_jsonl_str(bad, &opts).unwrap_err();
+        assert_eq!(err.line, 1, "{bad}: {err}");
+    }
+}
+
+#[test]
+fn csv_ingest_aggregates_jobs_and_infers_classes() {
+    // ClusterData2011 task_events shape:
+    // time_us,missing,job,task,machine,event,user,class,prio,cpu,ram,disk,constraint
+    let csv = "\
+# job 100: class 1, 2 tasks -> B-E (1 driver core + 1 elastic executor)
+0,,100,0,,0,u,1,0,0.03125,0.01,,
+0,,100,1,,0,u,1,0,0.03125,0.01,,
+1000000,,100,0,,1,u,1,0,,,,
+1000000,,100,1,,1,u,1,0,,,,
+61000000,,100,0,,4,u,1,0,,,,
+61000000,,100,1,,4,u,1,0,,,,
+# job 200: class 2 -> B-R (all core)
+5000000,,200,0,,0,u,2,0,0.0625,0.02,,
+6000000,,200,0,,1,u,2,0,,,,
+66000000,,200,0,,4,u,2,0,,,,
+# job 300: class 3 -> interactive, priority carried through
+7000000,,300,0,,0,u,3,9,0.03125,0.01,,
+7000000,,300,1,,0,u,3,9,0.03125,0.01,,
+8000000,,300,0,,1,u,3,9,,,,
+99000000,,300,0,,4,u,3,9,,,,
+# job 400: submitted but never finished -> skipped
+9000000,,400,0,,0,u,0,0,0.03125,0.01,,
+";
+    let trace = TraceSource::from_csv_str(csv, &IngestOptions::default()).unwrap();
+    assert_eq!(trace.len(), 3, "job 400 has no end event");
+    assert_eq!(trace.skipped, 1);
+    let reqs = trace.requests();
+    // Arrivals are normalized to the earliest submission.
+    assert_eq!(reqs[0].arrival, 0.0);
+    // Job 100: runtime = first SCHEDULE (1 s) -> last FINISH (61 s).
+    let j100 = &reqs[0];
+    assert_eq!(j100.class, AppClass::BatchElastic);
+    assert_eq!((j100.n_core, j100.n_elastic), (1, 1));
+    assert!((j100.runtime - 60.0).abs() < 1e-9, "runtime {}", j100.runtime);
+    assert!((j100.core_res.cpu - 1.0).abs() < 1e-9, "0.03125 x 32 cores");
+    // Job 200: scheduling class 2 -> rigid.
+    let j200 = &reqs[1];
+    assert_eq!(j200.class, AppClass::BatchRigid);
+    assert_eq!((j200.n_core, j200.n_elastic), (1, 0));
+    assert!((j200.arrival - 5.0).abs() < 1e-9);
+    // Job 300: scheduling class 3 -> interactive with trace priority.
+    let j300 = &reqs[2];
+    assert_eq!(j300.class, AppClass::Interactive);
+    assert_eq!((j300.n_core, j300.n_elastic), (1, 1));
+    assert_eq!(j300.priority, 9.0);
+    // The ingested trace replays cleanly end to end.
+    let res = trace.simulate(Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible);
+    assert_eq!(res.completed, 3);
+    assert_eq!(res.unfinished, 0);
+}
+
+#[test]
+fn ingest_enforces_schedulability_caps() {
+    let line = "{\"arrival\":0.0,\"runtime\":100.0,\"n_core\":100000,\"core_cpu\":1.0,\
+                \"core_ram_mb\":1.0,\"n_elastic\":100000,\"elastic_cpu\":1.0,\"elastic_ram_mb\":1.0}\n";
+    let capped = TraceSource::from_jsonl_str(line, &IngestOptions::default()).unwrap();
+    let caps = Caps::paper();
+    let r = &capped.requests()[0];
+    assert_eq!(r.n_core, caps.cap_cores(100_000, &r.core_res));
+    assert!(r.n_core < 100_000);
+    assert!(r.n_core as f64 * r.core_res.cpu <= caps.max_core_cpu + 1e-9);
+    assert!(
+        (r.n_core + r.n_elastic) as f64 * r.core_res.cpu <= caps.max_full_cpu + 1e-9,
+        "full demand within cap"
+    );
+    // A capped request is schedulable on an empty paper cluster.
+    let mut cluster = Cluster::paper_sim();
+    assert!(cluster.place_all(&r.core_res, r.n_core));
+
+    let mut opts = IngestOptions::default();
+    opts.caps = None;
+    let uncapped = TraceSource::from_jsonl_str(line, &opts).unwrap();
+    assert_eq!(uncapped.requests()[0].n_core, 100_000);
+}
+
+#[test]
+fn trace_source_sorts_by_arrival_and_reassigns_ids() {
+    let reqs = vec![
+        unit_request(5, 30.0, 10.0, 1, 0),
+        unit_request(9, 10.0, 10.0, 1, 0),
+        unit_request(2, 20.0, 10.0, 1, 0),
+    ];
+    let t = TraceSource::new(reqs);
+    let arrivals: Vec<f64> = t.requests().iter().map(|r| r.arrival).collect();
+    assert_eq!(arrivals, vec![10.0, 20.0, 30.0]);
+    let ids: Vec<u32> = t.requests().iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2]);
+    assert_eq!(t.span(), 20.0);
+    let res = t.simulate(Cluster::units(4), Policy::FIFO, SchedKind::Flexible);
+    assert_eq!(res.completed, 3);
+}
+
+#[test]
+fn experiment_plan_replays_traces_across_configs() {
+    let spec = WorkloadSpec::paper_batch_only();
+    let trace = TraceSource::new(spec.generate(80, 5));
+    let result = ExperimentPlan::from_trace(trace.clone())
+        .config(Policy::FIFO, SchedKind::Rigid)
+        .config(Policy::FIFO, SchedKind::Flexible)
+        .run();
+    assert_eq!(result.seeds, vec![0], "trace plans default to pseudo-seed 0");
+    assert_eq!(result.runs.len(), 2);
+    for run in &result.runs {
+        assert_eq!(run.per_seed.len(), 1);
+        assert_eq!(run.merged().completed, 80, "{}", run.config.label());
+    }
+    // Extra "seeds" replay the identical trace: per-seed results are
+    // bit-identical (a trace has no sampling randomness).
+    let multi = ExperimentPlan::from_trace(trace)
+        .seeds([0, 1])
+        .config(Policy::FIFO, SchedKind::Flexible)
+        .threads(2)
+        .run();
+    assert_bit_identical(
+        &multi.runs[0].per_seed[0],
+        &multi.runs[0].per_seed[1],
+        "trace replicate",
+    );
+}
+
+/// Fit-accuracy property: the fitted `WorkloadSpec`'s 10/50/90th
+/// runtime and CPU quantiles match the ingested trace's empirical
+/// quantiles within 5 % (the control points sit at those probabilities,
+/// so in practice the match is near-exact).
+#[test]
+fn fitted_spec_quantiles_match_trace_within_tolerance() {
+    for seed in [11u64, 23, 42] {
+        let spec = WorkloadSpec::paper();
+        let trace = TraceSource::new(spec.generate(2000, seed));
+        let fitted = fit_workload(&trace);
+        let mut st = TraceStats::collect(&trace);
+        let rows: [(&str, &mut zoe::util::stats::Samples, &zoe::util::dist::Empirical); 2] = [
+            ("runtime", &mut st.runtime, &fitted.runtime),
+            ("cpu", &mut st.cpu, &fitted.cpu),
+        ];
+        for (what, samples, dist) in rows {
+            for p in [0.10, 0.50, 0.90] {
+                let want = samples.percentile(p * 100.0);
+                let got = dist.quantile(p);
+                assert!(
+                    (got - want).abs() <= 0.05 * want.abs().max(1e-9),
+                    "seed {seed} {what} p{}: fitted {got} vs trace {want}",
+                    p * 100.0
+                );
+            }
+        }
+        // Class-mix fractions are preserved exactly.
+        let int_frac = st.n_interactive as f64 / trace.len() as f64;
+        assert!((fitted.interactive_frac - int_frac).abs() < 1e-12);
+        // The fitted spec generates valid, schedulable workloads.
+        let generated = fitted.generate(300, 1);
+        assert_eq!(generated.len(), 300);
+        let res = simulate(generated, Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible);
+        assert_eq!(res.unfinished, 0);
+    }
+}
+
+#[test]
+fn bundled_sample_trace_ingests_and_replays() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/sample_trace.jsonl");
+    let trace = TraceSource::from_path(path, &IngestOptions::default()).unwrap();
+    assert!(trace.len() >= 30, "bundled sample has {} apps", trace.len());
+    assert!(trace.requests().iter().any(|r| r.class == AppClass::BatchElastic));
+    assert!(trace.requests().iter().any(|r| r.class == AppClass::BatchRigid));
+    assert!(trace.requests().iter().any(|r| r.class == AppClass::Interactive));
+    for kind in [SchedKind::Rigid, SchedKind::Flexible] {
+        let res = trace.simulate(Cluster::paper_sim(), Policy::FIFO, kind);
+        assert_eq!(res.completed as usize, trace.len(), "{kind:?}");
+        assert_eq!(res.unfinished, 0, "{kind:?}");
+    }
+}
+
+#[test]
+fn bundled_google_csv_ingests() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/sample_google.csv");
+    let trace = TraceSource::from_path(path, &IngestOptions::default()).unwrap();
+    assert!(trace.len() >= 4, "bundled csv has {} jobs", trace.len());
+    assert!(trace.requests().iter().any(|r| r.class == AppClass::BatchElastic));
+    assert!(trace.requests().iter().any(|r| r.class == AppClass::BatchRigid));
+    let res = trace.simulate(Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible);
+    assert_eq!(res.completed as usize, trace.len());
+}

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Promote a freshly measured perf_microbench output to the committed baseline.
+
+Usage: promote_bench_baseline.py [NEW] [--baseline PATH] [--force]
+
+NEW defaults to bench_fresh.json (what CI writes via ZOE_BENCH_OUT);
+--baseline defaults to BENCH_sim_throughput.json. The committed baseline
+has been `"provisional": true` since PR 1 (no Rust toolchain existed in
+the authoring environments), so the regression gate in
+check_bench_regression.py runs record-only. This script closes that
+loop: run `cargo bench --bench perf_microbench` once on real hardware,
+then promote its output in one command —
+
+    ZOE_BENCH_OUT=bench_fresh.json cargo bench --bench perf_microbench
+    python3 scripts/promote_bench_baseline.py bench_fresh.json
+
+The script validates the fresh file (non-empty results, positive
+throughputs, a parallel_scaling table), clears the provisional flag,
+and writes it over the baseline. A baseline that is already measured
+(provisional absent/false) is protected: pass --force to replace it.
+Commit the updated baseline to arm the CI gate.
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"ERROR: {msg}")
+    return 1
+
+
+def main():
+    argv = sys.argv[1:]
+    new_path, baseline_path, force = "bench_fresh.json", "BENCH_sim_throughput.json", False
+    i = 0
+    positional = []
+    while i < len(argv):
+        a = argv[i]
+        if a == "--baseline":
+            i += 1
+            baseline_path = argv[i]
+        elif a.startswith("--baseline="):
+            baseline_path = a.split("=", 1)[1]
+        elif a == "--force":
+            force = True
+        elif a in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        else:
+            positional.append(a)
+        i += 1
+    if len(positional) > 1:
+        print(__doc__)
+        return 2
+    if positional:
+        new_path = positional[0]
+
+    try:
+        with open(new_path) as f:
+            new = json.load(f)
+    except (OSError, ValueError) as e:
+        return fail(f"cannot read fresh bench file {new_path}: {e}")
+
+    # --- validate the fresh run looks like a real measurement ------------
+    results = new.get("results", [])
+    if not results:
+        return fail(f"{new_path} has no measured results[] — was the bench interrupted?")
+    for p in results:
+        for key in ("sched", "apps", "events_per_s"):
+            if key not in p:
+                return fail(f"{new_path}: result point missing '{key}': {p}")
+        if float(p["events_per_s"]) <= 0:
+            return fail(f"{new_path}: non-positive throughput in {p}")
+    ps = new.get("parallel_scaling") or {}
+    if not ps.get("points"):
+        return fail(f"{new_path} has no parallel_scaling points — rerun the full bench")
+
+    if new_path != baseline_path:
+        try:
+            with open(baseline_path) as f:
+                baseline = json.load(f)
+        except OSError:
+            baseline = None
+        if baseline is not None and not baseline.get("provisional") and not force:
+            return fail(
+                f"{baseline_path} is already a measured baseline; "
+                "pass --force to replace it"
+            )
+
+    new["provisional"] = False
+    new.pop("note", None)
+    with open(baseline_path, "w") as f:
+        json.dump(new, f, indent=2, sort_keys=False)
+        f.write("\n")
+
+    n_speedups = len(new.get("speedups", []))
+    print(f"promoted {new_path} -> {baseline_path}:")
+    print(f"  {len(results)} throughput points, {n_speedups} optimized-vs-naive speedups, "
+          f"{len(ps.get('points', []))} parallel-scaling points "
+          f"({int(ps.get('hw_threads', 0))} hw threads)")
+    print("commit the updated baseline to arm the CI regression gate "
+          "(check_bench_regression.py now enforces thresholds).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
