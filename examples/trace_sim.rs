@@ -9,7 +9,7 @@
 
 use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
-use zoe::sched::SchedKind;
+use zoe::sched::SchedSpec;
 use zoe::sim::simulate;
 use zoe::util::bench::print_boxplot_row;
 use zoe::util::cli::Args;
@@ -27,21 +27,17 @@ fn parse_policy(s: &str) -> Policy {
     }
 }
 
-fn parse_sched(s: &str) -> SchedKind {
-    match s {
-        "rigid" => SchedKind::Rigid,
-        "malleable" => SchedKind::Malleable,
-        "flexible" => SchedKind::Flexible,
-        "preemptive" => SchedKind::FlexiblePreemptive,
-        other => panic!("unknown scheduler '{other}' (rigid|malleable|flexible|preemptive)"),
-    }
+fn parse_sched(s: &str) -> SchedSpec {
+    // The shared registry parser: built-in generations plus any
+    // registered external core; its error lists the valid names.
+    s.parse().unwrap_or_else(|e| panic!("{e}"))
 }
 
 fn main() {
     let args = Args::from_env();
     let apps = args.u64_or("apps", 8000) as u32;
     let seed = args.u64_or("seed", 1);
-    let kind = parse_sched(&args.get_or("sched", "flexible"));
+    let sched = parse_sched(&args.get_or("sched", "flexible"));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
     let interactive = args.has("interactive");
 
@@ -57,10 +53,10 @@ fn main() {
         requests.len(),
         requests.last().unwrap().arrival / 86400.0
     );
-    println!("scheduler: {} | policy: {}", kind.label(), policy.label());
+    println!("scheduler: {} | policy: {}", sched.label(), policy.label());
 
     let t0 = std::time::Instant::now();
-    let mut res = simulate(requests, Cluster::paper_sim(), policy, kind);
+    let mut res = simulate(requests, Cluster::paper_sim(), policy, sched);
     println!(
         "simulated {:.1} days in {:.2}s wall ({:.0} events/s)",
         res.end_time / 86400.0,

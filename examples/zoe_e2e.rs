@@ -17,8 +17,9 @@
 use std::sync::Arc;
 
 use zoe::runtime::PjrtRuntime;
+use zoe::sched::SchedSpec;
 use zoe::util::cli::Args;
-use zoe::zoe::{replay, section6_workload, ZoeGeneration};
+use zoe::zoe::{replay, section6_workload};
 
 fn main() {
     zoe::util::logging::init();
@@ -48,10 +49,16 @@ fn main() {
         arrivals.last().unwrap().at
     );
 
+    // The Fig-33 pair: gen-1 (rigid) vs gen-2 (flexible). `replay` takes
+    // any SchedSpec, so other generations / registered cores drop in.
+    let mut specs: Vec<SchedSpec> = Vec::new();
+    for name in ["rigid", "flexible"] {
+        specs.push(name.parse().expect("built-in spec"));
+    }
     let mut results = Vec::new();
-    for generation in [ZoeGeneration::Rigid, ZoeGeneration::Flexible] {
-        println!("\n=== running {generation:?} generation ===");
-        let r = replay(generation, &arrivals, Arc::clone(&rt), quanta, rate);
+    for spec in &specs {
+        println!("\n=== running {} ===", spec.label());
+        let r = replay(spec, &arrivals, Arc::clone(&rt), quanta, rate);
         println!(
             "  {} PJRT steps in {:.1}s wall → makespan {:.1} virtual s",
             r.steps, r.wall, r.vtime

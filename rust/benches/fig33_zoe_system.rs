@@ -8,8 +8,9 @@
 use std::sync::Arc;
 
 use zoe::runtime::PjrtRuntime;
+use zoe::sched::{SchedKind, SchedSpec};
 use zoe::util::bench::{bench_apps, section};
-use zoe::zoe::{replay, section6_workload, ZoeGeneration};
+use zoe::zoe::{replay, section6_workload};
 
 fn main() {
     section("Figure 33 — Zoe gen-1 (rigid) vs gen-2 (flexible), real PJRT compute");
@@ -22,8 +23,11 @@ fn main() {
     let arrivals = section6_workload(apps, 7, 12.0);
 
     let mut results = Vec::new();
-    for generation in [ZoeGeneration::Rigid, ZoeGeneration::Flexible] {
-        let r = replay(generation, &arrivals, Arc::clone(&rt), 64, 1.0);
+    for spec in [
+        SchedSpec::from(SchedKind::Rigid),
+        SchedSpec::from(SchedKind::Flexible),
+    ] {
+        let r = replay(&spec, &arrivals, Arc::clone(&rt), 64, 1.0);
         println!(
             "\n  {} ({} steps, wall {:.1}s, makespan {:.1} virtual s):",
             r.label, r.steps, r.wall, r.vtime

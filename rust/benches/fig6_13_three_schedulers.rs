@@ -45,7 +45,7 @@ fn main() {
         let mut med = Vec::new();
         for (ki, &kind) in kinds.iter().enumerate() {
             let run = &result.runs[pi * kinds.len() + ki];
-            assert_eq!(run.config.kind, kind);
+            assert_eq!(run.config.sched.kind(), Some(kind));
             let mut res = run.merged();
             res.print_report(&format!("{pname} / {}", kind.label()));
             med.push((kind, res.turnaround.median(), res.turnaround.mean()));

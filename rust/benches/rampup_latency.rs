@@ -4,9 +4,10 @@
 //! the number bounds the *scheduler's* share of ramp-up.
 
 use zoe::backend::SwarmBackend;
+use zoe::sched::SchedKind;
 use zoe::util::bench::{measure, section};
 use zoe::util::stats::Samples;
-use zoe::zoe::{templates, ZoeGeneration, ZoeMaster};
+use zoe::zoe::{templates, ZoeMaster};
 
 fn main() {
     section("§6 ramp-up — container placement latency");
@@ -15,7 +16,7 @@ fn main() {
     // per-container placement latency.
     let mut master = ZoeMaster::new(
         SwarmBackend::new(100, zoe::core::Resources::new(32.0, 128.0 * 1024.0)),
-        ZoeGeneration::Flexible,
+        SchedKind::Flexible,
     );
     let mut n = 0;
     for i in 0..40 {

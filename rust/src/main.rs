@@ -9,7 +9,8 @@
 //! zoe trace   replay --trace FILE [--sched flexible] [--policy fifo]
 //! zoe trace   record --out FILE [--apps 1000] [--seed 1]
 //! zoe trace   fit    --trace FILE [--out spec.json]
-//! zoe master  --listen 127.0.0.1:4455 [--generation flexible] [--nodes 10]
+//! zoe master  --listen 127.0.0.1:4455 [--generation flexible] [--policy fifo]
+//!             [--nodes 10]   # any scheduler generation × waiting-line policy
 //! zoe submit  --to 127.0.0.1:4455 --template spark-als-16
 //! zoe status  --to 127.0.0.1:4455 --id 3
 //! zoe stats   --to 127.0.0.1:4455
@@ -23,7 +24,7 @@ use zoe::core::Resources;
 use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
 use zoe::runtime::PjrtRuntime;
-use zoe::sched::SchedKind;
+use zoe::sched::SchedSpec;
 use zoe::sim::{simulate, ExperimentPlan, Simulation};
 use zoe::trace::{
     fit_workload_from_stats, spec_to_json, IngestOptions, TraceRecorder, TraceSource, TraceStats,
@@ -32,7 +33,7 @@ use zoe::util::cli::Args;
 use zoe::util::json::Json;
 use zoe::util::stats::Samples;
 use zoe::workload::WorkloadSpec;
-use zoe::zoe::{templates, ApiClient, ApiServer, AppDescription, ZoeGeneration, ZoeMaster};
+use zoe::zoe::{templates, ApiClient, ApiServer, AppDescription, ZoeMaster};
 
 fn main() {
     zoe::util::logging::init();
@@ -69,17 +70,16 @@ fn parse_policy(s: &str) -> Policy {
     }
 }
 
-fn parse_sched(s: &str) -> SchedKind {
-    match s {
-        "rigid" => SchedKind::Rigid,
-        "malleable" => SchedKind::Malleable,
-        "flexible" => SchedKind::Flexible,
-        "preemptive" => SchedKind::FlexiblePreemptive,
-        other => {
-            eprintln!("unknown scheduler '{other}' (rigid|malleable|flexible|preemptive)");
-            std::process::exit(2);
-        }
-    }
+/// The one scheduler-name parser (shared by `zoe sim --sched`,
+/// `zoe master --generation` and `zoe trace replay --sched`):
+/// [`SchedSpec::from_str`], whose error message lists every valid name
+/// — built-in generations, the `preemptive` alias, and registered
+/// external cores. Exit 2 on an unknown name.
+fn parse_sched(s: &str) -> SchedSpec {
+    s.parse::<SchedSpec>().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
 }
 
 /// Flags consumed by [`parse_sim_workload`] plus the `--apps/--seed`
@@ -90,7 +90,7 @@ const SIM_WORKLOAD_FLAGS: &[&str] = &[
 
 /// Shared `--sched/--policy/--interactive/--arrival-scale` handling for
 /// the commands that run a synthetic workload.
-fn parse_sim_workload(args: &Args) -> (WorkloadSpec, Policy, SchedKind) {
+fn parse_sim_workload(args: &Args) -> (WorkloadSpec, Policy, SchedSpec) {
     let kind = parse_sched(&args.get_or("sched", "flexible"));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
     let mut spec = if args.has("interactive") {
@@ -356,29 +356,26 @@ fn trace_fit(args: &Args) {
 // ---------------------------------------------------------------------------
 
 fn cmd_master(args: &Args) {
-    args.warn_unknown(&["listen", "generation", "nodes"]);
+    args.warn_unknown(&["listen", "generation", "nodes", "policy"]);
     let listen = args.get_or("listen", "127.0.0.1:4455");
     let nodes = args.u64_or("nodes", 10) as u32;
-    let generation = match args.get_or("generation", "flexible").as_str() {
-        "rigid" => ZoeGeneration::Rigid,
-        "flexible" => ZoeGeneration::Flexible,
-        other => {
-            eprintln!("unknown generation '{other}' (rigid|flexible)");
-            std::process::exit(2);
-        }
-    };
+    // Same parser as `zoe sim --sched`: all four generations (plus any
+    // registered core) run on the live master.
+    let spec = parse_sched(&args.get_or("generation", "flexible"));
+    let policy = parse_policy(&args.get_or("policy", "fifo"));
     let rt = Arc::new(PjrtRuntime::load_default().unwrap_or_else(|e| {
         eprintln!("cannot load PJRT artifacts: {e}");
         std::process::exit(1);
     }));
     log::info!("PJRT platform: {}", rt.platform());
     let backend = SwarmBackend::new(nodes, zoe::core::Resources::new(32.0, 128.0 * 1024.0));
-    let master = Arc::new(Mutex::new(ZoeMaster::new(backend, generation)));
+    let label = format!("{}/{}", spec.label(), policy.label());
+    let master = Arc::new(Mutex::new(ZoeMaster::new(backend, spec).with_policy(policy)));
     let server = ApiServer::spawn(Arc::clone(&master), &listen).unwrap_or_else(|e| {
         eprintln!("cannot bind {listen}: {e}");
         std::process::exit(1);
     });
-    log::info!("zoe master ({generation:?}) listening on {}", server.addr);
+    log::info!("zoe master ({label}) listening on {}", server.addr);
 
     // Drive loop: execute container work + poll events.
     let mut pool = WorkPool::new(rt);

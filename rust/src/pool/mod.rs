@@ -73,7 +73,9 @@ pub struct Snapshot {
 /// releasable via [`Cluster::release`]. An empty `by_machine` means
 /// "nothing placed" — the dense per-request stores in the schedulers use
 /// that as the absent state and reuse the buffer across admissions.
-#[derive(Clone, Debug, Default)]
+/// (`PartialEq` because placements travel inside
+/// [`crate::sched::Decision`]s, which tests compare wholesale.)
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Placement {
     /// Per-component resource demand of this placement.
     pub res: Resources,

@@ -20,7 +20,7 @@
 //! answered in O(1) from an incrementally maintained serving-set
 //! aggregate (`full_demand`) instead of re-summing S on every rebalance
 //! entry; the aggregate resets to exact zero whenever S drains.
-//! `World::naive` disables all of this for differential testing.
+//! `ClusterView::naive` disables all of this for differential testing.
 //!
 //! Invariants:
 //! * every member of the serving set S always has all cores placed;
@@ -32,7 +32,8 @@
 use std::collections::VecDeque;
 
 use super::{
-    has_spare_after_full_grants, insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World,
+    has_spare_after_full_grants, insert_keyed, keyed_head, resort_keyed, ClusterView, Phase,
+    SchedEvent, SchedulerCore,
 };
 use crate::core::{ReqId, Resources};
 use crate::pool::Placement;
@@ -91,7 +92,7 @@ impl FlexibleScheduler {
     /// Algorithm 1 line 17: would S, fully granted, still leave spare
     /// capacity? O(1) from the incrementally maintained aggregate; the
     /// naive reference re-sums the serving set instead.
-    fn has_spare(&self, w: &World) -> bool {
+    fn has_spare(&self, w: &ClusterView) -> bool {
         if w.naive {
             return has_spare_after_full_grants(w, &self.s);
         }
@@ -100,7 +101,7 @@ impl FlexibleScheduler {
     }
 
     /// Grow the dense placement stores to cover every request id.
-    fn ensure_capacity(&mut self, w: &World) {
+    fn ensure_capacity(&mut self, w: &ClusterView) {
         let n = w.states.len();
         if self.cores.len() < n {
             self.cores.resize_with(n, Placement::default);
@@ -109,7 +110,7 @@ impl FlexibleScheduler {
     }
 
     /// Release every elastic placement (start of a full rebalance pass).
-    fn release_all_elastic(&mut self, w: &mut World) {
+    fn release_all_elastic(&mut self, w: &mut ClusterView) {
         for &id in &self.s {
             w.cluster.release_and_clear(&mut self.elastic[id as usize]);
         }
@@ -118,7 +119,7 @@ impl FlexibleScheduler {
 
     /// Try to place `id`'s cores in the current free capacity (elastic
     /// must have been released first). Records the placement on success.
-    fn try_place_cores(&mut self, id: ReqId, w: &mut World) -> bool {
+    fn try_place_cores(&mut self, id: ReqId, w: &mut ClusterView) -> bool {
         let (res, n) = {
             let r = &w.states[id as usize].req;
             (r.core_res, r.n_core)
@@ -131,7 +132,7 @@ impl FlexibleScheduler {
         }
     }
 
-    fn admit(&mut self, id: ReqId, w: &mut World) {
+    fn admit(&mut self, id: ReqId, w: &mut ClusterView) {
         let key = w.pending_key(id);
         let now = w.now;
         let prio = w.state(id).req.priority;
@@ -142,7 +143,8 @@ impl FlexibleScheduler {
             st.admit_time = now;
             st.frozen_key = key;
         }
-        w.note_admitted(id);
+        let placement = self.cores[id as usize].clone();
+        w.note_admitted(id, placement);
         // Serving order: explicit priority first (descending), then key.
         let states = &w.states;
         let pos = self.s.partition_point(|&x| {
@@ -158,7 +160,7 @@ impl FlexibleScheduler {
     /// cascade elastic grants in serving order. The elastic release is
     /// skipped entirely when no admission is possible — the cascade is
     /// then a clean no-op unless something else invalidated it.
-    fn rebalance(&mut self, w: &mut World) {
+    fn rebalance(&mut self, w: &mut ClusterView) {
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let may_admit = !self.l.is_empty() && self.has_spare(w);
         if may_admit || w.naive {
@@ -187,7 +189,7 @@ impl FlexibleScheduler {
     /// neither the core placements nor the serving order changed since
     /// the last cascade, a recompute would re-place bit-identically
     /// (same cores, same order, same greedy), so it is skipped entirely.
-    fn cascade(&mut self, w: &mut World) {
+    fn cascade(&mut self, w: &mut ClusterView) {
         if self.cascade_clean && !w.naive {
             return;
         }
@@ -215,7 +217,7 @@ impl FlexibleScheduler {
 
     /// Non-preemptive arrival guard (Algorithm 1 line 10): the new head of
     /// L can start using currently *unused* resources. Mutation-free.
-    fn head_fits_in_unused(&self, w: &World) -> bool {
+    fn head_fits_in_unused(&self, w: &ClusterView) -> bool {
         let Some(head) = keyed_head(&self.l) else {
             return false;
         };
@@ -223,7 +225,7 @@ impl FlexibleScheduler {
         w.cluster.can_place_all(&r.core_res, r.n_core)
     }
 
-    fn insert_w_line(&mut self, id: ReqId, w: &World) {
+    fn insert_w_line(&mut self, id: ReqId, w: &ClusterView) {
         use std::cmp::Ordering;
         let key = w.pending_key(id);
         let prio = w.states[id as usize].req.priority;
@@ -242,8 +244,8 @@ impl FlexibleScheduler {
     }
 }
 
-impl Scheduler for FlexibleScheduler {
-    fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+impl FlexibleScheduler {
+    fn on_arrival(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
         // §3.3, lines 2–7: preemptive path.
         if self.preemptive {
@@ -274,7 +276,7 @@ impl Scheduler for FlexibleScheduler {
         }
     }
 
-    fn on_departure(&mut self, id: ReqId, w: &mut World) {
+    fn on_departure(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
         if let Some(pos) = self.s.iter().position(|&x| x == id) {
             self.s.remove(pos);
@@ -284,6 +286,14 @@ impl Scheduler for FlexibleScheduler {
                 // rounding; an empty serving set demands exactly nothing.
                 self.full_demand = Resources::ZERO;
             }
+        } else {
+            // Cancellation of a request still waiting (the Zoe master's
+            // kill-while-queued path; the simulator never departs a
+            // pending request): drop it from the lines. The rebalance
+            // below still runs — removing a blocking head can unblock
+            // later admissions.
+            self.l.retain(|&(_, x)| x != id);
+            self.w_line.retain(|&(_, _, x)| x != id);
         }
         // Core + elastic state changed: any future cascade starts fresh.
         self.cascade_clean = false;
@@ -315,6 +325,21 @@ impl Scheduler for FlexibleScheduler {
             }
         }
         self.rebalance(w);
+    }
+}
+
+impl SchedulerCore for FlexibleScheduler {
+    fn on_event(&mut self, ev: SchedEvent, view: &mut ClusterView) {
+        match ev {
+            SchedEvent::Arrival(id) => self.on_arrival(id, view),
+            SchedEvent::Departure(id) => self.on_departure(id, view),
+            SchedEvent::Tick => {
+                // Periodic re-evaluation (master polling): resort dynamic
+                // lines and retry admissions; a clean cascade is a no-op.
+                self.ensure_capacity(view);
+                self.rebalance(view);
+            }
+        }
     }
 
     fn pending(&self) -> usize {

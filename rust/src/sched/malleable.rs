@@ -15,13 +15,13 @@
 //! stays fully granted for its whole remaining service; the scheduler
 //! tracks the first index of the serving order whose request is *not*
 //! fully granted (`topup_from`) and starts every top-up round there,
-//! making a round O(non-full members) instead of O(|S|). `World::naive`
-//! disables the cursor (full scan from 0, the seed behavior) for the
-//! differential tests.
+//! making a round O(non-full members) instead of O(|S|).
+//! `ClusterView::naive` disables the cursor (full scan from 0, the seed
+//! behavior) for the differential tests.
 
 use std::collections::VecDeque;
 
-use super::{insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World};
+use super::{insert_keyed, keyed_head, resort_keyed, ClusterView, Phase, SchedEvent, SchedulerCore};
 use crate::core::ReqId;
 use crate::pool::Placement;
 
@@ -57,7 +57,7 @@ impl MalleableScheduler {
         }
     }
 
-    fn ensure_capacity(&mut self, w: &World) {
+    fn ensure_capacity(&mut self, w: &ClusterView) {
         let n = w.states.len();
         if self.cores.len() < n {
             self.cores.resize_with(n, Placement::default);
@@ -65,7 +65,7 @@ impl MalleableScheduler {
         }
     }
 
-    fn admit(&mut self, id: ReqId, w: &mut World) {
+    fn admit(&mut self, id: ReqId, w: &mut ClusterView) {
         let key = w.pending_key(id);
         let now = w.now;
         {
@@ -74,7 +74,8 @@ impl MalleableScheduler {
             st.admit_time = now;
             st.frozen_key = key;
         }
-        w.note_admitted(id);
+        let placement = self.cores[id as usize].clone();
+        w.note_admitted(id, placement);
         self.s.push(id); // cascade order = admission order
     }
 
@@ -82,7 +83,7 @@ impl MalleableScheduler {
     /// the first request, then the remaining to the next"), then admit
     /// from L while the head's cores fit in the leftover. Loop until
     /// neither applies.
-    fn rebalance(&mut self, w: &mut World) {
+    fn rebalance(&mut self, w: &mut ClusterView) {
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         loop {
             // Top-ups, serving order, starting at the first non-full
@@ -134,7 +135,7 @@ impl MalleableScheduler {
 
     /// Arrival guard: only rebalance when the new head could start now.
     /// Mutation-free feasibility check.
-    fn head_fits_in_unused(&self, w: &World) -> bool {
+    fn head_fits_in_unused(&self, w: &ClusterView) -> bool {
         let Some(head) = keyed_head(&self.l) else {
             return false;
         };
@@ -149,8 +150,8 @@ impl Default for MalleableScheduler {
     }
 }
 
-impl Scheduler for MalleableScheduler {
-    fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+impl MalleableScheduler {
+    fn on_arrival(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let key = w.pending_key(id);
@@ -160,7 +161,7 @@ impl Scheduler for MalleableScheduler {
         }
     }
 
-    fn on_departure(&mut self, id: ReqId, w: &mut World) {
+    fn on_departure(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
         if let Some(pos) = self.s.iter().position(|&x| x == id) {
             self.s.remove(pos);
@@ -170,10 +171,27 @@ impl Scheduler for MalleableScheduler {
             if pos < self.topup_from {
                 self.topup_from -= 1;
             }
+        } else {
+            // Cancellation of a still-waiting request (master kill path;
+            // never reached by the simulator).
+            self.l.retain(|&(_, x)| x != id);
         }
         w.cluster.release_and_clear(&mut self.cores[id as usize]);
         w.cluster.release_and_clear(&mut self.elastic[id as usize]);
         self.rebalance(w);
+    }
+}
+
+impl SchedulerCore for MalleableScheduler {
+    fn on_event(&mut self, ev: SchedEvent, view: &mut ClusterView) {
+        match ev {
+            SchedEvent::Arrival(id) => self.on_arrival(id, view),
+            SchedEvent::Departure(id) => self.on_departure(id, view),
+            SchedEvent::Tick => {
+                self.ensure_capacity(view);
+                self.rebalance(view);
+            }
+        }
     }
 
     fn pending(&self) -> usize {

@@ -1,17 +1,37 @@
 //! The scheduling algorithms: the paper's **flexible** heuristic
 //! (Algorithm 1), the **rigid** baseline, and the **malleable**
-//! comparator (§2.2, §3, §4).
+//! comparator (§2.2, §3, §4) — behind a single decision-oriented
+//! [`SchedulerCore`] API shared by both executors (the trace-driven
+//! simulator and the Zoe master).
 //!
-//! All three compute *virtual assignments* (§3.2): on every request
-//! arrival/departure the assignment of components to machines is
-//! recomputed against the [`crate::pool::Cluster`]; the physical
-//! fulfilment (containers, in Zoe's case) is a separate concern.
+//! # One core, two executors
+//!
+//! All three algorithms compute *virtual assignments* (§3.2): on every
+//! request arrival/departure the assignment of components to machines is
+//! recomputed against a [`ClusterView`] (request table + virtual
+//! [`crate::pool::Cluster`]). The physical fulfilment is a separate
+//! concern, handled by an **executor** that applies the core's emitted
+//! [`Decision`] stream:
+//!
+//! * the simulator (`sim::engine`) owns a `ClusterView` as its world
+//!   state and applies decisions to its bookkeeping — departure
+//!   predictions, metrics, and the trace recorder's `alloc` lines;
+//! * the Zoe master (`zoe::master`) owns a `ClusterView` mirroring the
+//!   Swarm nodes and applies decisions to *physical containers*
+//!   (starting cores per the admission placement, starting/killing
+//!   elastic containers to follow the grants).
+//!
+//! Cores are constructed through the [`SchedSpec`] registry — the four
+//! built-in [`SchedKind`] generations plus externally
+//! [registered](register_core) cores — with a string round-trip
+//! (`"flexible".parse::<SchedSpec>()`) shared by every CLI entry point.
 //!
 //! Work accrual is **lazy** (see `sim::engine`): a request's `done_work`
 //! is only folded forward when its progress rate changes (via
-//! [`World::set_grant`]) or when it departs. Schedulers report which
-//! requests' rates changed through [`World::changed`], so the engine
-//! refreshes departure predictions in O(|changed|), not O(|serving set|).
+//! [`ClusterView::set_grant`]) or when it departs. The decision stream
+//! doubles as the changed-set: every decision names a request whose rate
+//! may have changed, so the engine refreshes departure predictions in
+//! O(|decisions|), not O(|serving set|).
 
 mod flexible;
 mod malleable;
@@ -22,11 +42,12 @@ pub use malleable::MalleableScheduler;
 pub use rigid::RigidScheduler;
 
 use std::cmp::Ordering;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::core::{ReqId, Request};
 use crate::policy::Policy;
-use crate::pool::Cluster;
+use crate::pool::{Cluster, Placement};
 
 /// Life-cycle phase of a request in the system.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,7 +80,7 @@ pub struct ReqState {
     pub last_accrual: f64,
     /// Progress rate (component-seconds per second) in effect since
     /// `last_accrual`; 0 unless Running. Kept in sync with `grant` by
-    /// [`World::set_grant`] / [`World::note_admitted`].
+    /// [`ClusterView::set_grant`] / [`ClusterView::note_admitted`].
     pub cur_rate: f64,
     /// Policy key frozen at admission (orders the serving set S).
     pub frozen_key: f64,
@@ -124,39 +145,148 @@ impl ReqState {
     }
 }
 
-/// Everything the schedulers operate on: the request table, the cluster,
-/// the sorting policy and the current simulation time.
-pub struct World {
+// ---------------------------------------------------------------------------
+// Decisions — the executor-facing output vocabulary
+// ---------------------------------------------------------------------------
+
+/// One externally observable scheduling decision, emitted by a
+/// [`SchedulerCore`] while it updates its virtual assignment and applied
+/// by an executor (control-plane decisions as data).
+///
+/// Decisions appear in **algorithm order** — the order the core changed
+/// its virtual assignment in. Container-level executors must therefore
+/// apply capacity-*freeing* decisions ([`Decision::Reclaim`],
+/// [`Decision::Preempt`]) before capacity-*consuming* ones
+/// ([`Decision::Admit`], [`Decision::SetGrant`]): the flexible cascade,
+/// for example, legitimately emits an admission before the reclaim that
+/// physically funds it (virtually, all elastic was released up front).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// `id` entered the serving set; `placement` is the virtual
+    /// machine-level placement of its **core** components (the per-node
+    /// hint a container executor starts cores on). Elastic components are
+    /// granted separately through [`Decision::SetGrant`].
+    Admit {
+        /// The admitted request.
+        id: ReqId,
+        /// Virtual placement of the core components.
+        placement: Placement,
+    },
+    /// `id`'s elastic grant **rose** to `g` (admissions emit the initial
+    /// grant this way too). A container executor starts elastic
+    /// components until `g` are running.
+    SetGrant {
+        /// The re-granted request.
+        id: ReqId,
+        /// The new (absolute) elastic grant.
+        g: u32,
+    },
+    /// `n` elastic components were **reclaimed** from `id` (its grant
+    /// shrank by `n`). A container executor kills its `n` newest elastic
+    /// containers; cores are never reclaimed this way.
+    Reclaim {
+        /// The shrunk request.
+        id: ReqId,
+        /// How many elastic components were taken.
+        n: u32,
+    },
+    /// `id` was preempted wholesale: it left the serving set and is
+    /// pending again (phase [`Phase::Pending`], grant 0, accrued work
+    /// preserved). None of the built-in cores emit this — elastic-only
+    /// reclaim is the paper's preemption model — but externally
+    /// registered cores may; both executors honor it (the engine retires
+    /// the stale departure prediction, the master kills all containers
+    /// and re-queues the application).
+    Preempt {
+        /// The preempted request.
+        id: ReqId,
+    },
+}
+
+impl Decision {
+    /// The request this decision is about.
+    pub fn id(&self) -> ReqId {
+        match *self {
+            Decision::Admit { id, .. }
+            | Decision::SetGrant { id, .. }
+            | Decision::Reclaim { id, .. }
+            | Decision::Preempt { id } => id,
+        }
+    }
+}
+
+/// The events a [`SchedulerCore`] reacts to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// Request `id` arrived (already in [`Phase::Pending`]).
+    Arrival(ReqId),
+    /// Request `id` left the system: completed, killed, or — for an id
+    /// still waiting — cancelled. The executor marks it [`Phase::Done`]
+    /// first; cores drop it from their serving set *and* waiting lines.
+    Departure(ReqId),
+    /// Periodic re-evaluation with no request event: dynamic policies
+    /// resort their lines and admission is retried. The simulator never
+    /// emits ticks (its event loop is exact); the Zoe master does.
+    Tick,
+}
+
+// ---------------------------------------------------------------------------
+// ClusterView — the state a core operates on
+// ---------------------------------------------------------------------------
+
+/// Everything a [`SchedulerCore`] operates on: the request table, the
+/// virtual cluster, the sorting policy, the current time, and the
+/// decision buffer the core appends to.
+///
+/// Each executor owns one view: the simulator's is its world state (the
+/// simulated cluster *is* the virtual cluster), the Zoe master's mirrors
+/// the Swarm nodes one-to-one. The core mutates the view (that is the
+/// virtual assignment, §3.2); the executor reads the appended
+/// [`Decision`]s — and, for self-healing, the authoritative per-request
+/// grants in [`ClusterView::states`] — to fulfil them.
+pub struct ClusterView {
     /// Per-request execution state, dense by request id.
     pub states: Vec<ReqState>,
-    /// The machines components are placed on.
+    /// The (virtual) machines components are placed on.
     pub cluster: Cluster,
     /// The waiting-line sorting policy.
     pub policy: Policy,
-    /// Current simulated time, seconds.
+    /// Current time, seconds.
     pub now: f64,
-    /// Requests whose progress rate changed since the engine last
-    /// refreshed departure predictions (newly admitted or re-granted).
-    /// May contain duplicates; the engine's refresh is idempotent.
-    pub changed: Vec<ReqId>,
-    /// Reference mode: disable the schedulers' incremental shortcuts so
-    /// every rebalance releases and re-places everything (the seed
-    /// algorithm, kept for differential testing).
+    /// Decisions appended by the core since the executor last drained
+    /// them ([`ClusterView::drain_decisions`]). Doubles as the engine's
+    /// changed-set: every decision names a request whose progress rate
+    /// may have changed. May contain several decisions for one request;
+    /// executors must be idempotent per request.
+    pub decisions: Vec<Decision>,
+    /// Reference mode: disable the cores' incremental shortcuts so every
+    /// rebalance releases and re-places everything (the seed algorithm,
+    /// kept for differential testing).
     pub naive: bool,
 }
 
-impl World {
-    /// A world with every request still in the `Future` phase at t=0.
+impl ClusterView {
+    /// A view with every request still in the `Future` phase at t=0.
     pub fn new(requests: Vec<Request>, cluster: Cluster, policy: Policy) -> Self {
         let states = requests.into_iter().map(ReqState::new).collect();
-        World {
+        ClusterView {
             states,
             cluster,
             policy,
             now: 0.0,
-            changed: Vec::new(),
+            decisions: Vec::new(),
             naive: false,
         }
+    }
+
+    /// Append a request to the table (dynamic executors — the Zoe master
+    /// learns of applications one submission at a time). The request's
+    /// `id` must equal the current table length (dense ids).
+    pub fn push_request(&mut self, req: Request) -> ReqId {
+        let id = self.states.len() as ReqId;
+        assert_eq!(req.id, id, "request ids must be dense table indices");
+        self.states.push(ReqState::new(req));
+        id
     }
 
     /// The execution state of request `id`.
@@ -169,33 +299,77 @@ impl World {
         &mut self.states[id as usize]
     }
 
+    /// Take the buffered decisions, leaving the buffer empty (the
+    /// executor's read side).
+    pub fn drain_decisions(&mut self) -> Vec<Decision> {
+        std::mem::take(&mut self.decisions)
+    }
+
     /// Set the elastic grant of a request: accrues work done at the old
-    /// rate first, then switches the rate and records the change for the
-    /// engine's departure refresh.
+    /// rate first, then switches the rate and emits the grant decision
+    /// ([`Decision::SetGrant`] on a raise, [`Decision::Reclaim`] on a
+    /// shrink) for the executor.
     pub fn set_grant(&mut self, id: ReqId, g: u32) {
         let now = self.now;
         let st = &mut self.states[id as usize];
         if st.grant != g {
             st.accrue(now);
+            let old = st.grant;
             st.grant = g;
             st.cur_rate = if st.phase == Phase::Running {
                 st.req.rate(g)
             } else {
                 0.0
             };
-            self.changed.push(id);
+            self.decisions.push(if g > old {
+                Decision::SetGrant { id, g }
+            } else {
+                Decision::Reclaim { id, n: old - g }
+            });
         }
     }
 
     /// Record a newly admitted request: start accruing at its current
-    /// grant from now, and make sure the engine schedules its departure.
-    pub fn note_admitted(&mut self, id: ReqId) {
+    /// grant from now and emit [`Decision::Admit`] carrying the virtual
+    /// core placement (the executor starts core containers there and the
+    /// engine schedules the departure).
+    pub fn note_admitted(&mut self, id: ReqId, placement: Placement) {
         let now = self.now;
         let st = &mut self.states[id as usize];
         debug_assert_eq!(st.phase, Phase::Running);
         st.last_accrual = now;
         st.cur_rate = st.req.rate(st.grant);
-        self.changed.push(id);
+        self.decisions.push(Decision::Admit { id, placement });
+    }
+
+    /// The executor-side departure ritual, run **before** handing the
+    /// core its [`SchedEvent::Departure`]: fold the final accrual
+    /// segment, then mark the request [`Phase::Done`] with grant 0 and
+    /// rate 0. Emits no decision — the departure event itself is the
+    /// signal (matching the engine, which never emitted a grant change
+    /// for the departing request either).
+    pub fn note_departed(&mut self, id: ReqId) {
+        let now = self.now;
+        let st = &mut self.states[id as usize];
+        st.accrue(now);
+        st.phase = Phase::Done;
+        st.grant = 0;
+        st.cur_rate = 0.0;
+    }
+
+    /// Record a wholesale preemption (custom cores only; see
+    /// [`Decision::Preempt`]): accrued work is preserved, the request
+    /// returns to [`Phase::Pending`] with grant 0, and the decision is
+    /// emitted for the executors.
+    pub fn note_preempted(&mut self, id: ReqId) {
+        let now = self.now;
+        let st = &mut self.states[id as usize];
+        debug_assert_eq!(st.phase, Phase::Running);
+        st.accrue(now);
+        st.phase = Phase::Pending;
+        st.grant = 0;
+        st.cur_rate = 0.0;
+        self.decisions.push(Decision::Preempt { id });
     }
 
     /// Policy key for a *pending* request at the current time.
@@ -214,23 +388,51 @@ impl World {
     }
 }
 
-/// Common interface of the three schedulers.
-pub trait Scheduler {
-    /// Handle a request arrival at `w.now` (the request is in `Pending`).
-    fn on_arrival(&mut self, id: ReqId, w: &mut World);
-    /// Handle the departure of `id` (already marked `Done`).
-    fn on_departure(&mut self, id: ReqId, w: &mut World);
+// ---------------------------------------------------------------------------
+// SchedulerCore — the one scheduling interface
+// ---------------------------------------------------------------------------
+
+/// The decision-emitting scheduling interface shared by both executors.
+///
+/// A core owns the waiting lines and serving order; the executor owns
+/// the [`ClusterView`] and hands it to the core on every event. During
+/// [`SchedulerCore::on_event`] the core updates the virtual assignment
+/// *in* the view and appends every externally observable change to
+/// [`ClusterView::decisions`]; the executor then drains and applies
+/// them. [`SchedulerCore::decide`] wraps that hand-off for executors
+/// that want the decisions of a single event as a returned `Vec`.
+pub trait SchedulerCore {
+    /// Handle `ev` at `view.now`: update the virtual assignment in
+    /// `view` and append the resulting [`Decision`]s to
+    /// `view.decisions`. For [`SchedEvent::Arrival`] the request is
+    /// already [`Phase::Pending`]; for [`SchedEvent::Departure`] it is
+    /// already [`Phase::Done`] (with grant 0).
+    fn on_event(&mut self, ev: SchedEvent, view: &mut ClusterView);
+
     /// Number of requests waiting to be served.
     fn pending(&self) -> usize;
+
     /// Number of requests in service.
     fn running(&self) -> usize;
-    /// Serving set in cascade order (diagnostics / tests).
+
+    /// Serving set in cascade order (executors reconcile grants against
+    /// it; also diagnostics / tests).
     fn serving(&self) -> &[ReqId];
+
     /// Short scheduler name for reports.
     fn name(&self) -> &'static str;
+
+    /// Run one event and return exactly the decisions it produced.
+    /// Decisions already buffered in the view (not yet drained by the
+    /// executor) are left untouched.
+    fn decide(&mut self, ev: SchedEvent, view: &mut ClusterView) -> Vec<Decision> {
+        let start = view.decisions.len();
+        self.on_event(ev, view);
+        view.decisions.split_off(start)
+    }
 }
 
-/// Scheduler families evaluated in the paper.
+/// Built-in scheduler families evaluated in the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SchedKind {
     /// The rigid baseline: full-demand admission, no reclaim (§4.1).
@@ -244,17 +446,16 @@ pub enum SchedKind {
 }
 
 impl SchedKind {
-    /// Instantiate a fresh scheduler of this family.
-    pub fn build(&self) -> Box<dyn Scheduler> {
-        match self {
-            SchedKind::Rigid => Box::new(RigidScheduler::new()),
-            SchedKind::Malleable => Box::new(MalleableScheduler::new()),
-            SchedKind::Flexible => Box::new(FlexibleScheduler::new(false)),
-            SchedKind::FlexiblePreemptive => Box::new(FlexibleScheduler::new(true)),
-        }
-    }
+    /// All four built-in generations, in paper order.
+    pub const ALL: [SchedKind; 4] = [
+        SchedKind::Rigid,
+        SchedKind::Malleable,
+        SchedKind::Flexible,
+        SchedKind::FlexiblePreemptive,
+    ];
 
-    /// Short lowercase name, as used in reports and bench output.
+    /// Short lowercase name, as used in reports, bench output and
+    /// [`SchedSpec`] parsing.
     pub fn label(&self) -> &'static str {
         match self {
             SchedKind::Rigid => "rigid",
@@ -263,6 +464,189 @@ impl SchedKind {
             SchedKind::FlexiblePreemptive => "flexible+preempt",
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// SchedSpec — the open scheduler registry
+// ---------------------------------------------------------------------------
+
+/// A factory producing a fresh [`SchedulerCore`]; shared across worker
+/// threads by the parallel experiment driver, hence `Send + Sync`.
+pub type CoreFactory = Arc<dyn Fn() -> Box<dyn SchedulerCore> + Send + Sync>;
+
+/// A parseable, buildable scheduler specification: one of the four
+/// built-in [`SchedKind`] generations or an externally
+/// [registered](register_core) core.
+///
+/// `SchedSpec` round-trips through its string form —
+/// `spec.label().parse::<SchedSpec>() == Ok(spec)` — and that parse is
+/// the *single* scheduler-name parser used by `zoe sim --sched`,
+/// `zoe master --generation`, `zoe trace replay --sched` and
+/// [`crate::sim::ExperimentPlan`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SchedSpec(Repr);
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum Repr {
+    Builtin(SchedKind),
+    External(String),
+}
+
+impl SchedSpec {
+    /// The spec of a built-in generation.
+    pub fn builtin(kind: SchedKind) -> Self {
+        SchedSpec(Repr::Builtin(kind))
+    }
+
+    /// The spec of an externally registered core; errors (with the valid
+    /// names) when no core of that name is registered.
+    pub fn external(name: &str) -> Result<Self, SchedSpecError> {
+        if registry().read().unwrap().contains_key(name) {
+            Ok(SchedSpec(Repr::External(name.to_string())))
+        } else {
+            Err(SchedSpecError::unknown(name))
+        }
+    }
+
+    /// The built-in generation this spec names, if it is one.
+    pub fn kind(&self) -> Option<SchedKind> {
+        match &self.0 {
+            Repr::Builtin(k) => Some(*k),
+            Repr::External(_) => None,
+        }
+    }
+
+    /// Canonical name; parsing it back yields this spec.
+    pub fn label(&self) -> &str {
+        match &self.0 {
+            Repr::Builtin(k) => k.label(),
+            Repr::External(n) => n,
+        }
+    }
+
+    /// Instantiate a fresh core of this spec.
+    ///
+    /// # Panics
+    ///
+    /// Panics if an external spec's registration has disappeared — the
+    /// constructors validate against the registry, and there is no
+    /// unregister API, so this cannot happen for specs built through
+    /// them.
+    pub fn build(&self) -> Box<dyn SchedulerCore> {
+        match &self.0 {
+            Repr::Builtin(SchedKind::Rigid) => Box::new(RigidScheduler::new()),
+            Repr::Builtin(SchedKind::Malleable) => Box::new(MalleableScheduler::new()),
+            Repr::Builtin(SchedKind::Flexible) => Box::new(FlexibleScheduler::new(false)),
+            Repr::Builtin(SchedKind::FlexiblePreemptive) => {
+                Box::new(FlexibleScheduler::new(true))
+            }
+            Repr::External(name) => {
+                let factory = registry()
+                    .read()
+                    .unwrap()
+                    .get(name)
+                    .cloned()
+                    .unwrap_or_else(|| panic!("scheduler core '{name}' is not registered"));
+                factory()
+            }
+        }
+    }
+}
+
+impl From<SchedKind> for SchedSpec {
+    fn from(kind: SchedKind) -> Self {
+        SchedSpec::builtin(kind)
+    }
+}
+
+impl std::fmt::Display for SchedSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for SchedSpec {
+    type Err = SchedSpecError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        for kind in SchedKind::ALL {
+            if s == kind.label() {
+                return Ok(SchedSpec::builtin(kind));
+            }
+        }
+        if s == "preemptive" {
+            // Historical CLI alias for the §3.3 preemptive generation.
+            return Ok(SchedSpec::builtin(SchedKind::FlexiblePreemptive));
+        }
+        SchedSpec::external(s)
+    }
+}
+
+/// The error of [`SchedSpec`] parsing/registration; its `Display` form
+/// is the one user-facing message listing every valid scheduler name.
+#[derive(Clone, Debug)]
+pub struct SchedSpecError {
+    msg: String,
+}
+
+impl SchedSpecError {
+    fn unknown(name: &str) -> Self {
+        SchedSpecError {
+            msg: format!("unknown scheduler '{name}' (valid: {})", sched_names()),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedSpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for SchedSpecError {}
+
+fn registry() -> &'static RwLock<BTreeMap<String, CoreFactory>> {
+    static REGISTRY: OnceLock<RwLock<BTreeMap<String, CoreFactory>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| RwLock::new(BTreeMap::new()))
+}
+
+/// Register an external scheduler core under `name`, making
+/// `name.parse::<SchedSpec>()` resolve to it everywhere specs are
+/// accepted (CLI flags, [`crate::sim::ExperimentPlan`], the Zoe
+/// master). Returns the registered spec.
+///
+/// Names must be non-empty, free of whitespace, and must not shadow a
+/// built-in name or alias; re-registering a name errors (there is no
+/// unregister).
+pub fn register_core(name: &str, factory: CoreFactory) -> Result<SchedSpec, SchedSpecError> {
+    if name.is_empty() || name.chars().any(char::is_whitespace) {
+        return Err(SchedSpecError {
+            msg: format!("invalid scheduler name '{name}' (non-empty, no whitespace)"),
+        });
+    }
+    let builtin = SchedKind::ALL.iter().any(|k| k.label() == name) || name == "preemptive";
+    if builtin {
+        return Err(SchedSpecError {
+            msg: format!("scheduler name '{name}' shadows a built-in generation"),
+        });
+    }
+    let mut reg = registry().write().unwrap();
+    if reg.contains_key(name) {
+        return Err(SchedSpecError {
+            msg: format!("scheduler core '{name}' is already registered"),
+        });
+    }
+    reg.insert(name.to_string(), factory);
+    Ok(SchedSpec(Repr::External(name.to_string())))
+}
+
+/// Every currently valid scheduler name: the four built-ins, the
+/// `preemptive` alias, then the registered external cores (sorted).
+pub fn sched_names() -> String {
+    let mut names: Vec<String> = SchedKind::ALL.iter().map(|k| k.label().to_string()).collect();
+    names.push("preemptive".to_string());
+    names.extend(registry().read().unwrap().keys().cloned());
+    names.join("|")
 }
 
 // ---------------------------------------------------------------------------
@@ -281,7 +665,7 @@ impl SchedKind {
 /// mode; the flexible scheduler maintains the aggregate incrementally
 /// (admit adds, departure subtracts) and answers the same question in
 /// O(1) on the optimized path.
-pub(crate) fn has_spare_after_full_grants(w: &World, s: &[ReqId]) -> bool {
+pub(crate) fn has_spare_after_full_grants(w: &ClusterView, s: &[ReqId]) -> bool {
     let mut demand = crate::core::Resources::ZERO;
     for &id in s {
         demand.add(&w.states[id as usize].req.full_total());
@@ -312,7 +696,7 @@ pub(crate) fn insert_keyed(q: &mut VecDeque<KeyedEntry>, key: f64, id: ReqId) {
 /// `stamp` dedups the work: keys are a function of `w.now` only, so a
 /// second resort at the same instant (arrival → rebalance) is skipped;
 /// inserts/pops between them preserve the canonical order.
-pub(crate) fn resort_keyed(q: &mut VecDeque<KeyedEntry>, w: &World, stamp: &mut f64) {
+pub(crate) fn resort_keyed(q: &mut VecDeque<KeyedEntry>, w: &ClusterView, stamp: &mut f64) {
     if !w.policy.dynamic() || q.is_empty() {
         return;
     }
@@ -335,4 +719,99 @@ pub(crate) fn resort_keyed(q: &mut VecDeque<KeyedEntry>, w: &World, stamp: &mut 
 #[inline]
 pub(crate) fn keyed_head(q: &VecDeque<KeyedEntry>) -> Option<ReqId> {
     q.front().map(|&(_, id)| id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_through_label() {
+        for kind in SchedKind::ALL {
+            let spec = SchedSpec::builtin(kind);
+            let back: SchedSpec = spec.label().parse().unwrap();
+            assert_eq!(back, spec, "{}", kind.label());
+            assert_eq!(back.kind(), Some(kind));
+        }
+    }
+
+    #[test]
+    fn preemptive_alias_parses_to_flexible_preempt() {
+        let spec: SchedSpec = "preemptive".parse().unwrap();
+        assert_eq!(spec.kind(), Some(SchedKind::FlexiblePreemptive));
+        // The canonical label is the non-alias form.
+        assert_eq!(spec.label(), "flexible+preempt");
+    }
+
+    #[test]
+    fn unknown_spec_error_lists_valid_names() {
+        let err = "bogus".parse::<SchedSpec>().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bogus"), "{msg}");
+        for kind in SchedKind::ALL {
+            assert!(msg.contains(kind.label()), "{msg}");
+        }
+        assert!(msg.contains("preemptive"), "{msg}");
+    }
+
+    #[test]
+    fn builtin_specs_build_their_core() {
+        for kind in SchedKind::ALL {
+            let core = SchedSpec::builtin(kind).build();
+            assert_eq!(core.name(), kind.label());
+            assert_eq!(core.pending(), 0);
+            assert_eq!(core.running(), 0);
+        }
+    }
+
+    #[test]
+    fn registry_round_trip_and_collisions() {
+        let factory: CoreFactory = Arc::new(|| Box::new(RigidScheduler::new()) as Box<dyn SchedulerCore>);
+        let spec = register_core("unit-test-noop", factory.clone()).unwrap();
+        assert_eq!(spec.label(), "unit-test-noop");
+        let parsed: SchedSpec = "unit-test-noop".parse().unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.kind(), None);
+        assert_eq!(parsed.build().name(), "rigid");
+        assert!(sched_names().contains("unit-test-noop"));
+        // Duplicate and shadowing registrations are rejected.
+        assert!(register_core("unit-test-noop", factory.clone()).is_err());
+        assert!(register_core("flexible", factory.clone()).is_err());
+        assert!(register_core("preemptive", factory.clone()).is_err());
+        assert!(register_core("bad name", factory).is_err());
+    }
+
+    #[test]
+    fn set_grant_emits_raise_and_reclaim_decisions() {
+        let req = crate::core::unit_request(0, 0.0, 10.0, 1, 5);
+        let mut v = ClusterView::new(vec![req], Cluster::units(10), Policy::FIFO);
+        v.state_mut(0).phase = Phase::Running;
+        v.set_grant(0, 3);
+        v.set_grant(0, 3); // no change, no decision
+        v.set_grant(0, 1);
+        assert_eq!(
+            v.drain_decisions(),
+            vec![
+                Decision::SetGrant { id: 0, g: 3 },
+                Decision::Reclaim { id: 0, n: 2 },
+            ]
+        );
+        assert!(v.decisions.is_empty());
+    }
+
+    #[test]
+    fn note_preempted_preserves_work_and_emits_decision() {
+        let req = crate::core::unit_request(0, 0.0, 10.0, 2, 0);
+        let mut v = ClusterView::new(vec![req], Cluster::units(10), Policy::FIFO);
+        v.state_mut(0).phase = Phase::Running;
+        v.state_mut(0).cur_rate = 2.0;
+        v.now = 5.0;
+        v.note_preempted(0);
+        let st = v.state(0);
+        assert_eq!(st.phase, Phase::Pending);
+        assert_eq!(st.grant, 0);
+        assert_eq!(st.cur_rate, 0.0);
+        assert!((st.done_work - 10.0).abs() < 1e-9, "accrued work preserved");
+        assert_eq!(v.drain_decisions(), vec![Decision::Preempt { id: 0 }]);
+    }
 }

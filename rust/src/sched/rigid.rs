@@ -12,7 +12,7 @@
 
 use std::collections::VecDeque;
 
-use super::{insert_keyed, keyed_head, resort_keyed, Phase, Scheduler, World};
+use super::{insert_keyed, keyed_head, resort_keyed, ClusterView, Phase, SchedEvent, SchedulerCore};
 use crate::core::ReqId;
 use crate::pool::Placement;
 
@@ -42,7 +42,7 @@ impl RigidScheduler {
         }
     }
 
-    fn ensure_capacity(&mut self, w: &World) {
+    fn ensure_capacity(&mut self, w: &ClusterView) {
         let n = w.states.len();
         if self.cores.len() < n {
             self.cores.resize_with(n, Placement::default);
@@ -52,7 +52,7 @@ impl RigidScheduler {
 
     /// Head-of-line admission: start the head of L while its full demand
     /// fits in the current free capacity. No backfill.
-    fn try_admit(&mut self, w: &mut World) {
+    fn try_admit(&mut self, w: &mut ClusterView) {
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         while let Some(head) = keyed_head(&self.l) {
             if !self.place_full(w, head) {
@@ -69,14 +69,15 @@ impl RigidScheduler {
             }
             let full = w.state(head).req.n_elastic;
             w.set_grant(head, full); // full allocation, always
-            w.note_admitted(head);
+            let placement = self.cores[head as usize].clone();
+            w.note_admitted(head, placement);
             self.s.push(head);
         }
     }
 
     /// Place the complete demand of `head` — all cores and all elastic
     /// components — all-or-nothing, into the reusable buffers.
-    fn place_full(&mut self, w: &mut World, head: ReqId) -> bool {
+    fn place_full(&mut self, w: &mut ClusterView, head: ReqId) -> bool {
         let (cres, cn, eres, en) = {
             let r = &w.states[head as usize].req;
             (r.core_res, r.n_core, r.elastic_res, r.n_elastic)
@@ -105,8 +106,8 @@ impl Default for RigidScheduler {
     }
 }
 
-impl Scheduler for RigidScheduler {
-    fn on_arrival(&mut self, id: ReqId, w: &mut World) {
+impl RigidScheduler {
+    fn on_arrival(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let key = w.pending_key(id);
@@ -116,12 +117,30 @@ impl Scheduler for RigidScheduler {
         }
     }
 
-    fn on_departure(&mut self, id: ReqId, w: &mut World) {
+    fn on_departure(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
+        if !self.s.contains(&id) {
+            // Cancellation of a still-waiting request (master kill path;
+            // never reached by the simulator).
+            self.l.retain(|&(_, x)| x != id);
+        }
         self.s.retain(|&x| x != id);
         w.cluster.release_and_clear(&mut self.cores[id as usize]);
         w.cluster.release_and_clear(&mut self.elastic[id as usize]);
         self.try_admit(w);
+    }
+}
+
+impl SchedulerCore for RigidScheduler {
+    fn on_event(&mut self, ev: SchedEvent, view: &mut ClusterView) {
+        match ev {
+            SchedEvent::Arrival(id) => self.on_arrival(id, view),
+            SchedEvent::Departure(id) => self.on_departure(id, view),
+            SchedEvent::Tick => {
+                self.ensure_capacity(view);
+                self.try_admit(view);
+            }
+        }
     }
 
     fn pending(&self) -> usize {

@@ -3,6 +3,17 @@
 //! alters a request's predicted finish time, its epoch is bumped and a
 //! fresh event pushed — stale events are skipped on pop.
 //!
+//! # The engine is an executor
+//!
+//! The engine owns a [`ClusterView`] as its world state and a
+//! [`SchedulerCore`] built from a [`SchedSpec`]. On every event it hands
+//! the view to the core ([`SchedulerCore::on_event`]) and then *applies*
+//! the emitted [`Decision`] stream to its own bookkeeping: every
+//! decision names a request whose progress rate may have changed, so
+//! exactly those get their predicted departure refreshed (and a
+//! [`Decision::Preempt`] retires the prediction outright). The trace
+//! recorder's `alloc` lines are sourced from the same stream.
+//!
 //! # Per-event cost: O(changed), not O(|serving set|)
 //!
 //! The optimized engine ([`EngineMode::Optimized`], the default) pays per
@@ -11,10 +22,10 @@
 //! * **Lazy work accrual** — there is no per-event accrual sweep over the
 //!   serving set. Each request stores `(last_accrual, cur_rate)`; its
 //!   `done_work` is folded forward only when its rate changes (grant
-//!   change, via `World::set_grant`) or when it departs. Between rate
-//!   changes the remaining work is implied, not materialized.
-//! * **Changed-set departure refresh** — the schedulers record every
-//!   request whose rate changed in `World::changed`; only those get their
+//!   change, via `ClusterView::set_grant`) or when it departs. Between
+//!   rate changes the remaining work is implied, not materialized.
+//! * **Decision-driven departure refresh** — the cores emit one decision
+//!   per actual grant change; only the named requests get their
 //!   predicted-finish recomputed and a fresh heap event. A request whose
 //!   grant did not change keeps a prediction that is *exactly* (not just
 //!   approximately) still correct, because its rate is unchanged.
@@ -31,10 +42,11 @@
 //!
 //! The naive reference path ([`EngineMode::Naive`]) keeps the seed
 //! algorithm — eager accrual over the whole serving set on every event
-//! plus a full refresh, and no compaction — and also flips `World::naive`
-//! so the schedulers disable their incremental shortcuts.
-//! `rust/tests/sim_properties.rs` runs both engines differentially across
-//! seeds, schedulers and policies and asserts the sample sets match.
+//! plus a full refresh, and no compaction — and also flips
+//! `ClusterView::naive` so the cores disable their incremental
+//! shortcuts. `rust/tests/sim_properties.rs` runs both engines
+//! differentially across seeds, schedulers and policies and asserts the
+//! sample sets match.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -42,7 +54,7 @@ use std::collections::BinaryHeap;
 use crate::core::{ReqId, Request};
 use crate::policy::Policy;
 use crate::pool::Cluster;
-use crate::sched::{Phase, SchedKind, Scheduler, World};
+use crate::sched::{ClusterView, Decision, Phase, SchedEvent, SchedSpec, SchedulerCore};
 use crate::sim::metrics::{MetricsCollector, SimResult};
 use crate::trace::TraceRecorder;
 
@@ -103,8 +115,8 @@ pub enum EngineMode {
 
 /// A complete simulation run: requests + cluster + policy + scheduler.
 pub struct Simulation {
-    world: World,
-    sched: Box<dyn Scheduler>,
+    world: ClusterView,
+    sched: Box<dyn SchedulerCore>,
     heap: BinaryHeap<Ev>,
     seq: u64,
     metrics: MetricsCollector,
@@ -124,9 +136,16 @@ pub struct Simulation {
 
 impl Simulation {
     /// Build a simulation over `requests` with the default (optimized)
-    /// engine.
-    pub fn new(requests: Vec<Request>, cluster: Cluster, policy: Policy, kind: SchedKind) -> Self {
-        Self::with_mode(requests, cluster, policy, kind, EngineMode::Optimized)
+    /// engine. `sched` is anything convertible to a [`SchedSpec`]: a
+    /// [`crate::sched::SchedKind`], a parsed spec, or a registered
+    /// external core's spec.
+    pub fn new(
+        requests: Vec<Request>,
+        cluster: Cluster,
+        policy: Policy,
+        sched: impl Into<SchedSpec>,
+    ) -> Self {
+        Self::with_mode(requests, cluster, policy, sched, EngineMode::Optimized)
     }
 
     /// Build a simulation with an explicit [`EngineMode`] (differential
@@ -135,7 +154,7 @@ impl Simulation {
         requests: Vec<Request>,
         cluster: Cluster,
         policy: Policy,
-        kind: SchedKind,
+        sched: impl Into<SchedSpec>,
         mode: EngineMode,
     ) -> Self {
         let mut heap = BinaryHeap::with_capacity(requests.len() * 2);
@@ -155,11 +174,11 @@ impl Simulation {
             seq += 1;
         }
         let metrics = MetricsCollector::new();
-        let mut world = World::new(requests, cluster, policy);
+        let mut world = ClusterView::new(requests, cluster, policy);
         world.naive = mode == EngineMode::Naive;
         Simulation {
             world,
-            sched: kind.build(),
+            sched: sched.into().build(),
             heap,
             seq,
             metrics,
@@ -211,13 +230,14 @@ impl Simulation {
         self.world.now = t;
     }
 
-    /// After any scheduling action: refresh the predicted departures of
+    /// After any scheduling action: apply the core's decision stream to
+    /// the engine's bookkeeping — refresh the predicted departures of
     /// the requests whose progress rate changed (all serving requests in
-    /// naive mode).
-    fn refresh_departures(&mut self) {
+    /// naive mode) and retire the predictions of preempted ones.
+    fn apply_decisions(&mut self) {
         let now = self.world.now;
         if self.mode == EngineMode::Naive {
-            self.world.changed.clear();
+            self.world.decisions.clear();
             self.scratch.clear();
             self.scratch.extend_from_slice(self.sched.serving());
             let ids = std::mem::take(&mut self.scratch);
@@ -226,12 +246,31 @@ impl Simulation {
             }
             self.scratch = ids;
         } else {
-            let mut changed = std::mem::take(&mut self.world.changed);
-            for &id in &changed {
-                self.refresh_one(id, now);
+            let mut decisions = std::mem::take(&mut self.world.decisions);
+            for d in &decisions {
+                match *d {
+                    Decision::Preempt { id } => self.retire_prediction(id),
+                    Decision::Admit { id, .. }
+                    | Decision::SetGrant { id, .. }
+                    | Decision::Reclaim { id, .. } => self.refresh_one(id, now),
+                }
             }
-            changed.clear();
-            self.world.changed = changed;
+            decisions.clear();
+            self.world.decisions = decisions;
+        }
+    }
+
+    /// A preempted request's in-heap departure event can never fire
+    /// again: mark it stale (epoch bump) so a pop skips it and a
+    /// compaction drops it, and forget the prediction so a later
+    /// re-admission pushes a fresh event.
+    fn retire_prediction(&mut self, id: ReqId) {
+        let st = &mut self.world.states[id as usize];
+        debug_assert_ne!(st.phase, Phase::Running, "preempted request still running");
+        if st.predicted_finish.is_finite() {
+            st.epoch += 1;
+            st.predicted_finish = f64::INFINITY;
+            self.stale += 1;
         }
     }
 
@@ -324,12 +363,13 @@ impl Simulation {
                     if let Some(rec) = self.recorder.as_mut() {
                         rec.record_arrival(ev.t, &self.world.states[id as usize].req);
                     }
-                    self.sched.on_arrival(id, &mut self.world);
-                    // Read the changed-set before refresh_departures drains it.
+                    self.sched.on_event(SchedEvent::Arrival(id), &mut self.world);
+                    // Read the decision stream before apply_decisions
+                    // drains it.
                     if let Some(rec) = self.recorder.as_mut() {
                         rec.record_changes(ev.t, "arrival", id, &self.world);
                     }
-                    self.refresh_departures();
+                    self.apply_decisions();
                     self.sample_metrics();
                     self.maybe_compact();
                 }
@@ -377,11 +417,11 @@ impl Simulation {
                             (now - admit) / runtime,
                         );
                     }
-                    self.sched.on_departure(id, &mut self.world);
+                    self.sched.on_event(SchedEvent::Departure(id), &mut self.world);
                     if let Some(rec) = self.recorder.as_mut() {
                         rec.record_changes(ev.t, "departure", id, &self.world);
                     }
-                    self.refresh_departures();
+                    self.apply_decisions();
                     self.sample_metrics();
                     self.maybe_compact();
                 }
@@ -412,9 +452,9 @@ pub fn simulate(
     requests: Vec<Request>,
     cluster: Cluster,
     policy: Policy,
-    kind: SchedKind,
+    sched: impl Into<SchedSpec>,
 ) -> SimResult {
-    Simulation::new(requests, cluster, policy, kind).run()
+    Simulation::new(requests, cluster, policy, sched).run()
 }
 
 /// One-shot runner with an explicit engine mode (differential testing,
@@ -423,16 +463,17 @@ pub fn simulate_with_mode(
     requests: Vec<Request>,
     cluster: Cluster,
     policy: Policy,
-    kind: SchedKind,
+    sched: impl Into<SchedSpec>,
     mode: EngineMode,
 ) -> SimResult {
-    Simulation::with_mode(requests, cluster, policy, kind, mode).run()
+    Simulation::with_mode(requests, cluster, policy, sched, mode).run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::unit_request;
+    use crate::sched::SchedKind;
 
     /// Figure 1 of the paper, derived parameters: R = 10 units, four
     /// requests with C = 3, T = 10 and E = (4, 3, 5, 2). Expected average

@@ -34,29 +34,32 @@ use std::sync::{Arc, OnceLock};
 use crate::core::Request;
 use crate::policy::Policy;
 use crate::pool::Cluster;
-use crate::sched::SchedKind;
+use crate::sched::SchedSpec;
 use crate::sim::{simulate_with_mode, EngineMode, SimResult};
 use crate::trace::TraceSource;
 use crate::workload::WorkloadSpec;
 
 /// One scheduler configuration in an experiment grid.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
     /// Waiting-line sorting policy.
     pub policy: Policy,
-    /// Scheduler family.
-    pub kind: SchedKind,
+    /// Scheduler spec (built-in generation or registered external core).
+    pub sched: SchedSpec,
 }
 
 impl SimConfig {
     /// A configuration from its two components.
-    pub fn new(policy: Policy, kind: SchedKind) -> Self {
-        SimConfig { policy, kind }
+    pub fn new(policy: Policy, sched: impl Into<SchedSpec>) -> Self {
+        SimConfig {
+            policy,
+            sched: sched.into(),
+        }
     }
 
     /// `"<policy>/<scheduler>"`, for report headings.
     pub fn label(&self) -> String {
-        format!("{}/{}", self.policy.label(), self.kind.label())
+        format!("{}/{}", self.policy.label(), self.sched.label())
     }
 }
 
@@ -141,9 +144,10 @@ impl ExperimentPlan {
         self
     }
 
-    /// Add one `(policy, scheduler)` configuration to the grid.
-    pub fn config(mut self, policy: Policy, kind: SchedKind) -> Self {
-        self.configs.push(SimConfig::new(policy, kind));
+    /// Add one `(policy, scheduler)` configuration to the grid; the
+    /// scheduler is anything convertible to a [`SchedSpec`].
+    pub fn config(mut self, policy: Policy, sched: impl Into<SchedSpec>) -> Self {
+        self.configs.push(SimConfig::new(policy, sched));
         self
     }
 
@@ -182,8 +186,14 @@ impl ExperimentPlan {
             Source::Spec { spec, apps } => spec.generate(*apps, seed),
             Source::Trace(reqs) => reqs.as_ref().clone(),
         };
-        let c = self.configs[ci];
-        simulate_with_mode(requests, self.cluster.clone(), c.policy, c.kind, self.mode)
+        let c = &self.configs[ci];
+        simulate_with_mode(
+            requests,
+            self.cluster.clone(),
+            c.policy,
+            c.sched.clone(),
+            self.mode,
+        )
     }
 
     /// Execute the whole grid and collect per-seed results, grouped by
@@ -239,8 +249,8 @@ impl ExperimentPlan {
         let runs = self
             .configs
             .iter()
-            .map(|&config| ExperimentRun {
-                config,
+            .map(|config| ExperimentRun {
+                config: config.clone(),
                 per_seed: (0..n_seeds).map(|_| done.next().unwrap()).collect(),
             })
             .collect();
@@ -283,7 +293,10 @@ pub struct ExperimentResult {
 impl ExperimentResult {
     /// Merged result per configuration, in plan insertion order.
     pub fn merged(&self) -> Vec<(SimConfig, SimResult)> {
-        self.runs.iter().map(|r| (r.config, r.merged())).collect()
+        self.runs
+            .iter()
+            .map(|r| (r.config.clone(), r.merged()))
+            .collect()
     }
 
     /// Merged result of a single-configuration plan.
@@ -316,11 +329,11 @@ pub fn run_many(
     apps: u32,
     seeds: std::ops::Range<u64>,
     policy: Policy,
-    kind: SchedKind,
+    sched: impl Into<SchedSpec>,
 ) -> SimResult {
     ExperimentPlan::new(spec.clone(), apps)
         .seeds(seeds)
-        .config(policy, kind)
+        .config(policy, sched)
         .run()
         .into_single()
 }
@@ -328,6 +341,7 @@ pub fn run_many(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::SchedKind;
 
     #[test]
     fn grid_shape_and_labels() {

@@ -9,7 +9,7 @@ use std::io::BufRead;
 use crate::core::{AppClass, Request, Resources};
 use crate::policy::Policy;
 use crate::pool::Cluster;
-use crate::sched::SchedKind;
+use crate::sched::SchedSpec;
 use crate::sim::{SimResult, Simulation};
 use crate::util::json::Json;
 use crate::workload::Caps;
@@ -132,13 +132,23 @@ impl TraceSource {
 
     /// Build a [`Simulation`] replaying this trace (attach a recorder
     /// with [`Simulation::with_recorder`] before running, if desired).
-    pub fn simulation(&self, cluster: Cluster, policy: Policy, kind: SchedKind) -> Simulation {
-        Simulation::new(self.requests.clone(), cluster, policy, kind)
+    pub fn simulation(
+        &self,
+        cluster: Cluster,
+        policy: Policy,
+        sched: impl Into<SchedSpec>,
+    ) -> Simulation {
+        Simulation::new(self.requests.clone(), cluster, policy, sched)
     }
 
     /// Replay the trace to completion under one configuration.
-    pub fn simulate(&self, cluster: Cluster, policy: Policy, kind: SchedKind) -> SimResult {
-        self.simulation(cluster, policy, kind).run()
+    pub fn simulate(
+        &self,
+        cluster: Cluster,
+        policy: Policy,
+        sched: impl Into<SchedSpec>,
+    ) -> SimResult {
+        self.simulation(cluster, policy, sched).run()
     }
 
     // ---- parsing constructors --------------------------------------------

@@ -20,7 +20,7 @@
 use std::io::Write;
 
 use crate::core::{ReqId, Request};
-use crate::sched::{Phase, World};
+use crate::sched::{ClusterView, Phase};
 use crate::util::json::Json;
 
 use super::ingest::request_to_json_fields;
@@ -98,18 +98,35 @@ impl TraceRecorder {
     }
 
     /// Emit `alloc` lines for every request whose grant actually changed
-    /// in the scheduling action that just ran (the engine's changed-set,
-    /// read before the departure refresh drains it), plus one
-    /// `rebalance` summary when anything changed.
-    pub(crate) fn record_changes(&mut self, t: f64, cause: &'static str, src: ReqId, w: &World) {
+    /// in the scheduling action that just ran — sourced from the core's
+    /// [`crate::sched::Decision`] stream, read before the engine's
+    /// apply-pass drains it — plus one `rebalance` summary when anything
+    /// changed.
+    pub(crate) fn record_changes(
+        &mut self,
+        t: f64,
+        cause: &'static str,
+        src: ReqId,
+        w: &ClusterView,
+    ) {
         let mut n_changed = 0u64;
-        for i in 0..w.changed.len() {
-            let id = w.changed[i];
+        for i in 0..w.decisions.len() {
+            let id = w.decisions[i].id();
             let st = &w.states[id as usize];
-            if st.phase != Phase::Running {
-                continue; // departed (or re-queued) within the same action
-            }
             let idx = id as usize;
+            if st.phase != Phase::Running {
+                // Departed (or preempted/re-queued) within the same
+                // action. Forget the dedup state: the request holds
+                // nothing now, so if it is ever re-admitted at its old
+                // grant, that alloc line must be emitted, not deduped
+                // away. (Built-in cores never take this branch — only
+                // registered preempting cores do — so recorded logs of
+                // the built-ins are byte-identical with or without it.)
+                if idx < self.last_grant.len() {
+                    self.last_grant[idx] = -1;
+                }
+                continue;
+            }
             if self.last_grant.len() <= idx {
                 self.last_grant.resize(idx + 1, -1);
             }

@@ -4,7 +4,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::core::{ComponentClass, Resources};
+use crate::core::{AppClass, ComponentClass, ReqId, Request, Resources};
 use crate::runtime::WorkKind;
 use crate::util::json::Json;
 
@@ -83,6 +83,53 @@ impl AppDescription {
     /// Total elastic replicas across groups.
     pub fn n_elastic(&self) -> u32 {
         self.elastic_components().map(|c| c.count).sum()
+    }
+
+    /// The scheduler-core view of this application (§2.2): per-class
+    /// component counts with a componentwise-**max** ("envelope")
+    /// per-component resource vector — conservative, so a virtual
+    /// placement of `n` envelope components always physically fits the
+    /// `n` actual (possibly smaller) components on the same nodes — plus
+    /// a runtime estimate derived from the work-step budget
+    /// (`work_steps / (C + E)`, the §2.2 work model solved for T with
+    /// one step ≈ one component-second).
+    ///
+    /// The envelope deliberately trades admission capacity for placement
+    /// soundness on heterogeneous applications: an app mixing 1-CPU and
+    /// 6-CPU core components is scheduled as if every core were 6 CPUs,
+    /// so the master admits somewhat fewer concurrent apps than a
+    /// per-component packer would, but an admission decision can never
+    /// be physically unplaceable on the hinted nodes. Uniform-component
+    /// apps (the sim↔master agreement scenarios) are unaffected.
+    pub fn scheduler_request(&self, id: ReqId, arrival: f64) -> Request {
+        let envelope = |class: ComponentClass| {
+            let mut r = Resources::ZERO;
+            for c in self.components.iter().filter(|c| c.class == class) {
+                r.cpu = r.cpu.max(c.cpu);
+                r.ram_mb = r.ram_mb.max(c.ram_mb);
+            }
+            r
+        };
+        let n_core = self.n_core();
+        let n_elastic = self.n_elastic();
+        let class = if self.interactive {
+            AppClass::Interactive
+        } else if n_elastic == 0 {
+            AppClass::BatchRigid
+        } else {
+            AppClass::BatchElastic
+        };
+        Request {
+            id,
+            class,
+            arrival,
+            runtime: (self.work_steps as f64 / (n_core + n_elastic).max(1) as f64).max(1e-6),
+            n_core,
+            core_res: envelope(ComponentClass::Core),
+            n_elastic,
+            elastic_res: envelope(ComponentClass::Elastic),
+            priority: self.priority,
+        }
     }
 
     /// Check the structural invariants Zoe enforces at submission.

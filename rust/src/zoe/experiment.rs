@@ -14,11 +14,12 @@ use std::time::Instant;
 
 use crate::backend::{SwarmBackend, WorkPool};
 use crate::runtime::PjrtRuntime;
+use crate::sched::{SchedKind, SchedSpec};
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 
 use super::app::AppDescription;
-use super::master::{ZoeGeneration, ZoeMaster};
+use super::master::ZoeMaster;
 use super::state::AppState;
 use super::templates;
 
@@ -62,7 +63,7 @@ pub fn section6_workload(n: u32, seed: u64, gap_scale: f64) -> Vec<ReplayArrival
 /// Metrics of one replayed generation.
 pub struct ReplayResult {
     /// Generation label for reports.
-    pub label: &'static str,
+    pub label: String,
     /// Turnarounds of elastic (B-E) applications, seconds.
     pub turnaround_be: Samples,
     /// Turnarounds of rigid (B-R) applications, seconds.
@@ -81,11 +82,12 @@ pub struct ReplayResult {
     pub steps: u64,
 }
 
-/// Replay `arrivals` under `generation`. `rate` is worker-container
+/// Replay `arrivals` under the scheduler named by `spec` (any of the
+/// four generations or a registered core). `rate` is worker-container
 /// steps per virtual second (throughput model); `quanta` is the number of
 /// steps the pool executes between scheduler polls.
 pub fn replay(
-    generation: ZoeGeneration,
+    spec: &SchedSpec,
     arrivals: &[ReplayArrival],
     rt: Arc<PjrtRuntime>,
     quanta: usize,
@@ -93,7 +95,7 @@ pub fn replay(
 ) -> ReplayResult {
     let mut backend = SwarmBackend::paper_testbed();
     backend.set_virtual_clock();
-    let mut master = ZoeMaster::new(backend, generation);
+    let mut master = ZoeMaster::new(backend, spec.clone());
     let mut pool = WorkPool::new(rt);
     let wall0 = Instant::now();
     let mut next = 0usize;
@@ -125,7 +127,7 @@ pub fn replay(
             let done = ids.iter().all(|&(id, _)| {
                 matches!(
                     master.store.get(id).map(|r| r.state),
-                    Some(AppState::Finished) | Some(AppState::Killed) | None
+                    Some(AppState::Finished) | Some(AppState::Killed) | Some(AppState::Failed) | None
                 )
             });
             if done {
@@ -142,14 +144,17 @@ pub fn replay(
             alloc.push(used.cpu / total.cpu);
         }
         if wall0.elapsed().as_secs_f64() > 1200.0 {
-            log::warn!("replay wall cap hit for {generation:?}");
+            log::warn!("replay wall cap hit for {}", spec.label());
             break;
         }
     }
     let mut res = ReplayResult {
-        label: match generation {
-            ZoeGeneration::Rigid => "gen-1 (rigid)",
-            ZoeGeneration::Flexible => "gen-2 (flexible)",
+        // The §6 generation names for the two paper configurations;
+        // everything else reports under its spec label.
+        label: match spec.kind() {
+            Some(SchedKind::Rigid) => "gen-1 (rigid)".to_string(),
+            Some(SchedKind::Flexible) => "gen-2 (flexible)".to_string(),
+            _ => spec.label().to_string(),
         },
         turnaround_be: Samples::new(),
         turnaround_br: Samples::new(),

@@ -1,15 +1,35 @@
-//! The Zoe master: pending queue + the flexible scheduling algorithm
-//! applied to *physical* containers on the Swarm-like back-end (§5).
+//! The Zoe master: a container-level **executor** for the shared
+//! scheduling core (§5).
 //!
-//! This is the container-level realization of Algorithm 1:
-//! * admission considers the head of the pending queue only, in policy
-//!   order (FIFO in the §6 experiments);
-//! * the flexible generation starts an application as soon as its **core**
-//!   components can be placed — reclaiming (killing) elastic containers of
-//!   running applications if needed; the rigid generation (gen-1 baseline)
-//!   waits until the **full** demand fits and never reclaims;
-//! * excess capacity cascades as elastic containers to serving
-//!   applications in admission order.
+//! The master contains no scheduling algorithm of its own. It owns a
+//! [`ClusterView`] whose virtual machines mirror the Swarm nodes
+//! one-to-one and a [`SchedulerCore`] built from a [`SchedSpec`] — the
+//! same cores, all four generations and every waiting-line
+//! [`crate::policy::Policy`], that drive the trace-driven simulator. On
+//! every submission and departure the master forwards the event to the
+//! core and *applies* the emitted [`Decision`] stream to physical
+//! containers:
+//!
+//! * [`Decision::Reclaim`] / [`Decision::Preempt`] kill containers
+//!   first (capacity-freeing decisions are applied before consuming
+//!   ones — the cascade legitimately emits an admission before the
+//!   reclaim that funds it, because virtually all elastic was released
+//!   up front);
+//! * [`Decision::Admit`] starts the application's core containers on the
+//!   nodes of the decision's virtual placement (the view is
+//!   node-mirrored, and its per-component "envelope" demand is
+//!   conservative, so the hinted nodes fit; a first-fit fallback plus a
+//!   newest-first physical elastic reclaim absorb any drift between
+//!   physical and virtual fragmentation);
+//! * elastic grants are fulfilled by **reconciling** each serving
+//!   application's running elastic containers against the view's
+//!   authoritative grant (component groups fill in declaration order;
+//!   kills take the newest container of the last group first).
+//!
+//! Scheduling is event-driven exactly like the simulator (submissions
+//! and departures); [`ZoeMaster::schedule`] additionally exposes a
+//! [`SchedEvent::Tick`] pass for dynamic-policy resorts and retry of
+//! under-fulfilled grants.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -18,22 +38,16 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::backend::{
-    AppId, ContainerId, ContainerSpec, Discovery, Endpoint, Event, Role, SharedWork, SwarmBackend,
+    AppId, ContainerId, ContainerSpec, ContainerState, Discovery, Endpoint, Event, NodeId, Role,
+    SharedWork, SwarmBackend,
 };
-use crate::core::{ComponentClass, Resources};
-use crate::util::stats::Samples;
+use crate::core::ReqId;
+use crate::pool::{Cluster, Machine, Placement};
+use crate::sched::{ClusterView, Decision, Phase, SchedEvent, SchedSpec, SchedulerCore};
+use crate::util::stats::{Samples, TimeWeighted};
 
-use super::app::AppDescription;
+use super::app::{AppDescription, ComponentDef};
 use super::state::{AppState, StateStore};
-
-/// Which scheduler generation the master runs (§6 compares the two).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ZoeGeneration {
-    /// Gen-1 baseline: rigid, full-demand admission.
-    Rigid,
-    /// Gen-2: the flexible algorithm of this paper.
-    Flexible,
-}
 
 /// The master.
 pub struct ZoeMaster {
@@ -43,20 +57,35 @@ pub struct ZoeMaster {
     pub store: StateStore,
     /// Service-discovery registry.
     pub discovery: Discovery,
-    generation: ZoeGeneration,
-    /// Pending queue (policy order; FIFO by submission here, as in §6).
-    pending: Vec<AppId>,
-    /// Serving set in cascade (admission) order.
-    serving: Vec<AppId>,
+    /// Which scheduler core this master runs.
+    spec: SchedSpec,
+    /// The shared scheduling core (identical to the simulator's).
+    core: Box<dyn SchedulerCore>,
+    /// Virtual-assignment state: request table + a cluster mirroring the
+    /// Swarm nodes one-to-one.
+    view: ClusterView,
+    /// Request id (dense view index) → application id.
+    apps: Vec<AppId>,
+    /// Application id → request id.
+    reqs: HashMap<AppId, ReqId>,
+    /// Applications in admission order (diagnostics / agreement tests).
+    admitted: Vec<AppId>,
     work: HashMap<AppId, Arc<SharedWork>>,
-    /// Elastic containers per app, newest last (reclaim pops from the back).
-    elastic: HashMap<AppId, Vec<ContainerId>>,
-    core: HashMap<AppId, Vec<ContainerId>>,
+    /// Core containers per app.
+    core_ctrs: HashMap<AppId, Vec<ContainerId>>,
+    /// Elastic containers per app with their component-group index,
+    /// oldest first (reclaim pops from the back).
+    elastic_ctrs: HashMap<AppId, Vec<(ContainerId, usize)>>,
     event_cursor: usize,
     /// §6 ramp-up metric: per-container placement+start latency (seconds).
     pub placement_latency: Samples,
-    /// Time-weighted allocation samples, appended on every schedule pass.
-    pub alloc_samples: Vec<(f64, f64, f64)>, // (now, cpu_frac, ram_frac)
+    /// Time-weighted allocated-CPU fraction, sketch-backed and mergeable
+    /// — the simulator's allocation metric, bounded memory (the
+    /// unbounded per-pass sample list it replaces grew forever on a
+    /// long-lived master).
+    pub cpu_alloc: TimeWeighted,
+    /// Time-weighted allocated-RAM fraction (see `cpu_alloc`).
+    pub ram_alloc: TimeWeighted,
     /// HDFS-like input datasets (§5 data sources).
     pub datastore: super::storage::DataStore,
     /// CEPH-like per-application log volumes (§5 sinks).
@@ -64,84 +93,162 @@ pub struct ZoeMaster {
 }
 
 impl ZoeMaster {
-    /// A master over `backend`, running the given scheduler generation.
-    pub fn new(backend: SwarmBackend, generation: ZoeGeneration) -> Self {
+    /// A master over `backend`, running the scheduler named by `spec`
+    /// (any [`crate::sched::SchedKind`] or registered core) with a FIFO
+    /// waiting line; change the line with [`ZoeMaster::with_policy`].
+    pub fn new(backend: SwarmBackend, spec: impl Into<SchedSpec>) -> Self {
+        let spec = spec.into();
         let n_nodes = backend.nodes().len() as u32;
         let mut datastore = super::storage::DataStore::new(n_nodes);
         // The §6 input datasets (stand-ins for Last.fm / US-DoT flights).
         let _ = datastore.put("hdfs://datasets/lastfm", 3 * 1024, n_nodes.min(3));
         let _ = datastore.put("hdfs://datasets/usdot-flights", 12 * 1024, n_nodes.min(3));
+        // The virtual cluster mirrors the nodes one-to-one: machine i is
+        // node i, so virtual placements are node assignments.
+        let mirror = Cluster::new(
+            backend
+                .nodes()
+                .iter()
+                .map(|n| Machine::new(n.total))
+                .collect(),
+        );
+        let view = ClusterView::new(Vec::new(), mirror, crate::policy::Policy::FIFO);
+        let core = spec.build();
         ZoeMaster {
             backend,
             store: StateStore::new(),
             discovery: Discovery::new(),
-            generation,
-            pending: Vec::new(),
-            serving: Vec::new(),
+            spec,
+            core,
+            view,
+            apps: Vec::new(),
+            reqs: HashMap::new(),
+            admitted: Vec::new(),
             work: HashMap::new(),
-            elastic: HashMap::new(),
-            core: HashMap::new(),
+            core_ctrs: HashMap::new(),
+            elastic_ctrs: HashMap::new(),
             event_cursor: 0,
             placement_latency: Samples::new(),
-            alloc_samples: Vec::new(),
+            cpu_alloc: TimeWeighted::new(0.0, 0.0),
+            ram_alloc: TimeWeighted::new(0.0, 0.0),
             datastore,
             volumes: super::storage::VolumeManager::new(1024 * 1024),
         }
     }
 
-    /// Which scheduler generation this master runs.
-    pub fn generation(&self) -> ZoeGeneration {
-        self.generation
+    /// Replace the waiting-line sorting policy (before any submission).
+    pub fn with_policy(mut self, policy: crate::policy::Policy) -> Self {
+        assert!(
+            self.view.states.is_empty(),
+            "set the policy before submitting applications"
+        );
+        self.view.policy = policy;
+        self
+    }
+
+    /// The scheduler spec this master runs.
+    pub fn spec(&self) -> &SchedSpec {
+        &self.spec
+    }
+
+    /// The waiting-line policy in effect.
+    pub fn policy(&self) -> crate::policy::Policy {
+        self.view.policy
     }
 
     /// Applications waiting in the pending queue.
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.core.pending()
     }
 
     /// Applications currently served.
     pub fn serving_len(&self) -> usize {
-        self.serving.len()
+        self.core.running()
+    }
+
+    /// Applications in admission order (including re-admissions after a
+    /// preemption).
+    pub fn admitted_order(&self) -> &[AppId] {
+        &self.admitted
+    }
+
+    /// The current elastic grant of an application, per the virtual
+    /// assignment (`None` for unknown apps).
+    pub fn grant_of(&self, app: AppId) -> Option<u32> {
+        self.reqs.get(&app).map(|&rid| self.view.state(rid).grant)
+    }
+
+    /// Number of this application's elastic containers currently running.
+    pub fn running_elastic(&self, app: AppId) -> usize {
+        self.elastic_ctrs
+            .get(&app)
+            .map(|v| {
+                v.iter()
+                    .filter(|&&(cid, _)| self.container_running(cid))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    fn container_running(&self, cid: ContainerId) -> bool {
+        self.backend
+            .inspect(cid)
+            .map(|c| c.state == ContainerState::Running)
+            .unwrap_or(false)
     }
 
     /// Submit an application (client API entry point).
     pub fn submit(&mut self, desc: AppDescription) -> Result<AppId> {
         desc.validate()?;
-        // Reject applications whose cores can never fit (Zoe simulates
-        // deployments against the cluster state before accepting, §5).
+        let now = self.backend.now();
+        let rid = self.view.states.len() as ReqId;
+        let req = desc.scheduler_request(rid, now);
+        // Reject applications whose (envelope) core demand can never fit
+        // (Zoe simulates deployments against the cluster state before
+        // accepting, §5).
         let total = self.backend.total();
-        let core_demand = Self::demand(&desc, ComponentClass::Core);
-        if !core_demand.fits_in(&total) {
+        if !req.core_total().fits_in(&total) {
             return Err(anyhow!(
                 "application '{}' core demand {:?} exceeds cluster {:?}",
                 desc.name,
-                core_demand,
+                req.core_total(),
                 total
             ));
         }
-        let now = self.backend.now();
         let id = self.store.insert(desc, now);
         self.store.transition(id, AppState::Queued, now)?;
-        self.pending.push(id);
-        self.schedule();
+        self.view.push_request(req);
+        self.apps.push(id);
+        self.reqs.insert(id, rid);
+        self.view.now = now;
+        self.view.state_mut(rid).phase = Phase::Pending;
+        self.core.on_event(SchedEvent::Arrival(rid), &mut self.view);
+        self.apply_decisions();
+        self.sample_alloc();
         Ok(id)
     }
 
     /// Kill an application (client command; Zoe's naive preemption, §5).
     pub fn kill(&mut self, id: AppId) -> Result<()> {
-        let now = self.backend.now();
-        if let Some(pos) = self.pending.iter().position(|&x| x == id) {
-            self.pending.remove(pos);
-            self.store.transition(id, AppState::Killed, now)?;
-            return Ok(());
+        let Some(&rid) = self.reqs.get(&id) else {
+            return Err(anyhow!("no such app {id}"));
+        };
+        match self.view.state(rid).phase {
+            Phase::Pending => {
+                let now = self.backend.now();
+                self.store.transition(id, AppState::Killed, now)?;
+                self.depart(rid, now);
+                Ok(())
+            }
+            Phase::Running => {
+                let now = self.backend.now();
+                self.teardown_containers(id);
+                self.store.transition(id, AppState::Killed, now)?;
+                self.depart(rid, now);
+                Ok(())
+            }
+            _ => Err(anyhow!("app {id} is not pending or running")),
         }
-        if self.serving.contains(&id) {
-            self.teardown(id);
-            self.store.transition(id, AppState::Killed, now)?;
-            self.schedule();
-            return Ok(());
-        }
-        Err(anyhow!("app {id} is not pending or running"))
     }
 
     /// Poll the back-end event stream: handle container deaths and
@@ -153,305 +260,311 @@ impl ZoeMaster {
             if let Event::Died(cid, app) = ev {
                 self.discovery.deregister_container(cid);
                 if let Some(w) = self.work.get(&app) {
-                    if w.finished() && self.serving.contains(&app) && !finished.contains(&app) {
+                    let serving = self
+                        .reqs
+                        .get(&app)
+                        .map(|&rid| self.view.state(rid).phase == Phase::Running)
+                        .unwrap_or(false);
+                    if w.finished() && serving && !finished.contains(&app) {
                         finished.push(app);
                     }
                 }
             }
         }
-        let any = !finished.is_empty();
         for app in finished {
-            self.teardown(app);
+            self.teardown_containers(app);
             let now = self.backend.now();
             let _ = self.store.transition(app, AppState::Finished, now);
-        }
-        if any {
-            self.schedule();
+            let rid = self.reqs[&app];
+            self.depart(rid, now);
         }
     }
 
-    /// Aggregate demand of one component class.
-    fn demand(desc: &AppDescription, class: ComponentClass) -> Resources {
-        let mut d = Resources::ZERO;
-        for c in desc.components.iter().filter(|c| c.class == class) {
-            d.add(&c.res().scaled(c.count as f64));
+    /// One [`SchedEvent::Tick`] pass: dynamic policies resort their
+    /// lines, admissions are retried, and under-fulfilled elastic grants
+    /// are reconciled. Never called implicitly — scheduling is
+    /// event-driven (submissions + departures), exactly like the
+    /// simulator.
+    pub fn schedule(&mut self) {
+        self.view.now = self.backend.now();
+        self.core.on_event(SchedEvent::Tick, &mut self.view);
+        self.apply_decisions();
+        self.sample_alloc();
+    }
+
+    // -----------------------------------------------------------------------
+    // Executor: apply the core's decisions to physical containers
+    // -----------------------------------------------------------------------
+
+    /// Mark `rid` departed in the view, run the core's departure event,
+    /// and apply the resulting decisions.
+    fn depart(&mut self, rid: ReqId, now: f64) {
+        self.depart_inline(rid, now);
+        self.apply_decisions();
+        self.sample_alloc();
+    }
+
+    /// Drain and fulfil the decision stream, then reconcile every
+    /// serving app's elastic containers against the view's grants —
+    /// the reconcile runs even on a decision-free pass, so a Tick (or
+    /// any later event) heals under-fulfilment left by an earlier
+    /// physical placement failure. Loops to a fixpoint: a failed
+    /// admission departs the application, which makes the core
+    /// rebalance and may emit further decisions.
+    fn apply_decisions(&mut self) {
+        loop {
+            let decisions = self.view.drain_decisions();
+            // Capacity-freeing decisions first (see module docs).
+            for d in &decisions {
+                match *d {
+                    Decision::Reclaim { id, .. } => self.reconcile_app_elastic(id, false),
+                    Decision::Preempt { id } => self.preempt_app(id),
+                    _ => {}
+                }
+            }
+            // Admissions, in decision order. Skip requests no longer
+            // running (admitted and then preempted/departed within the
+            // same scheduling action).
+            let mut failed: Vec<ReqId> = Vec::new();
+            for d in &decisions {
+                if let Decision::Admit { id, ref placement } = *d {
+                    if self.view.state(id).phase != Phase::Running {
+                        continue;
+                    }
+                    if !self.start_cores(id, placement) {
+                        failed.push(id);
+                    }
+                }
+            }
+            for rid in failed {
+                self.fail_app(rid);
+            }
+            if !self.view.decisions.is_empty() {
+                // A failure-driven departure made the core rebalance:
+                // apply those decisions (above all, their Admits) before
+                // growing anyone's elastic, so cores always start before
+                // the same app's elastic containers.
+                continue;
+            }
+            // Fulfil grants: reconcile every serving app's elastic
+            // containers against the view (covers SetGrant decisions and
+            // self-heals any earlier under-fulfilment). Emits no
+            // decisions, so the loop ends here.
+            let serving: Vec<ReqId> = self.core.serving().to_vec();
+            for rid in serving {
+                self.reconcile_app_elastic(rid, true);
+            }
+            return;
         }
-        d
     }
 
-    fn full_demand(desc: &AppDescription) -> Resources {
-        let mut d = Self::demand(desc, ComponentClass::Core);
-        d.add(&Self::demand(desc, ComponentClass::Elastic));
-        d
+    /// Start `rid`'s core containers on the nodes of its virtual
+    /// placement (first-fit fallback on drift). All-or-nothing: on
+    /// failure every started container is rolled back and `false` is
+    /// returned.
+    fn start_cores(&mut self, rid: ReqId, placement: &Placement) -> bool {
+        let app = self.apps[rid as usize];
+        // Idempotency per request (the decision-stream contract): a
+        // duplicate Admit in one batch must not start a second set of
+        // cores.
+        if self
+            .core_ctrs
+            .get(&app)
+            .map(|v| v.iter().any(|&cid| self.container_running(cid)))
+            .unwrap_or(false)
+        {
+            return true;
+        }
+        let desc = self.store.get(app).unwrap().desc.clone();
+        let now = self.backend.now();
+        let t0 = Instant::now();
+        // One hint slot per virtual core component, in placement order.
+        let mut hints: Vec<NodeId> = Vec::new();
+        for &(m, k) in &placement.by_machine {
+            for _ in 0..k {
+                hints.push(m as NodeId);
+            }
+        }
+        self.work
+            .entry(app)
+            .or_insert_with(|| SharedWork::new(desc.work, desc.work_steps));
+        let _ = self.store.transition(app, AppState::Starting, now);
+        let mut started: Vec<ContainerId> = Vec::new();
+        let mut slot = 0usize;
+        let mut ok = true;
+        'groups: for comp in desc.components.iter() {
+            if comp.class != crate::core::ComponentClass::Core {
+                continue;
+            }
+            for _ in 0..comp.count {
+                let hint = hints.get(slot).copied();
+                slot += 1;
+                match self.start_one(app, comp, Role::Core, hint) {
+                    Ok(cid) => started.push(cid),
+                    Err(_) => {
+                        ok = false;
+                        break 'groups;
+                    }
+                }
+            }
+        }
+        if ok {
+            // Per-application log volume (§5: CEPH sinks).
+            let _ = self.volumes.create(app, 256);
+            let _ = self
+                .volumes
+                .append(app, "zoe-master", &format!("app {app} started"));
+            let per_container = t0.elapsed().as_secs_f64() / started.len().max(1) as f64;
+            for _ in 0..started.len() {
+                self.placement_latency.push(per_container);
+            }
+            self.core_ctrs.entry(app).or_default().extend(&started);
+            self.admitted.push(app);
+            let _ = self.store.transition(app, AppState::Running, now);
+            true
+        } else {
+            // Roll back the partial placement.
+            for cid in started {
+                let _ = self.backend.kill_container(cid);
+                self.discovery.deregister_container(cid);
+            }
+            false
+        }
     }
 
-    /// Kill all containers of `app` and drop its scheduler state.
-    fn teardown(&mut self, app: AppId) {
+    /// A core admission the back-end could not physically place (can
+    /// only happen when physical fragmentation drifted beyond what the
+    /// reclaim fallback could free): fail the application and tell the
+    /// core it departed, so the virtual assignment re-converges with
+    /// reality.
+    fn fail_app(&mut self, rid: ReqId) {
+        let app = self.apps[rid as usize];
+        log::warn!("app {app}: cores unplaceable despite virtual admission; failing it");
+        self.teardown_containers(app);
+        let now = self.backend.now();
+        let _ = self.store.transition(app, AppState::Failed, now);
+        self.depart_inline(rid, now);
+    }
+
+    /// The departure dance without the outer `apply_decisions` (also
+    /// used from inside it; that caller's drain loop picks the new
+    /// decisions up).
+    fn depart_inline(&mut self, rid: ReqId, now: f64) {
+        self.view.now = now;
+        self.view.note_departed(rid);
+        self.core.on_event(SchedEvent::Departure(rid), &mut self.view);
+    }
+
+    /// Apply a wholesale preemption: kill every container, keep the work
+    /// ledger (progress is preserved), and re-queue the application.
+    fn preempt_app(&mut self, rid: ReqId) {
+        let app = self.apps[rid as usize];
         let _ = self
             .volumes
-            .append(app, "zoe-master", &format!("app {app} torn down"));
-        self.volumes.seal(app); // logs retained read-only (§5)
-        self.serving.retain(|&x| x != app);
+            .append(app, "zoe-master", &format!("app {app} preempted"));
         for cid in self.backend.running_of(app) {
             let _ = self.backend.kill_container(cid);
             self.discovery.deregister_container(cid);
         }
-        self.elastic.remove(&app);
-        self.core.remove(&app);
+        self.core_ctrs.remove(&app);
+        self.elastic_ctrs.remove(&app);
+        let now = self.backend.now();
+        let _ = self.store.transition(app, AppState::Queued, now);
     }
 
-    // -----------------------------------------------------------------------
-    // Scheduling (the §3 algorithm over physical containers)
-    // -----------------------------------------------------------------------
-
-    /// One scheduling pass: admissions + elastic cascade.
-    pub fn schedule(&mut self) {
-        match self.generation {
-            ZoeGeneration::Rigid => self.schedule_rigid(),
-            ZoeGeneration::Flexible => self.schedule_flexible(),
+    /// Reconcile one app's running elastic containers against the
+    /// view's grant: component groups fill in declaration order; kills
+    /// take the newest container of the last group first. With
+    /// `grow = false` only kills are applied (capacity-freeing phase).
+    fn reconcile_app_elastic(&mut self, rid: ReqId, grow: bool) {
+        let app = self.apps[rid as usize];
+        let (phase, g) = {
+            let st = self.view.state(rid);
+            (st.phase, st.grant)
+        };
+        // A request that departed within the same action targets zero
+        // (its containers are already torn down; the kill pass no-ops).
+        let grant = if phase == Phase::Running { g } else { 0 };
+        let desc = self.store.get(app).unwrap().desc.clone();
+        let groups: Vec<&ComponentDef> = desc.elastic_components().collect();
+        if groups.is_empty() {
+            return;
         }
-        let used = self.backend.used();
-        let total = self.backend.total();
-        self.alloc_samples.push((
-            self.backend.now(),
-            used.cpu / total.cpu,
-            used.ram_mb / total.ram_mb,
-        ));
-    }
-
-    fn schedule_rigid(&mut self) {
-        // Head-of-line: start while the FULL demand fits.
-        while let Some(&head) = self.pending.first() {
-            let desc = self.store.get(head).unwrap().desc.clone();
-            let free = {
-                let t = self.backend.total();
-                let mut f = t;
-                f.sub(&self.backend.used());
-                f
-            };
-            if !Self::full_demand(&desc).fits_in(&free) {
-                break;
-            }
-            match self.start_app(head, &desc, true) {
-                Ok(()) => {
-                    self.pending.remove(0);
-                }
-                Err(_) => break, // fragmentation: wait for departures
+        // Per-group targets: groups fill in declaration order.
+        let mut remaining = grant;
+        let targets: Vec<u32> = groups
+            .iter()
+            .map(|c| {
+                let t = c.count.min(remaining);
+                remaining -= t;
+                t
+            })
+            .collect();
+        // Drop dead entries, then count what is running per group.
+        let mut list = self.elastic_ctrs.remove(&app).unwrap_or_default();
+        list.retain(|&(cid, _)| self.container_running(cid));
+        let mut have: Vec<u32> = vec![0; groups.len()];
+        for &(_, gi) in &list {
+            have[gi] += 1;
+        }
+        // Kills: last group first, newest container first.
+        for gi in (0..groups.len()).rev() {
+            while have[gi] > targets[gi] {
+                let Some(pos) = list.iter().rposition(|&(_, g2)| g2 == gi) else {
+                    break;
+                };
+                let (cid, _) = list.remove(pos);
+                let _ = self.backend.kill_container(cid);
+                self.discovery.deregister_container(cid);
+                have[gi] -= 1;
             }
         }
-    }
-
-    fn schedule_flexible(&mut self) {
-        // Phase A: admission (Algorithm 1 lines 17–22, physical form).
-        loop {
-            let Some(&head) = self.pending.first() else { break };
-            // Saturation check: Σ full demands of serving < total.
-            let total = self.backend.total();
-            let mut demand = Resources::ZERO;
-            for &app in &self.serving {
-                demand.add(&Self::full_demand(&self.store.get(app).unwrap().desc));
-            }
-            if demand.cpu >= total.cpu - 1e-9 && demand.ram_mb >= total.ram_mb - 1e-9 {
-                break;
-            }
-            // Cores-fit check with elastic reclaim: free + reclaimable.
-            let desc = self.store.get(head).unwrap().desc.clone();
-            let core_demand = Self::demand(&desc, ComponentClass::Core);
-            let mut avail = total;
-            avail.sub(&self.backend.used());
-            let mut reclaimable = Resources::ZERO;
-            for cids in self.elastic.values() {
-                for &cid in cids {
-                    if let Some(c) = self.backend.inspect(cid) {
-                        reclaimable.add(&c.spec.res);
-                    }
-                }
-            }
-            let mut reach = avail;
-            reach.add(&reclaimable);
-            if !core_demand.fits_in(&reach) {
-                break;
-            }
-            // Reclaim-and-place loop: try to start the cores; on placement
-            // failure, kill one elastic container (reverse cascade order)
-            // and retry.
-            let started = loop {
-                match self.start_app(head, &desc, false) {
-                    Ok(()) => break true,
-                    Err(_) => {
-                        if !self.reclaim_one_elastic() {
-                            break false;
+        // Starts: first group first (under-fulfilment is tolerated; the
+        // next pass retries).
+        if grow {
+            'outer: for (gi, &comp) in groups.iter().enumerate() {
+                while have[gi] < targets[gi] {
+                    match self.start_one(app, comp, Role::Elastic, None) {
+                        Ok(cid) => {
+                            list.push((cid, gi));
+                            have[gi] += 1;
                         }
-                    }
-                }
-            };
-            if started {
-                self.pending.remove(0);
-            } else {
-                break;
-            }
-        }
-        // Phase B: elastic cascade (lines 23–30): grow grants in serving
-        // order while capacity allows.
-        let serving = self.serving.clone();
-        for app in serving {
-            let desc = self.store.get(app).unwrap().desc.clone();
-            for comp in desc.components.iter().filter(|c| c.class == ComponentClass::Elastic) {
-                let name = format!("app{app}-{}", comp.name);
-                let have = self
-                    .elastic
-                    .get(&app)
-                    .map(|v| {
-                        v.iter()
-                            .filter(|&&cid| {
-                                self.backend
-                                    .inspect(cid)
-                                    .map(|c| {
-                                        c.state == crate::backend::ContainerState::Running
-                                            && c.spec.name == name
-                                    })
-                                    .unwrap_or(false)
-                            })
-                            .count() as u32
-                    })
-                    .unwrap_or(0);
-                for _ in have..comp.count {
-                    if self.start_container(app, &desc, comp, Role::Elastic).is_err() {
-                        break;
+                        Err(_) => break 'outer,
                     }
                 }
             }
         }
+        self.elastic_ctrs.insert(app, list);
     }
 
-    /// Kill the most recently granted elastic container of the app latest
-    /// in cascade order. Returns false if nothing is reclaimable.
-    fn reclaim_one_elastic(&mut self) -> bool {
-        let serving: Vec<AppId> = self.serving.iter().rev().copied().collect();
-        for app in serving {
-            let Some(v) = self.elastic.get_mut(&app) else { continue };
-            while let Some(cid) = v.pop() {
-                let running = self
-                    .backend
-                    .inspect(cid)
-                    .map(|c| c.state == crate::backend::ContainerState::Running)
-                    .unwrap_or(false);
-                if running {
-                    let _ = self.backend.kill_container(cid);
-                    self.discovery.deregister_container(cid);
-                    return true;
-                }
-                // Skip stale (exited) entries.
-            }
-        }
-        false
-    }
-
-    /// Place + start the application's components: cores always; elastic
-    /// too when `full` (the rigid generation).
-    fn start_app(&mut self, app: AppId, desc: &AppDescription, full: bool) -> Result<()> {
-        let t0 = Instant::now();
-        // All-or-nothing for cores: remember what we started for rollback.
-        let mut started: Vec<ContainerId> = Vec::new();
-        let work = self
-            .work
-            .entry(app)
-            .or_insert_with(|| SharedWork::new(desc.work, desc.work_steps))
-            .clone();
-        let result = (|| -> Result<()> {
-            for comp in &desc.components {
-                if comp.class == ComponentClass::Elastic && !full {
-                    continue;
-                }
-                for _ in 0..comp.count {
-                    let node = self
-                        .backend
-                        .find_node(&comp.res())
-                        .ok_or_else(|| anyhow!("no node fits component '{}'", comp.name))?;
-                    let cid = self.backend.run_container(
-                        ContainerSpec {
-                            name: format!("app{app}-{}", comp.name),
-                            image: comp.image.clone(),
-                            app,
-                            role: match comp.class {
-                                ComponentClass::Core => Role::Core,
-                                ComponentClass::Elastic => Role::Elastic,
-                            },
-                            res: comp.res(),
-                            work: if comp.worker { Some(Arc::clone(&work)) } else { None },
-                        },
-                        node,
-                    )?;
-                    started.push(cid);
-                    let host = self.backend.nodes()[node as usize].hostname.clone();
-                    self.discovery.register(
-                        &format!("app-{app}.{}", comp.name),
-                        Endpoint {
-                            app,
-                            container: cid,
-                            host,
-                            port: 7077,
-                        },
-                    );
-                    match comp.class {
-                        ComponentClass::Core => self.core.entry(app).or_default().push(cid),
-                        ComponentClass::Elastic => self.elastic.entry(app).or_default().push(cid),
-                    }
-                }
-            }
-            Ok(())
-        })();
-        match result {
-            Ok(()) => {
-                // Per-application log volume (§5: CEPH sinks).
-                let _ = self.volumes.create(app, 256);
-                let _ = self
-                    .volumes
-                    .append(app, "zoe-master", &format!("app {app} started"));
-                let per_container =
-                    t0.elapsed().as_secs_f64() / started.len().max(1) as f64;
-                for _ in 0..started.len() {
-                    self.placement_latency.push(per_container);
-                }
-                self.serving.push(app);
-                let now = self.backend.now();
-                let _ = self.store.transition(app, AppState::Starting, now);
-                let _ = self.store.transition(app, AppState::Running, now);
-                if let Some(rec) = self.store.get_mut(app) {
-                    rec.containers.extend(started);
-                }
-                Ok(())
-            }
-            Err(e) => {
-                // Roll back partial placement.
-                for cid in started {
-                    let _ = self.backend.kill_container(cid);
-                    self.discovery.deregister_container(cid);
-                }
-                if let Some(v) = self.core.get_mut(&app) {
-                    v.clear();
-                }
-                if let Some(v) = self.elastic.get_mut(&app) {
-                    v.clear();
-                }
-                Err(e)
-            }
-        }
-    }
-
-    /// Start one additional container of `comp` for a running app.
-    fn start_container(
+    /// Place and start one container of `comp` for `app`, preferring the
+    /// hinted node (the virtual placement) and falling back to first-fit.
+    /// Core components may additionally reclaim physical elastic
+    /// containers newest-first — a pure *fulfilment* fallback for the
+    /// drift between physical and virtual fragmentation, not a
+    /// scheduling choice (the core already decided the admission).
+    fn start_one(
         &mut self,
         app: AppId,
-        _desc: &AppDescription,
-        comp: &super::app::ComponentDef,
+        comp: &ComponentDef,
         role: Role,
+        hint: Option<NodeId>,
     ) -> Result<ContainerId> {
+        let res = comp.res();
+        let hinted = hint.filter(|&n| res.fits_in(&self.backend.nodes()[n as usize].free));
+        let node = match hinted.or_else(|| self.backend.find_node(&res)) {
+            Some(n) => n,
+            None if role == Role::Core => loop {
+                if !self.reclaim_any_elastic(app) {
+                    return Err(anyhow!("no node fits component '{}'", comp.name));
+                }
+                if let Some(n) = self.backend.find_node(&res) {
+                    break n;
+                }
+            },
+            None => return Err(anyhow!("no capacity for '{}'", comp.name)),
+        };
         let work = self.work.get(&app).cloned();
-        let node = self
-            .backend
-            .find_node(&comp.res())
-            .ok_or_else(|| anyhow!("no capacity for '{}'", comp.name))?;
         let t0 = Instant::now();
         let cid = self.backend.run_container(
             ContainerSpec {
@@ -459,12 +572,14 @@ impl ZoeMaster {
                 image: comp.image.clone(),
                 app,
                 role,
-                res: comp.res(),
+                res,
                 work: if comp.worker { work } else { None },
             },
             node,
         )?;
-        self.placement_latency.push(t0.elapsed().as_secs_f64());
+        if role == Role::Elastic {
+            self.placement_latency.push(t0.elapsed().as_secs_f64());
+        }
         let host = self.backend.nodes()[node as usize].hostname.clone();
         self.discovery.register(
             &format!("app-{app}.{}", comp.name),
@@ -475,13 +590,64 @@ impl ZoeMaster {
                 port: 7077,
             },
         );
-        match role {
-            Role::Core => self.core.entry(app).or_default().push(cid),
-            Role::Elastic => self.elastic.entry(app).or_default().push(cid),
-        }
         if let Some(rec) = self.store.get_mut(app) {
             rec.containers.push(cid);
         }
         Ok(cid)
+    }
+
+    /// Kill the newest running elastic container of the latest-admitted
+    /// serving application other than `for_app`; false when nothing is
+    /// reclaimable.
+    fn reclaim_any_elastic(&mut self, for_app: AppId) -> bool {
+        let serving: Vec<ReqId> = self.core.serving().to_vec();
+        for &rid in serving.iter().rev() {
+            let app = self.apps[rid as usize];
+            if app == for_app {
+                continue;
+            }
+            let Some(list) = self.elastic_ctrs.get_mut(&app) else {
+                continue;
+            };
+            while let Some((cid, _)) = list.pop() {
+                if self
+                    .backend
+                    .inspect(cid)
+                    .map(|c| c.state == ContainerState::Running)
+                    .unwrap_or(false)
+                {
+                    let _ = self.backend.kill_container(cid);
+                    self.discovery.deregister_container(cid);
+                    return true;
+                }
+                // Skip stale (exited) entries.
+            }
+        }
+        false
+    }
+
+    /// Kill all containers of `app` and drop its executor state (its
+    /// virtual state departs separately through the core).
+    fn teardown_containers(&mut self, app: AppId) {
+        let _ = self
+            .volumes
+            .append(app, "zoe-master", &format!("app {app} torn down"));
+        self.volumes.seal(app); // logs retained read-only (§5)
+        for cid in self.backend.running_of(app) {
+            let _ = self.backend.kill_container(cid);
+            self.discovery.deregister_container(cid);
+        }
+        self.core_ctrs.remove(&app);
+        self.elastic_ctrs.remove(&app);
+    }
+
+    /// Record the current allocation fractions into the time-weighted
+    /// sketches.
+    fn sample_alloc(&mut self) {
+        let now = self.backend.now();
+        let used = self.backend.used();
+        let total = self.backend.total();
+        self.cpu_alloc.update(now, used.cpu / total.cpu);
+        self.ram_alloc.update(now, used.ram_mb / total.ram_mb);
     }
 }

@@ -1,6 +1,7 @@
 //! The Zoe system (§5): application configuration language, state store,
-//! master (scheduler + back-end reconciliation), client API, and the §6
-//! application templates.
+//! master (a container-level executor of the shared
+//! [`crate::sched::SchedulerCore`]), client API, and the §6 application
+//! templates.
 
 mod api;
 mod app;

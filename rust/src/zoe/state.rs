@@ -59,7 +59,9 @@ impl AppState {
         })
     }
 
-    /// Legal transitions of the state machine.
+    /// Legal transitions of the state machine. `Running → Queued` is the
+    /// wholesale-preemption path (a [`crate::sched::Decision::Preempt`]
+    /// from a custom scheduler core re-queues the application).
     pub fn can_transition(self, to: AppState) -> bool {
         use AppState::*;
         matches!(
@@ -68,6 +70,7 @@ impl AppState {
                 | (Queued, Starting)
                 | (Starting, Running)
                 | (Running, Finished)
+                | (Running, Queued)
                 | (Queued, Killed)
                 | (Starting, Killed)
                 | (Running, Killed)

@@ -1,0 +1,464 @@
+//! One scheduler core, two executors: integration tests that the
+//! decision stream drives the simulator's `ClusterView` and the Zoe
+//! master's containers to the *same* schedule — admissions in the same
+//! order with the same grants, for all four generations — plus the
+//! external-core registry (a custom core runs through `SchedSpec` in
+//! both the engine and the master, including `Decision::Preempt`).
+//!
+//! None of these tests need the PJRT runtime: scheduling and container
+//! placement are exercised without driving any work steps.
+
+use std::sync::{Arc, Mutex};
+
+use zoe::backend::SwarmBackend;
+use zoe::core::{unit_request, ComponentClass, ReqId, Request, Resources};
+use zoe::policy::Policy;
+use zoe::pool::{Cluster, Placement};
+use zoe::runtime::WorkKind;
+use zoe::sched::{
+    register_core, ClusterView, Decision, Phase, SchedEvent, SchedKind, SchedSpec, SchedulerCore,
+};
+use zoe::sim::simulate;
+use zoe::zoe::{AppDescription, AppState, ComponentDef, ZoeMaster};
+
+// ---------------------------------------------------------------------------
+// Shared scenario
+// ---------------------------------------------------------------------------
+
+/// A uniform-component application: envelope == actual per-component
+/// demand, so the virtual and physical views agree exactly.
+fn uniform_app(name: &str, n_core: u32, n_elastic: u32) -> AppDescription {
+    let comp = |cname: &str, class, count| ComponentDef {
+        name: cname.to_string(),
+        class,
+        count,
+        cpu: 1.0,
+        ram_mb: 1024.0,
+        image: "zoe/test".to_string(),
+        worker: true,
+    };
+    let mut components = vec![comp("driver", ComponentClass::Core, n_core)];
+    if n_elastic > 0 {
+        components.push(comp("worker", ComponentClass::Elastic, n_elastic));
+    }
+    AppDescription {
+        name: name.to_string(),
+        command: "ridge --dataset test".to_string(),
+        work: WorkKind::Ridge,
+        work_steps: 100,
+        priority: 0.0,
+        interactive: false,
+        components,
+        env: vec![],
+    }
+}
+
+/// The shared small scenario: 2 nodes × 5 CPU, six applications that
+/// force queueing, cascading and (on departures) reclaim.
+fn scenario() -> (Vec<AppDescription>, Vec<f64>) {
+    let descs = vec![
+        uniform_app("a", 2, 6), // fills the cluster with elastic
+        uniform_app("b", 1, 2),
+        uniform_app("c", 3, 0), // rigid
+        uniform_app("d", 1, 4),
+        uniform_app("e", 2, 2),
+        uniform_app("f", 1, 0),
+    ];
+    let arrivals = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+    (descs, arrivals)
+}
+
+fn test_backend() -> SwarmBackend {
+    let mut b = SwarmBackend::new(2, Resources::new(5.0, 5.0 * 1024.0));
+    b.set_virtual_clock();
+    b
+}
+
+fn mirror_cluster() -> Cluster {
+    Cluster::uniform(2, Resources::new(5.0, 5.0 * 1024.0))
+}
+
+/// Drive a raw core over a `ClusterView` (the simulator's executor role)
+/// through the scenario's arrivals, then departures in admission order;
+/// record the admission sequence and, after every event, all grants.
+struct SimTrace {
+    admissions: Vec<ReqId>,
+    grants_after_event: Vec<Vec<u32>>,
+    departures: Vec<ReqId>,
+}
+
+fn run_sim_side(kind: SchedKind, descs: &[AppDescription], arrivals: &[f64]) -> SimTrace {
+    let reqs: Vec<Request> = descs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| d.scheduler_request(i as ReqId, arrivals[i]))
+        .collect();
+    let mut view = ClusterView::new(reqs, mirror_cluster(), Policy::FIFO);
+    let mut core = SchedSpec::builtin(kind).build();
+    let mut trace = SimTrace {
+        admissions: Vec::new(),
+        grants_after_event: Vec::new(),
+        departures: Vec::new(),
+    };
+    fn record(ds: &[Decision], view: &ClusterView, trace: &mut SimTrace) {
+        for d in ds {
+            if let Decision::Admit { id, .. } = d {
+                trace.admissions.push(*id);
+            }
+        }
+        trace
+            .grants_after_event
+            .push(view.states.iter().map(|s| s.grant).collect());
+    }
+    for (i, &t) in arrivals.iter().enumerate() {
+        let id = i as ReqId;
+        view.now = t;
+        view.state_mut(id).phase = Phase::Pending;
+        let ds = core.decide(SchedEvent::Arrival(id), &mut view);
+        record(&ds, &view, &mut trace);
+    }
+    // Departures: repeatedly kill the earliest-admitted request still in
+    // the system (running or pending), until none remain.
+    let mut t = 100.0;
+    loop {
+        let victim = trace
+            .admissions
+            .iter()
+            .copied()
+            .chain(0..descs.len() as ReqId)
+            .find(|&id| view.state(id).phase != Phase::Done);
+        let Some(id) = victim else { break };
+        view.now = t;
+        view.note_departed(id);
+        let ds = core.decide(SchedEvent::Departure(id), &mut view);
+        record(&ds, &view, &mut trace);
+        trace.departures.push(id);
+        t += 1.0;
+    }
+    trace
+}
+
+/// The container-level executor on the same scenario: same submissions,
+/// then kills in the sim side's departure order. Asserts agreement after
+/// every event.
+#[test]
+fn master_agrees_with_sim_core_all_four_kinds() {
+    let (descs, arrivals) = scenario();
+    for kind in SchedKind::ALL {
+        let sim = run_sim_side(kind, &descs, &arrivals);
+        let mut master = ZoeMaster::new(test_backend(), kind);
+        let mut event = 0usize;
+        for (i, &t) in arrivals.iter().enumerate() {
+            let dt = t - master.backend.now();
+            master.backend.advance(dt.max(0.0));
+            let app = master.submit(descs[i].clone()).unwrap();
+            assert_eq!(app as usize, i, "{kind:?}: store ids track submission order");
+            check_agreement(&master, &sim, event, &descs, kind);
+            event += 1;
+        }
+        let mut t = 100.0;
+        for &victim in &sim.departures {
+            let dt = t - master.backend.now();
+            master.backend.advance(dt.max(0.0));
+            master.kill(victim).unwrap();
+            check_agreement(&master, &sim, event, &descs, kind);
+            event += 1;
+            t += 1.0;
+        }
+        // Everything left the system; the cluster is empty again.
+        assert_eq!(master.serving_len(), 0, "{kind:?}");
+        assert_eq!(master.pending_len(), 0, "{kind:?}");
+        assert!(master.backend.used().cpu.abs() < 1e-9, "{kind:?}");
+        // The decision streams admitted the same applications in the
+        // same order.
+        let master_order: Vec<ReqId> = master.admitted_order().to_vec();
+        assert_eq!(master_order, sim.admissions, "{kind:?}: admission order");
+    }
+}
+
+/// After event `event`: every application's master-side grant equals the
+/// sim side's, and the physical containers fulfil it exactly.
+fn check_agreement(
+    master: &ZoeMaster,
+    sim: &SimTrace,
+    event: usize,
+    descs: &[AppDescription],
+    kind: SchedKind,
+) {
+    let grants = &sim.grants_after_event[event];
+    for (i, desc) in descs.iter().enumerate() {
+        let app = i as u32;
+        let Some(g) = master.grant_of(app) else { continue };
+        assert_eq!(
+            g, grants[i],
+            "{kind:?} event {event}: grant of app {app} diverged"
+        );
+        // Physical fulfilment: running elastic containers == grant.
+        assert_eq!(
+            master.running_elastic(app) as u32,
+            g,
+            "{kind:?} event {event}: app {app} containers vs grant {g}"
+        );
+        // A running app has all cores up.
+        if master
+            .store
+            .get(app)
+            .map(|r| r.state == AppState::Running)
+            .unwrap_or(false)
+        {
+            let cores: usize = master
+                .backend
+                .running_of(app)
+                .iter()
+                .filter(|&&cid| {
+                    master.backend.inspect(cid).map(|c| c.spec.role == zoe::backend::Role::Core)
+                        == Some(true)
+                })
+                .count();
+            assert_eq!(cores as u32, desc.n_core(), "{kind:?} event {event}: app {app} cores");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// External cores: the registry end-to-end, including Decision::Preempt
+// ---------------------------------------------------------------------------
+
+/// A deliberately simple custom core: serves exactly one request at a
+/// time with its full demand, and a new arrival *preempts* whoever is
+/// serving (LIFO-preemptive). Exercises `Decision::Preempt` in both
+/// executors; progress is preserved across preemptions by the lazy
+/// accrual state.
+struct LifoPreemptCore {
+    stack: Vec<ReqId>,
+    /// 0 or 1 elements (one request served at a time).
+    serving: Vec<ReqId>,
+    cores: Vec<Placement>,
+    elastic: Vec<Placement>,
+}
+
+impl LifoPreemptCore {
+    fn new() -> Self {
+        LifoPreemptCore {
+            stack: Vec::new(),
+            serving: Vec::new(),
+            cores: Vec::new(),
+            elastic: Vec::new(),
+        }
+    }
+
+    fn ensure_capacity(&mut self, v: &ClusterView) {
+        let n = v.states.len();
+        if self.cores.len() < n {
+            self.cores.resize_with(n, Placement::default);
+            self.elastic.resize_with(n, Placement::default);
+        }
+    }
+
+    fn try_admit(&mut self, id: ReqId, v: &mut ClusterView) -> bool {
+        let (cres, cn, eres, en) = {
+            let r = &v.state(id).req;
+            (r.core_res, r.n_core, r.elastic_res, r.n_elastic)
+        };
+        if !v.cluster.place_all_into(&cres, cn, &mut self.cores[id as usize]) {
+            return false;
+        }
+        if en > 0 && !v.cluster.place_all_into(&eres, en, &mut self.elastic[id as usize]) {
+            v.cluster.release_and_clear(&mut self.cores[id as usize]);
+            return false;
+        }
+        let key = v.pending_key(id);
+        let now = v.now;
+        {
+            let st = v.state_mut(id);
+            st.phase = Phase::Running;
+            st.admit_time = now;
+            st.frozen_key = key;
+        }
+        v.set_grant(id, en);
+        let placement = self.cores[id as usize].clone();
+        v.note_admitted(id, placement);
+        self.serving.push(id);
+        true
+    }
+
+    fn preempt_current(&mut self, v: &mut ClusterView) {
+        if let Some(cur) = self.serving.pop() {
+            // Grant to zero *silently* (the Preempt decision subsumes the
+            // reclaim), then release the virtual placements.
+            {
+                let st = v.state_mut(cur);
+                let now = v.now;
+                st.accrue(now);
+            }
+            v.cluster.release_and_clear(&mut self.cores[cur as usize]);
+            v.cluster.release_and_clear(&mut self.elastic[cur as usize]);
+            v.note_preempted(cur);
+            self.stack.push(cur);
+        }
+    }
+
+    fn admit_next(&mut self, v: &mut ClusterView) {
+        while let Some(id) = self.stack.pop() {
+            if v.state(id).phase != Phase::Pending {
+                continue; // cancelled while stacked
+            }
+            if self.try_admit(id, v) {
+                return;
+            }
+            self.stack.push(id);
+            return;
+        }
+    }
+}
+
+impl SchedulerCore for LifoPreemptCore {
+    fn on_event(&mut self, ev: SchedEvent, view: &mut ClusterView) {
+        self.ensure_capacity(view);
+        match ev {
+            SchedEvent::Arrival(id) => {
+                self.preempt_current(view);
+                if !self.try_admit(id, view) {
+                    self.stack.push(id);
+                    self.admit_next(view);
+                }
+            }
+            SchedEvent::Departure(id) => {
+                self.serving.retain(|&x| x != id);
+                self.stack.retain(|&x| x != id);
+                view.cluster.release_and_clear(&mut self.cores[id as usize]);
+                view.cluster.release_and_clear(&mut self.elastic[id as usize]);
+                if self.serving.is_empty() {
+                    self.admit_next(view);
+                }
+            }
+            SchedEvent::Tick => {
+                if self.serving.is_empty() {
+                    self.admit_next(view);
+                }
+            }
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.stack.len()
+    }
+
+    fn running(&self) -> usize {
+        self.serving.len()
+    }
+
+    fn serving(&self) -> &[ReqId] {
+        &self.serving
+    }
+
+    fn name(&self) -> &'static str {
+        "lifo-preempt"
+    }
+}
+
+/// Register once for the whole test binary (the registry is global).
+fn lifo_spec() -> SchedSpec {
+    static SPEC: Mutex<Option<SchedSpec>> = Mutex::new(None);
+    let mut guard = SPEC.lock().unwrap();
+    if guard.is_none() {
+        *guard = Some(
+            register_core(
+                "lifo-preempt",
+                Arc::new(|| Box::new(LifoPreemptCore::new()) as Box<dyn SchedulerCore>),
+            )
+            .expect("first registration"),
+        );
+    }
+    guard.clone().unwrap()
+}
+
+/// The engine runs a registered external core end-to-end, honoring
+/// `Decision::Preempt` (stale departure predictions are retired; work
+/// survives preemption).
+#[test]
+fn engine_runs_registered_preempting_core() {
+    let spec = lifo_spec();
+    assert_eq!("lifo-preempt".parse::<SchedSpec>().unwrap(), spec);
+    // Three staggered arrivals: each preempts its predecessor, then they
+    // finish LIFO. r2: 2→7; r1 (1s done at t=2): 7→11; r0 (1s done):
+    // 11→15. Turnarounds 5, 10, 15.
+    let reqs = vec![
+        unit_request(0, 0.0, 5.0, 1, 0),
+        unit_request(1, 1.0, 5.0, 1, 0),
+        unit_request(2, 2.0, 5.0, 1, 0),
+    ];
+    let res = simulate(reqs, Cluster::units(4), Policy::FIFO, spec);
+    assert_eq!(res.completed, 3);
+    assert_eq!(res.unfinished, 0);
+    let mut tas: Vec<f64> = res.turnaround.values().to_vec();
+    tas.sort_by(f64::total_cmp);
+    for (got, want) in tas.iter().zip([5.0, 10.0, 15.0]) {
+        assert!((got - want).abs() < 1e-6, "turnarounds {tas:?}");
+    }
+}
+
+/// The master runs the same registered core: a second submission
+/// preempts the first application (all containers killed, state back to
+/// Queued), and killing the preemptor re-admits the preempted one.
+#[test]
+fn master_runs_registered_preempting_core() {
+    let spec = lifo_spec();
+    let mut master = ZoeMaster::new(test_backend(), spec);
+    let a = master.submit(uniform_app("a", 2, 3)).unwrap();
+    assert_eq!(master.store.get(a).unwrap().state, AppState::Running);
+    assert_eq!(master.grant_of(a), Some(3));
+    assert_eq!(master.running_elastic(a), 3);
+
+    master.backend.advance(1.0);
+    let b = master.submit(uniform_app("b", 1, 1)).unwrap();
+    // A was preempted wholesale: re-queued, no containers left.
+    assert_eq!(master.store.get(a).unwrap().state, AppState::Queued);
+    assert!(master.backend.running_of(a).is_empty());
+    assert_eq!(master.store.get(b).unwrap().state, AppState::Running);
+    assert_eq!(master.running_elastic(b), 1);
+
+    master.backend.advance(1.0);
+    master.kill(b).unwrap();
+    // A is re-admitted (admission order records both admissions).
+    assert_eq!(master.store.get(a).unwrap().state, AppState::Running);
+    assert_eq!(master.running_elastic(a), 3);
+    assert_eq!(master.admitted_order(), &[a, b, a]);
+    master.backend.advance(1.0);
+    master.kill(a).unwrap();
+    assert!(master.backend.used().cpu.abs() < 1e-9);
+}
+
+/// `zoe master --policy`: the waiting line honors the configured policy
+/// (SJF admits the shorter queued app first when capacity frees up).
+#[test]
+fn master_waiting_line_honors_policy() {
+    let mut master =
+        ZoeMaster::new(test_backend(), SchedKind::Flexible).with_policy(Policy::sjf());
+    // Hog fills the cluster's cores.
+    let mut hog = uniform_app("hog", 10, 0);
+    hog.work_steps = 1000;
+    let hog_id = master.submit(hog).unwrap();
+    assert_eq!(master.store.get(hog_id).unwrap().state, AppState::Running);
+    // Long job arrives first, short job second; both queue.
+    master.backend.advance(1.0);
+    let mut long = uniform_app("long", 4, 0);
+    long.work_steps = 400; // runtime estimate 100
+    let long_id = master.submit(long).unwrap();
+    master.backend.advance(1.0);
+    let mut short = uniform_app("short", 4, 0);
+    short.work_steps = 4; // runtime estimate 1
+    let short_id = master.submit(short).unwrap();
+    assert_eq!(master.pending_len(), 2);
+    // Hog leaves: SJF admits the short job *first* even though it
+    // arrived later (both then fit; the admission order is the tell).
+    master.backend.advance(10.0);
+    master.kill(hog_id).unwrap();
+    assert_eq!(master.store.get(short_id).unwrap().state, AppState::Running);
+    assert_eq!(master.store.get(long_id).unwrap().state, AppState::Running);
+    assert_eq!(
+        master.admitted_order(),
+        &[hog_id, short_id, long_id],
+        "SJF must admit the shorter queued app first"
+    );
+}

@@ -1,32 +1,31 @@
-//! Behavioral tests of the three schedulers, driving them directly
-//! through the `Scheduler` trait (no event loop): admission order, grant
-//! cascades, elastic-only reclaim, W-queue priority, and the malleable
-//! no-reclaim guarantee.
+//! Behavioral tests of the three scheduler cores, driving them directly
+//! through the `SchedulerCore` trait (no event loop): admission order,
+//! grant cascades, elastic-only reclaim, W-queue priority, the malleable
+//! no-reclaim guarantee, and the emitted decision streams.
 
 use zoe::core::{unit_request, ReqId, Request};
 use zoe::policy::Policy;
 use zoe::pool::Cluster;
 use zoe::sched::{
-    FlexibleScheduler, MalleableScheduler, Phase, RigidScheduler, Scheduler, World,
+    ClusterView, Decision, FlexibleScheduler, MalleableScheduler, Phase, RigidScheduler,
+    SchedEvent, SchedulerCore,
 };
 
-/// Build a world at time `now` with `reqs` all in `Future` phase.
-fn world(reqs: Vec<Request>, units: u32, policy: Policy) -> World {
-    World::new(reqs, Cluster::units(units), policy)
+/// Build a view at time `now` with `reqs` all in `Future` phase.
+fn world(reqs: Vec<Request>, units: u32, policy: Policy) -> ClusterView {
+    ClusterView::new(reqs, Cluster::units(units), policy)
 }
 
-fn arrive(sched: &mut dyn Scheduler, w: &mut World, id: ReqId, t: f64) {
+fn arrive(sched: &mut dyn SchedulerCore, w: &mut ClusterView, id: ReqId, t: f64) -> Vec<Decision> {
     w.now = t;
     w.state_mut(id).phase = Phase::Pending;
-    sched.on_arrival(id, w);
+    sched.decide(SchedEvent::Arrival(id), w)
 }
 
-fn depart(sched: &mut dyn Scheduler, w: &mut World, id: ReqId, t: f64) {
+fn depart(sched: &mut dyn SchedulerCore, w: &mut ClusterView, id: ReqId, t: f64) -> Vec<Decision> {
     w.now = t;
-    let st = w.state_mut(id);
-    st.phase = Phase::Done;
-    st.grant = 0;
-    sched.on_departure(id, w);
+    w.note_departed(id);
+    sched.decide(SchedEvent::Departure(id), w)
 }
 
 /// Fig. 1 bottom, step by step: after B departs at t=15, the flexible
@@ -56,12 +55,20 @@ fn fig1_reclaim_one_unit_from_c() {
     assert_eq!(w.state(1).grant, 3);
     assert_eq!(w.state(2).grant, 1);
 
-    depart(&mut s, &mut w, 1, 15.0); // B done
+    let ds = depart(&mut s, &mut w, 1, 15.0); // B done
     // S = {C, D}: C would take 5 elastic but is cut to 4 so D's 3 cores
     // fit — the paper's "reclaims just one unit from request C".
     assert_eq!(s.serving(), &[2, 3]);
     assert_eq!(w.state(2).grant, 4);
     assert_eq!(w.state(3).grant, 0);
+    // The decision stream says the same: D admitted (with its 3-core
+    // placement), then C's grant set to 4 in the cascade.
+    assert_eq!(ds.len(), 2, "{ds:?}");
+    match &ds[0] {
+        Decision::Admit { id: 3, placement } => assert_eq!(placement.count(), 3),
+        other => panic!("expected Admit for D, got {other:?}"),
+    }
+    assert_eq!(ds[1], Decision::SetGrant { id: 2, g: 4 });
     // Cluster is exactly full: 3+4 (C) + 3 (D).
     assert!((w.cluster.used().cpu - 10.0).abs() < 1e-9);
 }
@@ -251,11 +258,21 @@ fn preemptive_arrival_reclaims_elastic_immediately() {
     let mut s = FlexibleScheduler::new(true);
     arrive(&mut s, &mut w, 0, 0.0);
     assert_eq!(w.state(0).grant, 8);
-    arrive(&mut s, &mut w, 1, 1.0);
+    let ds = arrive(&mut s, &mut w, 1, 1.0);
     // 1 admitted by reclaiming 3 elastic units of 0.
     assert!(s.serving().contains(&1));
     assert_eq!(w.state(0).grant, 5, "elastic shrank from 8 to 5");
     assert_eq!(w.state(1).phase, Phase::Running);
+    // Decision vocabulary: the admission precedes the reclaim that
+    // physically funds it (executors apply reclaims first).
+    assert!(
+        ds.iter().any(|d| matches!(d, Decision::Admit { id: 1, .. })),
+        "{ds:?}"
+    );
+    assert!(
+        ds.contains(&Decision::Reclaim { id: 0, n: 3 }),
+        "{ds:?}"
+    );
 }
 
 /// SJF orders the waiting line by runtime: on departure, the shorter of

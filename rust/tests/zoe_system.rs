@@ -8,7 +8,8 @@ use std::sync::{Arc, Mutex};
 use zoe::backend::{SwarmBackend, WorkPool};
 use zoe::core::Resources;
 use zoe::runtime::PjrtRuntime;
-use zoe::zoe::{templates, ApiClient, ApiServer, AppState, ZoeGeneration, ZoeMaster};
+use zoe::sched::SchedKind;
+use zoe::zoe::{templates, ApiClient, ApiServer, AppState, ZoeMaster};
 
 fn runtime() -> Option<Arc<PjrtRuntime>> {
     match PjrtRuntime::load_default() {
@@ -41,7 +42,7 @@ fn drive_until_done(master: &mut ZoeMaster, pool: &mut WorkPool, max_rounds: usi
 fn single_app_runs_to_completion() {
     let Some(rt) = runtime() else { return };
     let backend = SwarmBackend::paper_testbed();
-    let mut master = ZoeMaster::new(backend, ZoeGeneration::Flexible);
+    let mut master = ZoeMaster::new(backend, SchedKind::Flexible);
     let mut pool = WorkPool::new(rt);
 
     let mut desc = templates::tf_single();
@@ -59,7 +60,7 @@ fn single_app_runs_to_completion() {
 #[test]
 fn elastic_app_gets_full_grant_when_alone() {
     let Some(rt) = runtime() else { return };
-    let mut master = ZoeMaster::new(SwarmBackend::paper_testbed(), ZoeGeneration::Flexible);
+    let mut master = ZoeMaster::new(SwarmBackend::paper_testbed(), SchedKind::Flexible);
     let mut pool = WorkPool::new(rt);
     let mut desc = templates::spark_regression(8);
     desc.work_steps = 16;
@@ -71,11 +72,14 @@ fn elastic_app_gets_full_grant_when_alone() {
 }
 
 #[test]
-fn flexible_reclaims_elastic_for_new_cores() {
+fn preemptive_reclaims_elastic_for_new_cores() {
     let Some(rt) = runtime() else { return };
-    // Small cluster: 2 nodes × 8 cpu.
+    // Small cluster: 2 nodes × 8 cpu. Arrival-time reclaim is the §3.3
+    // preemptive path (the shared core gives the master exactly the
+    // simulator's semantics: the non-preemptive generation reclaims on
+    // departures only).
     let backend = SwarmBackend::new(2, Resources::new(8.0, 64.0 * 1024.0));
-    let mut master = ZoeMaster::new(backend, ZoeGeneration::Flexible);
+    let mut master = ZoeMaster::new(backend, SchedKind::FlexiblePreemptive);
     let mut pool = WorkPool::new(rt);
 
     // App A: 1 core (1 cpu) + 14 elastic (1 cpu each) → fills the cluster.
@@ -93,9 +97,11 @@ fn flexible_reclaims_elastic_for_new_cores() {
     let before = master.backend.running_of(ida).len();
     assert_eq!(before, 15, "A fully granted");
 
-    // App B (rigid): needs 4 cores — only startable by reclaiming.
+    // App B (rigid, higher priority): needs 4 cores — only startable by
+    // carving them out of A's elastic allocation on arrival (§3.3).
     let mut b = templates::tf_single();
     b.work_steps = 4;
+    b.priority = 1.0;
     for c in &mut b.components {
         c.cpu = 4.0;
         c.ram_mb = 1024.0;
@@ -104,7 +110,7 @@ fn flexible_reclaims_elastic_for_new_cores() {
     assert_eq!(
         master.store.get(idb).unwrap().state,
         AppState::Running,
-        "flexible must reclaim elastic to start B's cores"
+        "preemptive flexible must reclaim elastic to start B's cores"
     );
     let after = master.backend.running_of(ida).len();
     assert!(after < before, "A lost elastic containers ({before} -> {after})");
@@ -115,7 +121,7 @@ fn flexible_reclaims_elastic_for_new_cores() {
 fn rigid_waits_for_full_demand() {
     let Some(rt) = runtime() else { return };
     let backend = SwarmBackend::new(2, Resources::new(8.0, 64.0 * 1024.0));
-    let mut master = ZoeMaster::new(backend, ZoeGeneration::Rigid);
+    let mut master = ZoeMaster::new(backend, SchedKind::Rigid);
     let mut pool = WorkPool::new(rt);
 
     let mut a = templates::spark_regression(8);
@@ -150,7 +156,7 @@ fn api_submit_status_stats_kill() {
     let Some(rt) = runtime() else { return };
     let master = Arc::new(Mutex::new(ZoeMaster::new(
         SwarmBackend::paper_testbed(),
-        ZoeGeneration::Flexible,
+        SchedKind::Flexible,
     )));
     let server = ApiServer::spawn(Arc::clone(&master), "127.0.0.1:0").unwrap();
     let addr = server.addr.to_string();
@@ -188,7 +194,7 @@ fn submit_rejects_unschedulable_cores() {
     let Some(_rt) = runtime() else { return };
     let mut master = ZoeMaster::new(
         SwarmBackend::new(1, Resources::new(4.0, 8192.0)),
-        ZoeGeneration::Flexible,
+        SchedKind::Flexible,
     );
     let desc = templates::tf_distributed(); // 5×2 + 10×4 cpu cores ≫ 4
     assert!(master.submit(desc).is_err());
