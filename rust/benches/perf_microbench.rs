@@ -19,7 +19,7 @@ use std::time::Instant;
 use zoe::policy::Policy;
 use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
-use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan, Simulation};
+use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan, SimResult, Simulation};
 use zoe::trace::{IngestOptions, SharedBuf, TraceRecorder, TraceSource};
 use zoe::util::bench::{measure, section};
 use zoe::util::json::Json;
@@ -40,7 +40,7 @@ fn run_point(
     apps: u32,
     mode: EngineMode,
     out: &mut Vec<SweepPoint>,
-) -> f64 {
+) -> (f64, SimResult) {
     let reqs = spec.generate(apps, 1);
     let t0 = Instant::now();
     let res = simulate_with_mode(reqs, Cluster::paper_sim(), Policy::FIFO, kind, mode);
@@ -67,7 +67,7 @@ fn run_point(
         wall_s: dt,
         events_per_s: eps,
     });
-    eps
+    (eps, res)
 }
 
 fn main() {
@@ -75,10 +75,21 @@ fn main() {
     let mut points: Vec<SweepPoint> = Vec::new();
 
     section("L3 — simulator event throughput: optimized vs naive (8k apps)");
+    // (apps, slab high-water, table capacity) of the largest optimized
+    // flexible run — the steady-state memory point emitted below.
+    let mut mem_point: (u32, u64, u64) = (0, 0, 0);
+    let mut note_mem = |apps: u32, res: &SimResult, mem: &mut (u32, u64, u64)| {
+        if apps > mem.0 {
+            *mem = (apps, res.slab_high_water, res.slot_capacity);
+        }
+    };
     let mut speedups: Vec<(&'static str, f64)> = Vec::new();
     for kind in [SchedKind::Rigid, SchedKind::Malleable, SchedKind::Flexible] {
-        let opt = run_point(&spec, kind, 8_000, EngineMode::Optimized, &mut points);
-        let naive = run_point(&spec, kind, 8_000, EngineMode::Naive, &mut points);
+        let (opt, res) = run_point(&spec, kind, 8_000, EngineMode::Optimized, &mut points);
+        if kind == SchedKind::Flexible {
+            note_mem(8_000, &res, &mut mem_point);
+        }
+        let (naive, _) = run_point(&spec, kind, 8_000, EngineMode::Naive, &mut points);
         let speedup = opt / naive.max(1e-12);
         println!("  {:<10} speedup: {speedup:.2}×", kind.label());
         speedups.push((kind.label(), speedup));
@@ -97,7 +108,25 @@ fn main() {
             println!("  (skipping {apps}-app point: ZOE_BENCH_SWEEP_MAX={sweep_max})");
             continue;
         }
-        run_point(&spec, SchedKind::Flexible, apps, EngineMode::Optimized, &mut points);
+        let (_, res) = run_point(&spec, SchedKind::Flexible, apps, EngineMode::Optimized, &mut points);
+        note_mem(apps, &res, &mut mem_point);
+    }
+
+    section("L3 — steady-state memory: request-slab high-water under churn");
+    if mem_point.0 > 0 {
+        println!(
+            "  {} total apps → slab high-water {} concurrent, table capacity {} slots \
+             ({}× smaller than a dense O(total) table)",
+            mem_point.0,
+            mem_point.1,
+            mem_point.2,
+            if mem_point.2 > 0 { mem_point.0 as u64 / mem_point.2.max(1) } else { 0 }
+        );
+        if mem_point.2 > mem_point.1 {
+            println!("  WARN table capacity exceeds the active high-water mark (slab leak?)");
+        }
+    } else {
+        println!("  (no optimized flexible run at this sweep cap)");
     }
 
     section("L3 — trace pipeline: record → ingest → replay (flexible, 8k apps)");
@@ -253,6 +282,14 @@ fn main() {
                 ("sched", Json::str("flexible")),
                 ("hw_threads", Json::num(hw_threads as f64)),
                 ("points", parallel_json),
+            ]),
+        ),
+        (
+            "steady_state_memory",
+            Json::obj(vec![
+                ("apps", Json::num(mem_point.0 as f64)),
+                ("slab_high_water", Json::num(mem_point.1 as f64)),
+                ("table_capacity", Json::num(mem_point.2 as f64)),
             ]),
         ),
         (

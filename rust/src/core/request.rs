@@ -82,8 +82,58 @@ impl AppClass {
     }
 }
 
-/// Request identifier (dense, index into the simulator's request table).
-pub type ReqId = u32;
+/// Generational request handle: `slot` indexes the executor's request
+/// table and `gen` distinguishes successive occupants of the same slot.
+///
+/// Slots are **recycled**: when a request completes, its slot returns to
+/// a free list (lowest-free-slot-first) and the slot's generation is
+/// bumped, so every layer that stores or transports ids — the event
+/// heap, departure predictions, decision streams, trace logs, the Zoe
+/// master's container maps — can detect a stale handle in O(1) instead
+/// of growing with *total* submissions. Two ids are equal only when both
+/// slot and generation match; a handle whose generation no longer
+/// matches the table's is *stale* and must be dropped, exactly like a
+/// stale lazy-deleted heap entry.
+///
+/// `ReqId` deliberately implements no ordering: slot order is **not**
+/// submission order once slots recycle. Deterministic tie-breaks use the
+/// monotone per-request sequence number
+/// ([`crate::sched::ReqState::seq`]) instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ReqId {
+    /// Index into the executor's request table (recycled).
+    pub slot: u32,
+    /// Generation of the slot this handle was allocated at.
+    pub gen: u32,
+}
+
+impl ReqId {
+    /// A handle from its two components.
+    pub fn new(slot: u32, gen: u32) -> Self {
+        ReqId { slot, gen }
+    }
+
+    /// The slot as a table index.
+    #[inline]
+    pub fn index(&self) -> usize {
+        self.slot as usize
+    }
+}
+
+/// A bare `u32` converts to a generation-0 handle — the dense-id form
+/// every pre-slab call site (and test) used, valid as long as the slot
+/// was never recycled.
+impl From<u32> for ReqId {
+    fn from(slot: u32) -> Self {
+        ReqId { slot, gen: 0 }
+    }
+}
+
+impl std::fmt::Display for ReqId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}.{}", self.slot, self.gen)
+    }
+}
 
 /// A request: the scheduling view of an analytic application.
 ///
@@ -92,7 +142,9 @@ pub type ReqId = u32;
 /// require `core_res`, `n_elastic` each require `elastic_res`.
 #[derive(Clone, Debug)]
 pub struct Request {
-    /// Unique id; also the index into the simulator's request table.
+    /// Generational handle into the executor's request table. Assigned
+    /// (overwritten) by the table at allocation time — builders and
+    /// trace parsers only carry a placeholder.
     pub id: ReqId,
     /// Workload-taxonomy class (§4.1).
     pub class: AppClass,
@@ -150,11 +202,12 @@ pub struct RequestBuilder {
 }
 
 impl RequestBuilder {
-    /// A builder for request `id`: 1 core of (1 CPU, 1 GB), runtime 1 s.
-    pub fn new(id: ReqId) -> Self {
+    /// A builder for request `id` (anything convertible to a [`ReqId`],
+    /// e.g. a bare `u32`): 1 core of (1 CPU, 1 GB), runtime 1 s.
+    pub fn new(id: impl Into<ReqId>) -> Self {
         RequestBuilder {
             req: Request {
-                id,
+                id: id.into(),
                 class: AppClass::BatchElastic,
                 arrival: 0.0,
                 runtime: 1.0,
@@ -219,7 +272,7 @@ impl RequestBuilder {
 
 /// Convenience for the paper's 1-D "units" examples: a request whose
 /// components each take 1 CPU unit and no RAM distinction.
-pub fn unit_request(id: ReqId, arrival: f64, runtime: f64, c: u32, e: u32) -> Request {
+pub fn unit_request(id: impl Into<ReqId>, arrival: f64, runtime: f64, c: u32, e: u32) -> Request {
     let unit = Resources::new(1.0, 1.0);
     RequestBuilder::new(id)
         .arrival(arrival)
@@ -261,6 +314,16 @@ mod tests {
     #[should_panic]
     fn zero_core_rejected() {
         RequestBuilder::new(2).cores(0, Resources::ZERO).build();
+    }
+
+    #[test]
+    fn generational_ids_distinguish_slot_occupants() {
+        let a = ReqId::new(3, 0);
+        let b = ReqId::new(3, 1);
+        assert_ne!(a, b, "same slot, different generation");
+        assert_eq!(ReqId::from(3u32), a, "bare u32 = generation 0");
+        assert_eq!(a.index(), 3);
+        assert_eq!(b.to_string(), "3.1");
     }
 
     #[test]

@@ -7,10 +7,12 @@
 //!             [--seeds 10] [--threads 4]   # parallel multi-seed run
 //! zoe trace   stats  --trace FILE [--format jsonl|csv]
 //! zoe trace   replay --trace FILE [--sched flexible] [--policy fifo]
+//!             [--stream]   # constant-memory replay of huge JSONL traces
 //! zoe trace   record --out FILE [--apps 1000] [--seed 1]
 //! zoe trace   fit    --trace FILE [--out spec.json]
 //! zoe master  --listen 127.0.0.1:4455 [--generation flexible] [--policy fifo]
-//!             [--nodes 10]   # any scheduler generation × waiting-line policy
+//!             [--nodes 10] [--retain-done N]   # any generation × policy;
+//!             # N bounds finished-app records (store stays O(active+N))
 //! zoe submit  --to 127.0.0.1:4455 --template spark-als-16
 //! zoe status  --to 127.0.0.1:4455 --id 3
 //! zoe stats   --to 127.0.0.1:4455
@@ -28,6 +30,7 @@ use zoe::sched::SchedSpec;
 use zoe::sim::{simulate, ExperimentPlan, Simulation};
 use zoe::trace::{
     fit_workload_from_stats, spec_to_json, IngestOptions, TraceRecorder, TraceSource, TraceStats,
+    TraceStream,
 };
 use zoe::util::cli::Args;
 use zoe::util::json::Json;
@@ -154,6 +157,7 @@ fn cmd_trace(args: &Args) {
             eprintln!("  stats   --trace FILE [--format jsonl|csv] [--no-caps]");
             eprintln!("  replay  --trace FILE [--sched S] [--policy P] [--machines N]");
             eprintln!("          [--machine-cpu C] [--machine-ram-mb M] [--record OUT]");
+            eprintln!("          [--stream]  (constant-memory; JSONL, arrival-ordered)");
             eprintln!("  record  --out FILE [--apps N] [--seed S] [--sched S] [--policy P]");
             eprintln!("          [--interactive] [--arrival-scale X]");
             eprintln!("  fit     --trace FILE [--out SPEC.json] [--apps N] [--seed S]");
@@ -222,6 +226,12 @@ fn trace_stats(args: &Args) {
         st.n_batch_elastic, st.n_batch_rigid, st.n_interactive
     );
     println!("arrival span: {:.2} h", trace.span() / 3600.0);
+    println!(
+        "peak concurrent apps: {} (isolated-execution estimate; a scheduler can only \
+         hold apps in the system longer, so size clusters — and expect the request \
+         slab's high-water mark — to be at least this)",
+        st.peak_concurrent
+    );
     print_quantiles("runtime (s)", &mut st.runtime);
     print_quantiles("cpu / component", &mut st.cpu);
     print_quantiles("ram_mb / component", &mut st.ram_mb);
@@ -235,25 +245,62 @@ fn trace_stats(args: &Args) {
 fn trace_replay(args: &Args) {
     warn_trace_flags(
         args,
-        &["sched", "policy", "machines", "machine-cpu", "machine-ram-mb", "record"],
+        &["sched", "policy", "machines", "machine-cpu", "machine-ram-mb", "record", "stream"],
     );
-    let trace = load_trace(args);
-    if trace.is_empty() {
-        eprintln!("trace contains no applications");
-        std::process::exit(1);
-    }
     let kind = parse_sched(&args.get_or("sched", "flexible"));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
     let cluster = parse_trace_cluster(args);
-    println!(
-        "replaying {} applications ({:.2} h span) on {} machines — {} / {}",
-        trace.len(),
-        trace.span() / 3600.0,
-        cluster.n_machines(),
-        kind.label(),
-        policy.label()
-    );
-    let mut sim = trace.simulation(cluster, policy, kind);
+    let mut sim = if args.has("stream") {
+        // Constant-memory path: the engine pulls arrivals one at a time;
+        // the trace is never materialized. CSV cannot stream (per-job
+        // aggregation needs the whole file) — reject the combination up
+        // front with the valid alternatives, per the CLI conventions.
+        let Some(path) = args.get("trace") else {
+            eprintln!("--trace FILE is required");
+            std::process::exit(2);
+        };
+        let is_csv = args.get("format") == Some("csv")
+            || (args.get("format").is_none()
+                && path.rsplit('.').next().is_some_and(|e| e.eq_ignore_ascii_case("csv")));
+        if is_csv {
+            eprintln!(
+                "--stream cannot replay CSV traces: ClusterData2011 ingestion aggregates \
+                 task rows per job, which needs the whole file (valid: drop --stream for a \
+                 materialized replay, or convert the trace to arrival-ordered JSONL)"
+            );
+            std::process::exit(2);
+        }
+        let mut opts = IngestOptions::default();
+        if args.has("no-caps") {
+            opts.caps = None;
+        }
+        let stream = TraceStream::open(path, &opts).unwrap_or_else(|e| {
+            eprintln!("cannot stream {path}: {e}");
+            std::process::exit(1);
+        });
+        println!(
+            "streaming replay of {path} on {} machines — {} / {}",
+            cluster.n_machines(),
+            kind.label(),
+            policy.label()
+        );
+        Simulation::from_stream(stream, cluster, policy, kind)
+    } else {
+        let trace = load_trace(args);
+        if trace.is_empty() {
+            eprintln!("trace contains no applications");
+            std::process::exit(1);
+        }
+        println!(
+            "replaying {} applications ({:.2} h span) on {} machines — {} / {}",
+            trace.len(),
+            trace.span() / 3600.0,
+            cluster.n_machines(),
+            kind.label(),
+            policy.label()
+        );
+        trace.simulation(cluster, policy, kind)
+    };
     if let Some(out) = args.get("record") {
         let rec = TraceRecorder::to_path(out).unwrap_or_else(|e| {
             eprintln!("cannot create {out}: {e}");
@@ -261,8 +308,16 @@ fn trace_replay(args: &Args) {
         });
         sim = sim.with_recorder(rec);
     }
-    let mut res = sim.run();
+    let mut res = sim.try_run().unwrap_or_else(|e| {
+        eprintln!("replay failed: {e}");
+        std::process::exit(1);
+    });
     println!("{}", res.summary());
+    println!(
+        "request slab: high-water {} concurrent apps, table capacity {} slots \
+         (memory is O(active), independent of the {} total arrivals)",
+        res.slab_high_water, res.slot_capacity, res.completed
+    );
     res.print_report("trace replay");
 }
 
@@ -356,13 +411,25 @@ fn trace_fit(args: &Args) {
 // ---------------------------------------------------------------------------
 
 fn cmd_master(args: &Args) {
-    args.warn_unknown(&["listen", "generation", "nodes", "policy"]);
+    args.warn_unknown(&["listen", "generation", "nodes", "policy", "retain-done"]);
     let listen = args.get_or("listen", "127.0.0.1:4455");
     let nodes = args.u64_or("nodes", 10) as u32;
     // Same parser as `zoe sim --sched`: all four generations (plus any
     // registered core) run on the live master.
     let spec = parse_sched(&args.get_or("generation", "flexible"));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
+    // Bounded finished-app retention. 0 cannot hold: every submit/kill
+    // round-trip reports state through the store, and the API's
+    // status/stats queries would race their own eviction — reject it
+    // with the valid range, per the CLI conventions.
+    let retain_done = args.get("retain-done").map(|_| args.u64_or("retain-done", 0));
+    if retain_done == Some(0) {
+        eprintln!(
+            "--retain-done 0 cannot hold: status/list queries could never observe a \
+             finished app (valid: >= 1, or omit the flag to retain all records)"
+        );
+        std::process::exit(2);
+    }
     let rt = Arc::new(PjrtRuntime::load_default().unwrap_or_else(|e| {
         eprintln!("cannot load PJRT artifacts: {e}");
         std::process::exit(1);
@@ -370,7 +437,11 @@ fn cmd_master(args: &Args) {
     log::info!("PJRT platform: {}", rt.platform());
     let backend = SwarmBackend::new(nodes, zoe::core::Resources::new(32.0, 128.0 * 1024.0));
     let label = format!("{}/{}", spec.label(), policy.label());
-    let master = Arc::new(Mutex::new(ZoeMaster::new(backend, spec).with_policy(policy)));
+    let mut master_val = ZoeMaster::new(backend, spec).with_policy(policy);
+    if let Some(n) = retain_done {
+        master_val = master_val.with_retention(n as usize);
+    }
+    let master = Arc::new(Mutex::new(master_val));
     let server = ApiServer::spawn(Arc::clone(&master), &listen).unwrap_or_else(|e| {
         eprintln!("cannot bind {listen}: {e}");
         std::process::exit(1);

@@ -38,9 +38,10 @@ use super::{
 use crate::core::{ReqId, Resources};
 use crate::pool::Placement;
 
-/// W-line entry: (priority, policy key, id) — descending priority,
-/// ascending key, ascending id.
-type WEntry = (f64, f64, ReqId);
+/// W-line entry: (priority, policy key, submission seq, id) —
+/// descending priority, ascending key, ascending seq (the deterministic
+/// tie-break; slot order is not submission order once slots recycle).
+type WEntry = (f64, f64, u64, ReqId);
 
 /// The flexible scheduler (Algorithm 1), optionally with the §3.3
 /// preemptive arrival path. See the module docs for the placement model
@@ -49,15 +50,18 @@ pub struct FlexibleScheduler {
     /// Serving set S, in cascade order (descending effective priority,
     /// then ascending frozen key).
     s: Vec<ReqId>,
-    /// Waiting line L: (cached policy key, id), ascending.
-    l: VecDeque<(f64, ReqId)>,
+    /// Waiting line L: (cached policy key, submission seq, id),
+    /// ascending by (key, seq).
+    l: VecDeque<(f64, u64, ReqId)>,
     /// Auxiliary waiting line W (§3.3): preempting requests whose cores
     /// did not fit; has priority over L on departures.
     w_line: VecDeque<WEntry>,
-    /// Persistent core placements, dense by request id (empty = none);
-    /// buffers are reused across admissions.
+    /// Persistent core placements, **slot-keyed** (empty = none): the
+    /// buffer at a slot is released on departure and reused verbatim by
+    /// the slot's next occupant, so the store is O(active), not O(total).
     cores: Vec<Placement>,
-    /// Elastic placements, re-computed by cascades; dense by request id.
+    /// Elastic placements, re-computed by cascades; slot-keyed like
+    /// `cores`.
     elastic: Vec<Placement>,
     /// Incrementally maintained Σ full demand (cores + all elastic) of
     /// the serving set: admit adds, departure subtracts, and it resets to
@@ -100,9 +104,11 @@ impl FlexibleScheduler {
         self.full_demand.cpu < t.cpu - 1e-9 || self.full_demand.ram_mb < t.ram_mb - 1e-9
     }
 
-    /// Grow the dense placement stores to cover every request id.
+    /// Grow the slot-keyed placement stores to cover every table slot
+    /// (bounded by the slab's active high-water mark, not by total
+    /// submissions).
     fn ensure_capacity(&mut self, w: &ClusterView) {
-        let n = w.states.len();
+        let n = w.table.capacity();
         if self.cores.len() < n {
             self.cores.resize_with(n, Placement::default);
             self.elastic.resize_with(n, Placement::default);
@@ -112,7 +118,7 @@ impl FlexibleScheduler {
     /// Release every elastic placement (start of a full rebalance pass).
     fn release_all_elastic(&mut self, w: &mut ClusterView) {
         for &id in &self.s {
-            w.cluster.release_and_clear(&mut self.elastic[id as usize]);
+            w.cluster.release_and_clear(&mut self.elastic[id.index()]);
         }
         self.cascade_clean = false;
     }
@@ -121,10 +127,10 @@ impl FlexibleScheduler {
     /// must have been released first). Records the placement on success.
     fn try_place_cores(&mut self, id: ReqId, w: &mut ClusterView) -> bool {
         let (res, n) = {
-            let r = &w.states[id as usize].req;
+            let r = &w.state(id).req;
             (r.core_res, r.n_core)
         };
-        if w.cluster.place_all_into(&res, n, &mut self.cores[id as usize]) {
+        if w.cluster.place_all_into(&res, n, &mut self.cores[id.index()]) {
             self.cascade_clean = false; // core state changed
             true
         } else {
@@ -143,12 +149,11 @@ impl FlexibleScheduler {
             st.admit_time = now;
             st.frozen_key = key;
         }
-        let placement = self.cores[id as usize].clone();
+        let placement = self.cores[id.index()].clone();
         w.note_admitted(id, placement);
         // Serving order: explicit priority first (descending), then key.
-        let states = &w.states;
         let pos = self.s.partition_point(|&x| {
-            let sx = &states[x as usize];
+            let sx = w.state(x);
             (sx.req.priority, -sx.frozen_key) >= (prio, -key)
         });
         self.s.insert(pos, id);
@@ -196,17 +201,17 @@ impl FlexibleScheduler {
         // Release everything before re-placing anything: the greedy
         // placement of s[i] must see the elastic of every j ≥ i released.
         for &id in &self.s {
-            w.cluster.release_and_clear(&mut self.elastic[id as usize]);
+            w.cluster.release_and_clear(&mut self.elastic[id.index()]);
         }
         for i in 0..self.s.len() {
             let id = self.s[i];
             let (res, n) = {
-                let r = &w.states[id as usize].req;
+                let r = &w.state(id).req;
                 (r.elastic_res, r.n_elastic)
             };
             let g = if n > 0 {
                 w.cluster
-                    .place_up_to_into(&res, n, &mut self.elastic[id as usize])
+                    .place_up_to_into(&res, n, &mut self.elastic[id.index()])
             } else {
                 0
             };
@@ -221,26 +226,29 @@ impl FlexibleScheduler {
         let Some(head) = keyed_head(&self.l) else {
             return false;
         };
-        let r = &w.states[head as usize].req;
+        let r = &w.state(head).req;
         w.cluster.can_place_all(&r.core_res, r.n_core)
     }
 
     fn insert_w_line(&mut self, id: ReqId, w: &ClusterView) {
         use std::cmp::Ordering;
         let key = w.pending_key(id);
-        let prio = w.states[id as usize].req.priority;
-        let pos = self.w_line.partition_point(|&(p, k, x)| {
+        let (prio, seq) = {
+            let st = w.state(id);
+            (st.req.priority, st.seq)
+        };
+        let pos = self.w_line.partition_point(|&(p, k, s, _)| {
             match p.total_cmp(&prio) {
                 Ordering::Greater => true,
                 Ordering::Less => false,
                 Ordering::Equal => match k.total_cmp(&key) {
                     Ordering::Less => true,
                     Ordering::Greater => false,
-                    Ordering::Equal => x <= id,
+                    Ordering::Equal => s <= seq,
                 },
             }
         });
-        self.w_line.insert(pos, (prio, key, id));
+        self.w_line.insert(pos, (prio, key, seq, id));
     }
 }
 
@@ -270,7 +278,8 @@ impl FlexibleScheduler {
         // Lines 8–11: normal path.
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let key = w.pending_key(id);
-        insert_keyed(&mut self.l, key, id);
+        let seq = w.state(id).seq;
+        insert_keyed(&mut self.l, key, seq, id);
         if keyed_head(&self.l) == Some(id) && self.head_fits_in_unused(w) {
             self.rebalance(w);
         }
@@ -292,19 +301,19 @@ impl FlexibleScheduler {
             // pending request): drop it from the lines. The rebalance
             // below still runs — removing a blocking head can unblock
             // later admissions.
-            self.l.retain(|&(_, x)| x != id);
-            self.w_line.retain(|&(_, _, x)| x != id);
+            self.l.retain(|&(_, _, x)| x != id);
+            self.w_line.retain(|&(_, _, _, x)| x != id);
         }
         // Core + elastic state changed: any future cascade starts fresh.
         self.cascade_clean = false;
-        w.cluster.release_and_clear(&mut self.cores[id as usize]);
-        w.cluster.release_and_clear(&mut self.elastic[id as usize]);
+        w.cluster.release_and_clear(&mut self.cores[id.index()]);
+        w.cluster.release_and_clear(&mut self.elastic[id.index()]);
         // Fast path: nothing is waiting and every serving request is
         // already fully granted → the cascade is a no-op; skip the
         // release/re-place pass entirely.
         if self.w_line.is_empty() && self.l.is_empty() {
             let all_full = self.s.iter().all(|&x| {
-                let st = &w.states[x as usize];
+                let st = w.state(x);
                 st.grant == st.req.n_elastic
             });
             if all_full {
@@ -315,7 +324,7 @@ impl FlexibleScheduler {
         // reclaimable → release elastic before trying).
         if !self.w_line.is_empty() {
             self.release_all_elastic(w);
-            while let Some(&(_, _, head)) = self.w_line.front() {
+            while let Some(&(_, _, _, head)) = self.w_line.front() {
                 if self.try_place_cores(head, w) {
                     self.w_line.pop_front();
                     self.admit(head, w);
@@ -367,8 +376,8 @@ impl FlexibleScheduler {
     /// Test/diagnostic access to the waiting lines (ids in queue order).
     pub fn waiting(&self) -> (Vec<ReqId>, Vec<ReqId>) {
         (
-            self.l.iter().map(|&(_, id)| id).collect(),
-            self.w_line.iter().map(|&(_, _, id)| id).collect(),
+            self.l.iter().map(|&(_, _, id)| id).collect(),
+            self.w_line.iter().map(|&(_, _, _, id)| id).collect(),
         )
     }
 }

@@ -29,9 +29,11 @@ use crate::pool::Placement;
 /// grants-only-grow model and the Fig. 1 behavior it reproduces.
 pub struct MalleableScheduler {
     s: Vec<ReqId>,
-    /// Waiting line: (cached policy key, id), ascending.
-    l: VecDeque<(f64, ReqId)>,
-    /// Dense per-request placements (empty = none); buffers reused.
+    /// Waiting line: (cached policy key, submission seq, id), ascending
+    /// by (key, seq).
+    l: VecDeque<(f64, u64, ReqId)>,
+    /// Slot-keyed per-request placements (empty = none); a slot's buffer
+    /// is reused by its next occupant, keeping the store O(active).
     cores: Vec<Placement>,
     /// Granted elastic placements, accumulated across top-up rounds.
     elastic: Vec<Placement>,
@@ -58,7 +60,7 @@ impl MalleableScheduler {
     }
 
     fn ensure_capacity(&mut self, w: &ClusterView) {
-        let n = w.states.len();
+        let n = w.table.capacity();
         if self.cores.len() < n {
             self.cores.resize_with(n, Placement::default);
             self.elastic.resize_with(n, Placement::default);
@@ -74,7 +76,7 @@ impl MalleableScheduler {
             st.admit_time = now;
             st.frozen_key = key;
         }
-        let placement = self.cores[id as usize].clone();
+        let placement = self.cores[id.index()].clone();
         w.note_admitted(id, placement);
         self.s.push(id); // cascade order = admission order
     }
@@ -94,14 +96,14 @@ impl MalleableScheduler {
             for i in start..self.s.len() {
                 let id = self.s[i];
                 let (res, want, have) = {
-                    let st = &w.states[id as usize];
+                    let st = w.state(id);
                     (st.req.elastic_res, st.req.n_elastic, st.grant)
                 };
                 if have < want {
                     let placed = w.cluster.place_up_to_append(
                         &res,
                         want - have,
-                        &mut self.elastic[id as usize],
+                        &mut self.elastic[id.index()],
                     );
                     if placed > 0 {
                         w.set_grant(id, have + placed);
@@ -110,7 +112,7 @@ impl MalleableScheduler {
             }
             // Advance the cursor over the (possibly grown) full prefix.
             while self.topup_from < self.s.len() {
-                let st = &w.states[self.s[self.topup_from] as usize];
+                let st = w.state(self.s[self.topup_from]);
                 if st.grant == st.req.n_elastic {
                     self.topup_from += 1;
                 } else {
@@ -120,10 +122,10 @@ impl MalleableScheduler {
             // Admission: head's cores in the leftover (no reclaim).
             let Some(head) = keyed_head(&self.l) else { break };
             let (res, n) = {
-                let r = &w.states[head as usize].req;
+                let r = &w.state(head).req;
                 (r.core_res, r.n_core)
             };
-            if w.cluster.place_all_into(&res, n, &mut self.cores[head as usize]) {
+            if w.cluster.place_all_into(&res, n, &mut self.cores[head.index()]) {
                 self.l.pop_front();
                 self.admit(head, w);
                 // Loop: the new member's elastic tops up next round.
@@ -139,7 +141,7 @@ impl MalleableScheduler {
         let Some(head) = keyed_head(&self.l) else {
             return false;
         };
-        let r = &w.states[head as usize].req;
+        let r = &w.state(head).req;
         w.cluster.can_place_all(&r.core_res, r.n_core)
     }
 }
@@ -155,7 +157,8 @@ impl MalleableScheduler {
         self.ensure_capacity(w);
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let key = w.pending_key(id);
-        insert_keyed(&mut self.l, key, id);
+        let seq = w.state(id).seq;
+        insert_keyed(&mut self.l, key, seq, id);
         if keyed_head(&self.l) == Some(id) && self.head_fits_in_unused(w) {
             self.rebalance(w);
         }
@@ -174,10 +177,10 @@ impl MalleableScheduler {
         } else {
             // Cancellation of a still-waiting request (master kill path;
             // never reached by the simulator).
-            self.l.retain(|&(_, x)| x != id);
+            self.l.retain(|&(_, _, x)| x != id);
         }
-        w.cluster.release_and_clear(&mut self.cores[id as usize]);
-        w.cluster.release_and_clear(&mut self.elastic[id as usize]);
+        w.cluster.release_and_clear(&mut self.cores[id.index()]);
+        w.cluster.release_and_clear(&mut self.elastic[id.index()]);
         self.rebalance(w);
     }
 }

@@ -41,8 +41,8 @@ pub use flexible::FlexibleScheduler;
 pub use malleable::MalleableScheduler;
 pub use rigid::RigidScheduler;
 
-use std::cmp::Ordering;
-use std::collections::{BTreeMap, VecDeque};
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::core::{ReqId, Request};
@@ -67,6 +67,14 @@ pub enum Phase {
 pub struct ReqState {
     /// The immutable request this state belongs to.
     pub req: Request,
+    /// Monotone submission index, assigned by the [`ReqTable`] at
+    /// allocation: the i-th request ever allocated has `seq == i`. This
+    /// is the old dense request id, kept as a *sequence number* because
+    /// slot order stops being submission order once slots recycle —
+    /// every deterministic tie-break (waiting lines, resorts, the W
+    /// line) orders by `seq`, which is what keeps slab-backed results
+    /// bit-identical to the dense path.
+    pub seq: u64,
     /// Current life-cycle phase.
     pub phase: Phase,
     /// Elastic components currently granted (0 ≤ grant ≤ n_elastic).
@@ -91,10 +99,13 @@ pub struct ReqState {
 }
 
 impl ReqState {
-    /// Fresh state for a not-yet-arrived request.
-    pub fn new(req: Request) -> Self {
+    /// Fresh state for a not-yet-arrived request with submission index
+    /// `seq` (callers outside a [`ReqTable`] can pass the request's
+    /// position in its batch).
+    pub fn new(req: Request, seq: u64) -> Self {
         ReqState {
             req,
+            seq,
             phase: Phase::Future,
             grant: 0,
             admit_time: f64::NAN,
@@ -231,22 +242,208 @@ pub enum SchedEvent {
 }
 
 // ---------------------------------------------------------------------------
+// ReqTable — the generational request slab
+// ---------------------------------------------------------------------------
+
+/// One slot of the [`ReqTable`]: its current generation plus the
+/// occupant (vacant between a free and the next allocation).
+#[derive(Clone, Debug)]
+struct Slot {
+    gen: u32,
+    state: Option<ReqState>,
+}
+
+/// The request table as a **generational slab**: per-request
+/// [`ReqState`]s keyed by [`ReqId`] `{slot, gen}` handles, with a
+/// lowest-slot-first free list that recycles completed slots.
+///
+/// This is what keeps a long-lived executor's memory **O(active)**
+/// instead of O(total submissions): `capacity()` (the slot count, which
+/// also sizes every slot-keyed side table — the cores' placement
+/// buffers, the recorder's dedup array, the master's app map) never
+/// exceeds `high_water()`, the peak number of simultaneously live
+/// requests. Freeing a slot bumps its generation, so any handle still in
+/// flight (a lazy-deleted heap event, a stale prediction, an old
+/// container-map entry) dangles *detectably*: [`ReqTable::get`] returns
+/// `None` for it, and executors drop it exactly like a stale heap entry.
+///
+/// Allocation is deterministic — always the lowest free slot — so two
+/// runs of the same workload allocate identically, and (because nothing
+/// orders by slot; see [`ReqState::seq`]) results are bit-identical to a
+/// table that never recycles ([`ReqTable::set_recycle`] keeps that
+/// *retained dense* reference available for differential tests).
+#[derive(Clone, Debug)]
+pub struct ReqTable {
+    slots: Vec<Slot>,
+    /// Min-heap of vacant slots (lowest-free-slot-first allocation).
+    free_slots: BinaryHeap<Reverse<u32>>,
+    live: usize,
+    high_water: usize,
+    /// Total requests ever allocated (source of [`ReqState::seq`]).
+    allocated: u64,
+    /// `false` = retained-dense reference mode: freed slots keep their
+    /// final state and are never reused (the pre-slab behavior).
+    recycle: bool,
+}
+
+impl Default for ReqTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReqTable {
+    /// An empty table (recycling enabled).
+    pub fn new() -> Self {
+        ReqTable {
+            slots: Vec::new(),
+            free_slots: BinaryHeap::new(),
+            live: 0,
+            high_water: 0,
+            allocated: 0,
+            recycle: true,
+        }
+    }
+
+    /// Enable/disable slot recycling. With recycling off the table keeps
+    /// every record and grows densely — the reference the differential
+    /// tests compare the slab against. Flip only before the first free.
+    pub fn set_recycle(&mut self, recycle: bool) {
+        self.recycle = recycle;
+    }
+
+    /// Allocate the lowest free slot for `req`, overwriting `req.id`
+    /// with the assigned generational handle; the new state starts in
+    /// [`Phase::Future`] with the next monotone sequence number.
+    pub fn alloc(&mut self, mut req: Request) -> ReqId {
+        let slot = match self.free_slots.pop() {
+            Some(Reverse(s)) => s,
+            None => {
+                let s = self.slots.len() as u32;
+                self.slots.push(Slot { gen: 0, state: None });
+                s
+            }
+        };
+        let gen = self.slots[slot as usize].gen;
+        let id = ReqId { slot, gen };
+        req.id = id;
+        let seq = self.allocated;
+        self.allocated += 1;
+        self.slots[slot as usize].state = Some(ReqState::new(req, seq));
+        self.live += 1;
+        self.high_water = self.high_water.max(self.live);
+        id
+    }
+
+    /// Retire `id`'s slot: with recycling, the state is dropped, the
+    /// generation bumped (stale handles become detectable) and the slot
+    /// returns to the free list; in retained mode the final state is
+    /// kept and the slot is never reused. Panics on a stale handle.
+    pub fn free(&mut self, id: ReqId) {
+        let slot = &mut self.slots[id.index()];
+        assert_eq!(slot.gen, id.gen, "freeing a stale request handle {id}");
+        assert!(slot.state.is_some(), "freeing a vacant slot {id}");
+        if self.recycle {
+            slot.state = None;
+            slot.gen += 1;
+            self.free_slots.push(Reverse(id.slot));
+        }
+        self.live -= 1;
+    }
+
+    /// The state behind `id`, or `None` when the handle is stale (the
+    /// slot was recycled) or the slot is vacant.
+    pub fn get(&self, id: ReqId) -> Option<&ReqState> {
+        let slot = self.slots.get(id.index())?;
+        if slot.gen != id.gen {
+            return None;
+        }
+        slot.state.as_ref()
+    }
+
+    /// Mutable [`ReqTable::get`].
+    pub fn get_mut(&mut self, id: ReqId) -> Option<&mut ReqState> {
+        let slot = self.slots.get_mut(id.index())?;
+        if slot.gen != id.gen {
+            return None;
+        }
+        slot.state.as_mut()
+    }
+
+    /// The state behind `id`; panics on a stale or vacant handle (the
+    /// hot-path accessor — cores only hold live ids).
+    #[inline]
+    pub fn state(&self, id: ReqId) -> &ReqState {
+        match self.get(id) {
+            Some(st) => st,
+            None => panic!("stale request handle {id}"),
+        }
+    }
+
+    /// Mutable [`ReqTable::state`].
+    #[inline]
+    pub fn state_mut(&mut self, id: ReqId) -> &mut ReqState {
+        match self.get_mut(id) {
+            Some(st) => st,
+            None => panic!("stale request handle {id}"),
+        }
+    }
+
+    /// Number of slots the table ever grew to — the size of every
+    /// slot-keyed side buffer. Bounded by [`ReqTable::high_water`] when
+    /// recycling.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Requests currently occupying a slot (in retained mode, minus the
+    /// retired ones).
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Peak number of simultaneously live requests — the slab's
+    /// O(active) bound.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Total requests ever allocated.
+    pub fn allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    /// Occupied slots in slot order, as `(id, state)` pairs.
+    pub fn iter_occupied(&self) -> impl Iterator<Item = (ReqId, &ReqState)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| {
+            s.state
+                .as_ref()
+                .map(|st| (ReqId { slot: i as u32, gen: s.gen }, st))
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // ClusterView — the state a core operates on
 // ---------------------------------------------------------------------------
 
-/// Everything a [`SchedulerCore`] operates on: the request table, the
-/// virtual cluster, the sorting policy, the current time, and the
-/// decision buffer the core appends to.
+/// Everything a [`SchedulerCore`] operates on: the request table (a
+/// generational [`ReqTable`] slab), the virtual cluster, the sorting
+/// policy, the current time, and the decision buffer the core appends
+/// to.
 ///
 /// Each executor owns one view: the simulator's is its world state (the
 /// simulated cluster *is* the virtual cluster), the Zoe master's mirrors
 /// the Swarm nodes one-to-one. The core mutates the view (that is the
 /// virtual assignment, §3.2); the executor reads the appended
 /// [`Decision`]s — and, for self-healing, the authoritative per-request
-/// grants in [`ClusterView::states`] — to fulfil them.
+/// grants in [`ClusterView::table`] — to fulfil them. The executor also
+/// owns the slot lifecycle: it [allocates](ClusterView::alloc) on
+/// submission and [frees](ClusterView::free) once a departure is fully
+/// applied, keeping the table O(active).
 pub struct ClusterView {
-    /// Per-request execution state, dense by request id.
-    pub states: Vec<ReqState>,
+    /// Per-request execution state, slot-keyed with generational ids.
+    pub table: ReqTable,
     /// The (virtual) machines components are placed on.
     pub cluster: Cluster,
     /// The waiting-line sorting policy.
@@ -266,11 +463,22 @@ pub struct ClusterView {
 }
 
 impl ClusterView {
-    /// A view with every request still in the `Future` phase at t=0.
+    /// A view pre-populated with `requests`, every one still in the
+    /// `Future` phase at t=0 (handles are `(slot i, gen 0)` in input
+    /// order — the form driver-style tests use).
     pub fn new(requests: Vec<Request>, cluster: Cluster, policy: Policy) -> Self {
-        let states = requests.into_iter().map(ReqState::new).collect();
+        let mut view = Self::empty(cluster, policy);
+        for req in requests {
+            view.table.alloc(req);
+        }
+        view
+    }
+
+    /// A view with an empty request table (dynamic executors — the Zoe
+    /// master and the streaming engine allocate one arrival at a time).
+    pub fn empty(cluster: Cluster, policy: Policy) -> Self {
         ClusterView {
-            states,
+            table: ReqTable::new(),
             cluster,
             policy,
             now: 0.0,
@@ -279,24 +487,33 @@ impl ClusterView {
         }
     }
 
-    /// Append a request to the table (dynamic executors — the Zoe master
-    /// learns of applications one submission at a time). The request's
-    /// `id` must equal the current table length (dense ids).
-    pub fn push_request(&mut self, req: Request) -> ReqId {
-        let id = self.states.len() as ReqId;
-        assert_eq!(req.id, id, "request ids must be dense table indices");
-        self.states.push(ReqState::new(req));
-        id
+    /// Allocate a slot for `req` (see [`ReqTable::alloc`]); returns the
+    /// generational handle (also written into the stored request's
+    /// `id`).
+    pub fn alloc(&mut self, req: Request) -> ReqId {
+        self.table.alloc(req)
     }
 
-    /// The execution state of request `id`.
+    /// Retire a completed request's slot (see [`ReqTable::free`]). Only
+    /// call after the core has processed the departure — the slot may be
+    /// handed to the very next arrival.
+    pub fn free(&mut self, id: ReqId) {
+        self.table.free(id)
+    }
+
+    /// The execution state of request `id`; panics on a stale handle.
     pub fn state(&self, id: ReqId) -> &ReqState {
-        &self.states[id as usize]
+        self.table.state(id)
     }
 
-    /// Mutable execution state of request `id`.
+    /// Mutable execution state of request `id`; panics on a stale handle.
     pub fn state_mut(&mut self, id: ReqId) -> &mut ReqState {
-        &mut self.states[id as usize]
+        self.table.state_mut(id)
+    }
+
+    /// The execution state of `id`, or `None` for a stale/vacant handle.
+    pub fn get(&self, id: ReqId) -> Option<&ReqState> {
+        self.table.get(id)
     }
 
     /// Take the buffered decisions, leaving the buffer empty (the
@@ -311,7 +528,7 @@ impl ClusterView {
     /// shrink) for the executor.
     pub fn set_grant(&mut self, id: ReqId, g: u32) {
         let now = self.now;
-        let st = &mut self.states[id as usize];
+        let st = self.table.state_mut(id);
         if st.grant != g {
             st.accrue(now);
             let old = st.grant;
@@ -335,7 +552,7 @@ impl ClusterView {
     /// engine schedules the departure).
     pub fn note_admitted(&mut self, id: ReqId, placement: Placement) {
         let now = self.now;
-        let st = &mut self.states[id as usize];
+        let st = self.table.state_mut(id);
         debug_assert_eq!(st.phase, Phase::Running);
         st.last_accrual = now;
         st.cur_rate = st.req.rate(st.grant);
@@ -350,7 +567,7 @@ impl ClusterView {
     /// for the departing request either).
     pub fn note_departed(&mut self, id: ReqId) {
         let now = self.now;
-        let st = &mut self.states[id as usize];
+        let st = self.table.state_mut(id);
         st.accrue(now);
         st.phase = Phase::Done;
         st.grant = 0;
@@ -363,7 +580,7 @@ impl ClusterView {
     /// emitted for the executors.
     pub fn note_preempted(&mut self, id: ReqId) {
         let now = self.now;
-        let st = &mut self.states[id as usize];
+        let st = self.table.state_mut(id);
         debug_assert_eq!(st.phase, Phase::Running);
         st.accrue(now);
         st.phase = Phase::Pending;
@@ -668,27 +885,30 @@ pub fn sched_names() -> String {
 pub(crate) fn has_spare_after_full_grants(w: &ClusterView, s: &[ReqId]) -> bool {
     let mut demand = crate::core::Resources::ZERO;
     for &id in s {
-        demand.add(&w.states[id as usize].req.full_total());
+        demand.add(&w.state(id).req.full_total());
     }
     let t = w.cluster.total();
     demand.cpu < t.cpu - 1e-9 || demand.ram_mb < t.ram_mb - 1e-9
 }
 
-/// A waiting-line entry: the policy key, cached at insertion time (and
-/// refreshed wholesale by dynamic-policy resorts), paired with the id.
-/// Caching the key makes the binary-search insert O(log n) comparisons of
-/// stored floats instead of O(log n) `pending_key` recomputations.
-pub(crate) type KeyedEntry = (f64, ReqId);
+/// A waiting-line entry: the policy key cached at insertion time (and
+/// refreshed wholesale by dynamic-policy resorts), the request's
+/// monotone sequence number (the deterministic tie-break — slot order is
+/// not submission order once slots recycle), and the id. Caching the key
+/// makes the binary-search insert O(log n) comparisons of stored values
+/// instead of O(log n) `pending_key` recomputations.
+pub(crate) type KeyedEntry = (f64, u64, ReqId);
 
 /// Insert `id` with `key` into the deque kept sorted ascending by
-/// `(key, id)` (canonical order; ids break ties deterministically).
-pub(crate) fn insert_keyed(q: &mut VecDeque<KeyedEntry>, key: f64, id: ReqId) {
-    let pos = q.partition_point(|&(k, x)| match k.total_cmp(&key) {
+/// `(key, seq)` (canonical order; the monotone submission index breaks
+/// ties deterministically — exactly how dense ids used to).
+pub(crate) fn insert_keyed(q: &mut VecDeque<KeyedEntry>, key: f64, seq: u64, id: ReqId) {
+    let pos = q.partition_point(|&(k, s, _)| match k.total_cmp(&key) {
         Ordering::Less => true,
-        Ordering::Equal => x <= id,
+        Ordering::Equal => s <= seq,
         Ordering::Greater => false,
     });
-    q.insert(pos, (key, id));
+    q.insert(pos, (key, seq, id));
 }
 
 /// Recompute cached keys at the current time and restore canonical order —
@@ -707,7 +927,7 @@ pub(crate) fn resort_keyed(q: &mut VecDeque<KeyedEntry>, w: &ClusterView, stamp:
     // Refresh even a lone entry: the next insert compares against its
     // cached key, which must be current, not frozen at its insert time.
     for e in q.iter_mut() {
-        e.0 = w.pending_key(e.1);
+        e.0 = w.pending_key(e.2);
     }
     if q.len() > 1 {
         q.make_contiguous()
@@ -718,7 +938,7 @@ pub(crate) fn resort_keyed(q: &mut VecDeque<KeyedEntry>, w: &ClusterView, stamp:
 /// Head id of a keyed deque.
 #[inline]
 pub(crate) fn keyed_head(q: &VecDeque<KeyedEntry>) -> Option<ReqId> {
-    q.front().map(|&(_, id)| id)
+    q.front().map(|&(_, _, id)| id)
 }
 
 #[cfg(test)]
@@ -781,19 +1001,23 @@ mod tests {
         assert!(register_core("bad name", factory).is_err());
     }
 
+    fn rid(slot: u32) -> crate::core::ReqId {
+        crate::core::ReqId::from(slot)
+    }
+
     #[test]
     fn set_grant_emits_raise_and_reclaim_decisions() {
         let req = crate::core::unit_request(0, 0.0, 10.0, 1, 5);
         let mut v = ClusterView::new(vec![req], Cluster::units(10), Policy::FIFO);
-        v.state_mut(0).phase = Phase::Running;
-        v.set_grant(0, 3);
-        v.set_grant(0, 3); // no change, no decision
-        v.set_grant(0, 1);
+        v.state_mut(rid(0)).phase = Phase::Running;
+        v.set_grant(rid(0), 3);
+        v.set_grant(rid(0), 3); // no change, no decision
+        v.set_grant(rid(0), 1);
         assert_eq!(
             v.drain_decisions(),
             vec![
-                Decision::SetGrant { id: 0, g: 3 },
-                Decision::Reclaim { id: 0, n: 2 },
+                Decision::SetGrant { id: rid(0), g: 3 },
+                Decision::Reclaim { id: rid(0), n: 2 },
             ]
         );
         assert!(v.decisions.is_empty());
@@ -803,15 +1027,73 @@ mod tests {
     fn note_preempted_preserves_work_and_emits_decision() {
         let req = crate::core::unit_request(0, 0.0, 10.0, 2, 0);
         let mut v = ClusterView::new(vec![req], Cluster::units(10), Policy::FIFO);
-        v.state_mut(0).phase = Phase::Running;
-        v.state_mut(0).cur_rate = 2.0;
+        v.state_mut(rid(0)).phase = Phase::Running;
+        v.state_mut(rid(0)).cur_rate = 2.0;
         v.now = 5.0;
-        v.note_preempted(0);
-        let st = v.state(0);
+        v.note_preempted(rid(0));
+        let st = v.state(rid(0));
         assert_eq!(st.phase, Phase::Pending);
         assert_eq!(st.grant, 0);
         assert_eq!(st.cur_rate, 0.0);
         assert!((st.done_work - 10.0).abs() < 1e-9, "accrued work preserved");
-        assert_eq!(v.drain_decisions(), vec![Decision::Preempt { id: 0 }]);
+        assert_eq!(v.drain_decisions(), vec![Decision::Preempt { id: rid(0) }]);
+    }
+
+    // -- the generational slab -------------------------------------------
+
+    #[test]
+    fn slab_recycles_lowest_slot_first_and_bumps_generations() {
+        let mut t = ReqTable::new();
+        let mk = |slot: u32| crate::core::unit_request(slot, 0.0, 1.0, 1, 0);
+        let a = t.alloc(mk(0));
+        let b = t.alloc(mk(0));
+        let c = t.alloc(mk(0));
+        assert_eq!((a.slot, a.gen), (0, 0));
+        assert_eq!((b.slot, b.gen), (1, 0));
+        assert_eq!((c.slot, c.gen), (2, 0));
+        assert_eq!((t.state(a).seq, t.state(b).seq, t.state(c).seq), (0, 1, 2));
+        assert_eq!(t.live(), 3);
+        assert_eq!(t.high_water(), 3);
+        // Free the middle and first slots; the next two allocations take
+        // the *lowest* free slot first, at a bumped generation.
+        t.free(b);
+        t.free(a);
+        assert_eq!(t.live(), 1);
+        assert!(t.get(a).is_none(), "freed handle is stale");
+        let d = t.alloc(mk(0));
+        let e = t.alloc(mk(0));
+        assert_eq!((d.slot, d.gen), (0, 1), "lowest free slot first");
+        assert_eq!((e.slot, e.gen), (1, 1));
+        assert_eq!(t.state(d).seq, 3, "seq is monotone across recycling");
+        assert_eq!(t.capacity(), 3, "no new slot was grown");
+        assert_eq!(t.high_water(), 3);
+        // The stale handles still resolve to nothing, not to d/e.
+        assert!(t.get(a).is_none());
+        assert!(t.get(b).is_none());
+        assert!(t.get(c).is_some(), "untouched occupant unaffected");
+    }
+
+    #[test]
+    fn retained_mode_keeps_records_and_never_reuses_slots() {
+        let mut t = ReqTable::new();
+        t.set_recycle(false);
+        let a = t.alloc(crate::core::unit_request(0, 0.0, 1.0, 1, 0));
+        t.free(a);
+        assert_eq!(t.live(), 0, "retired for the live count");
+        assert!(t.get(a).is_some(), "record retained (dense reference)");
+        let b = t.alloc(crate::core::unit_request(0, 0.0, 1.0, 1, 0));
+        assert_eq!((b.slot, b.gen), (1, 0), "slot 0 is never reused");
+        assert_eq!(t.capacity(), 2);
+        assert_eq!(t.high_water(), 1, "live peak, not table size");
+    }
+
+    #[test]
+    #[should_panic(expected = "stale request handle")]
+    fn stale_handle_access_panics() {
+        let mut t = ReqTable::new();
+        let a = t.alloc(crate::core::unit_request(0, 0.0, 1.0, 1, 0));
+        t.free(a);
+        t.alloc(crate::core::unit_request(0, 0.0, 1.0, 1, 0));
+        let _ = t.state(a);
     }
 }

@@ -20,10 +20,12 @@ use crate::pool::Placement;
 /// nothing admission model it reproduces.
 pub struct RigidScheduler {
     s: Vec<ReqId>,
-    /// Waiting line: (cached policy key, id), ascending.
-    l: VecDeque<(f64, ReqId)>,
-    /// Dense per-request placements (empty = none); core and elastic
-    /// components have different per-component sizes, hence two buffers.
+    /// Waiting line: (cached policy key, submission seq, id), ascending
+    /// by (key, seq).
+    l: VecDeque<(f64, u64, ReqId)>,
+    /// Slot-keyed per-request placements (empty = none); core and
+    /// elastic components have different per-component sizes, hence two
+    /// buffers. A slot's buffers are reused by its next occupant.
     cores: Vec<Placement>,
     elastic: Vec<Placement>,
     /// Simulated time of the last dynamic-policy resort of L.
@@ -43,7 +45,7 @@ impl RigidScheduler {
     }
 
     fn ensure_capacity(&mut self, w: &ClusterView) {
-        let n = w.states.len();
+        let n = w.table.capacity();
         if self.cores.len() < n {
             self.cores.resize_with(n, Placement::default);
             self.elastic.resize_with(n, Placement::default);
@@ -69,7 +71,7 @@ impl RigidScheduler {
             }
             let full = w.state(head).req.n_elastic;
             w.set_grant(head, full); // full allocation, always
-            let placement = self.cores[head as usize].clone();
+            let placement = self.cores[head.index()].clone();
             w.note_admitted(head, placement);
             self.s.push(head);
         }
@@ -79,21 +81,21 @@ impl RigidScheduler {
     /// components — all-or-nothing, into the reusable buffers.
     fn place_full(&mut self, w: &mut ClusterView, head: ReqId) -> bool {
         let (cres, cn, eres, en) = {
-            let r = &w.states[head as usize].req;
+            let r = &w.state(head).req;
             (r.core_res, r.n_core, r.elastic_res, r.n_elastic)
         };
         if !w
             .cluster
-            .place_all_into(&cres, cn, &mut self.cores[head as usize])
+            .place_all_into(&cres, cn, &mut self.cores[head.index()])
         {
             return false;
         }
         if en > 0
             && !w
                 .cluster
-                .place_all_into(&eres, en, &mut self.elastic[head as usize])
+                .place_all_into(&eres, en, &mut self.elastic[head.index()])
         {
-            w.cluster.release_and_clear(&mut self.cores[head as usize]);
+            w.cluster.release_and_clear(&mut self.cores[head.index()]);
             return false;
         }
         true
@@ -111,7 +113,8 @@ impl RigidScheduler {
         self.ensure_capacity(w);
         resort_keyed(&mut self.l, w, &mut self.resort_stamp);
         let key = w.pending_key(id);
-        insert_keyed(&mut self.l, key, id);
+        let seq = w.state(id).seq;
+        insert_keyed(&mut self.l, key, seq, id);
         if keyed_head(&self.l) == Some(id) {
             self.try_admit(w);
         }
@@ -122,11 +125,11 @@ impl RigidScheduler {
         if !self.s.contains(&id) {
             // Cancellation of a still-waiting request (master kill path;
             // never reached by the simulator).
-            self.l.retain(|&(_, x)| x != id);
+            self.l.retain(|&(_, _, x)| x != id);
         }
         self.s.retain(|&x| x != id);
-        w.cluster.release_and_clear(&mut self.cores[id as usize]);
-        w.cluster.release_and_clear(&mut self.elastic[id as usize]);
+        w.cluster.release_and_clear(&mut self.cores[id.index()]);
+        w.cluster.release_and_clear(&mut self.elastic[id.index()]);
         self.try_admit(w);
     }
 }

@@ -1,7 +1,9 @@
-//! The event loop: a lazy-deletion binary heap of arrivals and predicted
-//! departures. Departure events carry an epoch; whenever a grant change
-//! alters a request's predicted finish time, its epoch is bumped and a
-//! fresh event pushed — stale events are skipped on pop.
+//! The event loop: arrivals are **pulled** from a source (a sorted
+//! in-memory list or a streaming [`TraceStream`]) and merged with a
+//! lazy-deletion binary heap of predicted departures. Departure events
+//! carry an epoch; whenever a grant change alters a request's predicted
+//! finish time, its epoch is bumped and a fresh event pushed — stale
+//! events are skipped on pop.
 //!
 //! # The engine is an executor
 //!
@@ -13,6 +15,25 @@
 //! exactly those get their predicted departure refreshed (and a
 //! [`Decision::Preempt`] retires the prediction outright). The trace
 //! recorder's `alloc` lines are sourced from the same stream.
+//!
+//! # Memory: O(active), not O(total)
+//!
+//! The engine owns the slot lifecycle of the view's generational
+//! [`crate::sched::ReqTable`]: a request's slot is allocated when its
+//! arrival is pulled from the source and freed as soon as its departure
+//! is fully applied, so the request table — and every slot-keyed side
+//! buffer (the cores' placement stores, the recorder's dedup array) —
+//! peaks at the **active high-water mark**, not at total submissions.
+//! Arrivals are never materialized in the heap either: the heap holds
+//! only live departure predictions (plus bounded stale debris, see
+//! compaction below), and a [`TraceStream`]-fed run reads one arrival at
+//! a time, so arbitrarily long traces replay in constant memory.
+//!
+//! Staleness is two-layered: an *epoch* mismatch catches re-predictions
+//! of the same request (as before), and a *generation* mismatch catches
+//! events whose slot has since been recycled — both are rejected at pop
+//! exactly like the pre-slab stale-heap entries, and both fold into the
+//! same compaction accounting.
 //!
 //! # Per-event cost: O(changed), not O(|serving set|)
 //!
@@ -44,9 +65,12 @@
 //! algorithm — eager accrual over the whole serving set on every event
 //! plus a full refresh, and no compaction — and also flips
 //! `ClusterView::naive` so the cores disable their incremental
-//! shortcuts. `rust/tests/sim_properties.rs` runs both engines
-//! differentially across seeds, schedulers and policies and asserts the
-//! sample sets match.
+//! shortcuts. Orthogonally, [`Simulation::retain_slots`] disables slot
+//! recycling (the *retained dense* reference). `rust/tests/
+//! sim_properties.rs` runs engines differentially across seeds,
+//! schedulers and policies — optimized vs naive, and recycling vs
+//! retained — and asserts the results match (bitwise, for the slab
+//! differential).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -56,19 +80,16 @@ use crate::policy::Policy;
 use crate::pool::Cluster;
 use crate::sched::{ClusterView, Decision, Phase, SchedEvent, SchedSpec, SchedulerCore};
 use crate::sim::metrics::{MetricsCollector, SimResult};
-use crate::trace::TraceRecorder;
+use crate::trace::{TraceError, TraceRecorder, TraceStream};
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum EvKind {
-    Arrival(ReqId),
-    Departure(ReqId, u32),
-}
-
+/// A predicted-departure event (arrivals never enter the heap — they are
+/// pulled from the arrival source in order).
 #[derive(Clone, Copy, Debug)]
 struct Ev {
     t: f64,
     seq: u64,
-    kind: EvKind,
+    id: ReqId,
+    epoch: u32,
 }
 
 impl PartialEq for Ev {
@@ -113,17 +134,30 @@ pub enum EngineMode {
     Naive,
 }
 
+/// Where the engine pulls arrivals from: a pre-sorted in-memory list, or
+/// a streaming trace reader (constant memory, arrival-ordered).
+enum ArrivalSource {
+    List(std::vec::IntoIter<Request>),
+    Stream(TraceStream),
+}
+
 /// A complete simulation run: requests + cluster + policy + scheduler.
 pub struct Simulation {
     world: ClusterView,
     sched: Box<dyn SchedulerCore>,
+    arrivals: ArrivalSource,
+    /// One-item lookahead into the arrival source (the next arrival is
+    /// compared against the heap's next departure).
+    next_arrival: Option<Request>,
     heap: BinaryHeap<Ev>,
     seq: u64,
     metrics: MetricsCollector,
     mode: EngineMode,
     /// Exact count of stale (lazy-deleted) departure events currently in
     /// the heap: +1 when a prediction is replaced, −1 when a stale event
-    /// is skipped on pop, reset by compaction.
+    /// is skipped on pop, reset by compaction. Generation-stale events
+    /// (recycled slots) are part of the same count: their prediction was
+    /// replaced or retired before the slot could be freed.
     stale: usize,
     /// Number of heap compactions performed (reported in `SimResult`).
     compactions: u64,
@@ -151,14 +185,12 @@ impl Simulation {
     /// Build a simulation with an explicit [`EngineMode`] (differential
     /// testing, bench baselines).
     pub fn with_mode(
-        requests: Vec<Request>,
+        mut requests: Vec<Request>,
         cluster: Cluster,
         policy: Policy,
         sched: impl Into<SchedSpec>,
         mode: EngineMode,
     ) -> Self {
-        let mut heap = BinaryHeap::with_capacity(requests.len() * 2);
-        let mut seq = 0u64;
         for r in &requests {
             assert!(
                 r.arrival.is_finite(),
@@ -166,22 +198,68 @@ impl Simulation {
                 r.id,
                 r.arrival
             );
-            heap.push(Ev {
-                t: r.arrival,
-                seq,
-                kind: EvKind::Arrival(r.id),
-            });
-            seq += 1;
         }
-        let metrics = MetricsCollector::new();
-        let mut world = ClusterView::new(requests, cluster, policy);
+        // Stable sort by arrival: exactly the order the pre-slab heap
+        // popped arrivals in ((time, push-seq) with push-seq = input
+        // order), so results are unchanged for unsorted inputs too.
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        Self::build(
+            ArrivalSource::List(requests.into_iter()),
+            cluster,
+            policy,
+            sched.into(),
+            mode,
+        )
+    }
+
+    /// Build a simulation that pulls arrivals from a [`TraceStream`] —
+    /// one request in memory at a time, so traces far larger than RAM
+    /// replay at O(active) memory. The stream must be arrival-ordered
+    /// (the stream itself enforces this and yields a
+    /// [`TraceError`] otherwise — run with [`Simulation::try_run`]).
+    pub fn from_stream(
+        stream: TraceStream,
+        cluster: Cluster,
+        policy: Policy,
+        sched: impl Into<SchedSpec>,
+    ) -> Self {
+        Self::from_stream_with_mode(stream, cluster, policy, sched, EngineMode::Optimized)
+    }
+
+    /// [`Simulation::from_stream`] with an explicit [`EngineMode`].
+    pub fn from_stream_with_mode(
+        stream: TraceStream,
+        cluster: Cluster,
+        policy: Policy,
+        sched: impl Into<SchedSpec>,
+        mode: EngineMode,
+    ) -> Self {
+        Self::build(
+            ArrivalSource::Stream(stream),
+            cluster,
+            policy,
+            sched.into(),
+            mode,
+        )
+    }
+
+    fn build(
+        arrivals: ArrivalSource,
+        cluster: Cluster,
+        policy: Policy,
+        sched: SchedSpec,
+        mode: EngineMode,
+    ) -> Self {
+        let mut world = ClusterView::empty(cluster, policy);
         world.naive = mode == EngineMode::Naive;
         Simulation {
             world,
-            sched: sched.into().build(),
-            heap,
-            seq,
-            metrics,
+            sched: sched.build(),
+            arrivals,
+            next_arrival: None,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            metrics: MetricsCollector::new(),
             mode,
             stale: 0,
             compactions: 0,
@@ -199,6 +277,24 @@ impl Simulation {
         self
     }
 
+    /// Disable slot recycling: the request table keeps every record and
+    /// grows densely — the *retained dense* reference (pre-slab
+    /// behavior) the differential tests compare the slab against.
+    /// Results are bit-identical either way; only memory differs.
+    pub fn retain_slots(mut self) -> Self {
+        self.world.table.set_recycle(false);
+        self
+    }
+
+    /// Advance the lookahead to the next arrival in the source.
+    fn pull_arrival(&mut self) -> Result<(), TraceError> {
+        self.next_arrival = match &mut self.arrivals {
+            ArrivalSource::List(it) => it.next(),
+            ArrivalSource::Stream(s) => s.next().transpose()?,
+        };
+        Ok(())
+    }
+
     /// Push a departure event, rejecting non-finite times up front: the
     /// heap's ordering is total, but a NaN prediction would silently
     /// corrupt the schedule, so it is an invariant violation here.
@@ -207,7 +303,8 @@ impl Simulation {
         self.heap.push(Ev {
             t,
             seq: self.seq,
-            kind: EvKind::Departure(id, epoch),
+            id,
+            epoch,
         });
         self.seq += 1;
     }
@@ -219,7 +316,7 @@ impl Simulation {
         debug_assert!(t >= self.world.now - 1e-9, "time must not go backwards");
         if self.mode == EngineMode::Naive {
             for &id in self.sched.serving() {
-                let st = &mut self.world.states[id as usize];
+                let st = self.world.table.state_mut(id);
                 let dt = t - st.last_accrual;
                 if dt > 0.0 {
                     st.done_work += st.req.rate(st.grant) * dt;
@@ -265,7 +362,7 @@ impl Simulation {
     /// compaction drops it, and forget the prediction so a later
     /// re-admission pushes a fresh event.
     fn retire_prediction(&mut self, id: ReqId) {
-        let st = &mut self.world.states[id as usize];
+        let st = self.world.table.state_mut(id);
         debug_assert_ne!(st.phase, Phase::Running, "preempted request still running");
         if st.predicted_finish.is_finite() {
             st.epoch += 1;
@@ -276,7 +373,7 @@ impl Simulation {
 
     fn refresh_one(&mut self, id: ReqId, now: f64) {
         let (finish, epoch, replaced) = {
-            let st = &mut self.world.states[id as usize];
+            let st = self.world.table.state_mut(id);
             if st.phase != Phase::Running {
                 // A request can enter the changed set and then depart (or
                 // be re-queued) within the same scheduling action.
@@ -305,11 +402,11 @@ impl Simulation {
     }
 
     /// Rebuild the heap from its live entries once stale (lazy-deleted)
-    /// events dominate: kept are all arrivals (they are never stale) and
-    /// the departure events whose epoch still matches a running request.
-    /// Discarded events are exactly those a pop would skip, so event
-    /// order is untouched. Optimized mode only — the naive reference
-    /// keeps the seed behavior.
+    /// events dominate: kept are exactly the departure events whose
+    /// generation *and* epoch still match a running request. Discarded
+    /// events are exactly those a pop would skip, so event order is
+    /// untouched. Optimized mode only — the naive reference keeps the
+    /// seed behavior.
     fn maybe_compact(&mut self) {
         if self.mode != EngineMode::Optimized
             || self.stale < COMPACT_MIN_STALE
@@ -318,15 +415,13 @@ impl Simulation {
             return;
         }
         let events = std::mem::take(&mut self.heap).into_vec();
-        let states = &self.world.states;
+        let table = &self.world.table;
         let kept: Vec<Ev> = events
             .into_iter()
-            .filter(|ev| match ev.kind {
-                EvKind::Arrival(_) => true,
-                EvKind::Departure(id, epoch) => {
-                    let st = &states[id as usize];
-                    st.phase == Phase::Running && st.epoch == epoch
-                }
+            .filter(|ev| {
+                table
+                    .get(ev.id)
+                    .map_or(false, |st| st.phase == Phase::Running && st.epoch == ev.epoch)
             })
             .collect();
         self.heap = BinaryHeap::from(kept);
@@ -347,103 +442,143 @@ impl Simulation {
     }
 
     /// Run to completion; consumes the simulation.
-    pub fn run(mut self) -> SimResult {
+    ///
+    /// # Panics
+    ///
+    /// A stream-fed simulation panics if the stream yields a
+    /// [`TraceError`] mid-replay (malformed line, out-of-order arrival,
+    /// truncated recording); use [`Simulation::try_run`] to handle that
+    /// gracefully. List-fed simulations cannot fail.
+    pub fn run(self) -> SimResult {
+        match self.try_run() {
+            Ok(res) => res,
+            Err(e) => panic!("trace stream failed mid-replay: {e}"),
+        }
+    }
+
+    /// Run to completion, surfacing arrival-stream failures instead of
+    /// panicking; consumes the simulation.
+    pub fn try_run(mut self) -> Result<SimResult, TraceError> {
         let wall = std::time::Instant::now();
         let mut events = 0u64;
-        while let Some(ev) = self.heap.pop() {
-            match ev.kind {
-                EvKind::Arrival(id) => {
-                    events += 1;
-                    self.advance_to(ev.t);
-                    {
-                        let st = self.world.state_mut(id);
-                        debug_assert_eq!(st.phase, Phase::Future);
-                        st.phase = Phase::Pending;
-                    }
-                    if let Some(rec) = self.recorder.as_mut() {
-                        rec.record_arrival(ev.t, &self.world.states[id as usize].req);
-                    }
-                    self.sched.on_event(SchedEvent::Arrival(id), &mut self.world);
-                    // Read the decision stream before apply_decisions
-                    // drains it.
-                    if let Some(rec) = self.recorder.as_mut() {
-                        rec.record_changes(ev.t, "arrival", id, &self.world);
-                    }
-                    self.apply_decisions();
-                    self.sample_metrics();
-                    self.maybe_compact();
+        self.pull_arrival()?;
+        loop {
+            // Next event: earliest of (next arrival, next heap entry);
+            // ties go to the arrival — the pre-slab heap gave arrivals
+            // strictly smaller push-seqs, so this preserves event order.
+            let ta = self.next_arrival.as_ref().map(|r| r.arrival);
+            let td = self.heap.peek().map(|ev| ev.t);
+            let take_arrival = match (ta, td) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(a), Some(d)) => a <= d,
+            };
+            if take_arrival {
+                let req = self.next_arrival.take().expect("peeked arrival");
+                let t = req.arrival;
+                events += 1;
+                self.advance_to(t);
+                let id = self.world.alloc(req);
+                self.world.state_mut(id).phase = Phase::Pending;
+                let src_seq = self.world.state(id).seq;
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.record_arrival(t, self.world.state(id));
                 }
-                EvKind::Departure(id, epoch) => {
-                    // Lazy deletion of stale predictions.
-                    {
-                        let st = self.world.state(id);
-                        if st.phase != Phase::Running || st.epoch != epoch {
-                            self.stale = self.stale.saturating_sub(1);
-                            continue;
-                        }
-                    }
-                    events += 1;
-                    self.advance_to(ev.t);
-                    let (arrival, admit, runtime, class) = {
-                        let st = self.world.state_mut(id);
-                        // Fold the final accrual segment (no-op in naive
-                        // mode, where advance_to already did it).
-                        st.accrue(ev.t);
-                        debug_assert!(
-                            st.remaining_work() < 1e-6 * st.req.work().max(1.0),
-                            "departing request must have completed its work \
-                             (remaining={}, req={})",
-                            st.remaining_work(),
-                            st.req.id
-                        );
-                        st.phase = Phase::Done;
-                        st.grant = 0;
-                        st.cur_rate = 0.0;
-                        (st.req.arrival, st.admit_time, st.req.runtime, st.req.class)
-                    };
-                    let now = self.world.now;
-                    self.metrics.record_completion(
-                        class,
-                        now - arrival,          // turnaround
-                        admit - arrival,        // queuing time
-                        (now - admit) / runtime, // slowdown
+                self.sched.on_event(SchedEvent::Arrival(id), &mut self.world);
+                // Read the decision stream before apply_decisions
+                // drains it.
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.record_changes(t, "arrival", src_seq, &self.world);
+                }
+                self.apply_decisions();
+                self.sample_metrics();
+                self.maybe_compact();
+                self.pull_arrival()?;
+            } else {
+                let ev = self.heap.pop().expect("peeked departure");
+                // Lazy deletion, two layers: a recycled slot (generation
+                // mismatch — `get` returns None) or a re-predicted finish
+                // (epoch mismatch) both mean the event is stale.
+                let live = self
+                    .world
+                    .get(ev.id)
+                    .map_or(false, |st| st.phase == Phase::Running && st.epoch == ev.epoch);
+                if !live {
+                    self.stale = self.stale.saturating_sub(1);
+                    continue;
+                }
+                events += 1;
+                self.advance_to(ev.t);
+                let (arrival, admit, runtime, class, dep_seq) = {
+                    let st = self.world.table.state_mut(ev.id);
+                    // Fold the final accrual segment (no-op in naive
+                    // mode, where advance_to already did it).
+                    st.accrue(ev.t);
+                    debug_assert!(
+                        st.remaining_work() < 1e-6 * st.req.work().max(1.0),
+                        "departing request must have completed its work \
+                         (remaining={}, req={})",
+                        st.remaining_work(),
+                        st.req.id
                     );
-                    if let Some(rec) = self.recorder.as_mut() {
-                        rec.record_departure(
-                            now,
-                            id,
-                            now - arrival,
-                            admit - arrival,
-                            (now - admit) / runtime,
-                        );
-                    }
-                    self.sched.on_event(SchedEvent::Departure(id), &mut self.world);
-                    if let Some(rec) = self.recorder.as_mut() {
-                        rec.record_changes(ev.t, "departure", id, &self.world);
-                    }
-                    self.apply_decisions();
-                    self.sample_metrics();
-                    self.maybe_compact();
+                    st.phase = Phase::Done;
+                    st.grant = 0;
+                    st.cur_rate = 0.0;
+                    (st.req.arrival, st.admit_time, st.req.runtime, st.req.class, st.seq)
+                };
+                let now = self.world.now;
+                self.metrics.record_completion(
+                    class,
+                    now - arrival,          // turnaround
+                    admit - arrival,        // queuing time
+                    (now - admit) / runtime, // slowdown
+                );
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.record_departure(
+                        now,
+                        ev.id,
+                        dep_seq,
+                        now - arrival,
+                        admit - arrival,
+                        (now - admit) / runtime,
+                    );
                 }
+                self.sched.on_event(SchedEvent::Departure(ev.id), &mut self.world);
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.record_changes(ev.t, "departure", dep_seq, &self.world);
+                }
+                self.apply_decisions();
+                self.sample_metrics();
+                // The slot is dead to every layer now — the core dropped
+                // it, the decisions are applied, the recorder is flushed
+                // — so recycle it; the very next arrival may take it (at
+                // a bumped generation).
+                self.world.free(ev.id);
+                self.maybe_compact();
             }
         }
         if let Some(rec) = self.recorder.as_mut() {
             rec.finish(self.world.now, events);
         }
-        // Sanity: everything completed.
+        // Sanity: everything completed (occupied non-Done slots are
+        // requests that never finished; completed slots were freed — or,
+        // in retained mode, kept with phase Done).
         let unfinished = self
             .world
-            .states
-            .iter()
-            .filter(|s| s.phase != Phase::Done)
+            .table
+            .iter_occupied()
+            .filter(|(_, s)| s.phase != Phase::Done)
             .count();
-        self.metrics.finalize(
+        Ok(self.metrics.finalize(
             self.world.now,
             events,
             unfinished,
             wall.elapsed().as_secs_f64(),
             self.compactions,
-        )
+            self.world.table.high_water() as u64,
+            self.world.table.capacity() as u64,
+        ))
     }
 }
 
@@ -542,7 +677,9 @@ mod tests {
 
     #[test]
     fn sequential_arrivals_no_contention() {
-        // Two small requests arriving far apart never queue.
+        // Two small requests arriving far apart never queue — and, with
+        // no overlap, the second reuses the first's slot: the table
+        // peaks at one live request.
         let reqs = vec![
             unit_request(0, 0.0, 10.0, 2, 0),
             unit_request(1, 100.0, 10.0, 2, 0),
@@ -551,6 +688,8 @@ mod tests {
             let res = simulate(reqs.clone(), Cluster::units(10), Policy::FIFO, kind);
             assert_eq!(res.completed, 2);
             assert!((res.queuing.max() - 0.0).abs() < 1e-9, "{kind:?}");
+            assert_eq!(res.slab_high_water, 1, "{kind:?}: slot recycled");
+            assert_eq!(res.slot_capacity, 1, "{kind:?}: table stayed at one slot");
         }
     }
 
@@ -589,18 +728,20 @@ mod tests {
         assert_eq!(res.completed, 4);
         assert!(res.events >= 8); // 4 arrivals + 4 departures
         assert_eq!(res.unfinished, 0);
+        assert_eq!(res.slab_high_water, 4, "all four overlap");
     }
 
     #[test]
     fn event_ordering_is_total_and_time_then_seq() {
-        let a = Ev { t: 1.0, seq: 0, kind: EvKind::Arrival(0) };
-        let b = Ev { t: 2.0, seq: 1, kind: EvKind::Arrival(1) };
-        let c = Ev { t: 1.0, seq: 2, kind: EvKind::Arrival(2) };
+        let id = ReqId::from(0u32);
+        let a = Ev { t: 1.0, seq: 0, id, epoch: 0 };
+        let b = Ev { t: 2.0, seq: 1, id, epoch: 0 };
+        let c = Ev { t: 1.0, seq: 2, id, epoch: 0 };
         // Reversed compare: earlier time is "greater" (pops first).
         assert!(a > b);
         assert!(a > c, "FIFO tie-break: lower seq pops first");
         // total_cmp keeps even pathological values ordered without panics.
-        let n = Ev { t: f64::NAN, seq: 3, kind: EvKind::Arrival(3) };
+        let n = Ev { t: f64::NAN, seq: 3, id, epoch: 0 };
         let _ = a.cmp(&n);
         let _ = n.cmp(&n);
     }
@@ -623,5 +764,55 @@ mod tests {
             SchedKind::Flexible,
         );
         assert_eq!(res.heap_compactions, 0);
+    }
+
+    /// The generation check is what makes slot recycling safe against
+    /// epoch collisions: a departed elastic request leaves stale events
+    /// at epochs 1..k in the heap; its recycled slot's next occupant
+    /// counts its *own* epochs from 0, so a leftover (slot, epoch) pair
+    /// can match a live one exactly — only the generation tells them
+    /// apart. This workload engineers that collision and asserts the
+    /// run still completes identically to the retained reference.
+    #[test]
+    fn stale_events_of_recycled_slots_are_dropped() {
+        // Timeline (units(10), FIFO): two elastic requests ahead of r2
+        // in serving order squeeze its grant to 1 (rate 2), predicting
+        // its finish at t=75 (epoch 1). When the first one departs at
+        // t=5 the cascade raises r2's grant to 4 (epoch 2, true finish
+        // t=33) — leaving the epoch-1 event for t=75 stale in the heap.
+        // r2 departs at 33 and its slot (2) is freed.
+        let reqs = vec![
+            unit_request(0, 0.0, 5.0, 1, 3),
+            unit_request(1, 0.0, 10.0, 1, 3),
+            unit_request(2, 0.0, 30.0, 1, 4), // W=150: grant 1 -> 4
+            // Two rigid quickies take the lower free slots 0 and 1, so
+            // the next elastic arrival reuses exactly slot 2 (gen 1)...
+            unit_request(3, 35.0, 2.0, 1, 0),
+            unit_request(4, 35.0, 2.0, 1, 0),
+            // ...and is still Running with epoch 1 (admitted at full
+            // grant, finish t=86) when r2's stale (slot 2, gen 0,
+            // epoch 1) event pops at t=75: phase and epoch both match —
+            // only the generation check can reject it.
+            unit_request(5, 36.0, 50.0, 1, 3),
+        ];
+        let recycled = simulate(reqs.clone(), Cluster::units(10), Policy::FIFO, SchedKind::Flexible);
+        let retained = Simulation::new(reqs, Cluster::units(10), Policy::FIFO, SchedKind::Flexible)
+            .retain_slots()
+            .run();
+        assert_eq!(recycled.completed, 6);
+        assert_eq!(recycled.unfinished, 0);
+        assert_eq!(recycled.completed, retained.completed);
+        assert_eq!(recycled.events, retained.events);
+        assert_eq!(
+            recycled.end_time.to_bits(),
+            retained.end_time.to_bits(),
+            "recycling must not change the schedule"
+        );
+        assert!(
+            recycled.slot_capacity < retained.slot_capacity,
+            "recycling reused at least one slot ({} vs {})",
+            recycled.slot_capacity,
+            retained.slot_capacity
+        );
     }
 }

@@ -35,8 +35,8 @@ use crate::core::Request;
 use crate::policy::Policy;
 use crate::pool::Cluster;
 use crate::sched::SchedSpec;
-use crate::sim::{simulate_with_mode, EngineMode, SimResult};
-use crate::trace::TraceSource;
+use crate::sim::{simulate_with_mode, EngineMode, SimResult, Simulation};
+use crate::trace::{IngestOptions, TraceError, TraceSource, TraceStream};
 use crate::workload::WorkloadSpec;
 
 /// One scheduler configuration in an experiment grid.
@@ -93,13 +93,16 @@ pub struct ExperimentPlan {
     threads: usize,
 }
 
-/// Where a plan's requests come from: a seeded synthetic workload, or a
+/// Where a plan's requests come from: a seeded synthetic workload, a
 /// fixed ingested trace replayed verbatim (shared behind an `Arc` so
-/// cloning a plan — and handing it to worker threads — stays cheap).
+/// cloning a plan — and handing it to worker threads — stays cheap), or
+/// a trace file each task re-opens and **streams** (per-task memory is
+/// O(active), never the whole trace).
 #[derive(Clone, Debug)]
 enum Source {
     Spec { spec: WorkloadSpec, apps: u32 },
     Trace(Arc<Vec<Request>>),
+    StreamPath { path: String, opts: IngestOptions },
 }
 
 impl ExperimentPlan {
@@ -119,6 +122,28 @@ impl ExperimentPlan {
     /// seed (per-seed results are bit-identical).
     pub fn from_trace(trace: TraceSource) -> Self {
         Self::with_source(Source::Trace(Arc::new(trace.into_requests())), vec![0])
+    }
+
+    /// A plan that **streams** the JSONL trace at `path` instead of
+    /// materializing it: every grid task re-opens the file and pulls one
+    /// arrival at a time ([`TraceStream`]), so per-task memory stays
+    /// O(active) no matter how long the trace is — the way to fan a
+    /// ClusterData2011-scale replay out over a config grid. The file
+    /// must be arrival-ordered (recorded event logs are); a mid-replay
+    /// stream error fails the run with a clear panic naming the line.
+    /// Fails fast (before any simulation) when the file cannot be
+    /// opened or is a CSV, which cannot stream.
+    pub fn from_trace_path(path: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        // Validate eagerly: open (and immediately drop) a stream so a
+        // bad path/format errors here, not inside a worker thread.
+        let _probe = TraceStream::open(path, opts)?;
+        Ok(Self::with_source(
+            Source::StreamPath {
+                path: path.to_string(),
+                opts: opts.clone(),
+            },
+            vec![0],
+        ))
     }
 
     fn with_source(source: Source, seeds: Vec<u64>) -> Self {
@@ -182,11 +207,26 @@ impl ExperimentPlan {
     }
 
     fn run_one(&self, ci: usize, seed: u64) -> SimResult {
+        let c = &self.configs[ci];
         let requests = match &self.source {
             Source::Spec { spec, apps } => spec.generate(*apps, seed),
             Source::Trace(reqs) => reqs.as_ref().clone(),
+            Source::StreamPath { path, opts } => {
+                // Re-open per task: each simulation pulls its own stream
+                // (workers never share readers), keeping memory O(active).
+                let stream = TraceStream::open(path, opts)
+                    .unwrap_or_else(|e| panic!("cannot stream {path}: {e}"));
+                return Simulation::from_stream_with_mode(
+                    stream,
+                    self.cluster.clone(),
+                    c.policy,
+                    c.sched.clone(),
+                    self.mode,
+                )
+                .try_run()
+                .unwrap_or_else(|e| panic!("streaming replay of {path} failed: {e}"));
+            }
         };
-        let c = &self.configs[ci];
         simulate_with_mode(
             requests,
             self.cluster.clone(),

@@ -85,6 +85,7 @@ impl MetricsCollector {
 
     /// Close the signals at `end` and package everything into a
     /// [`SimResult`].
+    #[allow(clippy::too_many_arguments)]
     pub fn finalize(
         mut self,
         end: f64,
@@ -92,6 +93,8 @@ impl MetricsCollector {
         unfinished: usize,
         wall_secs: f64,
         heap_compactions: u64,
+        slab_high_water: u64,
+        slot_capacity: u64,
     ) -> SimResult {
         self.pending_q.finish(end);
         self.running_q.finish(end);
@@ -121,6 +124,8 @@ impl MetricsCollector {
             end_time: end,
             wall_secs,
             heap_compactions,
+            slab_high_water,
+            slot_capacity,
         }
     }
 }
@@ -176,6 +181,13 @@ pub struct SimResult {
     /// Event-heap compactions performed (stale lazy-deleted entries
     /// evicted in bulk; see `sim::engine`).
     pub heap_compactions: u64,
+    /// Peak number of simultaneously in-system applications — the
+    /// request slab's O(active) bound (max across merged runs).
+    pub slab_high_water: u64,
+    /// Slots the request table grew to (equals `slab_high_water` when
+    /// recycling; equals total submissions in retained-dense mode; max
+    /// across merged runs).
+    pub slot_capacity: u64,
 }
 
 impl SimResult {
@@ -217,6 +229,10 @@ impl SimResult {
         self.wall_secs += other.wall_secs;
         self.heap_compactions += other.heap_compactions;
         self.end_time = self.end_time.max(other.end_time);
+        // High-water marks are per-run peaks; a merged result reports
+        // the worst case over its runs (runs share no slab).
+        self.slab_high_water = self.slab_high_water.max(other.slab_high_water);
+        self.slot_capacity = self.slot_capacity.max(other.slot_capacity);
     }
 
     /// Print the paper's standard box-plot panels for this run:
@@ -283,7 +299,7 @@ mod tests {
         m.record_completion(AppClass::BatchElastic, 10.0, 2.0, 1.0);
         m.record_completion(AppClass::BatchRigid, 20.0, 4.0, 1.0);
         m.record_completion(AppClass::BatchRigid, 30.0, 6.0, 1.0);
-        let r = m.finalize(100.0, 6, 0, 0.0, 0);
+        let r = m.finalize(100.0, 6, 0, 0.0, 0, 0, 0);
         assert_eq!(r.class(AppClass::BatchElastic).turnaround.len(), 1);
         assert_eq!(r.class(AppClass::BatchRigid).turnaround.len(), 2);
         assert_eq!(r.class(AppClass::Interactive).turnaround.len(), 0);
@@ -295,16 +311,18 @@ mod tests {
     fn merge_accumulates() {
         let mut a = MetricsCollector::new();
         a.record_completion(AppClass::BatchElastic, 10.0, 0.0, 1.0);
-        let mut ra = a.finalize(10.0, 2, 0, 0.1, 1);
+        let mut ra = a.finalize(10.0, 2, 0, 0.1, 1, 5, 5);
         let mut b = MetricsCollector::new();
         b.record_completion(AppClass::BatchElastic, 30.0, 0.0, 1.0);
-        let rb = b.finalize(20.0, 2, 0, 0.1, 2);
+        let rb = b.finalize(20.0, 2, 0, 0.1, 2, 9, 9);
         ra.merge(&rb);
         assert_eq!(ra.completed, 2);
         assert!((ra.turnaround.mean() - 20.0).abs() < 1e-9);
         assert_eq!(ra.events, 4);
         assert_eq!(ra.heap_compactions, 3);
         assert_eq!(ra.end_time, 20.0);
+        assert_eq!(ra.slab_high_water, 9, "merged peak is the max");
+        assert_eq!(ra.slot_capacity, 9);
     }
 
     #[test]
@@ -313,10 +331,10 @@ mod tests {
         // Merged mean pending = (10 + 90) / 40 = 2.5.
         let mut a = MetricsCollector::new();
         a.sample(0.0, 1, 0, 0.0, 0.0);
-        let mut ra = a.finalize(10.0, 1, 0, 0.0, 0);
+        let mut ra = a.finalize(10.0, 1, 0, 0.0, 0, 0, 0);
         let mut b = MetricsCollector::new();
         b.sample(0.0, 3, 0, 0.0, 0.0);
-        let rb = b.finalize(30.0, 1, 0, 0.0, 0);
+        let rb = b.finalize(30.0, 1, 0, 0.0, 0, 0, 0);
         ra.merge(&rb);
         let bp = ra.pending_q.boxplot();
         assert!((bp.mean - 2.5).abs() < 1e-9, "merged mean {}", bp.mean);

@@ -49,6 +49,14 @@ pub struct TraceStats {
     pub n_batch_elastic: usize,
     /// Number of batch-rigid applications.
     pub n_batch_rigid: usize,
+    /// Peak concurrently in-system applications under the
+    /// isolated-execution approximation (each app occupies
+    /// `[arrival, arrival + runtime)`; queuing and contention can only
+    /// stretch residence, never overlap more arrivals, so the true peak
+    /// under any scheduler is at least the arrival overlap this counts
+    /// at full allocation). This is the number to size the O(active)
+    /// request slab — and the cluster — against.
+    pub peak_concurrent: usize,
 }
 
 impl TraceStats {
@@ -66,9 +74,12 @@ impl TraceStats {
             n_interactive: 0,
             n_batch_elastic: 0,
             n_batch_rigid: 0,
+            peak_concurrent: 0,
         };
         let mut prev: Option<f64> = None;
+        let mut spans: Vec<(f64, f64)> = Vec::with_capacity(trace.len());
         for r in trace.requests() {
+            spans.push((r.arrival, r.arrival + r.runtime));
             s.runtime.push(r.runtime);
             s.cpu.push(r.core_res.cpu);
             s.ram_mb.push(r.core_res.ram_mb);
@@ -96,6 +107,7 @@ impl TraceStats {
                 }
             }
         }
+        s.peak_concurrent = peak_overlap(spans);
         s
     }
 
@@ -103,6 +115,26 @@ impl TraceStats {
     pub fn total(&self) -> usize {
         self.n_interactive + self.n_batch_elastic + self.n_batch_rigid
     }
+}
+
+/// Peak overlap of half-open `[start, end)` spans, by event sweep. An
+/// arrival coinciding exactly with a departure counts both (the
+/// simulator processes the arrival first, so both momentarily occupy
+/// slab slots) — a conservative match for the slab's high-water mark.
+fn peak_overlap(spans: Vec<(f64, f64)>) -> usize {
+    let mut events: Vec<(f64, i32)> = Vec::with_capacity(spans.len() * 2);
+    for (a, b) in spans {
+        events.push((a, 1));
+        events.push((b, -1));
+    }
+    // At equal times, arrivals (+1) before departures (−1).
+    events.sort_by(|x, y| x.0.total_cmp(&y.0).then(y.1.cmp(&x.1)));
+    let (mut cur, mut peak) = (0i64, 0i64);
+    for (_, d) in events {
+        cur += d as i64;
+        peak = peak.max(cur);
+    }
+    peak.max(0) as usize
 }
 
 /// Fit a piecewise-linear CDF through the samples' quantiles at
@@ -309,6 +341,28 @@ mod tests {
         assert_eq!(st.runtime.len(), 3);
         // rigid app contributes 1 cpu sample, elastic apps 2 each
         assert_eq!(st.cpu.len(), 5);
+        // Spans [0,10), [5,25), [9,39): all three overlap during [9,10).
+        assert_eq!(st.peak_concurrent, 3);
+    }
+
+    #[test]
+    fn peak_concurrency_counts_touching_spans_conservatively() {
+        // Back-to-back spans: the second arrives exactly as the first
+        // ends — the sweep counts both (arrival before departure at
+        // ties, matching the simulator's event order).
+        let reqs = vec![
+            unit_request(0, 0.0, 10.0, 1, 0),
+            unit_request(1, 10.0, 10.0, 1, 0),
+        ];
+        let st = TraceStats::collect(&TraceSource::new(reqs));
+        assert_eq!(st.peak_concurrent, 2);
+        // Fully disjoint spans never overlap.
+        let reqs = vec![
+            unit_request(0, 0.0, 5.0, 1, 0),
+            unit_request(1, 100.0, 5.0, 1, 0),
+        ];
+        let st = TraceStats::collect(&TraceSource::new(reqs));
+        assert_eq!(st.peak_concurrent, 1);
     }
 
     #[test]

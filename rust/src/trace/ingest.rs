@@ -6,7 +6,7 @@
 use std::collections::{BTreeMap, HashSet};
 use std::io::BufRead;
 
-use crate::core::{AppClass, Request, Resources};
+use crate::core::{AppClass, ReqId, Request, Resources};
 use crate::policy::Policy;
 use crate::pool::Cluster;
 use crate::sched::SchedSpec;
@@ -95,7 +95,9 @@ impl TraceSource {
         let mut requests = requests;
         requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         for (i, r) in requests.iter_mut().enumerate() {
-            r.id = i as u32;
+            // Placeholder handles in arrival order; the engine's request
+            // table assigns the real generational ids at allocation.
+            r.id = ReqId::from(i as u32);
         }
         TraceSource { requests, skipped: 0 }
     }
@@ -252,12 +254,13 @@ impl TraceSource {
 }
 
 /// Serialize a request as the flat key/value pairs of the native JSONL
-/// app-trace format (shared with the recorder's `arrival` lines).
-/// Numbers round-trip exactly: the JSON writer emits shortest-roundtrip
-/// floats, which is what makes record → replay bit-identical.
+/// app-trace format (shared with the recorder's `arrival` lines, which
+/// prepend their own identity fields — `id` = submission seq, plus the
+/// generational `slot`/`gen`; ingest ignores all three). Numbers
+/// round-trip exactly: the JSON writer emits shortest-roundtrip floats,
+/// which is what makes record → replay bit-identical.
 pub(crate) fn request_to_json_fields(r: &Request) -> Vec<(&'static str, Json)> {
     vec![
-        ("id", Json::num(r.id as f64)),
         ("class", Json::str(r.class.label())),
         ("arrival", Json::num(r.arrival)),
         ("runtime", Json::num(r.runtime)),
@@ -272,7 +275,7 @@ pub(crate) fn request_to_json_fields(r: &Request) -> Vec<(&'static str, Json)> {
 }
 
 /// What one JSONL line turned out to be.
-enum LineKind {
+pub(crate) enum LineKind {
     /// Blank, comment, or an event-log record with no request payload
     /// (`alloc` / `rebalance` / `departure`).
     Skip,
@@ -284,8 +287,9 @@ enum LineKind {
     App(Request),
 }
 
-/// Parse one JSONL line (see [`LineKind`] for the outcomes).
-fn parse_jsonl_line(
+/// Parse one JSONL line (see [`LineKind`] for the outcomes). Shared by
+/// the materialized ingest and the streaming [`super::TraceStream`].
+pub(crate) fn parse_jsonl_line(
     line: &str,
     lineno: usize,
     opts: &IngestOptions,
@@ -402,7 +406,7 @@ fn request_from_json(
         }
     }
     let mut r = Request {
-        id: 0, // reassigned by TraceSource::new
+        id: ReqId::from(0), // reassigned at table allocation
         class: class.unwrap_or(if n_elastic == 0 {
             AppClass::BatchRigid
         } else {
@@ -596,7 +600,7 @@ fn build_csv_jobs(jobs: &BTreeMap<u64, JobAgg>, opts: &IngestOptions) -> TraceSo
             }
         };
         let mut r = Request {
-            id: 0,
+            id: ReqId::from(0),
             class,
             arrival: a.first_submit - t0,
             runtime,

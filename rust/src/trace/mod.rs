@@ -28,10 +28,19 @@
 //!   simulation actually ran, which is what keeps record → replay
 //!   bit-identical even for runs recorded with capping disabled.
 //! * **Replay** — a [`TraceSource`] normalizes its requests (sorted by
-//!   arrival, dense ids) and drives [`crate::sim::Simulation`] directly
+//!   arrival, placeholder ids reassigned by the engine's request slab)
+//!   and drives [`crate::sim::Simulation`] directly
 //!   ([`TraceSource::simulate`]) or fans out over scheduler/policy
 //!   configurations through [`crate::sim::ExperimentPlan::from_trace`];
 //!   every scheduler, policy and metric works unchanged on real traces.
+//! * **Streaming replay** ([`TraceStream`]) — arrival-ordered JSONL
+//!   traces replay without being materialized at all: the engine pulls
+//!   one request at a time ([`crate::sim::Simulation::from_stream`],
+//!   [`crate::sim::ExperimentPlan::from_trace_path`]), so a trace 10×,
+//!   100×, any multiple of RAM replays at O(active) memory. Out-of-order
+//!   arrivals and truncated recordings yield [`TraceError`]s; CSV cannot
+//!   stream (per-job aggregation needs the whole file) and is rejected
+//!   up front.
 //! * **Record** ([`TraceRecorder`]) — a hook in the simulation engine
 //!   ([`crate::sim::Simulation::with_recorder`]) that emits a JSONL
 //!   event log (`meta`, `arrival`, `alloc`, `rebalance`, `departure`,
@@ -62,7 +71,9 @@
 mod fit;
 mod ingest;
 mod record;
+mod stream;
 
 pub use fit::*;
 pub use ingest::*;
 pub use record::*;
+pub use stream::*;

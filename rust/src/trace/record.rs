@@ -6,27 +6,36 @@
 //! format, so `record → ingest → replay` reproduces the original
 //! [`crate::sim::SimResult`] bit-identically.
 //!
-//! Line schema (`"ev"` discriminates; all times in simulated seconds):
+//! Line schema (`"ev"` discriminates; all times in simulated seconds).
+//! Identity fields, schema v2: `id` is the request's monotone
+//! **submission seq** (the old dense id — stable, human-orderable),
+//! while `slot`/`gen` carry the generational slab handle, so a log line
+//! can be correlated with the recycled slot it ran in. Ingest ignores
+//! all three (replay re-allocates), which is what keeps record → replay
+//! bit-identical across the id representation change.
 //!
 //! | `ev` | fields | meaning |
 //! |---|---|---|
 //! | `meta` | `schema`, `source` | first line; format version |
-//! | `arrival` | `t` + the app tuple (see [`crate::trace`]) | request submission |
-//! | `alloc` | `t`, `id`, `grant`, `cause`, `src` | request `id`'s elastic grant became `grant` (admissions emit their initial grant) because `src` arrived/departed |
+//! | `arrival` | `t`, `id`, `slot`, `gen` + the app tuple (see [`crate::trace`]) | request submission |
+//! | `alloc` | `t`, `id`, `slot`, `gen`, `grant`, `cause`, `src` | request `id`'s elastic grant became `grant` (admissions emit their initial grant) because `src` (a seq) arrived/departed |
 //! | `rebalance` | `t`, `cause`, `src`, `changed` | summary: one scheduling action changed `changed` grants |
-//! | `departure` | `t`, `id`, `turnaround`, `queuing`, `slowdown` | request completion with its §4.1 metrics |
+//! | `departure` | `t`, `id`, `slot`, `gen`, `turnaround`, `queuing`, `slowdown` | request completion with its §4.1 metrics |
 //! | `end` | `t`, `events` | last line; run finished |
 
 use std::io::Write;
 
-use crate::core::{ReqId, Request};
-use crate::sched::{ClusterView, Phase};
+use crate::core::ReqId;
+use crate::sched::{ClusterView, Phase, ReqState};
 use crate::util::json::Json;
 
 use super::ingest::request_to_json_fields;
 
-/// Version stamped into the `meta` line of every event log.
-pub const TRACE_SCHEMA_VERSION: u64 = 1;
+/// Version stamped into the `meta` line of every event log. v2 added
+/// the generational identity fields (`slot`, `gen`) beside the
+/// submission seq `id`; v1 logs (plain dense ids) still ingest — the
+/// reader never keys on ids.
+pub const TRACE_SCHEMA_VERSION: u64 = 2;
 
 /// Records a simulation run as a JSONL event log (see the module docs
 /// for the schema). Attach with [`crate::sim::Simulation::with_recorder`];
@@ -38,9 +47,12 @@ pub struct TraceRecorder {
     /// `None` after a write failure: recording is disabled, the run
     /// continues.
     out: Option<Box<dyn Write>>,
-    /// Last grant emitted per request id (−1 = never emitted), so
+    /// Last grant emitted per **slot** (−1 = never emitted), so
     /// duplicate entries in the engine's changed-set produce one `alloc`
-    /// line per actual change.
+    /// line per actual change. Slot-keyed — O(active high-water), not
+    /// O(total) — and reset at every arrival, because the arriving
+    /// request may be reusing a recycled slot whose previous occupant's
+    /// grant must not dedup the newcomer's first `alloc` line away.
     last_grant: Vec<i64>,
     lines: u64,
 }
@@ -91,9 +103,22 @@ impl TraceRecorder {
         self.lines += 1;
     }
 
-    pub(crate) fn record_arrival(&mut self, t: f64, req: &Request) {
-        let mut fields = vec![("ev", Json::str("arrival")), ("t", Json::num(t))];
-        fields.extend(request_to_json_fields(req));
+    pub(crate) fn record_arrival(&mut self, t: f64, st: &ReqState) {
+        // Fresh occupant of (possibly recycled) slot: reset the dedup
+        // state so its first grant change always emits an alloc line.
+        let idx = st.req.id.index();
+        if self.last_grant.len() <= idx {
+            self.last_grant.resize(idx + 1, -1);
+        }
+        self.last_grant[idx] = -1;
+        let mut fields = vec![
+            ("ev", Json::str("arrival")),
+            ("t", Json::num(t)),
+            ("id", Json::num(st.seq as f64)),
+            ("slot", Json::num(st.req.id.slot as f64)),
+            ("gen", Json::num(st.req.id.gen as f64)),
+        ];
+        fields.extend(request_to_json_fields(&st.req));
         self.write(Json::obj(fields));
     }
 
@@ -106,14 +131,16 @@ impl TraceRecorder {
         &mut self,
         t: f64,
         cause: &'static str,
-        src: ReqId,
+        src_seq: u64,
         w: &ClusterView,
     ) {
         let mut n_changed = 0u64;
         for i in 0..w.decisions.len() {
             let id = w.decisions[i].id();
-            let st = &w.states[id as usize];
-            let idx = id as usize;
+            // Present even if it departed within this same action — the
+            // engine frees slots only after the recorder has run.
+            let st = w.state(id);
+            let idx = id.index();
             if st.phase != Phase::Running {
                 // Departed (or preempted/re-queued) within the same
                 // action. Forget the dedup state: the request holds
@@ -139,10 +166,12 @@ impl TraceRecorder {
             self.write(Json::obj(vec![
                 ("ev", Json::str("alloc")),
                 ("t", Json::num(t)),
-                ("id", Json::num(id as f64)),
+                ("id", Json::num(st.seq as f64)),
+                ("slot", Json::num(id.slot as f64)),
+                ("gen", Json::num(id.gen as f64)),
                 ("grant", Json::num(st.grant as f64)),
                 ("cause", Json::str(cause)),
-                ("src", Json::num(src as f64)),
+                ("src", Json::num(src_seq as f64)),
             ]));
         }
         if n_changed > 0 {
@@ -150,7 +179,7 @@ impl TraceRecorder {
                 ("ev", Json::str("rebalance")),
                 ("t", Json::num(t)),
                 ("cause", Json::str(cause)),
-                ("src", Json::num(src as f64)),
+                ("src", Json::num(src_seq as f64)),
                 ("changed", Json::num(n_changed as f64)),
             ]));
         }
@@ -160,6 +189,7 @@ impl TraceRecorder {
         &mut self,
         t: f64,
         id: ReqId,
+        seq: u64,
         turnaround: f64,
         queuing: f64,
         slowdown: f64,
@@ -167,7 +197,9 @@ impl TraceRecorder {
         self.write(Json::obj(vec![
             ("ev", Json::str("departure")),
             ("t", Json::num(t)),
-            ("id", Json::num(id as f64)),
+            ("id", Json::num(seq as f64)),
+            ("slot", Json::num(id.slot as f64)),
+            ("gen", Json::num(id.gen as f64)),
             ("turnaround", Json::num(turnaround)),
             ("queuing", Json::num(queuing)),
             ("slowdown", Json::num(slowdown)),

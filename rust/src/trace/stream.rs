@@ -1,0 +1,267 @@
+//! Streaming trace replay: a [`TraceStream`] yields requests one at a
+//! time from a JSONL trace (native app traces and recorded event logs),
+//! so the simulation engine can replay traces **far larger than memory**
+//! — the engine holds one pending arrival plus the O(active) request
+//! slab, never the whole trace.
+//!
+//! The price of not materializing is that the stream cannot sort:
+//! arrivals must already be non-decreasing in time (true for recorded
+//! event logs by construction, and for most production traces). An
+//! out-of-order arrival yields a [`TraceError`] naming the line — the
+//! materialized [`TraceSource`] path (which sorts) is the fallback for
+//! unsorted traces. CSV traces cannot stream at all: ClusterData2011
+//! ingestion aggregates task rows *per job*, which requires the whole
+//! file; [`TraceStream::open`] rejects `.csv` paths with the same error
+//! the CLI turns into exit 2.
+//!
+//! Consumed by [`crate::sim::Simulation::from_stream`] (single run) and
+//! [`crate::sim::ExperimentPlan::from_trace_path`] (each grid task
+//! re-opens and re-streams the file).
+
+use std::io::BufRead;
+
+use crate::core::{ReqId, Request};
+
+use super::ingest::{parse_jsonl_line, IngestOptions, LineKind, TraceError, TraceSource};
+
+/// A pull-based request source: `Iterator<Item = Result<Request,
+/// TraceError>>` over an arrival-ordered trace, O(1) memory beyond the
+/// current line. After yielding an error the stream is fused (further
+/// `next()` calls return `None`).
+pub struct TraceStream {
+    inner: Inner,
+    opts: IngestOptions,
+    lineno: usize,
+    last_arrival: f64,
+    saw_meta: bool,
+    saw_end: bool,
+    emitted: u64,
+    failed: bool,
+}
+
+enum Inner {
+    /// Line-by-line JSONL reader (file, socket, in-memory cursor).
+    Reader(Box<dyn BufRead>),
+    /// An already-materialized (sorted, validated) request list — lets
+    /// every consumer take the one stream type.
+    List(std::vec::IntoIter<Request>),
+}
+
+impl TraceStream {
+    fn new(inner: Inner, opts: IngestOptions) -> Self {
+        TraceStream {
+            inner,
+            opts,
+            lineno: 0,
+            last_arrival: f64::NEG_INFINITY,
+            saw_meta: false,
+            saw_end: false,
+            emitted: 0,
+            failed: false,
+        }
+    }
+
+    /// Open `path` for streaming replay. JSONL only: a `.csv` path is
+    /// rejected up front (per-job aggregation needs the whole file — see
+    /// the module docs).
+    pub fn open(path: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        let is_csv = path
+            .rsplit('.')
+            .next()
+            .map(|e| e.eq_ignore_ascii_case("csv"))
+            .unwrap_or(false);
+        if is_csv {
+            return Err(TraceError {
+                line: 0,
+                msg: format!(
+                    "{path}: CSV traces aggregate task rows per job and cannot stream; \
+                     ingest materialized (no streaming) or convert to JSONL"
+                ),
+            });
+        }
+        let f = std::fs::File::open(path).map_err(|e| TraceError {
+            line: 0,
+            msg: format!("cannot open {path}: {e}"),
+        })?;
+        Ok(Self::from_jsonl_reader(
+            Box::new(std::io::BufReader::new(f)),
+            opts,
+        ))
+    }
+
+    /// A stream over any buffered JSONL reader.
+    pub fn from_jsonl_reader(reader: Box<dyn BufRead>, opts: &IngestOptions) -> Self {
+        Self::new(Inner::Reader(reader), opts.clone())
+    }
+
+    /// A stream over an in-memory JSONL string (tests, recorded logs
+    /// captured in a [`super::SharedBuf`]).
+    pub fn from_jsonl_str(s: &str, opts: &IngestOptions) -> Self {
+        Self::from_jsonl_reader(
+            Box::new(std::io::Cursor::new(s.as_bytes().to_vec())),
+            opts,
+        )
+    }
+
+    /// Requests yielded so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+}
+
+impl TraceSource {
+    /// Consume this (already sorted and validated) source into a stream
+    /// — the uniform input type of the streaming engine.
+    pub fn into_stream(self) -> TraceStream {
+        TraceStream::new(
+            Inner::List(self.into_requests().into_iter()),
+            IngestOptions::default(),
+        )
+    }
+}
+
+impl Iterator for TraceStream {
+    type Item = Result<Request, TraceError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.failed {
+            return None;
+        }
+        let rd = match &mut self.inner {
+            Inner::List(it) => {
+                // Already sorted/validated/id-stamped by TraceSource;
+                // only the emitted count needs maintaining here.
+                let next = it.next();
+                if next.is_some() {
+                    self.emitted += 1;
+                }
+                return next.map(Ok);
+            }
+            Inner::Reader(rd) => rd,
+        };
+        let mut line = String::new();
+        loop {
+            line.clear();
+            self.lineno += 1;
+            match rd.read_line(&mut line) {
+                Err(e) => {
+                    self.failed = true;
+                    return Some(Err(TraceError {
+                        line: self.lineno,
+                        msg: format!("io error: {e}"),
+                    }));
+                }
+                Ok(0) => {
+                    // EOF: a recorder log whose `end` line never made it
+                    // to disk is a truncated recording — replaying only
+                    // the arrivals that survived would simulate a
+                    // different (shorter) workload than was recorded.
+                    if self.saw_meta && !self.saw_end {
+                        self.failed = true;
+                        return Some(Err(TraceError {
+                            line: 0,
+                            msg: "event log has a `meta` line but no `end` line — the \
+                                  recording is incomplete (truncated, or the run is \
+                                  still in progress)"
+                                .to_string(),
+                        }));
+                    }
+                    return None;
+                }
+                Ok(_) => {}
+            }
+            match parse_jsonl_line(&line, self.lineno, &self.opts) {
+                Err(e) => {
+                    self.failed = true;
+                    return Some(Err(e));
+                }
+                Ok(LineKind::Skip) => continue,
+                Ok(LineKind::Meta) => {
+                    self.saw_meta = true;
+                    continue;
+                }
+                Ok(LineKind::End) => {
+                    self.saw_end = true;
+                    continue;
+                }
+                Ok(LineKind::App(mut req)) => {
+                    if req.arrival < self.last_arrival {
+                        self.failed = true;
+                        return Some(Err(TraceError {
+                            line: self.lineno,
+                            msg: format!(
+                                "streaming replay requires arrival-ordered traces: \
+                                 arrival {} after {} — ingest materialized (which \
+                                 sorts) instead",
+                                req.arrival, self.last_arrival
+                            ),
+                        }));
+                    }
+                    self.last_arrival = req.arrival;
+                    // Placeholder handle; the engine's request table
+                    // assigns the real generational id at allocation.
+                    req.id = ReqId::from(self.emitted as u32);
+                    self.emitted += 1;
+                    return Some(Ok(req));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L1: &str =
+        r#"{"arrival":1.0,"runtime":10.0,"n_core":1,"core_cpu":1.0,"core_ram_mb":64}"#;
+    const L2: &str =
+        r#"{"arrival":2.0,"runtime":10.0,"n_core":1,"core_cpu":1.0,"core_ram_mb":64}"#;
+
+    #[test]
+    fn streams_sorted_jsonl_one_request_at_a_time() {
+        let s = format!("# c\n{L1}\n\n{L2}\n");
+        let mut stream = TraceStream::from_jsonl_str(&s, &IngestOptions::default());
+        let a = stream.next().unwrap().unwrap();
+        assert_eq!(a.arrival, 1.0);
+        let b = stream.next().unwrap().unwrap();
+        assert_eq!(b.arrival, 2.0);
+        assert!(stream.next().is_none());
+        assert_eq!(stream.emitted(), 2);
+    }
+
+    #[test]
+    fn out_of_order_arrivals_error_with_line_number() {
+        let s = format!("{L2}\n{L1}\n");
+        let mut stream = TraceStream::from_jsonl_str(&s, &IngestOptions::default());
+        assert!(stream.next().unwrap().is_ok());
+        let err = stream.next().unwrap().unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.msg.contains("arrival-ordered"), "{}", err.msg);
+        assert!(stream.next().is_none(), "stream is fused after an error");
+    }
+
+    #[test]
+    fn truncated_event_log_errors_at_eof() {
+        let s = format!("{{\"ev\":\"meta\",\"schema\":2}}\n{L1}\n");
+        let mut stream = TraceStream::from_jsonl_str(&s, &IngestOptions::default());
+        assert!(stream.next().unwrap().is_ok());
+        let err = stream.next().unwrap().unwrap_err();
+        assert!(err.msg.contains("incomplete"), "{}", err.msg);
+    }
+
+    #[test]
+    fn list_backed_streams_count_emitted() {
+        let src = TraceSource::new(vec![crate::core::unit_request(0, 0.0, 1.0, 1, 0)]);
+        let mut stream = src.into_stream();
+        assert!(stream.next().unwrap().is_ok());
+        assert!(stream.next().is_none());
+        assert_eq!(stream.emitted(), 1);
+    }
+
+    #[test]
+    fn csv_paths_are_rejected() {
+        let err = TraceStream::open("whatever.csv", &IngestOptions::default()).unwrap_err();
+        assert!(err.msg.contains("cannot stream"), "{}", err.msg);
+    }
+}

@@ -101,7 +101,7 @@ impl AppDescription {
     /// per-component packer would, but an admission decision can never
     /// be physically unplaceable on the hinted nodes. Uniform-component
     /// apps (the sim↔master agreement scenarios) are unaffected.
-    pub fn scheduler_request(&self, id: ReqId, arrival: f64) -> Request {
+    pub fn scheduler_request(&self, arrival: f64) -> Request {
         let envelope = |class: ComponentClass| {
             let mut r = Resources::ZERO;
             for c in self.components.iter().filter(|c| c.class == class) {
@@ -120,7 +120,9 @@ impl AppDescription {
             AppClass::BatchElastic
         };
         Request {
-            id,
+            // Placeholder: the executor's request table assigns the real
+            // generational handle at allocation.
+            id: ReqId::from(0),
             class,
             arrival,
             runtime: (self.work_steps as f64 / (n_core + n_elastic).max(1) as f64).max(1e-6),

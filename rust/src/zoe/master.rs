@@ -30,6 +30,19 @@
 //! and departures); [`ZoeMaster::schedule`] additionally exposes a
 //! [`SchedEvent::Tick`] pass for dynamic-policy resorts and retry of
 //! under-fulfilled grants.
+//!
+//! # Memory: O(active + retained)
+//!
+//! The master is the paper's *weeks-lived* deployment target, so nothing
+//! it owns may grow with total submissions. The view's request table is
+//! the generational slab (a departed application's slot is freed once
+//! its departure is fully applied and may be handed to the next
+//! submission at a bumped generation), the slot-keyed `apps` map and the
+//! per-app side tables (`reqs`, `work`, container maps) are pruned on
+//! departure, and the state store evicts old terminal records under the
+//! `--retain-done` knob ([`StateStore::set_retention`]) — public app ids
+//! keep growing monotonically (clients can always name an app
+//! unambiguously), only the internal slots recycle.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -49,6 +62,10 @@ use crate::util::stats::{Samples, TimeWeighted};
 use super::app::{AppDescription, ComponentDef};
 use super::state::{AppState, StateStore};
 
+/// Cap on the admission-order diagnostic log (oldest half dropped past
+/// this), bounding the last O(total)-growth structure in the master.
+const ADMIT_LOG_CAP: usize = 4096;
+
 /// The master.
 pub struct ZoeMaster {
     /// The container back-end being driven.
@@ -61,15 +78,23 @@ pub struct ZoeMaster {
     spec: SchedSpec,
     /// The shared scheduling core (identical to the simulator's).
     core: Box<dyn SchedulerCore>,
-    /// Virtual-assignment state: request table + a cluster mirroring the
-    /// Swarm nodes one-to-one.
+    /// Virtual-assignment state: request table (generational slab) + a
+    /// cluster mirroring the Swarm nodes one-to-one.
     view: ClusterView,
-    /// Request id (dense view index) → application id.
+    /// Request **slot** → application id (slot-keyed like the slab:
+    /// entries are overwritten when a slot is recycled, so the map is
+    /// O(active high-water)). Only read through a live `ReqId`.
     apps: Vec<AppId>,
-    /// Application id → request id.
+    /// Application id → request handle; pruned when the app departs.
     reqs: HashMap<AppId, ReqId>,
     /// Applications in admission order (diagnostics / agreement tests).
+    /// Bounded: once it exceeds [`ADMIT_LOG_CAP`] the oldest half is
+    /// dropped, so even this debug trail stays O(1) on a weeks-lived
+    /// master.
     admitted: Vec<AppId>,
+    /// Slots whose departure was processed inside the current
+    /// decision-application pass; freed when the pass completes.
+    pending_free: Vec<ReqId>,
     work: HashMap<AppId, Arc<SharedWork>>,
     /// Core containers per app.
     core_ctrs: HashMap<AppId, Vec<ContainerId>>,
@@ -124,6 +149,7 @@ impl ZoeMaster {
             apps: Vec::new(),
             reqs: HashMap::new(),
             admitted: Vec::new(),
+            pending_free: Vec::new(),
             work: HashMap::new(),
             core_ctrs: HashMap::new(),
             elastic_ctrs: HashMap::new(),
@@ -139,10 +165,19 @@ impl ZoeMaster {
     /// Replace the waiting-line sorting policy (before any submission).
     pub fn with_policy(mut self, policy: crate::policy::Policy) -> Self {
         assert!(
-            self.view.states.is_empty(),
+            self.view.table.allocated() == 0,
             "set the policy before submitting applications"
         );
         self.view.policy = policy;
+        self
+    }
+
+    /// Bound the state store's terminal-record retention (the
+    /// `--retain-done` knob): keep only the `retain_done` most recent
+    /// Finished/Killed/Failed records, so a weeks-lived master's store
+    /// stays O(active + retained). Active records are never evicted.
+    pub fn with_retention(mut self, retain_done: usize) -> Self {
+        self.store.set_retention(Some(retain_done));
         self
     }
 
@@ -173,9 +208,18 @@ impl ZoeMaster {
     }
 
     /// The current elastic grant of an application, per the virtual
-    /// assignment (`None` for unknown apps).
+    /// assignment (`None` for unknown or departed apps).
     pub fn grant_of(&self, app: AppId) -> Option<u32> {
-        self.reqs.get(&app).map(|&rid| self.view.state(rid).grant)
+        self.reqs
+            .get(&app)
+            .and_then(|&rid| self.view.get(rid))
+            .map(|st| st.grant)
+    }
+
+    /// Peak simultaneously-active applications (the request slab's
+    /// O(active) high-water mark) and the current slot capacity.
+    pub fn slab_stats(&self) -> (usize, usize) {
+        (self.view.table.high_water(), self.view.table.capacity())
     }
 
     /// Number of this application's elastic containers currently running.
@@ -201,11 +245,10 @@ impl ZoeMaster {
     pub fn submit(&mut self, desc: AppDescription) -> Result<AppId> {
         desc.validate()?;
         let now = self.backend.now();
-        let rid = self.view.states.len() as ReqId;
-        let req = desc.scheduler_request(rid, now);
+        let req = desc.scheduler_request(now);
         // Reject applications whose (envelope) core demand can never fit
         // (Zoe simulates deployments against the cluster state before
-        // accepting, §5).
+        // accepting, §5) — before allocating a slot.
         let total = self.backend.total();
         if !req.core_total().fits_in(&total) {
             return Err(anyhow!(
@@ -217,8 +260,14 @@ impl ZoeMaster {
         }
         let id = self.store.insert(desc, now);
         self.store.transition(id, AppState::Queued, now)?;
-        self.view.push_request(req);
-        self.apps.push(id);
+        // Lowest free slot (a departed app's slot, recycled) or a fresh
+        // one; the slot-keyed app map is overwritten in step.
+        let rid = self.view.alloc(req);
+        let idx = rid.index();
+        if self.apps.len() <= idx {
+            self.apps.resize(idx + 1, 0);
+        }
+        self.apps[idx] = id;
         self.reqs.insert(id, rid);
         self.view.now = now;
         self.view.state_mut(rid).phase = Phase::Pending;
@@ -233,7 +282,10 @@ impl ZoeMaster {
         let Some(&rid) = self.reqs.get(&id) else {
             return Err(anyhow!("no such app {id}"));
         };
-        match self.view.state(rid).phase {
+        let Some(st) = self.view.get(rid) else {
+            return Err(anyhow!("app {id} is not pending or running"));
+        };
+        match st.phase {
             Phase::Pending => {
                 let now = self.backend.now();
                 self.store.transition(id, AppState::Killed, now)?;
@@ -263,7 +315,8 @@ impl ZoeMaster {
                     let serving = self
                         .reqs
                         .get(&app)
-                        .map(|&rid| self.view.state(rid).phase == Phase::Running)
+                        .and_then(|&rid| self.view.get(rid))
+                        .map(|st| st.phase == Phase::Running)
                         .unwrap_or(false);
                     if w.finished() && serving && !finished.contains(&app) {
                         finished.push(app);
@@ -310,7 +363,9 @@ impl ZoeMaster {
     /// any later event) heals under-fulfilment left by an earlier
     /// physical placement failure. Loops to a fixpoint: a failed
     /// admission departs the application, which makes the core
-    /// rebalance and may emit further decisions.
+    /// rebalance and may emit further decisions. Once the pass
+    /// completes, every slot departed inside it is freed (the slab's
+    /// recycle point) and its per-app side-table entries pruned.
     fn apply_decisions(&mut self) {
         loop {
             let decisions = self.view.drain_decisions();
@@ -354,6 +409,19 @@ impl ZoeMaster {
             for rid in serving {
                 self.reconcile_app_elastic(rid, true);
             }
+            // Recycle the slots of everything that departed in this
+            // pass: the core dropped them, the decisions (which may have
+            // referenced them as Done) are applied, the containers are
+            // down. The next submission may reuse the slot at a bumped
+            // generation; the app's public id and store record live on.
+            for rid in std::mem::take(&mut self.pending_free) {
+                let app = self.apps[rid.index()];
+                self.reqs.remove(&app);
+                self.work.remove(&app);
+                self.core_ctrs.remove(&app);
+                self.elastic_ctrs.remove(&app);
+                self.view.free(rid);
+            }
             return;
         }
     }
@@ -363,7 +431,7 @@ impl ZoeMaster {
     /// failure every started container is rolled back and `false` is
     /// returned.
     fn start_cores(&mut self, rid: ReqId, placement: &Placement) -> bool {
-        let app = self.apps[rid as usize];
+        let app = self.apps[rid.index()];
         // Idempotency per request (the decision-stream contract): a
         // duplicate Admit in one batch must not start a second set of
         // cores.
@@ -419,6 +487,9 @@ impl ZoeMaster {
                 self.placement_latency.push(per_container);
             }
             self.core_ctrs.entry(app).or_default().extend(&started);
+            if self.admitted.len() >= ADMIT_LOG_CAP {
+                self.admitted.drain(..ADMIT_LOG_CAP / 2);
+            }
             self.admitted.push(app);
             let _ = self.store.transition(app, AppState::Running, now);
             true
@@ -438,7 +509,7 @@ impl ZoeMaster {
     /// core it departed, so the virtual assignment re-converges with
     /// reality.
     fn fail_app(&mut self, rid: ReqId) {
-        let app = self.apps[rid as usize];
+        let app = self.apps[rid.index()];
         log::warn!("app {app}: cores unplaceable despite virtual admission; failing it");
         self.teardown_containers(app);
         let now = self.backend.now();
@@ -448,17 +519,20 @@ impl ZoeMaster {
 
     /// The departure dance without the outer `apply_decisions` (also
     /// used from inside it; that caller's drain loop picks the new
-    /// decisions up).
+    /// decisions up). The slot itself is freed only when the enclosing
+    /// decision pass completes (`pending_free`), because decisions in
+    /// flight may still name it.
     fn depart_inline(&mut self, rid: ReqId, now: f64) {
         self.view.now = now;
         self.view.note_departed(rid);
         self.core.on_event(SchedEvent::Departure(rid), &mut self.view);
+        self.pending_free.push(rid);
     }
 
     /// Apply a wholesale preemption: kill every container, keep the work
     /// ledger (progress is preserved), and re-queue the application.
     fn preempt_app(&mut self, rid: ReqId) {
-        let app = self.apps[rid as usize];
+        let app = self.apps[rid.index()];
         let _ = self
             .volumes
             .append(app, "zoe-master", &format!("app {app} preempted"));
@@ -477,7 +551,7 @@ impl ZoeMaster {
     /// take the newest container of the last group first. With
     /// `grow = false` only kills are applied (capacity-freeing phase).
     fn reconcile_app_elastic(&mut self, rid: ReqId, grow: bool) {
-        let app = self.apps[rid as usize];
+        let app = self.apps[rid.index()];
         let (phase, g) = {
             let st = self.view.state(rid);
             (st.phase, st.grant)
@@ -602,7 +676,7 @@ impl ZoeMaster {
     fn reclaim_any_elastic(&mut self, for_app: AppId) -> bool {
         let serving: Vec<ReqId> = self.core.serving().to_vec();
         for &rid in serving.iter().rev() {
-            let app = self.apps[rid as usize];
+            let app = self.apps[rid.index()];
             if app == for_app {
                 continue;
             }

@@ -2,7 +2,7 @@
 //! state machine, with JSON persistence (the paper uses PostgreSQL; an
 //! embedded JSON-file store preserves the same interface and semantics).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
@@ -57,6 +57,12 @@ impl AppState {
             "failed" => AppState::Failed,
             _ => return None,
         })
+    }
+
+    /// Terminal states (no transition leaves them; these are the
+    /// records store retention may evict).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, AppState::Finished | AppState::Killed | AppState::Failed)
     }
 
     /// Legal transitions of the state machine. `Running → Queued` is the
@@ -120,16 +126,62 @@ impl AppRecord {
 }
 
 /// The store: in-memory map + JSON file persistence.
+///
+/// # Retention
+///
+/// By default every record is kept forever (the §5 PostgreSQL-like
+/// behavior). A long-lived master serving a continuous stream of
+/// applications wants bounded memory instead:
+/// [`StateStore::set_retention`] keeps only the most recent `n`
+/// *terminal* records (Finished/Killed/Failed) — active records
+/// (Submitted/Queued/Starting/Running) are never evicted — so store
+/// memory is O(active + retained). Evictions are counted
+/// ([`StateStore::evicted`]) and a `status`/`list` query for an evicted
+/// id simply misses, like any unknown id.
 #[derive(Debug, Default)]
 pub struct StateStore {
     apps: BTreeMap<u32, AppRecord>,
     next_id: u32,
+    /// Keep at most this many terminal records (`None` = keep all).
+    retain_done: Option<usize>,
+    /// Terminal record ids in the order they became terminal (eviction
+    /// order: oldest first).
+    terminal_order: VecDeque<u32>,
+    /// Terminal records evicted so far.
+    evicted: u64,
 }
 
 impl StateStore {
     /// An empty store.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Bound the number of retained terminal records (see the type-level
+    /// docs); `None` restores keep-everything. Applies retroactively to
+    /// already-terminal records.
+    pub fn set_retention(&mut self, retain_done: Option<usize>) {
+        self.retain_done = retain_done;
+        self.apply_retention();
+    }
+
+    /// The current retention bound (`None` = unbounded).
+    pub fn retention(&self) -> Option<usize> {
+        self.retain_done
+    }
+
+    /// How many terminal records retention has evicted so far.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    fn apply_retention(&mut self) {
+        let Some(keep) = self.retain_done else { return };
+        while self.terminal_order.len() > keep {
+            let id = self.terminal_order.pop_front().expect("non-empty");
+            self.apps.remove(&id);
+            self.evicted += 1;
+        }
     }
 
     /// Insert a submission at time `now`; returns the assigned id.
@@ -181,6 +233,12 @@ impl StateStore {
             _ => {}
         }
         rec.state = to;
+        if to.is_terminal() {
+            // Terminal states never transition out, so an id enters this
+            // queue at most once.
+            self.terminal_order.push_back(id);
+            self.apply_retention();
+        }
         Ok(())
     }
 
@@ -255,6 +313,9 @@ impl StateStore {
                 containers: Vec::new(),
             };
             store.next_id = store.next_id.max(id + 1);
+            if rec.state.is_terminal() {
+                store.terminal_order.push_back(id);
+            }
             store.apps.insert(id, rec);
         }
         Ok(store)
@@ -290,6 +351,44 @@ mod tests {
         assert_eq!(rec.turnaround(), Some(89.0));
         assert_eq!(rec.queuing(), Some(3.0));
         assert!(s.transition(id, AppState::Running, 100.0).is_err());
+    }
+
+    #[test]
+    fn retention_evicts_oldest_terminal_records_only() {
+        let mut s = StateStore::new();
+        s.set_retention(Some(2));
+        let mut terminal = Vec::new();
+        for i in 0..5 {
+            let id = s.insert(templates::tf_single(), i as f64);
+            s.transition(id, AppState::Queued, i as f64).unwrap();
+            s.transition(id, AppState::Starting, i as f64).unwrap();
+            s.transition(id, AppState::Running, i as f64).unwrap();
+            s.transition(id, AppState::Finished, 10.0 + i as f64).unwrap();
+            terminal.push(id);
+        }
+        // Only the 2 most recent terminal records remain.
+        assert_eq!(s.evicted(), 3);
+        assert!(s.get(terminal[0]).is_none());
+        assert!(s.get(terminal[2]).is_none());
+        assert!(s.get(terminal[3]).is_some());
+        assert!(s.get(terminal[4]).is_some());
+        // Active records are never evicted, however many there are.
+        let live: Vec<u32> = (0..4)
+            .map(|i| {
+                let id = s.insert(templates::tf_single(), 20.0 + i as f64);
+                s.transition(id, AppState::Queued, 20.0).unwrap();
+                id
+            })
+            .collect();
+        assert!(live.iter().all(|&id| s.get(id).is_some()));
+        assert_eq!(s.count_in(AppState::Queued), 4);
+        // Ids keep monotonically increasing across evictions (public app
+        // ids are never recycled — only internal slab slots are).
+        assert!(live[0] > terminal[4]);
+        // Tightening retention retroactively evicts.
+        s.set_retention(Some(0));
+        assert!(s.get(terminal[4]).is_none());
+        assert_eq!(s.evicted(), 5);
     }
 
     #[test]

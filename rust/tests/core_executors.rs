@@ -91,8 +91,10 @@ fn run_sim_side(kind: SchedKind, descs: &[AppDescription], arrivals: &[f64]) -> 
     let reqs: Vec<Request> = descs
         .iter()
         .enumerate()
-        .map(|(i, d)| d.scheduler_request(i as ReqId, arrivals[i]))
+        .map(|(i, d)| d.scheduler_request(arrivals[i]))
         .collect();
+    // This driver never frees a slot, so request i is the generation-0
+    // handle of slot i throughout.
     let mut view = ClusterView::new(reqs, mirror_cluster(), Policy::FIFO);
     let mut core = SchedSpec::builtin(kind).build();
     let mut trace = SimTrace {
@@ -108,10 +110,10 @@ fn run_sim_side(kind: SchedKind, descs: &[AppDescription], arrivals: &[f64]) -> 
         }
         trace
             .grants_after_event
-            .push(view.states.iter().map(|s| s.grant).collect());
+            .push(view.table.iter_occupied().map(|(_, s)| s.grant).collect());
     }
     for (i, &t) in arrivals.iter().enumerate() {
-        let id = i as ReqId;
+        let id = ReqId::from(i as u32);
         view.now = t;
         view.state_mut(id).phase = Phase::Pending;
         let ds = core.decide(SchedEvent::Arrival(id), &mut view);
@@ -125,7 +127,7 @@ fn run_sim_side(kind: SchedKind, descs: &[AppDescription], arrivals: &[f64]) -> 
             .admissions
             .iter()
             .copied()
-            .chain(0..descs.len() as ReqId)
+            .chain((0..descs.len() as u32).map(ReqId::from))
             .find(|&id| view.state(id).phase != Phase::Done);
         let Some(id) = victim else { break };
         view.now = t;
@@ -160,7 +162,9 @@ fn master_agrees_with_sim_core_all_four_kinds() {
         for &victim in &sim.departures {
             let dt = t - master.backend.now();
             master.backend.advance(dt.max(0.0));
-            master.kill(victim).unwrap();
+            // The sim side's handles are slot i = submission i; the
+            // master's app ids track submission order too.
+            master.kill(victim.slot).unwrap();
             check_agreement(&master, &sim, event, &descs, kind);
             event += 1;
             t += 1.0;
@@ -170,9 +174,11 @@ fn master_agrees_with_sim_core_all_four_kinds() {
         assert_eq!(master.pending_len(), 0, "{kind:?}");
         assert!(master.backend.used().cpu.abs() < 1e-9, "{kind:?}");
         // The decision streams admitted the same applications in the
-        // same order.
-        let master_order: Vec<ReqId> = master.admitted_order().to_vec();
-        assert_eq!(master_order, sim.admissions, "{kind:?}: admission order");
+        // same order (master app ids == sim-side slots: both track
+        // submission order, and nothing departs before the kill phase).
+        let master_order: Vec<u32> = master.admitted_order().to_vec();
+        let sim_order: Vec<u32> = sim.admissions.iter().map(|id| id.slot).collect();
+        assert_eq!(master_order, sim_order, "{kind:?}: admission order");
     }
 }
 
@@ -248,7 +254,7 @@ impl LifoPreemptCore {
     }
 
     fn ensure_capacity(&mut self, v: &ClusterView) {
-        let n = v.states.len();
+        let n = v.table.capacity();
         if self.cores.len() < n {
             self.cores.resize_with(n, Placement::default);
             self.elastic.resize_with(n, Placement::default);
@@ -260,11 +266,11 @@ impl LifoPreemptCore {
             let r = &v.state(id).req;
             (r.core_res, r.n_core, r.elastic_res, r.n_elastic)
         };
-        if !v.cluster.place_all_into(&cres, cn, &mut self.cores[id as usize]) {
+        if !v.cluster.place_all_into(&cres, cn, &mut self.cores[id.index()]) {
             return false;
         }
-        if en > 0 && !v.cluster.place_all_into(&eres, en, &mut self.elastic[id as usize]) {
-            v.cluster.release_and_clear(&mut self.cores[id as usize]);
+        if en > 0 && !v.cluster.place_all_into(&eres, en, &mut self.elastic[id.index()]) {
+            v.cluster.release_and_clear(&mut self.cores[id.index()]);
             return false;
         }
         let key = v.pending_key(id);
@@ -276,7 +282,7 @@ impl LifoPreemptCore {
             st.frozen_key = key;
         }
         v.set_grant(id, en);
-        let placement = self.cores[id as usize].clone();
+        let placement = self.cores[id.index()].clone();
         v.note_admitted(id, placement);
         self.serving.push(id);
         true
@@ -291,8 +297,8 @@ impl LifoPreemptCore {
                 let now = v.now;
                 st.accrue(now);
             }
-            v.cluster.release_and_clear(&mut self.cores[cur as usize]);
-            v.cluster.release_and_clear(&mut self.elastic[cur as usize]);
+            v.cluster.release_and_clear(&mut self.cores[cur.index()]);
+            v.cluster.release_and_clear(&mut self.elastic[cur.index()]);
             v.note_preempted(cur);
             self.stack.push(cur);
         }
@@ -326,8 +332,8 @@ impl SchedulerCore for LifoPreemptCore {
             SchedEvent::Departure(id) => {
                 self.serving.retain(|&x| x != id);
                 self.stack.retain(|&x| x != id);
-                view.cluster.release_and_clear(&mut self.cores[id as usize]);
-                view.cluster.release_and_clear(&mut self.elastic[id as usize]);
+                view.cluster.release_and_clear(&mut self.cores[id.index()]);
+                view.cluster.release_and_clear(&mut self.elastic[id.index()]);
                 if self.serving.is_empty() {
                     self.admit_next(view);
                 }
@@ -461,4 +467,43 @@ fn master_waiting_line_honors_policy() {
         &[hog_id, short_id, long_id],
         "SJF must admit the shorter queued app first"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Long-lived master: slab recycling + store retention
+// ---------------------------------------------------------------------------
+
+/// Submit/kill churn on the master: internal slots recycle (the slab
+/// stays at the active high-water mark and per-app side tables are
+/// pruned), `--retain-done` keeps the store bounded, and public app ids
+/// keep growing monotonically so clients are never ambiguous.
+#[test]
+fn master_slab_recycles_and_store_retention_bounds_memory() {
+    let mut master =
+        ZoeMaster::new(test_backend(), SchedKind::Flexible).with_retention(3);
+    let mut ids = Vec::new();
+    for round in 0..20u32 {
+        master.backend.advance(1.0);
+        let app = master.submit(uniform_app("churn", 1, 2)).unwrap();
+        assert_eq!(app, round, "public app ids are monotone, never recycled");
+        assert_eq!(master.grant_of(app), Some(2), "admitted alone, full grant");
+        ids.push(app);
+        master.backend.advance(1.0);
+        master.kill(app).unwrap();
+        assert_eq!(master.grant_of(app), None, "departed app reads as gone");
+        assert!(master.backend.running_of(app).is_empty());
+    }
+    // One application was ever active at a time: the slab never grew
+    // past one slot, across 20 submissions.
+    let (high_water, capacity) = master.slab_stats();
+    assert_eq!(high_water, 1, "peak concurrent apps");
+    assert_eq!(capacity, 1, "table capacity == active high-water, not 20");
+    // The store kept only the 3 newest terminal records.
+    assert_eq!(master.store.evicted(), 17);
+    assert!(master.store.get(ids[0]).is_none(), "oldest record evicted");
+    assert!(master.store.get(ids[19]).is_some(), "newest record retained");
+    assert_eq!(master.store.retention(), Some(3));
+    // Operations on a departed (and even evicted) app fail cleanly.
+    assert!(master.kill(ids[0]).is_err());
+    assert!(master.kill(ids[19]).is_err(), "already terminal");
 }

@@ -12,17 +12,32 @@ use zoe::sched::{
 };
 
 /// Build a view at time `now` with `reqs` all in `Future` phase.
+/// `ClusterView::new` allocates them in input order, so request i gets
+/// the generation-0 handle of slot i — `rid(i)` below.
 fn world(reqs: Vec<Request>, units: u32, policy: Policy) -> ClusterView {
     ClusterView::new(reqs, Cluster::units(units), policy)
 }
 
-fn arrive(sched: &mut dyn SchedulerCore, w: &mut ClusterView, id: ReqId, t: f64) -> Vec<Decision> {
+/// The generation-0 handle of slot `n` (these driver tests never free a
+/// slot, so generations stay 0 throughout).
+fn rid(n: u32) -> ReqId {
+    ReqId::from(n)
+}
+
+/// Slot numbers of a handle slice — readable assertions on serving sets.
+fn slots(ids: &[ReqId]) -> Vec<u32> {
+    ids.iter().map(|id| id.slot).collect()
+}
+
+fn arrive(sched: &mut dyn SchedulerCore, w: &mut ClusterView, id: u32, t: f64) -> Vec<Decision> {
+    let id = rid(id);
     w.now = t;
     w.state_mut(id).phase = Phase::Pending;
     sched.decide(SchedEvent::Arrival(id), w)
 }
 
-fn depart(sched: &mut dyn SchedulerCore, w: &mut ClusterView, id: ReqId, t: f64) -> Vec<Decision> {
+fn depart(sched: &mut dyn SchedulerCore, w: &mut ClusterView, id: u32, t: f64) -> Vec<Decision> {
+    let id = rid(id);
     w.now = t;
     w.note_departed(id);
     sched.decide(SchedEvent::Departure(id), w)
@@ -44,31 +59,33 @@ fn fig1_reclaim_one_unit_from_c() {
         arrive(&mut s, &mut w, id, 0.0);
     }
     // t=0: S = {A, B}; A full grant, B zero.
-    assert_eq!(s.serving(), &[0, 1]);
-    assert_eq!(w.state(0).grant, 4);
-    assert_eq!(w.state(1).grant, 0);
+    assert_eq!(slots(s.serving()), [0, 1]);
+    assert_eq!(w.state(rid(0)).grant, 4);
+    assert_eq!(w.state(rid(1)).grant, 0);
     assert_eq!(s.pending(), 2);
 
     depart(&mut s, &mut w, 0, 10.0); // A done
     // S = {B, C}; B full (3), C gets 1.
-    assert_eq!(s.serving(), &[1, 2]);
-    assert_eq!(w.state(1).grant, 3);
-    assert_eq!(w.state(2).grant, 1);
+    assert_eq!(slots(s.serving()), [1, 2]);
+    assert_eq!(w.state(rid(1)).grant, 3);
+    assert_eq!(w.state(rid(2)).grant, 1);
 
     let ds = depart(&mut s, &mut w, 1, 15.0); // B done
     // S = {C, D}: C would take 5 elastic but is cut to 4 so D's 3 cores
     // fit — the paper's "reclaims just one unit from request C".
-    assert_eq!(s.serving(), &[2, 3]);
-    assert_eq!(w.state(2).grant, 4);
-    assert_eq!(w.state(3).grant, 0);
+    assert_eq!(slots(s.serving()), [2, 3]);
+    assert_eq!(w.state(rid(2)).grant, 4);
+    assert_eq!(w.state(rid(3)).grant, 0);
     // The decision stream says the same: D admitted (with its 3-core
     // placement), then C's grant set to 4 in the cascade.
     assert_eq!(ds.len(), 2, "{ds:?}");
     match &ds[0] {
-        Decision::Admit { id: 3, placement } => assert_eq!(placement.count(), 3),
+        Decision::Admit { id, placement } if *id == rid(3) => {
+            assert_eq!(placement.count(), 3)
+        }
         other => panic!("expected Admit for D, got {other:?}"),
     }
-    assert_eq!(ds[1], Decision::SetGrant { id: 2, g: 4 });
+    assert_eq!(ds[1], Decision::SetGrant { id: rid(2), g: 4 });
     // Cluster is exactly full: 3+4 (C) + 3 (D).
     assert!((w.cluster.used().cpu - 10.0).abs() < 1e-9);
 }
@@ -89,10 +106,10 @@ fn fig1_malleable_blocks_d() {
     }
     depart(&mut s, &mut w, 0, 10.0);
     depart(&mut s, &mut w, 1, 15.0);
-    assert_eq!(s.serving(), &[2]);
-    assert_eq!(w.state(2).grant, 5, "C goes full under malleable");
+    assert_eq!(slots(s.serving()), [2]);
+    assert_eq!(w.state(rid(2)).grant, 5, "C goes full under malleable");
     assert_eq!(s.pending(), 1, "D blocked: leftover 2 < C_D=3");
-    assert_eq!(w.state(3).phase, Phase::Pending);
+    assert_eq!(w.state(rid(3)).phase, Phase::Pending);
 }
 
 /// Rigid: one at a time (Fig. 1 top) — admitting only full demands.
@@ -109,12 +126,12 @@ fn fig1_rigid_serves_one_at_a_time() {
     for id in 0..4 {
         arrive(&mut s, &mut w, id, 0.0);
     }
-    assert_eq!(s.serving(), &[0]);
-    assert_eq!(w.state(0).grant, 4, "rigid always grants in full");
+    assert_eq!(slots(s.serving()), [0]);
+    assert_eq!(w.state(rid(0)).grant, 4, "rigid always grants in full");
     depart(&mut s, &mut w, 0, 10.0);
-    assert_eq!(s.serving(), &[1]);
+    assert_eq!(slots(s.serving()), [1]);
     depart(&mut s, &mut w, 1, 20.0);
-    assert_eq!(s.serving(), &[2]);
+    assert_eq!(slots(s.serving()), [2]);
 }
 
 /// Cores are never reclaimed: across any sequence of flexible events the
@@ -137,7 +154,7 @@ fn flexible_never_touches_cores() {
         let mut s = FlexibleScheduler::new(false);
         let mut running: Vec<ReqId> = Vec::new();
         for id in 0..n {
-            let at = w.state(id).req.arrival;
+            let at = w.state(rid(id)).req.arrival;
             arrive(&mut s, &mut w, id, at);
             // Invariant: used ≥ Σ cores of serving; grants ≤ E.
             let used = w.cluster.used().cpu;
@@ -160,7 +177,7 @@ fn flexible_never_touches_cores() {
             // Depart a random running request now and then.
             if !s.serving().is_empty() && rng.chance(0.5) {
                 let victim = s.serving()[rng.below(s.serving().len() as u64) as usize];
-                depart(&mut s, &mut w, victim, at + 0.1);
+                depart(&mut s, &mut w, victim.slot, at + 0.1);
             }
         }
     }
@@ -185,24 +202,24 @@ fn malleable_grants_monotone() {
         let mut s = MalleableScheduler::new();
         let mut last_grant = vec![0u32; n as usize];
         for id in 0..n {
-            let at = w.state(id).req.arrival;
+            let at = w.state(rid(id)).req.arrival;
             arrive(&mut s, &mut w, id, at);
             for &x in s.serving() {
                 assert!(
-                    w.state(x).grant >= last_grant[x as usize],
+                    w.state(x).grant >= last_grant[x.index()],
                     "malleable grant shrank for {x}"
                 );
             }
             for &x in s.serving() {
-                last_grant[x as usize] = w.state(x).grant;
+                last_grant[x.index()] = w.state(x).grant;
             }
             if !s.serving().is_empty() && rng.chance(0.4) {
                 let victim = s.serving()[0];
-                depart(&mut s, &mut w, victim, at + 0.1);
-                last_grant[victim as usize] = 0;
+                depart(&mut s, &mut w, victim.slot, at + 0.1);
+                last_grant[victim.index()] = 0;
                 for &x in s.serving() {
-                    assert!(w.state(x).grant >= last_grant[x as usize]);
-                    last_grant[x as usize] = w.state(x).grant;
+                    assert!(w.state(x).grant >= last_grant[x.index()]);
+                    last_grant[x.index()] = w.state(x).grant;
                 }
             }
         }
@@ -231,13 +248,13 @@ fn preemptive_w_queue_has_priority_over_l() {
     arrive(&mut s, &mut w, 1, 1.0);
     arrive(&mut s, &mut w, 2, 2.0);
     let (l, wline) = s.waiting();
-    assert_eq!(l, &[1], "batch waits in L");
-    assert_eq!(wline, &[2], "interactive waits in W (cores don't fit)");
+    assert_eq!(slots(&l), [1], "batch waits in L");
+    assert_eq!(slots(&wline), [2], "interactive waits in W (cores don't fit)");
     // Request 0 departs → W must drain first even though L's head arrived
     // earlier.
     depart(&mut s, &mut w, 0, 5.0);
-    assert!(s.serving().contains(&2), "W head admitted first");
-    assert!(s.serving().contains(&1), "then L head (cores fit too)");
+    assert!(s.serving().contains(&rid(2)), "W head admitted first");
+    assert!(s.serving().contains(&rid(1)), "then L head (cores fit too)");
     let (l, wline) = s.waiting();
     assert!(l.is_empty() && wline.is_empty());
 }
@@ -257,20 +274,21 @@ fn preemptive_arrival_reclaims_elastic_immediately() {
     let mut w = world(reqs, 10, Policy::FIFO);
     let mut s = FlexibleScheduler::new(true);
     arrive(&mut s, &mut w, 0, 0.0);
-    assert_eq!(w.state(0).grant, 8);
+    assert_eq!(w.state(rid(0)).grant, 8);
     let ds = arrive(&mut s, &mut w, 1, 1.0);
     // 1 admitted by reclaiming 3 elastic units of 0.
-    assert!(s.serving().contains(&1));
-    assert_eq!(w.state(0).grant, 5, "elastic shrank from 8 to 5");
-    assert_eq!(w.state(1).phase, Phase::Running);
+    assert!(s.serving().contains(&rid(1)));
+    assert_eq!(w.state(rid(0)).grant, 5, "elastic shrank from 8 to 5");
+    assert_eq!(w.state(rid(1)).phase, Phase::Running);
     // Decision vocabulary: the admission precedes the reclaim that
     // physically funds it (executors apply reclaims first).
     assert!(
-        ds.iter().any(|d| matches!(d, Decision::Admit { id: 1, .. })),
+        ds.iter()
+            .any(|d| matches!(d, Decision::Admit { id, .. } if *id == rid(1))),
         "{ds:?}"
     );
     assert!(
-        ds.contains(&Decision::Reclaim { id: 0, n: 3 }),
+        ds.contains(&Decision::Reclaim { id: rid(0), n: 3 }),
         "{ds:?}"
     );
 }
@@ -290,8 +308,8 @@ fn sjf_admits_shorter_job_first() {
     arrive(&mut s, &mut w, 1, 1.0);
     arrive(&mut s, &mut w, 2, 2.0);
     depart(&mut s, &mut w, 0, 50.0);
-    assert!(s.serving().contains(&2), "short job admitted first");
-    assert!(!s.serving().contains(&1), "long job still waits (no room)");
+    assert!(s.serving().contains(&rid(2)), "short job admitted first");
+    assert!(!s.serving().contains(&rid(1)), "long job still waits (no room)");
 }
 
 /// FIFO head-of-line: the flexible scheduler only admits the *head* of L
@@ -308,6 +326,6 @@ fn fifo_no_backfill() {
     arrive(&mut s, &mut w, 0, 0.0);
     arrive(&mut s, &mut w, 1, 1.0);
     arrive(&mut s, &mut w, 2, 2.0);
-    assert_eq!(s.serving(), &[0]);
+    assert_eq!(slots(s.serving()), [0]);
     assert_eq!(s.pending(), 2, "no backfill: request 2 must wait behind 1");
 }

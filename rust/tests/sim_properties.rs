@@ -11,11 +11,11 @@
 //! * flexible admissions are never later than the rigid baseline's on the
 //!   same FIFO workload (queuing dominance in aggregate).
 
-use zoe::core::{unit_request, Request, RequestBuilder, Resources};
+use zoe::core::{unit_request, ReqId, Request, RequestBuilder, Resources};
 use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
 use zoe::sched::{ClusterView, Decision, Phase, SchedEvent, SchedKind, SchedSpec};
-use zoe::sim::{simulate, simulate_with_mode, EngineMode, ExperimentPlan, SimResult};
+use zoe::sim::{simulate, simulate_with_mode, EngineMode, ExperimentPlan, SimResult, Simulation};
 use zoe::util::check::forall;
 use zoe::util::rng::Rng;
 use zoe::util::stats::Samples;
@@ -298,6 +298,10 @@ fn assert_bitwise_identical(a: &SimResult, b: &SimResult, what: &str) {
     assert_eq!(a.unfinished, b.unfinished, "{what}: unfinished");
     assert_eq!(a.heap_compactions, b.heap_compactions, "{what}: compactions");
     assert_eq!(
+        a.slab_high_water, b.slab_high_water,
+        "{what}: slab high-water"
+    );
+    assert_eq!(
         a.end_time.to_bits(),
         b.end_time.to_bits(),
         "{what}: end_time {} vs {}",
@@ -568,6 +572,8 @@ fn decision_stream_reconstructs_grants_and_admissions() {
         let reqs = random_requests(rng, n, units);
         let pol = policies()[rng.below(6) as usize];
         for kind in ALL_KINDS {
+            // The driver never frees a slot, so request i is slot i at
+            // generation 0 throughout and slot-indexed shadows work.
             let mut view = ClusterView::new(reqs.clone(), Cluster::units(units), pol);
             let mut core = SchedSpec::builtin(kind).build();
             // Shadow state folded from decisions alone.
@@ -576,10 +582,11 @@ fn decision_stream_reconstructs_grants_and_admissions() {
             // Drive arrivals in order, then drain via departures of the
             // earliest-admitted running request (arbitrary but valid).
             let mut pending_events: Vec<(f64, u32)> =
-                reqs.iter().map(|r| (r.arrival, r.id)).collect();
+                reqs.iter().map(|r| (r.arrival, r.id.slot)).collect();
             pending_events.sort_by(|a, b| a.0.total_cmp(&b.0));
             let mut t_max: f64 = 0.0;
-            for &(t, id) in &pending_events {
+            for &(t, slot) in &pending_events {
+                let id = ReqId::from(slot);
                 view.now = t;
                 t_max = t;
                 view.state_mut(id).phase = Phase::Pending;
@@ -588,12 +595,14 @@ fn decision_stream_reconstructs_grants_and_admissions() {
                 check_shadow(&view, &shadow_grant, &shadow_running, kind);
             }
             let mut t = t_max + 1.0;
-            while let Some(id) = (0..n as u32).find(|&i| view.state(i).phase == Phase::Running)
+            while let Some(id) = (0..n as u32)
+                .map(ReqId::from)
+                .find(|&i| view.state(i).phase == Phase::Running)
             {
                 view.now = t;
                 view.note_departed(id);
-                shadow_grant[id as usize] = 0;
-                shadow_running[id as usize] = false;
+                shadow_grant[id.index()] = 0;
+                shadow_running[id.index()] = false;
                 let ds = core.decide(SchedEvent::Departure(id), &mut view);
                 fold(&ds, &mut shadow_grant, &mut shadow_running);
                 check_shadow(&view, &shadow_grant, &shadow_running, kind);
@@ -605,19 +614,20 @@ fn decision_stream_reconstructs_grants_and_admissions() {
     fn fold(ds: &[Decision], grant: &mut [u32], running: &mut [bool]) {
         for d in ds {
             match *d {
-                Decision::Admit { id, .. } => running[id as usize] = true,
-                Decision::SetGrant { id, g } => grant[id as usize] = g,
-                Decision::Reclaim { id, n } => grant[id as usize] -= n,
+                Decision::Admit { id, .. } => running[id.index()] = true,
+                Decision::SetGrant { id, g } => grant[id.index()] = g,
+                Decision::Reclaim { id, n } => grant[id.index()] -= n,
                 Decision::Preempt { id } => {
-                    running[id as usize] = false;
-                    grant[id as usize] = 0;
+                    running[id.index()] = false;
+                    grant[id.index()] = 0;
                 }
             }
         }
     }
 
     fn check_shadow(view: &ClusterView, grant: &[u32], running: &[bool], kind: SchedKind) {
-        for (i, st) in view.states.iter().enumerate() {
+        for (id, st) in view.table.iter_occupied() {
+            let i = id.index();
             if st.phase == Phase::Running {
                 assert!(running[i], "{kind:?}: admission of {i} not in the stream");
                 assert_eq!(grant[i], st.grant, "{kind:?}: grant of {i} diverged");
@@ -654,4 +664,117 @@ fn work_conservation_in_isolation() {
             assert!((res.turnaround.mean() - t).abs() < 1e-6, "{kind:?}");
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// Generational request slab: bit-identical to the retained dense
+// reference, O(active) memory under churn
+// ---------------------------------------------------------------------------
+
+/// The tentpole differential: slot recycling must not change one bit of
+/// any result. All four `SchedKind`s × 20 seeds on the paper's 2-D
+/// workload — the recycling slab vs the retained dense reference (the
+/// pre-slab layout, where every request keeps its table entry forever).
+/// Deterministic lowest-free-slot-first allocation plus seq-ordered
+/// tie-breaks are exactly what make this hold.
+#[test]
+fn slab_results_bit_identical_to_retained_dense_reference() {
+    let spec = WorkloadSpec::paper();
+    for seed in 1..=20u64 {
+        let reqs = spec.generate(150, seed);
+        for kind in ALL_KINDS {
+            for pol in [Policy::FIFO, Policy::sjf()] {
+                let recycled = simulate(reqs.clone(), Cluster::paper_sim(), pol, kind);
+                let retained =
+                    Simulation::new(reqs.clone(), Cluster::paper_sim(), pol, kind)
+                        .retain_slots()
+                        .run();
+                assert_bitwise_identical(
+                    &recycled,
+                    &retained,
+                    &format!("slab seed={seed} {kind:?} {}", pol.label()),
+                );
+                // The layouts differ exactly as claimed: the recycling
+                // table peaks at the active high-water mark, the
+                // retained one at total submissions.
+                assert_eq!(
+                    recycled.slot_capacity, recycled.slab_high_water,
+                    "seed={seed} {kind:?}: slab grew past the active high-water mark"
+                );
+                assert_eq!(
+                    retained.slot_capacity, 150,
+                    "seed={seed} {kind:?}: retained reference is dense"
+                );
+            }
+        }
+    }
+}
+
+/// Slot recycling composes with the engine differential: recycling slab
+/// + optimized engine vs retained + naive reference — the two extreme
+/// corners of the (engine, table) matrix — on contended random unit
+/// workloads across the policy families. Recycled slots' stale heap
+/// events and predictions must all be dropped (everything completes and
+/// the sample sets match).
+#[test]
+fn slab_recycling_composes_with_naive_reference() {
+    forall(10, 0x51AB, |rng| {
+        let n = 40 + rng.below(60) as usize;
+        let units = 8 + rng.below(12) as u32;
+        let reqs = random_requests(rng, n, units);
+        let pol = policies()[rng.below(6) as usize];
+        for kind in ALL_KINDS {
+            let opt = simulate_with_mode(
+                reqs.clone(),
+                Cluster::units(units),
+                pol,
+                kind,
+                EngineMode::Optimized,
+            );
+            let naive = Simulation::with_mode(
+                reqs.clone(),
+                Cluster::units(units),
+                pol,
+                kind,
+                EngineMode::Naive,
+            )
+            .retain_slots()
+            .run();
+            assert_results_match(&opt, &naive, &format!("slab×naive {kind:?} {}", pol.label()));
+        }
+    });
+}
+
+/// Churn soak: a long, lightly-loaded arrival stream. The slab must
+/// (a) never grow a slot past the active high-water mark (capacity ==
+/// peak live — the free list always covers departures), (b) stay far
+/// below total submissions (the whole point of recycling), and (c) drop
+/// every recycled slot's stale events/predictions — every application
+/// completes, bit-identically to the retained reference.
+#[test]
+fn slab_stays_at_active_high_water_under_churn() {
+    let mut spec = WorkloadSpec::paper_batch_only();
+    // Stretch inter-arrivals: thousands of submissions, few concurrent.
+    spec.arrival_scale = 4.0;
+    let reqs = spec.generate(3_000, 11);
+    for kind in [SchedKind::Flexible, SchedKind::Rigid] {
+        let res = simulate(reqs.clone(), Cluster::paper_sim(), Policy::FIFO, kind);
+        assert_eq!(res.completed, 3_000, "{kind:?}");
+        assert_eq!(res.unfinished, 0, "{kind:?}");
+        assert_eq!(
+            res.slot_capacity, res.slab_high_water,
+            "{kind:?}: slab exceeded the active high-water mark"
+        );
+        assert!(
+            res.slab_high_water <= res.completed / 2,
+            "{kind:?}: high-water {} is not O(active) against {} submissions",
+            res.slab_high_water,
+            res.completed
+        );
+        let retained = Simulation::new(reqs.clone(), Cluster::paper_sim(), Policy::FIFO, kind)
+            .retain_slots()
+            .run();
+        assert_bitwise_identical(&res, &retained, &format!("churn {kind:?}"));
+        assert_eq!(retained.slot_capacity, 3_000, "{kind:?}: dense reference");
+    }
 }

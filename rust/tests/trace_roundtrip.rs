@@ -8,14 +8,23 @@
 //! * ingest enforces the same schedulability caps as `WorkloadSpec`;
 //! * the fitted `WorkloadSpec`'s 10/50/90th quantiles match the source
 //!   trace's empirical quantiles (fit-accuracy property);
-//! * `ExperimentPlan::from_trace` replays a trace across configurations.
+//! * `ExperimentPlan::from_trace` replays a trace across configurations;
+//! * streaming replay (`TraceStream` → `Simulation::from_stream` /
+//!   `ExperimentPlan::from_trace_path`) is bit-identical to the
+//!   materialized path, with the request slab's high-water mark equal to
+//!   the independently recomputed peak of concurrently active apps —
+//!   O(active) memory on a trace ≥10× its churn window.
 
-use zoe::core::{unit_request, AppClass};
+use zoe::core::{unit_request, AppClass, Resources};
+use zoe::core::RequestBuilder;
 use zoe::policy::Policy;
 use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
 use zoe::sim::{simulate, ExperimentPlan, SimResult, Simulation};
-use zoe::trace::{fit_workload, IngestOptions, SharedBuf, TraceRecorder, TraceSource, TraceStats};
+use zoe::trace::{
+    fit_workload, IngestOptions, SharedBuf, TraceRecorder, TraceSource, TraceStats, TraceStream,
+};
+use zoe::util::json::Json;
 use zoe::workload::{Caps, WorkloadSpec};
 
 const ALL_KINDS: [SchedKind; 4] = [
@@ -32,6 +41,10 @@ fn assert_bit_identical(a: &SimResult, b: &SimResult, what: &str) {
     assert_eq!(a.events, b.events, "{what}: events");
     assert_eq!(a.unfinished, b.unfinished, "{what}: unfinished");
     assert_eq!(a.heap_compactions, b.heap_compactions, "{what}: compactions");
+    assert_eq!(
+        a.slab_high_water, b.slab_high_water,
+        "{what}: slab high-water"
+    );
     assert_eq!(
         a.end_time.to_bits(),
         b.end_time.to_bits(),
@@ -266,7 +279,9 @@ fn trace_source_sorts_by_arrival_and_reassigns_ids() {
     let t = TraceSource::new(reqs);
     let arrivals: Vec<f64> = t.requests().iter().map(|r| r.arrival).collect();
     assert_eq!(arrivals, vec![10.0, 20.0, 30.0]);
-    let ids: Vec<u32> = t.requests().iter().map(|r| r.id).collect();
+    // Placeholder handles in arrival order (the engine's slab reassigns
+    // them at allocation).
+    let ids: Vec<u32> = t.requests().iter().map(|r| r.id.slot).collect();
     assert_eq!(ids, vec![0, 1, 2]);
     assert_eq!(t.span(), 20.0);
     let res = t.simulate(Cluster::units(4), Policy::FIFO, SchedKind::Flexible);
@@ -351,6 +366,16 @@ fn bundled_sample_trace_ingests_and_replays() {
         assert_eq!(res.completed as usize, trace.len(), "{kind:?}");
         assert_eq!(res.unfinished, 0, "{kind:?}");
     }
+    // The bundled sample is arrival-ordered, so it also streams — and
+    // the streamed replay matches the materialized one bit for bit.
+    let n = trace.len();
+    let materialized = trace.simulate(Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible);
+    let stream = TraceStream::open(path, &IngestOptions::default()).unwrap();
+    let streamed = Simulation::from_stream(stream, Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible)
+        .try_run()
+        .unwrap();
+    assert_eq!(streamed.completed as usize, n);
+    assert_bit_identical(&materialized, &streamed, "bundled sample streamed");
 }
 
 #[test]
@@ -362,4 +387,166 @@ fn bundled_google_csv_ingests() {
     assert!(trace.requests().iter().any(|r| r.class == AppClass::BatchRigid));
     let res = trace.simulate(Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible);
     assert_eq!(res.completed as usize, trace.len());
+}
+
+// ---------------------------------------------------------------------------
+// Streaming replay: constant-memory, bit-identical, O(active) slab
+// ---------------------------------------------------------------------------
+
+/// A long, lightly-loaded churn workload: ~`n` requests whose in-system
+/// windows overlap only a little, so total submissions dwarf the active
+/// high-water mark (the trace is many times its own churn window).
+fn churn_requests(n: u32) -> Vec<zoe::core::Request> {
+    let mut rng = zoe::util::rng::Rng::new(0xCAFE);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.range_f64(5.0, 15.0); // mean gap 10 s
+            RequestBuilder::new(i)
+                .arrival(t)
+                .runtime(rng.range_f64(5.0, 30.0)) // isolated span ≤ 30 s
+                .cores(rng.range_u64(1, 3) as u32, Resources::new(1.0, 1.0))
+                .elastics(rng.below(4) as u32, Resources::new(1.0, 1.0))
+                .build()
+        })
+        .collect()
+}
+
+/// The streaming acceptance criterion: record a churn run whose length
+/// is ≥10× its churn window, then replay the recorded event log three
+/// ways — materialized, streamed, and streamed-with-retained-slots —
+/// and assert (a) all replays are bit-identical to the original,
+/// (b) the streamed replay's slab high-water mark equals the *actual*
+/// peak of concurrently in-system apps (recomputed independently from
+/// the log's arrival/departure lines), and (c) the slab never grew past
+/// it, at ≥10× fewer slots than total arrivals.
+#[test]
+fn streaming_replay_is_bit_identical_with_o_active_slab() {
+    let reqs = churn_requests(1_000);
+    let cluster = || Cluster::units(32);
+    let buf = SharedBuf::new();
+    let original = Simulation::new(reqs, cluster(), Policy::FIFO, SchedKind::Flexible)
+        .with_recorder(TraceRecorder::new(Box::new(buf.clone())))
+        .run();
+    assert_eq!(original.completed, 1_000);
+    let log = buf.contents();
+
+    // Independent ground truth: sweep the log's arrival/departure lines
+    // (+1/−1; arrivals first at ties, matching the engine's event order
+    // — a slot is freed only after its departure is fully processed).
+    let mut events: Vec<(f64, i32)> = Vec::new();
+    for line in log.lines() {
+        let j = Json::parse(line).unwrap();
+        match j.get("ev").as_str() {
+            Some("arrival") => events.push((j.get("t").as_f64().unwrap(), 1)),
+            Some("departure") => events.push((j.get("t").as_f64().unwrap(), -1)),
+            _ => {}
+        }
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+    let (mut cur, mut peak) = (0i64, 0i64);
+    for (_, d) in &events {
+        cur += *d as i64;
+        peak = peak.max(cur);
+    }
+    assert_eq!(
+        original.slab_high_water, peak as u64,
+        "slab high-water must equal the peak of concurrently active apps"
+    );
+    assert_eq!(
+        original.slot_capacity, original.slab_high_water,
+        "the slab never grows past the active high-water mark"
+    );
+    assert!(
+        original.completed >= 10 * original.slab_high_water,
+        "churn workload must be ≥10× its churn window (got {} apps, peak {})",
+        original.completed,
+        original.slab_high_water
+    );
+
+    // Materialized replay (record → ingest → replay, the PR-3 criterion,
+    // now under generational ids).
+    let trace = TraceSource::from_jsonl_str(&log, &IngestOptions::default()).unwrap();
+    let materialized = trace.simulate(cluster(), Policy::FIFO, SchedKind::Flexible);
+    assert_bit_identical(&original, &materialized, "materialized replay");
+
+    // Streamed replay: the engine pulls straight from the log text, one
+    // request in memory at a time.
+    let stream = TraceStream::from_jsonl_str(&log, &IngestOptions::default());
+    let streamed = Simulation::from_stream(stream, cluster(), Policy::FIFO, SchedKind::Flexible)
+        .try_run()
+        .expect("recorded logs stream cleanly");
+    assert_bit_identical(&original, &streamed, "streamed replay");
+
+    // And the retained-dense reference agrees too (slab differential
+    // through the whole trace pipeline).
+    let stream = TraceStream::from_jsonl_str(&log, &IngestOptions::default());
+    let retained = Simulation::from_stream(stream, cluster(), Policy::FIFO, SchedKind::Flexible)
+        .retain_slots()
+        .try_run()
+        .unwrap();
+    assert_bit_identical(&original, &retained, "streamed retained replay");
+    assert_eq!(retained.slot_capacity, 1_000, "dense reference materializes every id");
+}
+
+/// Streamed and materialized replays agree for every scheduler family
+/// on the paper workload (the stream is just another arrival source).
+#[test]
+fn streamed_replay_matches_materialized_for_every_scheduler() {
+    let spec = WorkloadSpec::paper_batch_only();
+    let reqs = spec.generate(300, 9);
+    for kind in ALL_KINDS {
+        let buf = SharedBuf::new();
+        let original = Simulation::new(reqs.clone(), Cluster::paper_sim(), Policy::sjf(), kind)
+            .with_recorder(TraceRecorder::new(Box::new(buf.clone())))
+            .run();
+        let log = buf.contents();
+        let stream = TraceStream::from_jsonl_str(&log, &IngestOptions::default());
+        let streamed = Simulation::from_stream(stream, Cluster::paper_sim(), Policy::sjf(), kind)
+            .try_run()
+            .unwrap();
+        assert_bit_identical(&original, &streamed, &format!("{kind:?} streamed"));
+    }
+}
+
+/// `ExperimentPlan::from_trace_path` streams the file per grid task and
+/// produces results bit-identical to the materialized `from_trace` grid.
+#[test]
+fn experiment_plan_streams_trace_files() {
+    let reqs = churn_requests(200);
+    // Unique per process: concurrent test runs must not share the file.
+    let dir = std::env::temp_dir().join(format!(
+        "zoe_stream_plan_test_{}.jsonl",
+        std::process::id()
+    ));
+    {
+        let rec = TraceRecorder::to_path(dir.to_str().unwrap()).unwrap();
+        let _ = Simulation::new(reqs.clone(), Cluster::units(32), Policy::FIFO, SchedKind::Flexible)
+            .with_recorder(rec)
+            .run();
+    }
+    let opts = IngestOptions::default();
+    let streamed_plan = ExperimentPlan::from_trace_path(dir.to_str().unwrap(), &opts)
+        .unwrap()
+        .cluster(Cluster::units(32))
+        .config(Policy::FIFO, SchedKind::Rigid)
+        .config(Policy::FIFO, SchedKind::Flexible)
+        .run();
+    let trace = TraceSource::from_path(dir.to_str().unwrap(), &opts).unwrap();
+    let materialized_plan = ExperimentPlan::from_trace(trace)
+        .cluster(Cluster::units(32))
+        .config(Policy::FIFO, SchedKind::Rigid)
+        .config(Policy::FIFO, SchedKind::Flexible)
+        .run();
+    for (sr, mr) in streamed_plan.runs.iter().zip(&materialized_plan.runs) {
+        assert_eq!(sr.config, mr.config);
+        assert_bit_identical(
+            &sr.per_seed[0],
+            &mr.per_seed[0],
+            &format!("plan {}", sr.config.label()),
+        );
+    }
+    // A CSV path cannot stream and fails fast at plan construction.
+    assert!(ExperimentPlan::from_trace_path("nope.csv", &opts).is_err());
+    let _ = std::fs::remove_file(dir);
 }

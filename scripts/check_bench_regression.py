@@ -11,6 +11,13 @@ environment-capped via ZOE_BENCH_SWEEP_MAX). A baseline marked
 measured on CI hardware; in that case the script only prints the fresh
 numbers and succeeds, so the first CI run on real hardware can promote
 the fresh file to the new baseline.
+
+Also checks the steady_state_memory point (request-slab high-water and
+table capacity after the churn sweep): a table capacity above the slab
+high-water mark is a structural slab leak and fails unconditionally
+(hardware-independent); against a measured baseline at the same app
+count, a high-water mark more than THRESHOLD above the baseline fails
+too (the workload is seeded, so the active peak is deterministic).
 """
 
 import json
@@ -47,6 +54,18 @@ def report_parallel(doc, label):
     return hw, best4
 
 
+def report_memory(doc, label):
+    """Print the steady_state_memory point; returns it (or None)."""
+    m = doc.get("steady_state_memory") or {}
+    if not m or not m.get("apps"):
+        print(f"{label}: no steady_state_memory point")
+        return None
+    print(f"{label}: steady-state memory @ {int(m['apps'])} apps: "
+          f"slab high-water {int(m.get('slab_high_water', 0))}, "
+          f"table capacity {int(m.get('table_capacity', 0))}")
+    return m
+
+
 def main():
     argv = sys.argv[1:]
     args, threshold = [], 0.20
@@ -72,11 +91,21 @@ def main():
         print(f"  {k[0]:<10} {k[1]:<9} apps={k[2]:<7} {p['events_per_s']:>12.0f} events/s")
 
     hw, best4 = report_parallel(new, "fresh")
+    new_mem = report_memory(new, "fresh")
+
+    # Structural slab invariant, hardware-independent: the request table
+    # must never outgrow the active high-water mark. Checked even against
+    # a provisional baseline.
+    mem_failures = []
+    if new_mem and int(new_mem.get("table_capacity", 0)) > int(new_mem.get("slab_high_water", 0)):
+        print(f"FAIL: table capacity {new_mem['table_capacity']} exceeds slab "
+              f"high-water {new_mem['slab_high_water']} (slab leak)")
+        mem_failures.append(("memory", "capacity>high_water"))
 
     if baseline.get("provisional"):
         print("baseline is provisional (no measured numbers committed); "
               "recording only — promote the fresh file to the baseline.")
-        return 0
+        return 1 if mem_failures else 0
 
     base_points = {key(p): p for p in baseline.get("results", [])}
     failures = []
@@ -87,9 +116,25 @@ def main():
     # speedup at 3.33x, which leaves no headroom for runner noise — on
     # such hosts the table is reported but not gated. Collected alongside
     # the per-point comparisons so a single run reports every failure.
+    failures.extend((k, 0, 0) for k in mem_failures)
     if hw >= 6 and best4 is not None and best4 < 3.0:
         print(f"FAIL: parallel speedup at 4+ threads is {best4:.2f}x (< 3.0x target)")
         failures.append((("parallel", "speedup", 4), 3.0, best4))
+    # Slab high-water regression: deterministic (seeded workload), so a
+    # growth beyond the threshold means the engine holds requests live
+    # longer than it used to (or stopped recycling).
+    base_mem = baseline.get("steady_state_memory") or {}
+    if (new_mem and base_mem.get("apps") and
+            int(base_mem["apps"]) == int(new_mem["apps"]) and
+            float(base_mem.get("slab_high_water", 0)) > 0):
+        old_hw = float(base_mem["slab_high_water"])
+        cur_hw = float(new_mem["slab_high_water"])
+        ratio = cur_hw / old_hw
+        status = "ok" if ratio <= 1.0 + threshold else "REGRESSION"
+        print(f"  slab high-water @ {int(new_mem['apps'])} apps: "
+              f"{old_hw:.0f} -> {cur_hw:.0f} ({ratio:5.2f}x) {status}")
+        if ratio > 1.0 + threshold:
+            failures.append((("memory", "slab_high_water", int(new_mem["apps"])), old_hw, cur_hw))
     for k, bp in sorted(base_points.items()):
         np_ = new_points.get(k)
         if np_ is None:

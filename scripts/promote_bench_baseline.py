@@ -75,6 +75,12 @@ def main():
     ps = new.get("parallel_scaling") or {}
     if not ps.get("points"):
         return fail(f"{new_path} has no parallel_scaling points — rerun the full bench")
+    mem = new.get("steady_state_memory") or {}
+    if not mem.get("apps"):
+        return fail(f"{new_path} has no steady_state_memory point — rerun the full bench")
+    if int(mem.get("table_capacity", 0)) > int(mem.get("slab_high_water", 0)):
+        return fail(f"{new_path}: table capacity {mem['table_capacity']} exceeds slab "
+                    f"high-water {mem['slab_high_water']} — a slab leak is not a baseline")
 
     if new_path != baseline_path:
         try:
@@ -99,6 +105,8 @@ def main():
     print(f"  {len(results)} throughput points, {n_speedups} optimized-vs-naive speedups, "
           f"{len(ps.get('points', []))} parallel-scaling points "
           f"({int(ps.get('hw_threads', 0))} hw threads)")
+    print(f"  steady-state memory @ {int(mem['apps'])} apps: slab high-water "
+          f"{int(mem['slab_high_water'])}, table capacity {int(mem['table_capacity'])}")
     print("commit the updated baseline to arm the CI regression gate "
           "(check_bench_regression.py now enforces thresholds).")
     return 0
