@@ -1,7 +1,8 @@
 //! Perf microbenches (§Perf in EXPERIMENTS.md): the hot paths of each
 //! layer — simulator event throughput (L3, including the scale sweep,
 //! the optimized-vs-naive engine comparison, the trace
-//! record→ingest→replay pipeline, and the parallel multi-seed scaling
+//! record→ingest→replay pipeline, the fault-replay point (seeded MTBF
+//! churn + checkpoints), and the parallel multi-seed scaling
 //! sweep), PJRT artifact step latency (L2/L1 via the runtime), the
 //! batched Table-1 scoring kernel, and the substrate primitives
 //! (placement, JSON, RNG).
@@ -19,7 +20,8 @@ use std::time::Instant;
 use zoe::policy::Policy;
 use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
-use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan, SimResult, Simulation};
+use zoe::sched::CheckpointPolicy;
+use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan, FaultSpec, SimResult, Simulation};
 use zoe::trace::{IngestOptions, SharedBuf, TraceRecorder, TraceSource};
 use zoe::util::bench::{measure, section};
 use zoe::util::json::Json;
@@ -179,6 +181,38 @@ fn main() {
         });
         (lines, ingest_wall)
     };
+
+    section("L3 — fault replay: seeded MTBF churn + checkpoints (flexible, 8k apps)");
+    if sweep_max == 0 {
+        println!("  (skipping fault replay: ZOE_BENCH_SWEEP_MAX={sweep_max})");
+    } else {
+        let apps = 8_000u32.min(sweep_max);
+        let reqs = spec.generate(apps, 1);
+        let t0 = Instant::now();
+        let res = Simulation::new(reqs, Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible)
+            .with_faults(FaultSpec::new(600.0, 60.0, 1))
+            .with_checkpoint(CheckpointPolicy::OnPreempt)
+            .run();
+        let dt = t0.elapsed().as_secs_f64();
+        let eps = res.events as f64 / dt.max(1e-12);
+        println!(
+            "  churn:  {:>9} events in {dt:>7.3}s → {:>10.0} events/s \
+             (node_down={}, requeues={}, completed={}/{apps})",
+            res.events, eps, res.fail.node_failures, res.fail.requeues, res.completed
+        );
+        assert!(
+            res.fail.node_failures > 0,
+            "the fault-replay point must actually inject failures"
+        );
+        points.push(SweepPoint {
+            sched: "flexible",
+            mode: "fault_replay",
+            apps,
+            events: res.events,
+            wall_s: dt,
+            events_per_s: eps,
+        });
+    }
 
     section("L3 — parallel multi-seed scaling (ExperimentPlan, 10-seed paper workload)");
     let par_apps: u32 = std::env::var("ZOE_BENCH_PAR_APPS")

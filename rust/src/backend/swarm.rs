@@ -150,6 +150,9 @@ pub struct Node {
     pub free: Resources,
     /// DNS-ish host name.
     pub hostname: String,
+    /// Is the node's engine reachable? A down node holds no containers
+    /// and accepts none until [`SwarmBackend::restore_node`].
+    pub up: bool,
 }
 
 /// Clock source for the back-end: wall time (a live master) or a virtual
@@ -184,6 +187,7 @@ impl SwarmBackend {
                 total: per_node,
                 free: per_node,
                 hostname: format!("node{i:03}"),
+                up: true,
             })
             .collect();
         SwarmBackend {
@@ -230,11 +234,14 @@ impl SwarmBackend {
         &self.nodes
     }
 
-    /// Cluster totals (the master's "high-fidelity view").
+    /// Cluster totals (the master's "high-fidelity view"); down nodes
+    /// contribute nothing.
     pub fn total(&self) -> Resources {
         let mut t = Resources::ZERO;
         for n in &self.nodes {
-            t.add(&n.total);
+            if n.up {
+                t.add(&n.total);
+            }
         }
         t
     }
@@ -243,18 +250,64 @@ impl SwarmBackend {
     pub fn used(&self) -> Resources {
         let mut u = Resources::ZERO;
         for n in &self.nodes {
-            u.add(&n.total);
-            u.sub(&n.free);
+            if n.up {
+                u.add(&n.total);
+                u.sub(&n.free);
+            }
         }
         u
     }
 
-    /// First node with room for `res`, if any.
+    /// First up node with room for `res`, if any.
     pub fn find_node(&self, res: &Resources) -> Option<NodeId> {
         self.nodes
             .iter()
-            .find(|n| res.fits_in(&n.free))
+            .find(|n| n.up && res.fits_in(&n.free))
             .map(|n| n.id)
+    }
+
+    /// Node `node` crashes: every running container on it dies (a
+    /// `Killed` event each — the *master* decides what the loss means
+    /// for the owning applications) and the node accepts nothing until
+    /// [`SwarmBackend::restore_node`]. Returns the dead container ids,
+    /// sorted. Idempotent on an already-down node.
+    pub fn fail_node(&mut self, node: NodeId) -> Vec<ContainerId> {
+        let Some(n) = self.nodes.get_mut(node as usize) else {
+            return Vec::new();
+        };
+        if !n.up {
+            return Vec::new();
+        }
+        let now = self.now();
+        let mut dead: Vec<ContainerId> = self
+            .containers
+            .values()
+            .filter(|c| c.node == node && c.state == ContainerState::Running)
+            .map(|c| c.id)
+            .collect();
+        dead.sort_unstable();
+        for &id in &dead {
+            let c = self.containers.get_mut(&id).unwrap();
+            c.state = ContainerState::Killed;
+            c.finished_at = now;
+            let app = c.spec.app;
+            self.events.push(Event::Killed(id, app));
+        }
+        let n = &mut self.nodes[node as usize];
+        n.up = false;
+        n.free = Resources::ZERO;
+        dead
+    }
+
+    /// A down node rejoins empty, at full capacity. No-op on a node
+    /// that is already up.
+    pub fn restore_node(&mut self, node: NodeId) {
+        if let Some(n) = self.nodes.get_mut(node as usize) {
+            if !n.up {
+                n.up = true;
+                n.free = n.total;
+            }
+        }
     }
 
     /// Create + start a container on `node` (Zoe computes placement from
@@ -264,6 +317,9 @@ impl SwarmBackend {
             .nodes
             .get_mut(node as usize)
             .ok_or_else(|| anyhow!("no such node {node}"))?;
+        if !n.up {
+            return Err(anyhow!("node {node} is down"));
+        }
         if !spec.res.fits_in(&n.free) {
             return Err(anyhow!(
                 "node {node} lacks capacity for {} ({:?} free {:?})",
@@ -424,6 +480,32 @@ mod tests {
             w.complete_one();
         }
         assert!(w.finished());
+    }
+
+    #[test]
+    fn node_failure_kills_containers_and_blocks_placement() {
+        let mut b = SwarmBackend::new(2, Resources::new(4.0, 4096.0));
+        let c0 = b.run_container(spec(1, Role::Core, 2.0), 0).unwrap();
+        let c1 = b.run_container(spec(2, Role::Core, 2.0), 1).unwrap();
+        let mut cur = 0usize;
+        let _ = b.poll_events(&mut cur);
+        let dead = b.fail_node(0);
+        assert_eq!(dead, vec![c0]);
+        assert_eq!(b.poll_events(&mut cur), vec![Event::Killed(c0, 1)]);
+        assert_eq!(b.inspect(c0).unwrap().state, ContainerState::Killed);
+        assert_eq!(b.inspect(c1).unwrap().state, ContainerState::Running);
+        // Down node: invisible to totals, placement, and run_container.
+        assert_eq!(b.total().cpu, 4.0);
+        assert_eq!(b.used().cpu, 2.0);
+        assert_eq!(b.find_node(&Resources::new(1.0, 1.0)), Some(1));
+        assert!(b.run_container(spec(3, Role::Core, 1.0), 0).is_err());
+        // Idempotent while down; restore rejoins empty at full capacity.
+        assert!(b.fail_node(0).is_empty());
+        b.restore_node(0);
+        assert_eq!(b.total().cpu, 8.0);
+        assert_eq!(b.find_node(&Resources::new(4.0, 1.0)), Some(0));
+        b.restore_node(0); // no-op on an up node
+        assert_eq!(b.nodes()[0].free.cpu, 4.0);
     }
 
     #[test]

@@ -163,6 +163,10 @@ pub struct Request {
     /// Externally-assigned priority (higher = more urgent). Interactive
     /// applications get a high priority in the preemption experiments.
     pub priority: f64,
+    /// Optional completion deadline, seconds **relative to arrival**
+    /// (`f64::INFINITY` = no deadline). Purely observational: the
+    /// schedulers ignore it, the metrics layer reports met/missed.
+    pub deadline: f64,
 }
 
 impl Request {
@@ -216,6 +220,7 @@ impl RequestBuilder {
                 n_elastic: 0,
                 elastic_res: Resources::new(1.0, 1024.0),
                 priority: 0.0,
+                deadline: f64::INFINITY,
             },
         }
     }
@@ -258,6 +263,13 @@ impl RequestBuilder {
     /// Set the external priority (higher = more urgent).
     pub fn priority(mut self, p: f64) -> Self {
         self.req.priority = p;
+        self
+    }
+
+    /// Set the completion deadline, seconds relative to arrival
+    /// (`f64::INFINITY` = none, the default).
+    pub fn deadline(mut self, d: f64) -> Self {
+        self.req.deadline = d;
         self
     }
 

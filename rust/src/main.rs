@@ -5,6 +5,9 @@
 //! ```text
 //! zoe sim     --apps 8000 --sched flexible --policy sjf [--seed 1]
 //!             [--seeds 10] [--threads 4]   # parallel multi-seed run
+//!             [--mtbf S --mttr S [--fault-seed N]]   # synthetic machine churn
+//!             [--machine-events FILE.csv]            # recorded machine churn
+//!             [--checkpoint none|periodic:SECS|on-preempt] [--deadline-frac X]
 //! zoe trace   stats  --trace FILE [--format jsonl|csv]
 //! zoe trace   replay --trace FILE [--sched flexible] [--policy fifo]
 //!             [--stream]   # constant-memory replay of huge JSONL traces
@@ -26,11 +29,11 @@ use zoe::core::Resources;
 use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
 use zoe::runtime::PjrtRuntime;
-use zoe::sched::SchedSpec;
-use zoe::sim::{simulate, ExperimentPlan, Simulation};
+use zoe::sched::{CheckpointPolicy, FailStats, SchedSpec};
+use zoe::sim::{ClusterEvents, ExperimentPlan, FaultSpec, Simulation};
 use zoe::trace::{
-    fit_workload_from_stats, spec_to_json, IngestOptions, TraceRecorder, TraceSource, TraceStats,
-    TraceStream,
+    fit_workload_from_stats, spec_to_json, IngestOptions, MachineEvents, TraceRecorder,
+    TraceSource, TraceStats, TraceStream,
 };
 use zoe::util::cli::Args;
 use zoe::util::json::Json;
@@ -88,11 +91,16 @@ fn parse_sched(s: &str) -> SchedSpec {
 /// Flags consumed by [`parse_sim_workload`] plus the `--apps/--seed`
 /// pair — shared by `zoe sim` and `zoe trace record`.
 const SIM_WORKLOAD_FLAGS: &[&str] = &[
-    "apps", "seed", "sched", "policy", "interactive", "arrival-scale",
+    "apps", "seed", "sched", "policy", "interactive", "arrival-scale", "deadline-frac",
 ];
 
-/// Shared `--sched/--policy/--interactive/--arrival-scale` handling for
-/// the commands that run a synthetic workload.
+/// Failure-model flags shared by `zoe sim` and `zoe trace replay`.
+const FAULT_FLAGS: &[&str] = &[
+    "mtbf", "mttr", "fault-seed", "machine-events", "checkpoint", "cpu-scale", "ram-scale-mb",
+];
+
+/// Shared `--sched/--policy/--interactive/--arrival-scale/--deadline-frac`
+/// handling for the commands that run a synthetic workload.
 fn parse_sim_workload(args: &Args) -> (WorkloadSpec, Policy, SchedSpec) {
     let kind = parse_sched(&args.get_or("sched", "flexible"));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
@@ -102,35 +110,167 @@ fn parse_sim_workload(args: &Args) -> (WorkloadSpec, Policy, SchedSpec) {
         WorkloadSpec::paper_batch_only()
     };
     spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
+    if let Some(frac) = positive_f64_flag(args, "deadline-frac") {
+        spec.deadline_frac = frac;
+    }
     (spec, policy, kind)
+}
+
+/// Parse `--flag` as a strictly positive, finite number; absent is
+/// `None`, anything else (zero, negative, NaN, inf, garbage) exits 2
+/// with the valid range, per the CLI conventions (`--retain-done 0`
+/// precedent).
+fn positive_f64_flag(args: &Args, flag: &str) -> Option<f64> {
+    let raw = args.get(flag)?;
+    match raw.parse::<f64>() {
+        Ok(v) if v.is_finite() && v > 0.0 => Some(v),
+        _ => {
+            eprintln!("--{flag} {raw} is invalid (valid: a finite number > 0)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Parse `--checkpoint none|periodic:SECS|on-preempt` (default: none).
+fn parse_checkpoint(args: &Args) -> CheckpointPolicy {
+    match args.get("checkpoint") {
+        None | Some("none") => CheckpointPolicy::None,
+        Some("on-preempt") => CheckpointPolicy::OnPreempt,
+        Some(s) => {
+            if let Some(secs) = s.strip_prefix("periodic:") {
+                if let Ok(v) = secs.parse::<f64>() {
+                    if v.is_finite() && v > 0.0 {
+                        return CheckpointPolicy::Periodic(v);
+                    }
+                }
+            }
+            eprintln!(
+                "unknown checkpoint policy '{s}' (valid: none | periodic:SECS with SECS > 0 | on-preempt)"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Parse the churn flags: synthetic (`--mtbf/--mttr/--fault-seed`,
+/// both times required together) or a real `machine_events` CSV
+/// (`--machine-events`, scaled by `--cpu-scale/--ram-scale-mb`). The
+/// two are mutually exclusive — each defines the full churn timeline.
+fn parse_faults(args: &Args) -> (Option<FaultSpec>, Option<MachineEvents>) {
+    let mtbf = positive_f64_flag(args, "mtbf");
+    let mttr = positive_f64_flag(args, "mttr");
+    if mtbf.is_some() != mttr.is_some() {
+        eprintln!("--mtbf and --mttr must be given together (both simulated seconds > 0)");
+        std::process::exit(2);
+    }
+    let spec = mtbf.map(|m| FaultSpec::new(m, mttr.unwrap(), args.u64_or("fault-seed", 1)));
+    let mev = args.get("machine-events").map(|path| {
+        let mut opts = IngestOptions::default();
+        opts.cpu_scale = args.f64_or("cpu-scale", opts.cpu_scale);
+        opts.ram_scale_mb = args.f64_or("ram-scale-mb", opts.ram_scale_mb);
+        let me = MachineEvents::from_csv_path(path, &opts).unwrap_or_else(|e| {
+            eprintln!("cannot ingest machine events from {path}: {e}");
+            std::process::exit(1);
+        });
+        if me.is_empty() {
+            eprintln!("{path} contains no machines");
+            std::process::exit(1);
+        }
+        me
+    });
+    if spec.is_some() && mev.is_some() {
+        eprintln!(
+            "--mtbf/--mttr and --machine-events are mutually exclusive (synthetic vs \
+             recorded churn — each defines the complete failure timeline)"
+        );
+        std::process::exit(2);
+    }
+    (spec, mev)
+}
+
+/// Print the failure/SLO outcome lines shared by `zoe sim` and the
+/// replay path (only when the run actually counted something — knobs-off
+/// output is unchanged).
+fn print_fault_summary(res: &mut zoe::sim::SimResult) {
+    if res.deadline_met + res.deadline_missed > 0 {
+        let total = (res.deadline_met + res.deadline_missed) as f64;
+        println!(
+            "deadlines:  met={} missed={} ({:.1}% met)",
+            res.deadline_met,
+            res.deadline_missed,
+            100.0 * res.deadline_met as f64 / total
+        );
+    }
+    if res.fail != FailStats::default() {
+        println!(
+            "failures:   node_down={} node_up={} requeues={} comp_kills={} \
+             preserved={:.0} c-s lost={:.0} c-s",
+            res.fail.node_failures,
+            res.fail.node_recoveries,
+            res.fail.requeues,
+            res.fail.comp_kills,
+            res.fail.preserved_work,
+            res.fail.lost_work
+        );
+        println!(
+            "tail:       turnaround p99={:.1}s p999={:.1}s",
+            res.turnaround.percentile(99.0),
+            res.turnaround.percentile(99.9)
+        );
+    }
 }
 
 fn cmd_sim(args: &Args) {
     let mut known = SIM_WORKLOAD_FLAGS.to_vec();
     known.extend_from_slice(&["seeds", "threads"]);
+    known.extend_from_slice(FAULT_FLAGS);
     args.warn_unknown(&known);
     let apps = args.u64_or("apps", 8000) as u32;
     let seed = args.u64_or("seed", 1);
     let (spec, policy, kind) = parse_sim_workload(args);
+    let (faults, mev) = parse_faults(args);
+    let checkpoint = parse_checkpoint(args);
+    // A machine_events file defines the cluster it churns: its time-0
+    // population replaces the paper cluster.
+    let cluster = mev
+        .as_ref()
+        .map_or_else(Cluster::paper_sim, |me| me.initial_cluster());
     let seeds = args.u64_or("seeds", 1);
     let mut res = if seeds > 1 {
         // Multi-seed experiment (the paper's 10-runs-per-configuration
         // protocol): seeds run in parallel, results merge in seed order.
+        // Failure knobs are plan-level: every seed faces the same churn.
         let threads = args.usize_or("threads", 0);
-        ExperimentPlan::new(spec, apps)
+        let mut plan = ExperimentPlan::new(spec, apps)
+            .cluster(cluster)
             .seeds(seed..seed + seeds)
             .config(policy, kind)
             .threads(threads)
-            .run()
-            .into_single()
+            .checkpoint(checkpoint);
+        if let Some(f) = faults {
+            plan = plan.faults(f);
+        }
+        if let Some(me) = mev {
+            plan = plan.machine_events(Arc::new(me.events));
+        }
+        plan.run().into_single()
     } else {
         let requests = spec.generate(apps, seed);
-        simulate(requests, Cluster::paper_sim(), policy, kind)
+        let mut sim =
+            Simulation::new(requests, cluster, policy, kind).with_checkpoint(checkpoint);
+        if let Some(f) = faults {
+            sim = sim.with_faults(f);
+        }
+        if let Some(me) = mev {
+            sim = sim.with_cluster_events(ClusterEvents::list(Arc::new(me.events)));
+        }
+        sim.run()
     };
     println!("{}", res.summary());
     println!("turnaround: {}", res.turnaround.boxplot());
     println!("queuing:    {}", res.queuing.boxplot());
     println!("cpu alloc:  {}", res.cpu_alloc.boxplot());
+    print_fault_summary(&mut res);
 }
 
 // ---------------------------------------------------------------------------
@@ -158,8 +298,10 @@ fn cmd_trace(args: &Args) {
             eprintln!("  replay  --trace FILE [--sched S] [--policy P] [--machines N]");
             eprintln!("          [--machine-cpu C] [--machine-ram-mb M] [--record OUT]");
             eprintln!("          [--stream]  (constant-memory; JSONL, arrival-ordered)");
+            eprintln!("          [--mtbf S --mttr S [--fault-seed N]] [--machine-events CSV]");
+            eprintln!("          [--checkpoint none|periodic:SECS|on-preempt] [--deadline-frac X]");
             eprintln!("  record  --out FILE [--apps N] [--seed S] [--sched S] [--policy P]");
-            eprintln!("          [--interactive] [--arrival-scale X]");
+            eprintln!("          [--interactive] [--arrival-scale X] [--deadline-frac X]");
             eprintln!("  fit     --trace FILE [--out SPEC.json] [--apps N] [--seed S]");
             std::process::exit(2);
         }
@@ -243,13 +385,30 @@ fn trace_stats(args: &Args) {
 }
 
 fn trace_replay(args: &Args) {
-    warn_trace_flags(
-        args,
-        &["sched", "policy", "machines", "machine-cpu", "machine-ram-mb", "record", "stream"],
-    );
+    let mut extra = vec![
+        "sched", "policy", "machines", "machine-cpu", "machine-ram-mb", "record", "stream",
+        "deadline-frac",
+    ];
+    extra.extend_from_slice(FAULT_FLAGS);
+    warn_trace_flags(args, &extra);
     let kind = parse_sched(&args.get_or("sched", "flexible"));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
-    let cluster = parse_trace_cluster(args);
+    let (faults, mev) = parse_faults(args);
+    let checkpoint = parse_checkpoint(args);
+    let deadline_frac = positive_f64_flag(args, "deadline-frac");
+    if deadline_frac.is_some() && args.has("stream") {
+        eprintln!(
+            "--deadline-frac cannot combine with --stream: deadlines attach during \
+             materialized ingest (valid: drop --stream, or record deadline fields \
+             into the JSONL trace itself)"
+        );
+        std::process::exit(2);
+    }
+    // A machine_events file defines the cluster it churns; otherwise the
+    // --machines/--machine-cpu/--machine-ram-mb knobs shape it.
+    let cluster = mev
+        .as_ref()
+        .map_or_else(|| parse_trace_cluster(args), |me| me.initial_cluster());
     let mut sim = if args.has("stream") {
         // Constant-memory path: the engine pulls arrivals one at a time;
         // the trace is never materialized. CSV cannot stream (per-job
@@ -299,8 +458,28 @@ fn trace_replay(args: &Args) {
             kind.label(),
             policy.label()
         );
-        trace.simulation(cluster, policy, kind)
+        match deadline_frac {
+            // Attach SLO deadlines to apps the trace left without one
+            // (frac × isolated runtime, like the synthetic knob).
+            Some(frac) => {
+                let mut reqs = trace.into_requests();
+                for r in &mut reqs {
+                    if !r.deadline.is_finite() {
+                        r.deadline = frac * r.runtime;
+                    }
+                }
+                TraceSource::new(reqs).simulation(cluster, policy, kind)
+            }
+            None => trace.simulation(cluster, policy, kind),
+        }
     };
+    sim = sim.with_checkpoint(checkpoint);
+    if let Some(f) = faults {
+        sim = sim.with_faults(f);
+    }
+    if let Some(me) = mev {
+        sim = sim.with_cluster_events(ClusterEvents::list(Arc::new(me.events)));
+    }
     if let Some(out) = args.get("record") {
         let rec = TraceRecorder::to_path(out).unwrap_or_else(|e| {
             eprintln!("cannot create {out}: {e}");
@@ -353,7 +532,12 @@ fn trace_fit(args: &Args) {
     }
     let mut st = TraceStats::collect(&trace);
     let spec = fit_workload_from_stats(&mut st);
-    println!("fitted workload from {} applications:", trace.len());
+    println!(
+        "fitted workload from {} applications (skipped: {} never completed in the trace \
+         window and could not be fitted):",
+        trace.len(),
+        st.skipped
+    );
     println!(
         "  interactive_frac={:.3} batch_elastic_frac={:.3}",
         spec.interactive_frac, spec.batch_elastic_frac

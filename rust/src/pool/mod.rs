@@ -69,6 +69,39 @@ pub struct Snapshot {
     used: Resources,
 }
 
+/// What happens to one machine in a capacity-change event.
+///
+/// Both churn sources — parsed ClusterData2011 `machine_events` rows
+/// ([`crate::trace`]) and the synthetic seeded MTBF/MTTR fault model
+/// ([`crate::sim`]) — compile down to this one vocabulary, so the
+/// engine and the Zoe master apply real and injected churn through the
+/// same code path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClusterEventKind {
+    /// Capacity appears: a brand-new machine (`machine == n_machines()`)
+    /// or a failed machine coming back with the given capacity.
+    Add(Resources),
+    /// The machine dies: its capacity vanishes and every component
+    /// placed on it is killed (the schedulers requeue or degrade the
+    /// affected applications).
+    Remove,
+    /// The machine's installed capacity changes in place. When the new
+    /// capacity no longer covers what is allocated on the machine, the
+    /// executor treats it as a remove + add (components are killed).
+    Update(Resources),
+}
+
+/// A timestamped capacity change applied to one machine mid-run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterEvent {
+    /// Simulation time (seconds) at which the change takes effect.
+    pub time: f64,
+    /// Machine index (dense; `Add` of index `n_machines()` appends).
+    pub machine: u32,
+    /// What happens.
+    pub kind: ClusterEventKind,
+}
+
 /// A recorded placement of `n` identical components across machines;
 /// releasable via [`Cluster::release`]. An empty `by_machine` means
 /// "nothing placed" — the dense per-request stores in the schedulers use
@@ -92,6 +125,28 @@ impl Placement {
     /// Is anything recorded?
     pub fn is_empty(&self) -> bool {
         self.by_machine.is_empty()
+    }
+
+    /// Does any component of this placement sit on `machine`?
+    pub fn touches(&self, machine: u32) -> bool {
+        self.by_machine.iter().any(|&(mi, _)| mi == machine)
+    }
+
+    /// Drop every component recorded on `machine` and return how many
+    /// were dropped. Used when `machine` died: its components are gone,
+    /// and their capacity must **not** be released back (the machine's
+    /// free space vanished with it) — the caller just forgets them.
+    pub fn remove_machine(&mut self, machine: u32) -> u32 {
+        let mut dropped = 0;
+        self.by_machine.retain(|&(mi, k)| {
+            if mi == machine {
+                dropped += k;
+                false
+            } else {
+                true
+            }
+        });
+        dropped
     }
 }
 
@@ -460,6 +515,115 @@ impl Cluster {
         self.used = snap.used;
         self.rebuild_index();
     }
+
+    // ---- dynamic capacity (churn / failure injection) --------------------
+
+    /// Installed capacity of machine `idx` (zero while it is down).
+    pub fn machine_total(&self, idx: u32) -> Resources {
+        self.machines[idx as usize].total
+    }
+
+    /// Is machine `idx` currently down (capacity removed)?
+    pub fn is_down(&self, idx: u32) -> bool {
+        let t = self.machines[idx as usize].total;
+        t.cpu <= 0.0 && t.ram_mb <= 0.0
+    }
+
+    /// O(1) block-max/cursor update after machine `idx` gained free
+    /// capacity `free` (add/restore/grow paths).
+    #[inline]
+    fn index_grew(&mut self, idx: usize, free: Resources) {
+        let b = idx / BLOCK;
+        let mx = &mut self.blk_max[b];
+        if free.cpu > mx.cpu {
+            mx.cpu = free.cpu;
+        }
+        if free.ram_mb > mx.ram_mb {
+            mx.ram_mb = free.ram_mb;
+        }
+        if b < self.open_from {
+            self.open_from = b;
+        }
+    }
+
+    /// Append a brand-new empty machine of capacity `res`; returns its
+    /// index. O(1) (the free-capacity index only grows).
+    pub fn add_machine(&mut self, res: Resources) -> u32 {
+        let idx = self.machines.len();
+        self.machines.push(Machine::new(res));
+        self.total.add(&res);
+        if idx / BLOCK >= self.blk_max.len() {
+            self.blk_max.push(Resources::ZERO);
+        }
+        self.index_grew(idx, res);
+        idx as u32
+    }
+
+    /// Machine `idx` dies: everything allocated on it vanishes (the
+    /// caller is responsible for purging placements that reference it —
+    /// see [`Placement::remove_machine`]; releasing them here would
+    /// resurrect capacity that no longer exists). Returns the installed
+    /// capacity that was removed, so the caller can restore it later.
+    pub fn fail_machine(&mut self, idx: u32) -> Resources {
+        let i = idx as usize;
+        let m = &mut self.machines[i];
+        let cap = m.total;
+        let mut in_use = m.total;
+        in_use.sub(&m.free);
+        self.used.sub(&in_use);
+        self.total.sub(&cap);
+        m.total = Resources::ZERO;
+        m.free = Resources::ZERO;
+        // The block max can only have shrunk: recompute it exactly.
+        self.rebuild_block(i / BLOCK);
+        cap
+    }
+
+    /// A previously failed machine comes back empty with capacity `res`.
+    pub fn restore_machine(&mut self, idx: u32, res: Resources) {
+        let i = idx as usize;
+        debug_assert!(self.is_down(idx), "restore_machine on a live machine");
+        let m = &mut self.machines[i];
+        m.total = res;
+        m.free = res;
+        self.total.add(&res);
+        self.index_grew(i, res);
+    }
+
+    /// Try to resize machine `idx` to installed capacity `res` without
+    /// disturbing what is allocated on it. Succeeds (and returns `true`)
+    /// iff the current in-use amount still fits `res`; otherwise nothing
+    /// changes and the caller must treat the update as a kill
+    /// ([`Cluster::fail_machine`] + [`Cluster::restore_machine`]).
+    pub fn try_resize_machine(&mut self, idx: u32, res: Resources) -> bool {
+        let i = idx as usize;
+        let m = &mut self.machines[i];
+        let mut in_use = m.total;
+        in_use.sub(&m.free);
+        if !in_use.fits_in(&res) {
+            return false;
+        }
+        self.total.sub(&m.total);
+        self.total.add(&res);
+        m.total = res;
+        let mut free = res;
+        free.sub(&in_use);
+        m.free = free;
+        // Free may have shrunk or grown: recompute the block, then let
+        // the cursor re-open it if it grew.
+        self.rebuild_block(i / BLOCK);
+        self.index_grew(i, free);
+        true
+    }
+
+    /// Release only the components of `p` **not** on machine `dead`
+    /// (whose capacity vanished with it), then clear the buffer. The
+    /// requeue path: a failed app's surviving components free their
+    /// machines; the dead machine's components are simply forgotten.
+    pub fn release_excluding(&mut self, p: &mut Placement, dead: u32) {
+        p.remove_machine(dead);
+        self.release_and_clear(p);
+    }
 }
 
 #[cfg(test)]
@@ -610,6 +774,71 @@ mod tests {
         assert_eq!(c.used().cpu, 10.0);
         c.clear();
         assert_eq!(c.used().cpu, 0.0);
+    }
+
+    #[test]
+    fn fail_and_restore_round_trip() {
+        let mut c = Cluster::uniform(2, Resources::new(4.0, 1e6));
+        let unit = Resources::new(1.0, 1.0);
+        let (placed, mut p) = c.place_up_to_tracked(&unit, 6);
+        assert_eq!(placed, 6); // 4 on machine 0, 2 on machine 1
+        let cap = c.fail_machine(0);
+        assert_eq!(cap.cpu, 4.0);
+        assert!(c.is_down(0));
+        assert_eq!(c.total().cpu, 4.0);
+        // Only machine 1's two components remain in use.
+        assert_eq!(c.used().cpu, 2.0);
+        // Requeue path: forget the dead components, free the survivors.
+        c.release_excluding(&mut p, 0);
+        assert_eq!(c.used().cpu, 0.0);
+        assert!(p.is_empty());
+        c.restore_machine(0, cap);
+        assert!(!c.is_down(0));
+        assert_eq!(c.total().cpu, 8.0);
+        assert_eq!(c.fit_count(&unit), 8);
+    }
+
+    #[test]
+    fn add_machine_extends_cluster() {
+        let mut c = Cluster::uniform(BLOCK, Resources::new(2.0, 1e6));
+        let unit = Resources::new(1.0, 1.0);
+        assert_eq!(c.place_up_to(&unit, 64), 32);
+        let idx = c.add_machine(Resources::new(2.0, 1e6));
+        assert_eq!(idx as usize, BLOCK); // opens a new block
+        assert_eq!(c.place_up_to(&unit, 64), 2);
+        let brute: u64 = c.machines().iter().map(|m| m.fit_count(&unit) as u64).sum();
+        assert_eq!(c.fit_count(&unit), brute);
+    }
+
+    #[test]
+    fn resize_within_free_keeps_allocation() {
+        let mut c = Cluster::uniform(1, Resources::new(8.0, 1e6));
+        let unit = Resources::new(1.0, 1.0);
+        assert_eq!(c.place_up_to(&unit, 3), 3);
+        // Shrink to 4 cores: 3 in use still fit.
+        assert!(c.try_resize_machine(0, Resources::new(4.0, 1e6)));
+        assert_eq!(c.total().cpu, 4.0);
+        assert_eq!(c.used().cpu, 3.0);
+        assert_eq!(c.fit_count(&unit), 1);
+        // Shrink below the in-use amount: refused, nothing changes.
+        assert!(!c.try_resize_machine(0, Resources::new(2.0, 1e6)));
+        assert_eq!(c.total().cpu, 4.0);
+        // Grow re-opens capacity.
+        assert!(c.try_resize_machine(0, Resources::new(16.0, 1e6)));
+        assert_eq!(c.fit_count(&unit), 13);
+    }
+
+    #[test]
+    fn placement_remove_machine_counts_dropped() {
+        let mut p = Placement {
+            res: Resources::new(1.0, 1.0),
+            by_machine: vec![(0, 3), (2, 1), (0, 2)],
+        };
+        assert!(p.touches(0));
+        assert_eq!(p.remove_machine(0), 5);
+        assert!(!p.touches(0));
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.remove_machine(7), 0);
     }
 
     #[test]

@@ -285,6 +285,58 @@ impl FlexibleScheduler {
         }
     }
 
+    /// Node failure: apps whose **cores** sat on the dead machine are
+    /// requeued (cores are persistent — a lost core cannot be replaced in
+    /// place); apps that only lost elastic components have their grant
+    /// degraded in place (the next cascade may re-grow it elsewhere).
+    /// Both purge the dead machine's entries without releasing them —
+    /// that capacity vanished with the machine.
+    fn on_node_down(&mut self, machine: u32, w: &mut ClusterView) {
+        self.ensure_capacity(w);
+        // Classify in serving order (deterministic processing order).
+        let mut requeue: Vec<ReqId> = Vec::new();
+        let mut degrade: Vec<ReqId> = Vec::new();
+        for &id in &self.s {
+            if self.cores[id.index()].touches(machine) {
+                requeue.push(id);
+            } else if self.elastic[id.index()].touches(machine) {
+                degrade.push(id);
+            }
+        }
+        for id in requeue {
+            let i = id.index();
+            let killed =
+                self.cores[i].remove_machine(machine) + self.elastic[i].remove_machine(machine);
+            // Surviving components stop and free their machines.
+            w.cluster.release_and_clear(&mut self.cores[i]);
+            w.cluster.release_and_clear(&mut self.elastic[i]);
+            let pos = self.s.iter().position(|&x| x == id).unwrap();
+            self.s.remove(pos);
+            self.full_demand.sub(&w.state(id).req.full_total());
+            if self.s.is_empty() {
+                self.full_demand = Resources::ZERO;
+            }
+            w.note_requeued(id, killed);
+            // Back to the waiting line at its current policy key.
+            resort_keyed(&mut self.l, w, &mut self.resort_stamp);
+            let key = w.pending_key(id);
+            let seq = w.state(id).seq;
+            insert_keyed(&mut self.l, key, seq, id);
+        }
+        for id in degrade {
+            let dead = self.elastic[id.index()].remove_machine(machine);
+            if dead > 0 {
+                w.fail_stats.comp_kills += dead as u64;
+                let g = w.state(id).grant - dead;
+                w.set_grant(id, g);
+            }
+        }
+        // Core placements and serving order changed; whatever the
+        // requeues freed is reclaimable — retry admission and re-cascade.
+        self.cascade_clean = false;
+        self.drain_w_and_rebalance(w);
+    }
+
     fn on_departure(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
         if let Some(pos) = self.s.iter().position(|&x| x == id) {
@@ -320,8 +372,14 @@ impl FlexibleScheduler {
                 return;
             }
         }
-        // Lines 13–15: drain W first (cores-only check, elastic
-        // reclaimable → release elastic before trying).
+        self.drain_w_and_rebalance(w);
+    }
+
+    /// Lines 13–15 + REBALANCE: drain W first (cores-only check, elastic
+    /// reclaimable → release elastic before trying), then rebalance —
+    /// the shared "capacity freed" tail of departures, node recoveries
+    /// and failure requeues.
+    fn drain_w_and_rebalance(&mut self, w: &mut ClusterView) {
         if !self.w_line.is_empty() {
             self.release_all_elastic(w);
             while let Some(&(_, _, _, head)) = self.w_line.front() {
@@ -347,6 +405,13 @@ impl SchedulerCore for FlexibleScheduler {
                 // lines and retry admissions; a clean cascade is a no-op.
                 self.ensure_capacity(view);
                 self.rebalance(view);
+            }
+            SchedEvent::NodeDown { machine } => self.on_node_down(machine, view),
+            SchedEvent::NodeUp => {
+                // Capacity returned: retry admission, exactly like a
+                // departure freeing capacity.
+                self.ensure_capacity(view);
+                self.drain_w_and_rebalance(view);
             }
         }
     }

@@ -183,6 +183,49 @@ impl MalleableScheduler {
         w.cluster.release_and_clear(&mut self.elastic[id.index()]);
         self.rebalance(w);
     }
+
+    /// Node failure: core loss requeues the app (its rigid minimum no
+    /// longer holds); elastic-only loss shrinks the grant in place —
+    /// the one case where a malleable grant moves downward, which breaks
+    /// the full-prefix cursor invariant, so the cursor resets to 0.
+    fn on_node_down(&mut self, machine: u32, w: &mut ClusterView) {
+        self.ensure_capacity(w);
+        let mut requeue = Vec::new();
+        let mut degrade = Vec::new();
+        for &id in &self.s {
+            if self.cores[id.index()].touches(machine) {
+                requeue.push(id);
+            } else if self.elastic[id.index()].touches(machine) {
+                degrade.push(id);
+            }
+        }
+        for id in requeue {
+            let i = id.index();
+            let killed =
+                self.cores[i].remove_machine(machine) + self.elastic[i].remove_machine(machine);
+            w.cluster.release_and_clear(&mut self.cores[i]);
+            w.cluster.release_and_clear(&mut self.elastic[i]);
+            let pos = self.s.iter().position(|&x| x == id).expect("in serving");
+            self.s.remove(pos);
+            w.note_requeued(id, killed);
+            resort_keyed(&mut self.l, w, &mut self.resort_stamp);
+            let key = w.pending_key(id);
+            let seq = w.state(id).seq;
+            insert_keyed(&mut self.l, key, seq, id);
+        }
+        for id in degrade {
+            let dead = self.elastic[id.index()].remove_machine(machine);
+            if dead > 0 {
+                w.fail_stats.comp_kills += dead as u64;
+                let have = w.state(id).grant;
+                w.set_grant(id, have - dead);
+            }
+        }
+        // Grants shrank (or members left): the granted prefix is no
+        // longer guaranteed full. Rescan from the start.
+        self.topup_from = 0;
+        self.rebalance(w);
+    }
 }
 
 impl SchedulerCore for MalleableScheduler {
@@ -191,6 +234,11 @@ impl SchedulerCore for MalleableScheduler {
             SchedEvent::Arrival(id) => self.on_arrival(id, view),
             SchedEvent::Departure(id) => self.on_departure(id, view),
             SchedEvent::Tick => {
+                self.ensure_capacity(view);
+                self.rebalance(view);
+            }
+            SchedEvent::NodeDown { machine } => self.on_node_down(machine, view),
+            SchedEvent::NodeUp => {
                 self.ensure_capacity(view);
                 self.rebalance(view);
             }

@@ -212,6 +212,19 @@ pub enum Decision {
         /// The preempted request.
         id: ReqId,
     },
+    /// `id` lost a core (rigid) component to a **node failure** and went
+    /// back to the waiting line: phase [`Phase::Pending`], grant 0, and
+    /// accrued work reduced to what the view's [`CheckpointPolicy`]
+    /// preserved (see [`ClusterView::note_requeued`]). Executors treat it
+    /// like [`Decision::Preempt`] — the engine retires the stale
+    /// departure prediction, the master kills the app's surviving
+    /// containers and re-queues it — the difference is purely in the
+    /// work accounting (preemption preserves everything; a failure loses
+    /// whatever was not checkpointed).
+    Requeue {
+        /// The failed-and-requeued request.
+        id: ReqId,
+    },
 }
 
 impl Decision {
@@ -221,7 +234,8 @@ impl Decision {
             Decision::Admit { id, .. }
             | Decision::SetGrant { id, .. }
             | Decision::Reclaim { id, .. }
-            | Decision::Preempt { id } => id,
+            | Decision::Preempt { id }
+            | Decision::Requeue { id } => id,
         }
     }
 }
@@ -239,6 +253,24 @@ pub enum SchedEvent {
     /// resort their lines and admission is retried. The simulator never
     /// emits ticks (its event loop is exact); the Zoe master does.
     Tick,
+    /// Machine `machine` died. The executor has already removed its
+    /// capacity from the view's cluster
+    /// ([`crate::pool::Cluster::fail_machine`]); the core must purge
+    /// every placement referencing the machine **without releasing it**
+    /// (the capacity no longer exists — surviving components on other
+    /// machines are released normally), requeue each app whose *core*
+    /// components were hit ([`ClusterView::note_requeued`]), degrade the
+    /// grant in place for apps that only lost elastic components, and
+    /// then retry admission with whatever the requeues freed.
+    NodeDown {
+        /// Index of the machine that died.
+        machine: u32,
+    },
+    /// Capacity came back (a failed machine restored, a new machine
+    /// added, or an in-place grow). The cluster is already updated; the
+    /// core retries admission / rebalances, exactly as after a departure
+    /// frees capacity.
+    NodeUp,
 }
 
 // ---------------------------------------------------------------------------
@@ -424,6 +456,81 @@ impl ReqTable {
 }
 
 // ---------------------------------------------------------------------------
+// Checkpointing & failure accounting
+// ---------------------------------------------------------------------------
+
+/// How much accrued work survives when a node failure requeues an app.
+///
+/// Folds into the lazy-accrual [`ReqState`] without new fields: the
+/// policy is consulted only inside [`ClusterView::note_requeued`], so
+/// the failure-free path never touches it and stays bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CheckpointPolicy {
+    /// No checkpointing: a requeue loses **all** accrued work (the app
+    /// restarts from zero when re-admitted).
+    None,
+    /// A checkpoint every `dt` seconds of service (clock restarts at
+    /// each admission): a requeue loses only the work done since the
+    /// last checkpoint, approximated as the *current* progress rate over
+    /// that span (exact when the grant did not change since the
+    /// checkpoint; conservative-ish otherwise, and always clamped to the
+    /// actually accrued work).
+    Periodic(f64),
+    /// A checkpoint is written on every preemption/kill notification
+    /// (graceful-drain assumption): requeues preserve all accrued work —
+    /// the same accounting as [`Decision::Preempt`].
+    OnPreempt,
+}
+
+impl CheckpointPolicy {
+    /// Work (component-seconds) lost if `st` is requeued at `now`.
+    /// `st.done_work` must already be accrued to `now`.
+    pub fn lost_work(&self, st: &ReqState, now: f64) -> f64 {
+        match *self {
+            CheckpointPolicy::None => st.done_work,
+            CheckpointPolicy::OnPreempt => 0.0,
+            CheckpointPolicy::Periodic(dt) => {
+                debug_assert!(dt > 0.0);
+                let elapsed = (now - st.admit_time).max(0.0);
+                let since_cp = elapsed - (elapsed / dt).floor() * dt;
+                (st.cur_rate * since_cp).clamp(0.0, st.done_work)
+            }
+        }
+    }
+}
+
+/// Mergeable counters of everything the failure machinery did — kept on
+/// the [`ClusterView`] so both executors account identically; the sim
+/// engine folds them into [`crate::sim::SimResult`] at the end of a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FailStats {
+    /// Machines that died ([`SchedEvent::NodeDown`] applied).
+    pub node_failures: u64,
+    /// Machines that came back / were added mid-run.
+    pub node_recoveries: u64,
+    /// Apps returned to the waiting line by a core-component loss.
+    pub requeues: u64,
+    /// Components killed by failures (core + elastic).
+    pub comp_kills: u64,
+    /// Work (component-seconds) that survived requeues via checkpoints.
+    pub preserved_work: f64,
+    /// Work (component-seconds) lost to requeues.
+    pub lost_work: f64,
+}
+
+impl FailStats {
+    /// Accumulate `other` (multi-seed merge).
+    pub fn merge(&mut self, other: &FailStats) {
+        self.node_failures += other.node_failures;
+        self.node_recoveries += other.node_recoveries;
+        self.requeues += other.requeues;
+        self.comp_kills += other.comp_kills;
+        self.preserved_work += other.preserved_work;
+        self.lost_work += other.lost_work;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // ClusterView — the state a core operates on
 // ---------------------------------------------------------------------------
 
@@ -460,6 +567,13 @@ pub struct ClusterView {
     /// rebalance releases and re-places everything (the seed algorithm,
     /// kept for differential testing).
     pub naive: bool,
+    /// How much accrued work survives a failure-requeue (default:
+    /// [`CheckpointPolicy::None`]). Consulted only by
+    /// [`ClusterView::note_requeued`] — irrelevant while nothing fails.
+    pub checkpoint: CheckpointPolicy,
+    /// Counters of everything the failure machinery did (all zero while
+    /// nothing fails).
+    pub fail_stats: FailStats,
 }
 
 impl ClusterView {
@@ -484,6 +598,8 @@ impl ClusterView {
             now: 0.0,
             decisions: Vec::new(),
             naive: false,
+            checkpoint: CheckpointPolicy::None,
+            fail_stats: FailStats::default(),
         }
     }
 
@@ -587,6 +703,31 @@ impl ClusterView {
         st.grant = 0;
         st.cur_rate = 0.0;
         self.decisions.push(Decision::Preempt { id });
+    }
+
+    /// Record a failure-requeue: request `id` lost `killed` components to
+    /// a dead node and returns to [`Phase::Pending`] with grant 0. Work
+    /// is accrued to now, then reduced by whatever the view's
+    /// [`CheckpointPolicy`] says was lost; the preserved/lost split and
+    /// the kill count land in [`ClusterView::fail_stats`], and
+    /// [`Decision::Requeue`] is emitted for the executors.
+    pub fn note_requeued(&mut self, id: ReqId, killed: u32) {
+        let now = self.now;
+        let cp = self.checkpoint;
+        let st = self.table.state_mut(id);
+        debug_assert_eq!(st.phase, Phase::Running);
+        st.accrue(now);
+        let lost = cp.lost_work(st, now);
+        st.done_work -= lost;
+        let preserved = st.done_work;
+        st.phase = Phase::Pending;
+        st.grant = 0;
+        st.cur_rate = 0.0;
+        self.fail_stats.requeues += 1;
+        self.fail_stats.comp_kills += killed as u64;
+        self.fail_stats.preserved_work += preserved;
+        self.fail_stats.lost_work += lost;
+        self.decisions.push(Decision::Requeue { id });
     }
 
     /// Policy key for a *pending* request at the current time.
@@ -1037,6 +1178,44 @@ mod tests {
         assert_eq!(st.cur_rate, 0.0);
         assert!((st.done_work - 10.0).abs() < 1e-9, "accrued work preserved");
         assert_eq!(v.drain_decisions(), vec![Decision::Preempt { id: rid(0) }]);
+    }
+
+    #[test]
+    fn note_requeued_applies_checkpoint_policy() {
+        let mk = || {
+            let req = crate::core::unit_request(0, 0.0, 10.0, 2, 0);
+            let mut v = ClusterView::new(vec![req], Cluster::units(10), Policy::FIFO);
+            let st = v.state_mut(rid(0));
+            st.phase = Phase::Running;
+            st.cur_rate = 2.0;
+            st.admit_time = 0.0;
+            v.now = 5.0; // 10.0 component-seconds accrued at requeue time
+            v
+        };
+        // No checkpointing: everything is lost.
+        let mut v = mk();
+        v.checkpoint = CheckpointPolicy::None;
+        v.note_requeued(rid(0), 2);
+        assert_eq!(v.state(rid(0)).phase, Phase::Pending);
+        assert_eq!(v.state(rid(0)).done_work, 0.0);
+        assert_eq!(v.fail_stats.requeues, 1);
+        assert_eq!(v.fail_stats.comp_kills, 2);
+        assert_eq!(v.fail_stats.lost_work, 10.0);
+        assert_eq!(v.fail_stats.preserved_work, 0.0);
+        assert_eq!(v.drain_decisions(), vec![Decision::Requeue { id: rid(0) }]);
+        // Periodic every 2 s: last checkpoint at t=4, 1 s × rate 2 lost.
+        let mut v = mk();
+        v.checkpoint = CheckpointPolicy::Periodic(2.0);
+        v.note_requeued(rid(0), 1);
+        assert!((v.state(rid(0)).done_work - 8.0).abs() < 1e-9);
+        assert!((v.fail_stats.lost_work - 2.0).abs() < 1e-9);
+        // Checkpoint-on-preempt: nothing is lost.
+        let mut v = mk();
+        v.checkpoint = CheckpointPolicy::OnPreempt;
+        v.note_requeued(rid(0), 1);
+        assert_eq!(v.state(rid(0)).done_work, 10.0);
+        assert_eq!(v.fail_stats.lost_work, 0.0);
+        assert_eq!(v.fail_stats.preserved_work, 10.0);
     }
 
     // -- the generational slab -------------------------------------------

@@ -132,6 +132,38 @@ impl RigidScheduler {
         w.cluster.release_and_clear(&mut self.elastic[id.index()]);
         self.try_admit(w);
     }
+
+    /// Node failure: the rigid baseline holds **every** component of an
+    /// app rigidly, so losing any of them (core or elastic) kills the
+    /// allocation — the app is requeued whole. Dead-machine entries are
+    /// purged without release (that capacity vanished); surviving
+    /// components free their machines.
+    fn on_node_down(&mut self, machine: u32, w: &mut ClusterView) {
+        self.ensure_capacity(w);
+        let hit: Vec<ReqId> = self
+            .s
+            .iter()
+            .copied()
+            .filter(|&id| {
+                self.cores[id.index()].touches(machine)
+                    || self.elastic[id.index()].touches(machine)
+            })
+            .collect();
+        for id in hit {
+            let i = id.index();
+            let killed =
+                self.cores[i].remove_machine(machine) + self.elastic[i].remove_machine(machine);
+            w.cluster.release_and_clear(&mut self.cores[i]);
+            w.cluster.release_and_clear(&mut self.elastic[i]);
+            self.s.retain(|&x| x != id);
+            w.note_requeued(id, killed);
+            resort_keyed(&mut self.l, w, &mut self.resort_stamp);
+            let key = w.pending_key(id);
+            let seq = w.state(id).seq;
+            insert_keyed(&mut self.l, key, seq, id);
+        }
+        self.try_admit(w);
+    }
 }
 
 impl SchedulerCore for RigidScheduler {
@@ -140,6 +172,11 @@ impl SchedulerCore for RigidScheduler {
             SchedEvent::Arrival(id) => self.on_arrival(id, view),
             SchedEvent::Departure(id) => self.on_departure(id, view),
             SchedEvent::Tick => {
+                self.ensure_capacity(view);
+                self.try_admit(view);
+            }
+            SchedEvent::NodeDown { machine } => self.on_node_down(machine, view),
+            SchedEvent::NodeUp => {
                 self.ensure_capacity(view);
                 self.try_admit(view);
             }

@@ -33,9 +33,9 @@ use std::sync::{Arc, OnceLock};
 
 use crate::core::Request;
 use crate::policy::Policy;
-use crate::pool::Cluster;
-use crate::sched::SchedSpec;
-use crate::sim::{simulate_with_mode, EngineMode, SimResult, Simulation};
+use crate::pool::{Cluster, ClusterEvent};
+use crate::sched::{CheckpointPolicy, SchedSpec};
+use crate::sim::{ClusterEvents, EngineMode, FaultSpec, SimResult, Simulation};
 use crate::trace::{IngestOptions, TraceError, TraceSource, TraceStream};
 use crate::workload::WorkloadSpec;
 
@@ -91,6 +91,9 @@ pub struct ExperimentPlan {
     configs: Vec<SimConfig>,
     mode: EngineMode,
     threads: usize,
+    faults: Option<FaultSpec>,
+    machine_events: Option<Arc<Vec<ClusterEvent>>>,
+    checkpoint: CheckpointPolicy,
 }
 
 /// Where a plan's requests come from: a seeded synthetic workload, a
@@ -154,6 +157,9 @@ impl ExperimentPlan {
             configs: Vec::new(),
             mode: EngineMode::Optimized,
             threads: 0,
+            faults: None,
+            machine_events: None,
+            checkpoint: CheckpointPolicy::None,
         }
     }
 
@@ -189,6 +195,46 @@ impl ExperimentPlan {
         self
     }
 
+    /// Inject synthetic machine churn: every grid cell faces the *same*
+    /// seeded MTBF/MTTR failure timeline ([`FaultSpec`] is `Copy`, its
+    /// events depend only on the spec and the cluster), so per-config
+    /// comparisons stay paired even under failures. Overridden by
+    /// [`machine_events`](Self::machine_events) when both are set.
+    pub fn faults(mut self, spec: FaultSpec) -> Self {
+        self.faults = Some(spec);
+        self
+    }
+
+    /// Replay a parsed `machine_events` churn timeline (shared behind an
+    /// `Arc` — every grid cell gets its own cursor over one list). Pair
+    /// this with [`cluster`](Self::cluster) set to
+    /// [`crate::trace::MachineEvents::initial_cluster`] so the time-0
+    /// population matches the trace. Takes precedence over
+    /// [`faults`](Self::faults).
+    pub fn machine_events(mut self, events: Arc<Vec<ClusterEvent>>) -> Self {
+        self.machine_events = Some(events);
+        self
+    }
+
+    /// Set the [`CheckpointPolicy`] for failure-requeues (default: none —
+    /// a requeued application restarts from zero work).
+    pub fn checkpoint(mut self, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = policy;
+        self
+    }
+
+    /// The per-task churn source, if any: a fresh cursor over the shared
+    /// machine-events list, else a fresh synthetic generator (same spec
+    /// ⇒ same timeline in every cell).
+    fn churn_source(&self) -> Option<ClusterEvents> {
+        if let Some(evs) = &self.machine_events {
+            Some(ClusterEvents::list(Arc::clone(evs)))
+        } else {
+            self.faults
+                .map(|spec| ClusterEvents::Synthetic(spec.state_for(&self.cluster)))
+        }
+    }
+
     fn worker_count(&self, tasks: usize) -> usize {
         let requested = if self.threads > 0 {
             self.threads
@@ -206,6 +252,19 @@ impl ExperimentPlan {
         requested.min(tasks).max(1)
     }
 
+    /// Apply the plan's failure knobs to a freshly built simulation.
+    /// All three default to no-ops, so a knobs-off plan builds a
+    /// bit-identical simulation to one that never heard of failures.
+    fn arm(&self, mut sim: Simulation) -> Simulation {
+        if let Some(src) = self.churn_source() {
+            sim = sim.with_cluster_events(src);
+        }
+        if self.checkpoint != CheckpointPolicy::None {
+            sim = sim.with_checkpoint(self.checkpoint);
+        }
+        sim
+    }
+
     fn run_one(&self, ci: usize, seed: u64) -> SimResult {
         let c = &self.configs[ci];
         let requests = match &self.source {
@@ -216,24 +275,26 @@ impl ExperimentPlan {
                 // (workers never share readers), keeping memory O(active).
                 let stream = TraceStream::open(path, opts)
                     .unwrap_or_else(|e| panic!("cannot stream {path}: {e}"));
-                return Simulation::from_stream_with_mode(
-                    stream,
-                    self.cluster.clone(),
-                    c.policy,
-                    c.sched.clone(),
-                    self.mode,
-                )
-                .try_run()
-                .unwrap_or_else(|e| panic!("streaming replay of {path} failed: {e}"));
+                return self
+                    .arm(Simulation::from_stream_with_mode(
+                        stream,
+                        self.cluster.clone(),
+                        c.policy,
+                        c.sched.clone(),
+                        self.mode,
+                    ))
+                    .try_run()
+                    .unwrap_or_else(|e| panic!("streaming replay of {path} failed: {e}"));
             }
         };
-        simulate_with_mode(
+        self.arm(Simulation::with_mode(
             requests,
             self.cluster.clone(),
             c.policy,
             c.sched.clone(),
             self.mode,
-        )
+        ))
+        .run()
     }
 
     /// Execute the whole grid and collect per-seed results, grouped by

@@ -1,0 +1,276 @@
+//! Synthetic machine churn: a seeded MTBF/MTTR exponential failure
+//! model that emits the same [`ClusterEvent`]s as a parsed
+//! ClusterData2011 `machine_events` file, so real and synthetic churn
+//! drive one engine path.
+//!
+//! Each machine is an independent alternating renewal process: up-time
+//! ~ Exp(mean = MTBF) then down-time ~ Exp(mean = MTTR), forever. The
+//! per-machine processes are driven by [`Rng::fork`]s of one master
+//! seed taken in machine-index order, which makes the full event
+//! sequence a pure function of `(seed, mtbf, mttr, n_machines)` —
+//! independent of thread count, scheduler, and replay mode. Events are
+//! generated lazily through a min-heap holding exactly one pending
+//! event per machine, so the generator is O(machines) memory no matter
+//! how long the simulated horizon runs.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::core::Resources;
+use crate::pool::{Cluster, ClusterEvent, ClusterEventKind};
+use crate::util::rng::Rng;
+
+/// A synthetic fault model: mean time between failures and mean time to
+/// repair, both in simulated seconds, plus the master seed.
+///
+/// The spec is deliberately tiny and `Copy`: an [`crate::sim::ExperimentPlan`]
+/// shares one spec across all its seeds/configs, so every cell of a
+/// sweep faces the *same* failure timeline (the workload seed varies,
+/// the hostile cluster does not — the comparison stays paired).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Mean up-time before a machine fails, seconds (> 0, finite).
+    pub mtbf: f64,
+    /// Mean down-time before a failed machine returns, seconds
+    /// (> 0, finite).
+    pub mttr: f64,
+    /// Master seed for the per-machine renewal processes.
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// A fault spec; panics on non-positive or non-finite times.
+    pub fn new(mtbf: f64, mttr: f64, seed: u64) -> Self {
+        assert!(mtbf.is_finite() && mtbf > 0.0, "mtbf must be positive and finite");
+        assert!(mttr.is_finite() && mttr > 0.0, "mttr must be positive and finite");
+        FaultSpec { mtbf, mttr, seed }
+    }
+
+    /// Instantiate the renewal processes against a concrete cluster,
+    /// capturing each machine's nominal capacity (what a recovery
+    /// restores).
+    pub fn state_for(&self, cluster: &Cluster) -> FaultState {
+        let n = cluster.n_machines();
+        let mut master = Rng::new(self.seed);
+        let mut heap = BinaryHeap::with_capacity(n);
+        let mut caps = Vec::with_capacity(n);
+        let mut rngs = Vec::with_capacity(n);
+        for i in 0..n {
+            caps.push(cluster.machine_total(i as u32));
+            // Fork in index order: each machine's stream depends only on
+            // (seed, index), never on event interleaving.
+            let mut rng = master.fork();
+            let t = rng.exp(1.0 / self.mtbf);
+            heap.push(Pending {
+                time: t,
+                machine: i as u32,
+                recovery: false,
+            });
+            rngs.push(rng);
+        }
+        FaultState {
+            spec: *self,
+            caps,
+            rngs,
+            heap,
+        }
+    }
+}
+
+/// One pending per-machine event in the lazy generator. Min-ordering by
+/// `(time, machine)` — machine index breaks exact-time ties, keeping the
+/// merged sequence deterministic.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    time: f64,
+    machine: u32,
+    recovery: bool,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse for earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.machine.cmp(&self.machine))
+    }
+}
+
+/// Live state of the synthetic churn generator: one forked RNG and one
+/// pending event per machine. Created via [`FaultSpec::state_for`].
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    spec: FaultSpec,
+    /// Nominal capacity restored on recovery (captured at construction).
+    caps: Vec<Resources>,
+    rngs: Vec<Rng>,
+    heap: BinaryHeap<Pending>,
+}
+
+impl FaultState {
+    /// Time of the next event ([`f64::INFINITY`] only for a zero-machine
+    /// cluster — the renewal processes themselves never end).
+    pub fn peek_time(&self) -> f64 {
+        self.heap.peek().map_or(f64::INFINITY, |p| p.time)
+    }
+
+    /// Pop the next event, scheduling the machine's follow-up (failure →
+    /// recovery at `+Exp(mttr)`; recovery → next failure at `+Exp(mtbf)`).
+    pub fn pop(&mut self) -> Option<ClusterEvent> {
+        let p = self.heap.pop()?;
+        let i = p.machine as usize;
+        let (next_dt, kind) = if p.recovery {
+            (
+                self.rngs[i].exp(1.0 / self.spec.mtbf),
+                ClusterEventKind::Add(self.caps[i]),
+            )
+        } else {
+            (self.rngs[i].exp(1.0 / self.spec.mttr), ClusterEventKind::Remove)
+        };
+        self.heap.push(Pending {
+            time: p.time + next_dt,
+            machine: p.machine,
+            recovery: !p.recovery,
+        });
+        Some(ClusterEvent {
+            time: p.time,
+            machine: p.machine,
+            kind,
+        })
+    }
+}
+
+/// The engine's third event source: machine churn, either a finite
+/// pre-parsed list (real `machine_events`) or the lazy synthetic
+/// generator. Both yield [`ClusterEvent`]s through one `peek`/`pop`
+/// interface, which is what lets the simulator treat real and synthetic
+/// failure scenarios identically.
+#[derive(Clone, Debug)]
+pub enum ClusterEvents {
+    /// A finite, time-sorted event list (shared so an experiment plan
+    /// can hand the same parse to every cell).
+    List {
+        /// The events, ascending by time.
+        events: Arc<Vec<ClusterEvent>>,
+        /// Next unconsumed index.
+        cursor: usize,
+    },
+    /// The infinite seeded MTBF/MTTR generator.
+    Synthetic(FaultState),
+}
+
+impl ClusterEvents {
+    /// A source over a shared pre-parsed list.
+    pub fn list(events: Arc<Vec<ClusterEvent>>) -> Self {
+        debug_assert!(
+            events.windows(2).all(|w| w[0].time <= w[1].time),
+            "cluster events must be time-sorted"
+        );
+        ClusterEvents::List { events, cursor: 0 }
+    }
+
+    /// Time of the next event; [`f64::INFINITY`] when exhausted.
+    pub fn peek_time(&self) -> f64 {
+        match self {
+            ClusterEvents::List { events, cursor } => {
+                events.get(*cursor).map_or(f64::INFINITY, |e| e.time)
+            }
+            ClusterEvents::Synthetic(st) => st.peek_time(),
+        }
+    }
+
+    /// Pop the next event, if any.
+    pub fn pop(&mut self) -> Option<ClusterEvent> {
+        match self {
+            ClusterEvents::List { events, cursor } => {
+                let e = events.get(*cursor).copied();
+                if e.is_some() {
+                    *cursor += 1;
+                }
+                e
+            }
+            ClusterEvents::Synthetic(st) => st.pop(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(spec: FaultSpec, cluster: &Cluster, n: usize) -> Vec<ClusterEvent> {
+        let mut st = spec.state_for(cluster);
+        (0..n).map(|_| st.pop().unwrap()).collect()
+    }
+
+    #[test]
+    fn synthetic_sequence_is_deterministic_and_time_ordered() {
+        let cluster = Cluster::uniform(4, Resources::new(32.0, 131072.0));
+        let spec = FaultSpec::new(1000.0, 50.0, 42);
+        let a = drain(spec, &cluster, 64);
+        let b = drain(spec, &cluster, 64);
+        assert_eq!(a, b, "same spec ⇒ bit-identical event sequence");
+        assert!(a.windows(2).all(|w| w[0].time <= w[1].time), "time-ordered");
+        // Per machine the sequence strictly alternates Remove/Add.
+        for m in 0..4u32 {
+            let evs: Vec<_> = a.iter().filter(|e| e.machine == m).collect();
+            assert!(!evs.is_empty());
+            for (i, e) in evs.iter().enumerate() {
+                let is_remove = matches!(e.kind, ClusterEventKind::Remove);
+                assert_eq!(is_remove, i % 2 == 0, "alternating per machine");
+            }
+        }
+        let c = drain(FaultSpec::new(1000.0, 50.0, 43), &cluster, 64);
+        assert_ne!(a, c, "different seed ⇒ different timeline");
+    }
+
+    #[test]
+    fn recovery_restores_nominal_capacity() {
+        let cluster = Cluster::uniform(2, Resources::new(8.0, 4096.0));
+        let spec = FaultSpec::new(10.0, 10.0, 7);
+        let evs = drain(spec, &cluster, 16);
+        for e in &evs {
+            if let ClusterEventKind::Add(r) = e.kind {
+                assert_eq!(r, Resources::new(8.0, 4096.0));
+            }
+        }
+    }
+
+    #[test]
+    fn list_source_peeks_and_drains() {
+        let evs = Arc::new(vec![
+            ClusterEvent { time: 1.0, machine: 0, kind: ClusterEventKind::Remove },
+            ClusterEvent {
+                time: 2.0,
+                machine: 0,
+                kind: ClusterEventKind::Add(Resources::new(1.0, 1.0)),
+            },
+        ]);
+        let mut src = ClusterEvents::list(evs);
+        assert_eq!(src.peek_time(), 1.0);
+        assert!(src.pop().is_some());
+        assert_eq!(src.peek_time(), 2.0);
+        assert!(src.pop().is_some());
+        assert_eq!(src.peek_time(), f64::INFINITY);
+        assert!(src.pop().is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_positive_mtbf_rejected() {
+        FaultSpec::new(0.0, 10.0, 1);
+    }
+}

@@ -23,6 +23,7 @@
 //! order.
 
 use crate::core::AppClass;
+use crate::sched::FailStats;
 use crate::util::stats::{BoxPlot, Samples, TimeWeighted};
 
 /// Collects metrics during a run.
@@ -37,6 +38,9 @@ pub struct MetricsCollector {
     cpu_alloc: TimeWeighted,
     ram_alloc: TimeWeighted,
     completed: u64,
+    deadline_met: u64,
+    deadline_missed: u64,
+    fail: FailStats,
 }
 
 impl MetricsCollector {
@@ -57,6 +61,9 @@ impl MetricsCollector {
             cpu_alloc: TimeWeighted::new(0.0, 0.0),
             ram_alloc: TimeWeighted::new(0.0, 0.0),
             completed: 0,
+            deadline_met: 0,
+            deadline_missed: 0,
+            fail: FailStats::default(),
         }
     }
 
@@ -73,6 +80,22 @@ impl MetricsCollector {
             }
         }
         self.completed += 1;
+    }
+
+    /// Record the SLO outcome of an application that carried a finite
+    /// deadline (deadline-free applications are never counted).
+    pub fn record_deadline(&mut self, met: bool) {
+        if met {
+            self.deadline_met += 1;
+        } else {
+            self.deadline_missed += 1;
+        }
+    }
+
+    /// Install the failure/requeue counters accumulated by the executor
+    /// (called once, just before [`MetricsCollector::finalize`]).
+    pub fn set_fail_stats(&mut self, fail: FailStats) {
+        self.fail = fail;
     }
 
     /// Sample the piecewise-constant signals after an event at `now`.
@@ -126,6 +149,9 @@ impl MetricsCollector {
             heap_compactions,
             slab_high_water,
             slot_capacity,
+            deadline_met: self.deadline_met,
+            deadline_missed: self.deadline_missed,
+            fail: self.fail,
         }
     }
 }
@@ -188,6 +214,15 @@ pub struct SimResult {
     /// recycling; equals total submissions in retained-dense mode; max
     /// across merged runs).
     pub slot_capacity: u64,
+    /// Applications with a finite deadline that completed within it.
+    pub deadline_met: u64,
+    /// Applications with a finite deadline that completed late — plus
+    /// unfinished applications whose deadline had already passed at the
+    /// end of the run. Deadline-free applications count in neither.
+    pub deadline_missed: u64,
+    /// Failure/requeue/checkpoint accounting (all zero in a churn-free
+    /// run; see [`FailStats`]).
+    pub fail: FailStats,
 }
 
 impl SimResult {
@@ -233,6 +268,9 @@ impl SimResult {
         // the worst case over its runs (runs share no slab).
         self.slab_high_water = self.slab_high_water.max(other.slab_high_water);
         self.slot_capacity = self.slot_capacity.max(other.slot_capacity);
+        self.deadline_met += other.deadline_met;
+        self.deadline_missed += other.deadline_missed;
+        self.fail.merge(&other.fail);
     }
 
     /// Print the paper's standard box-plot panels for this run:
@@ -272,6 +310,31 @@ impl SimResult {
         println!("  allocation (fraction):");
         println!("    {:<8} {}", "cpu", self.cpu_alloc.boxplot());
         println!("    {:<8} {}", "ram", self.ram_alloc.boxplot());
+        println!(
+            "  tail turnaround: p99={:.1}s p999={:.1}s",
+            self.turnaround.percentile(99.0),
+            self.turnaround.percentile(99.9)
+        );
+        if self.deadline_met + self.deadline_missed > 0 {
+            println!(
+                "  deadlines: met={} missed={} ({:.1}% met)",
+                self.deadline_met,
+                self.deadline_missed,
+                100.0 * self.deadline_met as f64
+                    / (self.deadline_met + self.deadline_missed) as f64
+            );
+        }
+        if self.fail != FailStats::default() {
+            let f = &self.fail;
+            println!(
+                "  failures: node_down={} node_up={} requeues={} comp_kills={}",
+                f.node_failures, f.node_recoveries, f.requeues, f.comp_kills
+            );
+            println!(
+                "  checkpoint: preserved={:.1} c-s lost={:.1} c-s",
+                f.preserved_work, f.lost_work
+            );
+        }
     }
 
     /// One-line summary for logs.
@@ -323,6 +386,31 @@ mod tests {
         assert_eq!(ra.end_time, 20.0);
         assert_eq!(ra.slab_high_water, 9, "merged peak is the max");
         assert_eq!(ra.slot_capacity, 9);
+    }
+
+    #[test]
+    fn deadline_and_fail_stats_merge() {
+        let mut a = MetricsCollector::new();
+        a.record_deadline(true);
+        a.record_deadline(false);
+        let mut fa = FailStats::default();
+        fa.requeues = 2;
+        fa.lost_work = 5.0;
+        a.set_fail_stats(fa);
+        let mut ra = a.finalize(10.0, 1, 0, 0.0, 0, 0, 0);
+        let mut b = MetricsCollector::new();
+        b.record_deadline(true);
+        let mut fb = FailStats::default();
+        fb.requeues = 3;
+        fb.node_failures = 1;
+        b.set_fail_stats(fb);
+        let rb = b.finalize(20.0, 1, 0, 0.0, 0, 0, 0);
+        ra.merge(&rb);
+        assert_eq!(ra.deadline_met, 2);
+        assert_eq!(ra.deadline_missed, 1);
+        assert_eq!(ra.fail.requeues, 5);
+        assert_eq!(ra.fail.node_failures, 1);
+        assert_eq!(ra.fail.lost_work, 5.0);
     }
 
     #[test]

@@ -19,8 +19,10 @@
 
 mod engine;
 mod experiment;
+mod fault;
 mod metrics;
 
 pub use engine::*;
 pub use experiment::*;
+pub use fault::*;
 pub use metrics::*;

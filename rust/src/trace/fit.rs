@@ -57,6 +57,13 @@ pub struct TraceStats {
     /// at full allocation). This is the number to size the O(active)
     /// request slab — and the cluster — against.
     pub peak_concurrent: usize,
+    /// Applications the ingest dropped *before* these stats were
+    /// collected (CSV jobs with no submit or no end event — they never
+    /// completed inside the trace window, so they have no runtime to
+    /// fit). A fit is only as representative as its coverage; reports
+    /// must surface this count instead of silently pretending the trace
+    /// was fully fitted.
+    pub skipped: usize,
 }
 
 impl TraceStats {
@@ -75,6 +82,7 @@ impl TraceStats {
             n_batch_elastic: 0,
             n_batch_rigid: 0,
             peak_concurrent: 0,
+            skipped: trace.skipped,
         };
         let mut prev: Option<f64> = None;
         let mut spans: Vec<(f64, f64)> = Vec::with_capacity(trace.len());
@@ -343,6 +351,17 @@ mod tests {
         assert_eq!(st.cpu.len(), 5);
         // Spans [0,10), [5,25), [9,39): all three overlap during [9,10).
         assert_eq!(st.peak_concurrent, 3);
+        assert_eq!(st.skipped, 0);
+    }
+
+    #[test]
+    fn stats_surface_ingest_skip_count() {
+        // CSV jobs dropped during aggregation (never completed in the
+        // window) must show up on the stats instead of vanishing.
+        let mut trace = TraceSource::new(vec![unit_request(0, 0.0, 10.0, 1, 0)]);
+        trace.skipped = 7;
+        let st = TraceStats::collect(&trace);
+        assert_eq!(st.skipped, 7);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::io::BufRead;
 
 use crate::core::{AppClass, ReqId, Request, Resources};
 use crate::policy::Policy;
-use crate::pool::Cluster;
+use crate::pool::{Cluster, ClusterEvent, ClusterEventKind, Machine};
 use crate::sched::SchedSpec;
 use crate::sim::{SimResult, Simulation};
 use crate::util::json::Json;
@@ -260,7 +260,7 @@ impl TraceSource {
 /// round-trip exactly: the JSON writer emits shortest-roundtrip floats,
 /// which is what makes record → replay bit-identical.
 pub(crate) fn request_to_json_fields(r: &Request) -> Vec<(&'static str, Json)> {
-    vec![
+    let mut fields = vec![
         ("class", Json::str(r.class.label())),
         ("arrival", Json::num(r.arrival)),
         ("runtime", Json::num(r.runtime)),
@@ -271,7 +271,13 @@ pub(crate) fn request_to_json_fields(r: &Request) -> Vec<(&'static str, Json)> {
         ("elastic_cpu", Json::num(r.elastic_res.cpu)),
         ("elastic_ram_mb", Json::num(r.elastic_res.ram_mb)),
         ("priority", Json::num(r.priority)),
-    ]
+    ];
+    // Optional column, emitted only when set: recordings of
+    // deadline-free runs stay byte-identical to the pre-deadline format.
+    if r.deadline.is_finite() {
+        fields.push(("deadline", Json::num(r.deadline)));
+    }
+    fields
 }
 
 /// What one JSONL line turned out to be.
@@ -372,6 +378,20 @@ fn request_from_json(
         )
     };
     let priority = j.get("priority").as_f64().unwrap_or(0.0);
+    let deadline = {
+        let v = j.get("deadline");
+        if v.is_null() {
+            f64::INFINITY
+        } else {
+            let d = v
+                .as_f64()
+                .ok_or_else(|| err("\"deadline\" must be a number".to_string()))?;
+            if !(d > 0.0) || !d.is_finite() {
+                return Err(err(format!("deadline must be positive and finite (got {d})")));
+            }
+            d
+        }
+    };
     let class = {
         let c = j.get("class");
         if c.is_null() {
@@ -419,6 +439,7 @@ fn request_from_json(
         n_elastic,
         elastic_res: Resources::new(elastic_cpu, elastic_ram_mb),
         priority,
+        deadline,
     };
     if !exempt_caps {
         apply_caps(&mut r, opts);
@@ -609,6 +630,7 @@ fn build_csv_jobs(jobs: &BTreeMap<u64, JobAgg>, opts: &IngestOptions) -> TraceSo
             n_elastic,
             elastic_res: res,
             priority,
+            deadline: f64::INFINITY,
         };
         apply_caps(&mut r, opts);
         requests.push(r);
@@ -616,6 +638,234 @@ fn build_csv_jobs(jobs: &BTreeMap<u64, JobAgg>, opts: &IngestOptions) -> TraceSo
     let mut src = TraceSource::new(requests);
     src.skipped = skipped;
     src
+}
+
+// ---------------------------------------------------------------------------
+// ClusterData2011-shaped machine_events CSV
+// ---------------------------------------------------------------------------
+
+/// `machine_events` event types (distinct numbering from `task_events`).
+const MEV_ADD: u32 = 0;
+const MEV_REMOVE: u32 = 1;
+const MEV_UPDATE: u32 = 2;
+
+/// A parsed ClusterData2011-shaped `machine_events` file: the machine
+/// population (dense-indexed), which machines exist at time 0, and the
+/// in-window churn as timestamped [`ClusterEvent`]s — the same event
+/// type the synthetic [`crate::sim::FaultSpec`] generator emits, so real
+/// and synthetic churn drive one engine path.
+///
+/// Every machine that ever appears is pre-registered at a dense index
+/// (first-appearance order); machines that only join mid-trace start
+/// *failed* (zero capacity) and their ADD becomes a restore. This keeps
+/// machine indices stable for the whole run regardless of churn order.
+#[derive(Clone, Debug, Default)]
+pub struct MachineEvents {
+    /// Nominal capacity of each machine (dense index), already scaled by
+    /// [`IngestOptions::cpu_scale`] / `ram_scale_mb`.
+    pub capacities: Vec<Resources>,
+    /// Whether machine `i` is up at time 0.
+    pub present: Vec<bool>,
+    /// In-window churn (time > 0), ascending by time (stable: equal
+    /// times keep file order).
+    pub events: Vec<ClusterEvent>,
+    /// Rows dropped: out-of-window sentinel or negative timestamps,
+    /// REMOVE/UPDATE of a machine never added, ADD/UPDATE rows missing
+    /// capacity columns.
+    pub skipped: u64,
+}
+
+impl MachineEvents {
+    /// Number of machines that ever appear in the file.
+    pub fn n_machines(&self) -> usize {
+        self.capacities.len()
+    }
+
+    /// Whether the file contained no machines at all.
+    pub fn is_empty(&self) -> bool {
+        self.capacities.is_empty()
+    }
+
+    /// The time-0 cluster: every machine registered at its dense index,
+    /// with not-yet-present machines failed (zero capacity) so a later
+    /// ADD restores them in place.
+    pub fn initial_cluster(&self) -> Cluster {
+        let machines = self.capacities.iter().map(|&r| Machine::new(r)).collect();
+        let mut c = Cluster::new(machines);
+        for (i, &up) in self.present.iter().enumerate() {
+            if !up {
+                c.fail_machine(i as u32);
+            }
+        }
+        c
+    }
+
+    /// Parse a `machine_events` CSV file.
+    pub fn from_csv_path(path: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        let f = std::fs::File::open(path).map_err(|e| TraceError {
+            line: 0,
+            msg: format!("cannot open {path}: {e}"),
+        })?;
+        Self::from_csv_reader(std::io::BufReader::new(f), opts)
+    }
+
+    /// Parse `machine_events` CSV from an in-memory string.
+    pub fn from_csv_str(s: &str, opts: &IngestOptions) -> Result<Self, TraceError> {
+        Self::from_csv_reader(s.as_bytes(), opts)
+    }
+
+    /// Streaming `machine_events` parse. Columns (exactly 6):
+    /// `timestamp_us, machine_id, event_type, platform_id, cpu, ram`
+    /// with event types 0 = ADD, 1 = REMOVE, 2 = UPDATE and capacities
+    /// normalized to the largest machine (rescaled via `opts`).
+    pub fn from_csv_reader<R: BufRead>(r: R, opts: &IngestOptions) -> Result<Self, TraceError> {
+        let mut me = MachineEvents::default();
+        let mut index: BTreeMap<u64, u32> = BTreeMap::new();
+        let mut lineno = 0usize;
+        for line in r.lines() {
+            lineno += 1;
+            let line = line.map_err(|e| TraceError {
+                line: lineno,
+                msg: format!("io error: {e}"),
+            })?;
+            parse_machine_event_line(&line, lineno, opts, &mut index, &mut me)?;
+        }
+        me.events.sort_by(|a, b| a.time.total_cmp(&b.time));
+        Ok(me)
+    }
+}
+
+fn parse_machine_event_line(
+    line: &str,
+    lineno: usize,
+    opts: &IngestOptions,
+    index: &mut BTreeMap<u64, u32>,
+    me: &mut MachineEvents,
+) -> Result<(), TraceError> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') {
+        return Ok(());
+    }
+    let cols: Vec<&str> = t.split(',').collect();
+    if cols.len() != 6 {
+        let hint = if cols.len() > 6 {
+            " — this looks like a task_events file (>= 6 columns with job/task ids); \
+             pass it via --trace, not --machine-events"
+        } else {
+            ""
+        };
+        return Err(TraceError {
+            line: lineno,
+            msg: format!(
+                "expected exactly 6 comma-separated columns (machine_events shape: \
+                 timestamp,machine_id,event_type,platform,cpu,ram), got {}{}",
+                cols.len(),
+                hint
+            ),
+        });
+    }
+    let time_us: f64 = cols[0].trim().parse().map_err(|_| TraceError {
+        line: lineno,
+        msg: format!("non-numeric timestamp \"{}\"", cols[0]),
+    })?;
+    if !(time_us < CSV_TIME_SENTINEL_US) || time_us < 0.0 {
+        me.skipped += 1; // out-of-window sentinel (or garbage): no usable time
+        return Ok(());
+    }
+    let machine_id: u64 = cols[1].trim().parse().map_err(|_| TraceError {
+        line: lineno,
+        msg: format!("non-numeric machine id \"{}\"", cols[1]),
+    })?;
+    let event: u32 = cols[2].trim().parse().map_err(|_| TraceError {
+        line: lineno,
+        msg: format!("non-numeric event type \"{}\"", cols[2]),
+    })?;
+    let res = {
+        let cpu: Option<f64> = cols[4].trim().parse().ok();
+        let ram: Option<f64> = cols[5].trim().parse().ok();
+        match (cpu, ram) {
+            (Some(c), Some(m)) if c >= 0.0 && m >= 0.0 && c.is_finite() && m.is_finite() => {
+                Some(Resources::new(c * opts.cpu_scale, m * opts.ram_scale_mb))
+            }
+            _ => None,
+        }
+    };
+    let time = time_us * 1e-6;
+    match event {
+        MEV_ADD => {
+            let Some(res) = res else {
+                me.skipped += 1; // ADD without a usable capacity
+                return Ok(());
+            };
+            match index.get(&machine_id) {
+                None => {
+                    let idx = me.capacities.len() as u32;
+                    index.insert(machine_id, idx);
+                    me.capacities.push(res);
+                    if time == 0.0 {
+                        me.present.push(true);
+                    } else {
+                        // Joins mid-trace: starts failed, this ADD
+                        // restores it.
+                        me.present.push(false);
+                        me.events.push(ClusterEvent {
+                            time,
+                            machine: idx,
+                            kind: ClusterEventKind::Add(res),
+                        });
+                    }
+                }
+                Some(&idx) => {
+                    // Re-ADD of a known machine: a restore after REMOVE.
+                    me.capacities[idx as usize] = res;
+                    if time == 0.0 {
+                        me.present[idx as usize] = true;
+                    } else {
+                        me.events.push(ClusterEvent {
+                            time,
+                            machine: idx,
+                            kind: ClusterEventKind::Add(res),
+                        });
+                    }
+                }
+            }
+        }
+        MEV_REMOVE => match index.get(&machine_id) {
+            None => me.skipped += 1, // REMOVE of a machine never added
+            Some(&idx) => {
+                if time == 0.0 {
+                    me.present[idx as usize] = false;
+                } else {
+                    me.events.push(ClusterEvent {
+                        time,
+                        machine: idx,
+                        kind: ClusterEventKind::Remove,
+                    });
+                }
+            }
+        },
+        MEV_UPDATE => match (index.get(&machine_id), res) {
+            (Some(&idx), Some(res)) => {
+                if time == 0.0 {
+                    me.capacities[idx as usize] = res;
+                } else {
+                    me.events.push(ClusterEvent {
+                        time,
+                        machine: idx,
+                        kind: ClusterEventKind::Update(res),
+                    });
+                }
+            }
+            _ => me.skipped += 1, // unknown machine or no usable capacity
+        },
+        _ => {
+            return Err(TraceError {
+                line: lineno,
+                msg: format!("unknown machine_events event type {event} (expected 0|1|2)"),
+            })
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -738,5 +988,78 @@ mod tests {
         let src = TraceSource::from_jsonl_str("", &IngestOptions::default()).unwrap();
         assert!(src.is_empty());
         assert_eq!(src.span(), 0.0);
+    }
+
+    #[test]
+    fn jsonl_deadline_round_trips_and_validates() {
+        let r = line_req(
+            r#"{"arrival":0.0,"runtime":10.0,"n_core":1,"core_cpu":1.0,"core_ram_mb":64,"deadline":25.0}"#,
+        );
+        assert_eq!(r.deadline, 25.0);
+        // Absent deadline = none; the emitted fields omit it, so old
+        // recordings stay byte-identical.
+        let r2 = line_req(r#"{"arrival":0.0,"runtime":10.0,"n_core":1,"core_cpu":1.0,"core_ram_mb":64}"#);
+        assert!(r2.deadline.is_infinite());
+        assert!(!request_to_json_fields(&r2).iter().any(|(k, _)| *k == "deadline"));
+        assert!(request_to_json_fields(&r).iter().any(|(k, _)| *k == "deadline"));
+        let bad = r#"{"arrival":0.0,"runtime":10.0,"n_core":1,"core_cpu":1.0,"core_ram_mb":64,"deadline":-5.0}"#;
+        let err = TraceSource::from_jsonl_str(bad, &IngestOptions::default()).unwrap_err();
+        assert!(err.msg.contains("deadline"), "{}", err.msg);
+    }
+
+    // ---- machine_events --------------------------------------------------
+
+    #[test]
+    fn machine_events_basic_lifecycle() {
+        // Two machines at t=0; m1 dies at 10s, comes back at 20s; m2
+        // resized at 15s; a third machine joins at 30s.
+        let s = "0,1,0,p,0.5,0.5\n\
+                 0,2,0,p,1.0,1.0\n\
+                 10000000,1,1,p,,\n\
+                 15000000,2,2,p,0.25,0.25\n\
+                 20000000,1,0,p,0.5,0.5\n\
+                 30000000,3,0,p,1.0,1.0\n";
+        let me = MachineEvents::from_csv_str(s, &IngestOptions::default()).unwrap();
+        assert_eq!(me.n_machines(), 3);
+        assert_eq!(me.present, vec![true, true, false]);
+        assert_eq!(me.skipped, 0);
+        assert_eq!(me.events.len(), 4);
+        assert_eq!(me.events[0].time, 10.0);
+        assert_eq!(me.events[0].kind, ClusterEventKind::Remove);
+        // Capacities scaled by cpu_scale=32 / ram_scale_mb=131072.
+        assert_eq!(me.capacities[0].cpu, 16.0);
+        assert_eq!(me.capacities[0].ram_mb, 0.5 * 128.0 * 1024.0);
+        let c = me.initial_cluster();
+        assert_eq!(c.n_machines(), 3);
+        assert!(c.is_down(2));
+        assert!(!c.is_down(0));
+    }
+
+    #[test]
+    fn machine_events_skips_sentinels_and_unknown_removes() {
+        let s = "9223372036854775807,1,0,p,0.5,0.5\n\
+                 0,7,1,p,,\n\
+                 0,1,0,p,0.5,0.5\n";
+        let me = MachineEvents::from_csv_str(s, &IngestOptions::default()).unwrap();
+        assert_eq!(me.n_machines(), 1);
+        assert_eq!(me.skipped, 2, "sentinel ADD + REMOVE of unknown machine");
+    }
+
+    #[test]
+    fn machine_events_rejects_task_events_shape() {
+        // A task_events row (13 columns) must fail fast, naming both
+        // formats, not silently misparse.
+        let s = "0,,1,0,,0,u,1,0,0.1,0.1,,\n";
+        let err = MachineEvents::from_csv_str(s, &IngestOptions::default()).unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(err.msg.contains("task_events"), "{}", err.msg);
+        assert!(err.msg.contains("machine_events"), "{}", err.msg);
+        // Malformed numeric fields error with the line number.
+        let bad = "0,xyz,0,p,0.5,0.5\n";
+        let err = MachineEvents::from_csv_str(bad, &IngestOptions::default()).unwrap_err();
+        assert!(err.msg.contains("machine id"), "{}", err.msg);
+        let bad = "0,1,9,p,0.5,0.5\n";
+        let err = MachineEvents::from_csv_str(bad, &IngestOptions::default()).unwrap_err();
+        assert!(err.msg.contains("event type"), "{}", err.msg);
     }
 }

@@ -10,8 +10,9 @@
 //!   - the **native JSONL app trace**: one JSON object per line with the
 //!     request tuple (`arrival`, `runtime`, `n_core`, `core_cpu`,
 //!     `core_ram_mb`, optional `n_elastic`/`elastic_cpu`/
-//!     `elastic_ram_mb`/`class`/`priority`). Application class is
-//!     inferred when absent (`n_elastic == 0` ⇒ B-R, else B-E);
+//!     `elastic_ram_mb`/`class`/`priority`/`deadline`). Application
+//!     class is inferred when absent (`n_elastic == 0` ⇒ B-R, else
+//!     B-E); `deadline` is seconds relative to arrival (absent = none);
 //!   - a **Google ClusterData2011-shaped CSV** (`task_events`-like
 //!     columns: timestamp µs, —, job id, task index, —, event type, —,
 //!     scheduling class, priority, CPU request, RAM request, …). Task
@@ -19,7 +20,15 @@
 //!     become components, the SCHEDULE→last-end span becomes the
 //!     isolated runtime, and the scheduling class drives rigid/elastic
 //!     inference (class 3 ⇒ interactive, class 2 ⇒ rigid batch,
-//!     0/1 ⇒ elastic batch with one core "driver" component).
+//!     0/1 ⇒ elastic batch with one core "driver" component);
+//!   - a **ClusterData2011-shaped `machine_events` CSV**
+//!     ([`MachineEvents`]): exactly 6 columns (timestamp µs, machine id,
+//!     event type 0=ADD/1=REMOVE/2=UPDATE, platform, CPU, RAM) turned
+//!     into the time-0 machine population plus timestamped
+//!     [`crate::pool::ClusterEvent`] churn — the same event type the
+//!     synthetic [`crate::sim::FaultSpec`] generator emits, so real and
+//!     synthetic failures drive one engine path (`--machine-events` /
+//!     `--mtbf` on the CLI).
 //!
 //!   Both formats pass through the same schedulability caps
 //!   ([`crate::workload::Caps`]) the synthetic generator enforces, so an

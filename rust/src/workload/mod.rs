@@ -114,6 +114,16 @@ pub struct WorkloadSpec {
     pub max_full_ram_mb: f64,
     /// Multiplier on sampled inter-arrival times (load knob: >1 = lighter).
     pub arrival_scale: f64,
+    /// Optional SLO dimension: every application gets a completion
+    /// deadline of `deadline_frac ×` its isolated runtime, relative to
+    /// arrival (`0.0`, the default, attaches no deadlines). Values below
+    /// 1.0 are unmeetable by construction; 2–4 is a realistic "some
+    /// queueing tolerated" SLO. Deadlines are purely observational —
+    /// they never alter scheduling, only the met/missed counters in
+    /// [`crate::sim::SimResult`]. Attached *after* sampling, so turning
+    /// the knob on never shifts the RNG stream: the sampled workload is
+    /// bit-identical with or without deadlines.
+    pub deadline_frac: f64,
     /// Table-3 mode: batch applications keep their full component counts
     /// but every component is core (the same offered load, fully
     /// inelastic).
@@ -200,6 +210,7 @@ impl WorkloadSpec {
             max_full_cpu: 0.50 * 3200.0,
             max_full_ram_mb: 0.50 * 100.0 * 128.0 * 1024.0,
             arrival_scale: 1.0,
+            deadline_frac: 0.0,
             inelastic_mode: false,
         }
     }
@@ -239,6 +250,17 @@ impl WorkloadSpec {
         Resources::new(self.cpu.sample(rng), self.ram_mb.sample(rng))
     }
 
+    /// Attach the SLO deadline (`deadline_frac × runtime`) when the knob
+    /// is on. Pure arithmetic on already-sampled values — consumes no
+    /// RNG draws, so the workload itself is unchanged by the knob.
+    fn apply_deadline(&self, b: RequestBuilder, runtime: f64) -> RequestBuilder {
+        if self.deadline_frac > 0.0 {
+            b.deadline(self.deadline_frac * runtime)
+        } else {
+            b
+        }
+    }
+
     fn sample_app(&self, id: u32, arrival: f64, rng: &mut Rng) -> Request {
         let interactive = rng.chance(self.interactive_frac);
         let runtime = self.runtime.sample(rng);
@@ -248,13 +270,15 @@ impl WorkloadSpec {
             let n_core = rng.range_u64(1, 2) as u32;
             let mut n_elastic = self.interactive_elastic.sample(rng).round().max(1.0) as u32;
             n_elastic = self.cap_elastic(n_elastic, n_core, &core_res, &elastic_res);
-            return RequestBuilder::new(id)
+            let b = RequestBuilder::new(id)
                 .class(AppClass::Interactive)
                 .arrival(arrival)
                 .runtime(runtime * self.interactive_runtime_scale)
                 .cores(n_core, core_res)
                 .elastics(n_elastic, elastic_res)
-                .priority(self.interactive_priority)
+                .priority(self.interactive_priority);
+            return self
+                .apply_deadline(b, runtime * self.interactive_runtime_scale)
                 .build();
         }
         let elastic = rng.chance(self.batch_elastic_frac);
@@ -271,33 +295,33 @@ impl WorkloadSpec {
                 // merged group uses the elastic profile — both profiles
                 // come from the same Fig-2 CDFs). Demand stays within
                 // `max_full_*` by the caps above.
-                return RequestBuilder::new(id)
+                let b = RequestBuilder::new(id)
                     .class(AppClass::BatchRigid)
                     .arrival(arrival)
                     .runtime(runtime)
                     .cores(n_core + n_elastic, elastic_res)
-                    .elastics(0, Resources::ZERO)
-                    .build();
+                    .elastics(0, Resources::ZERO);
+                return self.apply_deadline(b, runtime).build();
             }
-            RequestBuilder::new(id)
+            let b = RequestBuilder::new(id)
                 .class(AppClass::BatchElastic)
                 .arrival(arrival)
                 .runtime(runtime)
                 .cores(n_core, core_res)
-                .elastics(n_elastic, elastic_res)
-                .build()
+                .elastics(n_elastic, elastic_res);
+            self.apply_deadline(b, runtime).build()
         } else {
             // B-R: every component is core (e.g. distributed TensorFlow).
             let core_res = self.sample_res(rng);
             let mut n_core = self.rigid_components.sample(rng).round().max(1.0) as u32;
             n_core = self.cap_cores(n_core, &core_res);
-            RequestBuilder::new(id)
+            let b = RequestBuilder::new(id)
                 .class(AppClass::BatchRigid)
                 .arrival(arrival)
                 .runtime(runtime)
                 .cores(n_core, core_res)
-                .elastics(0, Resources::ZERO)
-                .build()
+                .elastics(0, Resources::ZERO);
+            self.apply_deadline(b, runtime).build()
         }
     }
 
@@ -407,6 +431,24 @@ mod tests {
         assert!(caps.cap_elastic(1_000_000, 4, &res, &res) >= 1);
         let n_el = caps.cap_elastic(1_000_000, 480, &res, &res);
         assert!((480.0 + n_el as f64) * res.cpu <= caps.max_full_cpu + 1e-9);
+    }
+
+    #[test]
+    fn deadline_knob_never_shifts_the_rng_stream() {
+        let base = WorkloadSpec::paper();
+        let mut slo = WorkloadSpec::paper();
+        slo.deadline_frac = 3.0;
+        let a = base.generate(2_000, 9);
+        let b = slo.generate(2_000, 9);
+        for (x, y) in a.iter().zip(&b) {
+            // Identical sampled workload, bit for bit...
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.runtime.to_bits(), y.runtime.to_bits());
+            assert_eq!((x.n_core, x.n_elastic, x.class), (y.n_core, y.n_elastic, y.class));
+            // ...except the observational deadline dimension.
+            assert!(x.deadline.is_infinite());
+            assert_eq!(y.deadline.to_bits(), (3.0 * y.runtime).to_bits());
+        }
     }
 
     #[test]

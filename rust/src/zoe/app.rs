@@ -131,6 +131,7 @@ impl AppDescription {
             n_elastic,
             elastic_res: envelope(ComponentClass::Elastic),
             priority: self.priority,
+            deadline: f64::INFINITY,
         }
     }
 

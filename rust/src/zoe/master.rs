@@ -10,11 +10,11 @@
 //! core and *applies* the emitted [`Decision`] stream to physical
 //! containers:
 //!
-//! * [`Decision::Reclaim`] / [`Decision::Preempt`] kill containers
-//!   first (capacity-freeing decisions are applied before consuming
-//!   ones — the cascade legitimately emits an admission before the
-//!   reclaim that funds it, because virtually all elastic was released
-//!   up front);
+//! * [`Decision::Reclaim`] / [`Decision::Preempt`] /
+//!   [`Decision::Requeue`] kill containers first (capacity-freeing
+//!   decisions are applied before consuming ones — the cascade
+//!   legitimately emits an admission before the reclaim that funds it,
+//!   because virtually all elastic was released up front);
 //! * [`Decision::Admit`] starts the application's core containers on the
 //!   nodes of the decision's virtual placement (the view is
 //!   node-mirrored, and its per-component "envelope" demand is
@@ -333,6 +333,50 @@ impl ZoeMaster {
         }
     }
 
+    /// A Swarm node died (health-check timeout, pulled plug, or a
+    /// replayed [`crate::pool::ClusterEvent`]): its containers are gone,
+    /// the mirrored virtual machine fails, and the core decides what the
+    /// loss means — core/rigid victims come back through
+    /// [`Decision::Requeue`] (killed, re-queued, work per the view's
+    /// [`crate::sched::CheckpointPolicy`]), elastic-only victims through
+    /// a degraded grant. Mirrors the simulator's churn path event for
+    /// event, which is what extends sim ↔ master agreement to failures.
+    /// No-op when the node is unknown or already down.
+    pub fn node_down(&mut self, node: NodeId) {
+        if (node as usize) >= self.backend.nodes().len() || self.view.cluster.is_down(node) {
+            return;
+        }
+        let now = self.backend.now();
+        for cid in self.backend.fail_node(node) {
+            self.discovery.deregister_container(cid);
+        }
+        self.view.now = now;
+        self.view.cluster.fail_machine(node);
+        self.view.fail_stats.node_failures += 1;
+        self.core
+            .on_event(SchedEvent::NodeDown { machine: node }, &mut self.view);
+        self.apply_decisions();
+        self.sample_alloc();
+    }
+
+    /// A down node rejoined (empty, full capacity): restore its mirror
+    /// and let the core re-admit / re-grow into the returned capacity.
+    /// No-op when the node is unknown or already up.
+    pub fn node_up(&mut self, node: NodeId) {
+        if (node as usize) >= self.backend.nodes().len() || !self.view.cluster.is_down(node) {
+            return;
+        }
+        let now = self.backend.now();
+        self.backend.restore_node(node);
+        let cap = self.backend.nodes()[node as usize].total;
+        self.view.now = now;
+        self.view.cluster.restore_machine(node, cap);
+        self.view.fail_stats.node_recoveries += 1;
+        self.core.on_event(SchedEvent::NodeUp, &mut self.view);
+        self.apply_decisions();
+        self.sample_alloc();
+    }
+
     /// One [`SchedEvent::Tick`] pass: dynamic policies resort their
     /// lines, admissions are retried, and under-fulfilled elastic grants
     /// are reconciled. Never called implicitly — scheduling is
@@ -373,7 +417,10 @@ impl ZoeMaster {
             for d in &decisions {
                 match *d {
                     Decision::Reclaim { id, .. } => self.reconcile_app_elastic(id, false),
-                    Decision::Preempt { id } => self.preempt_app(id),
+                    // A failure-requeue is a preemption the scheduler did
+                    // not choose: kill the surviving containers, keep the
+                    // work ledger, back to the queue.
+                    Decision::Preempt { id } | Decision::Requeue { id } => self.preempt_app(id),
                     _ => {}
                 }
             }

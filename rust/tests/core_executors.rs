@@ -343,6 +343,8 @@ impl SchedulerCore for LifoPreemptCore {
                     self.admit_next(view);
                 }
             }
+            // This toy core is only exercised on failure-free scenarios.
+            SchedEvent::NodeDown { .. } | SchedEvent::NodeUp => {}
         }
     }
 

@@ -1,0 +1,458 @@
+//! Hostile-cluster survival: integration tests for machine churn,
+//! node-failure injection, checkpoint/restart and SLO accounting.
+//!
+//! The acceptance criteria pinned here:
+//!
+//! * **knobs off ⇒ bit-identical**: arming the checkpoint policy or an
+//!   empty churn source must not perturb a single bit of any
+//!   `SimResult`, for all four `SchedKind`s across many seeds;
+//! * **failure scenarios are deterministic**: the same seed + MTBF/MTTR
+//!   produce byte-identical results at any thread count, and streaming
+//!   replay of a recorded trace under churn matches the materialized
+//!   path bit for bit;
+//! * **no app is ever lost**: under brutal churn (including a full
+//!   drain to zero capacity) every submitted app is either completed or
+//!   reported unfinished — rigid apps are requeued, never dropped;
+//! * **real churn files replay**: the bundled `machine_events` sample
+//!   parses (skipping sentinel rows) and drives a simulation;
+//! * **sim ↔ master agreement extends to failures**: the simulator's
+//!   `ClusterView` executor and the Zoe master driven through the same
+//!   node-down/node-up sequence admit the same apps in the same order
+//!   with the same grants.
+
+use std::sync::Arc;
+
+use zoe::backend::SwarmBackend;
+use zoe::core::{ComponentClass, ReqId, Request, Resources};
+use zoe::policy::Policy;
+use zoe::pool::{Cluster, ClusterEvent, ClusterEventKind};
+use zoe::runtime::WorkKind;
+use zoe::sched::{
+    CheckpointPolicy, ClusterView, Decision, Phase, SchedEvent, SchedKind, SchedSpec,
+};
+use zoe::sim::{simulate, ClusterEvents, ExperimentPlan, FaultSpec, SimResult, Simulation};
+use zoe::trace::{IngestOptions, MachineEvents, SharedBuf, TraceRecorder, TraceSource, TraceStream};
+use zoe::workload::WorkloadSpec;
+use zoe::zoe::{AppDescription, ComponentDef, ZoeMaster};
+
+const ALL_KINDS: [SchedKind; 4] = [
+    SchedKind::Rigid,
+    SchedKind::Malleable,
+    SchedKind::Flexible,
+    SchedKind::FlexiblePreemptive,
+];
+
+/// Bitwise comparison of everything in a `SimResult` that is a function
+/// of the simulation (everything except measured wall time), including
+/// the failure and SLO counters this PR adds.
+fn assert_bit_identical(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.unfinished, b.unfinished, "{what}: unfinished");
+    assert_eq!(a.deadline_met, b.deadline_met, "{what}: deadline_met");
+    assert_eq!(a.deadline_missed, b.deadline_missed, "{what}: deadline_missed");
+    assert_eq!(a.fail, b.fail, "{what}: fail stats");
+    assert_eq!(
+        a.end_time.to_bits(),
+        b.end_time.to_bits(),
+        "{what}: end_time {} vs {}",
+        a.end_time,
+        b.end_time
+    );
+    let sets: [(&str, &zoe::util::stats::Samples, &zoe::util::stats::Samples); 3] = [
+        ("turnaround", &a.turnaround, &b.turnaround),
+        ("queuing", &a.queuing, &b.queuing),
+        ("slowdown", &a.slowdown, &b.slowdown),
+    ];
+    for (name, xa, xb) in sets {
+        assert_eq!(xa.len(), xb.len(), "{what} {name}: sample counts");
+        for (i, (x, y)) in xa.values().iter().zip(xb.values()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} {name}[{i}]: {x} vs {y}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Knobs off ⇒ bit-identical
+// ---------------------------------------------------------------------------
+
+/// Arming a checkpoint policy without any churn, or attaching an empty
+/// machine-events list, must be unobservable: 4 kinds × 20 seeds,
+/// compared bit for bit against the plain `simulate` path.
+#[test]
+fn knobs_off_runs_are_bit_identical_for_every_scheduler() {
+    let spec = WorkloadSpec::paper();
+    for kind in ALL_KINDS {
+        for seed in 1..=20u64 {
+            let reqs = spec.generate(120, seed);
+            let base = simulate(reqs.clone(), Cluster::paper_sim(), Policy::FIFO, kind);
+            let ck = Simulation::new(reqs.clone(), Cluster::paper_sim(), Policy::FIFO, kind)
+                .with_checkpoint(CheckpointPolicy::Periodic(60.0))
+                .run();
+            assert_bit_identical(&base, &ck, &format!("{kind:?} seed {seed} checkpoint"));
+            let empty = Simulation::new(reqs, Cluster::paper_sim(), Policy::FIFO, kind)
+                .with_cluster_events(ClusterEvents::list(Arc::new(Vec::new())))
+                .with_checkpoint(CheckpointPolicy::OnPreempt)
+                .run();
+            assert_bit_identical(&base, &empty, &format!("{kind:?} seed {seed} empty churn"));
+            assert_eq!(base.fail, Default::default(), "{kind:?}: no failures recorded");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic failure goldens
+// ---------------------------------------------------------------------------
+
+/// Same seed + MTBF/MTTR ⇒ identical kill/requeue sequence and metrics
+/// at any thread count: the per-machine renewal RNGs are forked in index
+/// order, never touched by scheduling, so parallel seed execution cannot
+/// reorder them.
+#[test]
+fn failure_scenarios_are_deterministic_at_any_thread_count() {
+    let spec = WorkloadSpec::paper();
+    let mk = |threads: usize| {
+        ExperimentPlan::new(spec.clone(), 200)
+            .seeds(1..=4)
+            .config(Policy::FIFO, SchedKind::Flexible)
+            .config(Policy::sjf(), SchedKind::FlexiblePreemptive)
+            .faults(FaultSpec::new(120.0, 20.0, 9))
+            .checkpoint(CheckpointPolicy::Periodic(30.0))
+            .threads(threads)
+            .run()
+    };
+    let serial = mk(1);
+    let parallel = mk(8);
+    for (rs, rp) in serial.runs.iter().zip(&parallel.runs) {
+        assert_eq!(rs.config, rp.config);
+        for (i, (a, b)) in rs.per_seed.iter().zip(&rp.per_seed).enumerate() {
+            assert_bit_identical(a, b, &format!("{} seed#{i}", rs.config.label()));
+        }
+    }
+    // The scenario actually bites — this is not a vacuous comparison.
+    assert!(
+        serial
+            .runs
+            .iter()
+            .flat_map(|r| &r.per_seed)
+            .any(|r| r.fail.node_failures > 0 && r.fail.comp_kills > 0),
+        "fault injection produced no failures; tighten MTBF"
+    );
+}
+
+/// Streaming replay under churn is bit-identical to the materialized
+/// path: record a failure-free run, then replay its event log both ways
+/// with the same `FaultSpec` attached.
+#[test]
+fn failure_replay_is_bit_identical_streaming_vs_materialized() {
+    let spec = WorkloadSpec::paper();
+    let reqs = spec.generate(400, 11);
+    let buf = SharedBuf::new();
+    Simulation::new(reqs, Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible)
+        .with_recorder(TraceRecorder::new(Box::new(buf.clone())))
+        .run();
+    let log = buf.contents();
+    let faults = FaultSpec::new(150.0, 25.0, 3);
+    let mut any_failures = false;
+    for kind in ALL_KINDS {
+        let trace = TraceSource::from_jsonl_str(&log, &IngestOptions::default()).unwrap();
+        let materialized = trace
+            .simulation(Cluster::paper_sim(), Policy::FIFO, kind)
+            .with_faults(faults)
+            .with_checkpoint(CheckpointPolicy::OnPreempt)
+            .run();
+        let stream = TraceStream::from_jsonl_str(&log, &IngestOptions::default());
+        let streamed = Simulation::from_stream(stream, Cluster::paper_sim(), Policy::FIFO, kind)
+            .with_faults(faults)
+            .with_checkpoint(CheckpointPolicy::OnPreempt)
+            .try_run()
+            .unwrap();
+        assert_bit_identical(&materialized, &streamed, &format!("{kind:?} streamed churn"));
+        any_failures |= materialized.fail.node_failures > 0;
+    }
+    assert!(any_failures, "fault injection produced no failures; tighten MTBF");
+}
+
+// ---------------------------------------------------------------------------
+// Survival: nothing is ever lost
+// ---------------------------------------------------------------------------
+
+/// Brutal churn soak (MTTR comparable to MTBF, so capacity repeatedly
+/// collapses): the run terminates and every submitted app is either
+/// completed or reported unfinished — failures requeue, they never drop.
+#[test]
+fn churn_soak_accounts_for_every_app_under_all_schedulers() {
+    let spec = WorkloadSpec::paper();
+    let reqs = spec.generate(300, 5);
+    let n = reqs.len();
+    for kind in ALL_KINDS {
+        let res = Simulation::new(reqs.clone(), Cluster::paper_sim(), Policy::FIFO, kind)
+            .with_faults(FaultSpec::new(60.0, 60.0, 1))
+            .with_checkpoint(CheckpointPolicy::OnPreempt)
+            .run();
+        assert_eq!(
+            res.completed as usize + res.unfinished,
+            n,
+            "{kind:?}: every app accounted for"
+        );
+        assert!(res.fail.node_failures > 0, "{kind:?}: churn fired");
+        assert!(res.fail.requeues > 0, "{kind:?}: core losses requeue");
+        // On-preempt checkpoints: requeues preserve all accrued work.
+        assert_eq!(res.fail.lost_work, 0.0, "{kind:?}: on-preempt loses nothing");
+        assert!(res.fail.preserved_work > 0.0, "{kind:?}: preserved work accounted");
+    }
+}
+
+/// All-rigid workload under gentle churn with fast repair: requeued apps
+/// are re-admitted and *complete* — a node failure delays a rigid app,
+/// it never loses it.
+#[test]
+fn rigid_apps_survive_churn_and_eventually_complete() {
+    let spec = WorkloadSpec::paper_inelastic();
+    let reqs = spec.generate(200, 8);
+    let n = reqs.len();
+    let res = Simulation::new(reqs, Cluster::paper_sim(), Policy::FIFO, SchedKind::Rigid)
+        .with_faults(FaultSpec::new(400.0, 10.0, 4))
+        .with_checkpoint(CheckpointPolicy::Periodic(30.0))
+        .run();
+    assert!(res.fail.requeues > 0, "churn requeued at least one rigid app");
+    assert_eq!(res.unfinished, 0, "fast repair: everything completes");
+    assert_eq!(res.completed as usize, n);
+    assert_eq!(res.turnaround.len(), n, "one turnaround sample per app");
+}
+
+/// Drain to zero and never recover: the engine terminates (no hang on
+/// the churn stream) and reports the stranded apps unfinished.
+#[test]
+fn full_cluster_loss_terminates_and_reports_unfinished() {
+    let spec = WorkloadSpec::paper_batch_only();
+    let reqs = spec.generate(80, 2);
+    let n = reqs.len();
+    let n_machines = Cluster::paper_sim().n_machines();
+    let evs: Vec<ClusterEvent> = (0..n_machines)
+        .map(|m| ClusterEvent {
+            time: 5.0,
+            machine: m as u32,
+            kind: ClusterEventKind::Remove,
+        })
+        .collect();
+    let res = Simulation::new(reqs, Cluster::paper_sim(), Policy::FIFO, SchedKind::Flexible)
+        .with_cluster_events(ClusterEvents::list(Arc::new(evs)))
+        .run();
+    assert_eq!(res.completed as usize + res.unfinished, n);
+    assert!(res.unfinished > 0, "a dead cluster strands the waiting line");
+    assert_eq!(res.fail.node_failures as usize, n_machines);
+}
+
+// ---------------------------------------------------------------------------
+// SLO surface
+// ---------------------------------------------------------------------------
+
+/// Deadlines are counted once per completion and the tail quantiles are
+/// well-formed, with and without churn.
+#[test]
+fn deadline_accounting_covers_every_completion() {
+    let mut spec = WorkloadSpec::paper();
+    spec.deadline_frac = 2.0;
+    let reqs = spec.generate(300, 6);
+    for faults in [None, Some(FaultSpec::new(120.0, 20.0, 2))] {
+        let mut sim = Simulation::new(
+            reqs.clone(),
+            Cluster::paper_sim(),
+            Policy::FIFO,
+            SchedKind::Flexible,
+        );
+        if let Some(f) = faults {
+            sim = sim.with_faults(f).with_checkpoint(CheckpointPolicy::OnPreempt);
+        }
+        let mut res = sim.run();
+        assert_eq!(
+            res.deadline_met + res.deadline_missed,
+            res.completed,
+            "every completion is classified (faults={})",
+            faults.is_some()
+        );
+        assert!(res.deadline_met > 0, "a 2× budget is met by someone");
+        let p50 = res.turnaround.percentile(50.0);
+        let p99 = res.turnaround.percentile(99.0);
+        let p999 = res.turnaround.percentile(99.9);
+        assert!(p50 <= p99 && p99 <= p999, "tail quantiles ordered");
+    }
+    // Without the knob, the counters stay zero.
+    let plain = simulate(
+        WorkloadSpec::paper().generate(100, 6),
+        Cluster::paper_sim(),
+        Policy::FIFO,
+        SchedKind::Flexible,
+    );
+    assert_eq!(plain.deadline_met + plain.deadline_missed, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Real machine_events files
+// ---------------------------------------------------------------------------
+
+/// The bundled sample parses — sentinel and unknown-machine rows are
+/// skipped, mid-trace joiners start failed — and drives a replay.
+#[test]
+fn bundled_machine_events_sample_parses_and_replays() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/data/sample_machine_events.csv"
+    );
+    let me = MachineEvents::from_csv_path(path, &IngestOptions::default()).unwrap();
+    assert_eq!(me.n_machines(), 5);
+    assert_eq!(me.present, vec![true, true, true, true, false]);
+    assert_eq!(me.skipped, 2, "sentinel row + REMOVE of unknown machine");
+    assert_eq!(me.events.len(), 4, "REMOVE, restore, mid-trace join, UPDATE");
+    assert!(me.events.windows(2).all(|w| w[0].time <= w[1].time));
+    let cluster = me.initial_cluster();
+    assert_eq!(cluster.n_machines(), 5);
+    assert!(cluster.is_down(4), "mid-trace joiner starts failed");
+    assert!(!cluster.is_down(0));
+
+    let reqs = WorkloadSpec::paper_batch_only().generate(120, 3);
+    let n = reqs.len();
+    let res = Simulation::new(reqs, cluster, Policy::FIFO, SchedKind::Flexible)
+        .with_cluster_events(ClusterEvents::list(Arc::new(me.events.clone())))
+        .with_checkpoint(CheckpointPolicy::OnPreempt)
+        .run();
+    assert_eq!(res.completed as usize + res.unfinished, n);
+    assert!(res.fail.node_failures >= 1, "the REMOVE at t=40s fired");
+    assert!(res.fail.node_recoveries >= 1, "the restore at t=70s fired");
+}
+
+// ---------------------------------------------------------------------------
+// Sim ↔ master agreement under failures
+// ---------------------------------------------------------------------------
+
+fn uniform_app(name: &str, n_core: u32, n_elastic: u32) -> AppDescription {
+    let comp = |cname: &str, class, count| ComponentDef {
+        name: cname.to_string(),
+        class,
+        count,
+        cpu: 1.0,
+        ram_mb: 1024.0,
+        image: "zoe/test".to_string(),
+        worker: true,
+    };
+    let mut components = vec![comp("driver", ComponentClass::Core, n_core)];
+    if n_elastic > 0 {
+        components.push(comp("worker", ComponentClass::Elastic, n_elastic));
+    }
+    AppDescription {
+        name: name.to_string(),
+        command: "ridge --dataset test".to_string(),
+        work: WorkKind::Ridge,
+        work_steps: 100,
+        priority: 0.0,
+        interactive: false,
+        components,
+        env: vec![],
+    }
+}
+
+const NODE_CAP: Resources = Resources {
+    cpu: 5.0,
+    ram_mb: 5.0 * 1024.0,
+};
+
+/// 2 nodes × 5 CPU, apps that spread across both nodes, then node 1
+/// dies and later returns. The same timeline drives a raw core over a
+/// `ClusterView` (the simulator's executor role) and a `ZoeMaster`
+/// (the container executor); grants must agree after every event.
+#[test]
+fn master_agrees_with_sim_core_under_node_failures() {
+    let descs = vec![
+        uniform_app("a", 2, 4),
+        uniform_app("b", 2, 0), // rigid
+        uniform_app("c", 1, 2),
+        uniform_app("d", 2, 1),
+    ];
+    let arrivals = [0.0, 1.0, 2.0, 3.0];
+    for kind in ALL_KINDS {
+        // --- sim side -----------------------------------------------------
+        let reqs: Vec<Request> = descs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| d.scheduler_request(arrivals[i]))
+            .collect();
+        let mut view = ClusterView::new(reqs, Cluster::uniform(2, NODE_CAP), Policy::FIFO);
+        let mut core = SchedSpec::builtin(kind).build();
+        let mut admissions: Vec<u32> = Vec::new();
+        let mut grants_after_event: Vec<Vec<u32>> = Vec::new();
+        let mut record = |ds: &[Decision], view: &ClusterView| {
+            for d in ds {
+                if let Decision::Admit { id, .. } = d {
+                    admissions.push(id.slot);
+                }
+            }
+            grants_after_event.push(view.table.iter_occupied().map(|(_, s)| s.grant).collect());
+        };
+        for (i, &t) in arrivals.iter().enumerate() {
+            let id = ReqId::from(i as u32);
+            view.now = t;
+            view.state_mut(id).phase = Phase::Pending;
+            let ds = core.decide(SchedEvent::Arrival(id), &mut view);
+            record(&ds, &view);
+        }
+        // Node 1 dies at t=10 (same bookkeeping order as the master and
+        // the engine: fail the machine, then notify the core)...
+        view.now = 10.0;
+        view.cluster.fail_machine(1);
+        view.fail_stats.node_failures += 1;
+        let ds = core.decide(SchedEvent::NodeDown { machine: 1 }, &mut view);
+        record(&ds, &view);
+        // ...and returns at t=20.
+        view.now = 20.0;
+        view.cluster.restore_machine(1, NODE_CAP);
+        view.fail_stats.node_recoveries += 1;
+        let ds = core.decide(SchedEvent::NodeUp, &mut view);
+        record(&ds, &view);
+        assert!(
+            view.fail_stats.requeues > 0 || view.fail_stats.comp_kills > 0,
+            "{kind:?}: the failure actually hit placed components"
+        );
+
+        // --- master side --------------------------------------------------
+        let mut backend = SwarmBackend::new(2, NODE_CAP);
+        backend.set_virtual_clock();
+        let mut master = ZoeMaster::new(backend, kind);
+        let mut event = 0usize;
+        let check = |master: &ZoeMaster, event: usize| {
+            let grants = &grants_after_event[event];
+            for (i, g) in grants.iter().enumerate() {
+                let Some(mg) = master.grant_of(i as u32) else { continue };
+                assert_eq!(
+                    mg, *g,
+                    "{kind:?} event {event}: grant of app {i} diverged"
+                );
+                assert_eq!(
+                    master.running_elastic(i as u32) as u32,
+                    *g,
+                    "{kind:?} event {event}: app {i} containers vs grant"
+                );
+            }
+        };
+        for (i, &t) in arrivals.iter().enumerate() {
+            let dt = t - master.backend.now();
+            master.backend.advance(dt.max(0.0));
+            let app = master.submit(descs[i].clone()).unwrap();
+            assert_eq!(app as usize, i);
+            check(&master, event);
+            event += 1;
+        }
+        master.backend.advance(10.0 - master.backend.now());
+        master.node_down(1);
+        check(&master, event);
+        event += 1;
+        master.backend.advance(10.0);
+        master.node_up(1);
+        check(&master, event);
+        assert_eq!(
+            master.admitted_order(),
+            &admissions[..],
+            "{kind:?}: admission order (including failure re-admissions)"
+        );
+    }
+}
