@@ -2,8 +2,9 @@
 //! layer — simulator event throughput (L3, including the scale sweep,
 //! the optimized-vs-naive engine comparison, the trace
 //! record→ingest→replay pipeline, the fault-replay point (seeded MTBF
-//! churn + checkpoints), and the parallel multi-seed scaling
-//! sweep), PJRT artifact step latency (L2/L1 via the runtime), the
+//! churn + checkpoints), the parallel multi-seed scaling
+//! sweep, and the distributed sweep over loopback sockets), PJRT
+//! artifact step latency (L2/L1 via the runtime), the
 //! batched Table-1 scoring kernel, and the substrate primitives
 //! (placement, JSON, RNG).
 //!
@@ -22,6 +23,7 @@ use zoe::pool::Cluster;
 use zoe::sched::SchedKind;
 use zoe::sched::CheckpointPolicy;
 use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan, FaultSpec, SimResult, Simulation};
+use zoe::sweep::{run_worker, SweepCoordinator, SweepOptions, WorkerOptions};
 use zoe::trace::{IngestOptions, SharedBuf, TraceRecorder, TraceSource};
 use zoe::util::bench::{measure, section};
 use zoe::util::json::Json;
@@ -258,6 +260,73 @@ fn main() {
         println!("  (<4 hardware threads: the ≥3× target is not assessable here)");
     }
 
+    section("L3 — distributed sweep: loopback coordinator + 2 socket workers");
+    // (apps, seeds, workers, wall_s, events_per_s, releases, duplicates)
+    let mut dist_sweep: Option<(u32, u64, usize, f64, f64, u64, u64)> = None;
+    if sweep_max == 0 {
+        println!("  (skipping distributed sweep: ZOE_BENCH_SWEEP_MAX={sweep_max})");
+    } else {
+        let apps = 2_000u32.min(sweep_max);
+        let n_seeds = 4u64;
+        let n_workers = 2usize;
+        let plan = ExperimentPlan::new(spec.clone(), apps)
+            .seeds(1..1 + n_seeds)
+            .config(Policy::FIFO, SchedKind::Flexible);
+        let t0 = Instant::now();
+        let co = SweepCoordinator::bind(plan, "127.0.0.1:0", SweepOptions::default())
+            .expect("loopback bind");
+        let addr = co.addr().to_string();
+        let workers: Vec<_> = (0..n_workers)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    run_worker(
+                        &addr,
+                        &WorkerOptions {
+                            name: format!("bench-{i}"),
+                            ..WorkerOptions::default()
+                        },
+                    )
+                })
+            })
+            .collect();
+        let report = co.wait();
+        for w in workers {
+            w.join().unwrap().expect("bench worker");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let events: u64 = report
+            .result
+            .runs
+            .iter()
+            .flat_map(|r| &r.per_seed)
+            .map(|s| s.events)
+            .sum();
+        let eps = events as f64 / wall.max(1e-12);
+        println!(
+            "  {n_seeds} cells over {n_workers} socket workers: {events} events in \
+             {wall:>7.3}s → {eps:>10.0} events/s (re-leases={}, duplicates={})",
+            report.releases, report.duplicates
+        );
+        points.push(SweepPoint {
+            sched: "flexible",
+            mode: "distributed_sweep",
+            apps,
+            events,
+            wall_s: wall,
+            events_per_s: eps,
+        });
+        dist_sweep = Some((
+            apps,
+            n_seeds,
+            n_workers,
+            wall,
+            eps,
+            report.releases,
+            report.duplicates,
+        ));
+    }
+
     // ---- emit the throughput trajectory ---------------------------------
     let out_path =
         std::env::var("ZOE_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim_throughput.json".to_string());
@@ -325,6 +394,21 @@ fn main() {
                 ("slab_high_water", Json::num(mem_point.1 as f64)),
                 ("table_capacity", Json::num(mem_point.2 as f64)),
             ]),
+        ),
+        (
+            "distributed_sweep",
+            match dist_sweep {
+                None => Json::Null,
+                Some((apps, seeds, workers, wall, eps, releases, duplicates)) => Json::obj(vec![
+                    ("apps", Json::num(apps as f64)),
+                    ("seeds", Json::num(seeds as f64)),
+                    ("workers", Json::num(workers as f64)),
+                    ("wall_s", Json::num(wall)),
+                    ("events_per_s", Json::num(eps)),
+                    ("releases", Json::num(releases as f64)),
+                    ("duplicates", Json::num(duplicates as f64)),
+                ]),
+            },
         ),
         (
             "trace_ingest",

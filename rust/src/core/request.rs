@@ -48,6 +48,24 @@ impl Resources {
             ram_mb: self.ram_mb * k,
         }
     }
+
+    /// Serialize bit-exactly for wire transport (distributed sweeps).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{f64_to_json, Json};
+        Json::obj(vec![
+            ("cpu", f64_to_json(self.cpu)),
+            ("ram_mb", f64_to_json(self.ram_mb)),
+        ])
+    }
+
+    /// Inverse of [`Resources::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<Resources> {
+        use crate::util::json::f64_from_json;
+        Some(Resources {
+            cpu: f64_from_json(v.get("cpu"))?,
+            ram_mb: f64_from_json(v.get("ram_mb"))?,
+        })
+    }
 }
 
 /// Component classes — the paper's central modeling idea (§2.1).
@@ -78,6 +96,16 @@ impl AppClass {
             AppClass::BatchElastic => "B-E",
             AppClass::BatchRigid => "B-R",
             AppClass::Interactive => "Int",
+        }
+    }
+
+    /// Inverse of [`AppClass::label`]; `None` for unknown labels.
+    pub fn from_label(s: &str) -> Option<AppClass> {
+        match s {
+            "B-E" => Some(AppClass::BatchElastic),
+            "B-R" => Some(AppClass::BatchRigid),
+            "Int" => Some(AppClass::Interactive),
+            _ => None,
         }
     }
 }
@@ -196,6 +224,45 @@ impl Request {
     /// Is this a rigid request (no elastic components)?
     pub fn is_rigid(&self) -> bool {
         self.n_elastic == 0
+    }
+
+    /// Serialize bit-exactly for wire transport: a distributed-sweep
+    /// coordinator ships an ingested trace inline with this. Unlike the
+    /// ingest JSONL schema, every float (including an infinite
+    /// `deadline`) survives exactly.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{f64_to_json, Json};
+        Json::obj(vec![
+            ("id", Json::num(self.id.slot as f64)),
+            ("class", Json::str(self.class.label())),
+            ("arrival", f64_to_json(self.arrival)),
+            ("runtime", f64_to_json(self.runtime)),
+            ("n_core", Json::num(self.n_core as f64)),
+            ("core_res", self.core_res.to_json()),
+            ("n_elastic", Json::num(self.n_elastic as f64)),
+            ("elastic_res", self.elastic_res.to_json()),
+            ("priority", f64_to_json(self.priority)),
+            ("deadline", f64_to_json(self.deadline)),
+        ])
+    }
+
+    /// Inverse of [`Request::to_json`]; `None` on shape mismatch. The
+    /// id comes back generation-0 — a placeholder, like every id ahead
+    /// of the executor's slab allocation.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<Request> {
+        use crate::util::json::f64_from_json;
+        Some(Request {
+            id: ReqId::from(v.get("id").as_u64()? as u32),
+            class: AppClass::from_label(v.get("class").as_str()?)?,
+            arrival: f64_from_json(v.get("arrival"))?,
+            runtime: f64_from_json(v.get("runtime"))?,
+            n_core: v.get("n_core").as_u64()? as u32,
+            core_res: Resources::from_json(v.get("core_res"))?,
+            n_elastic: v.get("n_elastic").as_u64()? as u32,
+            elastic_res: Resources::from_json(v.get("elastic_res"))?,
+            priority: f64_from_json(v.get("priority"))?,
+            deadline: f64_from_json(v.get("deadline"))?,
+        })
     }
 }
 

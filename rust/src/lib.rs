@@ -30,6 +30,7 @@ pub mod pool;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod sweep;
 pub mod trace;
 pub mod util;
 pub mod workload;

@@ -13,6 +13,11 @@
 //!             [--stream]   # constant-memory replay of huge JSONL traces
 //! zoe trace   record --out FILE [--apps 1000] [--seed 1]
 //! zoe trace   fit    --trace FILE [--out spec.json]
+//! zoe sweep   --listen 127.0.0.1:7070 [--require N] [--local-workers K] [--out FILE]
+//!             [--sched A,B --policy P,Q --seeds 10 ...]   # coordinator: shard the
+//!             # seeds × (policy, sched) grid over connected workers
+//! zoe sweep   --connect 127.0.0.1:7070 [--threads K] [--name NAME]   # worker
+//! zoe sweep   --serial [--out FILE] [...]   # same grid, serial reference run
 //! zoe master  --listen 127.0.0.1:4455 [--generation flexible] [--policy fifo]
 //!             [--nodes 10] [--retain-done N]   # any generation × policy;
 //!             # N bounds finished-app records (store stays O(active+N))
@@ -31,6 +36,7 @@ use zoe::pool::Cluster;
 use zoe::runtime::PjrtRuntime;
 use zoe::sched::{CheckpointPolicy, FailStats, SchedSpec};
 use zoe::sim::{ClusterEvents, ExperimentPlan, FaultSpec, Simulation};
+use zoe::sweep::{report_json, run_worker, SweepCoordinator, SweepOptions, WorkerOptions};
 use zoe::trace::{
     fit_workload_from_stats, spec_to_json, IngestOptions, MachineEvents, TraceRecorder,
     TraceSource, TraceStats, TraceStream,
@@ -48,13 +54,14 @@ fn main() {
     match args.positional.first().map(|s| s.as_str()) {
         Some("sim") => cmd_sim(&args),
         Some("trace") => cmd_trace(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("master") => cmd_master(&args),
         Some("submit") => cmd_submit(&args),
         Some("status") => cmd_client_simple(&args, "status"),
         Some("stats") => cmd_client_simple(&args, "stats"),
         Some("kill") => cmd_client_simple(&args, "kill"),
         _ => {
-            eprintln!("usage: zoe <sim|trace|master|submit|status|stats|kill> [--flags]");
+            eprintln!("usage: zoe <sim|trace|sweep|master|submit|status|stats|kill> [--flags]");
             eprintln!("see README.md for details");
             std::process::exit(2);
         }
@@ -588,6 +595,239 @@ fn trace_fit(args: &Args) {
             st.runtime.percentile(50.0)
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// zoe sweep — distributed experiment grids over the wire
+// ---------------------------------------------------------------------------
+
+/// Validate `--listen`/`--connect` addresses up front: a flag value that
+/// cannot resolve to any socket address is a usage error (exit 2 with
+/// the valid shape), not an environment failure.
+fn resolve_addr(flag: &str, raw: &str) -> String {
+    use std::net::ToSocketAddrs;
+    match raw.to_socket_addrs() {
+        Ok(mut it) if it.next().is_some() => raw.to_string(),
+        _ => {
+            eprintln!("--{flag} '{raw}' is not a usable address (valid: HOST:PORT, e.g. 127.0.0.1:7070)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Build the sweep grid from flags shared by `--listen` and `--serial`:
+/// comma-separated `--sched`/`--policy` lists cross into configurations;
+/// `--seed/--seeds` span the seed axis; the source is the synthetic
+/// workload knobs or a `--trace` file (shipped inline to workers); the
+/// failure-model flags are plan-level, identical for every cell.
+fn build_sweep_plan(args: &Args) -> ExperimentPlan {
+    let scheds: Vec<SchedSpec> = args
+        .get_or("sched", "flexible")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(parse_sched)
+        .collect();
+    let policies: Vec<Policy> = args
+        .get_or("policy", "fifo")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(parse_policy)
+        .collect();
+    if scheds.is_empty() || policies.is_empty() {
+        eprintln!("--sched and --policy need at least one name each (comma-separated lists)");
+        std::process::exit(2);
+    }
+    let seed = args.u64_or("seed", 1);
+    let n_seeds = args.u64_or("seeds", 3);
+    if n_seeds == 0 {
+        eprintln!("--seeds 0 is invalid (valid: >= 1 — the grid needs at least one seed)");
+        std::process::exit(2);
+    }
+    let (faults, mev) = parse_faults(args);
+    let checkpoint = parse_checkpoint(args);
+    let mut plan = if args.get("trace").is_some() {
+        let trace = load_trace(args);
+        if trace.is_empty() {
+            eprintln!("trace contains no applications");
+            std::process::exit(1);
+        }
+        ExperimentPlan::from_trace(trace)
+    } else {
+        let mut spec = if args.has("interactive") {
+            WorkloadSpec::paper()
+        } else {
+            WorkloadSpec::paper_batch_only()
+        };
+        spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
+        if let Some(frac) = positive_f64_flag(args, "deadline-frac") {
+            spec.deadline_frac = frac;
+        }
+        ExperimentPlan::new(spec, args.u64_or("apps", 2000) as u32)
+    };
+    let cluster = mev
+        .as_ref()
+        .map_or_else(Cluster::paper_sim, |me| me.initial_cluster());
+    plan = plan
+        .cluster(cluster)
+        .seeds(seed..seed + n_seeds)
+        .checkpoint(checkpoint);
+    if let Some(f) = faults {
+        plan = plan.faults(f);
+    }
+    if let Some(me) = mev {
+        plan = plan.machine_events(Arc::new(me.events));
+    }
+    for p in &policies {
+        for s in &scheds {
+            plan = plan.config(*p, s.clone());
+        }
+    }
+    plan
+}
+
+/// Write the canonical merged report to `--out` (or stdout). Both the
+/// distributed and serial paths emit through here, so the two files
+/// diff clean when — and only when — the results are byte-identical.
+fn emit_sweep_report(args: &Args, report: &Json) {
+    let text = report.to_string();
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, text + "\n").unwrap_or_else(|e| {
+                eprintln!("cannot write {out}: {e}");
+                std::process::exit(1);
+            });
+            println!("wrote merged report: {}", out);
+        }
+        None => println!("{text}"),
+    }
+}
+
+/// `--flag 0` is a usage error for flags whose only valid values are
+/// positive counts; absent means `default`.
+fn positive_count_flag(args: &Args, flag: &str, default: u64, why_not_zero: &str) -> u64 {
+    match args.get(flag).map(|_| args.u64_or(flag, 0)) {
+        Some(0) => {
+            eprintln!("--{flag} 0 is invalid ({why_not_zero})");
+            std::process::exit(2);
+        }
+        Some(n) => n,
+        None => default,
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    let modes =
+        [args.has("listen"), args.has("connect"), args.has("serial")].iter().filter(|&&b| b).count();
+    if modes != 1 {
+        eprintln!(
+            "zoe sweep needs exactly one mode: --listen ADDR (coordinator), \
+             --connect ADDR (worker), or --serial (reference run); \
+             got {modes} — they are mutually exclusive"
+        );
+        std::process::exit(2);
+    }
+
+    // Worker: no plan flags — everything arrives in the welcome frame.
+    if args.has("connect") {
+        args.warn_unknown(&["connect", "threads", "name"]);
+        let addr = resolve_addr("connect", &args.get_or("connect", ""));
+        let threads = positive_count_flag(
+            args,
+            "threads",
+            1,
+            "valid: >= 1 connection, or omit the flag for 1",
+        );
+        let mut opts = WorkerOptions {
+            threads: threads as usize,
+            ..WorkerOptions::default()
+        };
+        if let Some(name) = args.get("name") {
+            opts.name = name.to_string();
+        }
+        match run_worker(&addr, &opts) {
+            Ok(s) => println!(
+                "worker {} done: {} cells computed ({} duplicate deliveries dropped upstream)",
+                opts.name, s.cells, s.duplicates
+            ),
+            Err(e) => {
+                eprintln!("worker failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
+    let mut known = vec![
+        "listen", "serial", "require", "local-workers", "out", "apps", "seed", "seeds", "sched",
+        "policy", "interactive", "arrival-scale", "deadline-frac", "trace", "format", "no-caps",
+    ];
+    known.extend_from_slice(FAULT_FLAGS);
+    args.warn_unknown(&known);
+    let plan = build_sweep_plan(args);
+    let grid = plan.grid_cells().len();
+
+    if args.has("serial") {
+        println!(
+            "serial sweep: {} configs x {} seeds = {grid} cells",
+            plan.grid_configs().len(),
+            plan.grid_seeds().len()
+        );
+        let result = plan.run();
+        emit_sweep_report(args, &report_json(&result));
+        return;
+    }
+
+    let addr = resolve_addr("listen", &args.get_or("listen", ""));
+    let require = positive_count_flag(
+        args,
+        "require",
+        0,
+        "valid: >= 1 worker, or omit the flag to lease as soon as anyone connects",
+    );
+    let local = positive_count_flag(
+        args,
+        "local-workers",
+        0,
+        "valid: >= 1 in-process worker, or omit the flag to rely on --connect workers",
+    );
+    let opts = SweepOptions {
+        require: require as usize,
+        ..SweepOptions::default()
+    };
+    let co = SweepCoordinator::bind(plan, &addr, opts).unwrap_or_else(|e| {
+        eprintln!("cannot bind {addr}: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "sweep coordinator on {}: {grid} cells, require {require} worker(s), {local} local",
+        co.addr()
+    );
+    let co_addr = co.addr().to_string();
+    let locals: Vec<_> = (0..local)
+        .map(|i| {
+            let addr = co_addr.clone();
+            let opts = WorkerOptions {
+                name: format!("local-{i}"),
+                ..WorkerOptions::default()
+            };
+            std::thread::spawn(move || run_worker(&addr, &opts))
+        })
+        .collect();
+    let report = co.wait();
+    for h in locals {
+        if let Err(e) = h.join().expect("local worker panicked") {
+            log::warn!("local worker: {e}");
+        }
+    }
+    println!("sweep complete: {grid} cells");
+    for (name, cells) in &report.per_worker {
+        println!("  {name}: {cells} cells");
+    }
+    println!(
+        "re-leases: {}  duplicate deliveries dropped: {}",
+        report.releases, report.duplicates
+    );
+    emit_sweep_report(args, &report_json(&report.result));
 }
 
 // ---------------------------------------------------------------------------

@@ -142,6 +142,60 @@ impl Policy {
         matches!(self.discipline, Discipline::Srpt | Discipline::Hrrn)
     }
 
+    /// Serialize structurally for wire transport (distributed sweeps).
+    /// Structural — not via [`Policy::label`], which is a display name
+    /// with no inverse (e.g. it collapses every `xD1` scope variant).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let d = match self.discipline {
+            Discipline::Fifo => "fifo",
+            Discipline::Sjf => "sjf",
+            Discipline::Srpt => "srpt",
+            Discipline::Hrrn => "hrrn",
+        };
+        let dim = match self.dim {
+            SizeDim::D1 => 1,
+            SizeDim::D2 => 2,
+            SizeDim::D3 => 3,
+        };
+        let scope = match self.scope {
+            ServiceScope::Requested => "requested",
+            ServiceScope::Unscheduled => "unscheduled",
+        };
+        Json::obj(vec![
+            ("discipline", Json::str(d)),
+            ("dim", Json::num(dim as f64)),
+            ("scope", Json::str(scope)),
+        ])
+    }
+
+    /// Inverse of [`Policy::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<Policy> {
+        let discipline = match v.get("discipline").as_str()? {
+            "fifo" => Discipline::Fifo,
+            "sjf" => Discipline::Sjf,
+            "srpt" => Discipline::Srpt,
+            "hrrn" => Discipline::Hrrn,
+            _ => return None,
+        };
+        let dim = match v.get("dim").as_u64()? {
+            1 => SizeDim::D1,
+            2 => SizeDim::D2,
+            3 => SizeDim::D3,
+            _ => return None,
+        };
+        let scope = match v.get("scope").as_str()? {
+            "requested" => ServiceScope::Requested,
+            "unscheduled" => ServiceScope::Unscheduled,
+            _ => return None,
+        };
+        Some(Policy {
+            discipline,
+            dim,
+            scope,
+        })
+    }
+
     /// The execution-state inputs a key can depend on.
     ///
     /// `remaining_frac` — fraction of the request's work not yet done

@@ -102,6 +102,43 @@ pub struct ClusterEvent {
     pub kind: ClusterEventKind,
 }
 
+impl ClusterEvent {
+    /// Serialize bit-exactly for wire transport (distributed sweeps).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{f64_to_json, Json};
+        let (kind, cap) = match self.kind {
+            ClusterEventKind::Add(r) => ("add", Some(r)),
+            ClusterEventKind::Remove => ("remove", None),
+            ClusterEventKind::Update(r) => ("update", Some(r)),
+        };
+        let mut fields = vec![
+            ("time", f64_to_json(self.time)),
+            ("machine", Json::num(self.machine as f64)),
+            ("kind", Json::str(kind)),
+        ];
+        if let Some(r) = cap {
+            fields.push(("cap", r.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Inverse of [`ClusterEvent::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<ClusterEvent> {
+        use crate::util::json::f64_from_json;
+        let kind = match v.get("kind").as_str()? {
+            "add" => ClusterEventKind::Add(Resources::from_json(v.get("cap"))?),
+            "remove" => ClusterEventKind::Remove,
+            "update" => ClusterEventKind::Update(Resources::from_json(v.get("cap"))?),
+            _ => return None,
+        };
+        Some(ClusterEvent {
+            time: f64_from_json(v.get("time"))?,
+            machine: v.get("machine").as_u64()? as u32,
+            kind,
+        })
+    }
+}
+
 /// A recorded placement of `n` identical components across machines;
 /// releasable via [`Cluster::release`]. An empty `by_machine` means
 /// "nothing placed" — the dense per-request stores in the schedulers use
@@ -211,6 +248,20 @@ impl Cluster {
     /// The machines, in placement (index) order.
     pub fn machines(&self) -> &[Machine] {
         &self.machines
+    }
+
+    /// Installed capacities in machine-index order — enough to rebuild an
+    /// **empty** cluster on another host ([`Cluster::from_capacities`]).
+    /// Plans ship clusters in their pre-run (all-free) state, so free
+    /// vectors need not travel.
+    pub fn capacities(&self) -> Vec<Resources> {
+        self.machines.iter().map(|m| m.total).collect()
+    }
+
+    /// An empty cluster with the given installed capacities (inverse of
+    /// [`Cluster::capacities`] for a cluster nothing was placed on).
+    pub fn from_capacities(caps: Vec<Resources>) -> Self {
+        Cluster::new(caps.into_iter().map(Machine::new).collect())
     }
 
     // ---- free-capacity index maintenance ---------------------------------

@@ -497,6 +497,33 @@ impl CheckpointPolicy {
             }
         }
     }
+
+    /// Serialize for wire transport (distributed sweeps).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{f64_to_json, Json};
+        match *self {
+            CheckpointPolicy::None => Json::str("none"),
+            CheckpointPolicy::OnPreempt => Json::str("on-preempt"),
+            CheckpointPolicy::Periodic(dt) => Json::obj(vec![("periodic", f64_to_json(dt))]),
+        }
+    }
+
+    /// Inverse of [`CheckpointPolicy::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<CheckpointPolicy> {
+        use crate::util::json::f64_from_json;
+        match v.as_str() {
+            Some("none") => return Some(CheckpointPolicy::None),
+            Some("on-preempt") => return Some(CheckpointPolicy::OnPreempt),
+            Some(_) => return None,
+            None => {}
+        }
+        let dt = f64_from_json(v.get("periodic"))?;
+        if dt.is_finite() && dt > 0.0 {
+            Some(CheckpointPolicy::Periodic(dt))
+        } else {
+            None
+        }
+    }
 }
 
 /// Mergeable counters of everything the failure machinery did — kept on
@@ -527,6 +554,32 @@ impl FailStats {
         self.comp_kills += other.comp_kills;
         self.preserved_work += other.preserved_work;
         self.lost_work += other.lost_work;
+    }
+
+    /// Serialize bit-exactly for wire transport (distributed sweeps).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{f64_to_json, Json};
+        Json::obj(vec![
+            ("node_failures", Json::num(self.node_failures as f64)),
+            ("node_recoveries", Json::num(self.node_recoveries as f64)),
+            ("requeues", Json::num(self.requeues as f64)),
+            ("comp_kills", Json::num(self.comp_kills as f64)),
+            ("preserved_work", f64_to_json(self.preserved_work)),
+            ("lost_work", f64_to_json(self.lost_work)),
+        ])
+    }
+
+    /// Inverse of [`FailStats::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<FailStats> {
+        use crate::util::json::f64_from_json;
+        Some(FailStats {
+            node_failures: v.get("node_failures").as_u64()?,
+            node_recoveries: v.get("node_recoveries").as_u64()?,
+            requeues: v.get("requeues").as_u64()?,
+            comp_kills: v.get("comp_kills").as_u64()?,
+            preserved_work: f64_from_json(v.get("preserved_work"))?,
+            lost_work: f64_from_json(v.get("lost_work"))?,
+        })
     }
 }
 

@@ -36,7 +36,8 @@ use crate::policy::Policy;
 use crate::pool::{Cluster, ClusterEvent};
 use crate::sched::{CheckpointPolicy, SchedSpec};
 use crate::sim::{ClusterEvents, EngineMode, FaultSpec, SimResult, Simulation};
-use crate::trace::{IngestOptions, TraceError, TraceSource, TraceStream};
+use crate::trace::{spec_to_json, IngestOptions, TraceError, TraceSource, TraceStream};
+use crate::util::json::{f64_from_json, f64_to_json, Json};
 use crate::workload::WorkloadSpec;
 
 /// One scheduler configuration in an experiment grid.
@@ -265,6 +266,276 @@ impl ExperimentPlan {
         sim
     }
 
+    // ---- grid introspection (the distributed sweep's view) ---------------
+
+    /// The configurations, in insertion (grid-major) order.
+    pub fn grid_configs(&self) -> &[SimConfig] {
+        &self.configs
+    }
+
+    /// The seeds, in grid order.
+    pub fn grid_seeds(&self) -> &[u64] {
+        &self.seeds
+    }
+
+    /// The full task grid in **execution order**: configuration-major,
+    /// seed-minor — exactly the order [`ExperimentPlan::run`] materializes
+    /// and the distributed coordinator leases. Cell `i` of this list is
+    /// cell `i` of the wire protocol.
+    pub fn grid_cells(&self) -> Vec<(usize, u64)> {
+        (0..self.configs.len())
+            .flat_map(|ci| self.seeds.iter().map(move |&s| (ci, s)))
+            .collect()
+    }
+
+    /// Run one grid cell — configuration index `ci` with `seed` — and
+    /// return its [`SimResult`]. A cell is a pure function of
+    /// `(plan, ci, seed)` (only `wall_secs` varies), which is what makes
+    /// cells re-runnable on any worker, any host, in any order.
+    ///
+    /// # Panics
+    ///
+    /// Panics when `ci` is out of range, or when a streaming source
+    /// cannot be opened/replayed (same as [`ExperimentPlan::run`]).
+    pub fn run_cell(&self, ci: usize, seed: u64) -> SimResult {
+        self.run_one(ci, seed)
+    }
+
+    // ---- wire codec ------------------------------------------------------
+
+    /// Serialize the *entire* plan — source, cluster, grid, fault /
+    /// checkpoint / engine knobs — for shipping to sweep workers on
+    /// other processes or hosts. Specs and inline traces round-trip
+    /// bit-exactly; a streaming source ships its path (the worker needs
+    /// the same file, e.g. on a shared filesystem). The local-only
+    /// `threads` knob deliberately does not travel: each worker picks
+    /// its own parallelism.
+    pub fn to_json(&self) -> Json {
+        let source = match &self.source {
+            Source::Spec { spec, apps } => Json::obj(vec![
+                ("kind", Json::str("spec")),
+                ("apps", Json::num(*apps as f64)),
+                ("spec", spec_to_json(spec)),
+            ]),
+            Source::Trace(reqs) => Json::obj(vec![
+                ("kind", Json::str("trace")),
+                (
+                    "requests",
+                    Json::Arr(reqs.iter().map(|r| r.to_json()).collect()),
+                ),
+            ]),
+            Source::StreamPath { path, opts } => Json::obj(vec![
+                ("kind", Json::str("stream")),
+                ("path", Json::str(path.clone())),
+                (
+                    "caps",
+                    match &opts.caps {
+                        None => Json::Null,
+                        Some(c) => Json::obj(vec![
+                            ("max_core_cpu", f64_to_json(c.max_core_cpu)),
+                            ("max_core_ram_mb", f64_to_json(c.max_core_ram_mb)),
+                            ("max_full_cpu", f64_to_json(c.max_full_cpu)),
+                            ("max_full_ram_mb", f64_to_json(c.max_full_ram_mb)),
+                        ]),
+                    },
+                ),
+                ("cpu_scale", f64_to_json(opts.cpu_scale)),
+                ("ram_scale_mb", f64_to_json(opts.ram_scale_mb)),
+            ]),
+        };
+        Json::obj(vec![
+            ("source", source),
+            (
+                "cluster",
+                Json::Arr(
+                    self.cluster
+                        .capacities()
+                        .iter()
+                        .map(|r| r.to_json())
+                        .collect(),
+                ),
+            ),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            (
+                "configs",
+                Json::Arr(
+                    self.configs
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("policy", c.policy.to_json()),
+                                ("sched", Json::str(c.sched.label())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "mode",
+                Json::str(match self.mode {
+                    EngineMode::Optimized => "optimized",
+                    EngineMode::Naive => "naive",
+                }),
+            ),
+            (
+                "faults",
+                match &self.faults {
+                    None => Json::Null,
+                    Some(f) => Json::obj(vec![
+                        ("mtbf", f64_to_json(f.mtbf)),
+                        ("mttr", f64_to_json(f.mttr)),
+                        ("seed", Json::num(f.seed as f64)),
+                    ]),
+                },
+            ),
+            (
+                "machine_events",
+                match &self.machine_events {
+                    None => Json::Null,
+                    Some(evs) => Json::Arr(evs.iter().map(|e| e.to_json()).collect()),
+                },
+            ),
+            ("checkpoint", self.checkpoint.to_json()),
+        ])
+    }
+
+    /// Inverse of [`ExperimentPlan::to_json`]. Errors carry a message a
+    /// worker can send back to the coordinator: a malformed field, an
+    /// unknown scheduler label (external cores must be registered on the
+    /// worker too), or a streaming trace path that does not exist on
+    /// this host.
+    pub fn from_json(v: &Json) -> Result<ExperimentPlan, String> {
+        let src = v.get("source");
+        let source = match src.get("kind").as_str() {
+            Some("spec") => Source::Spec {
+                spec: crate::trace::spec_from_json(src.get("spec"))
+                    .ok_or("malformed workload spec in plan")?,
+                apps: src.get("apps").as_u64().ok_or("malformed apps count")? as u32,
+            },
+            Some("trace") => {
+                let reqs = src
+                    .get("requests")
+                    .as_arr()
+                    .ok_or("malformed inline trace")?
+                    .iter()
+                    .map(Request::from_json)
+                    .collect::<Option<Vec<Request>>>()
+                    .ok_or("malformed request in inline trace")?;
+                Source::Trace(Arc::new(reqs))
+            }
+            Some("stream") => {
+                let path = src
+                    .get("path")
+                    .as_str()
+                    .ok_or("malformed stream path")?
+                    .to_string();
+                let caps = if src.get("caps").is_null() {
+                    None
+                } else {
+                    let c = src.get("caps");
+                    let f = |k: &str| {
+                        f64_from_json(c.get(k)).ok_or_else(|| format!("malformed caps field {k}"))
+                    };
+                    Some(crate::workload::Caps {
+                        max_core_cpu: f("max_core_cpu")?,
+                        max_core_ram_mb: f("max_core_ram_mb")?,
+                        max_full_cpu: f("max_full_cpu")?,
+                        max_full_ram_mb: f("max_full_ram_mb")?,
+                    })
+                };
+                let opts = IngestOptions {
+                    caps,
+                    cpu_scale: f64_from_json(src.get("cpu_scale")).ok_or("malformed cpu_scale")?,
+                    ram_scale_mb: f64_from_json(src.get("ram_scale_mb"))
+                        .ok_or("malformed ram_scale_mb")?,
+                };
+                // Probe now so a missing/unreadable file on THIS host is a
+                // reportable error, not a panic inside a leased cell.
+                TraceStream::open(&path, &opts)
+                    .map_err(|e| format!("cannot stream trace {path} on this host: {e}"))?;
+                Source::StreamPath { path, opts }
+            }
+            _ => return Err("unknown plan source kind".to_string()),
+        };
+        let caps = v
+            .get("cluster")
+            .as_arr()
+            .ok_or("malformed cluster")?
+            .iter()
+            .map(crate::core::Resources::from_json)
+            .collect::<Option<Vec<_>>>()
+            .ok_or("malformed machine capacity")?;
+        if caps.is_empty() {
+            return Err("plan cluster has no machines".to_string());
+        }
+        let seeds = v
+            .get("seeds")
+            .as_arr()
+            .ok_or("malformed seeds")?
+            .iter()
+            .map(|s| s.as_u64())
+            .collect::<Option<Vec<u64>>>()
+            .ok_or("malformed seed")?;
+        let mut configs = Vec::new();
+        for c in v.get("configs").as_arr().ok_or("malformed configs")? {
+            let policy = Policy::from_json(c.get("policy")).ok_or("malformed policy")?;
+            let label = c.get("sched").as_str().ok_or("malformed sched label")?;
+            let sched: SchedSpec = label
+                .parse()
+                .map_err(|e| format!("unknown scheduler {label:?}: {e}"))?;
+            configs.push(SimConfig { policy, sched });
+        }
+        let mode = match v.get("mode").as_str() {
+            Some("optimized") => EngineMode::Optimized,
+            Some("naive") => EngineMode::Naive,
+            other => return Err(format!("unknown engine mode {other:?}")),
+        };
+        let faults = if v.get("faults").is_null() {
+            None
+        } else {
+            let f = v.get("faults");
+            let mtbf = f64_from_json(f.get("mtbf")).ok_or("malformed mtbf")?;
+            let mttr = f64_from_json(f.get("mttr")).ok_or("malformed mttr")?;
+            if !(mtbf.is_finite() && mtbf > 0.0 && mttr.is_finite() && mttr > 0.0) {
+                return Err("fault times must be positive and finite".to_string());
+            }
+            Some(FaultSpec::new(
+                mtbf,
+                mttr,
+                f.get("seed").as_u64().ok_or("malformed fault seed")?,
+            ))
+        };
+        let machine_events = if v.get("machine_events").is_null() {
+            None
+        } else {
+            let evs = v
+                .get("machine_events")
+                .as_arr()
+                .ok_or("malformed machine_events")?
+                .iter()
+                .map(ClusterEvent::from_json)
+                .collect::<Option<Vec<_>>>()
+                .ok_or("malformed machine event")?;
+            Some(Arc::new(evs))
+        };
+        let checkpoint = CheckpointPolicy::from_json(v.get("checkpoint"))
+            .ok_or("malformed checkpoint policy")?;
+        Ok(ExperimentPlan {
+            source,
+            cluster: Cluster::from_capacities(caps),
+            seeds,
+            configs,
+            mode,
+            threads: 0,
+            faults,
+            machine_events,
+            checkpoint,
+        })
+    }
+
     fn run_one(&self, ci: usize, seed: u64) -> SimResult {
         let c = &self.configs[ci];
         let requests = match &self.source {
@@ -320,9 +591,7 @@ impl ExperimentPlan {
             "ExperimentPlan: at least one seed is required (got 0) — add .seeds(..)"
         );
         let n_seeds = self.seeds.len();
-        let tasks: Vec<(usize, u64)> = (0..self.configs.len())
-            .flat_map(|ci| self.seeds.iter().map(move |&s| (ci, s)))
-            .collect();
+        let tasks: Vec<(usize, u64)> = self.grid_cells();
         let slots: Vec<OnceLock<SimResult>> = (0..tasks.len()).map(|_| OnceLock::new()).collect();
         let workers = self.worker_count(tasks.len());
         if workers <= 1 {

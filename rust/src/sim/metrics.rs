@@ -24,6 +24,7 @@
 
 use crate::core::AppClass;
 use crate::sched::FailStats;
+use crate::util::json::{f64_from_json, f64_to_json, Json};
 use crate::util::stats::{BoxPlot, Samples, TimeWeighted};
 
 /// Collects metrics during a run.
@@ -337,6 +338,92 @@ impl SimResult {
         }
     }
 
+    /// Serialize **bit-exactly** for wire transport: every float goes
+    /// through [`crate::util::json::f64_to_json`], so
+    /// `SimResult::from_json(Json::parse(&r.to_json().to_string()))`
+    /// reconstructs a result whose merge behaviour is indistinguishable
+    /// from the original — the foundation of the distributed sweep's
+    /// distributed ≡ serial guarantee.
+    pub fn to_json(&self) -> Json {
+        let class_json = |m: &ClassMetrics| {
+            Json::obj(vec![
+                ("class", Json::str(m.class.label())),
+                ("turnaround", m.turnaround.to_json()),
+                ("queuing", m.queuing.to_json()),
+                ("slowdown", m.slowdown.to_json()),
+            ])
+        };
+        Json::obj(vec![
+            ("turnaround", self.turnaround.to_json()),
+            ("queuing", self.queuing.to_json()),
+            ("slowdown", self.slowdown.to_json()),
+            (
+                "per_class",
+                Json::Arr(self.per_class.iter().map(class_json).collect()),
+            ),
+            ("pending_q", self.pending_q.to_json()),
+            ("running_q", self.running_q.to_json()),
+            ("cpu_alloc", self.cpu_alloc.to_json()),
+            ("ram_alloc", self.ram_alloc.to_json()),
+            ("completed", Json::num(self.completed as f64)),
+            ("events", Json::num(self.events as f64)),
+            ("unfinished", Json::num(self.unfinished as f64)),
+            ("end_time", f64_to_json(self.end_time)),
+            ("wall_secs", f64_to_json(self.wall_secs)),
+            ("heap_compactions", Json::num(self.heap_compactions as f64)),
+            ("slab_high_water", Json::num(self.slab_high_water as f64)),
+            ("slot_capacity", Json::num(self.slot_capacity as f64)),
+            ("deadline_met", Json::num(self.deadline_met as f64)),
+            ("deadline_missed", Json::num(self.deadline_missed as f64)),
+            ("fail", self.fail.to_json()),
+        ])
+    }
+
+    /// Inverse of [`SimResult::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &Json) -> Option<SimResult> {
+        let mut per_class = Vec::new();
+        for m in v.get("per_class").as_arr()? {
+            per_class.push(ClassMetrics {
+                class: AppClass::from_label(m.get("class").as_str()?)?,
+                turnaround: Samples::from_json(m.get("turnaround"))?,
+                queuing: Samples::from_json(m.get("queuing"))?,
+                slowdown: Samples::from_json(m.get("slowdown"))?,
+            });
+        }
+        Some(SimResult {
+            turnaround: Samples::from_json(v.get("turnaround"))?,
+            queuing: Samples::from_json(v.get("queuing"))?,
+            slowdown: Samples::from_json(v.get("slowdown"))?,
+            per_class,
+            pending_q: TimeWeighted::from_json(v.get("pending_q"))?,
+            running_q: TimeWeighted::from_json(v.get("running_q"))?,
+            cpu_alloc: TimeWeighted::from_json(v.get("cpu_alloc"))?,
+            ram_alloc: TimeWeighted::from_json(v.get("ram_alloc"))?,
+            completed: v.get("completed").as_u64()?,
+            events: v.get("events").as_u64()?,
+            unfinished: v.get("unfinished").as_u64()? as usize,
+            end_time: f64_from_json(v.get("end_time"))?,
+            wall_secs: f64_from_json(v.get("wall_secs"))?,
+            heap_compactions: v.get("heap_compactions").as_u64()?,
+            slab_high_water: v.get("slab_high_water").as_u64()?,
+            slot_capacity: v.get("slot_capacity").as_u64()?,
+            deadline_met: v.get("deadline_met").as_u64()?,
+            deadline_missed: v.get("deadline_missed").as_u64()?,
+            fail: FailStats::from_json(v.get("fail"))?,
+        })
+    }
+
+    /// [`SimResult::to_json`] with `wall_secs` zeroed — the one field
+    /// that is *not* a pure function of (plan, seed). Two runs of the
+    /// same cell are bit-identical in canonical form regardless of the
+    /// machine that computed them; the differential tests and the CI
+    /// smoke diff compare canonical text.
+    pub fn canonical_json(&self) -> Json {
+        let mut c = self.clone();
+        c.wall_secs = 0.0;
+        c.to_json()
+    }
+
     /// One-line summary for logs.
     pub fn summary(&mut self) -> String {
         format!(
@@ -411,6 +498,49 @@ mod tests {
         assert_eq!(ra.fail.requeues, 5);
         assert_eq!(ra.fail.node_failures, 1);
         assert_eq!(ra.fail.lost_work, 5.0);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_merge_bits() {
+        // Two per-seed results; merging the originals must be bit-identical
+        // (in canonical JSON text) to merging wire round-tripped copies —
+        // the exact property the distributed sweep relies on.
+        let mk = |seed: u64| {
+            let mut m = MetricsCollector::new();
+            let mut r = crate::util::rng::Rng::new(seed);
+            for i in 0..200 {
+                let class = match i % 3 {
+                    0 => AppClass::BatchElastic,
+                    1 => AppClass::BatchRigid,
+                    _ => AppClass::Interactive,
+                };
+                m.record_completion(class, r.range_f64(1.0, 1e4) / 3.0, r.exp(0.1), 1.0 + r.f64());
+                m.sample(i as f64, i % 7, i % 5, r.f64(), r.f64());
+            }
+            m.record_deadline(seed % 2 == 0);
+            let mut f = FailStats::default();
+            f.requeues = seed;
+            f.preserved_work = seed as f64 / 3.0;
+            m.set_fail_stats(f);
+            m.finalize(200.0, 1234 + seed, 1, 0.5, 3, 40, 40)
+        };
+        let (a, b) = (mk(1), mk(2));
+        // Round-trip through wire text.
+        let rt = |r: &SimResult| {
+            SimResult::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap()
+        };
+        let (a2, b2) = (rt(&a), rt(&b));
+        let mut direct = a.clone();
+        direct.merge(&b);
+        let mut wired = a2;
+        wired.merge(&b2);
+        assert_eq!(
+            direct.canonical_json().to_string(),
+            wired.canonical_json().to_string()
+        );
+        // wall_secs is carried on the full form but zeroed canonically.
+        assert_eq!(rt(&a).wall_secs, a.wall_secs);
+        assert!(a.canonical_json().to_string().contains("\"wall_secs\":0"));
     }
 
     #[test]

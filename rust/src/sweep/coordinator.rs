@@ -1,0 +1,478 @@
+//! The sweep coordinator: owns the `seeds × configurations` grid of an
+//! [`ExperimentPlan`], leases cells to connected workers, collects
+//! per-cell [`SimResult`]s, and merges them exactly as the serial
+//! driver would.
+//!
+//! # Lease lifecycle
+//!
+//! Every cell is `Pending`, `Leased` (by one connection, with a
+//! timestamp), or `Done`. A `next` request gets the first `Pending`
+//! cell; when none remain, the *oldest expired* lease is stolen and
+//! re-issued. A worker disconnect (clean close, truncated frame, idle
+//! timeout, protocol violation) returns all of its leased cells to
+//! `Pending`. Both paths bump the `releases` counter.
+//!
+//! # Idempotence
+//!
+//! Cells are pure functions of `(plan, ci, seed)`, so re-running one on
+//! a different worker produces bit-identical metrics. The first result
+//! delivered for a cell wins; any later delivery (a slow worker whose
+//! lease was stolen, a retry racing its own ack) is dropped and counted
+//! in `duplicates`. Merged output is therefore byte-identical to the
+//! serial [`ExperimentPlan::run`] no matter how many workers, crashes,
+//! or re-leases a sweep survives — the property pinned down in
+//! `rust/tests/sweep_distributed.rs`.
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::sim::{ExperimentPlan, ExperimentResult, ExperimentRun, SimResult};
+use crate::util::json::Json;
+
+use super::wire::{self, WireError, PROTO_VERSION};
+
+/// Coordinator knobs. `Default` suits tests and small sweeps.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Hold all leases until this many workers have said `hello`
+    /// (0 = start leasing immediately).
+    pub require: usize,
+    /// A lease older than this may be stolen when no `Pending` cells
+    /// remain. Keep well above a cell's expected runtime.
+    pub lease_timeout: Duration,
+    /// Per-connection read timeout. A worker is silent while it
+    /// computes, so this must exceed a cell's runtime; a connection
+    /// quiet for this long is dropped and its leases released.
+    pub idle_timeout: Duration,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            require: 0,
+            lease_timeout: Duration::from_secs(120),
+            idle_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// What one sweep produced, plus the fault-tolerance ledger.
+pub struct SweepReport {
+    /// Merged results, identical in shape (and, canonically, in bytes)
+    /// to what [`ExperimentPlan::run`] returns.
+    pub result: ExperimentResult,
+    /// Completed-cell counts per worker name, sorted by name.
+    pub per_worker: Vec<(String, u64)>,
+    /// Cells returned to `Pending` after a disconnect or stolen from an
+    /// expired lease.
+    pub releases: u64,
+    /// Late results for already-complete cells, dropped on arrival.
+    pub duplicates: u64,
+}
+
+/// Canonical JSON for a merged sweep: one entry per configuration with
+/// its label and `wall_secs`-zeroed result. Both the distributed and
+/// the serial CLI paths emit this, so `diff` proves the headline
+/// guarantee end to end.
+pub fn report_json(result: &ExperimentResult) -> Json {
+    Json::obj(vec![
+        (
+            "seeds",
+            Json::Arr(result.seeds.iter().map(|&s| Json::num(s as f64)).collect()),
+        ),
+        (
+            "runs",
+            Json::Arr(
+                result
+                    .merged()
+                    .iter()
+                    .map(|(cfg, merged)| {
+                        Json::obj(vec![
+                            ("config", Json::str(cfg.label())),
+                            ("result", merged.canonical_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[derive(Clone, Copy)]
+enum CellStatus {
+    Pending,
+    Leased { conn: u64, since: Instant },
+    Done,
+}
+
+enum NextAction {
+    Lease { cell: usize, ci: usize, seed: u64 },
+    Wait,
+    Done,
+}
+
+struct SweepState {
+    cells: Vec<(usize, u64)>,
+    status: Vec<CellStatus>,
+    results: Vec<Option<SimResult>>,
+    done: usize,
+    releases: u64,
+    duplicates: u64,
+    per_worker: BTreeMap<String, u64>,
+    connected: usize,
+    opts: SweepOptions,
+}
+
+impl SweepState {
+    fn release_conn(&mut self, conn: u64) {
+        for st in self.status.iter_mut() {
+            if let CellStatus::Leased { conn: c, .. } = *st {
+                if c == conn {
+                    *st = CellStatus::Pending;
+                    self.releases += 1;
+                }
+            }
+        }
+    }
+
+    fn next_cell(&mut self, conn: u64) -> NextAction {
+        if self.done == self.cells.len() {
+            return NextAction::Done;
+        }
+        if self.connected < self.opts.require {
+            return NextAction::Wait;
+        }
+        let now = Instant::now();
+        let mut pick: Option<usize> = None;
+        // First pending cell, in grid order.
+        for (i, st) in self.status.iter().enumerate() {
+            if matches!(st, CellStatus::Pending) {
+                pick = Some(i);
+                break;
+            }
+        }
+        // Otherwise the oldest expired lease (held by someone else).
+        if pick.is_none() {
+            let mut oldest: Option<(usize, Instant)> = None;
+            for (i, st) in self.status.iter().enumerate() {
+                if let CellStatus::Leased { conn: c, since } = *st {
+                    if c != conn
+                        && now.duration_since(since) > self.opts.lease_timeout
+                        && oldest.map(|(_, t)| since < t).unwrap_or(true)
+                    {
+                        oldest = Some((i, since));
+                    }
+                }
+            }
+            if let Some((i, _)) = oldest {
+                self.releases += 1;
+                pick = Some(i);
+            }
+        }
+        match pick {
+            Some(i) => {
+                self.status[i] = CellStatus::Leased { conn, since: now };
+                let (ci, seed) = self.cells[i];
+                NextAction::Lease { cell: i, ci, seed }
+            }
+            None => NextAction::Wait,
+        }
+    }
+
+    /// Record a delivered result. Returns `Ok(true)` when it was a
+    /// duplicate (cell already done, delivery dropped).
+    fn deliver(&mut self, name: &str, cell: usize, sim: SimResult) -> Result<bool, String> {
+        if cell >= self.cells.len() {
+            return Err(format!(
+                "result for cell {cell} out of range (grid has {})",
+                self.cells.len()
+            ));
+        }
+        if matches!(self.status[cell], CellStatus::Done) {
+            self.duplicates += 1;
+            return Ok(true);
+        }
+        self.results[cell] = Some(sim);
+        self.status[cell] = CellStatus::Done;
+        self.done += 1;
+        *self.per_worker.entry(name.to_string()).or_insert(0) += 1;
+        Ok(false)
+    }
+}
+
+struct Shared {
+    state: Mutex<SweepState>,
+    complete: Condvar,
+}
+
+/// A bound, serving sweep coordinator. Construct with
+/// [`SweepCoordinator::bind`], block on [`SweepCoordinator::wait`].
+pub struct SweepCoordinator {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    plan: ExperimentPlan,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl SweepCoordinator {
+    /// Bind `bind` (port 0 for ephemeral) and start serving workers in
+    /// background threads. The plan is serialized once up front; every
+    /// worker receives the identical bytes.
+    pub fn bind(
+        plan: ExperimentPlan,
+        bind: &str,
+        opts: SweepOptions,
+    ) -> std::io::Result<SweepCoordinator> {
+        let cells = plan.grid_cells();
+        assert!(
+            !cells.is_empty(),
+            "SweepCoordinator: the plan grid is empty — add seeds and configs"
+        );
+        let plan_json = Arc::new(plan.to_json());
+        let idle = opts.idle_timeout;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(SweepState {
+                status: vec![CellStatus::Pending; cells.len()],
+                results: vec![None; cells.len()],
+                done: 0,
+                releases: 0,
+                duplicates: 0,
+                per_worker: BTreeMap::new(),
+                connected: 0,
+                opts,
+                cells,
+            }),
+            complete: Condvar::new(),
+        });
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let shared2 = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || {
+            let mut conn_seq: u64 = 0;
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        conn_seq += 1;
+                        let conn = conn_seq;
+                        let shared = Arc::clone(&shared2);
+                        let plan_json = Arc::clone(&plan_json);
+                        std::thread::spawn(move || {
+                            serve_conn(shared, plan_json, stream, conn, idle);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(SweepCoordinator {
+            addr,
+            shared,
+            plan,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The address actually bound (resolves port 0 for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until every grid cell is `Done`, then stop accepting and
+    /// return the merged report. Survives any number of worker crashes
+    /// as long as some worker eventually finishes each cell.
+    pub fn wait(mut self) -> SweepReport {
+        let (result, per_worker, releases, duplicates) = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.done < st.cells.len() {
+                let (guard, _) = self
+                    .shared
+                    .complete
+                    .wait_timeout(st, Duration::from_millis(200))
+                    .unwrap();
+                st = guard;
+            }
+            let n_seeds = self.plan.grid_seeds().len();
+            let runs = self
+                .plan
+                .grid_configs()
+                .iter()
+                .enumerate()
+                .map(|(ci, cfg)| ExperimentRun {
+                    config: cfg.clone(),
+                    per_seed: st.results[ci * n_seeds..(ci + 1) * n_seeds]
+                        .iter()
+                        .map(|r| r.clone().expect("done cell has a result"))
+                        .collect(),
+                })
+                .collect();
+            (
+                ExperimentResult {
+                    seeds: self.plan.grid_seeds().to_vec(),
+                    runs,
+                },
+                st.per_worker
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), v))
+                    .collect(),
+                st.releases,
+                st.duplicates,
+            )
+        };
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        SweepReport {
+            result,
+            per_worker,
+            releases,
+            duplicates,
+        }
+    }
+}
+
+impl Drop for SweepCoordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve one worker connection until it disconnects, errors, or the
+/// sweep ends. Every exit path releases the connection's leases — a
+/// typed wire error from a hostile peer never poisons other workers.
+fn serve_conn(
+    shared: Arc<Shared>,
+    plan_json: Arc<Json>,
+    stream: TcpStream,
+    conn: u64,
+    idle: Duration,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(idle));
+    let Ok(peer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(peer);
+    let mut writer = stream;
+
+    // Handshake: hello{proto,name} before anything else.
+    let name = match wire::read_frame(&mut reader) {
+        Ok(hello) => {
+            if wire::msg_type(&hello) != "hello" {
+                let _ = wire::write_frame(&mut writer, &wire::error("expected hello"));
+                return;
+            }
+            let proto = hello.get("proto").as_u64().unwrap_or(0);
+            if proto != PROTO_VERSION {
+                let _ = wire::write_frame(
+                    &mut writer,
+                    &wire::error(&format!(
+                        "protocol version mismatch: coordinator speaks {PROTO_VERSION}, worker sent {proto}"
+                    )),
+                );
+                return;
+            }
+            hello
+                .get("name")
+                .as_str()
+                .unwrap_or("worker")
+                .to_string()
+        }
+        Err(e) => {
+            log::warn!("sweep conn {conn}: bad handshake: {e}");
+            let _ = wire::write_frame(&mut writer, &wire::error(&e.to_string()));
+            return;
+        }
+    };
+    if wire::write_frame(&mut writer, &wire::welcome((*plan_json).clone())).is_err() {
+        return;
+    }
+    shared.state.lock().unwrap().connected += 1;
+
+    let why = serve_registered(&shared, &mut reader, &mut writer, conn, &name);
+    let mut st = shared.state.lock().unwrap();
+    st.connected -= 1;
+    st.release_conn(conn);
+    if let Err(e) = why {
+        log::warn!("sweep conn {conn} ({name}) dropped: {e}");
+    }
+}
+
+fn serve_registered(
+    shared: &Shared,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    conn: u64,
+    name: &str,
+) -> Result<(), WireError> {
+    loop {
+        let msg = match wire::read_frame(reader) {
+            Ok(m) => m,
+            Err(WireError::Closed) => return Ok(()), // worker finished and left
+            Err(e) => return Err(e),
+        };
+        match wire::msg_type(&msg) {
+            "next" => {
+                let action = shared.state.lock().unwrap().next_cell(conn);
+                let reply = match action {
+                    NextAction::Lease { cell, ci, seed } => wire::lease(cell, ci, seed),
+                    NextAction::Wait => wire::wait(),
+                    NextAction::Done => wire::done(),
+                };
+                wire::write_frame(writer, &reply)?;
+            }
+            "result" => {
+                let Some(cell) = msg.get("cell").as_u64() else {
+                    let e = wire::error("result frame missing cell index");
+                    let _ = wire::write_frame(writer, &e);
+                    return Err(WireError::Protocol("result missing cell".into()));
+                };
+                let Some(sim) = SimResult::from_json(msg.get("sim")) else {
+                    let e = wire::error("result frame carries malformed SimResult");
+                    let _ = wire::write_frame(writer, &e);
+                    return Err(WireError::Protocol("malformed SimResult".into()));
+                };
+                let delivered = {
+                    let mut st = shared.state.lock().unwrap();
+                    let r = st.deliver(name, cell as usize, sim);
+                    if st.done == st.cells.len() {
+                        shared.complete.notify_all();
+                    }
+                    r
+                };
+                match delivered {
+                    Ok(dup) => wire::write_frame(writer, &wire::ack(cell as usize, dup))?,
+                    Err(m) => {
+                        let _ = wire::write_frame(writer, &wire::error(&m));
+                        return Err(WireError::Protocol(m));
+                    }
+                }
+            }
+            "error" => {
+                return Err(WireError::Protocol(format!(
+                    "worker reported: {}",
+                    msg.get("msg").as_str().unwrap_or("?")
+                )));
+            }
+            other => {
+                let m = format!("unknown message type {other:?}");
+                let _ = wire::write_frame(writer, &wire::error(&m));
+                return Err(WireError::Protocol(m));
+            }
+        }
+    }
+}

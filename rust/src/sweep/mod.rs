@@ -1,0 +1,29 @@
+//! Distributed sweep control plane: shard an
+//! [`ExperimentPlan`](crate::sim::ExperimentPlan)'s
+//! `seeds × configurations` grid across worker processes and hosts,
+//! with the headline guarantee that the merged output is **byte-
+//! identical to the serial run, even under worker crashes**.
+//!
+//! Three layers:
+//!
+//! - [`wire`] — length-prefixed JSON frames over TCP, every decode
+//!   failure a typed [`wire::WireError`];
+//! - [`SweepCoordinator`] — owns the grid, leases cells, re-leases on
+//!   disconnect or lease expiry, drops duplicate deliveries, merges in
+//!   grid order;
+//! - [`run_worker`] — stateless compute loop: receive the plan, pull
+//!   leases, push results.
+//!
+//! Exposed on the CLI as `zoe sweep --listen` / `--connect` /
+//! `--serial`; proven by the differential + fault-injection harness in
+//! `rust/tests/sweep_distributed.rs`. See ARCHITECTURE.md §"Distributed
+//! sweep control plane" for the failure-semantics and determinism
+//! argument.
+
+pub mod wire;
+
+mod coordinator;
+mod worker;
+
+pub use coordinator::{report_json, SweepCoordinator, SweepOptions, SweepReport};
+pub use worker::{run_worker, WorkerOptions, WorkerSummary};

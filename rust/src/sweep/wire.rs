@@ -1,0 +1,256 @@
+//! Wire format for the distributed sweep control plane.
+//!
+//! Length-prefixed JSON frames over a byte stream:
+//!
+//! ```text
+//! <decimal byte length of body>\n<body JSON>\n
+//! ```
+//!
+//! The ASCII length line makes framing self-describing and debuggable
+//! with `nc`, while the explicit byte count (unlike the bare JSON-lines
+//! of [`crate::zoe::api`]) lets the reader pre-validate frame size and
+//! distinguish a *truncated* frame (peer died mid-message) from a
+//! *clean* close between frames. Every decode failure is a typed
+//! [`WireError`] — a hostile or buggy peer can poison its own
+//! connection, never the process.
+//!
+//! Messages are JSON objects tagged by a `"type"` key. Worker → coordinator:
+//! `hello{proto,name}`, `next`, `result{cell,sim}`, `error{msg}`.
+//! Coordinator → worker: `welcome{proto,plan}`, `lease{cell,ci,seed}`,
+//! `wait`, `done`, `ack{cell,dup}`, `error{msg}`.
+
+use std::io::{BufRead, Write};
+
+use crate::util::json::Json;
+
+/// Protocol version sent in `hello` / `welcome`. A coordinator rejects
+/// workers speaking a different version with a typed `error` frame
+/// rather than mis-parsing their traffic.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Hard cap on one frame body. A sweep plan carrying a large inline
+/// trace is the biggest legitimate frame; anything beyond this is a
+/// corrupt or hostile length prefix and is rejected before allocation.
+pub const MAX_FRAME: usize = 64 * 1024 * 1024;
+
+/// Everything that can go wrong reading or writing one frame. Each
+/// variant is a distinct, test-asserted failure mode — see
+/// `rust/tests/sweep_distributed.rs`.
+#[derive(Debug)]
+pub enum WireError {
+    /// The length prefix was not a decimal integer line.
+    BadLength(String),
+    /// The length prefix exceeded [`MAX_FRAME`].
+    Oversized(usize),
+    /// The peer disconnected mid-frame (after a header, before the
+    /// full body arrived).
+    Truncated,
+    /// The frame body was not valid JSON.
+    BadJson(String),
+    /// The peer closed the connection cleanly between frames.
+    Closed,
+    /// A read timed out (idle or wedged peer).
+    Timeout,
+    /// Any other transport failure.
+    Io(std::io::Error),
+    /// The peer spoke well-formed frames that violate the protocol
+    /// (unknown message type, version mismatch, bad field).
+    Protocol(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadLength(s) => write!(f, "bad frame length prefix: {s:?}"),
+            WireError::Oversized(n) => {
+                write!(f, "frame of {n} bytes exceeds cap of {MAX_FRAME} bytes")
+            }
+            WireError::Truncated => write!(f, "peer disconnected mid-frame"),
+            WireError::BadJson(e) => write!(f, "frame body is not valid JSON: {e}"),
+            WireError::Closed => write!(f, "peer closed the connection"),
+            WireError::Timeout => write!(f, "read timed out"),
+            WireError::Io(e) => write!(f, "transport error: {e}"),
+            WireError::Protocol(m) => write!(f, "protocol violation: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => WireError::Timeout,
+            std::io::ErrorKind::UnexpectedEof => WireError::Truncated,
+            _ => WireError::Io(e),
+        }
+    }
+}
+
+/// Write one frame: length prefix, body, trailing newline, flush.
+pub fn write_frame(w: &mut impl Write, v: &Json) -> Result<(), WireError> {
+    let body = v.to_string();
+    debug_assert!(body.len() <= MAX_FRAME, "outgoing frame exceeds MAX_FRAME");
+    w.write_all(body.len().to_string().as_bytes())?;
+    w.write_all(b"\n")?;
+    w.write_all(body.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. Returns [`WireError::Closed`] on a clean EOF before
+/// any header byte, [`WireError::Truncated`] on EOF anywhere after.
+pub fn read_frame(r: &mut impl BufRead) -> Result<Json, WireError> {
+    let mut header = String::new();
+    if r.read_line(&mut header)? == 0 {
+        return Err(WireError::Closed);
+    }
+    let trimmed = header.trim_end_matches(['\r', '\n']);
+    if !header.ends_with('\n') {
+        // EOF inside the header line.
+        return Err(WireError::Truncated);
+    }
+    let len: usize = trimmed
+        .parse()
+        .map_err(|_| WireError::BadLength(trimmed.to_string()))?;
+    if len > MAX_FRAME {
+        return Err(WireError::Oversized(len));
+    }
+    // Body plus its trailing newline.
+    let mut body = vec![0u8; len + 1];
+    r.read_exact(&mut body)?;
+    if body.pop() != Some(b'\n') {
+        return Err(WireError::BadLength(format!(
+            "frame body of {len} bytes not newline-terminated"
+        )));
+    }
+    let text = String::from_utf8(body)
+        .map_err(|e| WireError::BadJson(format!("body is not UTF-8: {e}")))?;
+    Json::parse(&text).map_err(|e| WireError::BadJson(e.to_string()))
+}
+
+/// The `"type"` tag of a message, or `""` when absent.
+pub fn msg_type(v: &Json) -> &str {
+    v.get("type").as_str().unwrap_or("")
+}
+
+// ---- message constructors ------------------------------------------------
+
+/// Worker greeting: protocol version plus a display name for the
+/// coordinator's per-worker report.
+pub fn hello(name: &str) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("hello")),
+        ("proto", Json::num(PROTO_VERSION as f64)),
+        ("name", Json::str(name)),
+    ])
+}
+
+/// Coordinator reply to a valid `hello`: the full serialized plan.
+pub fn welcome(plan: Json) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("welcome")),
+        ("proto", Json::num(PROTO_VERSION as f64)),
+        ("plan", plan),
+    ])
+}
+
+/// Worker request for the next grid cell.
+pub fn next() -> Json {
+    Json::obj(vec![("type", Json::str("next"))])
+}
+
+/// Coordinator lease of grid cell `cell` = configuration `ci` × `seed`.
+pub fn lease(cell: usize, ci: usize, seed: u64) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("lease")),
+        ("cell", Json::num(cell as f64)),
+        ("ci", Json::num(ci as f64)),
+        ("seed", Json::num(seed as f64)),
+    ])
+}
+
+/// Coordinator: no cell available right now (waiting for `--require`
+/// quorum, or all remaining cells are leased elsewhere) — ask again.
+pub fn wait() -> Json {
+    Json::obj(vec![("type", Json::str("wait"))])
+}
+
+/// Coordinator: the grid is complete; the worker may disconnect.
+pub fn done() -> Json {
+    Json::obj(vec![("type", Json::str("done"))])
+}
+
+/// Worker result for one cell (`sim` is `SimResult::to_json`).
+pub fn result(cell: usize, sim: Json) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("result")),
+        ("cell", Json::num(cell as f64)),
+        ("sim", sim),
+    ])
+}
+
+/// Coordinator acknowledgement of a result. `dup` is true when the cell
+/// was already complete and this delivery was dropped.
+pub fn ack(cell: usize, dup: bool) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("ack")),
+        ("cell", Json::num(cell as f64)),
+        ("dup", Json::Bool(dup)),
+    ])
+}
+
+/// A typed error either side can send before dropping a connection.
+pub fn error(msg: &str) -> Json {
+    Json::obj(vec![("type", Json::str("error")), ("msg", Json::str(msg))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let v = Json::obj(vec![("type", Json::str("next")), ("x", Json::num(1.5))]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        let mut r = std::io::BufReader::new(&buf[..]);
+        let back = read_frame(&mut r).unwrap();
+        assert_eq!(back.to_string(), v.to_string());
+        // Stream is drained: next read is a clean close.
+        assert!(matches!(read_frame(&mut r), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn malformed_length_prefix_is_typed() {
+        let mut r = std::io::BufReader::new(&b"xyz\n{}\n"[..]);
+        assert!(matches!(read_frame(&mut r), Err(WireError::BadLength(_))));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let huge = format!("{}\n", MAX_FRAME + 1);
+        let mut r = std::io::BufReader::new(huge.as_bytes());
+        assert!(matches!(
+            read_frame(&mut r),
+            Err(WireError::Oversized(n)) if n == MAX_FRAME + 1
+        ));
+    }
+
+    #[test]
+    fn truncated_body_is_typed() {
+        // Header claims 10 bytes, stream ends after 3.
+        let mut r = std::io::BufReader::new(&b"10\n{\"a\"\n"[..]);
+        assert!(matches!(read_frame(&mut r), Err(WireError::Truncated)));
+        // EOF inside the header line itself.
+        let mut r2 = std::io::BufReader::new(&b"12"[..]);
+        assert!(matches!(read_frame(&mut r2), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn non_json_body_is_typed() {
+        let mut r = std::io::BufReader::new(&b"3\nhi!\n"[..]);
+        assert!(matches!(read_frame(&mut r), Err(WireError::BadJson(_))));
+    }
+}

@@ -1,0 +1,217 @@
+//! The sweep worker: connects to a coordinator, receives the full
+//! [`ExperimentPlan`] over the wire, and computes leased grid cells
+//! until the coordinator says the sweep is done.
+//!
+//! A worker is stateless between cells — everything it needs arrives in
+//! the `welcome` frame, so any number of workers on any hosts can join,
+//! crash, and rejoin a sweep at any time. `--threads K` opens K
+//! independent connections; each is its own lease scope, so a stuck
+//! thread's cells are re-leased without affecting its siblings.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::sim::ExperimentPlan;
+
+use super::wire::{self, WireError};
+
+/// Worker knobs. `Default` suits tests and single-host sweeps.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Number of independent coordinator connections (computing
+    /// threads) to run. Must be at least 1.
+    pub threads: usize,
+    /// Display name reported in `hello`; the coordinator aggregates
+    /// completed-cell counts under it.
+    pub name: String,
+    /// How long to retry the initial connect before giving up —
+    /// workers may legitimately start before the coordinator binds.
+    pub connect_timeout: Duration,
+    /// Read timeout on coordinator replies; must exceed the longest
+    /// pause the coordinator can take (which is short — it never
+    /// computes between frames).
+    pub idle_timeout: Duration,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            threads: 1,
+            name: format!("worker-{}", std::process::id()),
+            connect_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// What one [`run_worker`] call accomplished.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerSummary {
+    /// Cells computed and acknowledged as first delivery.
+    pub cells: u64,
+    /// Cells computed but acknowledged as duplicates (another worker
+    /// beat this one to a re-leased cell).
+    pub duplicates: u64,
+}
+
+/// Run a worker against `addr`, blocking until the coordinator reports
+/// the sweep complete (or an error). Spawns `opts.threads` connections.
+///
+/// A coordinator that disappears *between* cells is treated as a clean
+/// end of work — after the grid completes, the coordinator may exit
+/// before this worker's final `next` poll, and the two cases are not
+/// distinguishable on the wire. Handshake and protocol failures are
+/// real errors.
+pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerSummary, WireError> {
+    assert!(opts.threads >= 1, "run_worker: threads must be >= 1");
+    let handles: Vec<_> = (0..opts.threads)
+        .map(|i| {
+            let addr = addr.to_string();
+            let opts = opts.clone();
+            std::thread::spawn(move || run_conn(&addr, &opts, i))
+        })
+        .collect();
+    let mut total = WorkerSummary::default();
+    let mut first_err = None;
+    for h in handles {
+        match h.join().expect("worker thread panicked") {
+            Ok(s) => {
+                total.cells += s.cells;
+                total.duplicates += s.duplicates;
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(total),
+    }
+}
+
+fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream, WireError> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Io(e));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+fn run_conn(addr: &str, opts: &WorkerOptions, thread_idx: usize) -> Result<WorkerSummary, WireError> {
+    let stream = connect_with_retry(addr, opts.connect_timeout)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(opts.idle_timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+
+    wire::write_frame(&mut writer, &wire::hello(&opts.name))?;
+    let welcome = wire::read_frame(&mut reader)?;
+    match wire::msg_type(&welcome) {
+        "welcome" => {}
+        "error" => {
+            return Err(WireError::Protocol(format!(
+                "coordinator rejected handshake: {}",
+                welcome.get("msg").as_str().unwrap_or("?")
+            )));
+        }
+        other => {
+            return Err(WireError::Protocol(format!(
+                "expected welcome, got {other:?}"
+            )));
+        }
+    }
+    let plan = match ExperimentPlan::from_json(welcome.get("plan")) {
+        Ok(p) => p,
+        Err(m) => {
+            let _ = wire::write_frame(&mut writer, &wire::error(&m));
+            return Err(WireError::Protocol(format!("cannot use plan: {m}")));
+        }
+    };
+
+    let mut summary = WorkerSummary::default();
+    loop {
+        wire::write_frame(&mut writer, &wire::next())?;
+        let msg = match wire::read_frame(&mut reader) {
+            Ok(m) => m,
+            // Coordinator gone between cells: the sweep either finished
+            // or will re-lease our nothing — either way we are done.
+            Err(WireError::Closed) | Err(WireError::Truncated) => break,
+            Err(e) => return Err(e),
+        };
+        match wire::msg_type(&msg) {
+            "lease" => {
+                let (Some(cell), Some(ci), Some(seed)) = (
+                    msg.get("cell").as_u64(),
+                    msg.get("ci").as_u64(),
+                    msg.get("seed").as_u64(),
+                ) else {
+                    return Err(WireError::Protocol("malformed lease frame".into()));
+                };
+                if ci as usize >= plan.grid_configs().len() {
+                    return Err(WireError::Protocol(format!(
+                        "lease names config {ci} but plan has {}",
+                        plan.grid_configs().len()
+                    )));
+                }
+                let sim = plan.run_cell(ci as usize, seed);
+                wire::write_frame(&mut writer, &wire::result(cell as usize, sim.to_json()))?;
+                let ack = match wire::read_frame(&mut reader) {
+                    Ok(a) => a,
+                    Err(WireError::Closed) | Err(WireError::Truncated) => break,
+                    Err(e) => return Err(e),
+                };
+                match wire::msg_type(&ack) {
+                    "ack" => {
+                        if ack.get("dup").as_bool() == Some(true) {
+                            summary.duplicates += 1;
+                        } else {
+                            summary.cells += 1;
+                        }
+                    }
+                    "error" => {
+                        return Err(WireError::Protocol(format!(
+                            "coordinator rejected result: {}",
+                            ack.get("msg").as_str().unwrap_or("?")
+                        )));
+                    }
+                    other => {
+                        return Err(WireError::Protocol(format!(
+                            "expected ack, got {other:?}"
+                        )));
+                    }
+                }
+            }
+            "wait" => std::thread::sleep(Duration::from_millis(50)),
+            "done" => break,
+            "error" => {
+                return Err(WireError::Protocol(format!(
+                    "coordinator error: {}",
+                    msg.get("msg").as_str().unwrap_or("?")
+                )));
+            }
+            other => {
+                return Err(WireError::Protocol(format!(
+                    "unknown coordinator message {other:?}"
+                )));
+            }
+        }
+    }
+    log::debug!(
+        "sweep worker {}#{thread_idx}: {} cells ({} duplicate)",
+        opts.name,
+        summary.cells,
+        summary.duplicates
+    );
+    Ok(summary)
+}

@@ -233,6 +233,7 @@ pub fn fit_workload_from_stats(st: &mut TraceStats) -> WorkloadSpec {
         max_full_cpu: caps.max_full_cpu,
         max_full_ram_mb: caps.max_full_ram_mb,
         arrival_scale: 1.0,
+        deadline_frac: 0.0,
         inelastic_mode: false,
     }
 }
@@ -281,8 +282,77 @@ pub fn spec_to_json(spec: &WorkloadSpec) -> Json {
         ("max_full_cpu", Json::num(spec.max_full_cpu)),
         ("max_full_ram_mb", Json::num(spec.max_full_ram_mb)),
         ("arrival_scale", Json::num(spec.arrival_scale)),
+        ("deadline_frac", Json::num(spec.deadline_frac)),
         ("inelastic_mode", Json::Bool(spec.inelastic_mode)),
     ])
+}
+
+fn empirical_from_json(v: &Json) -> Option<Empirical> {
+    let pts = v
+        .get("points")
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            let p = p.as_arr()?;
+            if p.len() != 2 {
+                return None;
+            }
+            Some((p[0].as_f64()?, p[1].as_f64()?))
+        })
+        .collect::<Option<Vec<(f64, f64)>>>()?;
+    Some(if v.get("log").as_bool()? {
+        Empirical::new_log(pts)
+    } else {
+        Empirical::new(pts)
+    })
+}
+
+/// Inverse of [`spec_to_json`]: rebuild a [`WorkloadSpec`] from its JSON
+/// form — what lets a distributed-sweep coordinator ship a (possibly
+/// fitted) spec to workers on other hosts. `None` on shape mismatch; a
+/// missing `deadline_frac` (files written before the SLO knob existed)
+/// defaults to `0.0`.
+///
+/// The control points travel as shortest-roundtrip decimal text, which
+/// `f64` parsing recovers exactly, so a round-tripped spec samples
+/// bit-identical workloads.
+///
+/// # Panics
+///
+/// Panics when the control points violate [`Empirical`]'s invariants
+/// (non-monotone CDF, non-positive log-space support) — same as
+/// constructing the distribution directly.
+pub fn spec_from_json(v: &Json) -> Option<WorkloadSpec> {
+    let interarrival = v.get("interarrival");
+    Some(WorkloadSpec {
+        interactive_frac: v.get("interactive_frac").as_f64()?,
+        batch_elastic_frac: v.get("batch_elastic_frac").as_f64()?,
+        cpu: empirical_from_json(v.get("cpu"))?,
+        ram_mb: empirical_from_json(v.get("ram_mb"))?,
+        interarrival: Mixture {
+            w0: interarrival.get("w0").as_f64()?,
+            a: empirical_from_json(interarrival.get("a"))?,
+            b: empirical_from_json(interarrival.get("b"))?,
+        },
+        runtime: empirical_from_json(v.get("runtime"))?,
+        batch_cores: empirical_from_json(v.get("batch_cores"))?,
+        batch_elastic: empirical_from_json(v.get("batch_elastic"))?,
+        rigid_components: empirical_from_json(v.get("rigid_components"))?,
+        interactive_elastic: empirical_from_json(v.get("interactive_elastic"))?,
+        interactive_runtime_scale: v.get("interactive_runtime_scale").as_f64()?,
+        interactive_priority: v.get("interactive_priority").as_f64()?,
+        max_core_cpu: v.get("max_core_cpu").as_f64()?,
+        max_core_ram_mb: v.get("max_core_ram_mb").as_f64()?,
+        max_full_cpu: v.get("max_full_cpu").as_f64()?,
+        max_full_ram_mb: v.get("max_full_ram_mb").as_f64()?,
+        arrival_scale: v.get("arrival_scale").as_f64()?,
+        deadline_frac: if v.get("deadline_frac").is_null() {
+            0.0
+        } else {
+            v.get("deadline_frac").as_f64()?
+        },
+        inelastic_mode: v.get("inelastic_mode").as_bool()?,
+    })
 }
 
 #[cfg(test)]
@@ -382,6 +452,38 @@ mod tests {
         ];
         let st = TraceStats::collect(&TraceSource::new(reqs));
         assert_eq!(st.peak_concurrent, 1);
+    }
+
+    #[test]
+    fn spec_json_roundtrip_samples_identically() {
+        // A spec that went through JSON text must generate a bit-identical
+        // workload — the property the distributed sweep ships specs under.
+        for spec in [WorkloadSpec::paper(), {
+            let mut s = WorkloadSpec::paper_batch_only();
+            s.deadline_frac = 3.0;
+            s.arrival_scale = 1.5;
+            s
+        }] {
+            let txt = spec_to_json(&spec).to_string();
+            let back = spec_from_json(&Json::parse(&txt).unwrap()).unwrap();
+            let a = spec.generate(200, 7);
+            let b = back.generate(200, 7);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+                assert_eq!(x.runtime.to_bits(), y.runtime.to_bits());
+                assert_eq!(x.n_core, y.n_core);
+                assert_eq!(x.n_elastic, y.n_elastic);
+                assert_eq!(x.core_res.cpu.to_bits(), y.core_res.cpu.to_bits());
+                assert_eq!(x.deadline.to_bits(), y.deadline.to_bits());
+            }
+        }
+        // Pre-SLO files lack deadline_frac: defaults to 0.0.
+        let mut j = spec_to_json(&WorkloadSpec::paper());
+        if let Json::Obj(o) = &mut j {
+            o.remove("deadline_frac");
+        }
+        assert_eq!(spec_from_json(&j).unwrap().deadline_frac, 0.0);
     }
 
     #[test]

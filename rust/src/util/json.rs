@@ -388,6 +388,41 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Encode an `f64` so that [`f64_from_json`] recovers the **exact** bit
+/// pattern.
+///
+/// Finite values (except `-0.0`) go out as a plain [`Json::Num`]: the
+/// serializer uses Rust's shortest-roundtrip `Display` (and an exact
+/// integer fast path), and `str::parse::<f64>` is correctly rounded, so
+/// the text round-trip is bit-exact. The values JSON *cannot* carry —
+/// `NaN`, `±inf` — and `-0.0` (whose sign the integer fast path drops)
+/// are encoded as a hex bit-pattern string, e.g. `"0x7ff0000000000000"`.
+/// Wire transport of `SimResult`s needs this: an empty sketch has
+/// `min = +inf` / `max = -inf`, and the distributed-vs-serial guarantee
+/// is *bitwise*.
+pub fn f64_to_json(x: f64) -> Json {
+    if x.is_finite() && !(x == 0.0 && x.is_sign_negative()) {
+        Json::Num(x)
+    } else {
+        Json::Str(format!("0x{:016x}", x.to_bits()))
+    }
+}
+
+/// Decode a value produced by [`f64_to_json`]; `None` for anything else.
+pub fn f64_from_json(v: &Json) -> Option<f64> {
+    match v {
+        Json::Num(x) => Some(*x),
+        Json::Str(s) => {
+            let hex = s.strip_prefix("0x")?;
+            if hex.len() != 16 {
+                return None;
+            }
+            u64::from_str_radix(hex, 16).ok().map(f64::from_bits)
+        }
+        _ => None,
+    }
+}
+
 fn utf8_width(b: u8) -> usize {
     if b >= 0xF0 {
         4
@@ -447,5 +482,39 @@ mod tests {
     fn integer_serialization_exact() {
         assert_eq!(Json::Num(80000.0).to_string(), "80000");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn f64_codec_bit_exact() {
+        let cases = [
+            0.0,
+            1.0,
+            -3.5,
+            1.0 / 3.0,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+            9.007199254740993e15,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            -0.0,
+        ];
+        for &x in &cases {
+            let enc = f64_to_json(x);
+            // Through text, as the wire does it.
+            let rt = Json::parse(&enc.to_string()).unwrap();
+            let back = f64_from_json(&rt).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "round-trip of {x:?}");
+        }
+        // Finite ordinary values stay plain numbers (readable JSON).
+        assert!(matches!(f64_to_json(2.5), Json::Num(_)));
+        // Non-finite and -0.0 take the hex-string path.
+        assert!(matches!(f64_to_json(f64::NAN), Json::Str(_)));
+        assert!(matches!(f64_to_json(-0.0), Json::Str(_)));
+        // Garbage is rejected, not misparsed.
+        assert_eq!(f64_from_json(&Json::str("0x123")), None);
+        assert_eq!(f64_from_json(&Json::str("abc")), None);
+        assert_eq!(f64_from_json(&Json::Null), None);
     }
 }

@@ -16,6 +16,7 @@
 //!   memory, deterministically **mergeable** summary — what makes
 //!   multi-seed [`crate::sim::SimResult::merge`] cheap.
 
+use crate::util::json::{f64_from_json, f64_to_json, Json};
 use std::collections::BTreeMap;
 
 /// A sample accumulator with exact percentiles (stores values; the
@@ -138,6 +139,23 @@ impl Samples {
     /// percentile query) order.
     pub fn values(&self) -> &[f64] {
         &self.xs
+    }
+
+    /// Serialize for wire transport: the raw values in their current
+    /// order (order matters — multi-seed merges concatenate, and the
+    /// distributed sweep promises bitwise-identical merged results).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.xs.iter().map(|&x| f64_to_json(x)).collect())
+    }
+
+    /// Inverse of [`Samples::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &Json) -> Option<Samples> {
+        let xs = v
+            .as_arr()?
+            .iter()
+            .map(f64_from_json)
+            .collect::<Option<Vec<f64>>>()?;
+        Some(Samples { xs, sorted: false })
     }
 }
 
@@ -352,6 +370,54 @@ impl WeightedSketch {
             max: self.max(),
         }
     }
+
+    /// Serialize every field bit-exactly for wire transport. An empty
+    /// sketch carries `min = +inf` / `max = -inf`, which is why the
+    /// hex-capable [`f64_to_json`] encoding is used throughout.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("zero_weight", f64_to_json(self.zero_weight)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|(&i, &w)| Json::Arr(vec![Json::num(i as f64), f64_to_json(w)]))
+                        .collect(),
+                ),
+            ),
+            ("total_weight", f64_to_json(self.total_weight)),
+            ("weighted_sum", f64_to_json(self.weighted_sum)),
+            ("min", f64_to_json(self.min)),
+            ("max", f64_to_json(self.max)),
+            ("n", Json::num(self.n as f64)),
+        ])
+    }
+
+    /// Inverse of [`WeightedSketch::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &Json) -> Option<WeightedSketch> {
+        let mut buckets = BTreeMap::new();
+        for pair in v.get("buckets").as_arr()? {
+            let p = pair.as_arr()?;
+            if p.len() != 2 {
+                return None;
+            }
+            let i = p[0].as_f64()?;
+            if i.fract() != 0.0 || !(i32::MIN as f64..=i32::MAX as f64).contains(&i) {
+                return None;
+            }
+            buckets.insert(i as i32, f64_from_json(&p[1])?);
+        }
+        Some(WeightedSketch {
+            zero_weight: f64_from_json(v.get("zero_weight"))?,
+            buckets,
+            total_weight: f64_from_json(v.get("total_weight"))?,
+            weighted_sum: f64_from_json(v.get("weighted_sum"))?,
+            min: f64_from_json(v.get("min"))?,
+            max: f64_from_json(v.get("max"))?,
+            n: v.get("n").as_u64()? as usize,
+        })
+    }
 }
 
 /// Time-weighted summary of a piecewise-constant signal (queue sizes,
@@ -424,6 +490,24 @@ impl TimeWeighted {
     /// Box-plot over the time-weighted distribution.
     pub fn boxplot(&self) -> BoxPlot {
         self.sketch.boxplot()
+    }
+
+    /// Serialize bit-exactly for wire transport.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("last_t", f64_to_json(self.last_t)),
+            ("last_v", f64_to_json(self.last_v)),
+            ("sketch", self.sketch.to_json()),
+        ])
+    }
+
+    /// Inverse of [`TimeWeighted::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &Json) -> Option<TimeWeighted> {
+        Some(TimeWeighted {
+            last_t: f64_from_json(v.get("last_t"))?,
+            last_v: f64_from_json(v.get("last_v"))?,
+            sketch: WeightedSketch::from_json(v.get("sketch"))?,
+        })
     }
 }
 
@@ -598,6 +682,45 @@ mod tests {
         assert!((bp.mean - 3.5).abs() < 1e-9, "merged mean {}", bp.mean);
         assert_eq!(bp.min, 2.0);
         assert_eq!(bp.max, 4.0);
+    }
+
+    #[test]
+    fn wire_roundtrip_bit_exact() {
+        // Samples: order and bits preserved through JSON text.
+        let mut s = Samples::new();
+        let mut r = crate::util::rng::Rng::new(31);
+        for _ in 0..500 {
+            s.push(r.range_f64(0.0, 1e6) / 3.0);
+        }
+        let txt = s.to_json().to_string();
+        let back = Samples::from_json(&Json::parse(&txt).unwrap()).unwrap();
+        assert_eq!(s.values().len(), back.values().len());
+        for (a, b) in s.values().iter().zip(back.values()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // Sketch: populated and empty (the empty one has ±inf min/max).
+        let mut sk = WeightedSketch::new();
+        for _ in 0..500 {
+            sk.push(r.range_f64(0.0, 500.0), r.range_f64(0.1, 5.0));
+        }
+        sk.push(0.0, 2.5);
+        for sketch in [&sk, &WeightedSketch::new()] {
+            let txt = sketch.to_json().to_string();
+            let back = WeightedSketch::from_json(&Json::parse(&txt).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), txt);
+            assert_eq!(back.count(), sketch.count());
+            assert_eq!(back.min.to_bits(), sketch.min.to_bits());
+            assert_eq!(back.max.to_bits(), sketch.max.to_bits());
+        }
+
+        // TimeWeighted round-trips through its sketch.
+        let mut tw = TimeWeighted::new(0.0, 2.0);
+        tw.update(10.0, 4.0);
+        tw.finish(40.0);
+        let txt = tw.to_json().to_string();
+        let back = TimeWeighted::from_json(&Json::parse(&txt).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), txt);
     }
 
     #[test]

@@ -98,6 +98,29 @@ fn err_json(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
 }
 
+/// Per-connection read timeout. A client that connects and then sends
+/// nothing (or half a line) would otherwise pin its server thread in
+/// `read_line` forever; after this long with no traffic the connection
+/// is dropped. `ZOE_API_IDLE_TIMEOUT_MS` overrides the 30 s default
+/// (tests use a few hundred ms).
+fn idle_timeout() -> std::time::Duration {
+    let ms = std::env::var("ZOE_API_IDLE_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(30_000);
+    std::time::Duration::from_millis(ms)
+}
+
+/// True when an I/O error is a read-timeout expiring rather than a real
+/// transport failure (`WouldBlock` on unix, `TimedOut` on windows).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
 /// The API server: listens on `addr`, one thread per connection.
 pub struct ApiServer {
     /// The address actually bound (resolves port 0).
@@ -157,13 +180,17 @@ impl Drop for ApiServer {
 }
 
 fn serve_conn(master: Arc<Mutex<ZoeMaster>>, stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(idle_timeout()))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e) if is_timeout(&e) => return Ok(()), // idle client: drop it
+            Err(e) => return Err(e.into()),
         }
         let resp = match Json::parse(line.trim()) {
             Ok(req) => handle_request(&master, &req),
@@ -181,9 +208,12 @@ pub struct ApiClient {
 }
 
 impl ApiClient {
-    /// Connect to a master's API server.
+    /// Connect to a master's API server. Responses are waited on for at
+    /// most the `ZOE_API_IDLE_TIMEOUT_MS` read timeout (default 30 s),
+    /// so a wedged server surfaces as an error instead of a hang.
     pub fn connect(addr: &str) -> Result<ApiClient> {
         let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(idle_timeout()))?;
         Ok(ApiClient {
             reader: BufReader::new(stream.try_clone()?),
             stream,

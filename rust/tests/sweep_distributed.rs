@@ -1,0 +1,395 @@
+//! Differential + fault-injection harness for the distributed sweep
+//! control plane (`zoe::sweep`).
+//!
+//! The headline guarantee under test: a sweep sharded over real TCP
+//! connections — any worker count, including workers that crash
+//! mid-sweep or deliver duplicates — merges to output **byte-identical**
+//! to the serial [`ExperimentPlan::run`]. Identity is asserted on the
+//! canonical report text (`wall_secs` zeroed — the one field that
+//! measures the machine rather than the simulation).
+//!
+//! Protocol robustness rides along: malformed frames, oversized length
+//! prefixes, truncated messages, unknown message types, and
+//! version-mismatch hellos each earn their sender a typed `error` frame
+//! and a dropped connection, while the coordinator keeps serving
+//! everyone else.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use zoe::policy::Policy;
+use zoe::sched::{CheckpointPolicy, SchedKind};
+use zoe::sim::{ExperimentPlan, FaultSpec};
+use zoe::sweep::wire;
+use zoe::sweep::{report_json, run_worker, SweepCoordinator, SweepOptions, SweepReport, WorkerOptions};
+use zoe::workload::WorkloadSpec;
+
+/// A small grid covering all four scheduler generations: 4 configs × 2
+/// seeds = 8 cells, ~tens of milliseconds per cell.
+fn all_kinds_plan() -> ExperimentPlan {
+    let mut plan = ExperimentPlan::new(WorkloadSpec::paper_batch_only(), 60).seeds(1..3);
+    for kind in SchedKind::ALL {
+        plan = plan.config(Policy::sjf(), kind);
+    }
+    plan
+}
+
+/// A churn grid: synthetic machine failures plus periodic checkpoints,
+/// the knobs whose state is hardest to keep deterministic.
+fn churn_plan() -> ExperimentPlan {
+    ExperimentPlan::new(WorkloadSpec::paper(), 60)
+        .seeds(1..4)
+        .config(Policy::FIFO, SchedKind::Flexible)
+        .config(Policy::srpt(), SchedKind::FlexiblePreemptive)
+        .faults(FaultSpec::new(120.0, 20.0, 9))
+        .checkpoint(CheckpointPolicy::Periodic(30.0))
+}
+
+fn serial_text(plan: &ExperimentPlan) -> String {
+    report_json(&plan.clone().run()).to_string()
+}
+
+/// Run `plan` through a loopback coordinator with `n_workers` real
+/// socket workers; return the canonical report text and the report.
+fn distributed(plan: ExperimentPlan, n_workers: usize) -> (String, SweepReport) {
+    let co = SweepCoordinator::bind(plan, "127.0.0.1:0", SweepOptions::default()).unwrap();
+    let addr = co.addr().to_string();
+    let workers: Vec<_> = (0..n_workers)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_worker(
+                    &addr,
+                    &WorkerOptions {
+                        name: format!("w{i}"),
+                        ..WorkerOptions::default()
+                    },
+                )
+            })
+        })
+        .collect();
+    let report = co.wait();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    (report_json(&report.result).to_string(), report)
+}
+
+// ---- the differential guarantee ------------------------------------------
+
+#[test]
+fn distributed_matches_serial_across_all_sched_kinds() {
+    let serial = serial_text(&all_kinds_plan());
+    for n_workers in [1, 2, 4] {
+        let (text, report) = distributed(all_kinds_plan(), n_workers);
+        assert_eq!(
+            text, serial,
+            "merged report diverged from serial with {n_workers} workers"
+        );
+        assert_eq!(report.duplicates, 0);
+        assert_eq!(report.releases, 0);
+        let cells: u64 = report.per_worker.iter().map(|(_, c)| c).sum();
+        assert_eq!(cells, 8, "every grid cell accounted to exactly one worker");
+        assert!(report.per_worker.len() <= n_workers);
+    }
+}
+
+#[test]
+fn distributed_matches_serial_under_churn() {
+    let serial = serial_text(&churn_plan());
+    let (text, report) = distributed(churn_plan(), 2);
+    assert_eq!(
+        text, serial,
+        "fault/checkpoint state must replay identically on remote workers"
+    );
+    assert_eq!(report.duplicates, 0);
+    // The churn actually exercised the failure path (otherwise this
+    // test silently degrades into the plain differential one).
+    let any_failures = report
+        .result
+        .runs
+        .iter()
+        .any(|r| r.per_seed.iter().any(|s| s.fail.node_failures > 0));
+    assert!(any_failures, "churn plan produced no machine failures");
+}
+
+// ---- fault injection: worker crash mid-sweep -----------------------------
+
+/// A hand-rolled worker that speaks the real protocol, computes
+/// `cells_before_crash` results, takes one more lease, and then drops
+/// the TCP connection while holding it — the crash the re-lease path
+/// exists for.
+fn flaky_worker(addr: &str, cells_before_crash: usize) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    wire::write_frame(&mut writer, &wire::hello("flaky")).unwrap();
+    let welcome = wire::read_frame(&mut reader).unwrap();
+    assert_eq!(wire::msg_type(&welcome), "welcome");
+    let plan = ExperimentPlan::from_json(welcome.get("plan")).unwrap();
+    let mut computed = 0;
+    loop {
+        wire::write_frame(&mut writer, &wire::next()).unwrap();
+        let msg = wire::read_frame(&mut reader).unwrap();
+        match wire::msg_type(&msg) {
+            "lease" => {
+                if computed == cells_before_crash {
+                    return; // drop the connection, lease in hand
+                }
+                let cell = msg.get("cell").as_u64().unwrap() as usize;
+                let ci = msg.get("ci").as_u64().unwrap() as usize;
+                let seed = msg.get("seed").as_u64().unwrap();
+                let sim = plan.run_cell(ci, seed);
+                wire::write_frame(&mut writer, &wire::result(cell, sim.to_json())).unwrap();
+                let ack = wire::read_frame(&mut reader).unwrap();
+                assert_eq!(wire::msg_type(&ack), "ack");
+                computed += 1;
+            }
+            "wait" => std::thread::sleep(Duration::from_millis(10)),
+            "done" => return,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn killed_worker_mid_sweep_releases_and_output_is_identical() {
+    let serial = serial_text(&all_kinds_plan());
+    let co =
+        SweepCoordinator::bind(all_kinds_plan(), "127.0.0.1:0", SweepOptions::default()).unwrap();
+    let addr = co.addr().to_string();
+
+    // Crash first, sequentially: the flaky worker computes 3 cells, then
+    // dies holding a 4th lease before any other worker exists.
+    flaky_worker(&addr, 3);
+
+    // A reliable worker then joins and must finish the whole grid,
+    // including the re-leased cell.
+    let addr2 = addr.clone();
+    let reliable = std::thread::spawn(move || {
+        run_worker(
+            &addr2,
+            &WorkerOptions {
+                name: "reliable".into(),
+                ..WorkerOptions::default()
+            },
+        )
+    });
+    let report = co.wait();
+    reliable.join().unwrap().unwrap();
+
+    assert_eq!(
+        report_json(&report.result).to_string(),
+        serial,
+        "a mid-sweep worker crash must not change a single output byte"
+    );
+    assert!(
+        report.releases >= 1,
+        "the crashed worker's held lease must be released (got {})",
+        report.releases
+    );
+    let flaky_cells = report
+        .per_worker
+        .iter()
+        .find(|(n, _)| n == "flaky")
+        .map(|&(_, c)| c)
+        .unwrap_or(0);
+    assert_eq!(flaky_cells, 3, "pre-crash deliveries still count");
+    let total: u64 = report.per_worker.iter().map(|(_, c)| c).sum();
+    assert_eq!(total, 8);
+}
+
+// ---- fault injection: duplicate delivery ---------------------------------
+
+#[test]
+fn duplicate_delivery_is_dropped_exactly_once() {
+    let serial = serial_text(&all_kinds_plan());
+    let co =
+        SweepCoordinator::bind(all_kinds_plan(), "127.0.0.1:0", SweepOptions::default()).unwrap();
+    let addr = co.addr().to_string();
+
+    // Manual client: compute one cell, deliver its result twice.
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        wire::write_frame(&mut writer, &wire::hello("dup")).unwrap();
+        let welcome = wire::read_frame(&mut reader).unwrap();
+        let plan = ExperimentPlan::from_json(welcome.get("plan")).unwrap();
+        wire::write_frame(&mut writer, &wire::next()).unwrap();
+        let lease = wire::read_frame(&mut reader).unwrap();
+        assert_eq!(wire::msg_type(&lease), "lease");
+        let cell = lease.get("cell").as_u64().unwrap() as usize;
+        let ci = lease.get("ci").as_u64().unwrap() as usize;
+        let seed = lease.get("seed").as_u64().unwrap();
+        let sim = plan.run_cell(ci, seed);
+        wire::write_frame(&mut writer, &wire::result(cell, sim.to_json())).unwrap();
+        let first = wire::read_frame(&mut reader).unwrap();
+        assert_eq!(wire::msg_type(&first), "ack");
+        assert_eq!(first.get("dup").as_bool(), Some(false));
+        // The retry a real worker might send after a lost ack.
+        wire::write_frame(&mut writer, &wire::result(cell, sim.to_json())).unwrap();
+        let second = wire::read_frame(&mut reader).unwrap();
+        assert_eq!(wire::msg_type(&second), "ack");
+        assert_eq!(
+            second.get("dup").as_bool(),
+            Some(true),
+            "second delivery of a complete cell must be acked as duplicate"
+        );
+    }
+
+    let addr2 = addr.clone();
+    let finisher = std::thread::spawn(move || run_worker(&addr2, &WorkerOptions::default()));
+    let report = co.wait();
+    finisher.join().unwrap().unwrap();
+    assert_eq!(report.duplicates, 1, "exactly one duplicate counted");
+    assert_eq!(report_json(&report.result).to_string(), serial);
+}
+
+// ---- protocol robustness: hostile peers never poison the sweep -----------
+
+/// Send raw bytes to the coordinator and return the reply frame (which
+/// must be a typed `error`, not a hang or a crash).
+fn expect_error_reply(addr: &str, raw: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    stream.write_all(raw).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut reader = BufReader::new(stream);
+    let reply = wire::read_frame(&mut reader).expect("coordinator must reply before dropping");
+    assert_eq!(wire::msg_type(&reply), "error");
+    reply.get("msg").as_str().unwrap().to_string()
+}
+
+#[test]
+fn hostile_peers_get_typed_errors_and_the_sweep_still_completes() {
+    let serial = serial_text(&all_kinds_plan());
+    let co =
+        SweepCoordinator::bind(all_kinds_plan(), "127.0.0.1:0", SweepOptions::default()).unwrap();
+    let addr = co.addr().to_string();
+
+    // Malformed length prefix.
+    let msg = expect_error_reply(&addr, b"banana\n{}\n");
+    assert!(msg.contains("length"), "got: {msg}");
+
+    // Oversized length prefix: rejected before any allocation.
+    let msg = expect_error_reply(&addr, format!("{}\n", wire::MAX_FRAME + 1).as_bytes());
+    assert!(msg.contains("exceeds"), "got: {msg}");
+
+    // Truncated mid-message: header promises more bytes than arrive.
+    let msg = expect_error_reply(&addr, b"100\n{\"type\":\"hel");
+    assert!(msg.contains("mid-frame"), "got: {msg}");
+
+    // Valid frame, not JSON.
+    let msg = expect_error_reply(&addr, b"6\nhello!\n");
+    assert!(msg.contains("JSON"), "got: {msg}");
+
+    // Version-mismatch hello.
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let mut bad_hello = wire::hello("time-traveler");
+        if let zoe::util::json::Json::Obj(ref mut m) = bad_hello {
+            m.insert("proto".into(), zoe::util::json::Json::num(99.0));
+        }
+        wire::write_frame(&mut writer, &bad_hello).unwrap();
+        let reply = wire::read_frame(&mut reader).unwrap();
+        assert_eq!(wire::msg_type(&reply), "error");
+        assert!(reply.get("msg").as_str().unwrap().contains("version mismatch"));
+    }
+
+    // Unknown message type after a valid handshake.
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        wire::write_frame(&mut writer, &wire::hello("confused")).unwrap();
+        assert_eq!(wire::msg_type(&wire::read_frame(&mut reader).unwrap()), "welcome");
+        wire::write_frame(
+            &mut writer,
+            &zoe::util::json::Json::obj(vec![("type", zoe::util::json::Json::str("gossip"))]),
+        )
+        .unwrap();
+        let reply = wire::read_frame(&mut reader).unwrap();
+        assert_eq!(wire::msg_type(&reply), "error");
+        assert!(reply.get("msg").as_str().unwrap().contains("unknown message type"));
+    }
+
+    // After all that abuse, an honest worker completes the sweep and
+    // the output is still byte-identical.
+    let addr2 = addr.clone();
+    let worker = std::thread::spawn(move || run_worker(&addr2, &WorkerOptions::default()));
+    let report = co.wait();
+    worker.join().unwrap().unwrap();
+    assert_eq!(report_json(&report.result).to_string(), serial);
+    assert_eq!(report.duplicates, 0);
+}
+
+// ---- quorum gating -------------------------------------------------------
+
+#[test]
+fn require_gates_leasing_until_quorum() {
+    let opts = SweepOptions {
+        require: 2,
+        ..SweepOptions::default()
+    };
+    let co = SweepCoordinator::bind(all_kinds_plan(), "127.0.0.1:0", opts).unwrap();
+    let addr = co.addr().to_string();
+
+    // A single early worker must be told to wait, not leased.
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    wire::write_frame(&mut writer, &wire::hello("early")).unwrap();
+    assert_eq!(wire::msg_type(&wire::read_frame(&mut reader).unwrap()), "welcome");
+    wire::write_frame(&mut writer, &wire::next()).unwrap();
+    assert_eq!(
+        wire::msg_type(&wire::read_frame(&mut reader).unwrap()),
+        "wait",
+        "leasing must be gated below the --require quorum"
+    );
+    drop(writer);
+    drop(reader);
+
+    // Two real workers form the quorum and finish.
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_worker(
+                    &addr,
+                    &WorkerOptions {
+                        name: format!("q{i}"),
+                        ..WorkerOptions::default()
+                    },
+                )
+            })
+        })
+        .collect();
+    let report = co.wait();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    let total: u64 = report.per_worker.iter().map(|(_, c)| c).sum();
+    assert_eq!(total, 8);
+}
+
+// ---- plan codec ----------------------------------------------------------
+
+#[test]
+fn plan_json_roundtrip_preserves_every_cell() {
+    let plan = churn_plan();
+    let back = ExperimentPlan::from_json(&plan.to_json()).expect("plan must round-trip");
+    assert_eq!(plan.grid_cells(), back.grid_cells());
+    for &(ci, seed) in plan.grid_cells().iter() {
+        assert_eq!(
+            plan.run_cell(ci, seed).canonical_json().to_string(),
+            back.run_cell(ci, seed).canonical_json().to_string(),
+            "cell ({ci}, {seed}) diverged after a plan wire round-trip"
+        );
+    }
+}

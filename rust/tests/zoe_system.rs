@@ -189,6 +189,54 @@ fn api_submit_status_stats_kill() {
     server.shutdown();
 }
 
+/// Regression: a client that connects and then sends nothing (or half a
+/// request line) must not wedge its server thread. Before `serve_conn`
+/// grew a read timeout, `read_line` blocked forever and every such
+/// socket leaked a pinned thread. No PJRT runtime needed — nothing is
+/// submitted.
+#[test]
+fn idle_client_cannot_wedge_the_api_server() {
+    use std::io::{Read, Write};
+    std::env::set_var("ZOE_API_IDLE_TIMEOUT_MS", "200");
+    let master = Arc::new(Mutex::new(ZoeMaster::new(
+        SwarmBackend::paper_testbed(),
+        SchedKind::Flexible,
+    )));
+    let server = ApiServer::spawn(Arc::clone(&master), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // Fully silent client: the server must close it after the idle
+    // timeout, observed here as EOF well before our own 5 s guard.
+    let mut idle = std::net::TcpStream::connect(&addr).unwrap();
+    idle.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+        .unwrap();
+    let mut buf = [0u8; 16];
+    match idle.read(&mut buf) {
+        Ok(0) => {}
+        Ok(n) => panic!("server sent {n} unsolicited bytes to an idle client"),
+        Err(e) => panic!("server kept an idle connection open past its timeout: {e}"),
+    }
+
+    // Half-a-line client (no newline, then silence): same fate.
+    let mut partial = std::net::TcpStream::connect(&addr).unwrap();
+    partial.write_all(b"{\"op\":").unwrap();
+    partial
+        .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+        .unwrap();
+    match partial.read(&mut buf) {
+        Ok(0) => {}
+        Ok(n) => panic!("server answered a half-request with {n} bytes"),
+        Err(e) => panic!("server kept a half-request connection open: {e}"),
+    }
+
+    // And it still serves real clients afterwards.
+    let mut client = ApiClient::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("ok").as_bool(), Some(true));
+    server.shutdown();
+    std::env::remove_var("ZOE_API_IDLE_TIMEOUT_MS");
+}
+
 #[test]
 fn submit_rejects_unschedulable_cores() {
     let Some(_rt) = runtime() else { return };

@@ -18,6 +18,13 @@ high-water mark is a structural slab leak and fails unconditionally
 (hardware-independent); against a measured baseline at the same app
 count, a high-water mark more than THRESHOLD above the baseline fails
 too (the workload is seeded, so the active peak is deterministic).
+
+The distributed_sweep point (loopback coordinator + socket workers) is
+gated structurally as well: the bench run is crash-free, so non-zero
+releases or duplicates mean the lease lifecycle dropped or double-
+counted a healthy worker and fail even against a provisional baseline.
+Its events/s rides the normal per-point threshold comparison via the
+(flexible, distributed_sweep, apps) results entry.
 """
 
 import json
@@ -52,6 +59,19 @@ def report_parallel(doc, label):
         if t >= 4:
             best4 = s if best4 is None else max(best4, s)
     return hw, best4
+
+
+def report_sweep(doc, label):
+    """Print the distributed_sweep point; returns it (or None)."""
+    s = doc.get("distributed_sweep") or {}
+    if not s or not s.get("apps"):
+        print(f"{label}: no distributed_sweep point")
+        return None
+    print(f"{label}: distributed sweep ({int(s['apps'])} apps x {int(s.get('seeds', 0))} seeds "
+          f"over {int(s.get('workers', 0))} workers): "
+          f"{float(s.get('events_per_s', 0.0)):.0f} events/s, "
+          f"releases={int(s.get('releases', 0))}, duplicates={int(s.get('duplicates', 0))}")
+    return s
 
 
 def report_memory(doc, label):
@@ -92,6 +112,7 @@ def main():
 
     hw, best4 = report_parallel(new, "fresh")
     new_mem = report_memory(new, "fresh")
+    new_sweep = report_sweep(new, "fresh")
 
     # Structural slab invariant, hardware-independent: the request table
     # must never outgrow the active high-water mark. Checked even against
@@ -101,6 +122,17 @@ def main():
         print(f"FAIL: table capacity {new_mem['table_capacity']} exceeds slab "
               f"high-water {new_mem['slab_high_water']} (slab leak)")
         mem_failures.append(("memory", "capacity>high_water"))
+
+    # Distributed-sweep correctness ledger, hardware-independent: the
+    # bench's loopback run is crash-free, so any re-lease or duplicate
+    # there means the coordinator dropped or double-counted a healthy
+    # worker's lease. Checked even against a provisional baseline.
+    if new_sweep and (int(new_sweep.get("releases", 0)) > 0 or
+                      int(new_sweep.get("duplicates", 0)) > 0):
+        print(f"FAIL: crash-free distributed sweep recorded "
+              f"releases={new_sweep.get('releases')} duplicates={new_sweep.get('duplicates')} "
+              f"(lease lifecycle bug)")
+        mem_failures.append(("distributed_sweep", "releases/duplicates on clean run"))
 
     if baseline.get("provisional"):
         print("baseline is provisional (no measured numbers committed); "

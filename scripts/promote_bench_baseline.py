@@ -81,6 +81,16 @@ def main():
     if int(mem.get("table_capacity", 0)) > int(mem.get("slab_high_water", 0)):
         return fail(f"{new_path}: table capacity {mem['table_capacity']} exceeds slab "
                     f"high-water {mem['slab_high_water']} — a slab leak is not a baseline")
+    sweep = new.get("distributed_sweep") or {}
+    if not sweep.get("apps"):
+        return fail(f"{new_path} has no distributed_sweep point — rerun the full bench "
+                    "(ZOE_BENCH_SWEEP_MAX must be > 0)")
+    if float(sweep.get("events_per_s", 0)) <= 0:
+        return fail(f"{new_path}: non-positive distributed_sweep throughput: {sweep}")
+    if int(sweep.get("releases", 0)) > 0 or int(sweep.get("duplicates", 0)) > 0:
+        return fail(f"{new_path}: crash-free distributed sweep recorded releases="
+                    f"{sweep.get('releases')} duplicates={sweep.get('duplicates')} — "
+                    "a lease-lifecycle bug is not a baseline")
 
     if new_path != baseline_path:
         try:
@@ -107,6 +117,9 @@ def main():
           f"({int(ps.get('hw_threads', 0))} hw threads)")
     print(f"  steady-state memory @ {int(mem['apps'])} apps: slab high-water "
           f"{int(mem['slab_high_water'])}, table capacity {int(mem['table_capacity'])}")
+    print(f"  distributed sweep: {float(sweep.get('events_per_s', 0.0)):.0f} events/s over "
+          f"{int(sweep.get('workers', 0))} workers (releases={int(sweep.get('releases', 0))}, "
+          f"duplicates={int(sweep.get('duplicates', 0))})")
     print("commit the updated baseline to arm the CI regression gate "
           "(check_bench_regression.py now enforces thresholds).")
     return 0
