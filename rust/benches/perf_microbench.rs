@@ -18,11 +18,13 @@
 
 use std::time::Instant;
 
+use zoe::core::{unit_request, Request, Resources};
 use zoe::policy::Policy;
 use zoe::pool::Cluster;
-use zoe::sched::SchedKind;
-use zoe::sched::CheckpointPolicy;
-use zoe::sim::{simulate_with_mode, EngineMode, ExperimentPlan, FaultSpec, SimResult, Simulation};
+use zoe::sched::{CheckpointPolicy, SchedKind, SchedSpec};
+use zoe::sim::{
+    simulate, simulate_with_mode, EngineMode, ExperimentPlan, FaultSpec, SimResult, Simulation,
+};
 use zoe::sweep::{run_worker, SweepCoordinator, SweepOptions, WorkerOptions};
 use zoe::trace::{IngestOptions, SharedBuf, TraceRecorder, TraceSource};
 use zoe::util::bench::{measure, section};
@@ -213,6 +215,67 @@ fn main() {
             events: res.events,
             wall_s: dt,
             events_per_s: eps,
+        });
+    }
+
+    section("L3 — decision cache: template-heavy repeat admissions (cached:flexible)");
+    struct CachePoint {
+        apps: u32,
+        bare_eps: f64,
+        cached_eps: f64,
+        hit_rate: f64,
+        hits: u64,
+        misses: u64,
+        validation_failures: u64,
+    }
+    let mut cache_point: Option<CachePoint> = None;
+    if sweep_max == 0 {
+        println!("  (skipping decision cache: ZOE_BENCH_SWEEP_MAX={sweep_max})");
+    } else {
+        // The cache's target regime: one admission shape repeated at
+        // scale (runtimes varied to prove the key excludes them),
+        // arrivals spaced so every admission is quiescent.
+        let apps = 200_000u32.min(sweep_max);
+        let template_reqs = || -> Vec<Request> {
+            (0..apps)
+                .map(|i| unit_request(i, 12.0 * i as f64, 5.0 + (i % 7) as f64, 2, 0))
+                .collect()
+        };
+        let small_cluster = || Cluster::uniform(4, Resources::new(8.0, 8.0));
+        let t0 = Instant::now();
+        let bare = simulate(template_reqs(), small_cluster(), Policy::FIFO, SchedKind::Flexible);
+        let bare_dt = t0.elapsed().as_secs_f64();
+        let bare_eps = bare.events as f64 / bare_dt.max(1e-12);
+        let cached_spec: SchedSpec = "cached:flexible".parse().expect("cached:flexible parses");
+        let t0 = Instant::now();
+        let hot = simulate(template_reqs(), small_cluster(), Policy::FIFO, cached_spec);
+        let cached_dt = t0.elapsed().as_secs_f64();
+        let cached_eps = hot.events as f64 / cached_dt.max(1e-12);
+        assert_eq!(
+            bare.canonical_json().to_string(),
+            hot.canonical_json().to_string(),
+            "decision cache broke bit-identity on the bench workload"
+        );
+        assert!(hot.cache.hits > 0, "the template workload must hit: {}", hot.cache);
+        println!(
+            "  bare:    {:>9} events in {bare_dt:>7.3}s → {bare_eps:>10.0} events/s",
+            bare.events
+        );
+        println!(
+            "  cached:  {:>9} events in {cached_dt:>7.3}s → {cached_eps:>10.0} events/s \
+             ({:.2}× admission-path speedup)",
+            hot.events,
+            cached_eps / bare_eps.max(1e-12)
+        );
+        println!("  cache:   {}", hot.cache);
+        cache_point = Some(CachePoint {
+            apps,
+            bare_eps,
+            cached_eps,
+            hit_rate: hot.cache.hit_rate(),
+            hits: hot.cache.hits,
+            misses: hot.cache.misses,
+            validation_failures: hot.cache.validation_failures,
         });
     }
 
@@ -407,6 +470,26 @@ fn main() {
                     ("events_per_s", Json::num(eps)),
                     ("releases", Json::num(releases as f64)),
                     ("duplicates", Json::num(duplicates as f64)),
+                ]),
+            },
+        ),
+        (
+            "decision_cache",
+            match &cache_point {
+                None => Json::Null,
+                Some(p) => Json::obj(vec![
+                    ("apps", Json::num(p.apps as f64)),
+                    ("sched", Json::str("flexible")),
+                    ("bare_events_per_s", Json::num(p.bare_eps)),
+                    ("cached_events_per_s", Json::num(p.cached_eps)),
+                    ("speedup", Json::num(p.cached_eps / p.bare_eps.max(1e-12))),
+                    ("hit_rate", Json::num(p.hit_rate)),
+                    ("hits", Json::num(p.hits as f64)),
+                    ("misses", Json::num(p.misses as f64)),
+                    (
+                        "validation_failures",
+                        Json::num(p.validation_failures as f64),
+                    ),
                 ]),
             },
         ),

@@ -1,0 +1,677 @@
+//! The decision cache: template-keyed control-plane caching for repeat
+//! admissions (Execution Templates, arXiv 1705.01662).
+//!
+//! At scale, arrivals are overwhelmingly instances of a small set of
+//! application templates, yet every admission re-runs the full placement
+//! search — Algorithm 1 pays the same control-plane cost for the
+//! 10,000th Spark-shaped app as for the first. [`CachingCore`] wraps any
+//! inner [`SchedulerCore`] and memoizes that work:
+//!
+//! * **Key** — on every [`SchedEvent::Arrival`] a cache key is hashed
+//!   from (a) the request's *shape fingerprint*
+//!   ([`shape_fingerprint`]: class, core/elastic split, per-component
+//!   resources, priority, deadline log₂-bucket — runtime **excluded**,
+//!   so sampled durations don't fragment the key) and (b) a coarse
+//!   *cluster-occupancy signature* (waiting-line occupancy, serving-set
+//!   saturation, per-machine free-CPU/RAM eighths).
+//! * **Hit** — the inner core *validates* the cached admission against
+//!   the live view (exact free/used bits, serving-set grants and elastic
+//!   placements, recomputed policy keys) and replays the recorded
+//!   [`Decision`] sequence verbatim, bypassing its placement search.
+//! * **Miss / failed validation** — the arrival falls through to the
+//!   inner core's normal path, which records a fresh template when the
+//!   admission is cacheable (quiescent lines, immediate admission).
+//! * **Invalidation** — entries whose placements touch a machine hit by
+//!   [`SchedEvent::NodeDown`] are dropped eagerly; any event whose
+//!   decisions preempt, requeue or reclaim flushes the cache (the
+//!   free-state changed in ways the coarse key cannot see);
+//!   [`SchedEvent::NodeUp`] flushes wholesale. Validation — not
+//!   invalidation — is the correctness backstop: a stale entry that
+//!   survives invalidation still fails its bit-exact validation and
+//!   falls through.
+//!
+//! The load-bearing guarantee, proven by `tests/decision_cache.rs`:
+//! `cached:<inner>` produces [`crate::sim::SimResult`]s **bit-identical**
+//! to bare `<inner>` across all four generations, every Table-1 policy,
+//! and under machine churn. Replay commits the exact same mutation
+//! sequence the inner core's arrival path would have performed (the
+//! greedy placer is a pure function of the free vectors, which are
+//! validated bit-for-bit), or validation fails and the full path runs.
+//!
+//! Cores that implement neither capture nor replay (the trait defaults)
+//! simply never hit — `cached:<external>` stays correct for every
+//! registered core.
+
+use std::any::Any;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Mutex, OnceLock};
+
+use crate::core::{ReqId, Request, Resources};
+use crate::pool::{Cluster, Placement};
+use crate::sched::{ClusterView, Decision, SchedEvent, SchedulerCore};
+use crate::util::json::Json;
+
+/// Upper bound on live cache entries; the oldest key is evicted (and
+/// counted as an invalidation) when a fresh capture would exceed it.
+/// Template workloads need a handful of entries per (shape, occupancy
+/// bucket) pair, so the bound exists only to keep adversarial workloads
+/// from growing the map without limit.
+const MAX_ENTRIES: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// FNV-1a — the key hash
+// ---------------------------------------------------------------------------
+
+/// Minimal FNV-1a accumulator (dependency-free, deterministic across
+/// platforms — the key must be stable for distributed sweeps).
+struct Fnv(u64);
+
+impl Fnv {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> Self {
+        Fnv(Self::OFFSET)
+    }
+
+    #[inline]
+    fn u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(Self::PRIME);
+    }
+
+    #[inline]
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.u8(b);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Log₂ bucket of a deadline (`u64::MAX` for "no deadline"): deadlines
+/// within a factor of two share a key, so the cache stays warm across
+/// jittered SLOs while admissions with wildly different urgency keep
+/// separate entries.
+fn deadline_bucket(deadline: f64) -> u64 {
+    if !deadline.is_finite() {
+        return u64::MAX;
+    }
+    deadline.max(1.0).log2().floor() as u64
+}
+
+/// The request's **shape fingerprint**: a hash over everything that
+/// determines its placement demand — class, core count and per-core
+/// resources, elastic count and per-component resources, priority, and
+/// the deadline's log₂ bucket. The (sampled) runtime is deliberately
+/// excluded: two instances of the same application template differ only
+/// in duration, and duration never feeds the placement search (policy
+/// keys that do read it are recomputed live at replay).
+///
+/// Also the unit of the `zoe trace stats` template histogram: the number
+/// of distinct fingerprints in a trace bounds how many cache entries a
+/// replay of it can ever need.
+pub fn shape_fingerprint(req: &Request) -> u64 {
+    let mut h = Fnv::new();
+    for b in req.class.label().bytes() {
+        h.u8(b);
+    }
+    h.u64(req.n_core as u64);
+    h.u64(req.core_res.cpu.to_bits());
+    h.u64(req.core_res.ram_mb.to_bits());
+    h.u64(req.n_elastic as u64);
+    h.u64(req.elastic_res.cpu.to_bits());
+    h.u64(req.elastic_res.ram_mb.to_bits());
+    h.u64(req.priority.to_bits());
+    h.u64(deadline_bucket(req.deadline));
+    h.finish()
+}
+
+/// Coarse per-machine occupancy bucket: free capacity in eighths of the
+/// installed total (0..=8), `0xFF` for a machine that is down. Coarse on
+/// purpose — near-identical cluster states share a key and the bit-exact
+/// validation inside replay rejects the rare collision that matters.
+fn free_bucket(free: f64, total: f64) -> u8 {
+    if total <= 0.0 {
+        return 0xFF;
+    }
+    ((free / total).clamp(0.0, 1.0) * 8.0).floor() as u8
+}
+
+// ---------------------------------------------------------------------------
+// Validation signatures — the bit-exact side of the contract
+// ---------------------------------------------------------------------------
+
+/// The raw bit patterns of a [`Resources`] pair — validation compares
+/// float state bitwise, never within a tolerance (the replay contract is
+/// bit-identity, and `-0.0 == 0.0` style equality would let drifted
+/// states replay).
+pub fn res_bits(r: &Resources) -> (u64, u64) {
+    (r.cpu.to_bits(), r.ram_mb.to_bits())
+}
+
+/// Bit-exact snapshot of everything the greedy placer reads from a
+/// [`Cluster`]: machine count, aggregate total and used (the
+/// aggregate-fit early-out), and every machine's free vector. The block
+/// index (`blk_max`) and scan cursor are *derived* state — maintained as
+/// exact functions of the free vectors — so free-vector equality implies
+/// the placer retraces the captured placements verbatim.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSig {
+    n_machines: usize,
+    total: (u64, u64),
+    used: (u64, u64),
+    free: Vec<(u64, u64)>,
+}
+
+impl ClusterSig {
+    /// Capture the signature of `cluster` as it stands.
+    pub fn of(cluster: &Cluster) -> Self {
+        ClusterSig {
+            n_machines: cluster.n_machines(),
+            total: res_bits(&cluster.total()),
+            used: res_bits(&cluster.used()),
+            free: cluster.machines().iter().map(|m| res_bits(&m.free)).collect(),
+        }
+    }
+
+    /// Does `cluster` match the captured signature bit-for-bit?
+    pub fn matches(&self, cluster: &Cluster) -> bool {
+        self.n_machines == cluster.n_machines()
+            && self.total == res_bits(&cluster.total())
+            && self.used == res_bits(&cluster.used())
+            && cluster
+                .machines()
+                .iter()
+                .zip(&self.free)
+                .all(|(m, &f)| res_bits(&m.free) == f)
+    }
+}
+
+/// Bit-exact snapshot of the request fields the arrival paths place by.
+/// Time-dependent inputs (policy keys, waits) are *not* captured — replay
+/// recomputes them live through the same code paths.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShapeSig {
+    n_core: u32,
+    core_res: (u64, u64),
+    n_elastic: u32,
+    elastic_res: (u64, u64),
+    priority: u64,
+}
+
+impl ShapeSig {
+    /// Capture the placement-relevant shape of `req`.
+    pub fn of(req: &Request) -> Self {
+        ShapeSig {
+            n_core: req.n_core,
+            core_res: res_bits(&req.core_res),
+            n_elastic: req.n_elastic,
+            elastic_res: res_bits(&req.elastic_res),
+            priority: req.priority.to_bits(),
+        }
+    }
+
+    /// Does `req` have the captured shape, bit-for-bit?
+    pub fn matches(&self, req: &Request) -> bool {
+        self.n_core == req.n_core
+            && self.core_res == res_bits(&req.core_res)
+            && self.n_elastic == req.n_elastic
+            && self.elastic_res == res_bits(&req.elastic_res)
+            && self.priority == req.priority.to_bits()
+    }
+}
+
+/// Are two placements interchangeable for replay? The machine/count
+/// pairs must match exactly; the component size is compared bitwise only
+/// when something is actually placed — an *empty* reusable buffer's
+/// `res` is leftover from the slot's previous occupant and is never
+/// read, so it must not fail validation.
+pub fn placement_matches(live: &Placement, captured: &Placement) -> bool {
+    live.by_machine == captured.by_machine
+        && (live.by_machine.is_empty() || res_bits(&live.res) == res_bits(&captured.res))
+}
+
+// ---------------------------------------------------------------------------
+// CacheStats
+// ---------------------------------------------------------------------------
+
+/// Counters of everything the decision cache did, merged into
+/// [`crate::sim::SimResult`]. `hits`, `misses` and `validation_failures`
+/// partition the lookups: a failed validation is *not* a miss (the key
+/// matched; the live state didn't).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Lookups that validated and replayed a cached admission.
+    pub hits: u64,
+    /// Lookups with no entry under the key.
+    pub misses: u64,
+    /// Lookups whose entry failed live validation (the entry is dropped
+    /// and the arrival falls through to the full path).
+    pub validation_failures: u64,
+    /// Entries dropped by invalidation (node churn, disruptive
+    /// decisions, wholesale flushes, capacity eviction).
+    pub invalidations: u64,
+    /// Entries currently live (a gauge; summed across merged seeds).
+    pub entries: u64,
+    /// Peak number of live entries.
+    pub high_water: u64,
+}
+
+impl CacheStats {
+    /// Total lookups (hits + misses + validation failures).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses + self.validation_failures
+    }
+
+    /// Fraction of lookups served from the cache (0.0 with no lookups).
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+
+    /// Accumulate `other` (multi-seed merge): counters and the entry
+    /// gauge sum; the high-water mark takes the max.
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.validation_failures += other.validation_failures;
+        self.invalidations += other.invalidations;
+        self.entries += other.entries;
+        self.high_water = self.high_water.max(other.high_water);
+    }
+
+    /// Serialize for wire transport (distributed sweeps).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("validation_failures", Json::num(self.validation_failures as f64)),
+            ("invalidations", Json::num(self.invalidations as f64)),
+            ("entries", Json::num(self.entries as f64)),
+            ("high_water", Json::num(self.high_water as f64)),
+        ])
+    }
+
+    /// Inverse of [`CacheStats::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &Json) -> Option<CacheStats> {
+        Some(CacheStats {
+            hits: v.get("hits").as_u64()?,
+            misses: v.get("misses").as_u64()?,
+            validation_failures: v.get("validation_failures").as_u64()?,
+            invalidations: v.get("invalidations").as_u64()?,
+            entries: v.get("entries").as_u64()?,
+            high_water: v.get("high_water").as_u64()?,
+        })
+    }
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} ({:.1}% hit rate), validation_failures={}, \
+             invalidations={}, entries={} (high-water {})",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            self.validation_failures,
+            self.invalidations,
+            self.entries,
+            self.high_water
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AdmissionTemplate — one cached admission
+// ---------------------------------------------------------------------------
+
+/// One cached admission: everything a core needs to validate and replay
+/// an arrival it has handled before. The `payload` is the core's private
+/// capture (each core downcasts its own type back out); `machines` is
+/// the public part the cache uses for node-churn invalidation.
+pub struct AdmissionTemplate {
+    /// Sorted, deduplicated machine indices the cached placements touch;
+    /// a [`SchedEvent::NodeDown`] on any of them drops the entry.
+    pub machines: Vec<u32>,
+    /// Core-private capture state, downcast by the capturing core's
+    /// [`SchedulerCore::replay_arrival`].
+    pub payload: Box<dyn Any + Send>,
+}
+
+impl AdmissionTemplate {
+    /// Build a template from core-private payload plus the placements it
+    /// will replay (their machine lists feed churn invalidation).
+    pub fn new(payload: Box<dyn Any + Send>, placements: &[&Placement]) -> Self {
+        let mut machines: Vec<u32> = placements
+            .iter()
+            .flat_map(|p| p.by_machine.iter().map(|&(m, _)| m))
+            .collect();
+        machines.sort_unstable();
+        machines.dedup();
+        AdmissionTemplate { machines, payload }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CachingCore — the wrapper
+// ---------------------------------------------------------------------------
+
+/// Leak-intern a scheduler name so [`SchedulerCore::name`] can stay
+/// `&'static str`; each distinct `cached:<inner>` name is leaked once
+/// per process.
+fn intern_name(name: String) -> &'static str {
+    static NAMES: OnceLock<Mutex<BTreeSet<&'static str>>> = OnceLock::new();
+    let mut set = NAMES.get_or_init(|| Mutex::new(BTreeSet::new())).lock().unwrap();
+    if let Some(&existing) = set.get(name.as_str()) {
+        return existing;
+    }
+    let leaked: &'static str = Box::leak(name.into_boxed_str());
+    set.insert(leaked);
+    leaked
+}
+
+/// A [`SchedulerCore`] wrapper that memoizes admission work: see the
+/// [module docs](self) for the key/hit/miss/invalidation protocol and
+/// the bit-identity contract. Built by the `cached:<inner>`
+/// [`crate::sched::SchedSpec`] form.
+pub struct CachingCore {
+    inner: Box<dyn SchedulerCore>,
+    name: &'static str,
+    entries: BTreeMap<u64, AdmissionTemplate>,
+    stats: CacheStats,
+}
+
+impl CachingCore {
+    /// Wrap `inner` with a fresh, empty decision cache.
+    pub fn new(inner: Box<dyn SchedulerCore>) -> Self {
+        let name = intern_name(format!("cached:{}", inner.name()));
+        CachingCore {
+            inner,
+            name,
+            entries: BTreeMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// The cache counters so far (the engine folds them into the run's
+    /// [`crate::sim::SimResult`] via [`SchedulerCore::cache_stats`]).
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// The cache key of arrival `id`: shape fingerprint ⊕ occupancy
+    /// signature (waiting-line and serving-set sizes, per-machine free
+    /// buckets).
+    fn arrival_key(&self, id: ReqId, view: &ClusterView) -> u64 {
+        let mut h = Fnv::new();
+        h.u64(shape_fingerprint(&view.state(id).req));
+        h.u64(self.inner.pending() as u64);
+        h.u64(self.inner.running() as u64);
+        for m in view.cluster.machines() {
+            h.u8(free_bucket(m.free.cpu, m.total.cpu));
+            h.u8(free_bucket(m.free.ram_mb, m.total.ram_mb));
+        }
+        h.finish()
+    }
+
+    /// Drop every entry (counted as invalidations).
+    fn flush(&mut self) {
+        self.stats.invalidations += self.entries.len() as u64;
+        self.entries.clear();
+    }
+
+    /// Did the slice of decisions appended by the inner core disrupt
+    /// cached state? Preempts and requeues always do. Reclaims do too —
+    /// except on the arrival path, where a quiescent elastic admission
+    /// legitimately emits cascade reclaims as part of the very sequence
+    /// being cached.
+    fn disrupted(appended: &[Decision], reclaim_disrupts: bool) -> bool {
+        appended.iter().any(|d| match d {
+            Decision::Preempt { .. } | Decision::Requeue { .. } => true,
+            Decision::Reclaim { .. } => reclaim_disrupts,
+            _ => false,
+        })
+    }
+
+    fn on_arrival(&mut self, id: ReqId, view: &mut ClusterView) {
+        if view.naive {
+            // Reference mode runs the seed algorithm untouched: no
+            // lookups, no captures — the differential tests compare
+            // against exactly this.
+            self.inner.on_event(SchedEvent::Arrival(id), view);
+            return;
+        }
+        let key = self.arrival_key(id, view);
+        if let Some(tpl) = self.entries.get(&key) {
+            if self.inner.replay_arrival(id, tpl, view) {
+                self.stats.hits += 1;
+                return;
+            }
+            // Stale under a colliding key: drop it and run the full path.
+            self.entries.remove(&key);
+            self.stats.validation_failures += 1;
+        } else {
+            self.stats.misses += 1;
+        }
+        let start = view.decisions.len();
+        let captured = self.inner.on_arrival_captured(id, view);
+        if Self::disrupted(&view.decisions[start..], false) {
+            // The arrival preempted or requeued something: the free
+            // state moved in ways the coarse key cannot see.
+            self.flush();
+        } else if let Some(tpl) = captured {
+            if self.entries.len() >= MAX_ENTRIES {
+                // Deterministic eviction: drop the lowest key.
+                self.entries.pop_first();
+                self.stats.invalidations += 1;
+            }
+            self.entries.insert(key, tpl);
+        }
+    }
+}
+
+impl SchedulerCore for CachingCore {
+    fn on_event(&mut self, ev: SchedEvent, view: &mut ClusterView) {
+        match ev {
+            SchedEvent::Arrival(id) => self.on_arrival(id, view),
+            SchedEvent::NodeDown { machine } => {
+                // Eager churn invalidation: every entry whose placements
+                // touch the dead machine is unreplayable.
+                let before = self.entries.len();
+                self.entries.retain(|_, t| !t.machines.contains(&machine));
+                self.stats.invalidations += (before - self.entries.len()) as u64;
+                let start = view.decisions.len();
+                self.inner.on_event(ev, view);
+                if Self::disrupted(&view.decisions[start..], true) {
+                    self.flush();
+                }
+            }
+            SchedEvent::NodeUp => {
+                // Capacity came back (possibly a new machine): the key
+                // stream itself changed shape. Start over.
+                self.flush();
+                self.inner.on_event(ev, view);
+            }
+            SchedEvent::Departure(_) | SchedEvent::Tick => {
+                let start = view.decisions.len();
+                self.inner.on_event(ev, view);
+                if Self::disrupted(&view.decisions[start..], true) {
+                    self.flush();
+                }
+            }
+        }
+        self.stats.entries = self.entries.len() as u64;
+        self.stats.high_water = self.stats.high_water.max(self.stats.entries);
+    }
+
+    fn pending(&self) -> usize {
+        self.inner.pending()
+    }
+
+    fn running(&self) -> usize {
+        self.inner.running()
+    }
+
+    fn serving(&self) -> &[ReqId] {
+        self.inner.serving()
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        Some(self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::unit_request;
+    use crate::policy::Policy;
+    use crate::sched::{Phase, RigidScheduler};
+
+    #[test]
+    fn fingerprint_ignores_runtime_but_not_shape() {
+        let a = unit_request(0, 0.0, 10.0, 2, 3);
+        let mut b = unit_request(1, 5.0, 99.0, 2, 3);
+        b.priority = a.priority;
+        assert_eq!(
+            shape_fingerprint(&a),
+            shape_fingerprint(&b),
+            "runtime and arrival are not part of the shape"
+        );
+        let c = unit_request(2, 0.0, 10.0, 3, 3);
+        assert_ne!(shape_fingerprint(&a), shape_fingerprint(&c));
+        let mut d = unit_request(3, 0.0, 10.0, 2, 3);
+        d.priority = a.priority + 1.0;
+        assert_ne!(shape_fingerprint(&a), shape_fingerprint(&d));
+    }
+
+    #[test]
+    fn free_buckets_are_coarse_and_flag_down_machines() {
+        assert_eq!(free_bucket(32.0, 32.0), 8);
+        assert_eq!(free_bucket(31.0, 32.0), 7, "31/32 and 30/32 share a bucket");
+        assert_eq!(free_bucket(30.0, 32.0), 7);
+        assert_eq!(free_bucket(0.0, 32.0), 0);
+        assert_eq!(free_bucket(0.0, 0.0), 0xFF, "down machine");
+    }
+
+    #[test]
+    fn stats_json_round_trip_and_merge() {
+        let a = CacheStats {
+            hits: 10,
+            misses: 3,
+            validation_failures: 1,
+            invalidations: 2,
+            entries: 4,
+            high_water: 5,
+        };
+        assert_eq!(CacheStats::from_json(&a.to_json()), Some(a));
+        let mut m = a;
+        m.merge(&CacheStats {
+            hits: 1,
+            misses: 1,
+            validation_failures: 0,
+            invalidations: 0,
+            entries: 2,
+            high_water: 9,
+        });
+        assert_eq!(m.hits, 11);
+        assert_eq!(m.misses, 4);
+        assert_eq!(m.entries, 6);
+        assert_eq!(m.high_water, 9, "high-water merges by max");
+        assert_eq!(a.lookups(), 14);
+        assert!((a.hit_rate() - 10.0 / 14.0).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn interned_names_are_stable() {
+        let a = intern_name("cached:unit-test-name".to_string());
+        let b = intern_name("cached:unit-test-name".to_string());
+        assert!(std::ptr::eq(a, b), "same name interns to the same str");
+    }
+
+    /// Drive a CachingCore over a rigid inner by hand: two identical
+    /// quiescent admissions must produce one miss (captured) and one hit
+    /// (replayed), with identical decision streams.
+    #[test]
+    fn repeat_admission_hits_and_replays_identically() {
+        let mut view = ClusterView::empty(Cluster::units(8), Policy::FIFO);
+        let mut core = CachingCore::new(Box::new(RigidScheduler::new()));
+
+        let run_one = |core: &mut CachingCore, view: &mut ClusterView, t: f64| {
+            let id = view.alloc(unit_request(0, t, 1.0, 2, 1));
+            view.now = t;
+            view.state_mut(id).phase = Phase::Pending;
+            let decisions = core.decide(SchedEvent::Arrival(id), view);
+            // Complete it immediately so the next arrival sees the same
+            // quiescent cluster.
+            view.now = t + 1.0;
+            view.note_departed(id);
+            core.on_event(SchedEvent::Departure(id), view);
+            view.free(id);
+            view.drain_decisions();
+            (id, decisions)
+        };
+
+        let (id0, d0) = run_one(&mut core, &mut view, 0.0);
+        assert_eq!(core.stats().misses, 1);
+        assert_eq!(core.stats().hits, 0);
+        assert_eq!(core.stats().entries, 1, "quiescent admission captured");
+
+        let (id1, d1) = run_one(&mut core, &mut view, 10.0);
+        assert_eq!(core.stats().hits, 1, "identical repeat admission hits");
+        assert_eq!(core.stats().misses, 1);
+        assert_eq!(core.stats().validation_failures, 0);
+        // The replayed decisions are the captured ones, modulo the id
+        // (the slot was recycled, so both arrivals share it).
+        assert_eq!(id0.slot, id1.slot);
+        assert_eq!(d0.len(), d1.len());
+        for (a, b) in d0.iter().zip(&d1) {
+            match (a, b) {
+                (
+                    Decision::Admit { placement: pa, .. },
+                    Decision::Admit { placement: pb, .. },
+                ) => assert_eq!(pa, pb),
+                (Decision::SetGrant { g: ga, .. }, Decision::SetGrant { g: gb, .. }) => {
+                    assert_eq!(ga, gb)
+                }
+                other => panic!("decision streams diverged: {other:?}"),
+            }
+        }
+        assert_eq!(core.cache_stats(), Some(*core.stats()));
+        assert_eq!(core.name(), "cached:rigid");
+    }
+
+    /// NodeUp flushes; a machine-touching NodeDown drops the entry.
+    #[test]
+    fn churn_invalidates_entries() {
+        let mut view = ClusterView::empty(Cluster::uniform(2, Resources::new(4.0, 4.0)), Policy::FIFO);
+        let mut core = CachingCore::new(Box::new(RigidScheduler::new()));
+        let id = view.alloc(unit_request(0, 0.0, 5.0, 1, 0));
+        view.state_mut(id).phase = Phase::Pending;
+        core.on_event(SchedEvent::Arrival(id), &mut view);
+        view.drain_decisions();
+        assert_eq!(core.stats().entries, 1);
+        // The admission placed on machine 0; its death drops the entry.
+        let lost = view.cluster.fail_machine(0);
+        assert!(lost.cpu > 0.0);
+        view.fail_stats.node_failures += 1;
+        core.on_event(SchedEvent::NodeDown { machine: 0 }, &mut view);
+        view.drain_decisions();
+        assert_eq!(core.stats().entries, 0, "entry touching the dead machine dropped");
+        assert!(core.stats().invalidations >= 1);
+    }
+}

@@ -24,6 +24,7 @@
 #![warn(missing_docs)]
 
 pub mod backend;
+pub mod cache;
 pub mod core;
 pub mod policy;
 pub mod pool;

@@ -5,6 +5,8 @@
 //! ```text
 //! zoe sim     --apps 8000 --sched flexible --policy sjf [--seed 1]
 //!             [--seeds 10] [--threads 4]   # parallel multi-seed run
+//!             [--sched cached:flexible]    # decision-cached wrapper (any generation)
+//!             [--out FILE]                 # canonical result JSON (diff-stable)
 //!             [--mtbf S --mttr S [--fault-seed N]]   # synthetic machine churn
 //!             [--machine-events FILE.csv]            # recorded machine churn
 //!             [--checkpoint none|periodic:SECS|on-preempt] [--deadline-frac X]
@@ -229,7 +231,7 @@ fn print_fault_summary(res: &mut zoe::sim::SimResult) {
 
 fn cmd_sim(args: &Args) {
     let mut known = SIM_WORKLOAD_FLAGS.to_vec();
-    known.extend_from_slice(&["seeds", "threads"]);
+    known.extend_from_slice(&["seeds", "threads", "out"]);
     known.extend_from_slice(FAULT_FLAGS);
     args.warn_unknown(&known);
     let apps = args.u64_or("apps", 8000) as u32;
@@ -278,6 +280,19 @@ fn cmd_sim(args: &Args) {
     println!("queuing:    {}", res.queuing.boxplot());
     println!("cpu alloc:  {}", res.cpu_alloc.boxplot());
     print_fault_summary(&mut res);
+    if res.cache.lookups() > 0 {
+        println!("cache:      {}", res.cache);
+    }
+    // Canonical result text (wall time and cache counters zeroed): two
+    // runs that scheduled identically write identical files, so
+    // `cached:<inner>` vs bare `<inner>` can be diffed byte-for-byte.
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, res.canonical_json().to_string() + "\n").unwrap_or_else(|e| {
+            eprintln!("cannot write {out}: {e}");
+            std::process::exit(1);
+        });
+        println!("wrote canonical result: {out}");
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -389,6 +404,37 @@ fn trace_stats(args: &Args) {
     print_quantiles("B-E elastic", &mut st.batch_elastic);
     print_quantiles("B-R components", &mut st.rigid_components);
     print_quantiles("Int elastic", &mut st.interactive_elastic);
+    print_shape_histogram(&trace);
+}
+
+/// Template-shape histogram over the decision cache's request
+/// fingerprint (class + cores + elastic split + per-component demand +
+/// deadline bucket; runtime excluded). The repeat ratio is the fraction
+/// of apps whose shape was already seen — an upper bound on what a
+/// `cached:<sched>` run could hit on this trace.
+fn print_shape_histogram(trace: &TraceSource) {
+    let mut shapes: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+    for r in trace.requests() {
+        *shapes.entry(zoe::cache::shape_fingerprint(r)).or_insert(0) += 1;
+    }
+    let total: u64 = shapes.values().sum();
+    if total == 0 {
+        return;
+    }
+    let distinct = shapes.len() as u64;
+    println!(
+        "template shapes: {distinct} distinct across {total} apps — repeat ratio {:.1}% \
+         (ceiling on cached:<sched> admission hits)",
+        100.0 * (total - distinct) as f64 / total as f64
+    );
+    let mut top: Vec<(u64, u64)> = shapes.into_iter().collect();
+    top.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    for (fp, n) in top.iter().take(5) {
+        println!(
+            "  shape {fp:016x}: {n} apps ({:.1}%)",
+            100.0 * *n as f64 / total as f64
+        );
+    }
 }
 
 fn trace_replay(args: &Args) {

@@ -548,6 +548,49 @@ impl Cluster {
         self.used.sub(&p.res.scaled(released as f64));
     }
 
+    /// Re-apply a tracked placement **verbatim** — the decision cache's
+    /// replay path: consume exactly the capacity `p` records without
+    /// re-running the greedy search.
+    ///
+    /// Bitwise contract: called on a cluster whose free vectors equal
+    /// (bit-for-bit) the state the placement was originally computed
+    /// against, this leaves every free vector, `blk_max` entry and the
+    /// `used` aggregate bit-identical to what [`Cluster::place_up_to`]
+    /// would have produced. The scan cursor (`open_from`) is *not*
+    /// advanced — it only ever skips exhausted blocks, so a lower cursor
+    /// never changes placement results, only re-scans them.
+    ///
+    /// An empty placement is a no-op (the search paths' zero-placed
+    /// `used.add(+0.0)` is a bitwise no-op too: `used` is never `-0.0`).
+    pub fn apply_placement(&mut self, p: &Placement) {
+        if p.by_machine.is_empty() {
+            return;
+        }
+        let mut applied = 0u32;
+        // by_machine is machine-index-ordered (the greedy scan emits it
+        // that way), so block indices are non-decreasing: rebuilding on
+        // each block change + once at the end rebuilds every touched
+        // block exactly once, matching the search path. Out-of-order
+        // pairs would only cost redundant rebuilds, never correctness.
+        let mut cur_block = usize::MAX;
+        for &(mi, k) in &p.by_machine {
+            let b = mi as usize / BLOCK;
+            if b != cur_block {
+                if cur_block != usize::MAX {
+                    self.rebuild_block(cur_block);
+                }
+                cur_block = b;
+            }
+            let m = &mut self.machines[mi as usize];
+            m.free.sub(&p.res.scaled(k as f64));
+            applied += k;
+            debug_assert!(m.free.cpu >= -1e-6, "apply_placement over-committed cpu");
+            debug_assert!(m.free.ram_mb >= -1e-3, "apply_placement over-committed ram");
+        }
+        self.rebuild_block(cur_block);
+        self.used.add(&p.res.scaled(applied as f64));
+    }
+
     /// Snapshot of the free vectors (and used total), for trial
     /// placements.
     pub fn save(&self) -> Snapshot {
@@ -696,6 +739,44 @@ mod tests {
         assert_eq!(c.place_up_to(&unit, 7), 3);
         assert_eq!(c.place_up_to(&unit, 7), 0);
         assert_eq!(c.used().cpu, 10.0);
+    }
+
+    #[test]
+    fn apply_placement_mirrors_the_search_bitwise() {
+        // A multi-block cluster with odd sizes so the floats are not
+        // round: place, snapshot the searched result, rewind, re-apply
+        // the tracked placement, and demand bit-equality everywhere.
+        let mut c = Cluster::uniform(3 * BLOCK, Resources::new(3.7, 11.3));
+        let res = Resources::new(1.3, 2.9);
+        // Pre-consume unevenly so the placement spans machines/blocks.
+        let (pre, _) = c.place_up_to_tracked(&Resources::new(2.0, 2.0), (2 * BLOCK) as u32);
+        assert_eq!(pre as usize, 2 * BLOCK);
+        let pre_snap = c.save();
+        let (n, p) = c.place_up_to_tracked(&res, (BLOCK + 3) as u32);
+        assert!(n > 0);
+        let searched = c.save();
+        let searched_used = c.used();
+        // Rewind to the exact pre-placement bits, then replay verbatim.
+        c.restore(&pre_snap);
+        c.apply_placement(&p);
+        let replayed = c.save();
+        assert_eq!(c.used().cpu.to_bits(), searched_used.cpu.to_bits());
+        assert_eq!(c.used().ram_mb.to_bits(), searched_used.ram_mb.to_bits());
+        for (a, b) in searched.free.iter().zip(&replayed.free) {
+            assert_eq!(a.cpu.to_bits(), b.cpu.to_bits());
+            assert_eq!(a.ram_mb.to_bits(), b.ram_mb.to_bits());
+        }
+        // And the cluster still places correctly afterwards (blk_max
+        // stayed coherent): a full re-search finds the same capacity.
+        let before = c.fit_count(&res);
+        let placed = c.place_up_to(&res, u32::MAX);
+        assert_eq!(placed, before);
+        // Empty placements are no-ops.
+        let empty = Placement { res, by_machine: Vec::new() };
+        let snap = c.save();
+        c.apply_placement(&empty);
+        let after = c.save();
+        assert_eq!(snap.used.cpu.to_bits(), after.used.cpu.to_bits());
     }
 
     #[test]

@@ -35,8 +35,40 @@ use super::{
     has_spare_after_full_grants, insert_keyed, keyed_head, resort_keyed, ClusterView, Phase,
     SchedEvent, SchedulerCore,
 };
+use crate::cache::{placement_matches, res_bits, AdmissionTemplate, ClusterSig, ShapeSig};
 use crate::core::{ReqId, Resources};
 use crate::pool::Placement;
+
+/// Pre-arrival state of one serving-set member, captured for the
+/// decision cache. Replay releases the live members' elastic and
+/// re-derives the cascade from the captured grants, so every input that
+/// feeds those steps is validated bit-for-bit.
+struct FlexMember {
+    n_elastic: u32,
+    elastic_res_bits: (u64, u64),
+    grant: u32,
+    elastic: Placement,
+}
+
+/// Capture payload of one cacheable flexible admission: which arrival
+/// branch ran (`carve` = the §3.3 preemptive carve-out), the pre-arrival
+/// cluster/aggregate/member signatures, the searched core placement, the
+/// serving-order insertion point, and the full post-cascade grant
+/// sequence. Policy keys and the carve predicate are time-dependent, so
+/// they are *recomputed* live at replay and compared, never trusted.
+struct FlexTemplate {
+    carve: bool,
+    sig: ClusterSig,
+    shape: ShapeSig,
+    full_demand_bits: (u64, u64),
+    members: Vec<FlexMember>,
+    /// Serving-order insertion index of the new member.
+    pos: usize,
+    core: Placement,
+    /// Post-cascade (grant, elastic placement) per member, in the
+    /// post-insertion serving order.
+    grants: Vec<(u32, Placement)>,
+}
 
 /// W-line entry: (priority, policy key, submission seq, id) —
 /// descending priority, ascending key, ascending seq (the deterministic
@@ -228,6 +260,21 @@ impl FlexibleScheduler {
         };
         let r = &w.state(head).req;
         w.cluster.can_place_all(&r.core_res, r.n_core)
+    }
+
+    /// The §3.3 arrival-branch predicate, exactly as `on_arrival`
+    /// evaluates it (time-dependent through `pending_key`, hence
+    /// recomputed live at both capture and replay).
+    fn carve_predicate(&self, id: ReqId, w: &ClusterView) -> bool {
+        if !self.preemptive {
+            return false;
+        }
+        let Some(&tail) = self.s.last() else {
+            return false;
+        };
+        let tail_prio = (w.state(tail).req.priority, -w.state(tail).frozen_key);
+        let new_prio = (w.state(id).req.priority, -w.pending_key(id));
+        new_prio > tail_prio
     }
 
     fn insert_w_line(&mut self, id: ReqId, w: &ClusterView) {
@@ -434,6 +481,144 @@ impl SchedulerCore for FlexibleScheduler {
         } else {
             "flexible"
         }
+    }
+
+    fn on_arrival_captured(
+        &mut self,
+        id: ReqId,
+        w: &mut ClusterView,
+    ) -> Option<AdmissionTemplate> {
+        // Only the quiescent fast path is cacheable: both waiting lines
+        // empty and the arrival admitted immediately.
+        if w.naive || !self.l.is_empty() || !self.w_line.is_empty() {
+            self.on_event(SchedEvent::Arrival(id), w);
+            return None;
+        }
+        self.ensure_capacity(w);
+        let carve = self.carve_predicate(id, w);
+        let sig = ClusterSig::of(&w.cluster);
+        let shape = ShapeSig::of(&w.state(id).req);
+        let full_demand_bits = res_bits(&self.full_demand);
+        let members: Vec<FlexMember> = self
+            .s
+            .iter()
+            .map(|&x| {
+                let st = w.state(x);
+                FlexMember {
+                    n_elastic: st.req.n_elastic,
+                    elastic_res_bits: res_bits(&st.req.elastic_res),
+                    grant: st.grant,
+                    elastic: self.elastic[x.index()].clone(),
+                }
+            })
+            .collect();
+        self.on_arrival(id, w);
+        if !self.l.is_empty() || !self.w_line.is_empty() {
+            return None; // waited (or was parked on W): not cacheable
+        }
+        let Some(pos) = self.s.iter().position(|&x| x == id) else {
+            return None;
+        };
+        let core = self.cores[id.index()].clone();
+        let grants: Vec<(u32, Placement)> = self
+            .s
+            .iter()
+            .map(|&x| (w.state(x).grant, self.elastic[x.index()].clone()))
+            .collect();
+        let mut refs: Vec<&Placement> = vec![&core];
+        refs.extend(grants.iter().map(|(_, p)| p));
+        Some(AdmissionTemplate::new(
+            Box::new(FlexTemplate {
+                carve,
+                sig,
+                shape,
+                full_demand_bits,
+                members,
+                pos,
+                core: core.clone(),
+                grants: grants.clone(),
+            }),
+            &refs,
+        ))
+    }
+
+    fn replay_arrival(&mut self, id: ReqId, tpl: &AdmissionTemplate, w: &mut ClusterView) -> bool {
+        if w.naive {
+            return false;
+        }
+        let t = match tpl.payload.downcast_ref::<FlexTemplate>() {
+            Some(t) => t,
+            None => return false,
+        };
+        self.ensure_capacity(w);
+        if !self.l.is_empty()
+            || !self.w_line.is_empty()
+            || !t.shape.matches(&w.state(id).req)
+            || !t.sig.matches(&w.cluster)
+            || res_bits(&self.full_demand) != t.full_demand_bits
+            || self.s.len() != t.members.len()
+            || t.grants.len() != t.members.len() + 1
+        {
+            return false;
+        }
+        for (&x, m) in self.s.iter().zip(&t.members) {
+            let st = w.state(x);
+            if st.req.n_elastic != m.n_elastic
+                || res_bits(&st.req.elastic_res) != m.elastic_res_bits
+                || st.grant != m.grant
+                || !placement_matches(&self.elastic[x.index()], &m.elastic)
+            {
+                return false;
+            }
+        }
+        // Time-dependent inputs are recomputed through the live code
+        // paths and compared against the capture: the §3.3 branch choice
+        // and the serving-order insertion point.
+        if self.carve_predicate(id, w) != t.carve {
+            return false;
+        }
+        let key = w.pending_key(id);
+        let prio = w.state(id).req.priority;
+        let pos = self.s.partition_point(|&x| {
+            let sx = w.state(x);
+            (sx.req.priority, -sx.frozen_key) >= (prio, -key)
+        });
+        if pos != t.pos {
+            return false;
+        }
+        // Every bit the arrival path reads is identical to the capture,
+        // so it would retrace the same searches. Commit its effects with
+        // the searches replaced by verbatim placement application.
+        if !t.carve && w.policy.dynamic() {
+            // rebalance's resort over the lone-entry line (the carve
+            // branch's rebalance sees L already empty and skips it).
+            self.resort_stamp = w.now;
+        }
+        self.release_all_elastic(w);
+        self.cores[id.index()].clone_from(&t.core);
+        w.cluster.apply_placement(&t.core);
+        let now = w.now;
+        self.full_demand.add(&w.state(id).req.full_total());
+        {
+            let st = w.state_mut(id);
+            st.phase = Phase::Running;
+            st.admit_time = now;
+            st.frozen_key = key;
+        }
+        let placement = self.cores[id.index()].clone();
+        w.note_admitted(id, placement);
+        self.s.insert(pos, id);
+        // The cascade, grants replayed verbatim in post serving order.
+        for (i, &(g, ref p)) in t.grants.iter().enumerate() {
+            let x = self.s[i];
+            if w.state(x).req.n_elastic > 0 {
+                self.elastic[x.index()].clone_from(p);
+                w.cluster.apply_placement(p);
+            }
+            w.set_grant(x, g);
+        }
+        self.cascade_clean = true;
+        true
     }
 }
 

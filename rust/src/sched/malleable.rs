@@ -22,8 +22,26 @@
 use std::collections::VecDeque;
 
 use super::{insert_keyed, keyed_head, resort_keyed, ClusterView, Phase, SchedEvent, SchedulerCore};
+use crate::cache::{res_bits, AdmissionTemplate, ClusterSig, ShapeSig};
 use crate::core::ReqId;
 use crate::pool::Placement;
+
+/// Capture payload of one cacheable malleable admission. Since grants
+/// only grow and a quiescent arrival frees no capacity, the pre-members'
+/// top-up rounds place nothing (validated via the grant triples + exact
+/// free bits); only the new member's core placement, first elastic
+/// top-up and the cursor moves need replaying.
+struct MallTemplate {
+    sig: ClusterSig,
+    shape: ShapeSig,
+    /// Per serving-order member: (n_elastic, elastic_res bits, grant).
+    members: Vec<(u32, (u64, u64), u32)>,
+    pre_topup_from: usize,
+    core: Placement,
+    new_grant: u32,
+    new_elastic: Placement,
+    final_topup_from: usize,
+}
 
 /// The malleable comparator scheduler. See the module docs for the
 /// grants-only-grow model and the Fig. 1 behavior it reproduces.
@@ -259,5 +277,115 @@ impl SchedulerCore for MalleableScheduler {
 
     fn name(&self) -> &'static str {
         "malleable"
+    }
+
+    fn on_arrival_captured(
+        &mut self,
+        id: ReqId,
+        w: &mut ClusterView,
+    ) -> Option<AdmissionTemplate> {
+        if w.naive || !self.l.is_empty() {
+            self.on_event(SchedEvent::Arrival(id), w);
+            return None;
+        }
+        let sig = ClusterSig::of(&w.cluster);
+        let shape = ShapeSig::of(&w.state(id).req);
+        let members: Vec<(u32, (u64, u64), u32)> = self
+            .s
+            .iter()
+            .map(|&x| {
+                let st = w.state(x);
+                (st.req.n_elastic, res_bits(&st.req.elastic_res), st.grant)
+            })
+            .collect();
+        let pre_topup_from = self.topup_from;
+        self.on_arrival(id, w);
+        if !self.l.is_empty() || self.s.last() != Some(&id) {
+            return None; // waited instead of admitting: not cacheable
+        }
+        // Safety net: a quiescent arrival frees nothing, so the top-up
+        // rounds cannot have grown a pre-member's grant. If one moved
+        // anyway, the admission isn't the pure template we can replay.
+        let pre_members = &self.s[..self.s.len() - 1];
+        if pre_members.len() != members.len()
+            || pre_members
+                .iter()
+                .zip(&members)
+                .any(|(&x, &(_, _, g))| w.state(x).grant != g)
+        {
+            return None;
+        }
+        let core = self.cores[id.index()].clone();
+        let new_elastic = self.elastic[id.index()].clone();
+        Some(AdmissionTemplate::new(
+            Box::new(MallTemplate {
+                sig,
+                shape,
+                members,
+                pre_topup_from,
+                core: core.clone(),
+                new_grant: w.state(id).grant,
+                new_elastic: new_elastic.clone(),
+                final_topup_from: self.topup_from,
+            }),
+            &[&core, &new_elastic],
+        ))
+    }
+
+    fn replay_arrival(&mut self, id: ReqId, tpl: &AdmissionTemplate, w: &mut ClusterView) -> bool {
+        if w.naive {
+            return false;
+        }
+        let t = match tpl.payload.downcast_ref::<MallTemplate>() {
+            Some(t) => t,
+            None => return false,
+        };
+        self.ensure_capacity(w);
+        if !self.l.is_empty()
+            || !t.shape.matches(&w.state(id).req)
+            || !t.sig.matches(&w.cluster)
+            || self.s.len() != t.members.len()
+            || self.topup_from != t.pre_topup_from
+        {
+            return false;
+        }
+        for (&x, &(want, eres, grant)) in self.s.iter().zip(&t.members) {
+            let st = w.state(x);
+            if st.req.n_elastic != want
+                || res_bits(&st.req.elastic_res) != eres
+                || st.grant != grant
+            {
+                return false;
+            }
+        }
+        // Validated: with bit-identical free vectors and member grants,
+        // rebalance's pre-member top-ups place zero (consumption never
+        // enables a fit) and the searches retrace the captured
+        // placements. Commit the arrival path's effects directly.
+        if w.policy.dynamic() {
+            // rebalance's resort over the lone-entry line.
+            self.resort_stamp = w.now;
+        }
+        self.cores[id.index()].clone_from(&t.core);
+        w.cluster.apply_placement(&t.core);
+        let key = w.pending_key(id);
+        let now = w.now;
+        {
+            let st = w.state_mut(id);
+            st.phase = Phase::Running;
+            st.admit_time = now;
+            st.frozen_key = key;
+        }
+        let placement = self.cores[id.index()].clone();
+        w.note_admitted(id, placement);
+        self.s.push(id); // cascade order = admission order
+        if t.new_grant > 0 {
+            // The new member's first top-up round.
+            self.elastic[id.index()].clone_from(&t.new_elastic);
+            w.cluster.apply_placement(&t.new_elastic);
+            w.set_grant(id, t.new_grant);
+        }
+        self.topup_from = t.final_topup_from;
+        true
     }
 }

@@ -45,6 +45,7 @@ use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::sync::{Arc, OnceLock, RwLock};
 
+use crate::cache::{AdmissionTemplate, CacheStats};
 use crate::core::{ReqId, Request};
 use crate::policy::Policy;
 use crate::pool::{Cluster, Placement};
@@ -841,6 +842,48 @@ pub trait SchedulerCore {
         self.on_event(ev, view);
         view.decisions.split_off(start)
     }
+
+    /// Decision-cache capture hook (see [`crate::cache`]): handle
+    /// `Arrival(id)` **exactly** like
+    /// `on_event(SchedEvent::Arrival(id), view)` and, when the admission
+    /// is cacheable (quiescent waiting lines, immediate admission, not
+    /// in naive mode), additionally return a template that
+    /// [`SchedulerCore::replay_arrival`] can later commit bit-identically
+    /// against an equivalent view. Cores that don't participate keep
+    /// this default: delegate, capture nothing — `cached:<name>` then
+    /// never hits but stays correct.
+    fn on_arrival_captured(
+        &mut self,
+        id: ReqId,
+        view: &mut ClusterView,
+    ) -> Option<AdmissionTemplate> {
+        self.on_event(SchedEvent::Arrival(id), view);
+        None
+    }
+
+    /// Decision-cache replay hook: validate `tpl` against the live
+    /// `view` and, if every captured bit still holds, commit the cached
+    /// admission of `id` — producing exactly the state and
+    /// [`Decision`] stream the full arrival path would have — and
+    /// return `true`. On any mismatch return `false` **without touching
+    /// core or view** (the caller falls through to the full path). The
+    /// default never replays.
+    fn replay_arrival(
+        &mut self,
+        _id: ReqId,
+        _tpl: &AdmissionTemplate,
+        _view: &mut ClusterView,
+    ) -> bool {
+        false
+    }
+
+    /// Cache counters, for cores that cache admissions (the decision
+    /// cache's [`crate::cache::CachingCore`] wrapper); `None` for
+    /// everything else. The sim engine folds a `Some` into the run's
+    /// [`crate::sim::SimResult`].
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
 }
 
 /// Built-in scheduler families evaluated in the paper.
@@ -901,6 +944,12 @@ pub struct SchedSpec(Repr);
 enum Repr {
     Builtin(SchedKind),
     External(String),
+    Cached {
+        // The full canonical label ("cached:" + inner label), stored so
+        // `label()` can keep returning a borrowed &str.
+        label: String,
+        inner: Box<SchedSpec>,
+    },
 }
 
 impl SchedSpec {
@@ -919,11 +968,37 @@ impl SchedSpec {
         }
     }
 
-    /// The built-in generation this spec names, if it is one.
+    /// The spec of `inner` wrapped in the decision cache
+    /// ([`crate::cache::CachingCore`]); its label is
+    /// `cached:<inner label>`. Errors on an already-cached `inner`
+    /// (nesting caches is meaningless — the outer cache would memoize
+    /// the inner cache's bookkeeping).
+    pub fn cached(inner: SchedSpec) -> Result<Self, SchedSpecError> {
+        if matches!(inner.0, Repr::Cached { .. }) {
+            return Err(SchedSpecError {
+                msg: format!(
+                    "nested decision caches are not supported: 'cached:{}' \
+                     (use cached:<name> with <name> one of {})",
+                    inner.label(),
+                    sched_names()
+                ),
+            });
+        }
+        let label = format!("cached:{}", inner.label());
+        Ok(SchedSpec(Repr::Cached {
+            label,
+            inner: Box::new(inner),
+        }))
+    }
+
+    /// The built-in generation this spec names, if it is one. A
+    /// `cached:` wrapper is *not* its inner generation — callers that
+    /// branch on the built-in kind (the engine's naive mode, bench
+    /// labels) must treat cached specs as external.
     pub fn kind(&self) -> Option<SchedKind> {
         match &self.0 {
             Repr::Builtin(k) => Some(*k),
-            Repr::External(_) => None,
+            Repr::External(_) | Repr::Cached { .. } => None,
         }
     }
 
@@ -932,6 +1007,7 @@ impl SchedSpec {
         match &self.0 {
             Repr::Builtin(k) => k.label(),
             Repr::External(n) => n,
+            Repr::Cached { label, .. } => label,
         }
     }
 
@@ -960,6 +1036,9 @@ impl SchedSpec {
                     .unwrap_or_else(|| panic!("scheduler core '{name}' is not registered"));
                 factory()
             }
+            Repr::Cached { inner, .. } => {
+                Box::new(crate::cache::CachingCore::new(inner.build()))
+            }
         }
     }
 }
@@ -980,6 +1059,18 @@ impl std::str::FromStr for SchedSpec {
     type Err = SchedSpecError;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if let Some(rest) = s.strip_prefix("cached:") {
+            if rest.starts_with("cached:") {
+                return Err(SchedSpecError {
+                    msg: format!(
+                        "nested decision caches are not supported: '{s}' \
+                         (use cached:<name> with <name> one of {})",
+                        sched_names()
+                    ),
+                });
+            }
+            return SchedSpec::cached(rest.parse()?);
+        }
         for kind in SchedKind::ALL {
             if s == kind.label() {
                 return Ok(SchedSpec::builtin(kind));
@@ -1003,7 +1094,11 @@ pub struct SchedSpecError {
 impl SchedSpecError {
     fn unknown(name: &str) -> Self {
         SchedSpecError {
-            msg: format!("unknown scheduler '{name}' (valid: {})", sched_names()),
+            msg: format!(
+                "unknown scheduler '{name}' (valid: {}, or cached:<name> \
+                 for the decision-cached form)",
+                sched_names()
+            ),
         }
     }
 }
@@ -1027,8 +1122,8 @@ fn registry() -> &'static RwLock<BTreeMap<String, CoreFactory>> {
 /// master). Returns the registered spec.
 ///
 /// Names must be non-empty, free of whitespace, and must not shadow a
-/// built-in name or alias; re-registering a name errors (there is no
-/// unregister).
+/// built-in name, alias, or the `cached:` decision-cache prefix;
+/// re-registering a name errors (there is no unregister).
 pub fn register_core(name: &str, factory: CoreFactory) -> Result<SchedSpec, SchedSpecError> {
     if name.is_empty() || name.chars().any(char::is_whitespace) {
         return Err(SchedSpecError {
@@ -1039,6 +1134,14 @@ pub fn register_core(name: &str, factory: CoreFactory) -> Result<SchedSpec, Sche
     if builtin {
         return Err(SchedSpecError {
             msg: format!("scheduler name '{name}' shadows a built-in generation"),
+        });
+    }
+    if name.starts_with("cached:") {
+        return Err(SchedSpecError {
+            msg: format!(
+                "scheduler name '{name}' shadows the decision-cache prefix \
+                 (cached:<inner> wraps a registered core automatically)"
+            ),
         });
     }
     let mut reg = registry().write().unwrap();
@@ -1192,7 +1295,43 @@ mod tests {
         assert!(register_core("unit-test-noop", factory.clone()).is_err());
         assert!(register_core("flexible", factory.clone()).is_err());
         assert!(register_core("preemptive", factory.clone()).is_err());
-        assert!(register_core("bad name", factory).is_err());
+        assert!(register_core("bad name", factory.clone()).is_err());
+        assert!(register_core("cached:thing", factory).is_err());
+    }
+
+    #[test]
+    fn cached_specs_parse_round_trip_and_build() {
+        for kind in SchedKind::ALL {
+            let label = format!("cached:{}", kind.label());
+            let spec: SchedSpec = label.parse().unwrap();
+            assert_eq!(spec.label(), label);
+            assert_eq!(spec.kind(), None, "cached wrapper is not a built-in");
+            let back: SchedSpec = spec.label().parse().unwrap();
+            assert_eq!(back, spec);
+            let core = spec.build();
+            assert_eq!(core.name(), label);
+            assert_eq!(core.pending(), 0);
+            assert_eq!(core.running(), 0);
+            assert!(core.cache_stats().is_some(), "caching core reports stats");
+        }
+        // The alias normalizes inside the wrapper, like it does bare.
+        let spec: SchedSpec = "cached:preemptive".parse().unwrap();
+        assert_eq!(spec.label(), "cached:flexible+preempt");
+        let back: SchedSpec = spec.label().parse().unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn cached_spec_rejects_nesting_and_unknown_inner() {
+        let err = "cached:cached:flexible".parse::<SchedSpec>().unwrap_err();
+        assert!(err.to_string().contains("nested"), "{err}");
+        assert!(SchedSpec::cached("cached:flexible".parse().unwrap()).is_err());
+        let err = "cached:bogus".parse::<SchedSpec>().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bogus"), "{msg}");
+        assert!(msg.contains("flexible"), "lists valid names: {msg}");
+        let err = "cached:".parse::<SchedSpec>().unwrap_err();
+        assert!(err.to_string().contains("valid"), "{err}");
     }
 
     fn rid(slot: u32) -> crate::core::ReqId {

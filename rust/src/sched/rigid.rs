@@ -13,8 +13,20 @@
 use std::collections::VecDeque;
 
 use super::{insert_keyed, keyed_head, resort_keyed, ClusterView, Phase, SchedEvent, SchedulerCore};
+use crate::cache::{AdmissionTemplate, ClusterSig, ShapeSig};
 use crate::core::ReqId;
 use crate::pool::Placement;
+
+/// Capture payload of one cacheable rigid admission: the pre-arrival
+/// cluster/shape signatures and the searched placements. Everything else
+/// the arrival path computes (policy key, grant) is recomputed live at
+/// replay.
+struct RigidTemplate {
+    sig: ClusterSig,
+    shape: ShapeSig,
+    core: Placement,
+    elastic: Placement,
+}
 
 /// The rigid baseline scheduler. See the module docs for the all-or-
 /// nothing admission model it reproduces.
@@ -197,5 +209,78 @@ impl SchedulerCore for RigidScheduler {
 
     fn name(&self) -> &'static str {
         "rigid"
+    }
+
+    fn on_arrival_captured(
+        &mut self,
+        id: ReqId,
+        w: &mut ClusterView,
+    ) -> Option<AdmissionTemplate> {
+        // Only the quiescent fast path is cacheable: an empty waiting
+        // line whose arrival is admitted immediately. Anything else runs
+        // the normal path uncaptured.
+        if w.naive || !self.l.is_empty() {
+            self.on_event(SchedEvent::Arrival(id), w);
+            return None;
+        }
+        let sig = ClusterSig::of(&w.cluster);
+        let shape = ShapeSig::of(&w.state(id).req);
+        self.on_arrival(id, w);
+        if !self.l.is_empty() || self.s.last() != Some(&id) {
+            return None; // waited instead of admitting: not cacheable
+        }
+        let core = self.cores[id.index()].clone();
+        let elastic = self.elastic[id.index()].clone();
+        Some(AdmissionTemplate::new(
+            Box::new(RigidTemplate {
+                sig,
+                shape,
+                core: core.clone(),
+                elastic: elastic.clone(),
+            }),
+            &[&core, &elastic],
+        ))
+    }
+
+    fn replay_arrival(&mut self, id: ReqId, tpl: &AdmissionTemplate, w: &mut ClusterView) -> bool {
+        if w.naive {
+            return false;
+        }
+        let t = match tpl.payload.downcast_ref::<RigidTemplate>() {
+            Some(t) => t,
+            None => return false,
+        };
+        self.ensure_capacity(w);
+        if !self.l.is_empty() || !t.shape.matches(&w.state(id).req) || !t.sig.matches(&w.cluster) {
+            return false;
+        }
+        // Validated bit-for-bit: the greedy search is a pure function of
+        // the free vectors, so it would retrace the captured placements
+        // exactly. Commit the arrival path's effects with the searches
+        // replaced by verbatim placement application.
+        if w.policy.dynamic() {
+            // try_admit's resort over the lone-entry line.
+            self.resort_stamp = w.now;
+        }
+        self.cores[id.index()].clone_from(&t.core);
+        w.cluster.apply_placement(&t.core);
+        let full = w.state(id).req.n_elastic;
+        if full > 0 {
+            self.elastic[id.index()].clone_from(&t.elastic);
+            w.cluster.apply_placement(&t.elastic);
+        }
+        let key = w.pending_key(id);
+        let now = w.now;
+        {
+            let st = w.state_mut(id);
+            st.phase = Phase::Running;
+            st.admit_time = now;
+            st.frozen_key = key;
+        }
+        w.set_grant(id, full); // full allocation, always
+        let placement = self.cores[id.index()].clone();
+        w.note_admitted(id, placement);
+        self.s.push(id);
+        true
     }
 }

@@ -756,6 +756,9 @@ impl Simulation {
         for _ in 0..missed {
             self.metrics.record_deadline(false);
         }
+        if let Some(cs) = self.sched.cache_stats() {
+            self.metrics.set_cache_stats(cs);
+        }
         self.metrics.set_fail_stats(self.world.fail_stats);
         Ok(self.metrics.finalize(
             self.world.now,

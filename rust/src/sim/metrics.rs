@@ -22,6 +22,7 @@
 //! (serial or parallel) — the experiment driver always merges in seed
 //! order.
 
+use crate::cache::CacheStats;
 use crate::core::AppClass;
 use crate::sched::FailStats;
 use crate::util::json::{f64_from_json, f64_to_json, Json};
@@ -42,6 +43,7 @@ pub struct MetricsCollector {
     deadline_met: u64,
     deadline_missed: u64,
     fail: FailStats,
+    cache: CacheStats,
 }
 
 impl MetricsCollector {
@@ -65,6 +67,7 @@ impl MetricsCollector {
             deadline_met: 0,
             deadline_missed: 0,
             fail: FailStats::default(),
+            cache: CacheStats::default(),
         }
     }
 
@@ -97,6 +100,13 @@ impl MetricsCollector {
     /// (called once, just before [`MetricsCollector::finalize`]).
     pub fn set_fail_stats(&mut self, fail: FailStats) {
         self.fail = fail;
+    }
+
+    /// Install the decision-cache counters reported by the scheduler
+    /// core (called once, just before [`MetricsCollector::finalize`];
+    /// non-caching cores leave the all-zero default).
+    pub fn set_cache_stats(&mut self, cache: CacheStats) {
+        self.cache = cache;
     }
 
     /// Sample the piecewise-constant signals after an event at `now`.
@@ -153,6 +163,7 @@ impl MetricsCollector {
             deadline_met: self.deadline_met,
             deadline_missed: self.deadline_missed,
             fail: self.fail,
+            cache: self.cache,
         }
     }
 }
@@ -224,6 +235,12 @@ pub struct SimResult {
     /// Failure/requeue/checkpoint accounting (all zero in a churn-free
     /// run; see [`FailStats`]).
     pub fail: FailStats,
+    /// Decision-cache accounting (all zero unless a `cached:<inner>`
+    /// scheduler ran; see [`CacheStats`]). Zeroed in
+    /// [`SimResult::canonical_json`] — the cached and bare runs of the
+    /// same workload are bit-identical in every *scheduling* outcome,
+    /// and the canonical form states exactly that.
+    pub cache: CacheStats,
 }
 
 impl SimResult {
@@ -272,6 +289,7 @@ impl SimResult {
         self.deadline_met += other.deadline_met;
         self.deadline_missed += other.deadline_missed;
         self.fail.merge(&other.fail);
+        self.cache.merge(&other.cache);
     }
 
     /// Print the paper's standard box-plot panels for this run:
@@ -336,6 +354,9 @@ impl SimResult {
                 f.preserved_work, f.lost_work
             );
         }
+        if self.cache.lookups() > 0 {
+            println!("  decision cache: {}", self.cache);
+        }
     }
 
     /// Serialize **bit-exactly** for wire transport: every float goes
@@ -376,6 +397,7 @@ impl SimResult {
             ("deadline_met", Json::num(self.deadline_met as f64)),
             ("deadline_missed", Json::num(self.deadline_missed as f64)),
             ("fail", self.fail.to_json()),
+            ("cache", self.cache.to_json()),
         ])
     }
 
@@ -410,17 +432,25 @@ impl SimResult {
             deadline_met: v.get("deadline_met").as_u64()?,
             deadline_missed: v.get("deadline_missed").as_u64()?,
             fail: FailStats::from_json(v.get("fail"))?,
+            // Tolerant: results recorded before the decision cache
+            // existed simply carry zero cache counters.
+            cache: CacheStats::from_json(v.get("cache")).unwrap_or_default(),
         })
     }
 
-    /// [`SimResult::to_json`] with `wall_secs` zeroed — the one field
-    /// that is *not* a pure function of (plan, seed). Two runs of the
-    /// same cell are bit-identical in canonical form regardless of the
-    /// machine that computed them; the differential tests and the CI
-    /// smoke diff compare canonical text.
+    /// [`SimResult::to_json`] with `wall_secs` and the decision-cache
+    /// counters zeroed — the fields that are *not* pure functions of
+    /// (plan, seed): wall time depends on the machine, and cache
+    /// hit/miss counts depend on whether a `cached:` wrapper ran (while
+    /// every scheduling outcome, by the cache's bit-identity contract,
+    /// does not). Two runs of the same cell are bit-identical in
+    /// canonical form regardless of the machine or wrapper that computed
+    /// them; the differential tests and the CI smoke diff compare
+    /// canonical text.
     pub fn canonical_json(&self) -> Json {
         let mut c = self.clone();
         c.wall_secs = 0.0;
+        c.cache = CacheStats::default();
         c.to_json()
     }
 

@@ -1,0 +1,297 @@
+//! The decision cache's load-bearing guarantee: `cached:<inner>` is
+//! **bit-identical** to bare `<inner>` — same admissions, same grants,
+//! same sample bits — across all four generations, every Table-1 policy
+//! family exercised by the differential workloads, and under machine
+//! churn with checkpointed requeues. Plus the cache's own behavior:
+//! repeat-template workloads hit, stale entries fail validation and fall
+//! through, external cores with the default (no-capture) hooks never hit
+//! but stay correct, and the `cached:*` spec forms round-trip.
+
+use std::sync::Arc;
+
+use zoe::core::{unit_request, ReqId, Request, Resources};
+use zoe::policy::Policy;
+use zoe::pool::Cluster;
+use zoe::sched::{
+    register_core, CheckpointPolicy, ClusterView, SchedEvent, SchedKind, SchedSpec, SchedulerCore,
+};
+use zoe::sim::{simulate, FaultSpec, SimResult, Simulation};
+use zoe::workload::WorkloadSpec;
+
+const ALL_KINDS: [SchedKind; 4] = [
+    SchedKind::Rigid,
+    SchedKind::Malleable,
+    SchedKind::Flexible,
+    SchedKind::FlexiblePreemptive,
+];
+
+/// The `cached:` wrapper spec of a builtin kind.
+fn cached(kind: SchedKind) -> SchedSpec {
+    SchedSpec::cached(SchedSpec::builtin(kind)).expect("builtin kinds wrap")
+}
+
+/// Bit-identity: canonical text (wall time and cache counters zeroed)
+/// must match byte-for-byte, and the per-app sample sets must match
+/// bit-for-bit (the canonical text already encodes them, but comparing
+/// the raw f64 bits directly keeps the assertion independent of the
+/// serializer).
+fn assert_bit_identical(cached_run: &SimResult, bare: &SimResult, what: &str) {
+    assert_eq!(cached_run.completed, bare.completed, "{what}: completed");
+    assert_eq!(cached_run.unfinished, bare.unfinished, "{what}: unfinished");
+    assert_eq!(cached_run.events, bare.events, "{what}: event count");
+    assert_eq!(
+        cached_run.end_time.to_bits(),
+        bare.end_time.to_bits(),
+        "{what}: end_time {} vs {}",
+        cached_run.end_time,
+        bare.end_time
+    );
+    for (name, a, b) in [
+        ("turnaround", &cached_run.turnaround, &bare.turnaround),
+        ("queuing", &cached_run.queuing, &bare.queuing),
+        ("slowdown", &cached_run.slowdown, &bare.slowdown),
+    ] {
+        assert_eq!(a.len(), b.len(), "{what} {name}: sample counts");
+        for (i, (x, y)) in a.values().iter().zip(b.values()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} {name}[{i}]: {x} vs {y}");
+        }
+    }
+    assert_eq!(
+        cached_run.canonical_json().to_string(),
+        bare.canonical_json().to_string(),
+        "{what}: canonical result text diverged"
+    );
+}
+
+/// The headline differential: 20 seeds × all four kinds × two policy
+/// families on the paper's workload and cluster.
+#[test]
+fn cached_is_bit_identical_to_bare_paper_workload() {
+    let spec = WorkloadSpec::paper();
+    let mut lookups = 0u64;
+    for seed in 1..=20u64 {
+        let reqs = spec.generate(120, seed);
+        for kind in ALL_KINDS {
+            for pol in [Policy::FIFO, Policy::sjf()] {
+                let bare = simulate(reqs.clone(), Cluster::paper_sim(), pol, kind);
+                let wrapped = simulate(reqs.clone(), Cluster::paper_sim(), pol, cached(kind));
+                assert_bit_identical(
+                    &wrapped,
+                    &bare,
+                    &format!("paper seed={seed} {kind:?} {}", pol.label()),
+                );
+                assert_eq!(
+                    bare.cache,
+                    Default::default(),
+                    "bare runs carry no cache counters"
+                );
+                lookups += wrapped.cache.lookups();
+            }
+        }
+    }
+    assert!(lookups > 0, "the cache never engaged across 160 runs");
+}
+
+/// The same differential under seeded MTBF/MTTR churn with checkpointed
+/// requeues: node failures invalidate, preempt/requeue decisions flush,
+/// and what survives must still replay bit-identically.
+#[test]
+fn cached_is_bit_identical_to_bare_under_churn() {
+    let spec = WorkloadSpec::paper();
+    for seed in 1..=6u64 {
+        let reqs = spec.generate(120, seed);
+        for kind in ALL_KINDS {
+            let run = |sched: SchedSpec| {
+                Simulation::new(reqs.clone(), Cluster::paper_sim(), Policy::FIFO, sched)
+                    .with_faults(FaultSpec::new(150.0, 25.0, seed))
+                    .with_checkpoint(CheckpointPolicy::OnPreempt)
+                    .run()
+            };
+            let bare = run(SchedSpec::builtin(kind));
+            let wrapped = run(cached(kind));
+            assert_bit_identical(&wrapped, &bare, &format!("churn seed={seed} {kind:?}"));
+        }
+    }
+}
+
+/// A constructed stale entry: two arrivals of the same shape land on the
+/// same coarse key (31/32 and 30/32 free both bucket to 7) but different
+/// exact free bits. The entry must fail its bit-exact validation, fall
+/// through to the full path, and still end bit-identical to bare.
+#[test]
+fn stale_entry_fails_validation_and_falls_through() {
+    let reqs: Vec<Request> = vec![
+        // Occupies one unit until t=5.
+        unit_request(0, 0.0, 5.0, 1, 0),
+        // Shape S at free=31/32 (bucket 7, 1 running): captured.
+        unit_request(1, 1.0, 1.0, 1, 0),
+        // Occupies two units from t=6 on.
+        unit_request(2, 6.0, 100.0, 2, 0),
+        // Shape S again at free=30/32 (bucket 7, 1 running): same key,
+        // different free bits — validation must reject the entry.
+        unit_request(3, 7.0, 1.0, 1, 0),
+    ];
+    let bare = simulate(reqs.clone(), Cluster::units(32), Policy::FIFO, SchedKind::Rigid);
+    let wrapped = simulate(
+        reqs,
+        Cluster::units(32),
+        Policy::FIFO,
+        cached(SchedKind::Rigid),
+    );
+    assert_bit_identical(&wrapped, &bare, "stale entry");
+    assert!(
+        wrapped.cache.validation_failures >= 1,
+        "the colliding key never failed validation: {}",
+        wrapped.cache
+    );
+    assert_eq!(wrapped.cache.hits, 0, "nothing was replayable here");
+}
+
+/// A template-heavy workload — one shape, runtimes varied to prove the
+/// key excludes them, arrivals spaced so each admission is quiescent —
+/// must hit on every repeat and stay bit-identical.
+#[test]
+fn repeat_template_workload_hits_and_stays_identical() {
+    let reqs: Vec<Request> = (0..200u32)
+        .map(|i| unit_request(i, 10.0 * i as f64, 5.0 + (i % 5) as f64, 2, 0))
+        .collect();
+    for kind in ALL_KINDS {
+        let bare = simulate(reqs.clone(), Cluster::units(8), Policy::FIFO, kind);
+        let wrapped = simulate(reqs.clone(), Cluster::units(8), Policy::FIFO, cached(kind));
+        assert_bit_identical(&wrapped, &bare, &format!("template workload {kind:?}"));
+        assert!(
+            wrapped.cache.hits > 0,
+            "{kind:?}: repeat-template workload never hit: {}",
+            wrapped.cache
+        );
+        assert!(wrapped.cache.misses >= 1, "{kind:?}: the first instance must miss");
+        assert!(
+            wrapped.cache.hit_rate() > 0.9,
+            "{kind:?}: identical spaced arrivals should almost always hit: {}",
+            wrapped.cache
+        );
+    }
+}
+
+/// An externally registered core that keeps the trait's default hooks:
+/// `cached:<external>` must never hit (nothing is ever captured) and
+/// must still be bit-identical to the bare external core.
+#[test]
+fn external_core_with_default_hooks_never_hits_but_stays_correct() {
+    struct PlainFlex(Box<dyn SchedulerCore>);
+    impl SchedulerCore for PlainFlex {
+        fn on_event(&mut self, ev: SchedEvent, view: &mut ClusterView) {
+            self.0.on_event(ev, view)
+        }
+        fn pending(&self) -> usize {
+            self.0.pending()
+        }
+        fn running(&self) -> usize {
+            self.0.running()
+        }
+        fn serving(&self) -> &[ReqId] {
+            self.0.serving()
+        }
+        fn name(&self) -> &'static str {
+            "plainflex-dc"
+        }
+    }
+    let spec = register_core(
+        "plainflex-dc",
+        Arc::new(|| Box::new(PlainFlex(SchedSpec::builtin(SchedKind::Flexible).build()))),
+    )
+    .expect("fresh name registers");
+    let cached_spec: SchedSpec = "cached:plainflex-dc".parse().expect("wraps external cores");
+    assert_eq!(cached_spec.label(), "cached:plainflex-dc");
+
+    let reqs: Vec<Request> = (0..60u32)
+        .map(|i| unit_request(i, 10.0 * i as f64, 4.0, 1, 2))
+        .collect();
+    let bare = simulate(reqs.clone(), Cluster::units(8), Policy::FIFO, spec);
+    let wrapped = simulate(reqs, Cluster::units(8), Policy::FIFO, cached_spec);
+    assert_bit_identical(&wrapped, &bare, "external default hooks");
+    assert_eq!(
+        wrapped.cache.hits, 0,
+        "default hooks capture nothing, so nothing can hit"
+    );
+    assert!(wrapped.cache.misses > 0, "lookups still count as misses");
+}
+
+/// The `cached:*` spec forms round-trip through their labels and reject
+/// the invalid shapes with messages naming the valid forms.
+#[test]
+fn cached_spec_round_trips_and_rejects_invalid_forms() {
+    for kind in ALL_KINDS {
+        let spec = cached(kind);
+        assert_eq!(spec.kind(), None, "wrapped specs are not a bare kind");
+        let reparsed: SchedSpec = spec.label().parse().expect("label round-trips");
+        assert_eq!(reparsed.label(), spec.label());
+        assert_eq!(
+            spec.build().name(),
+            spec.label(),
+            "built core reports the wrapped name"
+        );
+    }
+    // The historical alias normalizes inside the wrapper too.
+    let alias: SchedSpec = "cached:preemptive".parse().unwrap();
+    assert_eq!(alias.label(), "cached:flexible+preempt");
+
+    let nested = "cached:cached:flexible".parse::<SchedSpec>();
+    let msg = nested.expect_err("nesting rejected").to_string();
+    assert!(msg.contains("nested"), "unexpected message: {msg}");
+
+    let unknown = "cached:bogus".parse::<SchedSpec>();
+    let msg = unknown.expect_err("unknown inner rejected").to_string();
+    assert!(
+        msg.contains("flexible") && msg.contains("rigid"),
+        "the error must list the valid inner names: {msg}"
+    );
+
+    let empty = "cached:".parse::<SchedSpec>();
+    assert!(empty.is_err(), "an empty inner name is invalid");
+}
+
+/// Merging per-seed results sums the cache counters (and maxes the
+/// high-water mark) while the merged canonical forms stay identical.
+#[test]
+fn merged_results_sum_cache_counters() {
+    let reqs_of = |seed: u64| {
+        (0..80u32)
+            .map(|i| unit_request(i + (seed as u32) * 1000, 10.0 * i as f64, 4.0, 2, 0))
+            .collect::<Vec<Request>>()
+    };
+    let mut merged_bare: Option<SimResult> = None;
+    let mut merged_cached: Option<SimResult> = None;
+    for seed in 1..=3u64 {
+        let bare = simulate(reqs_of(seed), Cluster::units(8), Policy::FIFO, SchedKind::Flexible);
+        let wrapped = simulate(
+            reqs_of(seed),
+            Cluster::units(8),
+            Policy::FIFO,
+            cached(SchedKind::Flexible),
+        );
+        assert_bit_identical(&wrapped, &bare, &format!("merge seed={seed}"));
+        match (&mut merged_bare, &mut merged_cached) {
+            (None, None) => {
+                merged_bare = Some(bare);
+                merged_cached = Some(wrapped);
+            }
+            (Some(b), Some(c)) => {
+                b.merge(&bare);
+                c.merge(&wrapped);
+            }
+            _ => unreachable!(),
+        }
+    }
+    let (b, c) = (merged_bare.unwrap(), merged_cached.unwrap());
+    assert_eq!(
+        b.canonical_json().to_string(),
+        c.canonical_json().to_string(),
+        "merged canonical forms diverged"
+    );
+    assert!(
+        c.cache.hits >= 3 * 70,
+        "per-seed hit counts must sum across the merge: {}",
+        c.cache
+    );
+}

@@ -74,6 +74,22 @@ def report_sweep(doc, label):
     return s
 
 
+def report_decision_cache(doc, label):
+    """Print the decision_cache point; returns it (or None)."""
+    c = doc.get("decision_cache") or {}
+    if not c or not c.get("apps"):
+        print(f"{label}: no decision_cache point")
+        return None
+    print(f"{label}: decision cache @ {int(c['apps'])} apps ({c.get('sched')}): "
+          f"bare {float(c.get('bare_events_per_s', 0.0)):.0f} -> "
+          f"cached {float(c.get('cached_events_per_s', 0.0)):.0f} events/s "
+          f"({float(c.get('speedup', 0.0)):.2f}x), "
+          f"hit rate {float(c.get('hit_rate', 0.0)):.1%}, "
+          f"hits={int(c.get('hits', 0))} misses={int(c.get('misses', 0))} "
+          f"validation_failures={int(c.get('validation_failures', 0))}")
+    return c
+
+
 def report_memory(doc, label):
     """Print the steady_state_memory point; returns it (or None)."""
     m = doc.get("steady_state_memory") or {}
@@ -113,6 +129,7 @@ def main():
     hw, best4 = report_parallel(new, "fresh")
     new_mem = report_memory(new, "fresh")
     new_sweep = report_sweep(new, "fresh")
+    new_cache = report_decision_cache(new, "fresh")
 
     # Structural slab invariant, hardware-independent: the request table
     # must never outgrow the active high-water mark. Checked even against
@@ -133,6 +150,23 @@ def main():
               f"releases={new_sweep.get('releases')} duplicates={new_sweep.get('duplicates')} "
               f"(lease lifecycle bug)")
         mem_failures.append(("distributed_sweep", "releases/duplicates on clean run"))
+
+    # Decision-cache structural invariants, hardware-independent: the
+    # bench workload is one repeated template on a churn-free cluster, so
+    # a cache that fails validation more often than it misses has a
+    # broken occupancy key (entries match, state doesn't), and a zero hit
+    # count means captures or replays stopped working. Checked even
+    # against a provisional baseline.
+    if new_cache:
+        if int(new_cache.get("validation_failures", 0)) > int(new_cache.get("misses", 0)):
+            print(f"FAIL: crash-free decision-cache bench recorded "
+                  f"validation_failures={new_cache.get('validation_failures')} > "
+                  f"misses={new_cache.get('misses')} (stale-prone cache key)")
+            mem_failures.append(("decision_cache", "validation_failures > misses"))
+        if int(new_cache.get("hits", 0)) <= 0:
+            print("FAIL: decision-cache bench recorded zero hits on the "
+                  "repeat-template workload (capture/replay path dead)")
+            mem_failures.append(("decision_cache", "zero hits"))
 
     if baseline.get("provisional"):
         print("baseline is provisional (no measured numbers committed); "
@@ -167,6 +201,21 @@ def main():
               f"{old_hw:.0f} -> {cur_hw:.0f} ({ratio:5.2f}x) {status}")
         if ratio > 1.0 + threshold:
             failures.append((("memory", "slab_high_water", int(new_mem["apps"])), old_hw, cur_hw))
+    # Decision-cache throughput regression: the cached events/s at the
+    # same app count rides the same threshold as the per-point table.
+    base_cache = baseline.get("decision_cache") or {}
+    if (new_cache and base_cache.get("apps") and
+            int(base_cache["apps"]) == int(new_cache["apps"]) and
+            float(base_cache.get("cached_events_per_s", 0)) > 0):
+        old_eps = float(base_cache["cached_events_per_s"])
+        cur_eps = float(new_cache["cached_events_per_s"])
+        ratio = cur_eps / old_eps
+        status = "ok" if ratio >= 1.0 - threshold else "REGRESSION"
+        print(f"  decision cache @ {int(new_cache['apps'])} apps: "
+              f"{old_eps:.0f} -> {cur_eps:.0f} events/s ({ratio:5.2f}x) {status}")
+        if ratio < 1.0 - threshold:
+            failures.append((("decision_cache", "cached_events_per_s",
+                              int(new_cache["apps"])), old_eps, cur_eps))
     for k, bp in sorted(base_points.items()):
         np_ = new_points.get(k)
         if np_ is None:

@@ -91,6 +91,19 @@ def main():
         return fail(f"{new_path}: crash-free distributed sweep recorded releases="
                     f"{sweep.get('releases')} duplicates={sweep.get('duplicates')} — "
                     "a lease-lifecycle bug is not a baseline")
+    cache = new.get("decision_cache") or {}
+    if not cache.get("apps"):
+        return fail(f"{new_path} has no decision_cache point — rerun the full bench "
+                    "(ZOE_BENCH_SWEEP_MAX must be > 0)")
+    if float(cache.get("cached_events_per_s", 0)) <= 0:
+        return fail(f"{new_path}: non-positive decision-cache throughput: {cache}")
+    if int(cache.get("hits", 0)) <= 0:
+        return fail(f"{new_path}: decision-cache bench recorded zero hits on the "
+                    "repeat-template workload — a dead cache is not a baseline")
+    if int(cache.get("validation_failures", 0)) > int(cache.get("misses", 0)):
+        return fail(f"{new_path}: decision cache failed validation more often than it "
+                    f"missed (validation_failures={cache.get('validation_failures')} > "
+                    f"misses={cache.get('misses')}) — a stale-prone key is not a baseline")
 
     if new_path != baseline_path:
         try:
@@ -120,6 +133,11 @@ def main():
     print(f"  distributed sweep: {float(sweep.get('events_per_s', 0.0)):.0f} events/s over "
           f"{int(sweep.get('workers', 0))} workers (releases={int(sweep.get('releases', 0))}, "
           f"duplicates={int(sweep.get('duplicates', 0))})")
+    print(f"  decision cache @ {int(cache['apps'])} apps: "
+          f"{float(cache.get('cached_events_per_s', 0.0)):.0f} events/s cached vs "
+          f"{float(cache.get('bare_events_per_s', 0.0)):.0f} bare "
+          f"({float(cache.get('speedup', 0.0)):.2f}x, hit rate "
+          f"{float(cache.get('hit_rate', 0.0)):.1%})")
     print("commit the updated baseline to arm the CI regression gate "
           "(check_bench_regression.py now enforces thresholds).")
     return 0
