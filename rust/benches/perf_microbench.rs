@@ -279,6 +279,58 @@ fn main() {
         });
     }
 
+    section("L3 — SLO attainment: slo@reject+reclaim:flexible + EDF vs flexible + FIFO (churn)");
+    // (apps, bare result, bare wall, slo result, slo wall)
+    let mut slo_point: Option<(u32, SimResult, f64, SimResult, f64)> = None;
+    if sweep_max == 0 {
+        println!("  (skipping SLO attainment: ZOE_BENCH_SWEEP_MAX={sweep_max})");
+    } else {
+        // Deadline-bearing paper workload under seeded churn: the
+        // deadline-aware stack (EDF ordering + infeasibility rejection +
+        // laxity reclaim) must strictly beat arrival order on deadlines
+        // met — `check_bench_regression.py` gates on it.
+        let apps = 4_000u32.min(sweep_max);
+        let mut dspec = spec.clone();
+        dspec.deadline_frac = 1.5;
+        let reqs = dspec.generate(apps, 1);
+        let run = |policy: Policy, sched: SchedSpec, reqs: Vec<Request>| {
+            let t0 = Instant::now();
+            let res = Simulation::new(reqs, Cluster::paper_sim(), policy, sched)
+                .with_faults(FaultSpec::new(600.0, 60.0, 1))
+                .with_checkpoint(CheckpointPolicy::OnPreempt)
+                .run();
+            let dt = t0.elapsed().as_secs_f64();
+            (res, dt)
+        };
+        let (bare, bare_dt) =
+            run(Policy::FIFO, SchedSpec::builtin(SchedKind::Flexible), reqs.clone());
+        let slo_spec: SchedSpec =
+            "slo@reject+reclaim:flexible".parse().expect("slo spec parses");
+        let (slo, slo_dt) = run(Policy::edf(), slo_spec, reqs);
+        let attainment = |r: &SimResult| {
+            r.deadline_met as f64 / ((r.deadline_met + r.deadline_missed) as f64).max(1e-12)
+        };
+        println!(
+            "  bare FIFO: met={:>5} missed={:>5} ({:>5.1}% attainment) — {:>10.0} events/s",
+            bare.deadline_met,
+            bare.deadline_missed,
+            100.0 * attainment(&bare),
+            bare.events as f64 / bare_dt.max(1e-12)
+        );
+        println!(
+            "  slo EDF:   met={:>5} missed={:>5} ({:>5.1}% attainment) — {:>10.0} events/s \
+             (rejections={}, reclaim_saves={}, moved={})",
+            slo.deadline_met,
+            slo.deadline_missed,
+            100.0 * attainment(&slo),
+            slo.events as f64 / slo_dt.max(1e-12),
+            slo.slo.rejections,
+            slo.slo.reclaim_saves,
+            slo.slo.donated_cores
+        );
+        slo_point = Some((apps, bare, bare_dt, slo, slo_dt));
+    }
+
     section("L3 — parallel multi-seed scaling (ExperimentPlan, 10-seed paper workload)");
     let par_apps: u32 = std::env::var("ZOE_BENCH_PAR_APPS")
         .ok()
@@ -489,6 +541,35 @@ fn main() {
                     (
                         "validation_failures",
                         Json::num(p.validation_failures as f64),
+                    ),
+                ]),
+            },
+        ),
+        (
+            "slo_attainment",
+            match &slo_point {
+                None => Json::Null,
+                Some((apps, bare, bare_dt, slo, slo_dt)) => Json::obj(vec![
+                    ("apps", Json::num(*apps as f64)),
+                    ("deadline_frac", Json::num(1.5)),
+                    ("bare_sched", Json::str("flexible")),
+                    ("bare_policy", Json::str("FIFO")),
+                    ("slo_sched", Json::str("slo@reject+reclaim:flexible")),
+                    ("slo_policy", Json::str("EDF")),
+                    ("bare_met", Json::num(bare.deadline_met as f64)),
+                    ("bare_missed", Json::num(bare.deadline_missed as f64)),
+                    ("slo_met", Json::num(slo.deadline_met as f64)),
+                    ("slo_missed", Json::num(slo.deadline_missed as f64)),
+                    ("rejections", Json::num(slo.slo.rejections as f64)),
+                    ("reclaim_saves", Json::num(slo.slo.reclaim_saves as f64)),
+                    ("donated_cores", Json::num(slo.slo.donated_cores as f64)),
+                    (
+                        "bare_events_per_s",
+                        Json::num(bare.events as f64 / bare_dt.max(1e-12)),
+                    ),
+                    (
+                        "slo_events_per_s",
+                        Json::num(slo.events as f64 / slo_dt.max(1e-12)),
                     ),
                 ]),
             },

@@ -436,7 +436,10 @@ impl CachingCore {
     /// being cached.
     fn disrupted(appended: &[Decision], reclaim_disrupts: bool) -> bool {
         appended.iter().any(|d| match d {
-            Decision::Preempt { .. } | Decision::Requeue { .. } => true,
+            // A rejection disrupts too: the inner SLO core's admission
+            // answer depends on time-to-deadline, which the coarse
+            // occupancy key cannot see.
+            Decision::Preempt { .. } | Decision::Requeue { .. } | Decision::Reject { .. } => true,
             Decision::Reclaim { .. } => reclaim_disrupts,
             _ => false,
         })
@@ -531,6 +534,22 @@ impl SchedulerCore for CachingCore {
 
     fn cache_stats(&self) -> Option<CacheStats> {
         Some(self.stats)
+    }
+
+    fn slo_stats(&self) -> Option<crate::slo::SloStats> {
+        // `cached:slo:<name>`: the SLO counters live in the wrapped
+        // core; surface them through the cache.
+        self.inner.slo_stats()
+    }
+
+    fn transfer_elastic(
+        &mut self,
+        donor: crate::core::ReqId,
+        to: crate::core::ReqId,
+        n: u32,
+        view: &mut ClusterView,
+    ) -> u32 {
+        self.inner.transfer_elastic(donor, to, n, view)
     }
 }
 

@@ -31,6 +31,7 @@ pub mod pool;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod slo;
 pub mod sweep;
 pub mod trace;
 pub mod util;

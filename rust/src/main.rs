@@ -10,6 +10,8 @@
 //!             [--mtbf S --mttr S [--fault-seed N]]   # synthetic machine churn
 //!             [--machine-events FILE.csv]            # recorded machine churn
 //!             [--checkpoint none|periodic:SECS|on-preempt] [--deadline-frac X]
+//!             [--sched slo:flexible --slo-admission reject|flag --slo-reclaim]
+//!             [--spread]                   # worst-fit core placement
 //! zoe trace   stats  --trace FILE [--format jsonl|csv]
 //! zoe trace   replay --trace FILE [--sched flexible] [--policy fifo]
 //!             [--stream]   # constant-memory replay of huge JSONL traces
@@ -37,6 +39,7 @@ use zoe::policy::{Discipline, Policy, SizeDim};
 use zoe::pool::Cluster;
 use zoe::runtime::PjrtRuntime;
 use zoe::sched::{CheckpointPolicy, FailStats, SchedSpec};
+use zoe::slo::SloAdmission;
 use zoe::sim::{ClusterEvents, ExperimentPlan, FaultSpec, Simulation};
 use zoe::sweep::{report_json, run_worker, SweepCoordinator, SweepOptions, WorkerOptions};
 use zoe::trace::{
@@ -78,8 +81,10 @@ fn parse_policy(s: &str) -> Policy {
         "hrrn" => Policy::hrrn(),
         "sjf2d" => Policy::new(Discipline::Sjf, SizeDim::D2),
         "sjf3d" => Policy::new(Discipline::Sjf, SizeDim::D3),
+        "edf" => Policy::edf(),
+        "llf" => Policy::llf(),
         other => {
-            eprintln!("unknown policy '{other}' (fifo|sjf|srpt|hrrn|sjf2d|sjf3d)");
+            eprintln!("unknown policy '{other}' (fifo|sjf|srpt|hrrn|sjf2d|sjf3d|edf|llf)");
             std::process::exit(2);
         }
     }
@@ -101,6 +106,7 @@ fn parse_sched(s: &str) -> SchedSpec {
 /// pair — shared by `zoe sim` and `zoe trace record`.
 const SIM_WORKLOAD_FLAGS: &[&str] = &[
     "apps", "seed", "sched", "policy", "interactive", "arrival-scale", "deadline-frac",
+    "slo-admission", "slo-reclaim",
 ];
 
 /// Failure-model flags shared by `zoe sim` and `zoe trace replay`.
@@ -108,10 +114,51 @@ const FAULT_FLAGS: &[&str] = &[
     "mtbf", "mttr", "fault-seed", "machine-events", "checkpoint", "cpu-scale", "ram-scale-mb",
 ];
 
+/// Graft the `--slo-admission reject|flag` / `--slo-reclaim` knobs onto
+/// a parsed scheduler spec. Either flag requires an `slo:`-form spec —
+/// the knobs configure the SLO wrapper, so on a bare generation they are
+/// a usage error (exit 2), not a silent no-op. Flag values compose with
+/// (and override) knobs already encoded in the label, so
+/// `--sched slo:flexible --slo-admission reject --slo-reclaim` equals
+/// `--sched slo@reject+reclaim:flexible`.
+fn apply_slo_flags(args: &Args, spec: SchedSpec) -> SchedSpec {
+    let admission = match args.get("slo-admission") {
+        None => None,
+        Some("reject") => Some(SloAdmission::Reject),
+        Some("flag") => Some(SloAdmission::Flag),
+        Some(other) => {
+            eprintln!("--slo-admission {other} is invalid (valid: reject | flag)");
+            std::process::exit(2);
+        }
+    };
+    let reclaim = args.has("slo-reclaim");
+    if admission.is_none() && !reclaim {
+        return spec;
+    }
+    let Some((cur_admission, cur_reclaim, inner)) = spec.slo_parts() else {
+        eprintln!(
+            "--slo-admission/--slo-reclaim need an SLO scheduler spec, got '{}' \
+             (valid: --sched slo:<name>, slo@reject:<name>, slo@flag:<name>, \
+             slo@reclaim:<name> or slo@reject+reclaim:<name>)",
+            spec.label()
+        );
+        std::process::exit(2);
+    };
+    SchedSpec::slo_with(
+        inner.clone(),
+        admission.unwrap_or(cur_admission),
+        reclaim || cur_reclaim,
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
+}
+
 /// Shared `--sched/--policy/--interactive/--arrival-scale/--deadline-frac`
 /// handling for the commands that run a synthetic workload.
 fn parse_sim_workload(args: &Args) -> (WorkloadSpec, Policy, SchedSpec) {
-    let kind = parse_sched(&args.get_or("sched", "flexible"));
+    let kind = apply_slo_flags(args, parse_sched(&args.get_or("sched", "flexible")));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
     let mut spec = if args.has("interactive") {
         WorkloadSpec::paper()
@@ -121,6 +168,16 @@ fn parse_sim_workload(args: &Args) -> (WorkloadSpec, Policy, SchedSpec) {
     spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
     if let Some(frac) = positive_f64_flag(args, "deadline-frac") {
         spec.deadline_frac = frac;
+    }
+    if kind.slo_parts().is_some() && spec.deadline_frac <= 0.0 {
+        // Not an error — knobs-off `slo:<name>` on a deadline-free
+        // workload is exactly the bit-identity configuration — but an
+        // SLO run with nothing to enforce is usually a forgotten flag.
+        eprintln!(
+            "warning: --sched {} without --deadline-frac: no application carries a \
+             deadline, so admission control and reclaim can never trigger",
+            kind.label()
+        );
     }
     (spec, policy, kind)
 }
@@ -231,7 +288,7 @@ fn print_fault_summary(res: &mut zoe::sim::SimResult) {
 
 fn cmd_sim(args: &Args) {
     let mut known = SIM_WORKLOAD_FLAGS.to_vec();
-    known.extend_from_slice(&["seeds", "threads", "out"]);
+    known.extend_from_slice(&["seeds", "threads", "out", "spread"]);
     known.extend_from_slice(FAULT_FLAGS);
     args.warn_unknown(&known);
     let apps = args.u64_or("apps", 8000) as u32;
@@ -255,7 +312,8 @@ fn cmd_sim(args: &Args) {
             .seeds(seed..seed + seeds)
             .config(policy, kind)
             .threads(threads)
-            .checkpoint(checkpoint);
+            .checkpoint(checkpoint)
+            .spread(args.has("spread"));
         if let Some(f) = faults {
             plan = plan.faults(f);
         }
@@ -267,6 +325,9 @@ fn cmd_sim(args: &Args) {
         let requests = spec.generate(apps, seed);
         let mut sim =
             Simulation::new(requests, cluster, policy, kind).with_checkpoint(checkpoint);
+        if args.has("spread") {
+            sim = sim.with_spread();
+        }
         if let Some(f) = faults {
             sim = sim.with_faults(f);
         }
@@ -404,7 +465,40 @@ fn trace_stats(args: &Args) {
     print_quantiles("B-E elastic", &mut st.batch_elastic);
     print_quantiles("B-R components", &mut st.rigid_components);
     print_quantiles("Int elastic", &mut st.interactive_elastic);
+    print_deadline_distribution(&trace);
     print_shape_histogram(&trace);
+}
+
+/// Deadline distribution: what fraction of the trace carries an SLO
+/// deadline, and how much laxity (deadline − isolated runtime) each
+/// deadlined app has at arrival. Negative laxity means the deadline is
+/// infeasible even running alone at full allocation — exactly the apps
+/// `slo@reject:` admission control would refuse.
+fn print_deadline_distribution(trace: &TraceSource) {
+    let total = trace.len();
+    let mut laxity = Samples::new();
+    let mut infeasible = 0u64;
+    for r in trace.requests() {
+        if r.deadline.is_finite() {
+            let l = r.deadline - r.runtime;
+            laxity.push(l);
+            if l < 0.0 {
+                infeasible += 1;
+            }
+        }
+    }
+    if laxity.is_empty() {
+        println!("deadlines: none recorded (SLO admission/reclaim would never trigger)");
+        return;
+    }
+    println!(
+        "deadlines: {}/{} apps ({:.1}%), {} infeasible at arrival (laxity < 0)",
+        laxity.len(),
+        total,
+        100.0 * laxity.len() as f64 / total.max(1) as f64,
+        infeasible
+    );
+    print_quantiles("laxity at arrival (s)", &mut laxity);
 }
 
 /// Template-shape histogram over the decision cache's request
@@ -440,11 +534,11 @@ fn print_shape_histogram(trace: &TraceSource) {
 fn trace_replay(args: &Args) {
     let mut extra = vec![
         "sched", "policy", "machines", "machine-cpu", "machine-ram-mb", "record", "stream",
-        "deadline-frac",
+        "deadline-frac", "slo-admission", "slo-reclaim", "spread",
     ];
     extra.extend_from_slice(FAULT_FLAGS);
     warn_trace_flags(args, &extra);
-    let kind = parse_sched(&args.get_or("sched", "flexible"));
+    let kind = apply_slo_flags(args, parse_sched(&args.get_or("sched", "flexible")));
     let policy = parse_policy(&args.get_or("policy", "fifo"));
     let (faults, mev) = parse_faults(args);
     let checkpoint = parse_checkpoint(args);
@@ -527,6 +621,9 @@ fn trace_replay(args: &Args) {
         }
     };
     sim = sim.with_checkpoint(checkpoint);
+    if args.has("spread") {
+        sim = sim.with_spread();
+    }
     if let Some(f) = faults {
         sim = sim.with_faults(f);
     }
@@ -716,7 +813,8 @@ fn build_sweep_plan(args: &Args) -> ExperimentPlan {
     plan = plan
         .cluster(cluster)
         .seeds(seed..seed + n_seeds)
-        .checkpoint(checkpoint);
+        .checkpoint(checkpoint)
+        .spread(args.has("spread"));
     if let Some(f) = faults {
         plan = plan.faults(f);
     }
@@ -806,6 +904,7 @@ fn cmd_sweep(args: &Args) {
     let mut known = vec![
         "listen", "serial", "require", "local-workers", "out", "apps", "seed", "seeds", "sched",
         "policy", "interactive", "arrival-scale", "deadline-frac", "trace", "format", "no-caps",
+        "spread",
     ];
     known.extend_from_slice(FAULT_FLAGS);
     args.warn_unknown(&known);

@@ -52,6 +52,14 @@ pub enum Discipline {
     Srpt,
     /// Highest response ratio next (anti-starvation; *descending*).
     Hrrn,
+    /// Earliest deadline first: absolute deadline (arrival + relative
+    /// deadline). Deadline-free requests sort last (key = +∞).
+    Edf,
+    /// Least laxity first: laxity = deadline − wait − remaining runtime,
+    /// i.e. how much queueing slack is left before the deadline becomes
+    /// unmeetable at the nominal (fully allocated) rate. Time-varying —
+    /// laxity shrinks as a request waits.
+    Llf,
 }
 
 /// A complete policy: discipline × size definition.
@@ -103,6 +111,16 @@ impl Policy {
         Policy::new(Discipline::Hrrn, SizeDim::D1)
     }
 
+    /// Earliest deadline first (SLO subsystem; not a Table-1 entry).
+    pub fn edf() -> Policy {
+        Policy::new(Discipline::Edf, SizeDim::D1)
+    }
+
+    /// Least laxity first (SLO subsystem; not a Table-1 entry).
+    pub fn llf() -> Policy {
+        Policy::new(Discipline::Llf, SizeDim::D1)
+    }
+
     /// The eight Table-1 entries, with their paper names.
     pub fn table1() -> Vec<(&'static str, Policy)> {
         use Discipline::*;
@@ -124,6 +142,8 @@ impl Policy {
     pub fn label(&self) -> String {
         let d = match self.discipline {
             Discipline::Fifo => return "FIFO".to_string(),
+            Discipline::Edf => return "EDF".to_string(),
+            Discipline::Llf => return "LLF".to_string(),
             Discipline::Sjf => "SJF",
             Discipline::Srpt => "SRPT",
             Discipline::Hrrn => "HRRN",
@@ -139,7 +159,10 @@ impl Policy {
 
     /// Is ordering time-varying (needs re-sorting as time passes)?
     pub fn dynamic(&self) -> bool {
-        matches!(self.discipline, Discipline::Srpt | Discipline::Hrrn)
+        matches!(
+            self.discipline,
+            Discipline::Srpt | Discipline::Hrrn | Discipline::Llf
+        )
     }
 
     /// Serialize structurally for wire transport (distributed sweeps).
@@ -152,6 +175,8 @@ impl Policy {
             Discipline::Sjf => "sjf",
             Discipline::Srpt => "srpt",
             Discipline::Hrrn => "hrrn",
+            Discipline::Edf => "edf",
+            Discipline::Llf => "llf",
         };
         let dim = match self.dim {
             SizeDim::D1 => 1,
@@ -176,6 +201,8 @@ impl Policy {
             "sjf" => Discipline::Sjf,
             "srpt" => Discipline::Srpt,
             "hrrn" => Discipline::Hrrn,
+            "edf" => Discipline::Edf,
+            "llf" => Discipline::Llf,
             _ => return None,
         };
         let dim = match v.get("dim").as_u64()? {
@@ -219,6 +246,11 @@ impl Policy {
             Discipline::Srpt => req.runtime * remaining_frac * weight,
             // HRRN serves the *highest* ratio next → negate for ascending.
             Discipline::Hrrn => -((1.0 + wait / req.runtime) * weight),
+            // Deadline disciplines ignore the size weight: urgency, not
+            // size, orders the queue. An infinite deadline stays +∞ in
+            // both, so deadline-free requests always sort last.
+            Discipline::Edf => req.arrival + req.deadline,
+            Discipline::Llf => req.deadline - wait - req.runtime * remaining_frac,
         }
     }
 
@@ -322,6 +354,46 @@ mod tests {
             .cores(1, Resources::new(0.5, 512.0))
             .build();
         assert!(p.key(&thin, 1.0, 0, 0.0) < p.key(&fat, 1.0, 0, 0.0));
+    }
+
+    #[test]
+    fn edf_orders_by_absolute_deadline() {
+        let p = Policy::edf();
+        // Earlier arrival + longer relative deadline vs later arrival +
+        // tight deadline: the absolute deadline decides.
+        let relaxed = RequestBuilder::new(0).arrival(0.0).runtime(10.0).deadline(100.0).build();
+        let urgent = RequestBuilder::new(1).arrival(50.0).runtime(10.0).deadline(20.0).build();
+        assert!(p.key(&urgent, 1.0, 0, 0.0) < p.key(&relaxed, 1.0, 0, 0.0));
+        // Deadline-free requests sort strictly last.
+        let free = unit_request(2, 0.0, 10.0, 1, 0);
+        assert!(p.key(&relaxed, 1.0, 0, 0.0) < p.key(&free, 1.0, 0, 0.0));
+        assert_eq!(p.key(&free, 1.0, 0, 0.0), f64::INFINITY);
+        assert!(!p.dynamic(), "EDF keys are static per request");
+        assert_eq!(p.label(), "EDF");
+    }
+
+    #[test]
+    fn llf_laxity_shrinks_with_wait_and_remaining_work() {
+        let p = Policy::llf();
+        let r = RequestBuilder::new(0).runtime(10.0).deadline(50.0).build();
+        // laxity = 50 − wait − 10·remaining_frac.
+        assert_eq!(p.key(&r, 1.0, 0, 0.0), 40.0);
+        // Waiting erodes laxity → key drops → urgency rises.
+        assert!(p.key(&r, 1.0, 0, 30.0) < p.key(&r, 1.0, 0, 0.0));
+        // Less remaining work → more laxity.
+        assert!(p.key(&r, 0.2, 0, 0.0) > p.key(&r, 1.0, 0, 0.0));
+        // Deadline-free requests keep infinite laxity.
+        let free = unit_request(1, 0.0, 10.0, 1, 0);
+        assert_eq!(p.key(&free, 1.0, 0, 1000.0), f64::INFINITY);
+        assert!(p.dynamic(), "LLF must re-sort as time passes");
+        assert_eq!(p.label(), "LLF");
+    }
+
+    #[test]
+    fn deadline_disciplines_round_trip_json() {
+        for p in [Policy::edf(), Policy::llf()] {
+            assert_eq!(Policy::from_json(&p.to_json()), Some(p));
+        }
     }
 
     #[test]

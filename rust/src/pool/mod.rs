@@ -513,6 +513,88 @@ impl Cluster {
         true
     }
 
+    /// Release the `n` **newest** components of `p` (from the tail of
+    /// its (machine, count) pairs — matching
+    /// [`crate::sched::Decision::Reclaim`]'s newest-first container
+    /// kill order) back to the cluster, shrinking the buffer in place.
+    /// Returns how many were actually released (bounded by `p.count()`).
+    /// The SLO reclaim path uses this to carve elastic capacity out of a
+    /// slack donor without disturbing its older components.
+    pub fn release_n(&mut self, p: &mut Placement, n: u32) -> u32 {
+        let mut left = n;
+        while left > 0 {
+            let Some(&(mi, k)) = p.by_machine.last() else { break };
+            let take = k.min(left);
+            let m = &mut self.machines[mi as usize];
+            m.free.add(&p.res.scaled(take as f64));
+            debug_assert!(m.free.cpu <= m.total.cpu + 1e-6);
+            let free = m.free;
+            self.index_grew(mi as usize, free);
+            left -= take;
+            if take == k {
+                p.by_machine.pop();
+            } else {
+                p.by_machine.last_mut().unwrap().1 = k - take;
+            }
+        }
+        let released = n - left;
+        self.used.sub(&p.res.scaled(released as f64));
+        released
+    }
+
+    /// All-or-nothing **spread** (worst-fit) placement into a
+    /// caller-owned buffer: each of the `n` components goes to the
+    /// machine with the most free capacity that still fits it (most
+    /// free CPU, then most free RAM, then lowest index), instead of the
+    /// greedy first-fit pack. Spreading an app's core components across
+    /// machines cuts the failure blast radius — one dead machine
+    /// requeues fewer apps — at the cost of locality and of an O(n·m)
+    /// scan (spread is an opt-in placement mode, not the hot default).
+    /// On failure the buffer is left cleared and nothing is consumed.
+    pub fn place_all_spread_into(&mut self, res: &Resources, n: u32, p: &mut Placement) -> bool {
+        p.res = *res;
+        p.by_machine.clear();
+        if !self.can_place_all(res, n) {
+            return false;
+        }
+        // `can_place_all` ⇒ every pick below succeeds: placing one
+        // component on a fitting machine lowers total fit count by
+        // exactly one, regardless of which machine is chosen.
+        for _ in 0..n {
+            let mut best = usize::MAX;
+            for (i, m) in self.machines.iter().enumerate() {
+                if m.fit_count(res) == 0 {
+                    continue;
+                }
+                if best == usize::MAX {
+                    best = i;
+                    continue;
+                }
+                let b = &self.machines[best];
+                if m.free.cpu > b.free.cpu + 1e-9
+                    || ((m.free.cpu - b.free.cpu).abs() <= 1e-9
+                        && m.free.ram_mb > b.free.ram_mb + 1e-9)
+                {
+                    best = i;
+                }
+            }
+            debug_assert!(best != usize::MAX, "can_place_all lied");
+            self.machines[best].free.sub(res);
+            match p.by_machine.iter_mut().find(|&&mut (mi, _)| mi as usize == best) {
+                Some(&mut (_, ref mut k)) => *k += 1,
+                None => p.by_machine.push((best as u32, 1)),
+            }
+        }
+        // Canonical machine-index order (release/apply paths expect
+        // non-decreasing block indices for single-pass rebuilds).
+        p.by_machine.sort_unstable_by_key(|&(mi, _)| mi);
+        for &(mi, _) in &p.by_machine {
+            self.rebuild_block(mi as usize / BLOCK);
+        }
+        self.used.add(&res.scaled(n as f64));
+        true
+    }
+
     /// Release a tracked placement held in a reusable buffer and clear
     /// the buffer (the schedulers' "absent" state). No-op when empty.
     pub fn release_and_clear(&mut self, p: &mut Placement) {
@@ -958,6 +1040,53 @@ mod tests {
         // Grow re-opens capacity.
         assert!(c.try_resize_machine(0, Resources::new(16.0, 1e6)));
         assert_eq!(c.fit_count(&unit), 13);
+    }
+
+    #[test]
+    fn release_n_frees_newest_first() {
+        let mut c = Cluster::uniform(3, Resources::new(4.0, 1e6));
+        let unit = Resources::new(1.0, 1.0);
+        let (placed, mut p) = c.place_up_to_tracked(&unit, 10);
+        assert_eq!(placed, 10); // (0,4) (1,4) (2,2)
+        // Release 3: takes machine 2's pair (2) then one from machine 1.
+        assert_eq!(c.release_n(&mut p, 3), 3);
+        assert_eq!(p.count(), 7);
+        assert_eq!(p.by_machine, vec![(0, 4), (1, 3)]);
+        assert_eq!(c.used().cpu, 7.0);
+        assert_eq!(c.machines()[2].free.cpu, 4.0);
+        // Over-asking releases only what is held.
+        assert_eq!(c.release_n(&mut p, 100), 7);
+        assert!(p.is_empty());
+        assert_eq!(c.used().cpu, 0.0);
+        // The index stayed coherent.
+        assert_eq!(c.fit_count(&unit), 12);
+    }
+
+    #[test]
+    fn spread_placement_distributes_worst_fit() {
+        let mut c = Cluster::uniform(3, Resources::new(4.0, 1e6));
+        let unit = Resources::new(1.0, 1.0);
+        let mut p = Placement::default();
+        // First-fit would pack all 3 on machine 0; worst-fit rotates.
+        assert!(c.place_all_spread_into(&unit, 3, &mut p));
+        assert_eq!(p.by_machine, vec![(0, 1), (1, 1), (2, 1)]);
+        // A second spread app lands one per machine again.
+        let mut q = Placement::default();
+        assert!(c.place_all_spread_into(&unit, 3, &mut q));
+        assert_eq!(q.by_machine, vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(c.used().cpu, 6.0);
+        // Infeasible stays transactional.
+        let mut r = Placement::default();
+        assert!(!c.place_all_spread_into(&Resources::new(5.0, 1.0), 1, &mut r));
+        assert!(r.is_empty());
+        assert_eq!(c.used().cpu, 6.0);
+        // Release round-trips and the index stays coherent with a
+        // brute-force scan.
+        c.release(&p);
+        c.release(&q);
+        let brute: u64 = c.machines().iter().map(|m| m.fit_count(&unit) as u64).sum();
+        assert_eq!(c.fit_count(&unit), brute);
+        assert_eq!(brute, 12);
     }
 
     #[test]

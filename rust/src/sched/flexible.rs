@@ -157,12 +157,20 @@ impl FlexibleScheduler {
 
     /// Try to place `id`'s cores in the current free capacity (elastic
     /// must have been released first). Records the placement on success.
+    /// In spread mode ([`ClusterView::spread`]) cores go worst-fit
+    /// across machines instead of first-fit packed.
     fn try_place_cores(&mut self, id: ReqId, w: &mut ClusterView) -> bool {
         let (res, n) = {
             let r = &w.state(id).req;
             (r.core_res, r.n_core)
         };
-        if w.cluster.place_all_into(&res, n, &mut self.cores[id.index()]) {
+        let placed = if w.spread {
+            w.cluster
+                .place_all_spread_into(&res, n, &mut self.cores[id.index()])
+        } else {
+            w.cluster.place_all_into(&res, n, &mut self.cores[id.index()])
+        };
+        if placed {
             self.cascade_clean = false; // core state changed
             true
         } else {
@@ -481,6 +489,56 @@ impl SchedulerCore for FlexibleScheduler {
         } else {
             "flexible"
         }
+    }
+
+    /// SLO elastic transfer: free the donor's newest elastic components
+    /// and re-place them for the receiver, keeping the private placement
+    /// buffers (and therefore the next cascade's starting state)
+    /// consistent. The grant changes go through [`ClusterView::set_grant`]
+    /// — donor shrink ([`super::Decision::Reclaim`]) before receiver
+    /// top-up ([`super::Decision::SetGrant`]), the capacity-freeing-first
+    /// order container executors require. A later cascade may redo this
+    /// split from scratch; that is fine — the [`crate::slo::SloCore`]
+    /// re-applies transfers whenever the cascade's own decisions show an
+    /// app slipping again.
+    fn transfer_elastic(&mut self, donor: ReqId, to: ReqId, n: u32, w: &mut ClusterView) -> u32 {
+        if n == 0 || donor == to {
+            return 0;
+        }
+        self.ensure_capacity(w);
+        if !self.s.contains(&donor) || !self.s.contains(&to) {
+            return 0;
+        }
+        let d_grant = w.state(donor).grant;
+        let (to_res, headroom, to_grant) = {
+            let st = w.state(to);
+            (st.req.elastic_res, st.req.n_elastic - st.grant, st.grant)
+        };
+        let want = n.min(d_grant).min(headroom);
+        if want == 0 {
+            return 0;
+        }
+        let freed = w.cluster.release_n(&mut self.elastic[donor.index()], want);
+        let placed = w
+            .cluster
+            .place_up_to_append(&to_res, freed, &mut self.elastic[to.index()]);
+        let mut back = 0;
+        if placed < freed {
+            // The receiver's component shape didn't fit everything the
+            // donor freed: give the remainder back to the donor.
+            let d_res = w.state(donor).req.elastic_res;
+            back = w
+                .cluster
+                .place_up_to_append(&d_res, freed - placed, &mut self.elastic[donor.index()]);
+        }
+        // Donor lost (freed - back); anything neither re-placed nor
+        // given back simply lowers its grant (pathological 2-D shapes).
+        w.set_grant(donor, d_grant - (freed - back));
+        if placed > 0 {
+            w.set_grant(to, to_grant + placed);
+        }
+        self.cascade_clean = false; // elastic moved outside the cascade
+        placed
     }
 
     fn on_arrival_captured(

@@ -138,12 +138,20 @@ impl MalleableScheduler {
                 }
             }
             // Admission: head's cores in the leftover (no reclaim).
+            // Cores honor [`ClusterView::spread`] (worst-fit), like the
+            // other generations.
             let Some(head) = keyed_head(&self.l) else { break };
             let (res, n) = {
                 let r = &w.state(head).req;
                 (r.core_res, r.n_core)
             };
-            if w.cluster.place_all_into(&res, n, &mut self.cores[head.index()]) {
+            let cores_ok = if w.spread {
+                w.cluster
+                    .place_all_spread_into(&res, n, &mut self.cores[head.index()])
+            } else {
+                w.cluster.place_all_into(&res, n, &mut self.cores[head.index()])
+            };
+            if cores_ok {
                 self.l.pop_front();
                 self.admit(head, w);
                 // Loop: the new member's elastic tops up next round.

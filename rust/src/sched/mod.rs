@@ -226,6 +226,18 @@ pub enum Decision {
         /// The failed-and-requeued request.
         id: ReqId,
     },
+    /// `id` was **rejected at admission**: the SLO subsystem
+    /// ([`crate::slo::SloCore`] in reject mode) determined its deadline
+    /// cannot be met even at full elastic allocation, and the request
+    /// never enters any waiting line or serving set. The emitting core
+    /// marks the request terminal ([`ClusterView::note_rejected`]);
+    /// executors retire the slot without counting a completion — the
+    /// engine frees it like a departure, the master tears the app down
+    /// without starting containers.
+    Reject {
+        /// The rejected request.
+        id: ReqId,
+    },
 }
 
 impl Decision {
@@ -236,7 +248,8 @@ impl Decision {
             | Decision::SetGrant { id, .. }
             | Decision::Reclaim { id, .. }
             | Decision::Preempt { id }
-            | Decision::Requeue { id } => id,
+            | Decision::Requeue { id }
+            | Decision::Reject { id } => id,
         }
     }
 }
@@ -621,6 +634,12 @@ pub struct ClusterView {
     /// rebalance releases and re-places everything (the seed algorithm,
     /// kept for differential testing).
     pub naive: bool,
+    /// Spread placement mode: cores place **core components** worst-fit
+    /// across machines ([`crate::pool::Cluster::place_all_spread_into`])
+    /// instead of first-fit packed, trading locality for a smaller
+    /// failure blast radius (fewer apps requeued per dead machine).
+    /// Default `false` — the packed placement the paper models.
+    pub spread: bool,
     /// How much accrued work survives a failure-requeue (default:
     /// [`CheckpointPolicy::None`]). Consulted only by
     /// [`ClusterView::note_requeued`] — irrelevant while nothing fails.
@@ -652,6 +671,7 @@ impl ClusterView {
             now: 0.0,
             decisions: Vec::new(),
             naive: false,
+            spread: false,
             checkpoint: CheckpointPolicy::None,
             fail_stats: FailStats::default(),
         }
@@ -784,6 +804,19 @@ impl ClusterView {
         self.decisions.push(Decision::Requeue { id });
     }
 
+    /// Record an admission-control rejection (see [`Decision::Reject`]):
+    /// the pending request becomes terminal — [`Phase::Done`], grant 0,
+    /// rate 0, no work ever accrued — and the decision is emitted for the
+    /// executors, which retire the slot without counting a completion.
+    pub fn note_rejected(&mut self, id: ReqId) {
+        let st = self.table.state_mut(id);
+        debug_assert_eq!(st.phase, Phase::Pending);
+        st.phase = Phase::Done;
+        st.grant = 0;
+        st.cur_rate = 0.0;
+        self.decisions.push(Decision::Reject { id });
+    }
+
     /// Policy key for a *pending* request at the current time.
     pub fn pending_key(&self, id: ReqId) -> f64 {
         let st = self.state(id);
@@ -884,6 +917,36 @@ pub trait SchedulerCore {
     fn cache_stats(&self) -> Option<CacheStats> {
         None
     }
+
+    /// SLO counters, for cores that enforce deadlines (the
+    /// [`crate::slo::SloCore`] wrapper); `None` for everything else. The
+    /// sim engine folds a `Some` into the run's
+    /// [`crate::sim::SimResult`], exactly like
+    /// [`SchedulerCore::cache_stats`].
+    fn slo_stats(&self) -> Option<crate::slo::SloStats> {
+        None
+    }
+
+    /// SLO elastic-transfer hook (laxity-driven reclaim, see
+    /// [`crate::slo::SloCore`]): move up to `n` granted elastic
+    /// components from `donor` to `to`, both members of this core's
+    /// serving set, updating the core's *private placement buffers* so
+    /// the virtual assignment stays consistent, and emitting the
+    /// [`Decision::Reclaim`]/[`Decision::SetGrant`] pair through
+    /// [`ClusterView::set_grant`]. Returns how many components actually
+    /// moved (bounded by the donor's grant, the receiver's remaining
+    /// elastic demand, and what physically re-places). The default moves
+    /// nothing — wrapping a core without this hook leaves `slo:<name>`
+    /// correct, just without reclaim.
+    fn transfer_elastic(
+        &mut self,
+        _donor: ReqId,
+        _to: ReqId,
+        _n: u32,
+        _view: &mut ClusterView,
+    ) -> u32 {
+        0
+    }
 }
 
 /// Built-in scheduler families evaluated in the paper.
@@ -950,6 +1013,22 @@ enum Repr {
         label: String,
         inner: Box<SchedSpec>,
     },
+    Slo {
+        // Full canonical label: "slo:" + inner label with knobs off,
+        // "slo@<opts>:" + inner label otherwise (opts encode the knobs so
+        // the label round-trips and travels over distributed sweeps).
+        label: String,
+        inner: Box<SchedSpec>,
+        admission: crate::slo::SloAdmission,
+        reclaim: bool,
+    },
+}
+
+/// The valid `slo` spec forms, quoted by every slo-related parse error.
+fn slo_forms() -> String {
+    "slo:<name>, slo@reject:<name>, slo@flag:<name>, slo@reclaim:<name> or \
+     slo@reject+reclaim:<name>"
+        .to_string()
 }
 
 impl SchedSpec {
@@ -991,14 +1070,94 @@ impl SchedSpec {
         }))
     }
 
+    /// The spec of `inner` wrapped in the SLO core
+    /// ([`crate::slo::SloCore`]) with both knobs off — pure delegation,
+    /// bit-identical to bare `inner`; its label is `slo:<inner label>`.
+    /// Errors on an already-wrapped `inner` (nested SLO wrappers are
+    /// meaningless) and on a cached `inner` (the SLO core must see raw
+    /// arrivals to reject them *before* any cache capture — wrap the
+    /// other way: `cached:slo:<name>`).
+    pub fn slo(inner: SchedSpec) -> Result<Self, SchedSpecError> {
+        Self::slo_with(inner, crate::slo::SloAdmission::Off, false)
+    }
+
+    /// [`SchedSpec::slo`] with the knobs chosen: `admission` turns on
+    /// infeasibility admission control (reject or flagged-admit) and
+    /// `reclaim` turns on laxity-driven elastic reclaim. The knobs are
+    /// encoded in the label (`slo@reject+reclaim:<inner>`), so the spec
+    /// still round-trips through its string form.
+    pub fn slo_with(
+        inner: SchedSpec,
+        admission: crate::slo::SloAdmission,
+        reclaim: bool,
+    ) -> Result<Self, SchedSpecError> {
+        use crate::slo::SloAdmission;
+        if matches!(inner.0, Repr::Slo { .. }) {
+            return Err(SchedSpecError {
+                msg: format!(
+                    "nested SLO wrappers are not supported: 'slo:{}' \
+                     (valid forms: {})",
+                    inner.label(),
+                    slo_forms()
+                ),
+            });
+        }
+        if matches!(inner.0, Repr::Cached { .. }) {
+            return Err(SchedSpecError {
+                msg: format!(
+                    "'slo:{}' is not supported: the SLO core must see raw \
+                     arrivals before any cache capture — wrap the other way \
+                     round, 'cached:slo:<name>' (valid forms: {})",
+                    inner.label(),
+                    slo_forms()
+                ),
+            });
+        }
+        let mut opts: Vec<&str> = Vec::new();
+        match admission {
+            SloAdmission::Off => {}
+            SloAdmission::Reject => opts.push("reject"),
+            SloAdmission::Flag => opts.push("flag"),
+        }
+        if reclaim {
+            opts.push("reclaim");
+        }
+        let label = if opts.is_empty() {
+            format!("slo:{}", inner.label())
+        } else {
+            format!("slo@{}:{}", opts.join("+"), inner.label())
+        };
+        Ok(SchedSpec(Repr::Slo {
+            label,
+            inner: Box::new(inner),
+            admission,
+            reclaim,
+        }))
+    }
+
+    /// For an SLO spec, its `(admission, reclaim, inner)` triple; `None`
+    /// for every other spec. The CLI uses this to graft `--slo-admission`
+    /// / `--slo-reclaim` flags onto a parsed `slo:<name>` spec.
+    pub fn slo_parts(&self) -> Option<(crate::slo::SloAdmission, bool, &SchedSpec)> {
+        match &self.0 {
+            Repr::Slo {
+                inner,
+                admission,
+                reclaim,
+                ..
+            } => Some((*admission, *reclaim, inner)),
+            _ => None,
+        }
+    }
+
     /// The built-in generation this spec names, if it is one. A
-    /// `cached:` wrapper is *not* its inner generation — callers that
-    /// branch on the built-in kind (the engine's naive mode, bench
-    /// labels) must treat cached specs as external.
+    /// `cached:` or `slo:` wrapper is *not* its inner generation —
+    /// callers that branch on the built-in kind (the engine's naive
+    /// mode, bench labels) must treat wrapped specs as external.
     pub fn kind(&self) -> Option<SchedKind> {
         match &self.0 {
             Repr::Builtin(k) => Some(*k),
-            Repr::External(_) | Repr::Cached { .. } => None,
+            Repr::External(_) | Repr::Cached { .. } | Repr::Slo { .. } => None,
         }
     }
 
@@ -1008,6 +1167,7 @@ impl SchedSpec {
             Repr::Builtin(k) => k.label(),
             Repr::External(n) => n,
             Repr::Cached { label, .. } => label,
+            Repr::Slo { label, .. } => label,
         }
     }
 
@@ -1039,6 +1199,16 @@ impl SchedSpec {
             Repr::Cached { inner, .. } => {
                 Box::new(crate::cache::CachingCore::new(inner.build()))
             }
+            Repr::Slo {
+                inner,
+                admission,
+                reclaim,
+                ..
+            } => Box::new(
+                crate::slo::SloCore::new(inner.build())
+                    .with_admission(*admission)
+                    .with_reclaim(*reclaim),
+            ),
         }
     }
 }
@@ -1071,6 +1241,68 @@ impl std::str::FromStr for SchedSpec {
             }
             return SchedSpec::cached(rest.parse()?);
         }
+        if s.starts_with("slo:") || s.starts_with("slo@") {
+            use crate::slo::SloAdmission;
+            let (opts, rest) = if let Some(rest) = s.strip_prefix("slo:") {
+                (None, rest)
+            } else {
+                match s["slo@".len()..].split_once(':') {
+                    Some((o, r)) => (Some(o), r),
+                    None => {
+                        return Err(SchedSpecError {
+                            msg: format!(
+                                "'{s}' names no inner scheduler (valid forms: {})",
+                                slo_forms()
+                            ),
+                        })
+                    }
+                }
+            };
+            if rest.starts_with("slo:") || rest.starts_with("slo@") {
+                return Err(SchedSpecError {
+                    msg: format!(
+                        "nested SLO wrappers are not supported: '{s}' \
+                         (valid forms: {})",
+                        slo_forms()
+                    ),
+                });
+            }
+            if rest.starts_with("cached:") {
+                return Err(SchedSpecError {
+                    msg: format!(
+                        "'{s}' is not supported: the SLO core must see raw \
+                         arrivals before any cache capture — wrap the other \
+                         way round, 'cached:slo:<name>' (valid forms: {})",
+                        slo_forms()
+                    ),
+                });
+            }
+            let mut admission = SloAdmission::Off;
+            let mut reclaim = false;
+            if let Some(opts) = opts {
+                for tok in opts.split('+') {
+                    match tok {
+                        "reject" if admission == SloAdmission::Off => {
+                            admission = SloAdmission::Reject
+                        }
+                        "flag" if admission == SloAdmission::Off => {
+                            admission = SloAdmission::Flag
+                        }
+                        "reclaim" if !reclaim => reclaim = true,
+                        _ => {
+                            return Err(SchedSpecError {
+                                msg: format!(
+                                    "bad SLO option '{tok}' in '{s}' \
+                                     (valid forms: {})",
+                                    slo_forms()
+                                ),
+                            })
+                        }
+                    }
+                }
+            }
+            return SchedSpec::slo_with(rest.parse()?, admission, reclaim);
+        }
         for kind in SchedKind::ALL {
             if s == kind.label() {
                 return Ok(SchedSpec::builtin(kind));
@@ -1096,7 +1328,8 @@ impl SchedSpecError {
         SchedSpecError {
             msg: format!(
                 "unknown scheduler '{name}' (valid: {}, or cached:<name> \
-                 for the decision-cached form)",
+                 for the decision-cached form, or slo:<name> / \
+                 slo@reject|flag[+reclaim]:<name> for the SLO-wrapped form)",
                 sched_names()
             ),
         }
@@ -1141,6 +1374,14 @@ pub fn register_core(name: &str, factory: CoreFactory) -> Result<SchedSpec, Sche
             msg: format!(
                 "scheduler name '{name}' shadows the decision-cache prefix \
                  (cached:<inner> wraps a registered core automatically)"
+            ),
+        });
+    }
+    if name.starts_with("slo:") || name.starts_with("slo@") {
+        return Err(SchedSpecError {
+            msg: format!(
+                "scheduler name '{name}' shadows the SLO-wrapper prefix \
+                 (slo:<inner> wraps a registered core automatically)"
             ),
         });
     }
@@ -1332,6 +1573,91 @@ mod tests {
         assert!(msg.contains("flexible"), "lists valid names: {msg}");
         let err = "cached:".parse::<SchedSpec>().unwrap_err();
         assert!(err.to_string().contains("valid"), "{err}");
+    }
+
+    #[test]
+    fn slo_specs_parse_round_trip_and_build() {
+        use crate::slo::SloAdmission;
+        for kind in SchedKind::ALL {
+            for opts in ["", "@reject", "@flag", "@reclaim", "@reject+reclaim", "@flag+reclaim"]
+            {
+                let label = if opts.is_empty() {
+                    format!("slo:{}", kind.label())
+                } else {
+                    format!("slo{opts}:{}", kind.label())
+                };
+                let spec: SchedSpec = label.parse().unwrap();
+                assert_eq!(spec.label(), label);
+                assert_eq!(spec.kind(), None, "slo wrapper is not a built-in");
+                let back: SchedSpec = spec.label().parse().unwrap();
+                assert_eq!(back, spec);
+                let core = spec.build();
+                assert_eq!(core.name(), label);
+                assert_eq!(core.pending(), 0);
+                assert_eq!(core.running(), 0);
+                assert!(core.slo_stats().is_some(), "slo core reports stats");
+            }
+        }
+        // Knob accessors round-trip through slo_parts.
+        let spec: SchedSpec = "slo@reject+reclaim:flexible".parse().unwrap();
+        let (adm, reclaim, inner) = spec.slo_parts().unwrap();
+        assert_eq!(adm, SloAdmission::Reject);
+        assert!(reclaim);
+        assert_eq!(inner.kind(), Some(SchedKind::Flexible));
+        assert_eq!("flexible".parse::<SchedSpec>().unwrap().slo_parts(), None);
+        // The alias normalizes inside the wrapper, like it does bare.
+        let spec: SchedSpec = "slo:preemptive".parse().unwrap();
+        assert_eq!(spec.label(), "slo:flexible+preempt");
+        // cached:slo:<name> (cache outermost) is the supported composition.
+        let spec: SchedSpec = "cached:slo:flexible".parse().unwrap();
+        assert_eq!(spec.label(), "cached:slo:flexible");
+        let back: SchedSpec = spec.label().parse().unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn slo_spec_rejects_nesting_bad_options_and_unknown_inner() {
+        // Nested SLO wrappers and slo-around-cache exit with the valid forms.
+        let err = "slo:slo:flexible".parse::<SchedSpec>().unwrap_err();
+        assert!(err.to_string().contains("nested"), "{err}");
+        assert!(err.to_string().contains("slo@reject"), "lists forms: {err}");
+        let err = "slo:cached:flexible".parse::<SchedSpec>().unwrap_err();
+        assert!(err.to_string().contains("cached:slo"), "{err}");
+        assert!(SchedSpec::slo("slo:flexible".parse().unwrap()).is_err());
+        assert!(SchedSpec::slo("cached:flexible".parse().unwrap()).is_err());
+        // Unknown inner lists valid names; bad/duplicate options list forms.
+        let err = "slo:bogus".parse::<SchedSpec>().unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err}");
+        assert!(err.to_string().contains("flexible"), "{err}");
+        for bad in [
+            "slo@bogus:flexible",
+            "slo@:flexible",
+            "slo@reject+flag:flexible",
+            "slo@reclaim+reclaim:flexible",
+            "slo@reject",
+        ] {
+            let err = bad.parse::<SchedSpec>().unwrap_err();
+            assert!(err.to_string().contains("valid forms"), "{bad}: {err}");
+        }
+        // The prefix cannot be shadowed by an external registration.
+        let factory: CoreFactory =
+            Arc::new(|| Box::new(RigidScheduler::new()) as Box<dyn SchedulerCore>);
+        assert!(register_core("slo:thing", factory.clone()).is_err());
+        assert!(register_core("slo@reject:thing", factory).is_err());
+    }
+
+    #[test]
+    fn note_rejected_marks_terminal_and_emits_decision() {
+        let req = crate::core::unit_request(0, 0.0, 10.0, 1, 2);
+        let mut v = ClusterView::new(vec![req], Cluster::units(10), Policy::FIFO);
+        v.state_mut(rid(0)).phase = Phase::Pending;
+        v.note_rejected(rid(0));
+        let st = v.state(rid(0));
+        assert_eq!(st.phase, Phase::Done);
+        assert_eq!(st.grant, 0);
+        assert_eq!(st.cur_rate, 0.0);
+        assert_eq!(st.done_work, 0.0, "a rejected request never ran");
+        assert_eq!(v.drain_decisions(), vec![Decision::Reject { id: rid(0) }]);
     }
 
     fn rid(slot: u32) -> crate::core::ReqId {

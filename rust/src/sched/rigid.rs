@@ -90,16 +90,23 @@ impl RigidScheduler {
     }
 
     /// Place the complete demand of `head` — all cores and all elastic
-    /// components — all-or-nothing, into the reusable buffers.
+    /// components — all-or-nothing, into the reusable buffers. Core
+    /// components honor [`ClusterView::spread`] (worst-fit across
+    /// machines); elastic stays first-fit — cores are the components
+    /// whose loss requeues the app.
     fn place_full(&mut self, w: &mut ClusterView, head: ReqId) -> bool {
         let (cres, cn, eres, en) = {
             let r = &w.state(head).req;
             (r.core_res, r.n_core, r.elastic_res, r.n_elastic)
         };
-        if !w
-            .cluster
-            .place_all_into(&cres, cn, &mut self.cores[head.index()])
-        {
+        let cores_ok = if w.spread {
+            w.cluster
+                .place_all_spread_into(&cres, cn, &mut self.cores[head.index()])
+        } else {
+            w.cluster
+                .place_all_into(&cres, cn, &mut self.cores[head.index()])
+        };
+        if !cores_ok {
             return false;
         }
         if en > 0

@@ -315,6 +315,15 @@ impl Simulation {
         self
     }
 
+    /// Enable spread (worst-fit) placement for core components: each
+    /// core component goes to the machine with the most free capacity,
+    /// shrinking the blast radius of a single machine failure. Default
+    /// off — packed first-fit, the paper's placement model.
+    pub fn with_spread(mut self) -> Self {
+        self.world.spread = true;
+        self
+    }
+
     /// Disable slot recycling: the request table keeps every record and
     /// grows densely — the *retained dense* reference (pre-slab
     /// behavior) the differential tests compare the slab against.
@@ -385,6 +394,12 @@ impl Simulation {
             for d in &decisions {
                 match *d {
                     Decision::Preempt { id } => self.retire_prediction(id),
+                    // An admission-control rejection is terminal: the
+                    // request never ran, so there is no prediction to
+                    // retire — but route it through the same path so a
+                    // hypothetical core that rejects a *running* request
+                    // (preempt-then-reject) stays consistent.
+                    Decision::Reject { id } => self.retire_prediction(id),
                     Decision::Requeue { id } => {
                         // A requeued request may already be Running again:
                         // the same scheduling action that requeued it can
@@ -656,7 +671,27 @@ impl Simulation {
                     rec.record_changes(t, "arrival", src_seq, &self.world);
                 }
                 self.apply_decisions();
+                // A request whose phase is already terminal right after
+                // its own arrival event was rejected by admission control
+                // ([`Decision::Reject`]): it never entered the waiting
+                // line, counts as a definite SLO miss when it carried a
+                // deadline, and its slot is recycled immediately — it is
+                // neither completed nor unfinished.
+                let rejected = self
+                    .world
+                    .get(id)
+                    .map_or(false, |st| st.phase == Phase::Done);
+                if rejected {
+                    let deadline = self.world.state(id).req.deadline;
+                    if deadline.is_finite() {
+                        self.metrics.record_deadline(false);
+                    }
+                    self.metrics.record_rejection();
+                }
                 self.sample_metrics();
+                if rejected {
+                    self.world.free(id);
+                }
                 self.maybe_compact();
                 self.pull_arrival()?;
             } else {
@@ -758,6 +793,9 @@ impl Simulation {
         }
         if let Some(cs) = self.sched.cache_stats() {
             self.metrics.set_cache_stats(cs);
+        }
+        if let Some(ss) = self.sched.slo_stats() {
+            self.metrics.set_slo_stats(ss);
         }
         self.metrics.set_fail_stats(self.world.fail_stats);
         Ok(self.metrics.finalize(

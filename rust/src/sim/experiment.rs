@@ -95,6 +95,7 @@ pub struct ExperimentPlan {
     faults: Option<FaultSpec>,
     machine_events: Option<Arc<Vec<ClusterEvent>>>,
     checkpoint: CheckpointPolicy,
+    spread: bool,
 }
 
 /// Where a plan's requests come from: a seeded synthetic workload, a
@@ -161,6 +162,7 @@ impl ExperimentPlan {
             faults: None,
             machine_events: None,
             checkpoint: CheckpointPolicy::None,
+            spread: false,
         }
     }
 
@@ -224,6 +226,13 @@ impl ExperimentPlan {
         self
     }
 
+    /// Enable spread (worst-fit) core placement in every grid cell
+    /// (default: off — packed first-fit, the paper's placement model).
+    pub fn spread(mut self, on: bool) -> Self {
+        self.spread = on;
+        self
+    }
+
     /// The per-task churn source, if any: a fresh cursor over the shared
     /// machine-events list, else a fresh synthetic generator (same spec
     /// ⇒ same timeline in every cell).
@@ -262,6 +271,9 @@ impl ExperimentPlan {
         }
         if self.checkpoint != CheckpointPolicy::None {
             sim = sim.with_checkpoint(self.checkpoint);
+        }
+        if self.spread {
+            sim = sim.with_spread();
         }
         sim
     }
@@ -399,6 +411,7 @@ impl ExperimentPlan {
                 },
             ),
             ("checkpoint", self.checkpoint.to_json()),
+            ("spread", Json::Bool(self.spread)),
         ])
     }
 
@@ -533,6 +546,9 @@ impl ExperimentPlan {
             faults,
             machine_events,
             checkpoint,
+            // Tolerant: plans serialized before spread placement existed
+            // simply run packed (the historical behavior).
+            spread: v.get("spread").as_bool().unwrap_or(false),
         })
     }
 

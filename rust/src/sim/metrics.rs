@@ -25,6 +25,7 @@
 use crate::cache::CacheStats;
 use crate::core::AppClass;
 use crate::sched::FailStats;
+use crate::slo::SloStats;
 use crate::util::json::{f64_from_json, f64_to_json, Json};
 use crate::util::stats::{BoxPlot, Samples, TimeWeighted};
 
@@ -42,8 +43,10 @@ pub struct MetricsCollector {
     completed: u64,
     deadline_met: u64,
     deadline_missed: u64,
+    rejected: u64,
     fail: FailStats,
     cache: CacheStats,
+    slo: SloStats,
 }
 
 impl MetricsCollector {
@@ -66,8 +69,10 @@ impl MetricsCollector {
             completed: 0,
             deadline_met: 0,
             deadline_missed: 0,
+            rejected: 0,
             fail: FailStats::default(),
             cache: CacheStats::default(),
+            slo: SloStats::default(),
         }
     }
 
@@ -107,6 +112,21 @@ impl MetricsCollector {
     /// non-caching cores leave the all-zero default).
     pub fn set_cache_stats(&mut self, cache: CacheStats) {
         self.cache = cache;
+    }
+
+    /// Record one application refused by admission control — it never
+    /// entered the waiting line and counts as neither completed nor
+    /// unfinished (its deadline miss, if any, is recorded separately via
+    /// [`MetricsCollector::record_deadline`]).
+    pub fn record_rejection(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// Install the SLO subsystem counters reported by the scheduler core
+    /// (called once, just before [`MetricsCollector::finalize`]; cores
+    /// without an `slo:` wrapper leave the all-zero default).
+    pub fn set_slo_stats(&mut self, slo: SloStats) {
+        self.slo = slo;
     }
 
     /// Sample the piecewise-constant signals after an event at `now`.
@@ -162,8 +182,10 @@ impl MetricsCollector {
             slot_capacity,
             deadline_met: self.deadline_met,
             deadline_missed: self.deadline_missed,
+            rejected: self.rejected,
             fail: self.fail,
             cache: self.cache,
+            slo: self.slo,
         }
     }
 }
@@ -230,8 +252,13 @@ pub struct SimResult {
     pub deadline_met: u64,
     /// Applications with a finite deadline that completed late — plus
     /// unfinished applications whose deadline had already passed at the
-    /// end of the run. Deadline-free applications count in neither.
+    /// end of the run, plus applications rejected at admission.
+    /// Deadline-free applications count in neither bucket.
     pub deadline_missed: u64,
+    /// Applications refused by admission control (`slo@reject:` — see
+    /// [`crate::slo`]): never admitted, never run, counted as neither
+    /// completed nor unfinished.
+    pub rejected: u64,
     /// Failure/requeue/checkpoint accounting (all zero in a churn-free
     /// run; see [`FailStats`]).
     pub fail: FailStats,
@@ -241,6 +268,12 @@ pub struct SimResult {
     /// same workload are bit-identical in every *scheduling* outcome,
     /// and the canonical form states exactly that.
     pub cache: CacheStats,
+    /// SLO subsystem accounting (all zero unless an `slo:` wrapper with
+    /// admission or reclaim enabled ran; see [`SloStats`]). Zeroed in
+    /// [`SimResult::canonical_json`] like [`CacheStats`]: a knobs-off
+    /// `slo:` wrapper is bit-identical to the bare scheduler in every
+    /// scheduling outcome, and the canonical form states exactly that.
+    pub slo: SloStats,
 }
 
 impl SimResult {
@@ -288,8 +321,10 @@ impl SimResult {
         self.slot_capacity = self.slot_capacity.max(other.slot_capacity);
         self.deadline_met += other.deadline_met;
         self.deadline_missed += other.deadline_missed;
+        self.rejected += other.rejected;
         self.fail.merge(&other.fail);
         self.cache.merge(&other.cache);
+        self.slo.merge(&other.slo);
     }
 
     /// Print the paper's standard box-plot panels for this run:
@@ -354,6 +389,12 @@ impl SimResult {
                 f.preserved_work, f.lost_work
             );
         }
+        if self.rejected > 0 {
+            println!("  admission control: {} application(s) rejected", self.rejected);
+        }
+        if self.slo != SloStats::default() {
+            println!("  slo: {}", self.slo);
+        }
         if self.cache.lookups() > 0 {
             println!("  decision cache: {}", self.cache);
         }
@@ -396,8 +437,10 @@ impl SimResult {
             ("slot_capacity", Json::num(self.slot_capacity as f64)),
             ("deadline_met", Json::num(self.deadline_met as f64)),
             ("deadline_missed", Json::num(self.deadline_missed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
             ("fail", self.fail.to_json()),
             ("cache", self.cache.to_json()),
+            ("slo", self.slo.to_json()),
         ])
     }
 
@@ -431,10 +474,14 @@ impl SimResult {
             slot_capacity: v.get("slot_capacity").as_u64()?,
             deadline_met: v.get("deadline_met").as_u64()?,
             deadline_missed: v.get("deadline_missed").as_u64()?,
+            // Tolerant: results recorded before the SLO subsystem
+            // existed simply carry zero rejections and SLO counters.
+            rejected: v.get("rejected").as_u64().unwrap_or(0),
             fail: FailStats::from_json(v.get("fail"))?,
             // Tolerant: results recorded before the decision cache
             // existed simply carry zero cache counters.
             cache: CacheStats::from_json(v.get("cache")).unwrap_or_default(),
+            slo: SloStats::from_json(v.get("slo")).unwrap_or_default(),
         })
     }
 
@@ -451,6 +498,7 @@ impl SimResult {
         let mut c = self.clone();
         c.wall_secs = 0.0;
         c.cache = CacheStats::default();
+        c.slo = SloStats::default();
         c.to_json()
     }
 
@@ -510,6 +558,11 @@ mod tests {
         let mut a = MetricsCollector::new();
         a.record_deadline(true);
         a.record_deadline(false);
+        a.record_rejection();
+        let mut sa = SloStats::default();
+        sa.rejections = 1;
+        sa.reclaim_saves = 2;
+        a.set_slo_stats(sa);
         let mut fa = FailStats::default();
         fa.requeues = 2;
         fa.lost_work = 5.0;
@@ -525,9 +578,18 @@ mod tests {
         ra.merge(&rb);
         assert_eq!(ra.deadline_met, 2);
         assert_eq!(ra.deadline_missed, 1);
+        assert_eq!(ra.rejected, 1);
+        assert_eq!(ra.slo.rejections, 1);
+        assert_eq!(ra.slo.reclaim_saves, 2);
         assert_eq!(ra.fail.requeues, 5);
         assert_eq!(ra.fail.node_failures, 1);
         assert_eq!(ra.fail.lost_work, 5.0);
+        // The SLO counters ride the wire but are zeroed canonically,
+        // exactly like the cache counters.
+        let rt = SimResult::from_json(&Json::parse(&ra.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(rt.rejected, 1);
+        assert_eq!(rt.slo, ra.slo);
+        assert!(ra.canonical_json().to_string().contains("\"reclaim_saves\":0"));
     }
 
     #[test]

@@ -49,6 +49,11 @@ pub struct AppDescription {
     pub work_steps: u64,
     /// External priority (higher = more urgent).
     pub priority: f64,
+    /// Completion deadline relative to submission, seconds
+    /// (`f64::INFINITY` = none). Consumed by the deadline-aware policies
+    /// (EDF/LLF) and the `slo:` wrapper's admission control; plain
+    /// schedulers ignore it.
+    pub deadline: f64,
     /// Human-in-the-loop session (gets priority in §6 experiments).
     pub interactive: bool,
     /// The component groups.
@@ -131,7 +136,7 @@ impl AppDescription {
             n_elastic,
             elastic_res: envelope(ComponentClass::Elastic),
             priority: self.priority,
-            deadline: f64::INFINITY,
+            deadline: self.deadline,
         }
     }
 
@@ -154,19 +159,29 @@ impl AppDescription {
         if self.work_steps == 0 {
             bail!("work_steps must be positive");
         }
+        if self.deadline.is_finite() && self.deadline <= 0.0 || self.deadline.is_nan() {
+            bail!("deadline must be positive (or omitted for none)");
+        }
         Ok(())
     }
 
     // ---- JSON CL ----------------------------------------------------------
 
-    /// Serialize to the Zoe configuration-language JSON.
+    /// Serialize to the Zoe configuration-language JSON. A deadline is
+    /// emitted only when finite — its absence *is* the "no deadline"
+    /// encoding (JSON has no infinity).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("command", Json::str(&self.command)),
             ("work_steps", Json::num(self.work_steps as f64)),
             ("priority", Json::num(self.priority)),
             ("interactive", Json::Bool(self.interactive)),
+        ];
+        if self.deadline.is_finite() {
+            fields.push(("deadline", Json::num(self.deadline)));
+        }
+        fields.extend(vec![
             (
                 "components",
                 Json::Arr(
@@ -201,7 +216,8 @@ impl AppDescription {
                         .collect(),
                 ),
             ),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     /// Parse a configuration-language JSON description.
@@ -268,6 +284,8 @@ impl AppDescription {
             work,
             work_steps: j.get("work_steps").as_u64().unwrap_or(100),
             priority: j.get("priority").as_f64().unwrap_or(0.0),
+            // Absent = no deadline (see `to_json`).
+            deadline: j.get("deadline").as_f64().unwrap_or(f64::INFINITY),
             interactive: j.get("interactive").as_bool().unwrap_or(false),
             components,
             env,
@@ -305,6 +323,18 @@ mod tests {
             o.insert("command".into(), Json::str("python quantum.py"));
         }
         assert!(AppDescription::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn deadline_roundtrips_and_validates() {
+        let mut d = templates::spark_als(8);
+        d.deadline = 120.0;
+        let back = AppDescription::from_json(&d.to_json()).unwrap();
+        assert_eq!(back, d);
+        d.deadline = -1.0;
+        assert!(d.validate().is_err());
+        // No deadline = key absent from the CL JSON.
+        assert!(!templates::spark_als(8).to_json().to_string().contains("deadline"));
     }
 
     #[test]

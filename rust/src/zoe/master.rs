@@ -421,6 +421,7 @@ impl ZoeMaster {
                     // not choose: kill the surviving containers, keep the
                     // work ledger, back to the queue.
                     Decision::Preempt { id } | Decision::Requeue { id } => self.preempt_app(id),
+                    Decision::Reject { id } => self.reject_app(id),
                     _ => {}
                 }
             }
@@ -562,6 +563,22 @@ impl ZoeMaster {
         let now = self.backend.now();
         let _ = self.store.transition(app, AppState::Failed, now);
         self.depart_inline(rid, now);
+    }
+
+    /// An admission-control rejection ([`Decision::Reject`], emitted by
+    /// an `slo@reject:` wrapper): the application never reached the
+    /// core's waiting line and owns no containers — record it Failed in
+    /// the store and recycle its slot when the pass completes. Unlike
+    /// every other teardown this does *not* send a departure through the
+    /// core: the core never admitted the request, so a departure would
+    /// name an app it does not know (and would double-count the miss in
+    /// the wrapper's attainment ledger).
+    fn reject_app(&mut self, rid: ReqId) {
+        let app = self.apps[rid.index()];
+        log::info!("app {app}: rejected by admission control (deadline infeasible)");
+        let now = self.backend.now();
+        let _ = self.store.transition(app, AppState::Failed, now);
+        self.pending_free.push(rid);
     }
 
     /// The departure dance without the outer `apply_decisions` (also

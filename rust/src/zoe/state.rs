@@ -80,6 +80,10 @@ impl AppState {
                 | (Queued, Killed)
                 | (Starting, Killed)
                 | (Running, Killed)
+                // Queued → Failed: admission control refused the app
+                // (deadline infeasible under `slo@reject:`) before it
+                // ever started.
+                | (Queued, Failed)
                 | (Starting, Failed)
                 | (Running, Failed)
         )

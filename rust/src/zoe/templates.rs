@@ -31,6 +31,7 @@ pub fn spark_als(ram_gb: u32) -> AppDescription {
         work: WorkKind::Als,
         work_steps: 240,
         priority: 0.0,
+        deadline: f64::INFINITY,
         interactive: false,
         components: vec![
             comp("spark-client", ComponentClass::Core, 1, 1.0, 4.0, "zoe/spark-client"),
@@ -59,6 +60,7 @@ pub fn spark_regression(ram_gb: u32) -> AppDescription {
         work: WorkKind::Ridge,
         work_steps: 320,
         priority: 0.0,
+        deadline: f64::INFINITY,
         interactive: false,
         components: vec![
             comp("spark-client", ComponentClass::Core, 1, 1.0, 4.0, "zoe/spark-client"),
@@ -85,6 +87,7 @@ pub fn tf_single() -> AppDescription {
         work: WorkKind::TfTrain,
         work_steps: 120,
         priority: 0.0,
+        deadline: f64::INFINITY,
         interactive: false,
         components: vec![comp("tf-worker", ComponentClass::Core, 1, 6.0, 16.0, "zoe/tensorflow")],
         env: vec![],
@@ -100,6 +103,7 @@ pub fn tf_distributed() -> AppDescription {
         work: WorkKind::TfTrain,
         work_steps: 400,
         priority: 0.0,
+        deadline: f64::INFINITY,
         interactive: false,
         components: vec![
             comp("tf-ps", ComponentClass::Core, 5, 2.0, 16.0, "zoe/tensorflow"),
@@ -120,6 +124,7 @@ pub fn notebook() -> AppDescription {
         work: WorkKind::Als,
         work_steps: 60,
         priority: 1.0,
+        deadline: f64::INFINITY,
         interactive: true,
         components: vec![
             {

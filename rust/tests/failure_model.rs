@@ -346,6 +346,7 @@ fn uniform_app(name: &str, n_core: u32, n_elastic: u32) -> AppDescription {
         work: WorkKind::Ridge,
         work_steps: 100,
         priority: 0.0,
+        deadline: f64::INFINITY,
         interactive: false,
         components,
         env: vec![],

@@ -617,7 +617,7 @@ fn decision_stream_reconstructs_grants_and_admissions() {
                 Decision::Admit { id, .. } => running[id.index()] = true,
                 Decision::SetGrant { id, g } => grant[id.index()] = g,
                 Decision::Reclaim { id, n } => grant[id.index()] -= n,
-                Decision::Preempt { id } | Decision::Requeue { id } => {
+                Decision::Preempt { id } | Decision::Requeue { id } | Decision::Reject { id } => {
                     running[id.index()] = false;
                     grant[id.index()] = 0;
                 }

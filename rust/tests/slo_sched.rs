@@ -1,0 +1,414 @@
+//! The SLO subsystem's load-bearing guarantees. Knobs-off `slo:<inner>`
+//! is **bit-identical** to bare `<inner>` — same admissions, same
+//! grants, same sample bits — across all four generations and under
+//! machine churn with checkpointed requeues. With the knobs on: EDF/LLF
+//! meet deadlines every Table-1 policy provably misses, admission
+//! control rejects (or flags) infeasible arrivals in both executors,
+//! laxity-driven reclaim rescues a slipping app without making its
+//! donor miss, and spread placement shrinks the requeue blast radius of
+//! a machine failure.
+
+use std::sync::Arc;
+
+use zoe::backend::SwarmBackend;
+use zoe::core::{ComponentClass, Request, RequestBuilder, Resources};
+use zoe::policy::{Discipline, Policy, SizeDim};
+use zoe::pool::{Cluster, ClusterEvent, ClusterEventKind};
+use zoe::runtime::WorkKind;
+use zoe::sched::{CheckpointPolicy, SchedKind, SchedSpec};
+use zoe::sim::{simulate, ClusterEvents, FaultSpec, SimResult, Simulation};
+use zoe::slo::{SloAdmission, SloStats};
+use zoe::workload::WorkloadSpec;
+use zoe::zoe::{AppDescription, AppState, ComponentDef, ZoeMaster};
+
+const ALL_KINDS: [SchedKind; 4] = [
+    SchedKind::Rigid,
+    SchedKind::Malleable,
+    SchedKind::Flexible,
+    SchedKind::FlexiblePreemptive,
+];
+
+/// The knobs-off `slo:` wrapper spec of a builtin kind.
+fn slo(kind: SchedKind) -> SchedSpec {
+    SchedSpec::slo(SchedSpec::builtin(kind)).expect("builtin kinds wrap")
+}
+
+/// An `slo@...:` wrapper with the given knobs.
+fn slo_with(kind: SchedKind, admission: SloAdmission, reclaim: bool) -> SchedSpec {
+    SchedSpec::slo_with(SchedSpec::builtin(kind), admission, reclaim).expect("builtin kinds wrap")
+}
+
+/// A request with a deadline on the paper's 1-D "units" cluster.
+fn deadlined(id: u32, arrival: f64, runtime: f64, c: u32, e: u32, deadline: f64) -> Request {
+    let unit = Resources::new(1.0, 1.0);
+    RequestBuilder::new(id)
+        .arrival(arrival)
+        .runtime(runtime)
+        .cores(c, unit)
+        .elastics(e, unit)
+        .deadline(deadline)
+        .build()
+}
+
+/// Bit-identity (the decision-cache standard): canonical text must match
+/// byte-for-byte, and the per-app sample sets bit-for-bit.
+fn assert_bit_identical(slo_run: &SimResult, bare: &SimResult, what: &str) {
+    assert_eq!(slo_run.completed, bare.completed, "{what}: completed");
+    assert_eq!(slo_run.unfinished, bare.unfinished, "{what}: unfinished");
+    assert_eq!(slo_run.events, bare.events, "{what}: event count");
+    assert_eq!(
+        slo_run.end_time.to_bits(),
+        bare.end_time.to_bits(),
+        "{what}: end_time {} vs {}",
+        slo_run.end_time,
+        bare.end_time
+    );
+    for (name, a, b) in [
+        ("turnaround", &slo_run.turnaround, &bare.turnaround),
+        ("queuing", &slo_run.queuing, &bare.queuing),
+        ("slowdown", &slo_run.slowdown, &bare.slowdown),
+    ] {
+        assert_eq!(a.len(), b.len(), "{what} {name}: sample counts");
+        for (i, (x, y)) in a.values().iter().zip(b.values()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} {name}[{i}]: {x} vs {y}");
+        }
+    }
+    assert_eq!(
+        slo_run.canonical_json().to_string(),
+        bare.canonical_json().to_string(),
+        "{what}: canonical result text diverged"
+    );
+}
+
+/// The headline differential: knobs-off `slo:<kind>` vs bare `<kind>`,
+/// 20 seeds × all four generations × FIFO and EDF, on the paper
+/// workload **with deadlines attached** — the wrapper must observe
+/// without perturbing even when every app carries a deadline.
+#[test]
+fn slo_knobs_off_is_bit_identical_to_bare() {
+    let mut spec = WorkloadSpec::paper();
+    spec.deadline_frac = 2.0;
+    for seed in 1..=20u64 {
+        let reqs = spec.generate(120, seed);
+        for kind in ALL_KINDS {
+            for pol in [Policy::FIFO, Policy::edf()] {
+                let bare = simulate(reqs.clone(), Cluster::paper_sim(), pol, kind);
+                let wrapped = simulate(reqs.clone(), Cluster::paper_sim(), pol, slo(kind));
+                assert_bit_identical(
+                    &wrapped,
+                    &bare,
+                    &format!("paper seed={seed} {kind:?} {}", pol.label()),
+                );
+                assert_eq!(wrapped.rejected, 0, "knobs-off never rejects");
+                assert_eq!(
+                    wrapped.slo,
+                    SloStats::default(),
+                    "knobs-off carries no SLO counters"
+                );
+            }
+        }
+    }
+}
+
+/// The same differential under seeded MTBF/MTTR churn with checkpointed
+/// requeues: failures, preemptions and requeues must replay through the
+/// passive wrapper bit-identically.
+#[test]
+fn slo_knobs_off_is_bit_identical_under_churn() {
+    let mut spec = WorkloadSpec::paper();
+    spec.deadline_frac = 2.0;
+    for seed in 1..=6u64 {
+        let reqs = spec.generate(120, seed);
+        for kind in ALL_KINDS {
+            let run = |sched: SchedSpec| {
+                Simulation::new(reqs.clone(), Cluster::paper_sim(), Policy::FIFO, sched)
+                    .with_faults(FaultSpec::new(150.0, 25.0, seed))
+                    .with_checkpoint(CheckpointPolicy::OnPreempt)
+                    .run()
+            };
+            let bare = run(SchedSpec::builtin(kind));
+            let wrapped = run(slo(kind));
+            assert_bit_identical(&wrapped, &bare, &format!("churn seed={seed} {kind:?}"));
+        }
+    }
+}
+
+/// The committed SLO win (golden): a three-app scenario where EDF (and
+/// LLF) meet both deadlines while **every** Table-1 policy misses one.
+/// A blocker serializes the queue; the short app S has a loose deadline,
+/// the long app L a tight one. Every size- or arrival-ordered policy
+/// runs S first (shorter, earlier, higher response ratio), pushing L
+/// past its deadline; deadline-ordered policies run L first and both
+/// still fit.
+#[test]
+fn edf_and_llf_strictly_beat_every_table1_policy() {
+    let unit = Resources::new(1.0, 1.0);
+    let reqs: Vec<Request> = vec![
+        // Blocker: no deadline, occupies the whole cluster until t=20.
+        RequestBuilder::new(0u32)
+            .runtime(20.0)
+            .cores(4, unit)
+            .elastics(0, unit)
+            .build(),
+        // S: short and loose — finishing second (t=60) still meets 1001.
+        deadlined(1, 1.0, 10.0, 4, 0, 1000.0),
+        // L: long and tight — meets its absolute deadline 53 only if it
+        // runs first (20..50); after S it finishes at 60 and misses.
+        deadlined(2, 2.0, 30.0, 4, 0, 51.0),
+    ];
+    let table1 = [
+        Policy::FIFO,
+        Policy::sjf(),
+        Policy::srpt(),
+        Policy::hrrn(),
+        Policy::new(Discipline::Sjf, SizeDim::D2),
+        Policy::new(Discipline::Sjf, SizeDim::D3),
+    ];
+    for pol in table1 {
+        let res = simulate(reqs.clone(), Cluster::units(4), pol, SchedKind::Rigid);
+        assert_eq!(res.completed, 3, "{}: all complete", pol.label());
+        assert_eq!(
+            (res.deadline_met, res.deadline_missed),
+            (1, 1),
+            "{}: S meets, L misses",
+            pol.label()
+        );
+    }
+    for pol in [Policy::edf(), Policy::llf()] {
+        // Run through the SLO wrapper: the win must survive the subsystem
+        // it ships with (knobs off — ordering alone closes the gap).
+        let res = simulate(reqs.clone(), Cluster::units(4), pol, slo(SchedKind::Rigid));
+        assert_eq!(res.completed, 3, "{}: all complete", pol.label());
+        assert_eq!(
+            (res.deadline_met, res.deadline_missed),
+            (2, 0),
+            "{}: deadline order meets both",
+            pol.label()
+        );
+    }
+}
+
+/// Admission control end-to-end in the simulator: an arrival whose
+/// deadline cannot be met even at full allocation is rejected (or
+/// flag-admitted), a feasible arrival is untouched, and the counters
+/// land in `SimResult`.
+#[test]
+fn admission_control_rejects_or_flags_infeasible_arrivals() {
+    // work = 10×4, full rate = 4 → isolated finish at t=10 > deadline 5.
+    let infeasible = deadlined(0, 0.0, 10.0, 4, 0, 5.0);
+    let feasible = deadlined(1, 0.5, 5.0, 4, 0, 100.0);
+    let reqs = vec![infeasible, feasible];
+
+    let reject = simulate(
+        reqs.clone(),
+        Cluster::units(4),
+        Policy::FIFO,
+        slo_with(SchedKind::Rigid, SloAdmission::Reject, false),
+    );
+    assert_eq!(reject.rejected, 1, "the infeasible app is refused");
+    assert_eq!(reject.completed, 1, "the feasible app still completes");
+    assert_eq!(reject.slo.rejections, 1);
+    assert_eq!(
+        (reject.deadline_met, reject.deadline_missed),
+        (1, 1),
+        "a rejection counts as a missed deadline"
+    );
+
+    let flag = simulate(
+        reqs.clone(),
+        Cluster::units(4),
+        Policy::FIFO,
+        slo_with(SchedKind::Rigid, SloAdmission::Flag, false),
+    );
+    assert_eq!(flag.rejected, 0, "flag admits everything");
+    assert_eq!(flag.completed, 2);
+    assert_eq!(flag.slo.flagged, 1, "the infeasible app is counted");
+    assert_eq!((flag.deadline_met, flag.deadline_missed), (1, 1));
+
+    let off = simulate(reqs, Cluster::units(4), Policy::FIFO, slo(SchedKind::Rigid));
+    assert_eq!(off.rejected, 0);
+    assert_eq!(off.completed, 2);
+    assert_eq!(off.slo, SloStats::default());
+}
+
+/// Laxity-driven reclaim end-to-end: a starved arrival whose projected
+/// finish slips past its deadline pulls an elastic component from the
+/// slack-richest donor — the receiver is rescued AND the donor still
+/// meets its own deadline (the transfer is bounded by donor
+/// feasibility).
+#[test]
+fn reclaim_rescues_receiver_and_donor_stays_feasible() {
+    // D fills the cluster: 1 core + 4 elastic on 6 units, work 250,
+    // rate 5 → isolated finish t=50, deadline 1000 (huge slack).
+    let donor = deadlined(0, 0.0, 50.0, 1, 4, 1000.0);
+    // R lands on the last free unit with grant 0: work 50 at rate 1 →
+    // projected finish t=51, deadline 31. One reclaimed elastic (rate 2)
+    // brings it to t=26 — met — while D at rate 4 finishes ~62 ≪ 1000.
+    let receiver = deadlined(1, 1.0, 10.0, 1, 4, 30.0);
+    let reqs = vec![donor, receiver];
+
+    let bare = simulate(
+        reqs.clone(),
+        Cluster::units(6),
+        Policy::FIFO,
+        SchedKind::Flexible,
+    );
+    assert_eq!(
+        (bare.deadline_met, bare.deadline_missed),
+        (1, 1),
+        "without reclaim the starved receiver misses"
+    );
+
+    let rescued = simulate(
+        reqs,
+        Cluster::units(6),
+        Policy::FIFO,
+        slo_with(SchedKind::Flexible, SloAdmission::Off, true),
+    );
+    assert_eq!(
+        (rescued.deadline_met, rescued.deadline_missed),
+        (2, 0),
+        "reclaim rescues the receiver without sinking the donor"
+    );
+    assert!(rescued.slo.reclaim_saves >= 1, "the save is counted: {}", rescued.slo);
+    assert!(rescued.slo.donated_cores >= 1, "the donor gave: {}", rescued.slo);
+    assert_eq!(
+        rescued.slo.donated_cores, rescued.slo.received_cores,
+        "every donated component is received"
+    );
+    assert_eq!(rescued.completed, 2);
+}
+
+/// Spread (worst-fit) placement cuts the requeue blast radius: two
+/// 1-core apps packed first-fit share a machine and BOTH requeue when it
+/// dies; spread puts them on different machines and the failure takes
+/// out only one.
+#[test]
+fn spread_placement_halves_failure_blast_radius() {
+    let reqs = |base: u32| -> Vec<Request> {
+        let res = Resources::new(1.0, 1024.0);
+        (0..2u32)
+            .map(|i| {
+                RequestBuilder::new(base + i)
+                    .arrival(0.1 * i as f64)
+                    .runtime(20.0)
+                    .cores(1, res)
+                    .elastics(0, res)
+                    .build()
+            })
+            .collect()
+    };
+    let cluster = || Cluster::uniform(2, Resources::new(2.0, 2048.0));
+    let kill_m0 = || {
+        ClusterEvents::list(Arc::new(vec![ClusterEvent {
+            time: 5.0,
+            machine: 0,
+            kind: ClusterEventKind::Remove,
+        }]))
+    };
+
+    let packed = Simulation::new(reqs(0), cluster(), Policy::FIFO, SchedKind::Rigid)
+        .with_cluster_events(kill_m0())
+        .run();
+    assert_eq!(packed.fail.requeues, 2, "first-fit co-locates: both die");
+    assert_eq!(packed.completed, 2, "both restart on the surviving machine");
+
+    let spread = Simulation::new(reqs(0), cluster(), Policy::FIFO, SchedKind::Rigid)
+        .with_spread()
+        .with_cluster_events(kill_m0())
+        .run();
+    assert_eq!(spread.fail.requeues, 1, "worst-fit separates: one survives");
+    assert_eq!(spread.completed, 2);
+}
+
+/// The Zoe master honors `Decision::Reject`: an infeasible submission
+/// lands in `Failed` without ever starting, and a later feasible app is
+/// admitted normally.
+#[test]
+fn master_rejects_infeasible_submission() {
+    fn app(name: &str, deadline: f64) -> AppDescription {
+        AppDescription {
+            name: name.to_string(),
+            command: "ridge --dataset test".to_string(),
+            work: WorkKind::Ridge,
+            work_steps: 100,
+            priority: 0.0,
+            deadline,
+            interactive: false,
+            components: vec![ComponentDef {
+                name: "driver".to_string(),
+                class: ComponentClass::Core,
+                count: 1,
+                cpu: 1.0,
+                ram_mb: 1024.0,
+                image: "zoe/test".to_string(),
+                worker: true,
+            }],
+            env: vec![],
+        }
+    }
+    let mut backend = SwarmBackend::new(2, Resources::new(5.0, 5.0 * 1024.0));
+    backend.set_virtual_clock();
+    let spec = slo_with(SchedKind::Flexible, SloAdmission::Reject, false);
+    let mut master = ZoeMaster::new(backend, spec);
+
+    // 100 work steps on one component → runtime 100 ≫ deadline 5.
+    let doomed = master.submit(app("doomed", 5.0)).unwrap();
+    assert_eq!(
+        master.store.get(doomed).unwrap().state,
+        AppState::Failed,
+        "admission control refuses the infeasible app before it starts"
+    );
+
+    let ok = master.submit(app("ok", f64::INFINITY)).unwrap();
+    assert_eq!(
+        master.store.get(ok).unwrap().state,
+        AppState::Running,
+        "a feasible app is admitted normally after a rejection"
+    );
+}
+
+/// The `slo:*` spec grammar round-trips and rejects the invalid nestings
+/// with messages naming the valid forms.
+#[test]
+fn slo_spec_forms_round_trip_and_reject_invalid() {
+    for kind in ALL_KINDS {
+        for (adm, reclaim) in [
+            (SloAdmission::Off, false),
+            (SloAdmission::Reject, false),
+            (SloAdmission::Flag, true),
+            (SloAdmission::Reject, true),
+        ] {
+            let spec = slo_with(kind, adm, reclaim);
+            assert_eq!(spec.kind(), None, "wrapped specs are not a bare kind");
+            let reparsed: SchedSpec = spec.label().parse().expect("label round-trips");
+            assert_eq!(reparsed.label(), spec.label());
+            let (a2, r2, _) = reparsed.slo_parts().expect("slo specs expose their parts");
+            assert_eq!((a2, r2), (adm, reclaim));
+        }
+    }
+    // Cache around the SLO wrapper is the one legal composition.
+    let composed: SchedSpec = "cached:slo@reject:flexible".parse().unwrap();
+    assert_eq!(composed.label(), "cached:slo@reject:flexible");
+
+    let nested = "slo:slo:flexible".parse::<SchedSpec>();
+    let msg = nested.expect_err("nesting rejected").to_string();
+    assert!(msg.contains("slo@"), "the error lists the valid forms: {msg}");
+
+    let wrong_way = "slo:cached:flexible".parse::<SchedSpec>();
+    let msg = wrong_way.expect_err("slo around cache rejected").to_string();
+    assert!(
+        msg.contains("cached:slo"),
+        "the error names the legal composition: {msg}"
+    );
+
+    let unknown = "slo:bogus".parse::<SchedSpec>();
+    let msg = unknown.expect_err("unknown inner rejected").to_string();
+    assert!(
+        msg.contains("flexible") && msg.contains("rigid"),
+        "the error lists the valid inner names: {msg}"
+    );
+
+    let bad_knob = "slo@sometimes:flexible".parse::<SchedSpec>();
+    assert!(bad_knob.is_err(), "unknown knobs are invalid");
+}

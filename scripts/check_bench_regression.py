@@ -90,6 +90,23 @@ def report_decision_cache(doc, label):
     return c
 
 
+def report_slo(doc, label):
+    """Print the slo_attainment point; returns it (or None)."""
+    s = doc.get("slo_attainment") or {}
+    if not s or not s.get("apps"):
+        print(f"{label}: no slo_attainment point")
+        return None
+    bare_total = int(s.get("bare_met", 0)) + int(s.get("bare_missed", 0))
+    slo_total = int(s.get("slo_met", 0)) + int(s.get("slo_missed", 0))
+    print(f"{label}: SLO attainment @ {int(s['apps'])} apps "
+          f"(deadline_frac={float(s.get('deadline_frac', 0.0))}): "
+          f"{s.get('bare_sched')}+{s.get('bare_policy')} met {int(s.get('bare_met', 0))}/{bare_total} -> "
+          f"{s.get('slo_sched')}+{s.get('slo_policy')} met {int(s.get('slo_met', 0))}/{slo_total} "
+          f"(rejections={int(s.get('rejections', 0))}, "
+          f"reclaim_saves={int(s.get('reclaim_saves', 0))})")
+    return s
+
+
 def report_memory(doc, label):
     """Print the steady_state_memory point; returns it (or None)."""
     m = doc.get("steady_state_memory") or {}
@@ -130,6 +147,7 @@ def main():
     new_mem = report_memory(new, "fresh")
     new_sweep = report_sweep(new, "fresh")
     new_cache = report_decision_cache(new, "fresh")
+    new_slo = report_slo(new, "fresh")
 
     # Structural slab invariant, hardware-independent: the request table
     # must never outgrow the active high-water mark. Checked even against
@@ -167,6 +185,17 @@ def main():
             print("FAIL: decision-cache bench recorded zero hits on the "
                   "repeat-template workload (capture/replay path dead)")
             mem_failures.append(("decision_cache", "zero hits"))
+
+    # SLO-attainment structural invariant, hardware-independent: the
+    # bench's head-to-head is deterministic (seeded workload, seeded
+    # churn), so the deadline-aware stack failing to strictly beat
+    # arrival order on deadlines met means the subsystem regressed.
+    # Checked even against a provisional baseline.
+    if new_slo and int(new_slo.get("slo_met", 0)) <= int(new_slo.get("bare_met", 0)):
+        print(f"FAIL: SLO stack met {new_slo.get('slo_met')} deadlines vs bare "
+              f"{new_slo.get('bare_met')} — the deadline-aware scheduler must "
+              f"strictly improve attainment on the bench workload")
+        mem_failures.append(("slo_attainment", "slo_met <= bare_met"))
 
     if baseline.get("provisional"):
         print("baseline is provisional (no measured numbers committed); "
@@ -216,6 +245,22 @@ def main():
         if ratio < 1.0 - threshold:
             failures.append((("decision_cache", "cached_events_per_s",
                               int(new_cache["apps"])), old_eps, cur_eps))
+    # SLO-stack throughput regression: the deadline-aware wrapper's
+    # events/s at the same app count rides the same threshold — the
+    # laxity scan must stay O(changed), not O(running).
+    base_slo = baseline.get("slo_attainment") or {}
+    if (new_slo and base_slo.get("apps") and
+            int(base_slo["apps"]) == int(new_slo["apps"]) and
+            float(base_slo.get("slo_events_per_s", 0)) > 0):
+        old_eps = float(base_slo["slo_events_per_s"])
+        cur_eps = float(new_slo["slo_events_per_s"])
+        ratio = cur_eps / old_eps
+        status = "ok" if ratio >= 1.0 - threshold else "REGRESSION"
+        print(f"  slo stack @ {int(new_slo['apps'])} apps: "
+              f"{old_eps:.0f} -> {cur_eps:.0f} events/s ({ratio:5.2f}x) {status}")
+        if ratio < 1.0 - threshold:
+            failures.append((("slo_attainment", "slo_events_per_s",
+                              int(new_slo["apps"])), old_eps, cur_eps))
     for k, bp in sorted(base_points.items()):
         np_ = new_points.get(k)
         if np_ is None:

@@ -105,6 +105,17 @@ def main():
                     f"missed (validation_failures={cache.get('validation_failures')} > "
                     f"misses={cache.get('misses')}) — a stale-prone key is not a baseline")
 
+    slo = new.get("slo_attainment") or {}
+    if not slo.get("apps"):
+        return fail(f"{new_path} has no slo_attainment point — rerun the full bench "
+                    "(ZOE_BENCH_SWEEP_MAX must be > 0)")
+    if float(slo.get("slo_events_per_s", 0)) <= 0:
+        return fail(f"{new_path}: non-positive SLO-stack throughput: {slo}")
+    if int(slo.get("slo_met", 0)) <= int(slo.get("bare_met", 0)):
+        return fail(f"{new_path}: SLO stack met {slo.get('slo_met')} deadlines vs bare "
+                    f"{slo.get('bare_met')} — a deadline scheduler that does not beat "
+                    "arrival order is not a baseline")
+
     if new_path != baseline_path:
         try:
             with open(baseline_path) as f:
@@ -138,6 +149,11 @@ def main():
           f"{float(cache.get('bare_events_per_s', 0.0)):.0f} bare "
           f"({float(cache.get('speedup', 0.0)):.2f}x, hit rate "
           f"{float(cache.get('hit_rate', 0.0)):.1%})")
+    print(f"  SLO attainment @ {int(slo['apps'])} apps: "
+          f"{int(slo.get('slo_met', 0))} met ({slo.get('slo_sched')}+{slo.get('slo_policy')}) vs "
+          f"{int(slo.get('bare_met', 0))} met ({slo.get('bare_sched')}+{slo.get('bare_policy')}), "
+          f"rejections={int(slo.get('rejections', 0))}, "
+          f"reclaim_saves={int(slo.get('reclaim_saves', 0))}")
     print("commit the updated baseline to arm the CI regression gate "
           "(check_bench_regression.py now enforces thresholds).")
     return 0
