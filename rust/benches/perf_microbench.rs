@@ -2,7 +2,9 @@
 //! layer — simulator event throughput (L3, including the scale sweep,
 //! the optimized-vs-naive engine comparison, the trace
 //! record→ingest→replay pipeline, the fault-replay point (seeded MTBF
-//! churn + checkpoints), the parallel multi-seed scaling
+//! churn + checkpoints), the overload point (8k apps at ~10× capacity
+//! under HRRN and LLF, optimized vs naive, with the queue-depth
+//! high-water mark), the parallel multi-seed scaling
 //! sweep, and the distributed sweep over loopback sockets), PJRT
 //! artifact step latency (L2/L1 via the runtime), the
 //! batched Table-1 scoring kernel, and the substrate primitives
@@ -331,6 +333,106 @@ fn main() {
         slo_point = Some((apps, bare, bare_dt, slo, slo_dt));
     }
 
+    section("L3 — overload fast path: 8k apps at ~10× capacity (flexible, HRRN & LLF)");
+    struct OverloadPoint {
+        policy: &'static str,
+        opt_eps: f64,
+        naive_eps: f64,
+        queue_high_water: u64,
+        gated_events: u64,
+        opt_full_sorts: u64,
+        naive_full_sorts: u64,
+    }
+    let mut overload_points: Vec<OverloadPoint> = Vec::new();
+    let overload_apps = 8_000u32.min(sweep_max.max(1));
+    if sweep_max == 0 {
+        println!("  (skipping overload point: ZOE_BENCH_SWEEP_MAX={sweep_max})");
+    } else {
+        // Compress interarrivals 10×: the waiting line stays thousands
+        // deep for most of the run — the saturated regime the
+        // selection/prefilter fast path targets. Dynamic policies
+        // (HRRN, LLF) are the interesting case: they are what forces
+        // the naive engine to re-sort the line every event.
+        let mut ospec = spec.clone();
+        ospec.arrival_scale = 0.1;
+        for (label, policy, opt_label, naive_label) in [
+            ("HRRN", Policy::hrrn(), "overload_hrrn", "overload_hrrn_naive"),
+            ("LLF", Policy::llf(), "overload_llf", "overload_llf_naive"),
+        ] {
+            let reqs = ospec.generate(overload_apps, 1);
+            let t0 = Instant::now();
+            let opt = simulate_with_mode(
+                reqs.clone(),
+                Cluster::paper_sim(),
+                policy,
+                SchedKind::Flexible,
+                EngineMode::Optimized,
+            );
+            let opt_dt = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let naive = simulate_with_mode(
+                reqs,
+                Cluster::paper_sim(),
+                policy,
+                SchedKind::Flexible,
+                EngineMode::Naive,
+            );
+            let naive_dt = t0.elapsed().as_secs_f64();
+            assert_eq!(
+                opt.canonical_json().to_string(),
+                naive.canonical_json().to_string(),
+                "{label}: the overload fast path broke bit-identity vs the naive engine"
+            );
+            assert_eq!(
+                opt.line.full_sorts, 0,
+                "{label}: the optimized engine must never wholesale-sort the line"
+            );
+            assert!(
+                naive.line.full_sorts > 0,
+                "{label}: the naive engine should be re-sorting under a dynamic policy"
+            );
+            assert!(
+                opt.line.gated_events > 0,
+                "{label}: sustained overload must trip the admissibility prefilter"
+            );
+            let opt_eps = opt.events as f64 / opt_dt.max(1e-12);
+            let naive_eps = naive.events as f64 / naive_dt.max(1e-12);
+            println!(
+                "  {label:<5} optimized {opt_eps:>10.0} events/s vs naive {naive_eps:>10.0} \
+                 events/s ({:.2}×) — queue high-water {}, gated {} / sorts {}",
+                opt_eps / naive_eps.max(1e-12),
+                opt.queue_depth_high_water,
+                opt.line.gated_events,
+                naive.line.full_sorts
+            );
+            points.push(SweepPoint {
+                sched: "flexible",
+                mode: opt_label,
+                apps: overload_apps,
+                events: opt.events,
+                wall_s: opt_dt,
+                events_per_s: opt_eps,
+            });
+            points.push(SweepPoint {
+                sched: "flexible",
+                mode: naive_label,
+                apps: overload_apps,
+                events: naive.events,
+                wall_s: naive_dt,
+                events_per_s: naive_eps,
+            });
+            overload_points.push(OverloadPoint {
+                policy: label,
+                opt_eps,
+                naive_eps,
+                queue_high_water: opt.queue_depth_high_water,
+                gated_events: opt.line.gated_events,
+                opt_full_sorts: opt.line.full_sorts,
+                naive_full_sorts: naive.line.full_sorts,
+            });
+        }
+    }
+
     section("L3 — parallel multi-seed scaling (ExperimentPlan, 10-seed paper workload)");
     let par_apps: u32 = std::env::var("ZOE_BENCH_PAR_APPS")
         .ok()
@@ -572,6 +674,47 @@ fn main() {
                         Json::num(slo.events as f64 / slo_dt.max(1e-12)),
                     ),
                 ]),
+            },
+        ),
+        (
+            "overload",
+            if overload_points.is_empty() {
+                Json::Null
+            } else {
+                Json::obj(vec![
+                    ("apps", Json::num(overload_apps as f64)),
+                    ("sched", Json::str("flexible")),
+                    ("arrival_scale", Json::num(0.1)),
+                    (
+                        "points",
+                        Json::Arr(
+                            overload_points
+                                .iter()
+                                .map(|p| {
+                                    Json::obj(vec![
+                                        ("policy", Json::str(p.policy)),
+                                        ("optimized_events_per_s", Json::num(p.opt_eps)),
+                                        ("naive_events_per_s", Json::num(p.naive_eps)),
+                                        (
+                                            "speedup",
+                                            Json::num(p.opt_eps / p.naive_eps.max(1e-12)),
+                                        ),
+                                        (
+                                            "queue_depth_high_water",
+                                            Json::num(p.queue_high_water as f64),
+                                        ),
+                                        ("gated_events", Json::num(p.gated_events as f64)),
+                                        (
+                                            "optimized_full_sorts",
+                                            Json::num(p.opt_full_sorts as f64),
+                                        ),
+                                        ("naive_full_sorts", Json::num(p.naive_full_sorts as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
             },
         ),
         (

@@ -6,6 +6,8 @@
 //! zoe sim     --apps 8000 --sched flexible --policy sjf [--seed 1]
 //!             [--seeds 10] [--threads 4]   # parallel multi-seed run
 //!             [--sched cached:flexible]    # decision-cached wrapper (any generation)
+//!             [--arrival-scale F]          # compress (F<1) / stretch (F>1) inter-arrivals
+//!             [--engine optimized|naive]   # naive = seed reference for differential runs
 //!             [--out FILE]                 # canonical result JSON (diff-stable)
 //!             [--mtbf S --mttr S [--fault-seed N]]   # synthetic machine churn
 //!             [--machine-events FILE.csv]            # recorded machine churn
@@ -40,7 +42,7 @@ use zoe::pool::Cluster;
 use zoe::runtime::PjrtRuntime;
 use zoe::sched::{CheckpointPolicy, FailStats, SchedSpec};
 use zoe::slo::SloAdmission;
-use zoe::sim::{ClusterEvents, ExperimentPlan, FaultSpec, Simulation};
+use zoe::sim::{ClusterEvents, EngineMode, ExperimentPlan, FaultSpec, Simulation};
 use zoe::sweep::{report_json, run_worker, SweepCoordinator, SweepOptions, WorkerOptions};
 use zoe::trace::{
     fit_workload_from_stats, spec_to_json, IngestOptions, MachineEvents, TraceRecorder,
@@ -165,7 +167,9 @@ fn parse_sim_workload(args: &Args) -> (WorkloadSpec, Policy, SchedSpec) {
     } else {
         WorkloadSpec::paper_batch_only()
     };
-    spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
+    if let Some(scale) = positive_f64_flag(args, "arrival-scale") {
+        spec.arrival_scale = scale;
+    }
     if let Some(frac) = positive_f64_flag(args, "deadline-frac") {
         spec.deadline_frac = frac;
     }
@@ -192,6 +196,20 @@ fn positive_f64_flag(args: &Args, flag: &str) -> Option<f64> {
         Ok(v) if v.is_finite() && v > 0.0 => Some(v),
         _ => {
             eprintln!("--{flag} {raw} is invalid (valid: a finite number > 0)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Parse `--engine optimized|naive` (default: optimized). The naive
+/// mode keeps the seed algorithms wholesale — the reference the
+/// optimized engine is differentially verified against, bit for bit.
+fn parse_engine(args: &Args) -> EngineMode {
+    match args.get("engine") {
+        None | Some("optimized") => EngineMode::Optimized,
+        Some("naive") => EngineMode::Naive,
+        Some(other) => {
+            eprintln!("unknown engine '{other}' (valid: optimized | naive)");
             std::process::exit(2);
         }
     }
@@ -288,12 +306,13 @@ fn print_fault_summary(res: &mut zoe::sim::SimResult) {
 
 fn cmd_sim(args: &Args) {
     let mut known = SIM_WORKLOAD_FLAGS.to_vec();
-    known.extend_from_slice(&["seeds", "threads", "out", "spread"]);
+    known.extend_from_slice(&["seeds", "threads", "out", "spread", "engine"]);
     known.extend_from_slice(FAULT_FLAGS);
     args.warn_unknown(&known);
     let apps = args.u64_or("apps", 8000) as u32;
     let seed = args.u64_or("seed", 1);
     let (spec, policy, kind) = parse_sim_workload(args);
+    let engine = parse_engine(args);
     let (faults, mev) = parse_faults(args);
     let checkpoint = parse_checkpoint(args);
     // A machine_events file defines the cluster it churns: its time-0
@@ -313,7 +332,8 @@ fn cmd_sim(args: &Args) {
             .config(policy, kind)
             .threads(threads)
             .checkpoint(checkpoint)
-            .spread(args.has("spread"));
+            .spread(args.has("spread"))
+            .mode(engine);
         if let Some(f) = faults {
             plan = plan.faults(f);
         }
@@ -323,8 +343,8 @@ fn cmd_sim(args: &Args) {
         plan.run().into_single()
     } else {
         let requests = spec.generate(apps, seed);
-        let mut sim =
-            Simulation::new(requests, cluster, policy, kind).with_checkpoint(checkpoint);
+        let mut sim = Simulation::with_mode(requests, cluster, policy, kind, engine)
+            .with_checkpoint(checkpoint);
         if args.has("spread") {
             sim = sim.with_spread();
         }
@@ -801,12 +821,16 @@ fn build_sweep_plan(args: &Args) -> ExperimentPlan {
         } else {
             WorkloadSpec::paper_batch_only()
         };
-        spec.arrival_scale = args.f64_or("arrival-scale", 1.0);
         if let Some(frac) = positive_f64_flag(args, "deadline-frac") {
             spec.deadline_frac = frac;
         }
         ExperimentPlan::new(spec, args.u64_or("apps", 2000) as u32)
     };
+    // Plan-level overload knob: composes with either source (synthetic
+    // gap scaling, or uniform trace-timestamp scaling).
+    if let Some(scale) = positive_f64_flag(args, "arrival-scale") {
+        plan = plan.arrival_scale(scale);
+    }
     let cluster = mev
         .as_ref()
         .map_or_else(Cluster::paper_sim, |me| me.initial_cluster());

@@ -342,6 +342,26 @@ impl Cluster {
         self.used
     }
 
+    /// Componentwise max free vector across all machines, straight off
+    /// the block index (O(blocks)). A demand that does not [`fit_in`]
+    /// this vector fits no machine — the same per-block maxima
+    /// [`Cluster::can_place_all`] prunes with, so a reject here is exact:
+    /// every placement probe for that demand would fail.
+    ///
+    /// [`fit_in`]: Resources::fits_in
+    pub fn max_free(&self) -> Resources {
+        let mut mx = Resources::ZERO;
+        for b in &self.blk_max {
+            if b.cpu > mx.cpu {
+                mx.cpu = b.cpu;
+            }
+            if b.ram_mb > mx.ram_mb {
+                mx.ram_mb = b.ram_mb;
+            }
+        }
+        mx
+    }
+
     /// How many components of `res` fit cluster-wide right now.
     pub fn fit_count(&self, res: &Resources) -> u64 {
         if !self.aggregate_can_fit_one(res) {

@@ -32,8 +32,7 @@
 use std::collections::VecDeque;
 
 use super::{
-    has_spare_after_full_grants, insert_keyed, keyed_head, resort_keyed, ClusterView, Phase,
-    SchedEvent, SchedulerCore,
+    has_spare_after_full_grants, ClusterView, KeyedLine, Phase, SchedEvent, SchedulerCore,
 };
 use crate::cache::{placement_matches, res_bits, AdmissionTemplate, ClusterSig, ShapeSig};
 use crate::core::{ReqId, Resources};
@@ -82,9 +81,9 @@ pub struct FlexibleScheduler {
     /// Serving set S, in cascade order (descending effective priority,
     /// then ascending frozen key).
     s: Vec<ReqId>,
-    /// Waiting line L: (cached policy key, submission seq, id),
-    /// ascending by (key, seq).
-    l: VecDeque<(f64, u64, ReqId)>,
+    /// Waiting line L, in canonical `(key, seq)` order (sorted or
+    /// selection-bag representation — see [`KeyedLine`]).
+    l: KeyedLine,
     /// Auxiliary waiting line W (§3.3): preempting requests whose cores
     /// did not fit; has priority over L on departures.
     w_line: VecDeque<WEntry>,
@@ -104,8 +103,6 @@ pub struct FlexibleScheduler {
     /// Cores and serving order unchanged since the last cascade — a
     /// recompute would be identical, so the cascade skips entirely.
     cascade_clean: bool,
-    /// Simulated time of the last dynamic-policy resort of L.
-    resort_stamp: f64,
     preemptive: bool,
 }
 
@@ -114,13 +111,12 @@ impl FlexibleScheduler {
     pub fn new(preemptive: bool) -> Self {
         FlexibleScheduler {
             s: Vec::new(),
-            l: VecDeque::new(),
+            l: KeyedLine::new(),
             w_line: VecDeque::new(),
             cores: Vec::new(),
             elastic: Vec::new(),
             full_demand: Resources::ZERO,
             cascade_clean: false,
-            resort_stamp: f64::NAN,
             preemptive,
         }
     }
@@ -206,21 +202,29 @@ impl FlexibleScheduler {
     /// skipped entirely when no admission is possible — the cascade is
     /// then a clean no-op unless something else invalidated it.
     fn rebalance(&mut self, w: &mut ClusterView) {
-        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
+        if w.naive {
+            self.l.resort_naive(w);
+        }
         let may_admit = !self.l.is_empty() && self.has_spare(w);
         if may_admit || w.naive {
             self.release_all_elastic(w);
         }
-        if may_admit {
+        // The selection gate must run *after* the elastic release: the
+        // prefilter compares against free capacity, and releasing elastic
+        // is exactly what makes reclaimable capacity free. A gated pass
+        // skips the loop whole — in the seed the head's core probe would
+        // fail just the same (no decisions), and the cascade below
+        // re-places the released elastic bit-identically either way.
+        if may_admit && (w.naive || self.l.prepare_selection(w)) {
             loop {
                 if self.l.is_empty() || !self.has_spare(w) {
                     break;
                 }
-                let head = keyed_head(&self.l).unwrap();
+                let head = self.l.head().unwrap();
                 // Line 19: cores fit beside the cores of S (elastic
                 // released = reclaimable).
                 if self.try_place_cores(head, w) {
-                    self.l.pop_front();
+                    self.l.pop_head();
                     self.admit(head, w);
                 } else {
                     break;
@@ -263,7 +267,7 @@ impl FlexibleScheduler {
     /// Non-preemptive arrival guard (Algorithm 1 line 10): the new head of
     /// L can start using currently *unused* resources. Mutation-free.
     fn head_fits_in_unused(&self, w: &ClusterView) -> bool {
-        let Some(head) = keyed_head(&self.l) else {
+        let Some(head) = self.l.head() else {
             return false;
         };
         let r = &w.state(head).req;
@@ -331,11 +335,28 @@ impl FlexibleScheduler {
             }
         }
         // Lines 8–11: normal path.
-        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
-        let key = w.pending_key(id);
-        let seq = w.state(id).seq;
-        insert_keyed(&mut self.l, key, seq, id);
-        if keyed_head(&self.l) == Some(id) && self.head_fits_in_unused(w) {
+        if w.naive {
+            self.l.resort_naive(w);
+            self.l.push(w, id);
+            if self.l.head() == Some(id) && self.head_fits_in_unused(w) {
+                self.rebalance(w);
+            }
+            return;
+        }
+        // Optimized path: O(1) push, then probe the arrival's own cores
+        // first — the guard only ever fires when the arrival *is* the
+        // head, so probing `id` is probing the head — and scan for
+        // headship only when that probe says a rebalance could admit.
+        // A failed probe would fail identically in the seed's guard (no
+        // decisions), and a non-head arrival skips there too.
+        self.l.push(w, id);
+        let (res, n) = {
+            let r = &w.state(id).req;
+            (r.core_res, r.n_core)
+        };
+        if !w.cluster.can_place_all(&res, n) {
+            w.line_stats.gated_events += 1;
+        } else if self.l.prepare_selection(w) && self.l.head() == Some(id) {
             self.rebalance(w);
         }
     }
@@ -373,10 +394,10 @@ impl FlexibleScheduler {
             }
             w.note_requeued(id, killed);
             // Back to the waiting line at its current policy key.
-            resort_keyed(&mut self.l, w, &mut self.resort_stamp);
-            let key = w.pending_key(id);
-            let seq = w.state(id).seq;
-            insert_keyed(&mut self.l, key, seq, id);
+            if w.naive {
+                self.l.resort_naive(w);
+            }
+            self.l.push(w, id);
         }
         for id in degrade {
             let dead = self.elastic[id.index()].remove_machine(machine);
@@ -408,7 +429,7 @@ impl FlexibleScheduler {
             // pending request): drop it from the lines. The rebalance
             // below still runs — removing a blocking head can unblock
             // later admissions.
-            self.l.retain(|&(_, _, x)| x != id);
+            self.l.retain(|x| x != id);
             self.w_line.retain(|&(_, _, _, x)| x != id);
         }
         // Core + elastic state changed: any future cascade starts fresh.
@@ -648,9 +669,9 @@ impl SchedulerCore for FlexibleScheduler {
         // so it would retrace the same searches. Commit its effects with
         // the searches replaced by verbatim placement application.
         if !t.carve && w.policy.dynamic() {
-            // rebalance's resort over the lone-entry line (the carve
-            // branch's rebalance sees L already empty and skips it).
-            self.resort_stamp = w.now;
+            // The live path's key refresh over the lone-entry line (the
+            // carve branch's rebalance sees L already empty and skips it).
+            self.l.mirror_replay_stamp(w);
         }
         self.release_all_elastic(w);
         self.cores[id.index()].clone_from(&t.core);
@@ -684,7 +705,7 @@ impl FlexibleScheduler {
     /// Test/diagnostic access to the waiting lines (ids in queue order).
     pub fn waiting(&self) -> (Vec<ReqId>, Vec<ReqId>) {
         (
-            self.l.iter().map(|&(_, _, id)| id).collect(),
+            self.l.iter().collect(),
             self.w_line.iter().map(|&(_, _, _, id)| id).collect(),
         )
     }

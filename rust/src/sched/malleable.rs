@@ -19,9 +19,7 @@
 //! `ClusterView::naive` disables the cursor (full scan from 0, the seed
 //! behavior) for the differential tests.
 
-use std::collections::VecDeque;
-
-use super::{insert_keyed, keyed_head, resort_keyed, ClusterView, Phase, SchedEvent, SchedulerCore};
+use super::{ClusterView, KeyedLine, Phase, SchedEvent, SchedulerCore};
 use crate::cache::{res_bits, AdmissionTemplate, ClusterSig, ShapeSig};
 use crate::core::ReqId;
 use crate::pool::Placement;
@@ -47,9 +45,9 @@ struct MallTemplate {
 /// grants-only-grow model and the Fig. 1 behavior it reproduces.
 pub struct MalleableScheduler {
     s: Vec<ReqId>,
-    /// Waiting line: (cached policy key, submission seq, id), ascending
-    /// by (key, seq).
-    l: VecDeque<(f64, u64, ReqId)>,
+    /// Waiting line, in canonical `(key, seq)` order (sorted or
+    /// selection-bag representation — see [`KeyedLine`]).
+    l: KeyedLine,
     /// Slot-keyed per-request placements (empty = none); a slot's buffer
     /// is reused by its next occupant, keeping the store O(active).
     cores: Vec<Placement>,
@@ -60,8 +58,6 @@ pub struct MalleableScheduler {
     /// full, so top-up rounds skip the prefix. Adjusted on departure
     /// (indices shift left), advanced after each top-up round.
     topup_from: usize,
-    /// Simulated time of the last dynamic-policy resort of L.
-    resort_stamp: f64,
 }
 
 impl MalleableScheduler {
@@ -69,11 +65,10 @@ impl MalleableScheduler {
     pub fn new() -> Self {
         MalleableScheduler {
             s: Vec::new(),
-            l: VecDeque::new(),
+            l: KeyedLine::new(),
             cores: Vec::new(),
             elastic: Vec::new(),
             topup_from: 0,
-            resort_stamp: f64::NAN,
         }
     }
 
@@ -104,7 +99,9 @@ impl MalleableScheduler {
     /// from L while the head's cores fit in the leftover. Loop until
     /// neither applies.
     fn rebalance(&mut self, w: &mut ClusterView) {
-        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
+        if w.naive {
+            self.l.resort_naive(w);
+        }
         loop {
             // Top-ups, serving order, starting at the first non-full
             // member: the prefix before the cursor is fully granted and
@@ -139,8 +136,14 @@ impl MalleableScheduler {
             }
             // Admission: head's cores in the leftover (no reclaim).
             // Cores honor [`ClusterView::spread`] (worst-fit), like the
-            // other generations.
-            let Some(head) = keyed_head(&self.l) else { break };
+            // other generations. The top-up rounds above always run —
+            // only the admission probe is behind the selection gate (a
+            // gated pass is one where the head probe was certain to
+            // fail, exactly what the seed's failed probe + break does).
+            if !w.naive && !self.l.prepare_selection(w) {
+                break;
+            }
+            let Some(head) = self.l.head() else { break };
             let (res, n) = {
                 let r = &w.state(head).req;
                 (r.core_res, r.n_core)
@@ -152,7 +155,7 @@ impl MalleableScheduler {
                 w.cluster.place_all_into(&res, n, &mut self.cores[head.index()])
             };
             if cores_ok {
-                self.l.pop_front();
+                self.l.pop_head();
                 self.admit(head, w);
                 // Loop: the new member's elastic tops up next round.
             } else {
@@ -162,9 +165,10 @@ impl MalleableScheduler {
     }
 
     /// Arrival guard: only rebalance when the new head could start now.
-    /// Mutation-free feasibility check.
+    /// Mutation-free feasibility check (requires fresh keys — callers
+    /// resort/prepare first).
     fn head_fits_in_unused(&self, w: &ClusterView) -> bool {
-        let Some(head) = keyed_head(&self.l) else {
+        let Some(head) = self.l.head() else {
             return false;
         };
         let r = &w.state(head).req;
@@ -181,11 +185,27 @@ impl Default for MalleableScheduler {
 impl MalleableScheduler {
     fn on_arrival(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
-        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
-        let key = w.pending_key(id);
-        let seq = w.state(id).seq;
-        insert_keyed(&mut self.l, key, seq, id);
-        if keyed_head(&self.l) == Some(id) && self.head_fits_in_unused(w) {
+        if w.naive {
+            self.l.resort_naive(w);
+            self.l.push(w, id);
+            if self.l.head() == Some(id) && self.head_fits_in_unused(w) {
+                self.rebalance(w);
+            }
+            return;
+        }
+        // Optimized path: O(1) push, with the guard's two conjuncts
+        // flipped so the O(blocks) fit probe runs before any O(L)
+        // headship scan. When the arrival is the head, the probed shape
+        // is the head's own — the same boolean the seed evaluates; when
+        // it is not, both orders skip the rebalance.
+        self.l.push(w, id);
+        let (res, n) = {
+            let r = &w.state(id).req;
+            (r.core_res, r.n_core)
+        };
+        if !w.cluster.can_place_all(&res, n) {
+            w.line_stats.gated_events += 1;
+        } else if self.l.prepare_selection(w) && self.l.head() == Some(id) {
             self.rebalance(w);
         }
     }
@@ -203,7 +223,7 @@ impl MalleableScheduler {
         } else {
             // Cancellation of a still-waiting request (master kill path;
             // never reached by the simulator).
-            self.l.retain(|&(_, _, x)| x != id);
+            self.l.retain(|x| x != id);
         }
         w.cluster.release_and_clear(&mut self.cores[id.index()]);
         w.cluster.release_and_clear(&mut self.elastic[id.index()]);
@@ -234,10 +254,10 @@ impl MalleableScheduler {
             let pos = self.s.iter().position(|&x| x == id).expect("in serving");
             self.s.remove(pos);
             w.note_requeued(id, killed);
-            resort_keyed(&mut self.l, w, &mut self.resort_stamp);
-            let key = w.pending_key(id);
-            let seq = w.state(id).seq;
-            insert_keyed(&mut self.l, key, seq, id);
+            if w.naive {
+                self.l.resort_naive(w);
+            }
+            self.l.push(w, id);
         }
         for id in degrade {
             let dead = self.elastic[id.index()].remove_machine(machine);
@@ -371,8 +391,8 @@ impl SchedulerCore for MalleableScheduler {
         // enables a fit) and the searches retrace the captured
         // placements. Commit the arrival path's effects directly.
         if w.policy.dynamic() {
-            // rebalance's resort over the lone-entry line.
-            self.resort_stamp = w.now;
+            // rebalance's resort/refresh over the lone-entry line.
+            self.l.mirror_replay_stamp(w);
         }
         self.cores[id.index()].clone_from(&t.core);
         w.cluster.apply_placement(&t.core);

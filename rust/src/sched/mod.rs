@@ -597,6 +597,53 @@ impl FailStats {
     }
 }
 
+/// Mergeable counters of waiting-line maintenance work — the overload
+/// fast path's observability. Kept on the [`ClusterView`] so both
+/// executors account identically; the sim engine folds them into
+/// [`crate::sim::SimResult`]. The optimized path never wholesale-sorts
+/// a line (selection replaces sorting, so `full_sorts` stays 0); the
+/// counters therefore differ between engine modes by design and are
+/// zeroed in `SimResult::canonical_json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LineStats {
+    /// Wholesale O(L log L) waiting-line sorts (naive mode only).
+    pub full_sorts: u64,
+    /// Cached policy keys recomputed by dynamic-policy refreshes.
+    pub key_refreshes: u64,
+    /// Line-maintenance passes skipped outright because the O(1)
+    /// admissibility prefilter proved no pending core component fits
+    /// any machine (see [`KeyedLine::prepare_selection`]).
+    pub gated_events: u64,
+}
+
+impl LineStats {
+    /// Accumulate `other` (multi-seed merge).
+    pub fn merge(&mut self, other: &LineStats) {
+        self.full_sorts += other.full_sorts;
+        self.key_refreshes += other.key_refreshes;
+        self.gated_events += other.gated_events;
+    }
+
+    /// Serialize bit-exactly for wire transport (distributed sweeps).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("full_sorts", Json::num(self.full_sorts as f64)),
+            ("key_refreshes", Json::num(self.key_refreshes as f64)),
+            ("gated_events", Json::num(self.gated_events as f64)),
+        ])
+    }
+
+    /// Inverse of [`LineStats::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<LineStats> {
+        Some(LineStats {
+            full_sorts: v.get("full_sorts").as_u64()?,
+            key_refreshes: v.get("key_refreshes").as_u64()?,
+            gated_events: v.get("gated_events").as_u64()?,
+        })
+    }
+}
+
 // ---------------------------------------------------------------------------
 // ClusterView — the state a core operates on
 // ---------------------------------------------------------------------------
@@ -647,6 +694,9 @@ pub struct ClusterView {
     /// Counters of everything the failure machinery did (all zero while
     /// nothing fails).
     pub fail_stats: FailStats,
+    /// Counters of waiting-line maintenance work (wholesale sorts, key
+    /// refreshes, prefilter-gated passes) — see [`LineStats`].
+    pub line_stats: LineStats,
 }
 
 impl ClusterView {
@@ -674,6 +724,7 @@ impl ClusterView {
             spread: false,
             checkpoint: CheckpointPolicy::None,
             fail_stats: FailStats::default(),
+            line_stats: LineStats::default(),
         }
     }
 
@@ -1440,7 +1491,7 @@ pub(crate) type KeyedEntry = (f64, u64, ReqId);
 /// Insert `id` with `key` into the deque kept sorted ascending by
 /// `(key, seq)` (canonical order; the monotone submission index breaks
 /// ties deterministically — exactly how dense ids used to).
-pub(crate) fn insert_keyed(q: &mut VecDeque<KeyedEntry>, key: f64, seq: u64, id: ReqId) {
+fn insert_keyed(q: &mut VecDeque<KeyedEntry>, key: f64, seq: u64, id: ReqId) {
     let pos = q.partition_point(|&(k, s, _)| match k.total_cmp(&key) {
         Ordering::Less => true,
         Ordering::Equal => s <= seq,
@@ -1449,34 +1500,208 @@ pub(crate) fn insert_keyed(q: &mut VecDeque<KeyedEntry>, key: f64, seq: u64, id:
     q.insert(pos, (key, seq, id));
 }
 
-/// Recompute cached keys at the current time and restore canonical order —
-/// needed for time-varying disciplines (HRRN) before any head decision.
-/// `stamp` dedups the work: keys are a function of `w.now` only, so a
-/// second resort at the same instant (arrival → rebalance) is skipped;
-/// inserts/pops between them preserve the canonical order.
-pub(crate) fn resort_keyed(q: &mut VecDeque<KeyedEntry>, w: &ClusterView, stamp: &mut f64) {
-    if !w.policy.dynamic() || q.is_empty() {
-        return;
-    }
-    if *stamp == w.now {
-        return;
-    }
-    *stamp = w.now;
-    // Refresh even a lone entry: the next insert compares against its
-    // cached key, which must be current, not frozen at its insert time.
-    for e in q.iter_mut() {
-        e.0 = w.pending_key(e.2);
-    }
-    if q.len() > 1 {
-        q.make_contiguous()
-            .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-    }
+/// A scheduler waiting line with two representations behind one API,
+/// fixed per run by (engine mode, policy):
+///
+/// * **sorted** — naive mode, and any static policy: a deque kept
+///   ascending by `(key, seq)`; ordered inserts, head = front, pop =
+///   pop-front. Exactly the seed structure, so naive runs retrace the
+///   seed algorithm bit for bit.
+/// * **bag** — optimized mode + dynamic policy: an unordered deque with
+///   O(1) pushes; head/pop select the minimum `(key, seq)` over cached
+///   keys. The schedulers only ever consume an admissible *prefix* of
+///   the line, and repeated min-extraction over fresh keys pops the
+///   same ascending `(key, seq)` sequence a wholesale sort would — same
+///   canonical order, same decisions — while a deep line under overload
+///   never pays the per-event O(L log L) sort.
+///
+/// Key-freshness invariant: `stamp == w.now` implies every cached key
+/// equals `pending_key` at `w.now` (pushes always store freshly computed
+/// keys; [`KeyedLine::prepare_selection`] / [`KeyedLine::resort_naive`]
+/// refresh the rest). In bag mode, [`KeyedLine::head`] and
+/// [`KeyedLine::pop_head`] must run behind a same-instant
+/// `prepare_selection`.
+pub(crate) struct KeyedLine {
+    /// The entries — sorted ascending by `(key, seq)`, or an unordered
+    /// bag (see the representation invariant above).
+    q: VecDeque<KeyedEntry>,
+    /// Simulated time the cached dynamic-policy keys were last refreshed
+    /// wholesale (NAN = never).
+    stamp: f64,
+    /// `true` = bag representation. Set on every push from the run-fixed
+    /// (policy, naive) pair, so it never flips with entries queued.
+    bag: bool,
+    /// Componentwise lower bound of the core-component demand of every
+    /// entry ever queued since the line last drained — the O(1)
+    /// admissibility prefilter. Pops and retains deliberately leave it:
+    /// a stale bound is only ever too *small*, which weakens the filter
+    /// but never gates a feasible admission.
+    min_core: crate::core::Resources,
 }
 
-/// Head id of a keyed deque.
-#[inline]
-pub(crate) fn keyed_head(q: &VecDeque<KeyedEntry>) -> Option<ReqId> {
-    q.front().map(|&(_, _, id)| id)
+impl KeyedLine {
+    /// An empty line.
+    pub fn new() -> Self {
+        KeyedLine {
+            q: VecDeque::new(),
+            stamp: f64::NAN,
+            bag: false,
+            min_core: crate::core::Resources::ZERO,
+        }
+    }
+
+    /// Number of queued entries.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Whether the line is empty.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Queued ids in storage order (canonical in sorted mode; arbitrary
+    /// in bag mode — diagnostics only there).
+    pub fn iter(&self) -> impl Iterator<Item = ReqId> + '_ {
+        self.q.iter().map(|&(_, _, id)| id)
+    }
+
+    /// Queue `id` at its current policy key, maintaining the
+    /// representation invariant and the prefilter bound.
+    pub fn push(&mut self, w: &ClusterView, id: ReqId) {
+        self.bag = w.policy.dynamic() && !w.naive;
+        let core = w.state(id).req.core_res;
+        if self.q.is_empty() {
+            self.min_core = core;
+        } else {
+            if core.cpu < self.min_core.cpu {
+                self.min_core.cpu = core.cpu;
+            }
+            if core.ram_mb < self.min_core.ram_mb {
+                self.min_core.ram_mb = core.ram_mb;
+            }
+        }
+        let key = w.pending_key(id);
+        let seq = w.state(id).seq;
+        if self.bag {
+            self.q.push_back((key, seq, id));
+        } else {
+            insert_keyed(&mut self.q, key, seq, id);
+        }
+    }
+
+    /// The seed's wholesale resort (naive mode): recompute every cached
+    /// key at `w.now` and restore canonical order, deduped by `stamp`
+    /// (keys are a function of `w.now` only, so a second resort at the
+    /// same instant is skipped; inserts/pops between them preserve the
+    /// order). Static policies never resort. Counted into
+    /// [`LineStats::full_sorts`] / [`LineStats::key_refreshes`].
+    pub fn resort_naive(&mut self, w: &mut ClusterView) {
+        debug_assert!(!self.bag, "resort_naive is the sorted-mode path");
+        if !w.policy.dynamic() || self.q.is_empty() {
+            return;
+        }
+        if self.stamp == w.now {
+            return;
+        }
+        self.stamp = w.now;
+        // Refresh even a lone entry: the next insert compares against its
+        // cached key, which must be current, not frozen at its insert time.
+        for e in self.q.iter_mut() {
+            e.0 = w.pending_key(e.2);
+        }
+        w.line_stats.key_refreshes += self.q.len() as u64;
+        if self.q.len() > 1 {
+            self.q
+                .make_contiguous()
+                .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            w.line_stats.full_sorts += 1;
+        }
+    }
+
+    /// Optimized-path gate before any head decision. Returns `false`
+    /// when the line is empty, or when the O(1) prefilter proves no
+    /// pending request's core component fits any machine — every
+    /// placement probe this pass would fail, so all selection work is
+    /// skipped and the pass counts as gated. Returns `true` after
+    /// refreshing dynamic keys for `w.now` (deduped by `stamp`), making
+    /// [`KeyedLine::head`] / [`KeyedLine::pop_head`] valid this instant.
+    ///
+    /// Prefilter exactness: `min_core` bounds every pending core demand
+    /// from below, and a component fitting some machine necessarily fits
+    /// the componentwise max of the block index's free vectors — the
+    /// same vectors, with the same 1e-9 tolerance, that
+    /// [`Cluster::can_place_all`] checks — so a gated pass is one where
+    /// the probes were *certain* to fail, and skipping them emits
+    /// exactly the decisions running them would have: none.
+    pub fn prepare_selection(&mut self, w: &mut ClusterView) -> bool {
+        debug_assert!(!w.naive, "naive mode resorts wholesale instead");
+        if self.q.is_empty() {
+            return false;
+        }
+        if !self.min_core.fits_in(&w.cluster.max_free()) {
+            w.line_stats.gated_events += 1;
+            return false;
+        }
+        if w.policy.dynamic() && self.stamp != w.now {
+            self.stamp = w.now;
+            for e in self.q.iter_mut() {
+                e.0 = w.pending_key(e.2);
+            }
+            w.line_stats.key_refreshes += self.q.len() as u64;
+        }
+        true
+    }
+
+    /// Index of the canonical head — minimum `(key, seq)`. Front in
+    /// sorted mode; a linear scan over cached keys in bag mode.
+    fn head_idx(&self) -> Option<usize> {
+        if self.q.is_empty() {
+            return None;
+        }
+        if !self.bag {
+            return Some(0);
+        }
+        let mut best = 0;
+        for i in 1..self.q.len() {
+            match self.q[i].0.total_cmp(&self.q[best].0) {
+                Ordering::Less => best = i,
+                Ordering::Equal if self.q[i].1 < self.q[best].1 => best = i,
+                _ => {}
+            }
+        }
+        Some(best)
+    }
+
+    /// Canonical head id (see [`KeyedLine::head_idx`] for the cost).
+    pub fn head(&self) -> Option<ReqId> {
+        self.head_idx().map(|i| self.q[i].2)
+    }
+
+    /// Remove and return the canonical head: pop-front in sorted mode,
+    /// swap-remove of the selected minimum in bag mode (the bag's
+    /// residual order is irrelevant — selection re-scans).
+    pub fn pop_head(&mut self) -> Option<ReqId> {
+        let i = self.head_idx()?;
+        if self.bag {
+            self.q.swap_remove_back(i).map(|(_, _, id)| id)
+        } else {
+            self.q.pop_front().map(|(_, _, id)| id)
+        }
+    }
+
+    /// Drop entries rejected by `f` (cancellation paths). `min_core`
+    /// deliberately stays (see its invariant).
+    pub fn retain<F: FnMut(ReqId) -> bool>(&mut self, mut f: F) {
+        self.q.retain(|&(_, _, id)| f(id));
+    }
+
+    /// Cache-replay mirror of the stamp write the live arrival path
+    /// performs (its resort/refresh over the lone-entry line) — see the
+    /// cores' `replay_arrival`.
+    pub fn mirror_replay_stamp(&mut self, w: &ClusterView) {
+        self.stamp = w.now;
+    }
 }
 
 #[cfg(test)]
@@ -1792,5 +2017,103 @@ mod tests {
         t.free(a);
         t.alloc(crate::core::unit_request(0, 0.0, 1.0, 1, 0));
         let _ = t.state(a);
+    }
+
+    // -- the keyed waiting line ------------------------------------------
+
+    #[test]
+    fn bag_selection_pops_in_wholesale_sort_order() {
+        // Dynamic policy + optimized mode → bag representation. Three
+        // groups of four identical shapes give duplicate HRRN keys, so
+        // the `seq` tie-break must carry the order.
+        let reqs: Vec<Request> = (0..12u32)
+            .map(|i| crate::core::unit_request(i, 0.0, 10.0 * ((i % 3) + 1) as f64, 1, 0))
+            .collect();
+        let mut w = ClusterView::new(reqs, Cluster::units(4), Policy::hrrn());
+        let ids: Vec<ReqId> = (0..12u32).map(ReqId::from).collect();
+        for &id in &ids {
+            w.state_mut(id).phase = Phase::Pending;
+        }
+        w.now = 5.0;
+        let mut line = KeyedLine::new();
+        for &id in &ids {
+            line.push(&w, id);
+        }
+        assert_eq!(line.len(), 12);
+        // Reference: the seed's wholesale refresh + sort.
+        let mut sorted: Vec<(f64, u64, ReqId)> = ids
+            .iter()
+            .map(|&id| (w.pending_key(id), w.state(id).seq, id))
+            .collect();
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        assert!(line.prepare_selection(&mut w));
+        for &(_, _, want) in &sorted {
+            assert_eq!(line.head(), Some(want));
+            assert_eq!(line.pop_head(), Some(want));
+        }
+        assert!(line.is_empty());
+        assert_eq!(w.line_stats.full_sorts, 0, "selection never sorts");
+        assert_eq!(w.line_stats.key_refreshes, 12);
+    }
+
+    #[test]
+    fn sorted_mode_matches_seed_insert_order() {
+        // Static policy → sorted representation: head/pop walk the front.
+        let reqs: Vec<Request> = (0..4u32)
+            .map(|i| crate::core::unit_request(i, i as f64, 10.0, 1, 0))
+            .collect();
+        let mut w = ClusterView::new(reqs, Cluster::units(4), Policy::FIFO);
+        for i in 0..4u32 {
+            w.state_mut(ReqId::from(i)).phase = Phase::Pending;
+        }
+        let mut line = KeyedLine::new();
+        // Push out of order; FIFO keys (arrival time) restore it.
+        for i in [2u32, 0, 3, 1] {
+            line.push(&w, ReqId::from(i));
+        }
+        for i in 0..4u32 {
+            assert_eq!(line.pop_head(), Some(ReqId::from(i)));
+        }
+    }
+
+    #[test]
+    fn prepare_selection_gates_saturated_lines() {
+        let req = crate::core::unit_request(0, 0.0, 10.0, 1, 0);
+        let mut w = ClusterView::new(vec![req], Cluster::units(4), Policy::hrrn());
+        w.state_mut(rid(0)).phase = Phase::Pending;
+        let mut line = KeyedLine::new();
+        line.push(&w, rid(0));
+        // Saturate the cluster: no pending core component fits anywhere.
+        assert!(w
+            .cluster
+            .place_all(&crate::core::Resources::new(1.0, 1.0), 4));
+        assert!(!line.prepare_selection(&mut w), "hopeless pass is gated");
+        assert_eq!(w.line_stats.gated_events, 1);
+        assert_eq!(w.line_stats.key_refreshes, 0, "gated pass refreshes nothing");
+        // Capacity returns → the gate opens and keys refresh once.
+        w.cluster.clear();
+        assert!(line.prepare_selection(&mut w));
+        assert_eq!(w.line_stats.key_refreshes, 1);
+        assert_eq!(w.line_stats.full_sorts, 0);
+    }
+
+    #[test]
+    fn line_stats_merge_and_wire_round_trip() {
+        let mut a = LineStats {
+            full_sorts: 2,
+            key_refreshes: 30,
+            gated_events: 7,
+        };
+        let b = LineStats {
+            full_sorts: 1,
+            key_refreshes: 12,
+            gated_events: 5,
+        };
+        a.merge(&b);
+        assert_eq!(a.full_sorts, 3);
+        assert_eq!(a.key_refreshes, 42);
+        assert_eq!(a.gated_events, 12);
+        let wire = crate::util::json::Json::parse(&a.to_json().to_string()).unwrap();
+        assert_eq!(LineStats::from_json(&wire), Some(a));
     }
 }

@@ -10,9 +10,7 @@
 //! reusable buffers) and releases them exactly on departure — as a real
 //! rigid system would.
 
-use std::collections::VecDeque;
-
-use super::{insert_keyed, keyed_head, resort_keyed, ClusterView, Phase, SchedEvent, SchedulerCore};
+use super::{ClusterView, KeyedLine, Phase, SchedEvent, SchedulerCore};
 use crate::cache::{AdmissionTemplate, ClusterSig, ShapeSig};
 use crate::core::ReqId;
 use crate::pool::Placement;
@@ -32,16 +30,14 @@ struct RigidTemplate {
 /// nothing admission model it reproduces.
 pub struct RigidScheduler {
     s: Vec<ReqId>,
-    /// Waiting line: (cached policy key, submission seq, id), ascending
-    /// by (key, seq).
-    l: VecDeque<(f64, u64, ReqId)>,
+    /// Waiting line, in canonical `(key, seq)` order (sorted or
+    /// selection-bag representation — see [`KeyedLine`]).
+    l: KeyedLine,
     /// Slot-keyed per-request placements (empty = none); core and
     /// elastic components have different per-component sizes, hence two
     /// buffers. A slot's buffers are reused by its next occupant.
     cores: Vec<Placement>,
     elastic: Vec<Placement>,
-    /// Simulated time of the last dynamic-policy resort of L.
-    resort_stamp: f64,
 }
 
 impl RigidScheduler {
@@ -49,10 +45,9 @@ impl RigidScheduler {
     pub fn new() -> Self {
         RigidScheduler {
             s: Vec::new(),
-            l: VecDeque::new(),
+            l: KeyedLine::new(),
             cores: Vec::new(),
             elastic: Vec::new(),
-            resort_stamp: f64::NAN,
         }
     }
 
@@ -65,14 +60,21 @@ impl RigidScheduler {
     }
 
     /// Head-of-line admission: start the head of L while its full demand
-    /// fits in the current free capacity. No backfill.
+    /// fits in the current free capacity. No backfill. On the optimized
+    /// path the selection gate runs first: a pass the prefilter proves
+    /// hopeless (no pending core component fits any machine — every
+    /// `place_full` certain to fail) skips all line maintenance.
     fn try_admit(&mut self, w: &mut ClusterView) {
-        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
-        while let Some(head) = keyed_head(&self.l) {
+        if w.naive {
+            self.l.resort_naive(w);
+        } else if !self.l.prepare_selection(w) {
+            return;
+        }
+        while let Some(head) = self.l.head() {
             if !self.place_full(w, head) {
                 break;
             }
-            self.l.pop_front();
+            self.l.pop_head();
             let key = w.pending_key(head);
             let now = w.now;
             {
@@ -130,11 +132,21 @@ impl Default for RigidScheduler {
 impl RigidScheduler {
     fn on_arrival(&mut self, id: ReqId, w: &mut ClusterView) {
         self.ensure_capacity(w);
-        resort_keyed(&mut self.l, w, &mut self.resort_stamp);
-        let key = w.pending_key(id);
-        let seq = w.state(id).seq;
-        insert_keyed(&mut self.l, key, seq, id);
-        if keyed_head(&self.l) == Some(id) {
+        if w.naive {
+            self.l.resort_naive(w);
+            self.l.push(w, id);
+            if self.l.head() == Some(id) {
+                self.try_admit(w);
+            }
+            return;
+        }
+        // Optimized path: O(1) push, and the headship scan only runs when
+        // the prefilter says an admission probe could succeed at all. A
+        // gated pass would probe-and-fail in the seed too (no decisions),
+        // and when the arrival is not the head the seed also skips — so
+        // skipping here is bit-identical.
+        self.l.push(w, id);
+        if self.l.prepare_selection(w) && self.l.head() == Some(id) {
             self.try_admit(w);
         }
     }
@@ -144,7 +156,7 @@ impl RigidScheduler {
         if !self.s.contains(&id) {
             // Cancellation of a still-waiting request (master kill path;
             // never reached by the simulator).
-            self.l.retain(|&(_, _, x)| x != id);
+            self.l.retain(|x| x != id);
         }
         self.s.retain(|&x| x != id);
         w.cluster.release_and_clear(&mut self.cores[id.index()]);
@@ -176,10 +188,10 @@ impl RigidScheduler {
             w.cluster.release_and_clear(&mut self.elastic[i]);
             self.s.retain(|&x| x != id);
             w.note_requeued(id, killed);
-            resort_keyed(&mut self.l, w, &mut self.resort_stamp);
-            let key = w.pending_key(id);
-            let seq = w.state(id).seq;
-            insert_keyed(&mut self.l, key, seq, id);
+            if w.naive {
+                self.l.resort_naive(w);
+            }
+            self.l.push(w, id);
         }
         self.try_admit(w);
     }
@@ -266,8 +278,8 @@ impl SchedulerCore for RigidScheduler {
         // exactly. Commit the arrival path's effects with the searches
         // replaced by verbatim placement application.
         if w.policy.dynamic() {
-            // try_admit's resort over the lone-entry line.
-            self.resort_stamp = w.now;
+            // try_admit's resort/refresh over the lone-entry line.
+            self.l.mirror_replay_stamp(w);
         }
         self.cores[id.index()].clone_from(&t.core);
         w.cluster.apply_placement(&t.core);

@@ -62,15 +62,21 @@
 //!   unchanged.
 //!
 //! The naive reference path ([`EngineMode::Naive`]) keeps the seed
-//! algorithm — eager accrual over the whole serving set on every event
-//! plus a full refresh, and no compaction — and also flips
+//! algorithm's *cost shape* — a predicted-finish refresh over the whole
+//! serving set on every event, and no compaction — and also flips
 //! `ClusterView::naive` so the cores disable their incremental
-//! shortcuts. Orthogonally, [`Simulation::retain_slots`] disables slot
-//! recycling (the *retained dense* reference). `rust/tests/
-//! sim_properties.rs` runs engines differentially across seeds,
-//! schedulers and policies — optimized vs naive, and recycling vs
-//! retained — and asserts the results match (bitwise, for the slab
-//! differential).
+//! shortcuts (wholesale line sorts instead of selection). Work accrual
+//! is lazy in both modes, through the same shared fold at rate changes:
+//! an eager per-event sweep would regroup the floating-point accrual
+//! sums and break the bitwise-identity contract between the two engines
+//! (the refresh-all corrects for the in-flight segment instead — see
+//! `refresh_one_naive`). Orthogonally, [`Simulation::retain_slots`]
+//! disables slot recycling (the *retained dense* reference).
+//! `rust/tests/sim_properties.rs` and `rust/tests/overload.rs` run
+//! engines differentially across seeds, schedulers and policies —
+//! optimized vs naive, and recycling vs retained — and assert the
+//! results match bitwise (canonical-JSON text equality for the
+//! cross-mode differential).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -138,9 +144,12 @@ pub enum EngineMode {
     /// Lazy accrual + changed-set refresh + heap compaction: per-event
     /// cost proportional to what changed. The default.
     Optimized,
-    /// The seed algorithm: eager accrual and full refresh over the whole
-    /// serving set on every event. Kept as the reference for the
-    /// differential property tests and as the bench baseline.
+    /// The seed algorithm's cost shape: a full predicted-finish refresh
+    /// over the whole serving set on every event, wholesale line sorts
+    /// in the cores, no compaction. Accrual is the same shared lazy fold
+    /// as optimized mode, so results are bit-identical across modes.
+    /// Kept as the reference for the differential property tests and as
+    /// the bench baseline.
     Naive,
 }
 
@@ -356,21 +365,16 @@ impl Simulation {
         self.seq += 1;
     }
 
-    /// Advance simulated time to `t`. In naive mode this eagerly accrues
-    /// work for every running request; in optimized mode accrual is lazy
-    /// (per-request, on rate change or departure) and this is O(1).
+    /// Advance simulated time to `t`. Accrual is lazy in *both* modes —
+    /// a request's `done_work` is folded forward only when its rate
+    /// changes (grant change, requeue, departure), always through the
+    /// shared [`crate::sched::ReqState::accrue`], so the two engines see
+    /// bit-identical work histories. The naive reference's O(S)-per-event
+    /// cost lives in its refresh-all pass and wholesale line sorts, not
+    /// here; an eager per-event fold would regroup the floating-point
+    /// accrual sums and break the cross-mode bitwise-identity contract.
     fn advance_to(&mut self, t: f64) {
         debug_assert!(t >= self.world.now - 1e-9, "time must not go backwards");
-        if self.mode == EngineMode::Naive {
-            for &id in self.sched.serving() {
-                let st = self.world.table.state_mut(id);
-                let dt = t - st.last_accrual;
-                if dt > 0.0 {
-                    st.done_work += st.req.rate(st.grant) * dt;
-                    st.last_accrual = t;
-                }
-            }
-        }
         self.world.now = t;
     }
 
@@ -386,7 +390,7 @@ impl Simulation {
             self.scratch.extend_from_slice(self.sched.serving());
             let ids = std::mem::take(&mut self.scratch);
             for &id in &ids {
-                self.refresh_one(id, now);
+                self.refresh_one_naive(id, now);
             }
             self.scratch = ids;
         } else {
@@ -456,6 +460,44 @@ impl Simulation {
             }
             // A finite previous prediction means an event for it is still
             // in the heap; bumping the epoch turns that event stale.
+            let replaced = st.predicted_finish.is_finite();
+            st.epoch += 1;
+            st.predicted_finish = finish;
+            (finish, st.epoch, replaced)
+        };
+        if replaced {
+            self.stale += 1;
+        }
+        self.push_departure(finish, id, epoch);
+    }
+
+    /// The naive reference's refresh-all body: recompute the predicted
+    /// finish of one serving request at every event, whether or not its
+    /// rate changed — the seed's O(S)-per-event behavior. Unlike
+    /// [`Simulation::refresh_one`] it cannot assume the request was
+    /// accrued to `now` (accrual folds only at rate changes, in both
+    /// modes), so it subtracts the in-flight segment
+    /// `cur_rate * (now - last_accrual)` instead of folding it — the
+    /// same lazy-correction idiom the SLO laxity scan uses. For a
+    /// request whose rate changed this event the correction is exactly
+    /// zero (the grant change accrued it) and the computed finish is
+    /// bit-identical to the optimized engine's; for an unchanged request
+    /// the recomputation differs from the stored prediction only by
+    /// floating-point regrouping, which [`FINISH_EPS`] absorbs, so the
+    /// stored event stands and the two engines' heaps stay aligned.
+    fn refresh_one_naive(&mut self, id: ReqId, now: f64) {
+        let (finish, epoch, replaced) = {
+            let st = self.world.table.state_mut(id);
+            if st.phase != Phase::Running {
+                return;
+            }
+            let rate = st.req.rate(st.grant);
+            debug_assert!(rate > 0.0);
+            let in_flight = st.cur_rate * (now - st.last_accrual);
+            let finish = now + (st.remaining_work() - in_flight).max(0.0) / rate;
+            if (finish - st.predicted_finish).abs() <= FINISH_EPS {
+                return;
+            }
             let replaced = st.predicted_finish.is_finite();
             st.epoch += 1;
             st.predicted_finish = finish;
@@ -711,8 +753,9 @@ impl Simulation {
                 self.advance_to(ev.t);
                 let (arrival, admit, runtime, class, dep_seq, deadline) = {
                     let st = self.world.table.state_mut(ev.id);
-                    // Fold the final accrual segment (no-op in naive
-                    // mode, where advance_to already did it).
+                    // Fold the final accrual segment — the same shared
+                    // fold in both engine modes, so `done_work`
+                    // histories stay bit-identical.
                     st.accrue(ev.t);
                     debug_assert!(
                         st.remaining_work() < 1e-6 * st.req.work().max(1.0),
@@ -798,6 +841,7 @@ impl Simulation {
             self.metrics.set_slo_stats(ss);
         }
         self.metrics.set_fail_stats(self.world.fail_stats);
+        self.metrics.set_line_stats(self.world.line_stats);
         Ok(self.metrics.finalize(
             self.world.now,
             events,

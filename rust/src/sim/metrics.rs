@@ -24,7 +24,7 @@
 
 use crate::cache::CacheStats;
 use crate::core::AppClass;
-use crate::sched::FailStats;
+use crate::sched::{FailStats, LineStats};
 use crate::slo::SloStats;
 use crate::util::json::{f64_from_json, f64_to_json, Json};
 use crate::util::stats::{BoxPlot, Samples, TimeWeighted};
@@ -44,9 +44,11 @@ pub struct MetricsCollector {
     deadline_met: u64,
     deadline_missed: u64,
     rejected: u64,
+    queue_hw: u64,
     fail: FailStats,
     cache: CacheStats,
     slo: SloStats,
+    line: LineStats,
 }
 
 impl MetricsCollector {
@@ -70,9 +72,11 @@ impl MetricsCollector {
             deadline_met: 0,
             deadline_missed: 0,
             rejected: 0,
+            queue_hw: 0,
             fail: FailStats::default(),
             cache: CacheStats::default(),
             slo: SloStats::default(),
+            line: LineStats::default(),
         }
     }
 
@@ -129,8 +133,16 @@ impl MetricsCollector {
         self.slo = slo;
     }
 
+    /// Install the waiting-line maintenance counters accumulated on the
+    /// [`crate::sched::ClusterView`] (called once, just before
+    /// [`MetricsCollector::finalize`]).
+    pub fn set_line_stats(&mut self, line: LineStats) {
+        self.line = line;
+    }
+
     /// Sample the piecewise-constant signals after an event at `now`.
     pub fn sample(&mut self, now: f64, pending: usize, running: usize, cpu_frac: f64, ram_frac: f64) {
+        self.queue_hw = self.queue_hw.max(pending as u64);
         self.pending_q.update(now, pending as f64);
         self.running_q.update(now, running as f64);
         self.cpu_alloc.update(now, cpu_frac);
@@ -183,9 +195,11 @@ impl MetricsCollector {
             deadline_met: self.deadline_met,
             deadline_missed: self.deadline_missed,
             rejected: self.rejected,
+            queue_depth_high_water: self.queue_hw,
             fail: self.fail,
             cache: self.cache,
             slo: self.slo,
+            line: self.line,
         }
     }
 }
@@ -259,6 +273,11 @@ pub struct SimResult {
     /// [`crate::slo`]): never admitted, never run, counted as neither
     /// completed nor unfinished.
     pub rejected: u64,
+    /// Peak pending-queue depth observed at any event (max across merged
+    /// runs) — the overload stressor the per-event cost must *not* scale
+    /// with. A pure function of (plan, seed): identical in optimized and
+    /// naive engine modes, so it stays in the canonical form.
+    pub queue_depth_high_water: u64,
     /// Failure/requeue/checkpoint accounting (all zero in a churn-free
     /// run; see [`FailStats`]).
     pub fail: FailStats,
@@ -274,6 +293,13 @@ pub struct SimResult {
     /// `slo:` wrapper is bit-identical to the bare scheduler in every
     /// scheduling outcome, and the canonical form states exactly that.
     pub slo: SloStats,
+    /// Waiting-line maintenance accounting (see [`LineStats`]): full
+    /// sorts, key refreshes, and admission attempts gated by the
+    /// saturation prefilter. Zeroed in [`SimResult::canonical_json`] —
+    /// the counters measure *how* the line was maintained (the optimized
+    /// engine never full-sorts, the naive reference always does), while
+    /// every scheduling outcome is bit-identical across modes.
+    pub line: LineStats,
 }
 
 impl SimResult {
@@ -322,9 +348,11 @@ impl SimResult {
         self.deadline_met += other.deadline_met;
         self.deadline_missed += other.deadline_missed;
         self.rejected += other.rejected;
+        self.queue_depth_high_water = self.queue_depth_high_water.max(other.queue_depth_high_water);
         self.fail.merge(&other.fail);
         self.cache.merge(&other.cache);
         self.slo.merge(&other.slo);
+        self.line.merge(&other.line);
     }
 
     /// Print the paper's standard box-plot panels for this run:
@@ -361,6 +389,10 @@ impl SimResult {
         println!("  queue sizes (time-weighted):");
         println!("    {:<8} {}", "pending", self.pending_q.boxplot());
         println!("    {:<8} {}", "running", self.running_q.boxplot());
+        println!(
+            "    {:<8} {} (pending high-water)",
+            "peak", self.queue_depth_high_water
+        );
         println!("  allocation (fraction):");
         println!("    {:<8} {}", "cpu", self.cpu_alloc.boxplot());
         println!("    {:<8} {}", "ram", self.ram_alloc.boxplot());
@@ -438,9 +470,14 @@ impl SimResult {
             ("deadline_met", Json::num(self.deadline_met as f64)),
             ("deadline_missed", Json::num(self.deadline_missed as f64)),
             ("rejected", Json::num(self.rejected as f64)),
+            (
+                "queue_depth_high_water",
+                Json::num(self.queue_depth_high_water as f64),
+            ),
             ("fail", self.fail.to_json()),
             ("cache", self.cache.to_json()),
             ("slo", self.slo.to_json()),
+            ("line", self.line.to_json()),
         ])
     }
 
@@ -477,11 +514,14 @@ impl SimResult {
             // Tolerant: results recorded before the SLO subsystem
             // existed simply carry zero rejections and SLO counters.
             rejected: v.get("rejected").as_u64().unwrap_or(0),
+            // Tolerant: pre-overload-fast-path results carry zero.
+            queue_depth_high_water: v.get("queue_depth_high_water").as_u64().unwrap_or(0),
             fail: FailStats::from_json(v.get("fail"))?,
             // Tolerant: results recorded before the decision cache
             // existed simply carry zero cache counters.
             cache: CacheStats::from_json(v.get("cache")).unwrap_or_default(),
             slo: SloStats::from_json(v.get("slo")).unwrap_or_default(),
+            line: LineStats::from_json(v.get("line")).unwrap_or_default(),
         })
     }
 
@@ -499,6 +539,11 @@ impl SimResult {
         c.wall_secs = 0.0;
         c.cache = CacheStats::default();
         c.slo = SloStats::default();
+        // Line maintenance is mode-dependent by design (the optimized
+        // engine sorts less); scheduling outcomes are not. Zero it so
+        // optimized ≡ naive stays a text-equality check. The queue-depth
+        // high-water is a scheduling outcome and stays.
+        c.line = LineStats::default();
         c.to_json()
     }
 
@@ -633,6 +678,40 @@ mod tests {
         // wall_secs is carried on the full form but zeroed canonically.
         assert_eq!(rt(&a).wall_secs, a.wall_secs);
         assert!(a.canonical_json().to_string().contains("\"wall_secs\":0"));
+    }
+
+    #[test]
+    fn queue_high_water_and_line_stats_round_trip() {
+        let mut a = MetricsCollector::new();
+        a.sample(0.0, 7, 0, 0.0, 0.0);
+        a.sample(1.0, 3, 0, 0.0, 0.0);
+        let mut la = LineStats::default();
+        la.full_sorts = 2;
+        la.gated_events = 5;
+        a.set_line_stats(la);
+        let mut ra = a.finalize(10.0, 1, 0, 0.0, 0, 0, 0);
+        assert_eq!(ra.queue_depth_high_water, 7);
+        let mut b = MetricsCollector::new();
+        b.sample(0.0, 4, 0, 0.0, 0.0);
+        let mut lb = LineStats::default();
+        lb.key_refreshes = 9;
+        b.set_line_stats(lb);
+        let rb = b.finalize(20.0, 1, 0, 0.0, 0, 0, 0);
+        ra.merge(&rb);
+        assert_eq!(ra.queue_depth_high_water, 7, "merge takes the max");
+        assert_eq!(
+            ra.line,
+            LineStats { full_sorts: 2, key_refreshes: 9, gated_events: 5 },
+            "line counters add"
+        );
+        let rt = SimResult::from_json(&Json::parse(&ra.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(rt.queue_depth_high_water, 7);
+        assert_eq!(rt.line, ra.line);
+        // The high-water is a scheduling outcome and stays canonical;
+        // line maintenance is mode-dependent and is zeroed.
+        let c = ra.canonical_json().to_string();
+        assert!(c.contains("\"queue_depth_high_water\":7"));
+        assert!(c.contains("\"full_sorts\":0"));
     }
 
     #[test]

@@ -235,6 +235,22 @@ struct Donor {
     seq: u64,
 }
 
+/// Index of the slack-richest candidate (ties to the smallest `seq`) —
+/// the next donor a slack-descending sort would visit. Repeated
+/// extraction with this therefore consumes donors in exactly the sorted
+/// order, but only pays for the donors a rescue actually touches.
+fn best_donor(donors: &[Donor]) -> usize {
+    let mut best = 0;
+    for i in 1..donors.len() {
+        match donors[i].slack.total_cmp(&donors[best].slack) {
+            std::cmp::Ordering::Greater => best = i,
+            std::cmp::Ordering::Equal if donors[i].seq < donors[best].seq => best = i,
+            _ => {}
+        }
+    }
+    best
+}
+
 /// A [`SchedulerCore`] wrapper that enforces deadlines around any inner
 /// scheduler: infeasibility admission control and laxity-driven elastic
 /// reclaim (see the [module docs](self)). Built by the `slo:<inner>` /
@@ -449,13 +465,14 @@ impl SloCore {
                 });
             }
         }
-        // Slack-richest first; submission order breaks ties.
-        donors.sort_by(|a, b| b.slack.total_cmp(&a.slack).then(a.seq.cmp(&b.seq)));
+        // Slack-richest first; submission order breaks ties. Only the few
+        // donors actually consumed get extracted — repeated max-selection
+        // visits candidates in exactly the order the full sort would, so
+        // the transfers (and their decisions) are identical, without the
+        // O(S log S) sort on every rescue.
         let mut moved_total = 0;
-        for d in donors {
-            if deficit == 0 {
-                break;
-            }
+        while deficit > 0 && !donors.is_empty() {
+            let d = donors.swap_remove(best_donor(&donors));
             let ask = deficit.min(d.donatable);
             let moved = self.inner.transfer_elastic(d.id, c, ask, view);
             deficit -= moved.min(deficit);
@@ -730,5 +747,42 @@ mod tests {
         // The donor kept its core and remaining elastic.
         assert!(view.state(donor).grant < 4);
         assert!(view.state(donor).phase == Phase::Running);
+    }
+
+    #[test]
+    fn donor_extraction_matches_wholesale_sort_order() {
+        // Duplicate slacks (incl. ∞ for deadline-free donors) exercise
+        // the seq tie-break; slot order is scrambled relative to seq.
+        let slacks = [
+            (3.0, 7u64),
+            (f64::INFINITY, 4),
+            (0.5, 1),
+            (3.0, 2),
+            (f64::INFINITY, 9),
+            (12.25, 3),
+            (0.5, 8),
+            (3.0, 5),
+        ];
+        let mk = || -> Vec<Donor> {
+            slacks
+                .iter()
+                .enumerate()
+                .map(|(i, &(slack, seq))| Donor {
+                    id: ReqId::new(i as u32, 0),
+                    donatable: 1,
+                    slack,
+                    seq,
+                })
+                .collect()
+        };
+        let mut sorted = mk();
+        sorted.sort_by(|a, b| b.slack.total_cmp(&a.slack).then(a.seq.cmp(&b.seq)));
+        let reference: Vec<u64> = sorted.iter().map(|d| d.seq).collect();
+        let mut bag = mk();
+        let mut extracted = Vec::new();
+        while !bag.is_empty() {
+            extracted.push(bag.swap_remove(best_donor(&bag)).seq);
+        }
+        assert_eq!(extracted, reference);
     }
 }

@@ -192,10 +192,12 @@ fn interactive_queuing_improves_with_preemption() {
 // Differential: the O(changed)-per-event engine against the naive reference
 // ---------------------------------------------------------------------------
 
-/// Compare two sample sets as multisets (completion order may differ by
-/// floating-point ulps between engines, so sort first). Tolerance covers
-/// the regrouping of work-accrual sums: lazy accrual folds one product per
-/// rate segment where the naive path sums one product per event.
+/// Compare two sample sets as multisets. Since the overload fast path
+/// landed, both engine modes share the same lazy accrual fold and are
+/// bit-identical (`rust/tests/overload.rs` asserts canonical-JSON text
+/// equality); the sort + tolerance here are retained slack from when
+/// naive accrued eagerly, kept so these tests localize a failure to
+/// "samples changed" rather than "one bit of one sample changed".
 fn assert_samples_match(a: &Samples, b: &Samples, what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: sample counts differ");
     let mut xa = a.values().to_vec();

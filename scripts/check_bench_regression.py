@@ -25,6 +25,14 @@ releases or duplicates mean the lease lifecycle dropped or double-
 counted a healthy worker and fail even against a provisional baseline.
 Its events/s rides the normal per-point threshold comparison via the
 (flexible, distributed_sweep, apps) results entry.
+
+The overload fast-path point is gated structurally too, even against a
+provisional baseline: under 10x-capacity saturation the optimized
+engine must be strictly faster than the naive wholesale-sort engine,
+must record zero full sorts, and must record gated (prefilter-skipped)
+events. Its per-policy optimized/naive events/s ride the normal
+threshold comparison via the (flexible, overload_*, apps) results
+entries.
 """
 
 import json
@@ -107,6 +115,25 @@ def report_slo(doc, label):
     return s
 
 
+def report_overload(doc, label):
+    """Print the overload fast-path point; returns it (or None)."""
+    o = doc.get("overload") or {}
+    if not o or not o.get("apps"):
+        print(f"{label}: no overload point")
+        return None
+    print(f"{label}: overload fast path @ {int(o['apps'])} apps "
+          f"({o.get('sched')}, arrival_scale={float(o.get('arrival_scale', 0.0))})")
+    for p in o.get("points", []):
+        print(f"  {p.get('policy'):<5} optimized {float(p.get('optimized_events_per_s', 0.0)):>12.0f} "
+              f"vs naive {float(p.get('naive_events_per_s', 0.0)):>12.0f} events/s "
+              f"({float(p.get('speedup', 0.0)):5.2f}x), "
+              f"queue high-water {int(p.get('queue_depth_high_water', 0))}, "
+              f"gated={int(p.get('gated_events', 0))}, "
+              f"full_sorts opt={int(p.get('optimized_full_sorts', 0))} "
+              f"naive={int(p.get('naive_full_sorts', 0))}")
+    return o
+
+
 def report_memory(doc, label):
     """Print the steady_state_memory point; returns it (or None)."""
     m = doc.get("steady_state_memory") or {}
@@ -148,6 +175,7 @@ def main():
     new_sweep = report_sweep(new, "fresh")
     new_cache = report_decision_cache(new, "fresh")
     new_slo = report_slo(new, "fresh")
+    new_overload = report_overload(new, "fresh")
 
     # Structural slab invariant, hardware-independent: the request table
     # must never outgrow the active high-water mark. Checked even against
@@ -196,6 +224,33 @@ def main():
               f"{new_slo.get('bare_met')} — the deadline-aware scheduler must "
               f"strictly improve attainment on the bench workload")
         mem_failures.append(("slo_attainment", "slo_met <= bare_met"))
+
+    # Overload fast-path structural invariants, hardware-independent:
+    # both engines run the same seeded workload on the same host, so the
+    # saturation-gated selection engine being no faster than the
+    # wholesale-sort engine means the fast path stopped engaging; a
+    # non-zero optimized full-sort count means the selection path fell
+    # back to sorting; zero gated events under 10x overload means the
+    # admissibility prefilter never fired. Checked even against a
+    # provisional baseline.
+    if new_overload:
+        for p in new_overload.get("points", []):
+            pol = p.get("policy", "?")
+            opt = float(p.get("optimized_events_per_s", 0.0))
+            naive = float(p.get("naive_events_per_s", 0.0))
+            if opt <= naive:
+                print(f"FAIL: overload {pol}: optimized {opt:.0f} events/s <= naive "
+                      f"{naive:.0f} events/s — the fast path must beat the wholesale sort "
+                      f"in the saturated regime")
+                mem_failures.append(("overload", f"{pol}: optimized <= naive"))
+            if int(p.get("optimized_full_sorts", 0)) > 0:
+                print(f"FAIL: overload {pol}: optimized engine recorded "
+                      f"{p.get('optimized_full_sorts')} full sorts (selection path fell back)")
+                mem_failures.append(("overload", f"{pol}: optimized full_sorts > 0"))
+            if int(p.get("gated_events", 0)) <= 0:
+                print(f"FAIL: overload {pol}: zero gated events under sustained overload "
+                      f"(admissibility prefilter never engaged)")
+                mem_failures.append(("overload", f"{pol}: zero gated events"))
 
     if baseline.get("provisional"):
         print("baseline is provisional (no measured numbers committed); "

@@ -116,6 +116,25 @@ def main():
                     f"{slo.get('bare_met')} — a deadline scheduler that does not beat "
                     "arrival order is not a baseline")
 
+    overload = new.get("overload") or {}
+    if not overload.get("apps") or not overload.get("points"):
+        return fail(f"{new_path} has no overload point — rerun the full bench "
+                    "(ZOE_BENCH_SWEEP_MAX must be > 0)")
+    for p in overload.get("points", []):
+        pol = p.get("policy", "?")
+        opt = float(p.get("optimized_events_per_s", 0))
+        naive = float(p.get("naive_events_per_s", 0))
+        if opt <= 0 or naive <= 0:
+            return fail(f"{new_path}: non-positive overload throughput for {pol}: {p}")
+        if opt <= naive:
+            return fail(f"{new_path}: overload {pol}: optimized {opt:.0f} events/s does not "
+                        f"beat naive {naive:.0f} — a fast path that loses to the wholesale "
+                        "sort is not a baseline")
+        if int(p.get("optimized_full_sorts", 0)) > 0:
+            return fail(f"{new_path}: overload {pol}: optimized engine full-sorted "
+                        f"{p.get('optimized_full_sorts')} times — the selection path "
+                        "fell back to sorting")
+
     if new_path != baseline_path:
         try:
             with open(baseline_path) as f:
@@ -154,6 +173,12 @@ def main():
           f"{int(slo.get('bare_met', 0))} met ({slo.get('bare_sched')}+{slo.get('bare_policy')}), "
           f"rejections={int(slo.get('rejections', 0))}, "
           f"reclaim_saves={int(slo.get('reclaim_saves', 0))}")
+    for p in overload.get("points", []):
+        print(f"  overload {p.get('policy')} @ {int(overload['apps'])} apps: "
+              f"{float(p.get('optimized_events_per_s', 0.0)):.0f} events/s optimized vs "
+              f"{float(p.get('naive_events_per_s', 0.0)):.0f} naive "
+              f"({float(p.get('speedup', 0.0)):.2f}x), queue high-water "
+              f"{int(p.get('queue_depth_high_water', 0))}")
     print("commit the updated baseline to arm the CI regression gate "
           "(check_bench_regression.py now enforces thresholds).")
     return 0
